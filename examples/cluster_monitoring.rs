@@ -1,0 +1,74 @@
+//! Cluster Monitoring end-to-end driver: the CM1/CM2 queries (Table III)
+//! under random (fluctuating) traffic — the paper's realistic setting —
+//! including the per-batch timeline LMStream's admission control shapes.
+//!
+//! ```bash
+//! cargo run --release --offline --example cluster_monitoring [minutes] [seed]
+//! ```
+
+use lmstream::config::{Config, Mode};
+use lmstream::coordinator::driver;
+use lmstream::source::traffic::Traffic;
+use lmstream::util::bench::print_table;
+use lmstream::workloads;
+use std::time::Duration;
+
+fn main() -> lmstream::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let minutes: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let seed: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(11);
+
+    let mut rows = Vec::new();
+    for name in ["cm1s", "cm1t", "cm2s"] {
+        let w = workloads::by_name(name)?.with_traffic(Traffic::random_default());
+        let lm_cfg = Config { mode: Mode::LmStream, seed, ..Config::default() };
+        let bl_cfg = Config { mode: Mode::Baseline, seed, ..Config::default() };
+        let lm = driver::run(&w, &lm_cfg, Duration::from_secs(minutes * 60), None)?;
+        let bl = driver::run(&w, &bl_cfg, Duration::from_secs(minutes * 60), None)?;
+        rows.push(vec![
+            w.name.to_string(),
+            format!("{}", bl.batches.len()),
+            format!("{}", lm.batches.len()),
+            format!("{:.2}", bl.avg_latency),
+            format!("{:.2}", lm.avg_latency),
+            format!("{:.2}", bl.avg_max_latency()),
+            format!("{:.2}", lm.avg_max_latency()),
+            format!("{:.1}", bl.avg_throughput / 1024.0),
+            format!("{:.1}", lm.avg_throughput / 1024.0),
+        ]);
+    }
+    print_table(
+        &format!("Cluster Monitoring ({minutes} simulated minutes, random traffic)"),
+        &[
+            "query", "BL batches", "LM batches", "BL lat", "LM lat", "BL maxlat",
+            "LM maxlat", "BL KB/s", "LM KB/s",
+        ],
+        &rows,
+    );
+
+    // Show the admission controller at work on CM2S: batch sizes adapt to
+    // the fluctuating ingest while max latency stays near the 5 s slide.
+    let w = workloads::by_name("cm2s")?.with_traffic(Traffic::random_default());
+    let cfg = Config { mode: Mode::LmStream, seed, ..Config::default() };
+    let r = driver::run(&w, &cfg, Duration::from_secs(120), None)?;
+    let rows: Vec<Vec<String>> = r
+        .batches
+        .iter()
+        .take(12)
+        .map(|b| {
+            vec![
+                format!("{:.1}", b.admitted_at.as_secs_f64()),
+                b.num_datasets.to_string(),
+                format!("{:.0}", b.bytes as f64 / 1024.0),
+                format!("{:.2}", b.max_latency.as_secs_f64()),
+                format!("{}/{}", b.gpu_ops, b.total_ops),
+            ]
+        })
+        .collect();
+    print_table(
+        "CM2S first batches under LMStream (slide-time bound = 5 s)",
+        &["t(s)", "datasets", "KB", "max lat(s)", "gpu ops"],
+        &rows,
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: build a streaming query, run LMStream for two simulated
+//! minutes, and print the headline metrics.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use lmstream::config::{Config, Mode};
+use lmstream::coordinator::driver;
+use lmstream::engine::ops::aggregate::AggSpec;
+use lmstream::engine::ops::filter::Predicate;
+use lmstream::engine::window::WindowSpec;
+use lmstream::query::QueryBuilder;
+use lmstream::source::traffic::Traffic;
+use lmstream::workloads::{linear_road, Workload};
+use std::time::Duration;
+
+fn main() -> lmstream::Result<()> {
+    // 1. Author a streaming query with the fluent builder — this is the
+    //    public API a downstream user writes against: a windowed
+    //    congestion report over the Linear Road feed.
+    let query = QueryBuilder::scan("quickstart")
+        .window(WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5)))
+        .filter("speed", Predicate::Lt(60.0))
+        .expand()
+        .shuffle("segment")
+        .aggregate(
+            &["highway", "segment"],
+            vec![AggSpec::avg("speed", "avgSpeed"), AggSpec::count("reports")],
+            Some(("avgSpeed", Predicate::Lt(40.0))),
+        )
+        .build()?;
+
+    // 2. Attach a data source (Linear Road position reports, 1000 rows/s).
+    let workload = Workload::new("quickstart", query, Traffic::constant_default(), |seed| {
+        Box::new(linear_road::LinearRoadGen::new(seed))
+    });
+
+    // 3. Run under the LMStream coordinator (dynamic batching + dynamic
+    //    device planning + online optimizer) on the simulated cluster.
+    let cfg = Config { mode: Mode::LmStream, ..Config::default() };
+    let result = driver::run(&workload, &cfg, Duration::from_secs(120), None)?;
+
+    println!("quickstart: {} micro-batches in 2 simulated minutes", result.batches.len());
+    println!("  avg end-to-end latency : {:.3} s", result.avg_latency);
+    println!("  avg throughput (Eq. 4) : {:.1} KB/s", result.avg_throughput / 1024.0);
+    println!("  final inflection point : {:.0} KB", result.final_inf_pt / 1024.0);
+    println!(
+        "  last plan: {}/{} ops on GPU",
+        result.batches.last().map(|b| b.gpu_ops).unwrap_or(0),
+        result.batches.last().map(|b| b.total_ops).unwrap_or(0),
+    );
+
+    // 4. The same workload under the throughput-oriented baseline, for
+    //    contrast (static 10 s trigger, all-GPU).
+    let bl_cfg = Config { mode: Mode::Baseline, ..Config::default() };
+    let bl = driver::run(&workload, &bl_cfg, Duration::from_secs(120), None)?;
+    println!(
+        "baseline for contrast: latency {:.3} s, throughput {:.1} KB/s",
+        bl.avg_latency,
+        bl.avg_throughput / 1024.0
+    );
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile package (L1 pallas kernels + L2 jax operators + AOT).
+
+Never imported at runtime: ``make artifacts`` runs :mod:`compile.aot` once
+and the rust coordinator consumes only ``artifacts/*.hlo.txt`` +
+``manifest.json`` from then on.
+"""

@@ -1,0 +1,119 @@
+"""AOT driver: lower every L2 operator x shape bucket to an HLO artifact.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension (0.5.1) rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out, default ``../artifacts``):
+
+* ``<op>__<bucket>.hlo.txt`` — one per operator per row bucket,
+* ``manifest.json`` — machine-readable index the rust runtime loads:
+  operator name, bucket, artifact path, input/output shapes + dtypes.
+
+Python runs ONCE at build time (``make artifacts``); the rust binary is
+self-contained afterwards.
+
+Usage: ``python -m compile.aot [--out DIR] [--only OP[,OP...]] [--buckets N,N]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.shapes import JOIN_BUILD_BUCKET, NUM_GROUPS, ROW_BUCKETS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_one(name: str, fn, in_specs) -> tuple[str, list[dict], list[dict]]:
+    """Lower ``fn`` at ``in_specs``; return (hlo_text, in_meta, out_meta)."""
+    lowered = jax.jit(fn).lower(*in_specs)
+    out_shapes = jax.eval_shape(fn, *in_specs)
+    if isinstance(out_shapes, (list, tuple)):
+        outs = list(out_shapes)
+    else:
+        outs = [out_shapes]
+    return (
+        to_hlo_text(lowered),
+        [_spec_json(s) for s in in_specs],
+        [_spec_json(s) for s in outs],
+    )
+
+
+def build_all(out_dir: str, only: set[str] | None, buckets) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {
+        "format": 1,
+        "num_groups": NUM_GROUPS,
+        "join_build_bucket": JOIN_BUILD_BUCKET,
+        "row_buckets": list(buckets),
+        "artifacts": [],
+    }
+    smallest = min(buckets)
+    for n in buckets:
+        sigs = model.signatures(n, b=JOIN_BUILD_BUCKET)
+        for name, (fn, in_specs) in sorted(sigs.items()):
+            if only and name not in only:
+                continue
+            if name in model.GROUP_SPACE_OPS and n != smallest:
+                continue  # group-space ops have no row dimension
+            fname = f"{name}__n{n}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            hlo, in_meta, out_meta = lower_one(name, fn, in_specs)
+            with open(path, "w") as fh:
+                fh.write(hlo)
+            manifest["artifacts"].append(
+                {
+                    "op": name,
+                    "rows": n,
+                    "file": fname,
+                    "inputs": in_meta,
+                    "outputs": out_meta,
+                }
+            )
+            print(f"  {fname}: {len(hlo)} chars, {len(in_meta)} in / {len(out_meta)} out")
+    return manifest
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default="", help="comma-separated operator subset")
+    ap.add_argument(
+        "--buckets",
+        default=",".join(str(b) for b in ROW_BUCKETS),
+        help="comma-separated row buckets",
+    )
+    args = ap.parse_args(argv)
+    only = {s for s in args.only.split(",") if s} or None
+    buckets = [int(b) for b in args.buckets.split(",") if b]
+
+    manifest = build_all(args.out, only, buckets)
+    man_path = os.path.join(args.out, "manifest.json")
+    with open(man_path, "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + {man_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

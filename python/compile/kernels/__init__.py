@@ -1,0 +1,11 @@
+"""L1 pallas kernels for LMStream's GPU-path operators.
+
+``window_agg`` and ``filter_project`` are the compute hot-spots; ``ref``
+holds their pure-jnp oracles. All kernels run under ``interpret=True``
+(see DESIGN.md §Hardware-Adaptation).
+"""
+
+from compile.kernels.filter_project import filter_project
+from compile.kernels.window_agg import window_agg
+
+__all__ = ["filter_project", "window_agg"]

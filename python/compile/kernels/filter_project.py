@@ -1,0 +1,91 @@
+"""L1 pallas kernel: fused filter + affine projection over columnar tiles.
+
+The select-project fragment of the paper's synthetic select-project-join
+query (Figs. 2/5) and of the Table III workloads. Fusing the comparison and
+the projection into one VMEM pass avoids materializing the intermediate
+mask in HBM — the TPU analog of what Spark-Rapids gets from cuDF kernel
+fusion on GPU.
+
+Scalars (threshold, projection coefficients) are passed as [1]-shaped
+operands pinned to block (0,) so every grid step sees them without a fresh
+HBM fetch. ``interpret=True`` as required on this image.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.shapes import ROW_TILE
+
+
+def _filter_project_kernel(
+    key_ref, a_ref, b_ref, vld_ref, thr_ref, alpha_ref, beta_ref, out_ref, ovld_ref
+):
+    """out = alpha*a + beta*b where key >= thr (else 0); valid mask ANDed."""
+    keys = key_ref[...]
+    keep = (keys >= thr_ref[0]).astype(jnp.float32) * vld_ref[...]
+    out_ref[...] = (alpha_ref[0] * a_ref[...] + beta_ref[0] * b_ref[...]) * keep
+    ovld_ref[...] = keep
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def filter_project(
+    keys: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    valid: jax.Array,
+    thr: jax.Array,
+    alpha: jax.Array,
+    beta: jax.Array,
+    *,
+    tile: int = ROW_TILE,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused ``filter(keys >= thr)`` + ``project(alpha*a + beta*b)``.
+
+    Args:
+        keys, a, b, valid: f32[N] columns (valid is the 0/1 row mask).
+        thr, alpha, beta:  f32[1] scalars.
+
+    Returns:
+        (projected f32[N], valid_out f32[N]); filtered-out / padding rows
+        have value 0 and valid 0.
+    """
+    (n,) = keys.shape
+    tile = min(tile, n)
+    if n % tile != 0:
+        raise ValueError(f"row count {n} must be a multiple of tile {tile}")
+    grid = (n // tile,)
+
+    row = lambda i: (i,)
+    pinned = lambda i: (0,)
+    return pl.pallas_call(
+        _filter_project_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((1,), pinned),
+            pl.BlockSpec((1,), pinned),
+            pl.BlockSpec((1,), pinned),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(keys, a, b, valid, thr, alpha, beta)
+
+
+def vmem_footprint_bytes(tile: int = ROW_TILE) -> int:
+    """Per-grid-step VMEM bytes: 4 input tiles + 3 scalars + 2 output tiles."""
+    return 4 * tile * 4 + 3 * 4 + 2 * tile * 4

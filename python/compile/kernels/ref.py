@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the L1 pallas kernels.
+
+These are the correctness ground truth: deliberately written with the most
+obvious jnp formulation (segment_sum, plain masking) and no tiling, so a
+bug in the pallas BlockSpec schedule cannot be mirrored here. pytest
+asserts allclose between each kernel and its oracle across shapes, group
+counts and adversarial masks (see python/tests).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.shapes import NUM_GROUPS
+
+
+def window_agg_ref(
+    group_ids: jax.Array,
+    values: jax.Array,
+    valid: jax.Array,
+    num_groups: int = NUM_GROUPS,
+) -> tuple[jax.Array, jax.Array]:
+    """Segmented sum/count oracle via jax.ops.segment_sum."""
+    w = values * valid
+    sums = jax.ops.segment_sum(w, group_ids, num_segments=num_groups)
+    counts = jax.ops.segment_sum(valid, group_ids, num_segments=num_groups)
+    return sums.astype(jnp.float32), counts.astype(jnp.float32)
+
+
+def window_assign_ref(
+    times: jax.Array,
+    valid: jax.Array,
+    rng: jax.Array,
+    sld: jax.Array,
+    slots: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Window-instance assignment oracle (plain jnp, no tiling)."""
+    last = jnp.floor(times / sld[0])
+    first = jnp.maximum(jnp.floor((times - rng[0]) / sld[0]) + 1.0, 0.0)
+    slot_ids = jnp.arange(slots, dtype=jnp.float32)[:, None]
+    wid = first[None, :] + slot_ids
+    in_window = (wid <= last[None, :]).astype(jnp.float32)
+    return wid.astype(jnp.int32), in_window * valid[None, :]
+
+
+def topk_ref(values: jax.Array, valid: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k oracle via full sort."""
+    neg = jnp.float32(-3.0e38)
+    work = jnp.where(valid > 0.0, values, neg)
+    order = jnp.argsort(-work)[:k].astype(jnp.int32)
+    vals = work[order]
+    dead = vals <= neg / 2
+    return jnp.where(dead, 0.0, vals), jnp.where(dead, -1, order)
+
+
+def filter_project_ref(
+    keys: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    valid: jax.Array,
+    thr: jax.Array,
+    alpha: jax.Array,
+    beta: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Masked affine projection oracle."""
+    keep = (keys >= thr[0]).astype(jnp.float32) * valid
+    out = (alpha[0] * a + beta[0] * b) * keep
+    return out, keep

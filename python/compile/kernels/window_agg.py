@@ -1,0 +1,129 @@
+"""L1 pallas kernel: windowed segmented aggregation (sum + count per group).
+
+This is the compute hot-spot of the GROUP-BY-over-window queries (LR2S,
+CM1S, CM2S in Table III of the paper). The paper's Spark-Rapids baseline
+runs this as a cuDF hash aggregation on the GPU; the TPU adaptation here
+(DESIGN.md §Hardware-Adaptation) restructures it for the MXU instead of
+emulating a CUDA hash table:
+
+* rows are streamed HBM->VMEM in ``ROW_TILE``-sized tiles via the grid +
+  BlockSpec schedule (the role threadblock staging plays in the CUDA
+  version),
+* per tile, group membership is expressed as a one-hot matrix
+  ``[TILE, NUM_GROUPS]`` and the per-group sums/counts are computed as a
+  matmul against the (masked) value vector — a shape the MXU executes
+  natively in bf16/f32, replacing scattered atomic adds which have no
+  efficient TPU equivalent,
+* the ``[NUM_GROUPS]`` accumulators live in the output VMEM block across
+  all grid steps (TPU grids execute sequentially, making the accumulate
+  pattern race-free).
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute. Correctness is
+pinned against :mod:`compile.kernels.ref` by ``python/tests``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.shapes import NUM_GROUPS, ROW_TILE
+
+
+def _window_agg_kernel(gid_ref, val_ref, vld_ref, sum_ref, cnt_ref):
+    """One grid step: accumulate a row tile into the group accumulators.
+
+    gid_ref: i32[TILE]  dense group ids in [0, NUM_GROUPS); invalid rows may
+             carry any id (they are masked by vld).
+    val_ref: f32[TILE]  aggregation operand.
+    vld_ref: f32[TILE]  1.0 for live rows, 0.0 for padding.
+    sum_ref, cnt_ref: f32[NUM_GROUPS] accumulators (same block every step).
+    """
+    step = pl.program_id(0)
+
+    # Zero the VMEM accumulators on the first tile only.
+    @pl.when(step == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    gids = gid_ref[...]
+    vals = val_ref[...] * vld_ref[...]
+    vld = vld_ref[...]
+
+    # One-hot membership [TILE, NUM_GROUPS]; 2D broadcasted_iota is the
+    # TPU-legal iota form (1D iota is not).
+    tile = gids.shape[0]
+    group_ids = jax.lax.broadcasted_iota(jnp.int32, (tile, NUM_GROUPS), 1)
+    onehot = (gids[:, None] == group_ids).astype(jnp.float32)
+
+    # [NUM_GROUPS] = [TILE, NUM_GROUPS]^T @ [TILE] — MXU-friendly contraction.
+    sum_ref[...] += onehot.T @ vals
+    cnt_ref[...] += onehot.T @ vld
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "tile"))
+def window_agg(
+    group_ids: jax.Array,
+    values: jax.Array,
+    valid: jax.Array,
+    *,
+    num_groups: int = NUM_GROUPS,
+    tile: int = ROW_TILE,
+) -> tuple[jax.Array, jax.Array]:
+    """Segmented sum/count of ``values`` by ``group_ids`` under ``valid``.
+
+    Args:
+        group_ids: i32[N] dense group ids, values in [0, num_groups).
+        values:    f32[N] operand column.
+        valid:     f32[N] row-validity mask (1.0 live / 0.0 padding).
+
+    Returns:
+        (sums f32[num_groups], counts f32[num_groups]).
+    """
+    (n,) = values.shape
+    tile = min(tile, n)
+    if n % tile != 0:
+        raise ValueError(f"row count {n} must be a multiple of tile {tile}")
+    grid = (n // tile,)
+
+    return pl.pallas_call(
+        _window_agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            # Same [num_groups] block every grid step: the accumulator stays
+            # VMEM-resident for the whole row stream.
+            pl.BlockSpec((num_groups,), lambda i: (0,)),
+            pl.BlockSpec((num_groups,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_groups,), jnp.float32),
+            jax.ShapeDtypeStruct((num_groups,), jnp.float32),
+        ],
+        interpret=True,
+    )(group_ids, values, valid)
+
+
+# --- Analytical resource estimate (perf reporting; see EXPERIMENTS.md §Perf).
+
+
+def vmem_footprint_bytes(num_groups: int = NUM_GROUPS, tile: int = ROW_TILE) -> int:
+    """Per-grid-step VMEM bytes: 3 input tiles + one-hot + 2 accumulators."""
+    tiles = 3 * tile * 4
+    onehot = tile * num_groups * 4
+    accs = 2 * num_groups * 4
+    return tiles + onehot + accs
+
+
+def mxu_flops_per_row(num_groups: int = NUM_GROUPS) -> int:
+    """MACs per ingested row: two [1 x NUM_GROUPS] contractions."""
+    return 2 * 2 * num_groups

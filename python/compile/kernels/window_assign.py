@@ -1,0 +1,106 @@
+"""L1 pallas kernel: sliding-window instance assignment (the Expand op).
+
+Spark rewrites a sliding-window aggregation by replicating every row into
+each of the ``ceil(range/slide)`` window instances it belongs to. On GPU
+(Spark-Rapids) that is a gather kernel; the TPU formulation here computes,
+for each (row, instance-slot) pair in a VMEM tile, the window-id the row
+falls into for that slot and its validity — one vectorized pass on the
+VPU, no host-side replication loop.
+
+Inputs are event times (seconds); window instance k covers
+``[k*slide, k*slide + range)``; a row at time t belongs to instances
+``floor((t - range)/slide) + 1 ..= floor(t/slide)`` clipped at 0.
+
+Output layout is row-major replicas: slot j of row i is output index
+``j*N + i`` (matching the rust engine's expand()).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.shapes import ROW_TILE
+
+
+def _window_assign_kernel(t_ref, vld_ref, rng_ref, sld_ref, wid_ref, wvld_ref):
+    """One grid step: assign a row tile to its window instances.
+
+    t_ref:   f32[TILE]        event times.
+    vld_ref: f32[TILE]        row validity.
+    rng_ref: f32[1]           window range (s).
+    sld_ref: f32[1]           window slide (s).
+    wid_ref: i32[SLOTS, TILE] window id per (slot, row).
+    wvld_ref:f32[SLOTS, TILE] validity per (slot, row).
+    """
+    t = t_ref[...]
+    vld = vld_ref[...]
+    rng = rng_ref[0]
+    sld = sld_ref[0]
+    slots = wid_ref.shape[0]
+
+    # Last (newest) window containing t, and the first.
+    last = jnp.floor(t / sld)
+    first = jnp.maximum(jnp.floor((t - rng) / sld) + 1.0, 0.0)
+    tile = t.shape[0]
+    slot_ids = jax.lax.broadcasted_iota(jnp.float32, (slots, tile), 0)
+    wid = first[None, :] + slot_ids
+    in_window = (wid <= last[None, :]).astype(jnp.float32)
+    wid_ref[...] = wid.astype(jnp.int32)
+    wvld_ref[...] = in_window * vld[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("slots", "tile"))
+def window_assign(
+    times: jax.Array,
+    valid: jax.Array,
+    rng: jax.Array,
+    sld: jax.Array,
+    *,
+    slots: int,
+    tile: int = ROW_TILE,
+) -> tuple[jax.Array, jax.Array]:
+    """Assign each row to its ``slots = ceil(range/slide)`` window ids.
+
+    Args:
+        times: f32[N] event times (seconds).
+        valid: f32[N] row validity.
+        rng, sld: f32[1] window range / slide in seconds.
+        slots: static replication factor (ceil(range/slide)).
+
+    Returns:
+        (window_ids i32[slots, N], valid f32[slots, N]).
+    """
+    (n,) = times.shape
+    tile = min(tile, n)
+    if n % tile != 0:
+        raise ValueError(f"row count {n} must be a multiple of tile {tile}")
+    grid = (n // tile,)
+    row = lambda i: (0, i)
+    return pl.pallas_call(
+        _window_assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((slots, tile), row),
+            pl.BlockSpec((slots, tile), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((slots, n), jnp.int32),
+            jax.ShapeDtypeStruct((slots, n), jnp.float32),
+        ],
+        interpret=True,
+    )(times, valid, rng, sld)
+
+
+def vmem_footprint_bytes(slots: int, tile: int = ROW_TILE) -> int:
+    """Per-grid-step VMEM bytes: 2 input tiles + 2 scalar + 2 outputs."""
+    return 2 * tile * 4 + 2 * 4 + 2 * slots * tile * 4

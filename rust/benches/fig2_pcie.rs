@@ -1,0 +1,49 @@
+//! Fig. 2 — PCIe overhead ratio (transfer time / total execution time)
+//! for the synthetic select-project-join query across batch sizes and
+//! device-mapping scenarios.
+//!
+//! Paper shape: < 1 % for small batches regardless of mapping; surges to
+//! a significant share once the batch size passes the inflection region.
+
+use lmstream::report::figures;
+use lmstream::util::bench::print_table;
+use lmstream::workloads;
+
+fn main() {
+    let q = workloads::by_name("spj").expect("spj").query;
+    let scenarios: Vec<_> = figures::spj_scenarios(q.len())
+        .into_iter()
+        .filter(|(name, _)| *name != "all-CPU") // PCIe needs a GPU mapping
+        .collect();
+
+    let sizes_kb: [usize; 9] = [1, 4, 15, 50, 150, 500, 1500, 5000, 20000];
+    let mut rows = Vec::new();
+    let mut small_ratios = Vec::new();
+    let mut large_ratios = Vec::new();
+    for &kb in &sizes_kb {
+        let mut row = vec![format!("{kb} KB")];
+        for (_name, plan) in &scenarios {
+            let (total, transfer) = figures::spj_cell(kb * 1024, plan, 3).expect("cell");
+            let ratio = transfer / total * 100.0;
+            if kb <= 4 {
+                small_ratios.push(ratio);
+            }
+            if kb >= 5000 {
+                large_ratios.push(ratio);
+            }
+            row.push(format!("{ratio:.2}%"));
+        }
+        rows.push(row);
+    }
+    let header: Vec<&str> = std::iter::once("batch size")
+        .chain(scenarios.iter().map(|(n, _)| *n))
+        .collect();
+    print_table("Fig.2 — PCIe transfer share of total execution time", &header, &rows);
+
+    let small_max = small_ratios.iter().cloned().fold(0.0, f64::max);
+    let large_min = large_ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("\nsmall-batch max ratio {small_max:.2}% | large-batch min ratio {large_min:.2}%");
+    assert!(small_max < 1.0, "paper shape: <1% overhead for small data");
+    assert!(large_min > 2.0, "paper shape: significant overhead for large data");
+    println!("fig2 OK");
+}

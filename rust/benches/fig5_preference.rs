@@ -1,0 +1,61 @@
+//! Fig. 5 — normalized execution times of the synthetic SPJ query across
+//! batch sizes for the four mapping scenarios (all-CPU, all-GPU,
+//! filter-on-CPU, project-on-CPU), normalized to all-CPU.
+//!
+//! Paper shape: below ~15 KB all-CPU wins (ratios > 1); in the 15–150 KB
+//! band mixed mappings beat single-device; past the inflection region
+//! all-GPU wins and CPU affinity collapses.
+
+use lmstream::report::figures;
+use lmstream::util::bench::print_table;
+use lmstream::workloads;
+
+fn main() {
+    let q = workloads::by_name("spj").expect("spj").query;
+    let scenarios = figures::spj_scenarios(q.len());
+    let sizes_kb: [usize; 8] = [2, 8, 15, 50, 150, 500, 2000, 8000];
+
+    let mut rows = Vec::new();
+    let mut table: Vec<Vec<f64>> = Vec::new();
+    for &kb in &sizes_kb {
+        let cpu_total = figures::spj_cell(kb * 1024, &scenarios[0].1, 5).expect("cell").0;
+        let mut row = vec![format!("{kb} KB")];
+        let mut vals = Vec::new();
+        for (_name, plan) in &scenarios {
+            let (total, _) = figures::spj_cell(kb * 1024, plan, 5).expect("cell");
+            let norm = total / cpu_total;
+            vals.push(norm);
+            row.push(format!("{norm:.2}"));
+        }
+        rows.push(row);
+        table.push(vals);
+    }
+    let header: Vec<&str> = std::iter::once("batch size")
+        .chain(scenarios.iter().map(|(n, _)| *n))
+        .collect();
+    print_table("Fig.5 — execution time normalized to all-CPU", &header, &rows);
+
+    // Shape assertions (scenario order: all-CPU, all-GPU, filter-CPU,
+    // project-CPU).
+    let small = &table[0]; // 2 KB
+    assert!(
+        small[1] > 1.0,
+        "small data: all-GPU must lose to all-CPU (got {:.2})",
+        small[1]
+    );
+    let large = table.last().unwrap(); // 8 MB
+    assert!(
+        large[1] < 1.0,
+        "large data: all-GPU must beat all-CPU (got {:.2})",
+        large[1]
+    );
+    // CPU affinity drops as size grows: the all-GPU ratio must decrease
+    // monotonically-ish across the sweep.
+    let first_gpu = table[0][1];
+    let last_gpu = table.last().unwrap()[1];
+    assert!(last_gpu < first_gpu * 0.5, "GPU ratio must fall steeply");
+    // Somewhere in the middle band a mixed mapping beats all-GPU.
+    let mixed_wins = table.iter().any(|v| v[2] < v[1] || v[3] < v[1]);
+    assert!(mixed_wins, "mixed mapping must win somewhere in the band");
+    println!("fig5 OK");
+}

@@ -1,0 +1,63 @@
+//! Figs. 6 & 7 — overall performance: average per-dataset end-to-end
+//! latency (Fig. 6) and Eq. 4 average throughput (Fig. 7) for all six
+//! Table III workloads, LMStream vs Baseline, constant traffic.
+//!
+//! Paper shape: LMStream latency lower on every query (largest win on
+//! tumbling windows — 70.7% on LR1T in the paper); throughput similar or
+//! better, largest gain on LR1S (1.74x in the paper); CM1S nearly tied
+//! (trigger == slide there, §V-B).
+
+use lmstream::config::Mode;
+use lmstream::report::figures;
+use lmstream::util::bench::print_table;
+use lmstream::workloads;
+
+fn main() {
+    let minutes = 15;
+    let seed = 7;
+    let mut rows = Vec::new();
+    let mut worst_lat_impr = f64::INFINITY;
+    let mut best_lat_impr = f64::NEG_INFINITY;
+    let mut best_thr = f64::NEG_INFINITY;
+    let mut tumbling_imprs = Vec::new();
+    for name in workloads::ALL {
+        let lm = figures::overall(name, Mode::LmStream, minutes, seed).expect("lm");
+        let bl = figures::overall(name, Mode::Baseline, minutes, seed).expect("bl");
+        let impr = (1.0 - lm.avg_latency / bl.avg_latency) * 100.0;
+        let ratio = lm.avg_throughput / bl.avg_throughput;
+        worst_lat_impr = worst_lat_impr.min(impr);
+        best_lat_impr = best_lat_impr.max(impr);
+        best_thr = best_thr.max(ratio);
+        if name.ends_with('t') {
+            tumbling_imprs.push(impr);
+        }
+        rows.push(figures::compare_row(&lm, &bl));
+    }
+    print_table(
+        "Figs.6/7 — LMStream vs Baseline (constant traffic)",
+        &["workload", "BL lat", "LM lat", "impr", "BL KB/s", "LM KB/s", "ratio"],
+        &rows,
+    );
+
+    println!(
+        "\nlatency improvement range {worst_lat_impr:.1}%..{best_lat_impr:.1}% \
+         (paper max 70.7%); best throughput ratio {best_thr:.2}x (paper 1.74x)"
+    );
+    assert!(
+        worst_lat_impr > 0.0,
+        "paper shape: LMStream latency must win on every workload"
+    );
+    assert!(
+        best_lat_impr > 45.0,
+        "paper shape: the best-case latency win should be large (got {best_lat_impr:.1}%)"
+    );
+    assert!(
+        tumbling_imprs.iter().all(|&i| i > 40.0),
+        "paper shape: tumbling windows see the biggest latency wins ({tumbling_imprs:?})"
+    );
+    assert!(
+        best_thr > 1.1,
+        "paper shape: LMStream throughput should exceed baseline somewhere (got {best_thr:.2}x)"
+    );
+    println!("fig67 OK");
+}

@@ -1,0 +1,73 @@
+//! Figs. 8 & 9 — 20-minute timelines under random traffic for LR1S
+//! (Fig. 8, sliding) and LR1T (Fig. 9, tumbling): (a) max latency per
+//! micro-batch, (b) data size per micro-batch.
+//!
+//! Paper shape: the baseline's per-batch data size is far larger (10 s of
+//! buffering) and its max latency trends upward; LMStream's batch size
+//! tracks the fluctuating ingest and its max latency stays bounded near
+//! the slide time (LR1S) / the converged running average (LR1T).
+
+use lmstream::config::Mode;
+use lmstream::report::figures;
+use lmstream::util::bench::print_table;
+use lmstream::util::stats::mean;
+
+fn run_one(fig: &str, workload: &str, minutes: u64) {
+    let seed = 13;
+    let bl = figures::timeline(workload, Mode::Baseline, minutes, seed).expect("bl");
+    let lm = figures::timeline(workload, Mode::LmStream, minutes, seed).expect("lm");
+
+    // Print a decimated timeline (every ~minute) for both systems.
+    for (label, r) in [("Baseline", &bl), ("LMStream", &lm)] {
+        let step = (r.batches.len() / 20).max(1);
+        let rows: Vec<Vec<String>> = r
+            .batches
+            .iter()
+            .step_by(step)
+            .map(|b| {
+                vec![
+                    format!("{:.0}", b.admitted_at.as_secs_f64()),
+                    format!("{:.2}", b.max_latency.as_secs_f64()),
+                    format!("{:.0}", b.bytes as f64 / 1024.0),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("Fig.{fig} {workload} [{label}]"),
+            &["t (s)", "max lat (s)", "batch KB"],
+            &rows,
+        );
+    }
+
+    // Shape assertions.
+    let bl_sizes: Vec<f64> = bl.batches.iter().map(|b| b.bytes as f64).collect();
+    let lm_sizes: Vec<f64> = lm.batches.iter().map(|b| b.bytes as f64).collect();
+    assert!(
+        mean(&bl_sizes) > 2.0 * mean(&lm_sizes),
+        "baseline batches must be much larger"
+    );
+    let bl_lat: Vec<f64> =
+        bl.batches.iter().map(|b| b.max_latency.as_secs_f64()).collect();
+    let lm_lat: Vec<f64> =
+        lm.batches.iter().map(|b| b.max_latency.as_secs_f64()).collect();
+    assert!(
+        mean(&bl_lat) > 1.5 * mean(&lm_lat),
+        "baseline max latency must sit well above LMStream's"
+    );
+    // LMStream bounded: its late-run latency must not exceed its early-run
+    // latency by more than 50%.
+    let n = lm_lat.len();
+    let early = mean(&lm_lat[..n / 3]);
+    let late = mean(&lm_lat[2 * n / 3..]);
+    assert!(
+        late < early * 1.5 + 1.0,
+        "LMStream must stay bounded (early {early:.2} late {late:.2})"
+    );
+    println!("fig{fig} {workload}: BL mean maxlat {:.2}s, LM {:.2}s — OK", mean(&bl_lat), mean(&lm_lat));
+}
+
+fn main() {
+    let minutes = 20;
+    run_one("8", "lr1s", minutes);
+    run_one("9", "lr1t", minutes);
+}

@@ -1,0 +1,101 @@
+//! §Perf — L3 hot-path microbenchmarks: the per-poll and per-batch
+//! coordinator work that must stay far below the 10 ms poll interval
+//! (Table IV's "Construct Micro-batch" and "Map Device" rows).
+//!
+//! Measured pieces: admission estimate (Eq. 6), MapDevice planning
+//! (Alg. 2), the OLS fit (Eq. 10), micro-batch concat/partition, and the
+//! native operator kernels the simulated path runs per batch.
+
+use lmstream::coordinator::admission::Admission;
+use lmstream::coordinator::optimizer::{fit_inflection, FitJob, HistoryPoint};
+use lmstream::coordinator::planner::{map_device, SizeEstimator};
+use lmstream::engine::dataset::{Dataset, MicroBatch};
+use lmstream::engine::ops;
+use lmstream::engine::partition;
+use lmstream::sim::Time;
+use lmstream::util::bench::Bencher;
+use lmstream::workloads::{self, linear_road::LinearRoadGen};
+use lmstream::source::stream::RowGen;
+
+fn lr_micro_batch(datasets: usize, rows_each: usize) -> MicroBatch {
+    let mut gen = LinearRoadGen::new(3);
+    let ds: Vec<Dataset> = (0..datasets)
+        .map(|i| {
+            let batch = gen.generate(i as u64, rows_each);
+            let bytes = batch.bytes();
+            Dataset {
+                id: i as u64,
+                created_at: Time::from_secs_f64(i as f64),
+                event_time: Time::from_secs_f64(i as f64),
+                batch,
+                wire_bytes: bytes,
+            }
+        })
+        .collect();
+    MicroBatch::new(ds)
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    let q = workloads::by_name("lr1s").expect("lr1s").query;
+
+    // Admission estimate (runs every 10 ms poll).
+    let mb = lr_micro_batch(10, 1000);
+    b.bench("eq6 estimate_max_latency (10 datasets)", || {
+        Admission::estimate_max_latency(&mb, Time::from_secs_f64(12.0), 30_000.0)
+    });
+
+    // MapDevice planning (runs once per batch).
+    let est = SizeEstimator::new(q.len());
+    b.bench("alg2 map_device (LR1S dag)", || {
+        map_device(&q, 64.0 * 1024.0, 150.0 * 1024.0, 0.1, &est)
+    });
+
+    // Eq. 10 fit over a long history (background thread work).
+    let history: Vec<HistoryPoint> = (0..1000)
+        .map(|k| HistoryPoint {
+            throughput: 30_000.0 + (k % 37) as f64 * 100.0,
+            max_latency: 4.0 + (k % 11) as f64 * 0.1,
+            inf_pt: 140_000.0 + (k % 53) as f64 * 500.0,
+        })
+        .collect();
+    let job = FitJob { history, target_throughput: 40_000.0, target_latency: 5.0 };
+    b.bench("eq10 ols fit (1000-point history)", || fit_inflection(&job));
+
+    // Batch assembly + partitioning (once per batch).
+    b.bench("micro-batch concat (10x1000 rows)", || mb.concat().unwrap());
+    let big = mb.concat().unwrap();
+    b.bench("partition split into 12", || partition::split(&big, big.bytes(), 12));
+
+    // Native operator kernels over a 10k-row batch.
+    let mut gen = LinearRoadGen::new(9);
+    let batch = gen.generate(0, 10_000);
+    let window = gen.generate(1, 30_000);
+    b.bench("filter 10k rows", || {
+        ops::filter(&batch, "speed", ops::Predicate::Ge(40.0)).unwrap()
+    });
+    b.bench("hash_aggregate 10k rows x 3 keys", || {
+        ops::hash_aggregate(
+            &batch,
+            &["highway", "direction", "segment"],
+            &[ops::AggSpec::avg("speed", "avg")],
+            None,
+        )
+        .unwrap()
+    });
+    b.bench("hash_join 10k probe x 30k window", || {
+        ops::hash_join(&batch, &window, "vehicle", "vehicle").unwrap()
+    });
+    let keep: Vec<String> = ["timestamp", "vehicle", "speed", "highway", "lane",
+        "direction", "segment"].iter().map(|s| s.to_string()).collect();
+    b.bench("hash_join pruned (probe cols only)", || {
+        ops::join::hash_join_pruned(
+            &batch, &window, "vehicle", "vehicle", Some(&keep), Some(&[]),
+        )
+        .unwrap()
+    });
+    b.bench("sort 10k rows", || ops::sort_by(&batch, "speed", false).unwrap());
+    b.report();
+
+    println!("perf_hotpath OK");
+}

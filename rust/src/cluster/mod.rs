@@ -1,0 +1,16 @@
+//! Distributed runtime: the paper's testbed is one master + two worker
+//! nodes with two executors each (§V-A). This module models that
+//! topology: a [`ClusterSpec`] of executors (cores + GPUs each), the
+//! master's partition dispatch, network exchange at shuffle boundaries,
+//! and straggler-aware barrier timing.
+//!
+//! The single-executor default used by the paper-figure benches is the
+//! degenerate `ClusterSpec::single()`; `ClusterSpec::paper()` is the
+//! 4-executor testbed. `benches`/`examples` exercise scale-out via
+//! [`crate::cluster::exec::execute_on_cluster`].
+
+pub mod exec;
+pub mod topology;
+
+pub use exec::{execute_on_cluster, ClusterOutcome};
+pub use topology::{ClusterSpec, ExecutorSpec, NetworkModel};

@@ -1,0 +1,154 @@
+//! Cluster topology and network model.
+
+use crate::error::{Error, Result};
+use std::time::Duration;
+
+/// One executor: a JVM-analog process owning CPU cores and GPUs
+/// (the paper's executors own 12 cores + 1 GPU each).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecutorSpec {
+    pub cores: usize,
+    pub gpus: usize,
+}
+
+impl Default for ExecutorSpec {
+    fn default() -> Self {
+        ExecutorSpec { cores: 12, gpus: 1 }
+    }
+}
+
+/// Inter-executor network (the worker-node NICs).
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// Per-message latency (RPC + serialization setup).
+    pub latency: Duration,
+    /// Effective bandwidth per executor pair, bytes/s.
+    pub bandwidth: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        // 10 GbE with Spark serialization overhead ≈ 300 MB/s effective.
+        NetworkModel {
+            latency: Duration::from_micros(500),
+            bandwidth: 300.0 * 1024.0 * 1024.0,
+        }
+    }
+}
+
+impl NetworkModel {
+    /// Time to move `bytes` across the network in one exchange step.
+    pub fn transfer(&self, bytes: f64) -> Duration {
+        self.latency + Duration::from_secs_f64(bytes / self.bandwidth)
+    }
+}
+
+/// The full cluster.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub executors: Vec<ExecutorSpec>,
+    pub network: NetworkModel,
+    /// Per-batch master coordination overhead (task dispatch, barrier,
+    /// commit) — grows mildly with executor count.
+    pub coordination_per_executor: Duration,
+}
+
+impl ClusterSpec {
+    /// One executor — the per-executor model the paper-figure benches
+    /// calibrate against.
+    pub fn single() -> ClusterSpec {
+        ClusterSpec {
+            executors: vec![ExecutorSpec::default()],
+            network: NetworkModel::default(),
+            coordination_per_executor: Duration::from_millis(20),
+        }
+    }
+
+    /// The paper's testbed: 2 worker nodes x 2 executors (§V-A).
+    pub fn paper() -> ClusterSpec {
+        ClusterSpec {
+            executors: vec![ExecutorSpec::default(); 4],
+            ..ClusterSpec::single()
+        }
+    }
+
+    /// Homogeneous cluster of `n` default executors.
+    pub fn of(n: usize) -> ClusterSpec {
+        ClusterSpec {
+            executors: vec![ExecutorSpec::default(); n],
+            ..ClusterSpec::single()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.executors.is_empty() {
+            return Err(Error::Config("cluster needs at least one executor".into()));
+        }
+        for (i, e) in self.executors.iter().enumerate() {
+            if e.cores == 0 || e.gpus == 0 {
+                return Err(Error::Config(format!(
+                    "executor {i} must have cores and gpus"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.executors.iter().map(|e| e.cores).sum()
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.executors.iter().map(|e| e.gpus).sum()
+    }
+
+    /// Master-side per-batch coordination time.
+    pub fn coordination(&self) -> Duration {
+        Duration::from_secs_f64(
+            self.coordination_per_executor.as_secs_f64() * self.executors.len() as f64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_shape() {
+        let c = ClusterSpec::paper();
+        assert_eq!(c.executors.len(), 4);
+        assert_eq!(c.total_cores(), 48);
+        assert_eq!(c.total_gpus(), 4);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_cluster_invalid() {
+        let c = ClusterSpec { executors: vec![], ..ClusterSpec::single() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn zero_core_executor_invalid() {
+        let c = ClusterSpec {
+            executors: vec![ExecutorSpec { cores: 0, gpus: 1 }],
+            ..ClusterSpec::single()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn network_transfer_scales_with_bytes() {
+        let n = NetworkModel::default();
+        let small = n.transfer(1024.0);
+        let big = n.transfer(100.0 * 1024.0 * 1024.0);
+        assert!(big > small);
+        assert!(big.as_secs_f64() > 0.3); // 100 MB at 300 MB/s
+    }
+
+    #[test]
+    fn coordination_grows_with_executors() {
+        assert!(ClusterSpec::of(4).coordination() > ClusterSpec::of(1).coordination());
+    }
+}

@@ -1,0 +1,214 @@
+//! System configuration: cluster resources, mechanism toggles, cost-model
+//! initial values.
+//!
+//! Defaults mirror one executor of the paper's testbed (§V-A: 12 CPU
+//! cores, 1 GPU, trigger 10 s for the baseline, inflection point
+//! initialized to 150 KB, `baseTransCost` 0.1).
+
+use crate::error::{Error, Result};
+use std::time::Duration;
+
+/// Which coordinator variant drives the run (the systems compared in §V).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Full LMStream: dynamic batching + dynamic device preference +
+    /// online optimizer.
+    LmStream,
+    /// Throughput-oriented baseline: static trigger + all-GPU mapping
+    /// (default Spark + Spark-Rapids per §IV).
+    Baseline,
+    /// Static trigger + all-CPU mapping (plain Spark — the Fig. 1
+    /// motivation experiment ran without GPUs).
+    BaselineCpu,
+    /// LMStream batching but *static* device preference (the
+    /// FineStream-like comparator of §V-D / Fig. 10).
+    StaticPreference,
+    /// Ablations: LMStream batching, all-GPU mapping.
+    AllGpu,
+    /// Ablations: LMStream batching, all-CPU mapping.
+    AllCpu,
+}
+
+impl Mode {
+    /// Parse a CLI token.
+    pub fn parse(s: &str) -> Result<Mode> {
+        match s {
+            "lmstream" => Ok(Mode::LmStream),
+            "baseline" => Ok(Mode::Baseline),
+            "baseline-cpu" => Ok(Mode::BaselineCpu),
+            "static" | "static-pref" => Ok(Mode::StaticPreference),
+            "all-gpu" => Ok(Mode::AllGpu),
+            "all-cpu" => Ok(Mode::AllCpu),
+            other => Err(Error::Config(format!("unknown mode `{other}`"))),
+        }
+    }
+
+    /// Display name used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::LmStream => "LMStream",
+            Mode::Baseline => "Baseline",
+            Mode::BaselineCpu => "BaselineCpu",
+            Mode::StaticPreference => "StaticPref",
+            Mode::AllGpu => "AllGpu",
+            Mode::AllCpu => "AllCpu",
+        }
+    }
+
+    /// Trigger-driven buffering (the throughput-oriented method) rather
+    /// than LMStream's admission control.
+    pub fn uses_trigger(&self) -> bool {
+        matches!(self, Mode::Baseline | Mode::BaselineCpu)
+    }
+}
+
+/// Execution substrate for operator work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// Discrete-event simulation: operators transform data natively while
+    /// *time* comes from the calibrated device model (paper-scale
+    /// experiments; deterministic).
+    Simulated,
+    /// Real execution: CPU ops run natively, GPU-mapped ops run through
+    /// the PJRT artifacts; wall-clock timing.
+    Real,
+}
+
+/// Full system configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Coordinator variant.
+    pub mode: Mode,
+    /// Simulated vs real execution.
+    pub backend: ExecBackend,
+    /// CPU cores per application == number of data partitions (`NumCores`
+    /// in Table I).
+    pub num_cores: usize,
+    /// GPUs available to the executor.
+    pub num_gpus: usize,
+    /// Baseline static trigger interval (§V-A: 10 s).
+    pub trigger: Duration,
+    /// Admission poll period (§III-A: 10 ms).
+    pub poll_interval: Duration,
+    /// Initial inflection point in bytes (§III-D: 150 KB).
+    pub initial_inflection_bytes: f64,
+    /// Initial `baseTransCost` (§III-D: 0.1).
+    pub base_trans_cost: f64,
+    /// Initial average throughput estimate (bytes/s) used before the first
+    /// micro-batch completes (the paper seeds cost-model parameters from
+    /// pre-experiments; §III-A).
+    pub initial_throughput: f64,
+    /// Enable the online optimizer (Eq. 10). Disabled for ablations.
+    pub online_optimizer: bool,
+    /// Optimizer history cap (None = unbounded, the paper's default; the
+    /// last-N policy is the paper's §III-E future-work extension).
+    pub history_cap: Option<usize>,
+    /// PRNG seed (traffic, exploration jitter).
+    pub seed: u64,
+    /// Artifact directory for the PJRT runtime (Real backend).
+    pub artifact_dir: String,
+    /// Multi-executor topology (None = the single-executor model the
+    /// paper-figure benches calibrate against; `ClusterSpec::paper()` is
+    /// the 4-executor §V-A testbed).
+    pub cluster: Option<crate::cluster::ClusterSpec>,
+    /// Checkpoint directory — when set, coordinator state is persisted
+    /// after every micro-batch (§III-E's checkpointing/state-flush step)
+    /// and restored on the next run of the same workload.
+    pub checkpoint_dir: Option<String>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            mode: Mode::LmStream,
+            backend: ExecBackend::Simulated,
+            num_cores: 12,
+            num_gpus: 1,
+            trigger: Duration::from_secs(10),
+            poll_interval: Duration::from_millis(10),
+            initial_inflection_bytes: 150.0 * 1024.0,
+            base_trans_cost: 0.1,
+            initial_throughput: 400.0 * 1024.0,
+            online_optimizer: true,
+            history_cap: None,
+            seed: 0x1a2b3c4d,
+            artifact_dir: "artifacts".to_string(),
+            cluster: None,
+            checkpoint_dir: None,
+        }
+    }
+}
+
+impl Config {
+    /// Validate invariants; call once at startup.
+    pub fn validate(&self) -> Result<()> {
+        if self.num_cores == 0 {
+            return Err(Error::Config("num_cores must be > 0".into()));
+        }
+        if self.num_gpus == 0 {
+            return Err(Error::Config("num_gpus must be > 0".into()));
+        }
+        if self.trigger.is_zero() {
+            return Err(Error::Config("trigger must be > 0".into()));
+        }
+        if self.poll_interval.is_zero() {
+            return Err(Error::Config("poll_interval must be > 0".into()));
+        }
+        if self.initial_inflection_bytes <= 0.0 {
+            return Err(Error::Config("inflection point must be positive".into()));
+        }
+        if self.initial_throughput <= 0.0 {
+            return Err(Error::Config("initial throughput must be positive".into()));
+        }
+        if let Some(cluster) = &self.cluster {
+            cluster.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Baseline preset (§IV/§V-A).
+    pub fn baseline() -> Self {
+        Config { mode: Mode::Baseline, ..Config::default() }
+    }
+
+    /// LMStream preset.
+    pub fn lmstream() -> Self {
+        Config::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_zero_cores() {
+        let cfg = Config { num_cores: 0, ..Config::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_zero_trigger() {
+        let cfg = Config { trigger: Duration::ZERO, ..Config::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn mode_parse_round_trip() {
+        for (s, m) in [
+            ("lmstream", Mode::LmStream),
+            ("baseline", Mode::Baseline),
+            ("static", Mode::StaticPreference),
+            ("all-gpu", Mode::AllGpu),
+            ("all-cpu", Mode::AllCpu),
+        ] {
+            assert_eq!(Mode::parse(s).unwrap(), m);
+        }
+        assert!(Mode::parse("bogus").is_err());
+    }
+}

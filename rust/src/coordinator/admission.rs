@@ -1,0 +1,232 @@
+//! `ConstructMicroBatch` — Algorithm 1.
+//!
+//! Replaces the static trigger: a temporary micro-batch (pending buffered
+//! data ∪ newly polled data) is admitted exactly when its *estimated* max
+//! dataset latency (Eq. 6) reaches the window-derived bound — the window
+//! slide time for sliding windows (Eq. 2), the running average of past
+//! max-latencies for tumbling windows (Eq. 3). Otherwise it is canceled
+//! and keeps buffering.
+
+use crate::engine::dataset::{Dataset, MicroBatch};
+use crate::engine::window::{WindowKind, WindowSpec};
+use crate::sim::Time;
+use std::time::Duration;
+
+/// Outcome of one admission round (the Alg. 1 result triple, with the
+/// canceled batch kept internally as `bufferedFiles`).
+#[derive(Debug)]
+pub enum AdmissionDecision {
+    /// No new data and nothing admissible: keep polling.
+    Poll,
+    /// Micro-batch admitted for immediate processing.
+    Admit(MicroBatch),
+    /// Temporary micro-batch canceled (data re-buffered); carries the
+    /// estimated latency that fell short of the bound.
+    Buffer { est_max_lat: Duration },
+}
+
+/// Admission controller state.
+pub struct Admission {
+    window: WindowSpec,
+    buffered: MicroBatch,
+    /// Bootstrap bound for the tumbling rule before any history exists.
+    initial_avg_bound: Duration,
+}
+
+impl Admission {
+    pub fn new(window: WindowSpec, initial_avg_bound: Duration) -> Admission {
+        Admission {
+            window,
+            buffered: MicroBatch::default(),
+            initial_avg_bound,
+        }
+    }
+
+    /// Rows currently re-buffered from canceled batches.
+    pub fn buffered_datasets(&self) -> usize {
+        self.buffered.num_datasets()
+    }
+
+    /// Eq. 6: `EstMaxLat_i = max_j Buff_(i,j) + Σ_j Part_(i,j) / AvgThPut_(i-1)`.
+    pub fn estimate_max_latency(
+        tmp: &MicroBatch,
+        now: Time,
+        avg_thput_bytes_per_sec: f64,
+    ) -> Duration {
+        let max_buff = tmp
+            .oldest_created_at()
+            .map(|t| now.saturating_sub(t))
+            .unwrap_or(Duration::ZERO);
+        let est_proc = Duration::from_secs_f64(
+            tmp.wire_bytes() as f64 / avg_thput_bytes_per_sec.max(1.0),
+        );
+        max_buff + est_proc
+    }
+
+    /// The latency bound currently in force (Eq. 2 or Eq. 3's RHS).
+    pub fn bound(&self, past_max_lat_avg: Option<Duration>) -> Duration {
+        match self.window.kind() {
+            WindowKind::Sliding => self.window.slide_time(),
+            WindowKind::Tumbling => past_max_lat_avg.unwrap_or(self.initial_avg_bound),
+        }
+    }
+
+    /// One `ConstructMicroBatch()` round (Alg. 1).
+    ///
+    /// * `new_data` — freshly polled datasets (`newFiles`),
+    /// * `now` — current time,
+    /// * `avg_thput` — `AvgThPut_(i-1)` in bytes/s (Eq. 4),
+    /// * `past_max_lat_avg` — running average of `MaxLat_k` (Eq. 3 RHS),
+    ///   `None` before the first batch completes.
+    pub fn construct(
+        &mut self,
+        mut new_data: Vec<Dataset>,
+        now: Time,
+        avg_thput: f64,
+        past_max_lat_avg: Option<Duration>,
+    ) -> AdmissionDecision {
+        if new_data.is_empty() && self.buffered.is_empty() {
+            return AdmissionDecision::Poll; // line 2-3: keep polling
+        }
+        // Lines 4-7: sort new files by creation time, merge with buffered.
+        new_data.sort_by_key(|d| (d.created_at, d.id));
+        let mut tmp = std::mem::take(&mut self.buffered);
+        tmp.absorb(MicroBatch::new(new_data));
+
+        let est = Self::estimate_max_latency(&tmp, now, avg_thput);
+        let bound = self.bound(past_max_lat_avg);
+
+        if est >= bound {
+            // Lines 9-11 / 13-15: process immediately, clear buffer.
+            AdmissionDecision::Admit(tmp)
+        } else {
+            // Lines 16-17: cancel, keep buffering.
+            self.buffered = tmp;
+            AdmissionDecision::Buffer { est_max_lat: est }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+
+    fn ds(id: u64, t: f64, rows: usize) -> Dataset {
+        let schema = Schema::new(vec![Field::f32("x")]);
+        let batch =
+            ColumnBatch::new(schema, vec![Column::F32(vec![0.0; rows])]).unwrap();
+        let bytes = batch.bytes();
+        Dataset {
+            id,
+            created_at: Time::from_secs_f64(t),
+            event_time: Time::from_secs_f64(t),
+            batch,
+            wire_bytes: bytes,
+        }
+    }
+
+    fn sliding(slide_secs: u64) -> Admission {
+        Admission::new(
+            WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(slide_secs)),
+            Duration::from_secs(1),
+        )
+    }
+
+    fn tumbling() -> Admission {
+        Admission::new(
+            WindowSpec::tumbling(Duration::from_secs(30)),
+            Duration::from_secs(1),
+        )
+    }
+
+    #[test]
+    fn no_data_keeps_polling() {
+        let mut a = sliding(5);
+        let d = a.construct(vec![], Time::ZERO, 1e6, None);
+        assert!(matches!(d, AdmissionDecision::Poll));
+    }
+
+    #[test]
+    fn below_bound_buffers() {
+        let mut a = sliding(5);
+        // Tiny data, huge throughput: est latency ≈ buffering only (0s).
+        match a.construct(vec![ds(0, 0.0, 10)], Time::from_secs_f64(0.1), 1e9, None) {
+            AdmissionDecision::Buffer { est_max_lat } => {
+                assert!(est_max_lat < Duration::from_secs(5));
+            }
+            other => panic!("expected buffer, got {other:?}"),
+        }
+        assert_eq!(a.buffered_datasets(), 1);
+    }
+
+    #[test]
+    fn sliding_admits_when_estimate_reaches_slide() {
+        let mut a = sliding(5);
+        // Oldest dataset has buffered 6 s > slide 5 s.
+        let d = a.construct(vec![ds(0, 0.0, 10)], Time::from_secs_f64(6.0), 1e9, None);
+        match d {
+            AdmissionDecision::Admit(mb) => assert_eq!(mb.num_datasets(), 1),
+            other => panic!("expected admit, got {other:?}"),
+        }
+        assert_eq!(a.buffered_datasets(), 0);
+    }
+
+    #[test]
+    fn slow_throughput_admits_early() {
+        let mut a = sliding(5);
+        // 1 KB at 100 B/s → est proc 10 s ≥ bound even with zero buffering.
+        let d = a.construct(vec![ds(0, 0.0, 250)], Time::ZERO, 100.0, None);
+        assert!(matches!(d, AdmissionDecision::Admit(_)));
+    }
+
+    #[test]
+    fn buffered_data_rejoins_next_round() {
+        let mut a = sliding(5);
+        assert!(matches!(
+            a.construct(vec![ds(0, 0.0, 10)], Time::from_secs_f64(0.1), 1e9, None),
+            AdmissionDecision::Buffer { .. }
+        ));
+        // Second round: new data joins the buffered dataset; admitted
+        // batch contains both, creation-ordered.
+        match a.construct(vec![ds(1, 1.0, 10)], Time::from_secs_f64(6.0), 1e9, None) {
+            AdmissionDecision::Admit(mb) => {
+                assert_eq!(mb.num_datasets(), 2);
+                assert_eq!(mb.datasets[0].id, 0);
+            }
+            other => panic!("expected admit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tumbling_uses_running_average_bound() {
+        let mut a = tumbling();
+        let past = Some(Duration::from_secs(3));
+        // est ≈ 2 s buffering < 3 s average → buffer.
+        assert!(matches!(
+            a.construct(vec![ds(0, 0.0, 10)], Time::from_secs_f64(2.0), 1e9, past),
+            AdmissionDecision::Buffer { .. }
+        ));
+        // est ≈ 4 s ≥ 3 s → admit.
+        assert!(matches!(
+            a.construct(vec![], Time::from_secs_f64(4.0), 1e9, past),
+            AdmissionDecision::Admit(_)
+        ));
+    }
+
+    #[test]
+    fn tumbling_bootstrap_bound() {
+        let a = tumbling();
+        assert_eq!(a.bound(None), Duration::from_secs(1));
+        assert_eq!(a.bound(Some(Duration::from_secs(7))), Duration::from_secs(7));
+    }
+
+    #[test]
+    fn estimate_combines_buffering_and_processing() {
+        let mb = MicroBatch::new(vec![ds(0, 0.0, 100)]);
+        let bytes = mb.wire_bytes() as f64;
+        let est = Admission::estimate_max_latency(&mb, Time::from_secs_f64(2.0), bytes);
+        // 2 s buffered + bytes/bytes-per-sec = 1 s.
+        assert!((est.as_secs_f64() - 3.0).abs() < 1e-9);
+    }
+}

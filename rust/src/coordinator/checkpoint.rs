@@ -1,0 +1,257 @@
+//! Checkpointing and state flushing.
+//!
+//! §III-E: "After the query execution completion, stream processing needs
+//! to run additional tasks such as check-pointing and state flushing.
+//! Since the optimization process is performed during this period ... it
+//! rarely blocks real-time streaming applications." This module is that
+//! substrate: after each batch the driver can persist the coordinator's
+//! recoverable state (window contents metadata, metrics history, the
+//! optimizer's inflection point and history) and recover from it on
+//! restart.
+//!
+//! Format: a single JSON document (the in-repo writer; serde is
+//! unavailable offline), atomically replaced via write-to-temp + rename.
+
+use crate::coordinator::optimizer::HistoryPoint;
+use crate::error::{Error, Result};
+use crate::sim::Time;
+use crate::util::json::{arr, num, obj, s, Json};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Recoverable coordinator state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Workload the state belongs to (mismatched recovery is rejected).
+    pub workload: String,
+    /// Batches executed so far.
+    pub batches: usize,
+    /// Stream position: everything created at or before this is processed.
+    pub processed_up_to: Time,
+    /// Current inflection point (bytes).
+    pub inf_pt: f64,
+    /// Eq. 4 cumulative state.
+    pub cumulative_bytes: f64,
+    pub cumulative_proc_secs: f64,
+    /// Eq. 3 running state.
+    pub max_lat_sum_secs: f64,
+    /// Optimizer history.
+    pub history: Vec<HistoryPoint>,
+}
+
+impl Checkpoint {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("format", num(1.0)),
+            ("workload", s(&self.workload)),
+            ("batches", num(self.batches as f64)),
+            ("processed_up_to_ns", num(self.processed_up_to.0 as f64)),
+            ("inf_pt", num(self.inf_pt)),
+            ("cumulative_bytes", num(self.cumulative_bytes)),
+            ("cumulative_proc_secs", num(self.cumulative_proc_secs)),
+            ("max_lat_sum_secs", num(self.max_lat_sum_secs)),
+            (
+                "history",
+                arr(self
+                    .history
+                    .iter()
+                    .map(|h| {
+                        obj(vec![
+                            ("t", num(h.throughput)),
+                            ("l", num(h.max_latency)),
+                            ("i", num(h.inf_pt)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Checkpoint> {
+        let format = j.req("format")?.as_usize().unwrap_or(0);
+        if format != 1 {
+            return Err(Error::Json(format!("unsupported checkpoint format {format}")));
+        }
+        let history = j
+            .req("history")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("history not array".into()))?
+            .iter()
+            .map(|h| {
+                Ok(HistoryPoint {
+                    throughput: h.req("t")?.as_f64().unwrap_or(0.0),
+                    max_latency: h.req("l")?.as_f64().unwrap_or(0.0),
+                    inf_pt: h.req("i")?.as_f64().unwrap_or(0.0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Checkpoint {
+            workload: j.req("workload")?.as_str().unwrap_or("").to_string(),
+            batches: j.req("batches")?.as_usize().unwrap_or(0),
+            processed_up_to: Time(j.req("processed_up_to_ns")?.as_f64().unwrap_or(0.0) as u64),
+            inf_pt: j.req("inf_pt")?.as_f64().unwrap_or(0.0),
+            cumulative_bytes: j.req("cumulative_bytes")?.as_f64().unwrap_or(0.0),
+            cumulative_proc_secs: j.req("cumulative_proc_secs")?.as_f64().unwrap_or(0.0),
+            max_lat_sum_secs: j.req("max_lat_sum_secs")?.as_f64().unwrap_or(0.0),
+            history,
+        })
+    }
+
+    /// Derived: Eq. 4 average throughput at checkpoint time.
+    pub fn avg_throughput(&self) -> f64 {
+        if self.cumulative_proc_secs <= 0.0 {
+            0.0
+        } else {
+            self.cumulative_bytes / self.cumulative_proc_secs
+        }
+    }
+
+    /// Derived: Eq. 3 running average of max latencies.
+    pub fn past_max_lat_avg(&self) -> Option<Duration> {
+        if self.batches == 0 {
+            None
+        } else {
+            Some(Duration::from_secs_f64(
+                self.max_lat_sum_secs / self.batches as f64,
+            ))
+        }
+    }
+}
+
+/// Durable checkpoint store (one file per workload).
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    pub fn new(dir: &Path) -> Result<CheckpointStore> {
+        std::fs::create_dir_all(dir)?;
+        Ok(CheckpointStore { dir: dir.to_path_buf() })
+    }
+
+    fn path_for(&self, workload: &str) -> PathBuf {
+        self.dir.join(format!("{}.ckpt.json", workload.to_lowercase()))
+    }
+
+    /// Atomically persist (write temp + rename).
+    pub fn save(&self, ckpt: &Checkpoint) -> Result<()> {
+        let path = self.path_for(&ckpt.workload);
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, ckpt.to_json().render())?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    /// Load the latest checkpoint for `workload`; `Ok(None)` if absent.
+    pub fn load(&self, workload: &str) -> Result<Option<Checkpoint>> {
+        let path = self.path_for(workload);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        let j = Json::parse(&text)?;
+        let ckpt = Checkpoint::from_json(&j)?;
+        if !ckpt.workload.eq_ignore_ascii_case(workload) {
+            return Err(Error::Config(format!(
+                "checkpoint belongs to `{}`, not `{workload}`",
+                ckpt.workload
+            )));
+        }
+        Ok(Some(ckpt))
+    }
+
+    /// Remove a workload's checkpoint.
+    pub fn clear(&self, workload: &str) -> Result<()> {
+        let path = self.path_for(workload);
+        match std::fs::remove_file(path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Checkpoint {
+        Checkpoint {
+            workload: "LR1S".into(),
+            batches: 42,
+            processed_up_to: Time::from_secs_f64(123.5),
+            inf_pt: 140_000.0,
+            cumulative_bytes: 5e6,
+            cumulative_proc_secs: 100.0,
+            max_lat_sum_secs: 210.0,
+            history: vec![
+                HistoryPoint { throughput: 3e4, max_latency: 5.0, inf_pt: 1.5e5 },
+                HistoryPoint { throughput: 3.2e4, max_latency: 4.5, inf_pt: 1.4e5 },
+            ],
+        }
+    }
+
+    fn store(name: &str) -> CheckpointStore {
+        let d = std::env::temp_dir().join(format!("lmstream-ckpt-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        CheckpointStore::new(&d).unwrap()
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let st = store("roundtrip");
+        let c = demo();
+        st.save(&c).unwrap();
+        let loaded = st.load("lr1s").unwrap().unwrap();
+        assert_eq!(loaded.batches, c.batches);
+        assert_eq!(loaded.processed_up_to, c.processed_up_to);
+        assert_eq!(loaded.inf_pt, c.inf_pt);
+        assert_eq!(loaded.history.len(), 2);
+        assert_eq!(loaded.history[1].max_latency, 4.5);
+    }
+
+    #[test]
+    fn derived_metrics_survive() {
+        let st = store("derived");
+        st.save(&demo()).unwrap();
+        let loaded = st.load("LR1S").unwrap().unwrap();
+        assert_eq!(loaded.avg_throughput(), 5e4);
+        assert_eq!(loaded.past_max_lat_avg().unwrap(), Duration::from_secs_f64(5.0));
+    }
+
+    #[test]
+    fn absent_checkpoint_is_none() {
+        let st = store("absent");
+        assert!(st.load("cm1s").unwrap().is_none());
+    }
+
+    #[test]
+    fn workload_mismatch_rejected() {
+        let st = store("mismatch");
+        let mut c = demo();
+        st.save(&c).unwrap();
+        // Forge: rename the file to another workload.
+        c.workload = "CM1S".into();
+        let from = st.path_for("lr1s");
+        let to = st.path_for("cm1s");
+        std::fs::copy(from, to).unwrap();
+        assert!(st.load("cm1s").is_err());
+    }
+
+    #[test]
+    fn clear_removes() {
+        let st = store("clear");
+        st.save(&demo()).unwrap();
+        st.clear("lr1s").unwrap();
+        assert!(st.load("lr1s").unwrap().is_none());
+        st.clear("lr1s").unwrap(); // idempotent
+    }
+
+    #[test]
+    fn corrupt_file_is_json_error() {
+        let st = store("corrupt");
+        std::fs::write(st.path_for("lr1s"), "not json").unwrap();
+        assert!(st.load("lr1s").is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Metrics bookkeeping: Eqs. 4/5, per-dataset end-to-end latency, and the
+//! Table IV phase-time accounting.
+
+use crate::sim::Time;
+use std::time::Duration;
+
+/// Record of one executed micro-batch.
+#[derive(Clone, Debug)]
+pub struct BatchRecord {
+    /// Micro-batch index `i`.
+    pub index: usize,
+    /// Admission time.
+    pub admitted_at: Time,
+    /// `NumDS_i`.
+    pub num_datasets: usize,
+    /// Σ_j Part_(i,j) (bytes).
+    pub bytes: usize,
+    /// max_j Buff_(i,j).
+    pub max_buffering: Duration,
+    /// `Proc_i`.
+    pub proc: Duration,
+    /// `MaxLat_i` (Eq. 5).
+    pub max_latency: Duration,
+    /// Inflection point used (bytes).
+    pub inf_pt: f64,
+    /// GPU-mapped ops in the plan.
+    pub gpu_ops: usize,
+    /// Total ops in the plan.
+    pub total_ops: usize,
+    /// Time spent inside ConstructMicroBatch for this batch (admission
+    /// decision work, including canceled rounds since the previous batch).
+    pub construct_time: Duration,
+    /// Time spent inside MapDevice.
+    pub map_device_time: Duration,
+    /// Wait on the async optimizer before planning (Table IV
+    /// "Optimization Blocking").
+    pub opt_blocking: Duration,
+}
+
+/// Aggregate phase times over a run (Table IV rows).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTotals {
+    pub buffering: Duration,
+    pub construct: Duration,
+    pub map_device: Duration,
+    pub processing: Duration,
+    pub opt_blocking: Duration,
+}
+
+impl PhaseTotals {
+    pub fn total(&self) -> Duration {
+        self.buffering + self.construct + self.map_device + self.processing + self.opt_blocking
+    }
+
+    /// Percentage rows of Table IV.
+    pub fn ratios(&self) -> [(&'static str, f64); 5] {
+        let t = self.total().as_secs_f64().max(f64::MIN_POSITIVE);
+        [
+            ("Buffering Phase", self.buffering.as_secs_f64() / t * 100.0),
+            ("Construct Micro-batch", self.construct.as_secs_f64() / t * 100.0),
+            ("Map Device", self.map_device.as_secs_f64() / t * 100.0),
+            ("Processing Phase", self.processing.as_secs_f64() / t * 100.0),
+            ("Optimization Blocking", self.opt_blocking.as_secs_f64() / t * 100.0),
+        ]
+    }
+}
+
+/// Run-wide metrics accumulator.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    records: Vec<BatchRecord>,
+    /// Per-dataset end-to-end latency (buffering + its batch's proc), s.
+    dataset_latencies: Vec<f64>,
+    cumulative_bytes: f64,
+    cumulative_proc: f64,
+    max_lat_sum: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Record one executed batch. `dataset_buffs` are the per-dataset
+    /// buffering times of the batch (admission - creation).
+    pub fn record(&mut self, mut rec: BatchRecord, dataset_buffs: &[Duration]) {
+        let max_buff = dataset_buffs.iter().max().copied().unwrap_or(Duration::ZERO);
+        rec.max_buffering = max_buff;
+        rec.max_latency = max_buff + rec.proc; // Eq. 5
+        self.cumulative_bytes += rec.bytes as f64;
+        self.cumulative_proc += rec.proc.as_secs_f64();
+        self.max_lat_sum += rec.max_latency.as_secs_f64();
+        for b in dataset_buffs {
+            self.dataset_latencies
+                .push(b.as_secs_f64() + rec.proc.as_secs_f64());
+        }
+        self.records.push(rec);
+    }
+
+    /// Raw Eq. 4 numerator (bytes processed so far).
+    pub fn cumulative_bytes(&self) -> f64 {
+        self.cumulative_bytes
+    }
+
+    /// Raw Eq. 4 denominator (processing seconds so far).
+    pub fn cumulative_proc_secs(&self) -> f64 {
+        self.cumulative_proc
+    }
+
+    /// Raw Eq. 3 numerator (sum of per-batch max latencies, seconds).
+    pub fn max_lat_sum_secs(&self) -> f64 {
+        self.max_lat_sum
+    }
+
+    /// Eq. 4: cumulative bytes / cumulative processing time (bytes/s).
+    pub fn avg_throughput(&self) -> f64 {
+        if self.cumulative_proc <= 0.0 {
+            0.0
+        } else {
+            self.cumulative_bytes / self.cumulative_proc
+        }
+    }
+
+    /// Eq. 3 RHS: running average of past `MaxLat_k` (None before first).
+    pub fn past_max_lat_avg(&self) -> Option<Duration> {
+        if self.records.is_empty() {
+            None
+        } else {
+            Some(Duration::from_secs_f64(
+                self.max_lat_sum / self.records.len() as f64,
+            ))
+        }
+    }
+
+    /// Mean per-dataset end-to-end latency (Fig. 6's metric), seconds.
+    pub fn avg_dataset_latency(&self) -> f64 {
+        crate::util::stats::mean(&self.dataset_latencies)
+    }
+
+    pub fn dataset_latencies(&self) -> &[f64] {
+        &self.dataset_latencies
+    }
+
+    pub fn records(&self) -> &[BatchRecord] {
+        &self.records
+    }
+
+    pub fn batches(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Table IV totals. Buffering per batch = max dataset buffering (the
+    /// window in which the batch's data sat waiting).
+    pub fn phase_totals(&self) -> PhaseTotals {
+        let mut t = PhaseTotals::default();
+        for r in &self.records {
+            t.buffering += r.max_buffering;
+            t.construct += r.construct_time;
+            t.map_device += r.map_device_time;
+            t.processing += r.proc;
+            t.opt_blocking += r.opt_blocking;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(index: usize, bytes: usize, proc_s: f64) -> BatchRecord {
+        BatchRecord {
+            index,
+            admitted_at: Time::ZERO,
+            num_datasets: 1,
+            bytes,
+            max_buffering: Duration::ZERO,
+            proc: Duration::from_secs_f64(proc_s),
+            max_latency: Duration::ZERO,
+            inf_pt: 150.0 * 1024.0,
+            gpu_ops: 0,
+            total_ops: 3,
+            construct_time: Duration::from_micros(10),
+            map_device_time: Duration::from_micros(5),
+            opt_blocking: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn eq4_throughput() {
+        let mut m = Metrics::new();
+        m.record(rec(0, 1000, 1.0), &[Duration::from_secs(1)]);
+        m.record(rec(1, 3000, 1.0), &[Duration::from_secs(2)]);
+        assert_eq!(m.avg_throughput(), 2000.0);
+    }
+
+    #[test]
+    fn eq5_max_latency_is_buffering_plus_proc() {
+        let mut m = Metrics::new();
+        m.record(
+            rec(0, 100, 2.0),
+            &[Duration::from_secs(1), Duration::from_secs(3)],
+        );
+        assert_eq!(m.records()[0].max_latency, Duration::from_secs(5));
+        assert_eq!(m.records()[0].max_buffering, Duration::from_secs(3));
+    }
+
+    #[test]
+    fn running_average_of_max_latencies() {
+        let mut m = Metrics::new();
+        assert!(m.past_max_lat_avg().is_none());
+        m.record(rec(0, 1, 2.0), &[Duration::ZERO]);
+        m.record(rec(1, 1, 4.0), &[Duration::ZERO]);
+        assert_eq!(m.past_max_lat_avg().unwrap(), Duration::from_secs(3));
+    }
+
+    #[test]
+    fn dataset_latencies_tracked_per_dataset() {
+        let mut m = Metrics::new();
+        m.record(
+            rec(0, 1, 1.0),
+            &[Duration::from_secs(0), Duration::from_secs(2)],
+        );
+        assert_eq!(m.dataset_latencies(), &[1.0, 3.0]);
+        assert_eq!(m.avg_dataset_latency(), 2.0);
+    }
+
+    #[test]
+    fn phase_ratios_sum_to_hundred() {
+        let mut m = Metrics::new();
+        m.record(rec(0, 1, 1.0), &[Duration::from_secs(1)]);
+        let ratios = m.phase_totals().ratios();
+        let sum: f64 = ratios.iter().map(|(_, v)| v).sum();
+        assert!((sum - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,26 @@
+//! The LMStream coordinator — the paper's system contribution.
+//!
+//! * [`admission`] — `ConstructMicroBatch` (Alg. 1): latency-bounded
+//!   dynamic batching,
+//! * [`planner`] — `MapDevice` (Alg. 2): operation-level CPU/GPU planning
+//!   around the inflection point (Eqs. 7–9, Table II),
+//! * [`optimizer`] — asynchronous online regression of the inflection
+//!   point (Eq. 10),
+//! * [`metrics`] — Eqs. 4/5 bookkeeping, per-dataset latency, Table IV
+//!   phase accounting,
+//! * [`driver`] — the micro-batch main loop tying it all together, also
+//!   hosting the baseline (static trigger + all-GPU) and the
+//!   static-preference comparator.
+
+pub mod admission;
+pub mod checkpoint;
+pub mod driver;
+pub mod metrics;
+pub mod optimizer;
+pub mod planner;
+
+pub use admission::{Admission, AdmissionDecision};
+pub use driver::{run, RunResult};
+pub use metrics::{BatchRecord, Metrics, PhaseTotals};
+pub use optimizer::OnlineOptimizer;
+pub use planner::{map_device, static_preference_plan, BaseCost, SizeEstimator};

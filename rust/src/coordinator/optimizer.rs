@@ -1,0 +1,264 @@
+//! Online cost-model parameter optimization — §III-E, Eq. 10.
+//!
+//! After every micro-batch the coordinator records
+//! `(AvgThPut_i, MaxLat_i, InfPT_i)`; a background worker fits
+//!
+//! ```text
+//! InflectionPoint = β0 + β1·Throughput + β2·Latency        (Eq. 10)
+//! ```
+//!
+//! by (ridge-regularized) least squares on that history, then predicts the
+//! next inflection point at the *target* operating point: target
+//! throughput = max observed so far, target latency = the admission bound
+//! (slide time under Eq. 2, running average under Eq. 3). The fit runs
+//! asynchronously on a worker thread — the paper overlaps it with
+//! checkpointing/state-flush after query completion; the driver measures
+//! any residual wait as "Optimization Blocking" (Table IV).
+//!
+//! Interpretation note (documented in DESIGN.md): with a perfectly
+//! constant history the regression is degenerate — the paper does not
+//! specify its escape; we add ridge damping plus a small deterministic
+//! exploration jitter on the *applied* inflection point so the history
+//! carries usable signal, and clamp predictions to a sane byte range.
+
+use crate::util::exec::Worker;
+use crate::util::rng::Rng;
+use crate::util::stats::ols2;
+use std::time::Duration;
+
+/// Inflection-point clamp range (bytes).
+pub const INF_PT_MIN: f64 = 1024.0;
+pub const INF_PT_MAX: f64 = 64.0 * 1024.0 * 1024.0;
+
+/// One per-batch observation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HistoryPoint {
+    /// `AvgThPut_i` (bytes/s).
+    pub throughput: f64,
+    /// `MaxLat_i` (seconds).
+    pub max_latency: f64,
+    /// `InfPT_i` used by that batch (bytes).
+    pub inf_pt: f64,
+}
+
+/// A regression job: the history snapshot plus the target operating point.
+#[derive(Clone, Debug)]
+pub struct FitJob {
+    pub history: Vec<HistoryPoint>,
+    pub target_throughput: f64,
+    pub target_latency: f64,
+}
+
+/// Pure fit: Eq. 10 coefficients from history, evaluated at the target.
+/// `None` when the history is too short or degenerate even under ridge.
+pub fn fit_inflection(job: &FitJob) -> Option<f64> {
+    let n = job.history.len();
+    if n < 3 {
+        return None;
+    }
+    // Normalize features to keep the normal equations well-scaled.
+    let t_scale = job
+        .history
+        .iter()
+        .map(|h| h.throughput.abs())
+        .fold(f64::MIN_POSITIVE, f64::max);
+    let l_scale = job
+        .history
+        .iter()
+        .map(|h| h.max_latency.abs())
+        .fold(f64::MIN_POSITIVE, f64::max);
+    let x1: Vec<f64> = job.history.iter().map(|h| h.throughput / t_scale).collect();
+    let x2: Vec<f64> = job.history.iter().map(|h| h.max_latency / l_scale).collect();
+    let y: Vec<f64> = job.history.iter().map(|h| h.inf_pt).collect();
+    let [b0, b1, b2] = ols2(&x1, &x2, &y, 1e-6)?;
+    let pred = b0 + b1 * (job.target_throughput / t_scale)
+        + b2 * (job.target_latency / l_scale);
+    if !pred.is_finite() {
+        return None;
+    }
+    Some(pred.clamp(INF_PT_MIN, INF_PT_MAX))
+}
+
+/// Asynchronous optimizer wrapper.
+pub struct OnlineOptimizer {
+    worker: Option<Worker<FitJob, Option<f64>>>,
+    history: Vec<HistoryPoint>,
+    history_cap: Option<usize>,
+    rng: Rng,
+    enabled: bool,
+    max_thput_seen: f64,
+}
+
+impl OnlineOptimizer {
+    /// `history_cap = None` keeps full history (the paper's default); the
+    /// last-N policy is its §III-E future-work extension (ablated in
+    /// `benches/ablation_optimizer.rs`).
+    pub fn new(enabled: bool, history_cap: Option<usize>, seed: u64) -> OnlineOptimizer {
+        let worker = if enabled {
+            Some(Worker::spawn("lmstream-optimizer", |job: FitJob| {
+                fit_inflection(&job)
+            }))
+        } else {
+            None
+        };
+        OnlineOptimizer {
+            worker,
+            history: Vec::new(),
+            history_cap,
+            rng: Rng::new(seed ^ 0x0971_1235_u64),
+            enabled,
+            max_thput_seen: 0.0,
+        }
+    }
+
+    pub fn history_len(&self) -> usize {
+        self.history.len()
+    }
+
+    /// Full recorded history (checkpointing).
+    pub fn history(&self) -> &[HistoryPoint] {
+        &self.history
+    }
+
+    /// Record a completed batch and kick off an asynchronous refit.
+    pub fn record(&mut self, point: HistoryPoint, target_latency: Duration) {
+        self.max_thput_seen = self.max_thput_seen.max(point.throughput);
+        self.history.push(point);
+        if let Some(cap) = self.history_cap {
+            let len = self.history.len();
+            if len > cap {
+                self.history.drain(0..len - cap);
+            }
+        }
+        if let Some(w) = &self.worker {
+            w.submit(FitJob {
+                history: self.history.clone(),
+                target_throughput: self.max_thput_seen,
+                target_latency: target_latency.as_secs_f64(),
+            });
+        }
+    }
+
+    /// Collect the freshest fit before the next planning round; returns
+    /// `(new_inf_pt, blocked)` where `blocked` is the wall time spent
+    /// waiting on the worker (Table IV's "Optimization Blocking").
+    pub fn take(&mut self, current: f64, timeout: Duration) -> (f64, Duration) {
+        let Some(w) = &self.worker else {
+            return (current, Duration::ZERO);
+        };
+        if self.history.len() < 3 {
+            return (current, Duration::ZERO);
+        }
+        let (result, blocked) = w.wait_latest(timeout);
+        let fitted = result.flatten().unwrap_or(current);
+        // Exploration jitter (±4%) so the applied InfPT varies enough for
+        // the regression to observe its effect.
+        let jitter = 1.0 + (self.rng.f64() - 0.5) * 0.08;
+        let applied = (fitted * jitter).clamp(INF_PT_MIN, INF_PT_MAX);
+        (applied, blocked)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(points: Vec<(f64, f64, f64)>, tt: f64, tl: f64) -> FitJob {
+        FitJob {
+            history: points
+                .into_iter()
+                .map(|(t, l, i)| HistoryPoint { throughput: t, max_latency: l, inf_pt: i })
+                .collect(),
+            target_throughput: tt,
+            target_latency: tl,
+        }
+    }
+
+    #[test]
+    fn fit_needs_three_points() {
+        assert!(fit_inflection(&job(vec![(1.0, 1.0, 1e5); 2], 1.0, 1.0)).is_none());
+    }
+
+    #[test]
+    fn fit_recovers_linear_relationship() {
+        // InfPT = 1e5 + 2*thput - 1000*lat, exactly.
+        let pts: Vec<(f64, f64, f64)> = (0..20)
+            .map(|k| {
+                let t = 1000.0 + 50.0 * k as f64;
+                let l = 1.0 + 0.1 * ((k * 3) % 7) as f64;
+                (t, l, 1e5 + 2.0 * t - 1000.0 * l)
+            })
+            .collect();
+        let target_t = 2500.0;
+        let target_l = 1.2;
+        let want = 1e5 + 2.0 * target_t - 1000.0 * target_l;
+        let got = fit_inflection(&job(pts, target_t, target_l)).unwrap();
+        assert!((got - want).abs() / want < 0.01, "got {got}, want {want}");
+    }
+
+    #[test]
+    fn degenerate_history_clamps_not_explodes() {
+        let pts = vec![(1000.0, 1.0, 150.0 * 1024.0); 10];
+        if let Some(v) = fit_inflection(&job(pts, 1200.0, 0.9)) {
+            assert!((INF_PT_MIN..=INF_PT_MAX).contains(&v));
+        }
+    }
+
+    #[test]
+    fn prediction_clamped_to_range() {
+        // Steep slope pushing prediction far negative.
+        let pts: Vec<(f64, f64, f64)> = (0..10)
+            .map(|k| (100.0 + k as f64, 1.0, 1e6 - 1e5 * k as f64))
+            .collect();
+        let got = fit_inflection(&job(pts, 1e6, 1.0)).unwrap();
+        assert!((INF_PT_MIN..=INF_PT_MAX).contains(&got));
+    }
+
+    #[test]
+    fn async_round_trip_updates_inflection() {
+        let mut opt = OnlineOptimizer::new(true, None, 42);
+        for k in 0..12 {
+            let t = 1000.0 + 100.0 * k as f64;
+            let l = 2.0 + 0.05 * ((k * 5) % 3) as f64;
+            opt.record(
+                HistoryPoint {
+                    throughput: t,
+                    max_latency: l,
+                    inf_pt: 100_000.0 + 500.0 * k as f64,
+                },
+                Duration::from_secs(5),
+            );
+        }
+        let (inf, _blocked) = opt.take(150_000.0, Duration::from_millis(500));
+        assert!((INF_PT_MIN..=INF_PT_MAX).contains(&inf));
+        assert!(opt.history_len() == 12);
+    }
+
+    #[test]
+    fn disabled_optimizer_is_identity() {
+        let mut opt = OnlineOptimizer::new(false, None, 1);
+        opt.record(
+            HistoryPoint { throughput: 1.0, max_latency: 1.0, inf_pt: 1e5 },
+            Duration::from_secs(1),
+        );
+        let (inf, blocked) = opt.take(123_456.0, Duration::from_secs(1));
+        assert_eq!(inf, 123_456.0);
+        assert_eq!(blocked, Duration::ZERO);
+    }
+
+    #[test]
+    fn history_cap_enforced() {
+        let mut opt = OnlineOptimizer::new(false, Some(5), 1);
+        for k in 0..20 {
+            opt.record(
+                HistoryPoint { throughput: k as f64, max_latency: 1.0, inf_pt: 1e5 },
+                Duration::from_secs(1),
+            );
+        }
+        assert_eq!(opt.history_len(), 5);
+    }
+}

@@ -1,0 +1,293 @@
+//! `MapDevice` — Algorithm 2 with the cost models of Eqs. 7–9.
+//!
+//! Per-operation device selection around the *inflection point*:
+//!
+//! ```text
+//! CPU_(i,j,o)   = baseCost_o × (Part_(i,j) / InfPT_i)          (Eq. 7)
+//! GPU_(i,j,o)   = baseCost_o × (InfPT_i / Part_(i,j))          (Eq. 8)
+//! Trans_(i,j,o) = baseTransCost × (Part_(i,j) / InfPT_i)       (Eq. 9)
+//! ```
+//!
+//! `Part` is the size of the data the operation processes per partition
+//! (§II-B's critique of FineStream is precisely that preference must
+//! follow "the size of the data processed by the operation"); since
+//! intermediate sizes change along the DAG (join/expand amplify, filter
+//! shrinks), the planner propagates per-operation size estimates from
+//! ratios learned on past executions ([`SizeEstimator`]) — seeded at 1.0,
+//! i.e. the paper's plain per-partition size, before any history exists.
+
+use crate::devices::Device;
+use crate::query::dag::{OpKind, Query};
+use crate::query::exec::{DevicePlan, OpTrace};
+use crate::util::stats::Ema;
+
+/// Table II: per-operation base cost and initial device preference.
+#[derive(Clone, Copy, Debug)]
+pub struct BaseCost;
+
+impl BaseCost {
+    /// Base cost of Table II.
+    pub fn cost(kind: OpKind) -> f64 {
+        match kind {
+            OpKind::Aggregate | OpKind::Filter | OpKind::Shuffle => 1.0,
+            OpKind::Project | OpKind::Join | OpKind::Expand => 0.9,
+            OpKind::Scan | OpKind::Sort => 0.8,
+        }
+    }
+
+    /// Initial preference of Table II (device at inflection-sized data).
+    pub fn initial_preference(kind: OpKind) -> Option<Device> {
+        match kind {
+            OpKind::Aggregate | OpKind::Filter | OpKind::Shuffle => Some(Device::Cpu),
+            OpKind::Project | OpKind::Join | OpKind::Expand => None, // neutral
+            OpKind::Scan | OpKind::Sort => Some(Device::Gpu),
+        }
+    }
+}
+
+/// Learned per-operation output/input size ratios for one query, updated
+/// from execution traces (EMA). Gives MapDevice the per-op processed-size
+/// estimates Eq. 7/8 need.
+#[derive(Clone, Debug)]
+pub struct SizeEstimator {
+    ratios: Vec<Ema>,
+    seeded: Vec<bool>,
+}
+
+impl SizeEstimator {
+    pub fn new(num_ops: usize) -> SizeEstimator {
+        SizeEstimator {
+            ratios: vec![Ema::new(0.3); num_ops],
+            seeded: vec![false; num_ops],
+        }
+    }
+
+    /// Ingest per-op in/out byte observations from an execution.
+    pub fn observe(&mut self, traces: &[OpTrace]) {
+        for t in traces {
+            if t.op_id < self.ratios.len() && t.in_bytes > 0 {
+                self.ratios[t.op_id].update(t.out_bytes as f64 / t.in_bytes as f64);
+                self.seeded[t.op_id] = true;
+            }
+        }
+    }
+
+    /// out/in ratio estimate for op `o` (1.0 until observed).
+    pub fn ratio(&self, o: usize) -> f64 {
+        if self.seeded.get(o).copied().unwrap_or(false) {
+            self.ratios[o].get().unwrap_or(1.0)
+        } else {
+            1.0
+        }
+    }
+
+    /// Estimated *processed* size for each op given the source partition
+    /// size: the larger of the op's input and its estimated output (an
+    /// amplifying join/expand is output-bound, a filter input-bound) —
+    /// the "size of the data processed by the operation" of §II-B.
+    pub fn op_sizes(&self, part_bytes: f64) -> Vec<f64> {
+        let mut sizes = Vec::with_capacity(self.ratios.len());
+        let mut s = part_bytes;
+        for o in 0..self.ratios.len() {
+            let out = s * self.ratio(o);
+            sizes.push(s.max(out));
+            s = out;
+        }
+        sizes
+    }
+}
+
+/// Algorithm 2: map each operation to CPU or GPU.
+///
+/// * `part_bytes` — `Part_(i,j)`: per-partition data size of this
+///   micro-batch (mean partition; Spark plans once per batch),
+/// * `inf_pt` — `InfPT_i` in bytes,
+/// * `base_trans` — `baseTransCost` (initially 0.1, §III-D).
+pub fn map_device(
+    query: &Query,
+    part_bytes: f64,
+    inf_pt: f64,
+    base_trans: f64,
+    estimator: &SizeEstimator,
+) -> DevicePlan {
+    let n = query.ops.len();
+    // Line 3: initially, map every operation to the GPU.
+    let mut plan = vec![Device::Gpu; n];
+    let sizes = estimator.op_sizes(part_bytes.max(1.0));
+    let inf = inf_pt.max(1.0);
+    let last = n - 1;
+
+    // Line 4: traverse from the child node (topological order).
+    for (o, node) in query.ops.iter().enumerate() {
+        let kind = node.spec.kind();
+        let size = sizes[o].max(1.0);
+        let base = BaseCost::cost(kind);
+
+        // Line 5 (Eqs. 7/8).
+        let mut cpu_cost = base * (size / inf);
+        let mut gpu_cost = base * (inf / size);
+
+        // Lines 6-9 (Eq. 9): transition cost placement. First/last ops
+        // must fetch/load host-side data; an op after a CPU-mapped op
+        // pays the hop onto the GPU; otherwise leaving the GPU chain
+        // costs the CPU side.
+        let trans = base_trans * (size / inf);
+        let prev_on_cpu = o > 0 && plan[o - 1] == Device::Cpu;
+        if o == 0 || o == last || prev_on_cpu {
+            gpu_cost += trans;
+        } else {
+            cpu_cost += trans;
+        }
+
+        // Lines 10-11.
+        if gpu_cost > cpu_cost {
+            plan[o] = Device::Cpu;
+        }
+    }
+    DevicePlan { per_op: plan }
+}
+
+/// The FineStream-like comparator of §V-D / Fig. 10: device per operation
+/// fixed by Table II's initial preference (neutral ops keep the all-GPU
+/// default), ignoring data size.
+pub fn static_preference_plan(query: &Query) -> DevicePlan {
+    DevicePlan {
+        per_op: query
+            .ops
+            .iter()
+            .map(|op| BaseCost::initial_preference(op.spec.kind()).unwrap_or(Device::Gpu))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ops::filter::Predicate;
+    use crate::engine::window::WindowSpec;
+    use crate::query::builder::QueryBuilder;
+    use std::time::Duration;
+
+    const KB: f64 = 1024.0;
+
+    fn spj() -> Query {
+        QueryBuilder::scan("spj")
+            .window(WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5)))
+            .filter("key", Predicate::Ge(0.0))
+            .project_affine("a", "b", 1.0, 1.0, "out")
+            .join_window("k", "k")
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn small_partitions_map_to_cpu() {
+        let q = spj();
+        let est = SizeEstimator::new(q.len());
+        let plan = map_device(&q, 10.0 * KB, 150.0 * KB, 0.1, &est);
+        // Part ≪ InfPT ⇒ CPU cost (S/I) tiny, GPU cost (I/S) huge.
+        assert!(plan.per_op.iter().all(|d| *d == Device::Cpu), "{plan:?}");
+    }
+
+    #[test]
+    fn large_partitions_map_to_gpu() {
+        let q = spj();
+        let est = SizeEstimator::new(q.len());
+        let plan = map_device(&q, 4096.0 * KB, 150.0 * KB, 0.1, &est);
+        assert!(plan.per_op.iter().all(|d| *d == Device::Gpu), "{plan:?}");
+    }
+
+    #[test]
+    fn learned_amplification_flips_downstream_ops() {
+        let q = spj();
+        let mut est = SizeEstimator::new(q.len());
+        // Teach the estimator that the join (op 3) amplifies 50x: feed
+        // traces where op 2's output explodes into op 3.
+        for _ in 0..10 {
+            est.observe(&[
+                OpTrace { op_id: 0, kind: OpKind::Scan, device: Device::Cpu, time: Duration::ZERO, in_bytes: 10_000, out_bytes: 10_000 },
+                OpTrace { op_id: 1, kind: OpKind::Filter, device: Device::Cpu, time: Duration::ZERO, in_bytes: 10_000, out_bytes: 10_000 },
+                OpTrace { op_id: 2, kind: OpKind::Project, device: Device::Cpu, time: Duration::ZERO, in_bytes: 10_000, out_bytes: 500_000 },
+                OpTrace { op_id: 3, kind: OpKind::Join, device: Device::Cpu, time: Duration::ZERO, in_bytes: 500_000, out_bytes: 500_000 },
+            ]);
+        }
+        // Small source partition, but the estimated join input (50x) is
+        // far beyond the inflection point: join goes GPU, scan stays CPU.
+        let plan = map_device(&q, 10.0 * KB, 150.0 * KB, 0.1, &est);
+        assert_eq!(plan.per_op[0], Device::Cpu);
+        assert_eq!(plan.per_op[3], Device::Gpu, "{plan:?}");
+    }
+
+    #[test]
+    fn transition_cost_discourages_lone_gpu_hop() {
+        // At sizes just above the inflection point, a single op
+        // sandwiched between CPU ops pays entry transfer; the margin
+        // decides. With large base_trans the hop should not happen.
+        let q = spj();
+        let est = SizeEstimator::new(q.len());
+        let plan_cheap = map_device(&q, 160.0 * KB, 150.0 * KB, 0.0, &est);
+        let plan_dear = map_device(&q, 160.0 * KB, 150.0 * KB, 10.0, &est);
+        let gpu_cheap = plan_cheap.per_op.iter().filter(|d| **d == Device::Gpu).count();
+        let gpu_dear = plan_dear.per_op.iter().filter(|d| **d == Device::Gpu).count();
+        assert!(gpu_dear <= gpu_cheap, "{plan_cheap:?} vs {plan_dear:?}");
+    }
+
+    #[test]
+    fn inflection_point_is_the_decision_boundary() {
+        let q = spj();
+        let est = SizeEstimator::new(q.len());
+        // Same partition size, two inflection points straddling it.
+        let low_inf = map_device(&q, 100.0 * KB, 50.0 * KB, 0.1, &est);
+        let high_inf = map_device(&q, 100.0 * KB, 200.0 * KB, 0.1, &est);
+        assert!(low_inf.gpu_ops() > high_inf.gpu_ops());
+    }
+
+    #[test]
+    fn static_plan_follows_table_two() {
+        let q = QueryBuilder::scan("t")
+            .filter("x", Predicate::Ge(0.0))
+            .expand()
+            .shuffle("k")
+            .aggregate(&["k"], vec![], None)
+            .sort("x", false)
+            .build()
+            .unwrap();
+        let plan = static_preference_plan(&q);
+        assert_eq!(
+            plan.per_op,
+            vec![
+                Device::Gpu, // scan
+                Device::Cpu, // filter
+                Device::Gpu, // expand (neutral -> default)
+                Device::Cpu, // shuffle
+                Device::Cpu, // aggregate
+                Device::Gpu, // sort
+            ]
+        );
+    }
+
+    #[test]
+    fn base_costs_match_table_two() {
+        assert_eq!(BaseCost::cost(OpKind::Aggregate), 1.0);
+        assert_eq!(BaseCost::cost(OpKind::Join), 0.9);
+        assert_eq!(BaseCost::cost(OpKind::Scan), 0.8);
+    }
+
+    #[test]
+    fn size_estimator_defaults_to_identity() {
+        let est = SizeEstimator::new(3);
+        assert_eq!(est.op_sizes(100.0), vec![100.0, 100.0, 100.0]);
+    }
+
+    #[test]
+    fn amplifying_op_judged_by_its_output() {
+        let mut est = SizeEstimator::new(2);
+        est.observe(&[
+            OpTrace { op_id: 0, kind: OpKind::Scan, device: Device::Cpu, time: Duration::ZERO, in_bytes: 100, out_bytes: 100 },
+            OpTrace { op_id: 1, kind: OpKind::Join, device: Device::Cpu, time: Duration::ZERO, in_bytes: 100, out_bytes: 3000 },
+        ]);
+        let sizes = est.op_sizes(100.0);
+        assert_eq!(sizes[0], 100.0);
+        assert!((sizes[1] - 3000.0).abs() < 1.0, "{sizes:?}");
+    }
+}

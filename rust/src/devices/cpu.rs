@@ -1,0 +1,121 @@
+//! CPU-path executor: dispatches an [`OpSpec`] to the native operators.
+
+use crate::engine::column::ColumnBatch;
+use crate::engine::ops;
+use crate::engine::window::WindowSpec;
+use crate::error::{Error, Result};
+use crate::query::dag::OpSpec;
+
+/// Execute one operator natively. `window` supplies the build side for
+/// windowed joins; `expand_factor` comes from the query's window spec.
+pub fn run_op(
+    spec: &OpSpec,
+    batch: &ColumnBatch,
+    window: Option<&ColumnBatch>,
+    window_spec: &WindowSpec,
+) -> Result<ColumnBatch> {
+    match spec {
+        OpSpec::Scan => Ok(batch.clone()),
+        OpSpec::Filter { col, pred } => ops::filter(batch, col, *pred),
+        OpSpec::ProjectSelect { keep } => {
+            let names: Vec<&str> = keep.iter().map(|s| s.as_str()).collect();
+            ops::project_select(batch, &names)
+        }
+        OpSpec::ProjectAffine { a, b, alpha, beta, out } => {
+            ops::project_affine(batch, a, b, *alpha, *beta, out)
+        }
+        OpSpec::Expand => ops::expand(batch, window_spec.expand_factor() as usize),
+        OpSpec::Shuffle { key } => {
+            // Single-process exchange: repartition and re-concatenate
+            // (compacts dead rows — the shuffle's observable effect here).
+            let parts = ops::shuffle(batch, key, 1)?;
+            Ok(parts.into_iter().next().expect("one shuffle partition"))
+        }
+        OpSpec::Aggregate { group, aggs, having } => {
+            let groups: Vec<&str> = group.iter().map(|s| s.as_str()).collect();
+            let hv = having.as_ref().map(|(c, p)| (c.as_str(), *p));
+            ops::hash_aggregate(batch, &groups, aggs, hv)
+        }
+        OpSpec::JoinWithWindow { probe_key, build_key } => {
+            let build = window.ok_or_else(|| {
+                Error::Plan("windowed join requires window state".into())
+            })?;
+            ops::hash_join(batch, build, probe_key, build_key)
+        }
+        OpSpec::JoinWithWindowPruned { probe_key, build_key, probe_cols, build_cols } => {
+            let build = window.ok_or_else(|| {
+                Error::Plan("windowed join requires window state".into())
+            })?;
+            ops::join::hash_join_pruned(
+                batch, build, probe_key, build_key,
+                Some(probe_cols), Some(build_cols),
+            )
+        }
+        OpSpec::Sort { col, desc } => ops::sort_by(batch, col, *desc),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::column::{Column, Field, Schema};
+    use crate::engine::ops::filter::Predicate;
+    use std::time::Duration;
+
+    fn batch() -> ColumnBatch {
+        let schema = Schema::new(vec![Field::i32("k"), Field::f32("v")]);
+        ColumnBatch::new(
+            schema,
+            vec![Column::I32(vec![1, 2, 3]), Column::F32(vec![1.0, 2.0, 3.0])],
+        )
+        .unwrap()
+    }
+
+    fn wspec() -> WindowSpec {
+        WindowSpec::tumbling(Duration::from_secs(60))
+    }
+
+    #[test]
+    fn dispatches_filter() {
+        let out = run_op(
+            &OpSpec::Filter { col: "v".into(), pred: Predicate::Ge(2.0) },
+            &batch(),
+            None,
+            &wspec(),
+        )
+        .unwrap();
+        assert_eq!(out.live_rows(), 2);
+    }
+
+    #[test]
+    fn join_without_window_errors() {
+        let r = run_op(
+            &OpSpec::JoinWithWindow { probe_key: "k".into(), build_key: "k".into() },
+            &batch(),
+            None,
+            &wspec(),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn join_with_window_runs() {
+        let out = run_op(
+            &OpSpec::JoinWithWindow { probe_key: "k".into(), build_key: "k".into() },
+            &batch(),
+            Some(&batch()),
+            &wspec(),
+        )
+        .unwrap();
+        assert_eq!(out.rows(), 3); // self-join on unique keys
+    }
+
+    #[test]
+    fn shuffle_compacts() {
+        let mut b = batch();
+        b.valid[0] = 0;
+        let out = run_op(&OpSpec::Shuffle { key: "k".into() }, &b, None, &wspec()).unwrap();
+        assert_eq!(out.rows(), 2);
+        assert!(out.valid.iter().all(|&v| v == 1));
+    }
+}

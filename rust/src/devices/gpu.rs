@@ -1,0 +1,414 @@
+//! GPU-path executor: marshals columns into the PJRT artifacts (the
+//! AOT-compiled JAX/Pallas operators) and back.
+//!
+//! Coverage mirrors Spark-Rapids: the data-parallel heavy hitters run on
+//! the device (filter, arithmetic projection, windowed aggregation, join
+//! probe, sort); plan-level reshapes (column selection, expand, shuffle)
+//! stay host-side, as Rapids keeps them in the JVM. Semantics are
+//! identical to [`crate::devices::cpu`], asserted by integration tests.
+
+use crate::engine::column::{Column, ColumnBatch, DType, Field, Schema};
+use crate::engine::ops;
+use crate::engine::ops::filter::Predicate;
+use crate::engine::window::WindowSpec;
+use crate::error::{Error, Result};
+use crate::query::dag::OpSpec;
+use crate::runtime::client::{HostTensor, Runtime};
+use crate::util::hash::FxHashMap;
+
+/// Max probe rows per `join_probe` invocation (the artifact's build
+/// bucket; larger probes are chunked).
+const JOIN_CHUNK: usize = 4096;
+
+fn col_to_f32(c: &Column) -> Vec<f32> {
+    match c {
+        Column::F32(v) => v.clone(),
+        Column::I32(v) => v.iter().map(|&x| x as f32).collect(),
+    }
+}
+
+fn valid_to_f32(valid: &[u8]) -> Vec<f32> {
+    valid.iter().map(|&v| v as f32).collect()
+}
+
+/// Execute one operator through the artifacts.
+pub fn run_op(
+    rt: &Runtime,
+    spec: &OpSpec,
+    batch: &ColumnBatch,
+    window: Option<&ColumnBatch>,
+    window_spec: &WindowSpec,
+) -> Result<ColumnBatch> {
+    match spec {
+        // Host-side plan reshapes (Rapids keeps these in the JVM too).
+        OpSpec::Scan
+        | OpSpec::ProjectSelect { .. }
+        | OpSpec::Expand
+        | OpSpec::Shuffle { .. } => {
+            crate::devices::cpu::run_op(spec, batch, window, window_spec)
+        }
+
+        OpSpec::Filter { col, pred } => gpu_filter(rt, batch, col, *pred),
+        OpSpec::ProjectAffine { a, b, alpha, beta, out } => {
+            gpu_project_affine(rt, batch, a, b, *alpha, *beta, out)
+        }
+        OpSpec::Aggregate { group, aggs, having } => {
+            gpu_aggregate(rt, batch, group, aggs, having.as_ref())
+        }
+        OpSpec::JoinWithWindow { probe_key, build_key } => {
+            let build = window.ok_or_else(|| {
+                Error::Plan("windowed join requires window state".into())
+            })?;
+            gpu_join(rt, batch, build, probe_key, build_key)
+        }
+        OpSpec::JoinWithWindowPruned { probe_key, build_key, probe_cols, build_cols } => {
+            // Probe phase on device, pruned materialization host-side.
+            let build = window.ok_or_else(|| {
+                Error::Plan("windowed join requires window state".into())
+            })?;
+            let full = gpu_join(rt, batch, build, probe_key, build_key)?;
+            let keep: Vec<String> = probe_cols
+                .iter()
+                .cloned()
+                .chain(build_cols.iter().map(|c| format!("r_{c}")))
+                .collect();
+            let names: Vec<&str> = keep.iter().map(|s| s.as_str()).collect();
+            ops::project_select(&full, &names)
+        }
+        OpSpec::Sort { col, desc } => gpu_sort(rt, batch, col, *desc),
+    }
+}
+
+fn gpu_filter(rt: &Runtime, batch: &ColumnBatch, col: &str, pred: Predicate) -> Result<ColumnBatch> {
+    let rows = batch.rows();
+    if rows == 0 {
+        return Ok(batch.clone());
+    }
+    let keys = HostTensor::F32(col_to_f32(batch.column(col)?));
+    let valid = HostTensor::F32(valid_to_f32(&batch.valid));
+    let out = match pred {
+        Predicate::Ge(v) => rt.execute(
+            "filter_ge",
+            rows,
+            &[keys, valid, HostTensor::F32(vec![v as f32])],
+        )?,
+        Predicate::Lt(v) => rt.execute(
+            "filter_lt",
+            rows,
+            &[keys, valid, HostTensor::F32(vec![v as f32])],
+        )?,
+        Predicate::Eq(v) => rt.execute(
+            "filter_eq",
+            rows,
+            &[keys, valid, HostTensor::F32(vec![v as f32])],
+        )?,
+        Predicate::Band(lo, hi) => rt.execute(
+            "filter_band",
+            rows,
+            &[
+                keys,
+                valid,
+                HostTensor::F32(vec![lo as f32]),
+                HostTensor::F32(vec![hi as f32]),
+            ],
+        )?,
+    };
+    let mut result = batch.clone();
+    result.valid = out[0].as_f32()?.iter().map(|&v| (v > 0.0) as u8).collect();
+    Ok(result)
+}
+
+fn gpu_project_affine(
+    rt: &Runtime,
+    batch: &ColumnBatch,
+    a: &str,
+    b: &str,
+    alpha: f32,
+    beta: f32,
+    out_name: &str,
+) -> Result<ColumnBatch> {
+    let rows = batch.rows();
+    let mut fields = batch.schema.fields.clone();
+    fields.push(Field::f32(out_name));
+    let mut columns = batch.columns.clone();
+    if rows == 0 {
+        columns.push(Column::F32(Vec::new()));
+    } else {
+        let ca = HostTensor::F32(batch.column(a)?.as_f32()?.to_vec());
+        let cb = HostTensor::F32(batch.column(b)?.as_f32()?.to_vec());
+        let out = rt.execute(
+            "project_affine",
+            rows,
+            &[
+                ca,
+                cb,
+                HostTensor::F32(vec![alpha]),
+                HostTensor::F32(vec![beta]),
+            ],
+        )?;
+        columns.push(Column::F32(out[0].as_f32()?.to_vec()));
+    }
+    Ok(ColumnBatch { schema: Schema::new(fields), columns, valid: batch.valid.clone() })
+}
+
+/// GPU hash aggregation via the pallas `window_aggregate` kernel: group
+/// keys are densified host-side (hash-table build, as Rapids does for its
+/// dictionary pass), then per-group sums/counts come from the device.
+/// Handles > NUM_GROUPS distinct groups by running the kernel in chunks.
+fn gpu_aggregate(
+    rt: &Runtime,
+    batch: &ColumnBatch,
+    group: &[String],
+    aggs: &[ops::AggSpec],
+    having: Option<&(String, Predicate)>,
+) -> Result<ColumnBatch> {
+    let num_groups = rt.manifest().num_groups;
+    let rows = batch.rows();
+    // Densify composite group keys.
+    let key_idx: Vec<usize> = group
+        .iter()
+        .map(|c| batch.schema.index_of(c))
+        .collect::<Result<_>>()?;
+    let mut slots: FxHashMap<Vec<i64>, i32> = FxHashMap::default();
+    let mut order: Vec<Vec<i64>> = Vec::new();
+    let mut gids = vec![0i32; rows];
+    for row in 0..rows {
+        if batch.valid[row] == 0 {
+            continue;
+        }
+        let key: Vec<i64> = key_idx
+            .iter()
+            .map(|&ci| match &batch.columns[ci] {
+                Column::I32(v) => v[row] as i64,
+                Column::F32(v) => v[row].to_bits() as i64,
+            })
+            .collect();
+        let next = order.len() as i32;
+        let slot = *slots.entry(key.clone()).or_insert_with(|| {
+            order.push(key);
+            next
+        });
+        gids[row] = slot;
+    }
+    let n_groups = order.len();
+
+    // Per-agg device reduction, chunked over group ranges of NUM_GROUPS.
+    let valid_f = valid_to_f32(&batch.valid);
+    let mut sums: Vec<Vec<f32>> = vec![vec![0.0; n_groups]; aggs.len()];
+    let mut counts: Vec<f32> = vec![0.0; n_groups];
+    if rows > 0 {
+        for chunk_start in (0..n_groups.max(1)).step_by(num_groups) {
+            // Mask rows outside this chunk's group range.
+            let mut cgids = vec![0i32; rows];
+            let mut cvalid = vec![0.0f32; rows];
+            for row in 0..rows {
+                let g = gids[row] as usize;
+                if batch.valid[row] == 1
+                    && g >= chunk_start
+                    && g < chunk_start + num_groups
+                {
+                    cgids[row] = (g - chunk_start) as i32;
+                    cvalid[row] = valid_f[row];
+                }
+            }
+            for (ai, a) in aggs.iter().enumerate() {
+                let values = if a.func == ops::AggFunc::Count {
+                    vec![0.0f32; rows]
+                } else {
+                    col_to_f32(batch.column(&a.value_col)?)
+                };
+                let out = rt.execute(
+                    "window_aggregate",
+                    rows,
+                    &[
+                        HostTensor::I32(cgids.clone()),
+                        HostTensor::F32(values),
+                        HostTensor::F32(cvalid.clone()),
+                    ],
+                )?;
+                let s = out[0].as_f32()?;
+                let c = out[1].as_f32()?;
+                for g in 0..num_groups.min(n_groups.saturating_sub(chunk_start)) {
+                    sums[ai][chunk_start + g] += s[g];
+                    if ai == 0 {
+                        counts[chunk_start + g] += c[g];
+                    }
+                }
+            }
+            if aggs.is_empty() {
+                break;
+            }
+        }
+    }
+
+    // Assemble output (same layout as the native aggregate).
+    let mut fields: Vec<Field> = key_idx
+        .iter()
+        .map(|&ci| batch.schema.fields[ci].clone())
+        .collect();
+    for a in aggs {
+        fields.push(Field::f32(&a.out));
+    }
+    let mut columns: Vec<Column> = Vec::new();
+    for (k, &ci) in key_idx.iter().enumerate() {
+        match batch.schema.fields[ci].dtype {
+            DType::I32 => columns.push(Column::I32(
+                order.iter().map(|key| key[k] as i32).collect(),
+            )),
+            DType::F32 => columns.push(Column::F32(
+                order.iter().map(|key| f32::from_bits(key[k] as u32)).collect(),
+            )),
+        }
+    }
+    for (ai, a) in aggs.iter().enumerate() {
+        let vals: Vec<f32> = (0..n_groups)
+            .map(|g| match a.func {
+                ops::AggFunc::Sum => sums[ai][g],
+                ops::AggFunc::Count => counts[g],
+                ops::AggFunc::Avg => sums[ai][g] / counts[g].max(1.0),
+            })
+            .collect();
+        columns.push(Column::F32(vals));
+    }
+    let mut out = ColumnBatch {
+        schema: Schema::new(fields),
+        columns,
+        valid: vec![1; n_groups],
+    };
+    if let Some((col, pred)) = having {
+        out = ops::filter(&out, col, *pred)?;
+    }
+    Ok(out)
+}
+
+/// GPU join: probe-phase match detection on the device (`join_probe` over
+/// build chunks), pair materialization host-side — semantics equal to the
+/// native `hash_join`.
+fn gpu_join(
+    rt: &Runtime,
+    probe: &ColumnBatch,
+    build: &ColumnBatch,
+    probe_key: &str,
+    build_key: &str,
+) -> Result<ColumnBatch> {
+    let pk = col_to_f32(probe.column(probe_key)?);
+    let bk = col_to_f32(build.column(build_key)?);
+    let p_valid = valid_to_f32(&probe.valid);
+
+    let mut probe_idx: Vec<usize> = Vec::new();
+    let mut build_idx: Vec<usize> = Vec::new();
+
+    // Pre-slice build chunks with their chunk-local hash tables.
+    struct Chunk {
+        keys: Vec<f32>,
+        valid: Vec<f32>,
+        table: FxHashMap<u32, Vec<usize>>,
+    }
+    let mut chunks: Vec<Chunk> = Vec::new();
+    for chunk_start in (0..build.rows()).step_by(JOIN_CHUNK) {
+        let chunk_end = (chunk_start + JOIN_CHUNK).min(build.rows());
+        let keys: Vec<f32> = bk[chunk_start..chunk_end].to_vec();
+        let valid: Vec<f32> = build.valid[chunk_start..chunk_end]
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        let mut table: FxHashMap<u32, Vec<usize>> = FxHashMap::default();
+        for (off, &k) in keys.iter().enumerate() {
+            if valid[off] > 0.0 {
+                table.entry(k.to_bits()).or_default().push(chunk_start + off);
+            }
+        }
+        chunks.push(Chunk { keys, valid, table });
+    }
+
+    // Probe-major traversal (matches the native join's output order):
+    // device pass per (probe chunk x build chunk) flags matching rows,
+    // then pairs are emitted row by row in ascending build order.
+    for probe_start in (0..probe.rows()).step_by(JOIN_CHUNK) {
+        let probe_end = (probe_start + JOIN_CHUNK).min(probe.rows());
+        let rows = probe_end - probe_start;
+        let mut found_any = vec![false; rows];
+        for chunk in &chunks {
+            let out = rt.execute(
+                "join_probe",
+                rows,
+                &[
+                    HostTensor::F32(pk[probe_start..probe_end].to_vec()),
+                    HostTensor::F32(p_valid[probe_start..probe_end].to_vec()),
+                    HostTensor::F32(chunk.keys.clone()),
+                    HostTensor::F32(chunk.valid.clone()),
+                ],
+            )?;
+            let found = out[1].as_f32()?;
+            for (off, &f) in found.iter().enumerate() {
+                if f > 0.0 {
+                    found_any[off] = true;
+                }
+            }
+        }
+        for (off, &hit) in found_any.iter().enumerate() {
+            if !hit {
+                continue;
+            }
+            let row = probe_start + off;
+            let key = pk[row].to_bits();
+            for chunk in &chunks {
+                if let Some(matches) = chunk.table.get(&key) {
+                    for &b in matches {
+                        probe_idx.push(row);
+                        build_idx.push(b);
+                    }
+                }
+            }
+        }
+    }
+
+    // Materialize (same output layout as native hash_join).
+    let mut fields = probe.schema.fields.clone();
+    for f in &build.schema.fields {
+        fields.push(Field { name: format!("r_{}", f.name), dtype: f.dtype });
+    }
+    let mut columns: Vec<Column> =
+        probe.columns.iter().map(|c| c.take(&probe_idx)).collect();
+    for c in &build.columns {
+        columns.push(c.take(&build_idx));
+    }
+    Ok(ColumnBatch {
+        schema: Schema::new(fields),
+        columns,
+        valid: vec![1; probe_idx.len()],
+    })
+}
+
+fn gpu_sort(rt: &Runtime, batch: &ColumnBatch, col: &str, desc: bool) -> Result<ColumnBatch> {
+    let rows = batch.rows();
+    if rows == 0 {
+        return Ok(batch.clone());
+    }
+    let mut keys = col_to_f32(batch.column(col)?);
+    if desc {
+        for k in &mut keys {
+            *k = -*k;
+        }
+    }
+    let valid = valid_to_f32(&batch.valid);
+    let out = rt.execute(
+        "sort_perm",
+        rows,
+        &[HostTensor::F32(keys), HostTensor::F32(valid)],
+    )?;
+    let perm: Vec<usize> = out[0]
+        .as_i32()?
+        .iter()
+        .map(|&i| i as usize)
+        .filter(|&i| i < rows) // drop padding slots
+        .collect();
+    if perm.len() != rows {
+        return Err(Error::Xla("sort permutation lost rows".into()));
+    }
+    Ok(ColumnBatch {
+        schema: batch.schema.clone(),
+        columns: batch.columns.iter().map(|c| c.take(&perm)).collect(),
+        valid: perm.iter().map(|&i| batch.valid[i]).collect(),
+    })
+}

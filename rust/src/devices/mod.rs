@@ -1,0 +1,23 @@
+//! Execution devices: the calibrated CPU/GPU/PCIe timing model
+//! ([`model`]), the native CPU executor ([`cpu`]) and the PJRT-backed GPU
+//! executor ([`gpu`]).
+
+pub mod cpu;
+pub mod gpu;
+pub mod model;
+
+/// The two devices MapDevice chooses between (§III-D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Device {
+    Cpu,
+    Gpu,
+}
+
+impl Device {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Device::Cpu => "CPU",
+            Device::Gpu => "GPU",
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! Calibrated device timing model — the simulation's ground-truth
+//! "physics", distinct from the planner's cost model (Eqs. 7–9), exactly
+//! as a real deployment's hardware differs from its scheduler's estimates.
+//!
+//! Calibration targets (DESIGN.md §Hardware-Adaptation): one paper
+//! executor — 12 Xeon cores + 1 RTX 2080 Ti over PCIe — running the
+//! paper's Spark + Spark-Rapids stack, whose *effective* per-byte costs
+//! are dominated by the framework (task scheduling, columnar conversion,
+//! kernel launch), not raw silicon. The constants reproduce the regime
+//! relationships the evaluation depends on:
+//!
+//! * per-op CPU/GPU crossover within the paper's 15 KB–150 KB band
+//!   (Figs. 2/5),
+//! * PCIe overhead < 1 % of execution for small data, rising to a
+//!   significant share past the inflection region (Fig. 2),
+//! * Linear-Road-style constant traffic (≈65 KB/s) "fully loading the
+//!   computing capacity" (§V-A): all-CPU processing rate ≈ ingest rate,
+//!   all-GPU ≈ 1.2–1.5× CPU, so hybrid CPU+GPU ≈ 2× — the headroom
+//!   LMStream's planner converts into its ≤1.74× throughput gain.
+
+use crate::devices::Device;
+use crate::query::dag::OpKind;
+use std::time::Duration;
+
+/// Work accounting for one operator execution: the byte volumes the model
+/// charges for.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpVolume {
+    /// Input bytes consumed by the operator.
+    pub in_bytes: f64,
+    /// Output bytes materialized (captures join/expand amplification).
+    pub out_bytes: f64,
+    /// Side-input bytes (window state snapshot for windowed ops).
+    pub aux_bytes: f64,
+}
+
+impl OpVolume {
+    pub fn new(in_bytes: f64, out_bytes: f64, aux_bytes: f64) -> OpVolume {
+        OpVolume { in_bytes, out_bytes, aux_bytes }
+    }
+
+    /// Effective processed bytes: inputs + materialized output + a
+    /// discounted pass over the side input (hash build is cheaper than
+    /// the probe/materialize side).
+    pub fn work_bytes(&self) -> f64 {
+        self.in_bytes + self.out_bytes + 0.25 * self.aux_bytes
+    }
+}
+
+/// Tunable timing parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceModel {
+    /// Per-partition, per-op CPU task overhead (Spark task dispatch).
+    pub cpu_fixed: Duration,
+    /// CPU processing cost per effective byte, per core.
+    pub cpu_ns_per_byte: f64,
+    /// Per-op GPU invocation overhead (kernel launch + Rapids dispatch);
+    /// partitions are coalesced per op on the GPU.
+    pub gpu_fixed: Duration,
+    /// GPU processing cost per effective byte.
+    pub gpu_ns_per_byte: f64,
+    /// PCIe/host-device transfer latency per transfer.
+    pub pcie_lat: Duration,
+    /// Transfer cost per byte (includes row↔columnar conversion, the
+    /// dominant Spark-Rapids transfer cost).
+    pub pcie_ns_per_byte: f64,
+    /// Per-micro-batch scheduling overhead (driver, DAG submit, commit).
+    pub batch_fixed: Duration,
+    /// GPU working-set size beyond which Rapids spills device memory
+    /// (the RTX 2080 Ti's 8 GB, scaled to this cost world). The
+    /// throughput-oriented baseline's giant buffered batches cross this;
+    /// LMStream's bounded batches mostly don't — the "overall performance
+    /// degradation caused by buffering" of §V-B.
+    pub gpu_mem_bytes: f64,
+    /// Host memory pressure threshold for CPU-side spilling.
+    pub cpu_mem_bytes: f64,
+    /// Extra cost per unit of working set beyond the memory threshold.
+    pub spill_slope: f64,
+}
+
+impl Default for DeviceModel {
+    fn default() -> Self {
+        DeviceModel {
+            cpu_fixed: Duration::from_millis(15),
+            cpu_ns_per_byte: 6_000.0, // 6 µs/B ≈ 166 KB/s effective per core
+            gpu_fixed: Duration::from_millis(400),
+            gpu_ns_per_byte: 150.0, // 0.15 µs/B ≈ 6.5 MB/s effective
+            pcie_lat: Duration::from_micros(50),
+            pcie_ns_per_byte: 120.0, // ≈ 8 MB/s incl. columnar conversion
+            batch_fixed: Duration::from_millis(300),
+            gpu_mem_bytes: 4.5 * 1024.0 * 1024.0,
+            cpu_mem_bytes: 48.0 * 1024.0 * 1024.0,
+            spill_slope: 2.5,
+        }
+    }
+}
+
+/// Relative work factor per operator kind (the "physics" analog of
+/// Table II's base costs).
+pub fn op_work_scale(kind: OpKind) -> f64 {
+    match kind {
+        OpKind::Scan => 1.2,      // CSV parse
+        OpKind::Filter => 0.6,
+        OpKind::Project => 0.5,
+        OpKind::Expand => 0.4,    // replication is copy-bound
+        OpKind::Shuffle => 1.0,
+        OpKind::Aggregate => 1.5, // hash build + update
+        OpKind::Join => 0.8,      // per effective byte; amplification via out_bytes
+        OpKind::Sort => 1.3,
+    }
+}
+
+/// GPU efficiency per operator kind (>1 = GPU relatively poor at it).
+/// Mirrors the measured preferences of the authors' prior study ([14],
+/// Table II): hash aggregation / filtering / shuffling lean CPU; scan and
+/// sort lean GPU.
+pub fn gpu_relative_cost(kind: OpKind) -> f64 {
+    match kind {
+        OpKind::Scan => 0.7,
+        OpKind::Sort => 0.7,
+        OpKind::Project => 0.9,
+        OpKind::Join => 0.9,
+        OpKind::Expand => 0.9,
+        OpKind::Filter => 1.25,
+        OpKind::Aggregate => 1.25,
+        OpKind::Shuffle => 1.4,
+    }
+}
+
+impl DeviceModel {
+    /// Time for one operator execution on `device`.
+    ///
+    /// CPU: `vol` is the per-partition volume (one core runs it).
+    /// GPU: `vol` is the coalesced volume of all GPU-mapped partitions
+    /// for this op (Rapids batches per-op GPU work).
+    pub fn op_time(&self, device: Device, kind: OpKind, vol: OpVolume) -> Duration {
+        let work = vol.work_bytes() * op_work_scale(kind) * self.spill_factor(device, vol);
+        match device {
+            Device::Cpu => {
+                self.cpu_fixed + Duration::from_nanos((work * self.cpu_ns_per_byte) as u64)
+            }
+            Device::Gpu => {
+                // The per-op efficiency applies to launch overhead too:
+                // CPU-leaning ops (hash agg, shuffle) need more kernel
+                // launches / host round-trips in Rapids, not just more
+                // cycles per byte.
+                let eff = gpu_relative_cost(kind);
+                Duration::from_secs_f64(self.gpu_fixed.as_secs_f64() * eff)
+                    + Duration::from_nanos((work * self.gpu_ns_per_byte * eff) as u64)
+            }
+        }
+    }
+
+    /// Spill multiplier: 1.0 while the op's working set fits device
+    /// memory, growing linearly past it (capped 6x — full out-of-core).
+    pub fn spill_factor(&self, device: Device, vol: OpVolume) -> f64 {
+        let limit = match device {
+            Device::Gpu => self.gpu_mem_bytes,
+            Device::Cpu => self.cpu_mem_bytes,
+        };
+        let working_set = vol.in_bytes + vol.out_bytes + vol.aux_bytes;
+        let excess = (working_set / limit - 1.0).max(0.0);
+        (1.0 + self.spill_slope * excess).min(6.0)
+    }
+
+    /// Host↔device transfer time for `bytes`.
+    pub fn transfer_time(&self, bytes: f64) -> Duration {
+        self.pcie_lat + Duration::from_nanos((bytes * self.pcie_ns_per_byte) as u64)
+    }
+
+    /// Data size where CPU and GPU op costs cross for a simple
+    /// (in==out==S, no aux) operator of `kind` — the physics' true
+    /// inflection point, which the paper's online optimizer is trying to
+    /// discover (§III-E).
+    pub fn crossover_bytes(&self, kind: OpKind) -> f64 {
+        // cpu_fixed + 2S*scale*cpu = gpu_fixed*eff + 2S*scale*gpu*eff + 2 transfers
+        let scale = op_work_scale(kind);
+        let eff = gpu_relative_cost(kind);
+        let fixed_gap = self.gpu_fixed.as_nanos() as f64 * eff
+            + (2 * self.pcie_lat).as_nanos() as f64
+            - self.cpu_fixed.as_nanos() as f64;
+        let per_byte_gap = 2.0 * scale * (self.cpu_ns_per_byte - self.gpu_ns_per_byte * eff)
+            - 2.0 * self.pcie_ns_per_byte;
+        if per_byte_gap <= 0.0 {
+            f64::INFINITY
+        } else {
+            fixed_gap / per_byte_gap
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KB: f64 = 1024.0;
+
+    fn m() -> DeviceModel {
+        DeviceModel::default()
+    }
+
+    fn sym(s: f64) -> OpVolume {
+        OpVolume::new(s, s, 0.0)
+    }
+
+    #[test]
+    fn cpu_cheaper_for_small_partitions() {
+        for kind in [OpKind::Filter, OpKind::Aggregate, OpKind::Join, OpKind::Scan] {
+            let cpu = m().op_time(Device::Cpu, kind, sym(8.0 * KB));
+            let gpu = m().op_time(Device::Gpu, kind, sym(8.0 * KB));
+            assert!(cpu < gpu, "{kind:?}: cpu {cpu:?} !< gpu {gpu:?}");
+        }
+    }
+
+    #[test]
+    fn gpu_cheaper_for_large_partitions() {
+        for kind in [OpKind::Filter, OpKind::Aggregate, OpKind::Join, OpKind::Scan] {
+            let cpu = m().op_time(Device::Cpu, kind, sym(2048.0 * KB));
+            let gpu = m().op_time(Device::Gpu, kind, sym(2048.0 * KB));
+            assert!(gpu < cpu, "{kind:?}: gpu {gpu:?} !< cpu {cpu:?}");
+        }
+    }
+
+    #[test]
+    fn crossover_in_paper_band() {
+        // The paper reports per-op preference flips between ~15 KB and
+        // ~150 KB (Fig. 5); physics crossovers must land in (or very near)
+        // that band for the planner's 150 KB initial inflection to be a
+        // sensible-but-improvable starting point.
+        for kind in [
+            OpKind::Scan,
+            OpKind::Filter,
+            OpKind::Project,
+            OpKind::Aggregate,
+            OpKind::Join,
+            OpKind::Sort,
+            OpKind::Shuffle,
+        ] {
+            let s = m().crossover_bytes(kind);
+            assert!(
+                (8.0 * KB..400.0 * KB).contains(&s),
+                "{kind:?} crossover {} KB out of band",
+                s / KB
+            );
+        }
+    }
+
+    #[test]
+    fn gpu_leaning_ops_cross_earlier() {
+        // Scan/sort prefer GPU sooner than aggregate/filter/shuffle.
+        assert!(m().crossover_bytes(OpKind::Scan) < m().crossover_bytes(OpKind::Aggregate));
+        assert!(m().crossover_bytes(OpKind::Sort) < m().crossover_bytes(OpKind::Shuffle));
+    }
+
+    #[test]
+    fn pcie_overhead_small_below_one_percent() {
+        // Fig. 2: transfer/total < 1 % for small data.
+        let s = 10.0 * KB;
+        let transfer = m().transfer_time(s).as_secs_f64();
+        let total = (m().op_time(Device::Gpu, OpKind::Project, sym(s))
+            + m().transfer_time(s)
+            + m().transfer_time(s))
+        .as_secs_f64();
+        assert!(transfer / total < 0.01, "ratio {}", transfer / total);
+    }
+
+    #[test]
+    fn pcie_overhead_significant_for_large() {
+        // Fig. 2: the ratio surges well past 1 % for large batches.
+        let s = 20.0 * 1024.0 * KB;
+        let transfer = 2.0 * m().transfer_time(s).as_secs_f64();
+        let total = m().op_time(Device::Gpu, OpKind::Project, sym(s)).as_secs_f64()
+            + transfer;
+        assert!(transfer / total > 0.05, "ratio {}", transfer / total);
+    }
+
+    #[test]
+    fn work_bytes_discounts_aux() {
+        let v = OpVolume::new(100.0, 200.0, 400.0);
+        assert_eq!(v.work_bytes(), 100.0 + 200.0 + 100.0);
+    }
+
+    #[test]
+    fn spill_kicks_in_past_device_memory() {
+        let model = m();
+        let small = OpVolume::new(1.0 * 1024.0 * KB, 1.0 * 1024.0 * KB, 0.0);
+        assert_eq!(model.spill_factor(Device::Gpu, small), 1.0);
+        let big = OpVolume::new(16.0 * 1024.0 * KB, 16.0 * 1024.0 * KB, 0.0);
+        let f = model.spill_factor(Device::Gpu, big);
+        assert!(f > 1.5, "spill factor {f}");
+        assert!(model.spill_factor(Device::Cpu, big) < f, "host memory is larger");
+        // Cap at full out-of-core.
+        let huge = OpVolume::new(1e12, 1e12, 0.0);
+        assert_eq!(model.spill_factor(Device::Gpu, huge), 6.0);
+    }
+
+    #[test]
+    fn capacity_regime_lr_traffic() {
+        // LR constant traffic ≈ 30 KB/s (in-memory bytes) with ~30x join
+        // amplification (DESIGN.md): the 12-core CPU processing rate over
+        // effective bytes must sit near the effective ingest rate (the
+        // §V-A "fully loading" condition for the Fig. 1 CPU experiment),
+        // while the GPU — at the *baseline's* spilled working sets —
+        // saturates too, leaving LMStream's bounded batches (unspilled)
+        // the headroom the paper's gains come from.
+        let model = m();
+        let eff_ingest = 30.0 * KB * 33.0; // bytes/s of effective work
+        let cpu_rate = 12.0 * 1e9 / model.cpu_ns_per_byte;
+        let rho_cpu = eff_ingest / cpu_rate;
+        assert!((0.4..1.3).contains(&rho_cpu), "rho_cpu {rho_cpu}");
+        // GPU at baseline working sets (~15 MB vs 4 MB device memory):
+        let spill = model.spill_factor(
+            Device::Gpu,
+            OpVolume::new(0.3e6, 13.0e6, 0.9e6),
+        );
+        assert!(spill > 2.0, "baseline batches must spill, factor {spill}");
+        let gpu_rate_spilled = 1e9 / (model.gpu_ns_per_byte * 0.9 * spill);
+        let rho_gpu_baseline = eff_ingest / gpu_rate_spilled;
+        // GPU at LMStream working sets (bounded batches, no spill):
+        let gpu_rate_clean = 1e9 / (model.gpu_ns_per_byte * 0.9);
+        let rho_gpu_lmstream = eff_ingest / gpu_rate_clean;
+        assert!(
+            rho_gpu_baseline > 1.8 * rho_gpu_lmstream,
+            "spill must separate the regimes ({rho_gpu_baseline} vs {rho_gpu_lmstream})"
+        );
+    }
+}

@@ -1,0 +1,330 @@
+//! Columnar storage: typed columns, schemas and batches.
+//!
+//! Matches the layout the AOT artifacts expect (f32 data columns, i32 key
+//! columns, and a 0/1 row-validity mask — filtered rows stay in place and
+//! are compacted only at shuffle boundaries, like columnar engines do).
+
+use crate::error::{Error, Result};
+use std::sync::Arc;
+
+/// Column element type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// A named, typed column slot in a schema.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Field {
+    pub name: String,
+    pub dtype: DType,
+}
+
+impl Field {
+    pub fn f32(name: &str) -> Field {
+        Field { name: name.to_string(), dtype: DType::F32 }
+    }
+
+    pub fn i32(name: &str) -> Field {
+        Field { name: name.to_string(), dtype: DType::I32 }
+    }
+}
+
+/// An ordered set of fields.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Schema {
+    pub fields: Vec<Field>,
+}
+
+impl Schema {
+    pub fn new(fields: Vec<Field>) -> Arc<Schema> {
+        Arc::new(Schema { fields })
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.fields
+            .iter()
+            .position(|f| f.name == name)
+            .ok_or_else(|| Error::Schema(format!("unknown column `{name}`")))
+    }
+
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+}
+
+/// A single column's values.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Column {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Column {
+    pub fn len(&self) -> usize {
+        match self {
+            Column::F32(v) => v.len(),
+            Column::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Column::F32(_) => DType::F32,
+            Column::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Column::F32(v) => Ok(v),
+            Column::I32(_) => Err(Error::Schema("expected f32 column".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Column::I32(v) => Ok(v),
+            Column::F32(_) => Err(Error::Schema("expected i32 column".into())),
+        }
+    }
+
+    /// Value at `i` as f64 (for predicates that work across types).
+    pub fn get_f64(&self, i: usize) -> f64 {
+        match self {
+            Column::F32(v) => v[i] as f64,
+            Column::I32(v) => v[i] as f64,
+        }
+    }
+
+    /// Gather rows by index.
+    pub fn take(&self, idx: &[usize]) -> Column {
+        match self {
+            Column::F32(v) => Column::F32(idx.iter().map(|&i| v[i]).collect()),
+            Column::I32(v) => Column::I32(idx.iter().map(|&i| v[i]).collect()),
+        }
+    }
+
+    /// Concatenate many columns of the same dtype.
+    pub fn concat(parts: &[&Column]) -> Result<Column> {
+        let first = parts.first().ok_or_else(|| Error::Schema("empty concat".into()))?;
+        match first {
+            Column::F32(_) => {
+                let mut out = Vec::new();
+                for p in parts {
+                    out.extend_from_slice(p.as_f32()?);
+                }
+                Ok(Column::F32(out))
+            }
+            Column::I32(_) => {
+                let mut out = Vec::new();
+                for p in parts {
+                    out.extend_from_slice(p.as_i32()?);
+                }
+                Ok(Column::I32(out))
+            }
+        }
+    }
+
+    /// Contiguous slice [start, start+len).
+    pub fn slice(&self, start: usize, len: usize) -> Column {
+        match self {
+            Column::F32(v) => Column::F32(v[start..start + len].to_vec()),
+            Column::I32(v) => Column::I32(v[start..start + len].to_vec()),
+        }
+    }
+
+    /// Bytes of in-memory representation.
+    pub fn bytes(&self) -> usize {
+        self.len() * 4
+    }
+}
+
+/// A batch: schema + columns + row-validity mask.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColumnBatch {
+    pub schema: Arc<Schema>,
+    pub columns: Vec<Column>,
+    /// 1 = live row, 0 = filtered/padding.
+    pub valid: Vec<u8>,
+}
+
+impl ColumnBatch {
+    /// Build with all rows valid; checks column/schema consistency.
+    pub fn new(schema: Arc<Schema>, columns: Vec<Column>) -> Result<ColumnBatch> {
+        if columns.len() != schema.len() {
+            return Err(Error::Schema(format!(
+                "{} columns for schema of {}",
+                columns.len(),
+                schema.len()
+            )));
+        }
+        let rows = columns.first().map(|c| c.len()).unwrap_or(0);
+        for (c, f) in columns.iter().zip(&schema.fields) {
+            if c.len() != rows {
+                return Err(Error::Schema(format!("ragged column `{}`", f.name)));
+            }
+            if c.dtype() != f.dtype {
+                return Err(Error::Schema(format!("dtype mismatch on `{}`", f.name)));
+            }
+        }
+        Ok(ColumnBatch { schema, columns, valid: vec![1; rows] })
+    }
+
+    /// Empty batch with the given schema.
+    pub fn empty(schema: Arc<Schema>) -> ColumnBatch {
+        let columns = schema
+            .fields
+            .iter()
+            .map(|f| match f.dtype {
+                DType::F32 => Column::F32(Vec::new()),
+                DType::I32 => Column::I32(Vec::new()),
+            })
+            .collect();
+        ColumnBatch { schema, columns, valid: Vec::new() }
+    }
+
+    /// Total rows (live + dead).
+    pub fn rows(&self) -> usize {
+        self.valid.len()
+    }
+
+    /// Live rows only.
+    pub fn live_rows(&self) -> usize {
+        self.valid.iter().map(|&v| v as usize).sum()
+    }
+
+    /// Column accessor by name.
+    pub fn column(&self, name: &str) -> Result<&Column> {
+        Ok(&self.columns[self.schema.index_of(name)?])
+    }
+
+    /// In-memory bytes of the live representation.
+    pub fn bytes(&self) -> usize {
+        self.columns.iter().map(|c| c.bytes()).sum::<usize>() + self.valid.len()
+    }
+
+    /// Concatenate batches that share a schema.
+    pub fn concat(parts: &[&ColumnBatch]) -> Result<ColumnBatch> {
+        let first = parts.first().ok_or_else(|| Error::Schema("empty concat".into()))?;
+        let schema = Arc::clone(&first.schema);
+        for p in parts {
+            if p.schema != schema {
+                return Err(Error::Schema("concat over mixed schemas".into()));
+            }
+        }
+        let mut columns = Vec::with_capacity(schema.len());
+        for ci in 0..schema.len() {
+            let cols: Vec<&Column> = parts.iter().map(|p| &p.columns[ci]).collect();
+            columns.push(Column::concat(&cols)?);
+        }
+        let mut valid = Vec::new();
+        for p in parts {
+            valid.extend_from_slice(&p.valid);
+        }
+        Ok(ColumnBatch { schema, columns, valid })
+    }
+
+    /// Contiguous row slice.
+    pub fn slice(&self, start: usize, len: usize) -> ColumnBatch {
+        ColumnBatch {
+            schema: Arc::clone(&self.schema),
+            columns: self.columns.iter().map(|c| c.slice(start, len)).collect(),
+            valid: self.valid[start..start + len].to_vec(),
+        }
+    }
+
+    /// Drop dead rows (shuffle-boundary compaction).
+    pub fn compact(&self) -> ColumnBatch {
+        let idx: Vec<usize> = (0..self.rows()).filter(|&i| self.valid[i] == 1).collect();
+        ColumnBatch {
+            schema: Arc::clone(&self.schema),
+            columns: self.columns.iter().map(|c| c.take(&idx)).collect(),
+            valid: vec![1; idx.len()],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> ColumnBatch {
+        let schema = Schema::new(vec![Field::f32("speed"), Field::i32("lane")]);
+        ColumnBatch::new(
+            schema,
+            vec![
+                Column::F32(vec![10.0, 20.0, 30.0]),
+                Column::I32(vec![1, 2, 3]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn construction_checks_consistency() {
+        let schema = Schema::new(vec![Field::f32("a")]);
+        assert!(ColumnBatch::new(schema.clone(), vec![]).is_err());
+        assert!(
+            ColumnBatch::new(schema.clone(), vec![Column::I32(vec![1])]).is_err()
+        );
+        assert!(ColumnBatch::new(schema, vec![Column::F32(vec![1.0])]).is_ok());
+    }
+
+    #[test]
+    fn ragged_columns_rejected() {
+        let schema = Schema::new(vec![Field::f32("a"), Field::f32("b")]);
+        let r = ColumnBatch::new(
+            schema,
+            vec![Column::F32(vec![1.0]), Column::F32(vec![1.0, 2.0])],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn column_lookup_by_name() {
+        let b = demo();
+        assert_eq!(b.column("speed").unwrap().as_f32().unwrap()[1], 20.0);
+        assert!(b.column("nope").is_err());
+    }
+
+    #[test]
+    fn concat_and_slice_round_trip() {
+        let b = demo();
+        let big = ColumnBatch::concat(&[&b, &b]).unwrap();
+        assert_eq!(big.rows(), 6);
+        let back = big.slice(3, 3);
+        assert_eq!(back.columns, b.columns);
+    }
+
+    #[test]
+    fn compact_drops_dead_rows() {
+        let mut b = demo();
+        b.valid[1] = 0;
+        assert_eq!(b.live_rows(), 2);
+        let c = b.compact();
+        assert_eq!(c.rows(), 2);
+        assert_eq!(c.column("speed").unwrap().as_f32().unwrap(), &[10.0, 30.0]);
+    }
+
+    #[test]
+    fn take_gathers() {
+        let c = Column::F32(vec![1.0, 2.0, 3.0]);
+        assert_eq!(c.take(&[2, 0]).as_f32().unwrap(), &[3.0, 1.0]);
+    }
+
+    #[test]
+    fn bytes_accounts_columns_and_mask() {
+        let b = demo();
+        assert_eq!(b.bytes(), 3 * 4 + 3 * 4 + 3);
+    }
+}

@@ -1,0 +1,134 @@
+//! Datasets (the paper's arrival unit — one "file" / row-record group per
+//! ingest tick) and micro-batches (the execution unit, `NumDS_i` datasets).
+
+use crate::engine::column::ColumnBatch;
+use crate::error::Result;
+use crate::sim::Time;
+
+/// One ingested dataset: rows that arrived together, stamped with their
+/// creation time (the paper's file creation time; latency is measured from
+/// here — end-to-end, §V-B).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Monotone ingest sequence number.
+    pub id: u64,
+    /// Creation/arrival time.
+    pub created_at: Time,
+    /// Event-time of the rows (== arrival in our generators).
+    pub event_time: Time,
+    /// Row data.
+    pub batch: ColumnBatch,
+    /// Wire size in bytes (CSV-equivalent; this is the `Part`/size measure
+    /// the paper's cost models use, not our in-memory footprint).
+    pub wire_bytes: usize,
+}
+
+impl Dataset {
+    pub fn rows(&self) -> usize {
+        self.batch.rows()
+    }
+}
+
+/// A micro-batch: the datasets admitted for one processing-phase execution.
+#[derive(Clone, Debug, Default)]
+pub struct MicroBatch {
+    pub datasets: Vec<Dataset>,
+}
+
+impl MicroBatch {
+    pub fn new(datasets: Vec<Dataset>) -> MicroBatch {
+        MicroBatch { datasets }
+    }
+
+    /// `NumDS_i` in Table I.
+    pub fn num_datasets(&self) -> usize {
+        self.datasets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.datasets.is_empty()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.datasets.iter().map(|d| d.rows()).sum()
+    }
+
+    /// Total wire bytes (Σ_j Part_(i,j) numerator of Eq. 4).
+    pub fn wire_bytes(&self) -> usize {
+        self.datasets.iter().map(|d| d.wire_bytes).sum()
+    }
+
+    /// Earliest dataset creation time — the row that has buffered longest
+    /// (max_j Buff in Eqs. 5/6 is measured against this).
+    pub fn oldest_created_at(&self) -> Option<Time> {
+        self.datasets.iter().map(|d| d.created_at).min()
+    }
+
+    /// Newest event time (window head).
+    pub fn newest_event_time(&self) -> Option<Time> {
+        self.datasets.iter().map(|d| d.event_time).max()
+    }
+
+    /// All rows concatenated into one batch.
+    pub fn concat(&self) -> Result<ColumnBatch> {
+        let parts: Vec<&ColumnBatch> = self.datasets.iter().map(|d| &d.batch).collect();
+        ColumnBatch::concat(&parts)
+    }
+
+    /// Append datasets from another micro-batch (re-buffered data joining
+    /// newly polled data, Alg. 1 line 7).
+    pub fn absorb(&mut self, other: MicroBatch) {
+        self.datasets.extend(other.datasets);
+        self.datasets.sort_by_key(|d| (d.created_at, d.id));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+
+    fn ds(id: u64, t: f64, rows: usize) -> Dataset {
+        let schema = Schema::new(vec![Field::f32("x")]);
+        let batch =
+            ColumnBatch::new(schema, vec![Column::F32(vec![1.0; rows])]).unwrap();
+        Dataset {
+            id,
+            created_at: Time::from_secs_f64(t),
+            event_time: Time::from_secs_f64(t),
+            batch,
+            wire_bytes: rows * 65,
+        }
+    }
+
+    #[test]
+    fn aggregates_over_datasets() {
+        let mb = MicroBatch::new(vec![ds(0, 1.0, 10), ds(1, 2.0, 20)]);
+        assert_eq!(mb.num_datasets(), 2);
+        assert_eq!(mb.rows(), 30);
+        assert_eq!(mb.wire_bytes(), 30 * 65);
+        assert_eq!(mb.oldest_created_at().unwrap().as_secs_f64(), 1.0);
+        assert_eq!(mb.newest_event_time().unwrap().as_secs_f64(), 2.0);
+    }
+
+    #[test]
+    fn concat_merges_rows() {
+        let mb = MicroBatch::new(vec![ds(0, 1.0, 3), ds(1, 2.0, 4)]);
+        assert_eq!(mb.concat().unwrap().rows(), 7);
+    }
+
+    #[test]
+    fn absorb_keeps_creation_order() {
+        let mut a = MicroBatch::new(vec![ds(1, 2.0, 1)]);
+        a.absorb(MicroBatch::new(vec![ds(0, 1.0, 1)]));
+        assert_eq!(a.datasets[0].id, 0);
+        assert_eq!(a.datasets[1].id, 1);
+    }
+
+    #[test]
+    fn empty_micro_batch() {
+        let mb = MicroBatch::default();
+        assert!(mb.is_empty());
+        assert!(mb.oldest_created_at().is_none());
+    }
+}

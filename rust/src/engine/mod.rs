@@ -1,0 +1,20 @@
+//! The streaming substrate: a from-scratch columnar micro-batch engine
+//! (the Spark analog the paper's mechanisms are implemented into).
+//!
+//! * [`column`] — typed columns, schemas, batches
+//! * [`dataset`] — arrival-stamped datasets and micro-batches
+//! * [`partition`] — splitting a micro-batch across `NumCores` partitions
+//! * [`window`] — sliding/tumbling window state management
+//! * [`ops`] — native CPU operators (scan, filter, project, aggregate,
+//!   join, sort, expand, shuffle)
+
+pub mod column;
+pub mod dataset;
+pub mod ops;
+pub mod partition;
+pub mod sink;
+pub mod window;
+
+pub use column::{Column, ColumnBatch, DType, Field, Schema};
+pub use dataset::{Dataset, MicroBatch};
+pub use window::{WindowKind, WindowSpec, WindowState};

@@ -1,0 +1,251 @@
+//! Hash aggregation: GROUP BY over key columns with SUM/COUNT/AVG, plus
+//! optional HAVING.
+
+use crate::engine::column::{Column, ColumnBatch, DType, Field, Schema};
+use crate::engine::ops::filter::Predicate;
+use crate::error::{Error, Result};
+use crate::util::hash::FxHashMap;
+
+/// Aggregate function.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggFunc {
+    Sum,
+    Count,
+    Avg,
+}
+
+/// One aggregate output: `func(value_col) AS out`.
+#[derive(Clone, Debug)]
+pub struct AggSpec {
+    pub func: AggFunc,
+    pub value_col: String,
+    pub out: String,
+}
+
+impl AggSpec {
+    pub fn sum(col: &str, out: &str) -> AggSpec {
+        AggSpec { func: AggFunc::Sum, value_col: col.into(), out: out.into() }
+    }
+
+    pub fn count(out: &str) -> AggSpec {
+        // COUNT(*) needs no value column; keep a placeholder.
+        AggSpec { func: AggFunc::Count, value_col: String::new(), out: out.into() }
+    }
+
+    pub fn avg(col: &str, out: &str) -> AggSpec {
+        AggSpec { func: AggFunc::Avg, value_col: col.into(), out: out.into() }
+    }
+}
+
+/// GROUP BY `group_cols` computing `aggs`; output rows are one per group,
+/// ordered by first appearance (deterministic). `having` filters on an
+/// output aggregate column.
+pub fn hash_aggregate(
+    batch: &ColumnBatch,
+    group_cols: &[&str],
+    aggs: &[AggSpec],
+    having: Option<(&str, Predicate)>,
+) -> Result<ColumnBatch> {
+    if group_cols.is_empty() {
+        return Err(Error::Plan("aggregate needs at least one group column".into()));
+    }
+    let key_idx: Vec<usize> = group_cols
+        .iter()
+        .map(|c| batch.schema.index_of(c))
+        .collect::<Result<_>>()?;
+    // Pre-resolve value columns.
+    let value_cols: Vec<Option<&[f32]>> = aggs
+        .iter()
+        .map(|a| {
+            if a.func == AggFunc::Count {
+                Ok(None)
+            } else {
+                batch.column(&a.value_col)?.as_f32().map(Some)
+            }
+        })
+        .collect::<Result<_>>()?;
+
+    // Group index: composite i64-encoded key -> dense group slot.
+    let mut slots: FxHashMap<Vec<i64>, usize> = FxHashMap::default();
+    let mut order: Vec<Vec<i64>> = Vec::new();
+    let mut sums: Vec<Vec<f64>> = Vec::new();
+    let mut counts: Vec<f64> = Vec::new();
+
+    // Scratch key reused across rows; cloned only on first occurrence.
+    let mut key: Vec<i64> = Vec::with_capacity(key_idx.len());
+    for row in 0..batch.rows() {
+        if batch.valid[row] == 0 {
+            continue;
+        }
+        key.clear();
+        for &ci in &key_idx {
+            key.push(match &batch.columns[ci] {
+                Column::I32(v) => v[row] as i64,
+                Column::F32(v) => v[row].to_bits() as i64,
+            });
+        }
+        let slot = match slots.get(&key) {
+            Some(&s) => s,
+            None => {
+                let s = order.len();
+                slots.insert(key.clone(), s);
+                order.push(key.clone());
+                sums.push(vec![0.0; aggs.len()]);
+                counts.push(0.0);
+                s
+            }
+        };
+        counts[slot] += 1.0;
+        for (ai, vc) in value_cols.iter().enumerate() {
+            if let Some(vals) = vc {
+                sums[slot][ai] += vals[row] as f64;
+            }
+        }
+    }
+
+    // Assemble output schema: group keys + aggregate columns.
+    let mut fields: Vec<Field> = key_idx
+        .iter()
+        .map(|&ci| batch.schema.fields[ci].clone())
+        .collect();
+    for a in aggs {
+        fields.push(Field::f32(&a.out));
+    }
+    let n_groups = order.len();
+    let mut columns: Vec<Column> = Vec::with_capacity(fields.len());
+    for (k, &ci) in key_idx.iter().enumerate() {
+        match batch.schema.fields[ci].dtype {
+            DType::I32 => columns.push(Column::I32(
+                order.iter().map(|key| key[k] as i32).collect(),
+            )),
+            DType::F32 => columns.push(Column::F32(
+                order.iter().map(|key| f32::from_bits(key[k] as u32)).collect(),
+            )),
+        }
+    }
+    for (ai, a) in aggs.iter().enumerate() {
+        let vals: Vec<f32> = (0..n_groups)
+            .map(|g| match a.func {
+                AggFunc::Sum => sums[g][ai] as f32,
+                AggFunc::Count => counts[g] as f32,
+                AggFunc::Avg => (sums[g][ai] / counts[g].max(1.0)) as f32,
+            })
+            .collect();
+        columns.push(Column::F32(vals));
+    }
+    let mut out = ColumnBatch {
+        schema: Schema::new(fields),
+        columns,
+        valid: vec![1; n_groups],
+    };
+    if let Some((col, pred)) = having {
+        out = crate::engine::ops::filter::filter(&out, col, pred)?;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch() -> ColumnBatch {
+        let schema = Schema::new(vec![Field::i32("g"), Field::f32("v")]);
+        ColumnBatch::new(
+            schema,
+            vec![
+                Column::I32(vec![1, 2, 1, 2, 1]),
+                Column::F32(vec![10.0, 20.0, 30.0, 40.0, 50.0]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sum_count_avg_per_group() {
+        let out = hash_aggregate(
+            &batch(),
+            &["g"],
+            &[
+                AggSpec::sum("v", "s"),
+                AggSpec::count("c"),
+                AggSpec::avg("v", "m"),
+            ],
+            None,
+        )
+        .unwrap();
+        assert_eq!(out.rows(), 2);
+        assert_eq!(out.column("g").unwrap().as_i32().unwrap(), &[1, 2]);
+        assert_eq!(out.column("s").unwrap().as_f32().unwrap(), &[90.0, 60.0]);
+        assert_eq!(out.column("c").unwrap().as_f32().unwrap(), &[3.0, 2.0]);
+        assert_eq!(out.column("m").unwrap().as_f32().unwrap(), &[30.0, 30.0]);
+    }
+
+    #[test]
+    fn dead_rows_excluded() {
+        let mut b = batch();
+        b.valid[4] = 0; // drop the 50.0 in group 1
+        let out =
+            hash_aggregate(&b, &["g"], &[AggSpec::sum("v", "s")], None).unwrap();
+        assert_eq!(out.column("s").unwrap().as_f32().unwrap(), &[40.0, 60.0]);
+    }
+
+    #[test]
+    fn having_filters_groups() {
+        let out = hash_aggregate(
+            &batch(),
+            &["g"],
+            &[AggSpec::avg("v", "m")],
+            Some(("m", Predicate::Lt(31.0))),
+        )
+        .unwrap();
+        // Both groups average 30.0 < 31.0.
+        assert_eq!(out.live_rows(), 2);
+        let out2 = hash_aggregate(
+            &batch(),
+            &["g"],
+            &[AggSpec::sum("v", "s")],
+            Some(("s", Predicate::Ge(80.0))),
+        )
+        .unwrap();
+        assert_eq!(out2.live_rows(), 1);
+    }
+
+    #[test]
+    fn multi_key_grouping() {
+        let schema = Schema::new(vec![Field::i32("a"), Field::i32("b"), Field::f32("v")]);
+        let b = ColumnBatch::new(
+            schema,
+            vec![
+                Column::I32(vec![1, 1, 2]),
+                Column::I32(vec![5, 6, 5]),
+                Column::F32(vec![1.0, 2.0, 3.0]),
+            ],
+        )
+        .unwrap();
+        let out =
+            hash_aggregate(&b, &["a", "b"], &[AggSpec::count("c")], None).unwrap();
+        assert_eq!(out.rows(), 3); // (1,5), (1,6), (2,5)
+    }
+
+    #[test]
+    fn f32_group_keys_supported() {
+        let schema = Schema::new(vec![Field::f32("g"), Field::f32("v")]);
+        let b = ColumnBatch::new(
+            schema,
+            vec![
+                Column::F32(vec![0.5, 0.5, 1.5]),
+                Column::F32(vec![1.0, 2.0, 3.0]),
+            ],
+        )
+        .unwrap();
+        let out = hash_aggregate(&b, &["g"], &[AggSpec::sum("v", "s")], None).unwrap();
+        assert_eq!(out.rows(), 2);
+        assert_eq!(out.column("g").unwrap().as_f32().unwrap(), &[0.5, 1.5]);
+        assert_eq!(out.column("s").unwrap().as_f32().unwrap(), &[3.0, 3.0]);
+    }
+
+    #[test]
+    fn empty_group_cols_rejected() {
+        assert!(hash_aggregate(&batch(), &[], &[AggSpec::count("c")], None).is_err());
+    }
+}

@@ -1,0 +1,69 @@
+//! Expand: replicate each live row `factor` times with a window-instance
+//! tag — Spark's rewrite assigning rows of a sliding window to their
+//! range/slide overlapping window instances.
+
+use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+use crate::error::{Error, Result};
+
+/// Replicate rows `factor` times, appending an i32 `window_id` column
+/// (0..factor) per replica.
+pub fn expand(batch: &ColumnBatch, factor: usize) -> Result<ColumnBatch> {
+    if factor == 0 {
+        return Err(Error::Plan("expand factor must be >= 1".into()));
+    }
+    let rows = batch.rows();
+    let mut idx = Vec::with_capacity(rows * factor);
+    let mut wid = Vec::with_capacity(rows * factor);
+    for w in 0..factor {
+        for row in 0..rows {
+            idx.push(row);
+            wid.push(w as i32);
+        }
+    }
+    let mut fields = batch.schema.fields.clone();
+    fields.push(Field::i32("window_id"));
+    let mut columns: Vec<Column> = batch.columns.iter().map(|c| c.take(&idx)).collect();
+    columns.push(Column::I32(wid));
+    let valid: Vec<u8> = idx.iter().map(|&i| batch.valid[i]).collect();
+    Ok(ColumnBatch { schema: Schema::new(fields), columns, valid })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch() -> ColumnBatch {
+        let schema = Schema::new(vec![Field::f32("v")]);
+        ColumnBatch::new(schema, vec![Column::F32(vec![1.0, 2.0])]).unwrap()
+    }
+
+    #[test]
+    fn replicates_rows_with_window_ids() {
+        let out = expand(&batch(), 3).unwrap();
+        assert_eq!(out.rows(), 6);
+        assert_eq!(
+            out.column("window_id").unwrap().as_i32().unwrap(),
+            &[0, 0, 1, 1, 2, 2]
+        );
+    }
+
+    #[test]
+    fn factor_one_is_tagging_only() {
+        let out = expand(&batch(), 1).unwrap();
+        assert_eq!(out.rows(), 2);
+        assert_eq!(out.schema.len(), 2);
+    }
+
+    #[test]
+    fn dead_rows_stay_dead_in_replicas() {
+        let mut b = batch();
+        b.valid[0] = 0;
+        let out = expand(&b, 2).unwrap();
+        assert_eq!(out.valid, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn zero_factor_rejected() {
+        assert!(expand(&batch(), 0).is_err());
+    }
+}

@@ -1,0 +1,88 @@
+//! Filter: predicate over one column, ANDed into the validity mask.
+
+use crate::engine::column::ColumnBatch;
+use crate::error::Result;
+
+/// Scalar predicates the workloads need (Table III WHERE/HAVING clauses).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Predicate {
+    /// `col >= v`
+    Ge(f64),
+    /// `col < v`
+    Lt(f64),
+    /// `col == v`
+    Eq(f64),
+    /// `lo <= col < hi`
+    Band(f64, f64),
+}
+
+impl Predicate {
+    pub fn eval(&self, x: f64) -> bool {
+        match *self {
+            Predicate::Ge(v) => x >= v,
+            Predicate::Lt(v) => x < v,
+            Predicate::Eq(v) => x == v,
+            Predicate::Band(lo, hi) => x >= lo && x < hi,
+        }
+    }
+}
+
+/// Apply `pred` on `col`; dead rows stay dead (mask is monotone).
+pub fn filter(batch: &ColumnBatch, col: &str, pred: Predicate) -> Result<ColumnBatch> {
+    let c = batch.column(col)?;
+    let mut out = batch.clone();
+    for i in 0..out.rows() {
+        if out.valid[i] == 1 && !pred.eval(c.get_f64(i)) {
+            out.valid[i] = 0;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+
+    fn batch() -> ColumnBatch {
+        let schema = Schema::new(vec![Field::f32("v")]);
+        ColumnBatch::new(schema, vec![Column::F32(vec![1.0, 2.0, 3.0, 4.0])]).unwrap()
+    }
+
+    #[test]
+    fn ge_keeps_boundary() {
+        let out = filter(&batch(), "v", Predicate::Ge(2.0)).unwrap();
+        assert_eq!(out.valid, vec![0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn lt_excludes_boundary() {
+        let out = filter(&batch(), "v", Predicate::Lt(3.0)).unwrap();
+        assert_eq!(out.valid, vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn eq_matches_exact() {
+        let out = filter(&batch(), "v", Predicate::Eq(3.0)).unwrap();
+        assert_eq!(out.valid, vec![0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn band_half_open() {
+        let out = filter(&batch(), "v", Predicate::Band(2.0, 4.0)).unwrap();
+        assert_eq!(out.valid, vec![0, 1, 1, 0]);
+    }
+
+    #[test]
+    fn mask_is_monotone() {
+        let mut b = batch();
+        b.valid[3] = 0; // already dead
+        let out = filter(&b, "v", Predicate::Ge(0.0)).unwrap();
+        assert_eq!(out.valid, vec![1, 1, 1, 0]);
+    }
+
+    #[test]
+    fn unknown_column_errors() {
+        assert!(filter(&batch(), "nope", Predicate::Ge(0.0)).is_err());
+    }
+}

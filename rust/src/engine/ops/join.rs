@@ -1,0 +1,186 @@
+//! Hash equi-join (inner): build on the right batch's key, probe the left.
+//!
+//! The LR1 self-join (`SegSpeedStr [range 30 slide 5] as A, SegSpeedStr as
+//! L WHERE A.vehicle == L.vehicle`) probes the current micro-batch against
+//! the window state snapshot.
+
+use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+use crate::error::Result;
+use crate::util::hash::FxHashMap;
+
+fn key_bits(col: &Column, row: usize) -> i64 {
+    match col {
+        Column::I32(v) => v[row] as i64,
+        Column::F32(v) => v[row].to_bits() as i64,
+    }
+}
+
+/// Inner join: every (probe-row, matching build-row) pair, with build
+/// columns appended under a `r_` prefix (self-join disambiguation).
+/// Dead rows on either side never match.
+pub fn hash_join(
+    probe: &ColumnBatch,
+    build: &ColumnBatch,
+    probe_key: &str,
+    build_key: &str,
+) -> Result<ColumnBatch> {
+    hash_join_pruned(probe, build, probe_key, build_key, None, None)
+}
+
+/// Join with projection pushdown: materialize only `keep_probe` probe
+/// columns and `keep_build` build columns (`None` = all). The dominant
+/// join cost is output materialization (|output| x |columns| gathers), so
+/// pruning unreferenced columns is the §Perf L3 optimization for the LR1
+/// self-join, which keeps only the probe side.
+pub fn hash_join_pruned(
+    probe: &ColumnBatch,
+    build: &ColumnBatch,
+    probe_key: &str,
+    build_key: &str,
+    keep_probe: Option<&[String]>,
+    keep_build: Option<&[String]>,
+) -> Result<ColumnBatch> {
+    let pk = probe.column(probe_key)?;
+    let bk = build.column(build_key)?;
+
+    // Build side index: key -> row list.
+    let mut table: FxHashMap<i64, Vec<usize>> = FxHashMap::default();
+    for row in 0..build.rows() {
+        if build.valid[row] == 1 {
+            table.entry(key_bits(bk, row)).or_default().push(row);
+        }
+    }
+
+    // Probe: collect matching index pairs (pre-sized: the windowed
+    // self-join typically amplifies; start at probe cardinality).
+    let mut probe_idx = Vec::with_capacity(probe.rows());
+    let mut build_idx = Vec::with_capacity(probe.rows());
+    for row in 0..probe.rows() {
+        if probe.valid[row] == 0 {
+            continue;
+        }
+        if let Some(matches) = table.get(&key_bits(pk, row)) {
+            for &b in matches {
+                probe_idx.push(row);
+                build_idx.push(b);
+            }
+        }
+    }
+
+    // Output schema: (kept) probe columns + prefixed (kept) build columns.
+    let probe_sel: Vec<usize> = match keep_probe {
+        None => (0..probe.schema.len()).collect(),
+        Some(names) => names
+            .iter()
+            .map(|n| probe.schema.index_of(n))
+            .collect::<Result<_>>()?,
+    };
+    let build_sel: Vec<usize> = match keep_build {
+        None => (0..build.schema.len()).collect(),
+        Some(names) => names
+            .iter()
+            .map(|n| build.schema.index_of(n))
+            .collect::<Result<_>>()?,
+    };
+    let mut fields: Vec<Field> =
+        probe_sel.iter().map(|&i| probe.schema.fields[i].clone()).collect();
+    for &i in &build_sel {
+        let f = &build.schema.fields[i];
+        fields.push(Field { name: format!("r_{}", f.name), dtype: f.dtype });
+    }
+    // Materialization dominates join cost (output rows x columns random
+    // gathers); fan the per-column gathers across cores (§Perf L3 log).
+    let gathers: Vec<(&Column, &Vec<usize>)> = probe_sel
+        .iter()
+        .map(|&i| (&probe.columns[i], &probe_idx))
+        .chain(build_sel.iter().map(|&i| (&build.columns[i], &build_idx)))
+        .collect();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get().min(8))
+        .unwrap_or(1);
+    let columns: Vec<Column> = if probe_idx.len() * gathers.len() > 200_000 {
+        crate::util::exec::par_map(gathers, threads, |_, (c, idx)| c.take(idx))
+    } else {
+        gathers.into_iter().map(|(c, idx)| c.take(idx)).collect()
+    };
+    Ok(ColumnBatch {
+        schema: Schema::new(fields),
+        columns,
+        valid: vec![1; probe_idx.len()],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn side(names: (&str, &str), keys: Vec<i32>, vals: Vec<f32>) -> ColumnBatch {
+        let schema = Schema::new(vec![Field::i32(names.0), Field::f32(names.1)]);
+        ColumnBatch::new(schema, vec![Column::I32(keys), Column::F32(vals)]).unwrap()
+    }
+
+    #[test]
+    fn inner_join_produces_all_pairs() {
+        let probe = side(("k", "pv"), vec![1, 2, 3], vec![10.0, 20.0, 30.0]);
+        let build = side(("k", "bv"), vec![2, 2, 9], vec![0.2, 0.22, 0.9]);
+        let out = hash_join(&probe, &build, "k", "k").unwrap();
+        assert_eq!(out.rows(), 2); // probe row `2` matches two build rows
+        assert_eq!(out.column("pv").unwrap().as_f32().unwrap(), &[20.0, 20.0]);
+        let bv: Vec<f32> = out.column("r_bv").unwrap().as_f32().unwrap().to_vec();
+        assert_eq!(bv, vec![0.2, 0.22]);
+    }
+
+    #[test]
+    fn dead_rows_do_not_match() {
+        let mut probe = side(("k", "pv"), vec![1, 2], vec![1.0, 2.0]);
+        let mut build = side(("k", "bv"), vec![1, 2], vec![0.1, 0.2]);
+        probe.valid[0] = 0;
+        build.valid[1] = 0;
+        let out = hash_join(&probe, &build, "k", "k").unwrap();
+        assert_eq!(out.rows(), 0);
+    }
+
+    #[test]
+    fn no_matches_yields_empty() {
+        let probe = side(("k", "pv"), vec![1], vec![1.0]);
+        let build = side(("k", "bv"), vec![2], vec![0.2]);
+        let out = hash_join(&probe, &build, "k", "k").unwrap();
+        assert_eq!(out.rows(), 0);
+        assert_eq!(out.schema.len(), 4);
+    }
+
+    #[test]
+    fn pruned_join_materializes_subset() {
+        let probe = side(("k", "pv"), vec![1, 2, 2], vec![1.0, 2.0, 3.0]);
+        let build = side(("k", "bv"), vec![2, 2], vec![0.2, 0.25]);
+        let keep_p = vec!["pv".to_string()];
+        let keep_b: Vec<String> = vec![];
+        let out = hash_join_pruned(&probe, &build, "k", "k", Some(&keep_p), Some(&keep_b))
+            .unwrap();
+        assert_eq!(out.rows(), 4); // 2 probe rows x 2 build matches
+        assert_eq!(out.schema.len(), 1);
+        assert_eq!(out.column("pv").unwrap().as_f32().unwrap(), &[2.0, 2.0, 3.0, 3.0]);
+        // Row multiset identical to the unpruned join's pv column.
+        let full = hash_join(&probe, &build, "k", "k").unwrap();
+        assert_eq!(
+            full.column("pv").unwrap().as_f32().unwrap(),
+            out.column("pv").unwrap().as_f32().unwrap()
+        );
+    }
+
+    #[test]
+    fn pruned_join_unknown_column_errors() {
+        let probe = side(("k", "pv"), vec![1], vec![1.0]);
+        let keep = vec!["nope".to_string()];
+        assert!(hash_join_pruned(&probe, &probe, "k", "k", Some(&keep), None).is_err());
+    }
+
+    #[test]
+    fn self_join_column_prefixing() {
+        let b = side(("vehicle", "speed"), vec![7, 7], vec![55.0, 60.0]);
+        let out = hash_join(&b, &b, "vehicle", "vehicle").unwrap();
+        assert_eq!(out.rows(), 4); // 2x2 pairs
+        assert!(out.column("r_vehicle").is_ok());
+        assert!(out.column("r_speed").is_ok());
+    }
+}

@@ -1,0 +1,22 @@
+//! Native CPU operators (the "CPU execution function" of every query
+//! operation, §II-A). The GPU counterparts are the AOT artifacts invoked
+//! through [`crate::devices::gpu`]; both paths implement identical
+//! semantics, which the integration tests assert against each other.
+
+pub mod aggregate;
+pub mod expand;
+pub mod filter;
+pub mod join;
+pub mod project;
+pub mod scan;
+pub mod shuffle;
+pub mod sort;
+
+pub use aggregate::{AggFunc, AggSpec, hash_aggregate};
+pub use expand::expand;
+pub use filter::{Predicate, filter};
+pub use join::hash_join;
+pub use project::{project_affine, project_select};
+pub use scan::scan;
+pub use shuffle::shuffle;
+pub use sort::sort_by;

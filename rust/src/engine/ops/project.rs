@@ -1,0 +1,93 @@
+//! Projection: column selection and arithmetic projection.
+
+use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+use crate::error::Result;
+
+/// SELECT a subset of columns (order follows `keep`).
+pub fn project_select(batch: &ColumnBatch, keep: &[&str]) -> Result<ColumnBatch> {
+    let mut fields = Vec::with_capacity(keep.len());
+    let mut columns = Vec::with_capacity(keep.len());
+    for name in keep {
+        let idx = batch.schema.index_of(name)?;
+        fields.push(batch.schema.fields[idx].clone());
+        columns.push(batch.columns[idx].clone());
+    }
+    Ok(ColumnBatch {
+        schema: Schema::new(fields),
+        columns,
+        valid: batch.valid.clone(),
+    })
+}
+
+/// Append `out = alpha*a + beta*b` as a new f32 column.
+pub fn project_affine(
+    batch: &ColumnBatch,
+    a: &str,
+    b: &str,
+    alpha: f32,
+    beta: f32,
+    out: &str,
+) -> Result<ColumnBatch> {
+    let ca = batch.column(a)?.as_f32()?;
+    let cb = batch.column(b)?.as_f32()?;
+    let values: Vec<f32> = ca
+        .iter()
+        .zip(cb)
+        .map(|(x, y)| alpha * x + beta * y)
+        .collect();
+    let mut fields = batch.schema.fields.clone();
+    fields.push(Field::f32(out));
+    let mut columns = batch.columns.clone();
+    columns.push(Column::F32(values));
+    Ok(ColumnBatch {
+        schema: Schema::new(fields),
+        columns,
+        valid: batch.valid.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch() -> ColumnBatch {
+        let schema = Schema::new(vec![Field::f32("a"), Field::f32("b"), Field::i32("k")]);
+        ColumnBatch::new(
+            schema,
+            vec![
+                Column::F32(vec![1.0, 2.0]),
+                Column::F32(vec![10.0, 20.0]),
+                Column::I32(vec![7, 8]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn select_reorders_columns() {
+        let out = project_select(&batch(), &["k", "a"]).unwrap();
+        assert_eq!(out.schema.fields[0].name, "k");
+        assert_eq!(out.column("a").unwrap().as_f32().unwrap(), &[1.0, 2.0]);
+        assert!(out.column("b").is_err());
+    }
+
+    #[test]
+    fn affine_appends_column() {
+        let out = project_affine(&batch(), "a", "b", 2.0, 0.5, "mix").unwrap();
+        assert_eq!(out.column("mix").unwrap().as_f32().unwrap(), &[7.0, 14.0]);
+        assert_eq!(out.schema.len(), 4);
+    }
+
+    #[test]
+    fn validity_preserved() {
+        let mut b = batch();
+        b.valid[0] = 0;
+        let out = project_select(&b, &["a"]).unwrap();
+        assert_eq!(out.valid, vec![0, 1]);
+    }
+
+    #[test]
+    fn affine_requires_f32_columns() {
+        assert!(project_affine(&batch(), "k", "b", 1.0, 1.0, "x").is_err());
+    }
+}

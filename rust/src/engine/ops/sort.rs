@@ -1,0 +1,79 @@
+//! Sort by one column (stable; dead rows sink to the end).
+
+use crate::engine::column::ColumnBatch;
+use crate::error::Result;
+
+/// Sort rows by `col` (ascending unless `desc`), keeping the validity
+/// mask aligned. Dead rows always order after live rows.
+pub fn sort_by(batch: &ColumnBatch, col: &str, desc: bool) -> Result<ColumnBatch> {
+    let c = batch.column(col)?;
+    let mut idx: Vec<usize> = (0..batch.rows()).collect();
+    idx.sort_by(|&a, &b| {
+        match (batch.valid[a], batch.valid[b]) {
+            (1, 0) => return std::cmp::Ordering::Less,
+            (0, 1) => return std::cmp::Ordering::Greater,
+            (0, 0) => return std::cmp::Ordering::Equal,
+            _ => {}
+        }
+        let (x, y) = (c.get_f64(a), c.get_f64(b));
+        let ord = x.partial_cmp(&y).unwrap_or(std::cmp::Ordering::Equal);
+        if desc { ord.reverse() } else { ord }
+    });
+    Ok(ColumnBatch {
+        schema: batch.schema.clone(),
+        columns: batch.columns.iter().map(|cc| cc.take(&idx)).collect(),
+        valid: idx.iter().map(|&i| batch.valid[i]).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+
+    fn batch() -> ColumnBatch {
+        let schema = Schema::new(vec![Field::f32("v"), Field::i32("tag")]);
+        ColumnBatch::new(
+            schema,
+            vec![
+                Column::F32(vec![3.0, 1.0, 2.0]),
+                Column::I32(vec![30, 10, 20]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn ascending_sort_aligns_columns() {
+        let out = sort_by(&batch(), "v", false).unwrap();
+        assert_eq!(out.column("v").unwrap().as_f32().unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(out.column("tag").unwrap().as_i32().unwrap(), &[10, 20, 30]);
+    }
+
+    #[test]
+    fn descending_sort() {
+        let out = sort_by(&batch(), "v", true).unwrap();
+        assert_eq!(out.column("v").unwrap().as_f32().unwrap(), &[3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn dead_rows_sink() {
+        let mut b = batch();
+        b.valid[1] = 0; // kill the smallest value
+        let out = sort_by(&b, "v", false).unwrap();
+        assert_eq!(out.column("v").unwrap().as_f32().unwrap(), &[2.0, 3.0, 1.0]);
+        assert_eq!(out.valid, vec![1, 1, 0]);
+    }
+
+    #[test]
+    fn stable_for_equal_keys() {
+        let schema = Schema::new(vec![Field::f32("v"), Field::i32("seq")]);
+        let b = ColumnBatch::new(
+            schema,
+            vec![Column::F32(vec![1.0, 1.0, 1.0]), Column::I32(vec![0, 1, 2])],
+        )
+        .unwrap();
+        let out = sort_by(&b, "v", false).unwrap();
+        assert_eq!(out.column("seq").unwrap().as_i32().unwrap(), &[0, 1, 2]);
+    }
+}

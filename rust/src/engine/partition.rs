@@ -1,0 +1,103 @@
+//! Partitioning a micro-batch across `NumCores` data partitions.
+//!
+//! "Generally, the number of data partitions is the same as the number of
+//! CPU cores used per application" (§II-A); MapDevice's cost models run on
+//! the *partition* size, not the micro-batch size (§III-D).
+
+use crate::engine::column::ColumnBatch;
+
+/// One data partition with its wire-size share (`Part_(i,j)` in Table I).
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub index: usize,
+    pub batch: ColumnBatch,
+    pub wire_bytes: usize,
+}
+
+/// Split `batch` into `n` contiguous row chunks, distributing the
+/// remainder one row at a time (sizes differ by at most one row).
+/// `wire_bytes` is apportioned proportionally to rows.
+pub fn split(batch: &ColumnBatch, wire_bytes: usize, n: usize) -> Vec<Partition> {
+    assert!(n > 0, "partition count must be positive");
+    let rows = batch.rows();
+    let base = rows / n;
+    let extra = rows % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0usize;
+    for j in 0..n {
+        let len = base + usize::from(j < extra);
+        let part = batch.slice(start, len);
+        let wb = if rows == 0 { 0 } else { wire_bytes * len / rows };
+        out.push(Partition { index: j, batch: part, wire_bytes: wb });
+        start += len;
+    }
+    debug_assert_eq!(start, rows);
+    out
+}
+
+/// Mean partition wire size in bytes — the `Part_(i,j)` the planner feeds
+/// Eqs. 7–9 (partitions are near-uniform, and Spark plans once per batch).
+pub fn mean_partition_bytes(total_wire_bytes: usize, n: usize) -> f64 {
+    total_wire_bytes as f64 / n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+
+    fn batch(rows: usize) -> ColumnBatch {
+        let schema = Schema::new(vec![Field::f32("x")]);
+        ColumnBatch::new(
+            schema,
+            vec![Column::F32((0..rows).map(|i| i as f32).collect())],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn covers_all_rows_without_overlap() {
+        let b = batch(103);
+        let parts = split(&b, 103 * 65, 12);
+        assert_eq!(parts.len(), 12);
+        let total: usize = parts.iter().map(|p| p.batch.rows()).sum();
+        assert_eq!(total, 103);
+        // Contiguous coverage: first value of each partition continues on.
+        let mut expect = 0f32;
+        for p in &parts {
+            for &v in p.batch.column("x").unwrap().as_f32().unwrap() {
+                assert_eq!(v, expect);
+                expect += 1.0;
+            }
+        }
+    }
+
+    #[test]
+    fn sizes_differ_by_at_most_one_row() {
+        let parts = split(&batch(100), 100, 12);
+        let sizes: Vec<usize> = parts.iter().map(|p| p.batch.rows()).collect();
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        assert!(max - min <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn empty_batch_gives_empty_partitions() {
+        let parts = split(&batch(0), 0, 4);
+        assert_eq!(parts.len(), 4);
+        assert!(parts.iter().all(|p| p.batch.rows() == 0 && p.wire_bytes == 0));
+    }
+
+    #[test]
+    fn fewer_rows_than_partitions() {
+        let parts = split(&batch(3), 3 * 65, 12);
+        let nonempty = parts.iter().filter(|p| p.batch.rows() > 0).count();
+        assert_eq!(nonempty, 3);
+    }
+
+    #[test]
+    fn mean_partition_size() {
+        assert_eq!(mean_partition_bytes(1200, 12), 100.0);
+        assert_eq!(mean_partition_bytes(0, 12), 0.0);
+    }
+}

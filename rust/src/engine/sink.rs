@@ -1,0 +1,107 @@
+//! Output sinks: where micro-batch results leave the system ("goes out
+//! to the output stream", §V-B).
+//!
+//! The [`Sink`] trait receives each batch's result rows with completion
+//! time; implementations collect rows for validation ([`CollectSink`]),
+//! count/summarize ([`CountingSink`]), or drop ([`NullSink`]).
+
+use crate::engine::column::ColumnBatch;
+use crate::error::Result;
+use crate::sim::Time;
+
+/// Receives query results batch by batch.
+pub trait Sink: Send {
+    /// Deliver one micro-batch result. `completed_at` is the processing
+    /// completion time (output-stream timestamp).
+    fn deliver(&mut self, batch_index: usize, result: &ColumnBatch, completed_at: Time)
+        -> Result<()>;
+}
+
+/// Drops results (benchmark default).
+#[derive(Default)]
+pub struct NullSink;
+
+impl Sink for NullSink {
+    fn deliver(&mut self, _i: usize, _r: &ColumnBatch, _t: Time) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Counts delivered rows/batches.
+#[derive(Default, Debug)]
+pub struct CountingSink {
+    pub batches: usize,
+    pub rows: usize,
+    pub live_rows: usize,
+    pub bytes: usize,
+    pub last_completed_at: Time,
+}
+
+impl Sink for CountingSink {
+    fn deliver(&mut self, _i: usize, result: &ColumnBatch, t: Time) -> Result<()> {
+        self.batches += 1;
+        self.rows += result.rows();
+        self.live_rows += result.live_rows();
+        self.bytes += result.bytes();
+        self.last_completed_at = self.last_completed_at.max(t);
+        Ok(())
+    }
+}
+
+/// Retains full results for validation (bounded by `max_batches` to keep
+/// long runs from hoarding memory).
+pub struct CollectSink {
+    pub results: Vec<(usize, Time, ColumnBatch)>,
+    max_batches: usize,
+}
+
+impl CollectSink {
+    pub fn new(max_batches: usize) -> CollectSink {
+        CollectSink { results: Vec::new(), max_batches }
+    }
+}
+
+impl Sink for CollectSink {
+    fn deliver(&mut self, i: usize, result: &ColumnBatch, t: Time) -> Result<()> {
+        if self.results.len() < self.max_batches {
+            self.results.push((i, t, result.clone()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::column::{Column, Field, Schema};
+
+    fn batch(rows: usize) -> ColumnBatch {
+        let schema = Schema::new(vec![Field::f32("x")]);
+        ColumnBatch::new(schema, vec![Column::F32(vec![1.0; rows])]).unwrap()
+    }
+
+    #[test]
+    fn counting_sink_accumulates() {
+        let mut s = CountingSink::default();
+        s.deliver(0, &batch(5), Time::from_secs_f64(1.0)).unwrap();
+        s.deliver(1, &batch(7), Time::from_secs_f64(2.0)).unwrap();
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.rows, 12);
+        assert_eq!(s.last_completed_at, Time::from_secs_f64(2.0));
+    }
+
+    #[test]
+    fn collect_sink_bounded() {
+        let mut s = CollectSink::new(2);
+        for i in 0..5 {
+            s.deliver(i, &batch(1), Time::ZERO).unwrap();
+        }
+        assert_eq!(s.results.len(), 2);
+    }
+
+    #[test]
+    fn null_sink_accepts_everything() {
+        let mut s = NullSink;
+        s.deliver(0, &batch(100), Time::ZERO).unwrap();
+    }
+}

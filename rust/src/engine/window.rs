@@ -1,0 +1,194 @@
+//! Window specifications and state.
+//!
+//! The paper keys its admission bound on the window type: `SlideTime > 0`
+//! means a sliding window (bound = slide time, Eq. 2); `SlideTime == 0`
+//! denotes a tumbling window (bound = running average of past
+//! max-latencies, Eq. 3). Window *state* holds the recent datasets a
+//! windowed operator (self-join / windowed aggregate) computes over.
+
+use crate::engine::column::ColumnBatch;
+use crate::engine::dataset::Dataset;
+use crate::error::Result;
+use crate::sim::Time;
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// Window shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WindowKind {
+    Sliding,
+    Tumbling,
+}
+
+/// `[range R (slide S)]` of Table III.
+#[derive(Clone, Copy, Debug)]
+pub struct WindowSpec {
+    pub range: Duration,
+    /// Paper convention: zero slide ⇒ tumbling window.
+    pub slide: Duration,
+}
+
+impl WindowSpec {
+    pub fn sliding(range: Duration, slide: Duration) -> WindowSpec {
+        assert!(!slide.is_zero(), "sliding window needs slide > 0");
+        WindowSpec { range, slide }
+    }
+
+    pub fn tumbling(range: Duration) -> WindowSpec {
+        WindowSpec { range, slide: Duration::ZERO }
+    }
+
+    pub fn kind(&self) -> WindowKind {
+        if self.slide.is_zero() {
+            WindowKind::Tumbling
+        } else {
+            WindowKind::Sliding
+        }
+    }
+
+    /// `SlideTime` of Table I (0 for tumbling).
+    pub fn slide_time(&self) -> Duration {
+        self.slide
+    }
+
+    /// Work multiplier of the Spark `Expand` rewrite for sliding windows:
+    /// each row belongs to ceil(range/slide) overlapping window instances.
+    pub fn expand_factor(&self) -> f64 {
+        match self.kind() {
+            WindowKind::Tumbling => 1.0,
+            WindowKind::Sliding => {
+                (self.range.as_secs_f64() / self.slide.as_secs_f64()).ceil().max(1.0)
+            }
+        }
+    }
+}
+
+/// Retained stream history for windowed operators (the `SegSpeedStr as A`
+/// side of LR1's self-join; the aggregation scope of LR2S/CM*).
+#[derive(Debug, Default)]
+pub struct WindowState {
+    entries: VecDeque<Dataset>,
+}
+
+impl WindowState {
+    pub fn new() -> WindowState {
+        WindowState::default()
+    }
+
+    /// Datasets currently in state.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total rows in state.
+    pub fn rows(&self) -> usize {
+        self.entries.iter().map(|d| d.rows()).sum()
+    }
+
+    /// Total wire bytes in state (sizing windowed-operator cost).
+    pub fn wire_bytes(&self) -> usize {
+        self.entries.iter().map(|d| d.wire_bytes).sum()
+    }
+
+    /// Insert processed datasets into state.
+    pub fn push(&mut self, datasets: &[Dataset]) {
+        for d in datasets {
+            self.entries.push_back(d.clone());
+        }
+    }
+
+    /// Evict datasets whose event time has fallen out of `[now - range, now]`.
+    pub fn evict(&mut self, now: Time, spec: &WindowSpec) {
+        let horizon = Time(now.0.saturating_sub(spec.range.as_nanos() as u64));
+        while let Some(front) = self.entries.front() {
+            if front.event_time < horizon {
+                self.entries.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Snapshot of all in-window rows as one batch (build side of joins /
+    /// aggregation scope). `None` when state is empty.
+    pub fn snapshot(&self) -> Result<Option<ColumnBatch>> {
+        if self.entries.is_empty() {
+            return Ok(None);
+        }
+        let parts: Vec<&ColumnBatch> = self.entries.iter().map(|d| &d.batch).collect();
+        Ok(Some(ColumnBatch::concat(&parts)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+
+    fn ds(id: u64, t: f64) -> Dataset {
+        let schema = Schema::new(vec![Field::f32("x")]);
+        Dataset {
+            id,
+            created_at: Time::from_secs_f64(t),
+            event_time: Time::from_secs_f64(t),
+            batch: ColumnBatch::new(schema, vec![Column::F32(vec![t as f32; 5])])
+                .unwrap(),
+            wire_bytes: 5 * 65,
+        }
+    }
+
+    #[test]
+    fn window_kind_from_slide() {
+        let s = WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5));
+        assert_eq!(s.kind(), WindowKind::Sliding);
+        let t = WindowSpec::tumbling(Duration::from_secs(30));
+        assert_eq!(t.kind(), WindowKind::Tumbling);
+        assert_eq!(t.slide_time(), Duration::ZERO);
+    }
+
+    #[test]
+    fn expand_factor_matches_range_over_slide() {
+        let s = WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5));
+        assert_eq!(s.expand_factor(), 6.0);
+        let t = WindowSpec::tumbling(Duration::from_secs(60));
+        assert_eq!(t.expand_factor(), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "slide > 0")]
+    fn sliding_rejects_zero_slide() {
+        WindowSpec::sliding(Duration::from_secs(30), Duration::ZERO);
+    }
+
+    #[test]
+    fn eviction_respects_range() {
+        let spec = WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5));
+        let mut w = WindowState::new();
+        w.push(&[ds(0, 0.0), ds(1, 20.0), ds(2, 40.0)]);
+        assert_eq!(w.rows(), 15);
+        w.evict(Time::from_secs_f64(45.0), &spec);
+        // horizon = 15s: dataset at t=0 leaves, t=20 and t=40 stay.
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.rows(), 10);
+    }
+
+    #[test]
+    fn snapshot_concatenates_state() {
+        let mut w = WindowState::new();
+        assert!(w.snapshot().unwrap().is_none());
+        w.push(&[ds(0, 1.0), ds(1, 2.0)]);
+        let snap = w.snapshot().unwrap().unwrap();
+        assert_eq!(snap.rows(), 10);
+    }
+
+    #[test]
+    fn wire_bytes_tracks_state() {
+        let mut w = WindowState::new();
+        w.push(&[ds(0, 1.0)]);
+        assert_eq!(w.wire_bytes(), 5 * 65);
+    }
+}

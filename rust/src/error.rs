@@ -1,0 +1,45 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All the ways LMStream operations can fail.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Underlying XLA / PJRT failure (compile, execute, literal marshal).
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Artifact manifest missing / malformed, or an operator+bucket that
+    /// was never AOT-compiled was requested.
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// Schema violation: unknown column, type mismatch, ragged batch.
+    #[error("schema: {0}")]
+    Schema(String),
+
+    /// Malformed query DAG (cycle, dangling edge, empty plan).
+    #[error("plan: {0}")]
+    Plan(String),
+
+    /// Configuration rejected (zero cores, bad bounds, ...).
+    #[error("config: {0}")]
+    Config(String),
+
+    /// I/O while loading artifacts or writing reports.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// JSON parse failure (manifest).
+    #[error("json: {0}")]
+    Json(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

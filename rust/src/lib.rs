@@ -1,0 +1,47 @@
+//! # LMStream — latency-bounded GPU-enabled micro-batch stream processing
+//!
+//! Reproduction of *"LMStream: When Distributed Micro-Batch Stream
+//! Processing Systems Meet GPU"* (Lee & Park, 2021) as a three-layer
+//! Rust + JAX + Pallas system. This crate is the **L3 coordinator**: the
+//! streaming substrate (a from-scratch Spark-analog columnar micro-batch
+//! engine) plus the paper's three mechanisms:
+//!
+//! * [`coordinator::admission`] — `ConstructMicroBatch` (Alg. 1): dynamic
+//!   batching that bounds per-dataset latency to the window slide time
+//!   (sliding) or the running average (tumbling) instead of a static
+//!   trigger,
+//! * [`coordinator::planner`] — `MapDevice` (Alg. 2): operation-level
+//!   CPU/GPU planning from dynamic, data-size-dependent device preference
+//!   around an *inflection point*,
+//! * [`coordinator::optimizer`] — online regression
+//!   `InfPT = β0 + β1·Throughput + β2·Latency` fitted asynchronously on
+//!   per-batch history.
+//!
+//! The "GPU" compute path executes AOT-compiled XLA artifacts (lowered
+//! once from JAX/Pallas by `python/compile/aot.py`) through the PJRT C
+//! API ([`runtime`]); python is never on the request path. Paper-scale
+//! experiments run on a discrete-event virtual clock with a calibrated
+//! device timing model ([`devices::model`]) — see `DESIGN.md`
+//! §Hardware-Adaptation for the substitution rationale.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod devices;
+pub mod engine;
+pub mod error;
+pub mod query;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod source;
+pub mod util;
+pub mod workloads;
+
+pub use config::Config;
+pub use error::{Error, Result};
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

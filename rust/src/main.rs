@@ -1,0 +1,288 @@
+//! `lmstream` — the leader entrypoint / CLI.
+//!
+//! ```text
+//! lmstream run      --workload lr1s --mode lmstream --minutes 5 [--seed N]
+//!                   [--cores 12] [--gpus 1] [--trigger 10] [--real]
+//!                   [--executors 4] [--checkpoint DIR] [--export DIR]
+//! lmstream plan     --workload lr1s --part-kb 64 [--inf-kb 150]
+//! lmstream figures  --fig 1|2|5|6|7|8|9|10|table4 [--minutes N]
+//! lmstream runtime  [--artifacts DIR]        # PJRT smoke check
+//! lmstream version
+//! ```
+
+use lmstream::config::{Config, ExecBackend, Mode};
+use lmstream::coordinator::driver;
+use lmstream::report::figures;
+use lmstream::runtime::client::{HostTensor, Runtime};
+use lmstream::util::bench::print_table;
+use lmstream::util::cli::Args;
+use lmstream::workloads;
+use std::path::Path;
+use std::time::Duration;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> lmstream::Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("runtime") => cmd_runtime(&args),
+        Some("version") => {
+            println!("lmstream {}", lmstream::version());
+            Ok(())
+        }
+        _ => {
+            println!(
+                "lmstream {} — latency-bounded GPU micro-batch stream processing\n\n\
+                 subcommands:\n  \
+                 run      run a workload (--workload lr1s --mode lmstream --minutes 5)\n  \
+                 plan     show a MapDevice plan (--workload lr1s --part-kb 64)\n  \
+                 figures  regenerate a paper figure (--fig 6)\n  \
+                 runtime  PJRT artifact smoke check\n  \
+                 version  print version",
+                lmstream::version()
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> lmstream::Result<()> {
+    let workload = args.str_or("workload", "lr1s");
+    let mode = Mode::parse(&args.str_or("mode", "lmstream"))?;
+    let minutes = args.f64_or("minutes", 2.0)?;
+    let real = args.flag("real");
+    let executors = args.usize_or("executors", 0)?;
+    let cfg = Config {
+        mode,
+        backend: if real { ExecBackend::Real } else { ExecBackend::Simulated },
+        num_cores: args.usize_or("cores", 12)?,
+        num_gpus: args.usize_or("gpus", 1)?,
+        trigger: args.secs_or("trigger", Duration::from_secs(10))?,
+        seed: args.u64_or("seed", 0x1a2b3c4d)?,
+        artifact_dir: args.str_or("artifacts", "artifacts"),
+        cluster: if executors > 0 {
+            Some(lmstream::cluster::ClusterSpec::of(executors))
+        } else {
+            None
+        },
+        checkpoint_dir: args.str_opt("checkpoint"),
+        ..Config::default()
+    };
+    let export_dir = args.str_opt("export");
+    args.finish()?;
+
+    let rt = if real {
+        Some(Runtime::new(Path::new(&cfg.artifact_dir))?)
+    } else {
+        None
+    };
+    let w = workloads::by_name(&workload)?;
+    let result = driver::run(&w, &cfg, Duration::from_secs_f64(minutes * 60.0), rt.as_ref())?;
+
+    println!(
+        "{} [{}] — {} micro-batches over {:.1} min",
+        result.workload,
+        result.mode.name(),
+        result.batches.len(),
+        minutes
+    );
+    println!("  avg end-to-end latency : {:>10.3} s", result.avg_latency);
+    println!("  avg max latency/batch  : {:>10.3} s", result.avg_max_latency());
+    println!(
+        "  avg throughput (Eq.4)  : {:>10.1} KB/s",
+        result.avg_throughput / 1024.0
+    );
+    println!("  avg proc time/batch    : {:>10.3} s", result.avg_proc());
+    println!(
+        "  final inflection point : {:>10.1} KB",
+        result.final_inf_pt / 1024.0
+    );
+    let rows: Vec<Vec<String>> = result
+        .phases
+        .ratios()
+        .iter()
+        .map(|(name, pct)| vec![name.to_string(), format!("{pct:.3}%")])
+        .collect();
+    print_table("phase time ratios (Table IV form)", &["phase", "share"], &rows);
+    if let Some(dir) = export_dir {
+        lmstream::report::export::write_run(Path::new(&dir), &result)?;
+        println!("exported JSON/CSV series to {dir}/");
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> lmstream::Result<()> {
+    let workload = args.str_or("workload", "lr1s");
+    let part_kb = args.f64_or("part-kb", 64.0)?;
+    let inf_kb = args.f64_or("inf-kb", 150.0)?;
+    args.finish()?;
+    let s = figures::plan_string(&workload, part_kb * 1024.0, inf_kb * 1024.0)?;
+    println!("{workload} @ partition {part_kb} KB, inflection {inf_kb} KB:\n  {s}");
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> lmstream::Result<()> {
+    let fig = args.str_or("fig", "6");
+    let minutes = args.u64_or("minutes", 10)?;
+    let seed = args.u64_or("seed", 7)?;
+    args.finish()?;
+    match fig.as_str() {
+        "1" => {
+            let r = figures::fig1_series(minutes, seed)?;
+            let rows: Vec<Vec<String>> = r
+                .batches
+                .iter()
+                .map(|b| {
+                    vec![
+                        b.index.to_string(),
+                        format!("{:.2}", b.max_latency.as_secs_f64()),
+                        b.num_datasets.to_string(),
+                    ]
+                })
+                .collect();
+            print_table(
+                "Fig.1: static trigger, constant traffic (LR1, CPU)",
+                &["batch", "max latency (s)", "datasets"],
+                &rows,
+            );
+        }
+        "2" | "5" => {
+            let kb = [1, 15, 50, 150, 500, 1500, 5000, 15000, 50000];
+            let q = workloads::by_name("spj")?.query;
+            let scenarios = figures::spj_scenarios(q.len());
+            let mut rows = Vec::new();
+            for &k in &kb {
+                let bytes = k * 1024;
+                let mut row = vec![format!("{k} KB")];
+                let cpu_total = figures::spj_cell(bytes, &scenarios[0].1, seed)?.0;
+                for (_name, plan) in &scenarios {
+                    let (total, transfer) = figures::spj_cell(bytes, plan, seed)?;
+                    if fig == "2" {
+                        row.push(format!("{:.2}%", transfer / total * 100.0));
+                    } else {
+                        row.push(format!("{:.2}", total / cpu_total));
+                    }
+                }
+                rows.push(row);
+            }
+            let header: Vec<&str> = std::iter::once("batch size")
+                .chain(scenarios.iter().map(|(n, _)| *n))
+                .collect();
+            let title = if fig == "2" {
+                "Fig.2: PCIe overhead ratio per mapping scenario"
+            } else {
+                "Fig.5: execution time normalized to all-CPU"
+            };
+            print_table(title, &header, &rows);
+        }
+        "6" | "7" => {
+            let mut rows = Vec::new();
+            for w in workloads::ALL {
+                let lm = figures::overall(w, Mode::LmStream, minutes, seed)?;
+                let bl = figures::overall(w, Mode::Baseline, minutes, seed)?;
+                rows.push(figures::compare_row(&lm, &bl));
+            }
+            print_table(
+                "Figs.6/7: avg latency (s) and throughput (KB/s), constant traffic",
+                &["workload", "BL lat", "LM lat", "impr", "BL thpt", "LM thpt", "ratio"],
+                &rows,
+            );
+        }
+        "8" | "9" => {
+            let w = if fig == "8" { "lr1s" } else { "lr1t" };
+            for mode in [Mode::Baseline, Mode::LmStream] {
+                let r = figures::timeline(w, mode, minutes, seed)?;
+                let rows: Vec<Vec<String>> = r
+                    .batches
+                    .iter()
+                    .map(|b| {
+                        vec![
+                            format!("{:.1}", b.admitted_at.as_secs_f64()),
+                            format!("{:.2}", b.max_latency.as_secs_f64()),
+                            format!("{:.1}", b.bytes as f64 / 1024.0),
+                        ]
+                    })
+                    .collect();
+                print_table(
+                    &format!("Fig.{fig}: {w} timeline [{}]", mode.name()),
+                    &["t (s)", "max latency (s)", "batch KB"],
+                    &rows,
+                );
+            }
+        }
+        "10" => {
+            let mut rows = Vec::new();
+            for w in workloads::ALL {
+                let (dynamic, stat) = figures::dynamic_vs_static(w, minutes, seed)?;
+                let impr = (1.0 - dynamic.avg_proc() / stat.avg_proc().max(1e-12)) * 100.0;
+                rows.push(vec![
+                    w.to_string(),
+                    format!("{:.3}", stat.avg_proc()),
+                    format!("{:.3}", dynamic.avg_proc()),
+                    format!("{impr:.1}%"),
+                ]);
+            }
+            print_table(
+                "Fig.10: avg processing phase time (s), static vs dynamic preference",
+                &["workload", "static", "dynamic", "impr"],
+                &rows,
+            );
+        }
+        "table4" => {
+            let mut rows = Vec::new();
+            for w in workloads::ALL {
+                let r = figures::overhead(w, minutes, seed)?;
+                let ratios = r.phases.ratios();
+                rows.push(
+                    std::iter::once(w.to_string())
+                        .chain(ratios.iter().map(|(_, v)| format!("{v:.3}")))
+                        .collect(),
+                );
+            }
+            print_table(
+                "Table IV: time ratio per step (%)",
+                &["workload", "buffering", "construct", "mapdevice", "processing", "optblock"],
+                &rows,
+            );
+        }
+        other => {
+            return Err(lmstream::Error::Config(format!("unknown figure `{other}`")));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_runtime(args: &Args) -> lmstream::Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    args.finish()?;
+    let rt = Runtime::new(Path::new(&dir))?;
+    println!(
+        "platform={} artifacts={} buckets={:?}",
+        rt.platform(),
+        rt.manifest().artifacts.len(),
+        rt.manifest().row_buckets
+    );
+    // Smoke: run the pallas window_aggregate through PJRT.
+    let out = rt.execute(
+        "window_aggregate",
+        4,
+        &[
+            HostTensor::I32(vec![0, 1, 0, 1]),
+            HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0]),
+            HostTensor::F32(vec![1.0; 4]),
+        ],
+    )?;
+    let sums = out[0].as_f32()?;
+    assert_eq!(sums[0], 4.0);
+    assert_eq!(sums[1], 6.0);
+    println!("window_aggregate smoke OK: sums[0..2] = {:?}", &sums[..2]);
+    Ok(())
+}

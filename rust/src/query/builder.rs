@@ -1,0 +1,174 @@
+//! Fluent query builder — the "Spark SQL" authoring surface of the
+//! substrate. Workloads (Table III) are defined through this API; see
+//! [`crate::workloads`].
+
+use crate::engine::ops::aggregate::AggSpec;
+use crate::engine::ops::filter::Predicate;
+use crate::engine::window::WindowSpec;
+use crate::error::Result;
+use crate::query::dag::{OpNode, OpSpec, Query};
+use std::time::Duration;
+
+/// Builder accumulating an operator chain.
+pub struct QueryBuilder {
+    name: String,
+    ops: Vec<OpSpec>,
+    window: WindowSpec,
+    uses_window_state: bool,
+}
+
+impl QueryBuilder {
+    /// Start a query; every query begins with a source scan.
+    pub fn scan(name: &str) -> QueryBuilder {
+        QueryBuilder {
+            name: name.to_string(),
+            ops: vec![OpSpec::Scan],
+            window: WindowSpec::tumbling(Duration::from_secs(60)),
+            uses_window_state: false,
+        }
+    }
+
+    /// Set the window (`[range R slide S]` of Table III).
+    pub fn window(mut self, spec: WindowSpec) -> Self {
+        self.window = spec;
+        self
+    }
+
+    /// WHERE `col` satisfies `pred`.
+    pub fn filter(mut self, col: &str, pred: Predicate) -> Self {
+        self.ops.push(OpSpec::Filter { col: col.to_string(), pred });
+        self
+    }
+
+    /// SELECT a column subset.
+    pub fn select(mut self, keep: &[&str]) -> Self {
+        self.ops.push(OpSpec::ProjectSelect {
+            keep: keep.iter().map(|s| s.to_string()).collect(),
+        });
+        self
+    }
+
+    /// Computed column `out = alpha*a + beta*b`.
+    pub fn project_affine(mut self, a: &str, b: &str, alpha: f32, beta: f32, out: &str) -> Self {
+        self.ops.push(OpSpec::ProjectAffine {
+            a: a.to_string(),
+            b: b.to_string(),
+            alpha,
+            beta,
+            out: out.to_string(),
+        });
+        self
+    }
+
+    /// Sliding-window instance replication (Spark's Expand rewrite).
+    pub fn expand(mut self) -> Self {
+        self.ops.push(OpSpec::Expand);
+        self
+    }
+
+    /// Exchange by key before a partition-crossing operator.
+    pub fn shuffle(mut self, key: &str) -> Self {
+        self.ops.push(OpSpec::Shuffle { key: key.to_string() });
+        self
+    }
+
+    /// GROUP BY + aggregates (+ optional HAVING).
+    pub fn aggregate(
+        mut self,
+        group: &[&str],
+        aggs: Vec<AggSpec>,
+        having: Option<(&str, Predicate)>,
+    ) -> Self {
+        self.ops.push(OpSpec::Aggregate {
+            group: group.iter().map(|s| s.to_string()).collect(),
+            aggs,
+            having: having.map(|(c, p)| (c.to_string(), p)),
+        });
+        self
+    }
+
+    /// Join the stream against its own window state (LR1's self-join).
+    pub fn join_window(mut self, probe_key: &str, build_key: &str) -> Self {
+        self.ops.push(OpSpec::JoinWithWindow {
+            probe_key: probe_key.to_string(),
+            build_key: build_key.to_string(),
+        });
+        self.uses_window_state = true;
+        self
+    }
+
+    /// Windowed aggregation scope: aggregate over window state, not just
+    /// the current micro-batch (marks the query as window-reading).
+    pub fn over_window_state(mut self) -> Self {
+        self.uses_window_state = true;
+        self
+    }
+
+    /// ORDER BY.
+    pub fn sort(mut self, col: &str, desc: bool) -> Self {
+        self.ops.push(OpSpec::Sort { col: col.to_string(), desc });
+        self
+    }
+
+    /// Finalize and validate.
+    pub fn build(self) -> Result<Query> {
+        let q = Query {
+            name: self.name,
+            ops: self
+                .ops
+                .into_iter()
+                .enumerate()
+                .map(|(id, spec)| OpNode { id, spec })
+                .collect(),
+            window: self.window,
+            uses_window_state: self.uses_window_state,
+        };
+        q.validate()?;
+        Ok(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::dag::OpKind;
+
+    #[test]
+    fn builds_lr2s_like_chain() {
+        let q = QueryBuilder::scan("lr2s")
+            .window(WindowSpec::sliding(
+                Duration::from_secs(30),
+                Duration::from_secs(10),
+            ))
+            .expand()
+            .shuffle("segment")
+            .aggregate(
+                &["highway", "direction", "segment"],
+                vec![AggSpec::avg("speed", "avgSpeed")],
+                Some(("avgSpeed", Predicate::Lt(40.0))),
+            )
+            .build()
+            .unwrap();
+        let kinds: Vec<OpKind> = q.traverse().map(|o| o.spec.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec![OpKind::Scan, OpKind::Expand, OpKind::Shuffle, OpKind::Aggregate]
+        );
+        assert!(!q.uses_window_state);
+    }
+
+    #[test]
+    fn join_window_marks_state_usage() {
+        let q = QueryBuilder::scan("lr1")
+            .join_window("vehicle", "vehicle")
+            .build()
+            .unwrap();
+        assert!(q.uses_window_state);
+    }
+
+    #[test]
+    fn window_defaults_to_tumbling() {
+        let q = QueryBuilder::scan("t").build().unwrap();
+        assert_eq!(q.window.slide_time(), Duration::ZERO);
+    }
+}

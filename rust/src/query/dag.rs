@@ -1,0 +1,217 @@
+//! Operation DAG: the logical plan MapDevice traverses (Alg. 2).
+//!
+//! The Table III workloads compile to operator chains with a window
+//! side-input (the self-join's build side / the aggregation scope), so
+//! the DAG is stored in topological order; `traverse(queryPlan)` of
+//! Alg. 2 is iteration over that order.
+
+use crate::engine::ops::aggregate::AggSpec;
+use crate::engine::ops::filter::Predicate;
+use crate::engine::window::WindowSpec;
+use crate::error::{Error, Result};
+
+/// Operation categories of Table II (base costs / initial preferences).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Scan,
+    Filter,
+    Project,
+    Expand,
+    Shuffle,
+    Aggregate,
+    Join,
+    Sort,
+}
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Scan => "Scan",
+            OpKind::Filter => "Filter",
+            OpKind::Project => "Project",
+            OpKind::Expand => "Expand",
+            OpKind::Shuffle => "Shuffle",
+            OpKind::Aggregate => "Aggregate",
+            OpKind::Join => "Join",
+            OpKind::Sort => "Sort",
+        }
+    }
+}
+
+/// Concrete operation configuration (what the executor needs).
+#[derive(Clone, Debug)]
+pub enum OpSpec {
+    /// Source scan (CSV parse in the paper; schema check here).
+    Scan,
+    /// Predicate filter on a column.
+    Filter { col: String, pred: Predicate },
+    /// Column selection.
+    ProjectSelect { keep: Vec<String> },
+    /// Arithmetic projection `out = alpha*a + beta*b`.
+    ProjectAffine { a: String, b: String, alpha: f32, beta: f32, out: String },
+    /// Sliding-window instance replication (factor = range/slide).
+    Expand,
+    /// Hash repartition by key.
+    Shuffle { key: String },
+    /// GROUP BY + aggregates + optional HAVING.
+    Aggregate {
+        group: Vec<String>,
+        aggs: Vec<AggSpec>,
+        having: Option<(String, Predicate)>,
+    },
+    /// Equi-join of the micro-batch against the window state snapshot.
+    JoinWithWindow { probe_key: String, build_key: String },
+    /// Join with projection pushed down (optimizer-generated, see
+    /// [`crate::query::optimize`]): only the listed probe/build columns
+    /// are materialized.
+    JoinWithWindowPruned {
+        probe_key: String,
+        build_key: String,
+        probe_cols: Vec<String>,
+        build_cols: Vec<String>,
+    },
+    /// Order by column.
+    Sort { col: String, desc: bool },
+}
+
+impl OpSpec {
+    pub fn kind(&self) -> OpKind {
+        match self {
+            OpSpec::Scan => OpKind::Scan,
+            OpSpec::Filter { .. } => OpKind::Filter,
+            OpSpec::ProjectSelect { .. } | OpSpec::ProjectAffine { .. } => OpKind::Project,
+            OpSpec::Expand => OpKind::Expand,
+            OpSpec::Shuffle { .. } => OpKind::Shuffle,
+            OpSpec::Aggregate { .. } => OpKind::Aggregate,
+            OpSpec::JoinWithWindow { .. } | OpSpec::JoinWithWindowPruned { .. } => {
+                OpKind::Join
+            }
+            OpSpec::Sort { .. } => OpKind::Sort,
+        }
+    }
+}
+
+/// One node of the operation DAG.
+#[derive(Clone, Debug)]
+pub struct OpNode {
+    pub id: usize,
+    pub spec: OpSpec,
+}
+
+/// A compiled streaming query: operator chain + window semantics.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub name: String,
+    pub ops: Vec<OpNode>,
+    pub window: WindowSpec,
+    /// Whether an operator reads the window state (join build side /
+    /// windowed aggregation scope) — sizes windowed-op cost.
+    pub uses_window_state: bool,
+}
+
+impl Query {
+    /// Validate structural invariants (non-empty, scan-first, ids
+    /// contiguous, at most one windowed join).
+    pub fn validate(&self) -> Result<()> {
+        if self.ops.is_empty() {
+            return Err(Error::Plan("empty query".into()));
+        }
+        if !matches!(self.ops[0].spec, OpSpec::Scan) {
+            return Err(Error::Plan("first operation must be Scan".into()));
+        }
+        for (i, op) in self.ops.iter().enumerate() {
+            if op.id != i {
+                return Err(Error::Plan(format!("non-contiguous op id {}", op.id)));
+            }
+            if i > 0 && matches!(op.spec, OpSpec::Scan) {
+                return Err(Error::Plan("Scan only allowed at position 0".into()));
+            }
+        }
+        let joins = self
+            .ops
+            .iter()
+            .filter(|o| o.spec.kind() == OpKind::Join)
+            .count();
+        if joins > 1 {
+            return Err(Error::Plan("at most one windowed join supported".into()));
+        }
+        Ok(())
+    }
+
+    /// Topological traversal order (Alg. 2's `traverse`).
+    pub fn traverse(&self) -> impl Iterator<Item = &OpNode> {
+        self.ops.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn q(ops: Vec<OpSpec>) -> Query {
+        Query {
+            name: "t".into(),
+            ops: ops
+                .into_iter()
+                .enumerate()
+                .map(|(id, spec)| OpNode { id, spec })
+                .collect(),
+            window: WindowSpec::tumbling(Duration::from_secs(30)),
+            uses_window_state: false,
+        }
+    }
+
+    #[test]
+    fn valid_chain_passes() {
+        let query = q(vec![
+            OpSpec::Scan,
+            OpSpec::Filter { col: "v".into(), pred: Predicate::Ge(1.0) },
+        ]);
+        query.validate().unwrap();
+        assert_eq!(query.len(), 2);
+    }
+
+    #[test]
+    fn empty_query_rejected() {
+        assert!(q(vec![]).validate().is_err());
+    }
+
+    #[test]
+    fn scan_must_lead() {
+        let query = q(vec![OpSpec::Expand, OpSpec::Scan]);
+        assert!(query.validate().is_err());
+    }
+
+    #[test]
+    fn double_join_rejected() {
+        let join = OpSpec::JoinWithWindow { probe_key: "k".into(), build_key: "k".into() };
+        let query = q(vec![OpSpec::Scan, join.clone(), join]);
+        assert!(query.validate().is_err());
+    }
+
+    #[test]
+    fn op_kinds_classified() {
+        assert_eq!(OpSpec::Scan.kind(), OpKind::Scan);
+        assert_eq!(
+            OpSpec::ProjectAffine {
+                a: "a".into(),
+                b: "b".into(),
+                alpha: 1.0,
+                beta: 1.0,
+                out: "o".into()
+            }
+            .kind(),
+            OpKind::Project
+        );
+        assert_eq!(OpSpec::Expand.kind(), OpKind::Expand);
+    }
+}

@@ -1,0 +1,11 @@
+//! Query representation: logical operation DAGs ([`dag`]), the fluent
+//! builder ([`builder`]) and physical execution over partitions with a
+//! per-operation device plan ([`exec`]).
+
+pub mod builder;
+pub mod dag;
+pub mod exec;
+pub mod optimize;
+
+pub use builder::QueryBuilder;
+pub use dag::{OpKind, OpNode, OpSpec, Query};

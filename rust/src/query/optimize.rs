@@ -1,0 +1,113 @@
+//! Logical plan rewrites (the Catalyst-analog optimizer pass).
+//!
+//! Currently one rule, found during the §Perf pass to dominate join cost:
+//! **projection pushdown into windowed joins**. A join materializes
+//! |output rows| x |probe cols + build cols| gathers; when the next
+//! operation is a column selection, only the surviving columns need to be
+//! materialized (LR1 keeps just the probe side — half the gather work).
+
+use crate::query::dag::{OpSpec, Query};
+
+/// Apply all rewrite rules, returning the optimized query.
+pub fn optimize(query: &Query) -> Query {
+    pushdown_projection(query)
+}
+
+/// Rewrite `JoinWithWindow -> ProjectSelect(keep)` so the join only
+/// materializes the kept columns (plus nothing else); the subsequent
+/// selection becomes a metadata-only reorder.
+pub fn pushdown_projection(query: &Query) -> Query {
+    let mut out = query.clone();
+    for i in 0..out.ops.len().saturating_sub(1) {
+        let keep = match &out.ops[i + 1].spec {
+            OpSpec::ProjectSelect { keep } => keep.clone(),
+            _ => continue,
+        };
+        if let OpSpec::JoinWithWindow { probe_key, build_key } = &out.ops[i].spec {
+            // Split kept names into probe-side and build-side ("r_"-
+            // prefixed) column lists, order-preserving.
+            let mut probe_cols = Vec::new();
+            let mut build_cols = Vec::new();
+            for name in &keep {
+                match name.strip_prefix("r_") {
+                    Some(b) => build_cols.push(b.to_string()),
+                    None => probe_cols.push(name.clone()),
+                }
+            }
+            out.ops[i].spec = OpSpec::JoinWithWindowPruned {
+                probe_key: probe_key.clone(),
+                build_key: build_key.clone(),
+                probe_cols,
+                build_cols,
+            };
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::window::WindowSpec;
+    use crate::query::builder::QueryBuilder;
+    use std::time::Duration;
+
+    fn join_select_query(keep: &[&str]) -> Query {
+        QueryBuilder::scan("t")
+            .window(WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5)))
+            .join_window("k", "k")
+            .select(keep)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn join_followed_by_select_is_pruned() {
+        let q = join_select_query(&["a", "b", "r_c"]);
+        let o = optimize(&q);
+        match &o.ops[1].spec {
+            OpSpec::JoinWithWindowPruned { probe_cols, build_cols, .. } => {
+                assert_eq!(probe_cols, &["a", "b"]);
+                assert_eq!(build_cols, &["c"]);
+            }
+            other => panic!("not pruned: {other:?}"),
+        }
+        // The select stays (cheap reorder) and the plan length is stable.
+        assert_eq!(o.ops.len(), q.ops.len());
+    }
+
+    #[test]
+    fn probe_only_selection_drops_all_build_columns() {
+        let q = join_select_query(&["a"]);
+        let o = optimize(&q);
+        match &o.ops[1].spec {
+            OpSpec::JoinWithWindowPruned { build_cols, .. } => {
+                assert!(build_cols.is_empty());
+            }
+            other => panic!("not pruned: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn join_without_following_select_untouched() {
+        let q = QueryBuilder::scan("t")
+            .window(WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5)))
+            .join_window("k", "k")
+            .build()
+            .unwrap();
+        let o = optimize(&q);
+        assert!(matches!(o.ops[1].spec, OpSpec::JoinWithWindow { .. }));
+    }
+
+    #[test]
+    fn non_join_plans_pass_through() {
+        use crate::engine::ops::filter::Predicate;
+        let q = QueryBuilder::scan("t")
+            .filter("x", Predicate::Ge(0.0))
+            .select(&["x"])
+            .build()
+            .unwrap();
+        let o = optimize(&q);
+        assert!(matches!(o.ops[1].spec, OpSpec::Filter { .. }));
+    }
+}

@@ -1,0 +1,123 @@
+//! Machine-readable experiment export: JSON documents and CSV series for
+//! run results, consumed by EXPERIMENTS.md tooling and external plotting.
+
+use crate::coordinator::driver::RunResult;
+use crate::error::Result;
+use crate::util::json::{arr, num, obj, s, Json};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Full-run JSON document (config echo + aggregates + per-batch series).
+pub fn run_to_json(r: &RunResult) -> Json {
+    obj(vec![
+        ("workload", s(r.workload)),
+        ("mode", s(r.mode.name())),
+        ("batches", num(r.batches.len() as f64)),
+        ("avg_latency_s", num(r.avg_latency)),
+        ("avg_throughput_bps", num(r.avg_throughput)),
+        ("avg_proc_s", num(r.avg_proc())),
+        ("avg_max_latency_s", num(r.avg_max_latency())),
+        ("final_inf_pt_bytes", num(r.final_inf_pt)),
+        (
+            "phases_pct",
+            obj(r.phases
+                .ratios()
+                .iter()
+                .map(|(k, v)| (*k, num(*v)))
+                .collect()),
+        ),
+        (
+            "series",
+            arr(r.batches
+                .iter()
+                .map(|b| {
+                    obj(vec![
+                        ("i", num(b.index as f64)),
+                        ("t_s", num(b.admitted_at.as_secs_f64())),
+                        ("datasets", num(b.num_datasets as f64)),
+                        ("bytes", num(b.bytes as f64)),
+                        ("proc_s", num(b.proc.as_secs_f64())),
+                        ("max_lat_s", num(b.max_latency.as_secs_f64())),
+                        ("inf_pt", num(b.inf_pt)),
+                        ("gpu_ops", num(b.gpu_ops as f64)),
+                    ])
+                })
+                .collect()),
+        ),
+    ])
+}
+
+/// Per-batch CSV (one row per micro-batch) for plotting Figs. 1/8/9.
+pub fn run_to_csv(r: &RunResult) -> String {
+    let mut out = String::from(
+        "batch,admitted_s,datasets,bytes,proc_s,max_latency_s,inf_pt_bytes,gpu_ops\n",
+    );
+    for b in &r.batches {
+        let _ = writeln!(
+            out,
+            "{},{:.3},{},{},{:.6},{:.6},{:.0},{}",
+            b.index,
+            b.admitted_at.as_secs_f64(),
+            b.num_datasets,
+            b.bytes,
+            b.proc.as_secs_f64(),
+            b.max_latency.as_secs_f64(),
+            b.inf_pt,
+            b.gpu_ops
+        );
+    }
+    out
+}
+
+/// Write both forms under `dir` as `<workload>_<mode>.{json,csv}`.
+pub fn write_run(dir: &Path, r: &RunResult) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let stem = format!("{}_{}", r.workload.to_lowercase(), r.mode.name().to_lowercase());
+    std::fs::write(dir.join(format!("{stem}.json")), run_to_json(r).render())?;
+    std::fs::write(dir.join(format!("{stem}.csv")), run_to_csv(r))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, Mode};
+    use crate::coordinator::driver;
+    use crate::workloads;
+    use std::time::Duration;
+
+    fn result() -> RunResult {
+        let w = workloads::by_name("cm1t").unwrap();
+        let cfg = Config { mode: Mode::LmStream, ..Config::default() };
+        driver::run(&w, &cfg, Duration::from_secs(40), None).unwrap()
+    }
+
+    #[test]
+    fn json_round_trips_and_has_series() {
+        let r = result();
+        let j = run_to_json(&r);
+        let parsed = Json::parse(&j.render()).unwrap();
+        assert_eq!(parsed.req("workload").unwrap().as_str(), Some("CM1T"));
+        let series = parsed.req("series").unwrap().as_arr().unwrap();
+        assert_eq!(series.len(), r.batches.len());
+    }
+
+    #[test]
+    fn csv_has_header_plus_rows() {
+        let r = result();
+        let csv = run_to_csv(&r);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[0].starts_with("batch,"));
+        assert_eq!(lines.len(), r.batches.len() + 1);
+    }
+
+    #[test]
+    fn write_run_creates_both_files() {
+        let dir = std::env::temp_dir().join(format!("lmstream-export-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = result();
+        write_run(&dir, &r).unwrap();
+        assert!(dir.join("cm1t_lmstream.json").exists());
+        assert!(dir.join("cm1t_lmstream.csv").exists());
+    }
+}

@@ -1,0 +1,5 @@
+//! Experiment regeneration: one entry point per paper figure/table
+//! ([`figures`]) plus machine-readable run export ([`export`]).
+
+pub mod export;
+pub mod figures;

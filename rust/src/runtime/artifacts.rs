@@ -1,0 +1,184 @@
+//! Artifact manifest: the machine-readable index `python/compile/aot.py`
+//! writes next to the HLO files.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    fn from_json(j: &Json) -> Result<TensorMeta> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("shape not array".into()))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| Error::Json("bad dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .req("dtype")?
+            .as_str()
+            .ok_or_else(|| Error::Json("dtype not string".into()))?
+            .to_string();
+        Ok(TensorMeta { shape, dtype })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT-compiled operator at one row bucket.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub op: String,
+    pub rows: usize,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub num_groups: usize,
+    pub row_buckets: Vec<usize>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let format = j.req("format")?.as_usize().unwrap_or(0);
+        if format != 1 {
+            return Err(Error::Artifact(format!("unsupported manifest format {format}")));
+        }
+        let num_groups = j.req("num_groups")?.as_usize().unwrap_or(0);
+        let row_buckets: Vec<usize> = j
+            .req("row_buckets")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("row_buckets not array".into()))?
+            .iter()
+            .filter_map(|b| b.as_usize())
+            .collect();
+        let mut artifacts = Vec::new();
+        for a in j
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("artifacts not array".into()))?
+        {
+            let op = a.req("op")?.as_str().unwrap_or("").to_string();
+            let rows = a.req("rows")?.as_usize().unwrap_or(0);
+            let file = dir.join(a.req("file")?.as_str().unwrap_or(""));
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| Error::Json("inputs not array".into()))?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| Error::Json("outputs not array".into()))?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactMeta { op, rows, file, inputs, outputs });
+        }
+        if artifacts.is_empty() {
+            return Err(Error::Artifact("manifest lists no artifacts".into()));
+        }
+        let mut m = Manifest { dir: dir.to_path_buf(), num_groups, row_buckets, artifacts };
+        m.row_buckets.sort_unstable();
+        Ok(m)
+    }
+
+    /// Smallest row bucket that fits `rows` (mirrors python `bucket_for`);
+    /// errors if nothing fits (callers chunk above the top bucket).
+    pub fn bucket_for(&self, rows: usize) -> Result<usize> {
+        self.row_buckets
+            .iter()
+            .copied()
+            .find(|&b| rows <= b)
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "{rows} rows exceeds largest bucket {:?}",
+                    self.row_buckets.last()
+                ))
+            })
+    }
+
+    /// Look up the artifact for (op, bucket). Group-space ops are emitted
+    /// at the smallest bucket only; fall back to any single emission.
+    pub fn find(&self, op: &str, bucket: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.op == op && a.rows == bucket)
+            .or_else(|| {
+                let hits: Vec<&ArtifactMeta> =
+                    self.artifacts.iter().filter(|a| a.op == op).collect();
+                if hits.len() == 1 { Some(hits[0]) } else { None }
+            })
+            .ok_or_else(|| Error::Artifact(format!("no artifact for {op}@{bucket}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        // Tests run from the crate root; `make artifacts` must have run.
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        assert_eq!(m.num_groups, 256);
+        assert!(m.row_buckets.contains(&1024));
+        assert!(m.artifacts.len() >= 18);
+    }
+
+    #[test]
+    fn bucket_for_picks_smallest_fit() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        assert_eq!(m.bucket_for(1).unwrap(), 1024);
+        assert_eq!(m.bucket_for(1024).unwrap(), 1024);
+        assert_eq!(m.bucket_for(1025).unwrap(), 4096);
+        assert!(m.bucket_for(10_000_000).is_err());
+    }
+
+    #[test]
+    fn find_resolves_ops_and_group_space_fallback() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        let a = m.find("filter_ge", 4096).unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].shape, vec![4096]);
+        // avg_having_lt is group-space: emitted once, found at any bucket.
+        let g = m.find("avg_having_lt", 65536).unwrap();
+        assert_eq!(g.inputs[0].shape, vec![256]);
+        assert!(m.find("nonexistent_op", 1024).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

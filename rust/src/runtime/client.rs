@@ -1,0 +1,328 @@
+//! PJRT client wrapper: compile-on-first-use executable cache over the
+//! AOT artifacts, plus typed literal marshaling helpers.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Outputs were lowered with
+//! `return_tuple=True`, so every execution returns a tuple literal that
+//! we decompose.
+
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::{ArtifactMeta, Manifest};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// A typed host-side tensor crossing the runtime boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => Err(Error::Schema("expected f32 tensor".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => Err(Error::Schema("expected i32 tensor".into())),
+        }
+    }
+
+    fn to_literal(&self) -> xla::Literal {
+        match self {
+            HostTensor::F32(v) => xla::Literal::vec1(v),
+            HostTensor::I32(v) => xla::Literal::vec1(v),
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let ty = lit.ty()?;
+        match ty {
+            xla::ElementType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?)),
+            other => Err(Error::Xla(format!("unsupported output element type {other:?}"))),
+        }
+    }
+
+    /// Pad (with `pad_f`/`pad_i`) or reject to exactly `n` elements.
+    pub fn padded_to(&self, n: usize, pad_f: f32, pad_i: i32) -> Result<HostTensor> {
+        if self.len() > n {
+            return Err(Error::Artifact(format!(
+                "tensor of {} elements exceeds bucket {n}",
+                self.len()
+            )));
+        }
+        Ok(match self {
+            HostTensor::F32(v) => {
+                let mut out = v.clone();
+                out.resize(n, pad_f);
+                HostTensor::F32(out)
+            }
+            HostTensor::I32(v) => {
+                let mut out = v.clone();
+                out.resize(n, pad_i);
+                HostTensor::I32(out)
+            }
+        })
+    }
+}
+
+/// The process-wide PJRT runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<(String, usize), Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    fn executable(&self, meta: &ArtifactMeta) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let key = (meta.op.clone(), meta.rows);
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(exe));
+        }
+        // Compile outside the lock (slow); racing compiles are idempotent.
+        let path = meta.file.to_str().ok_or_else(|| {
+            Error::Artifact(format!("non-utf8 artifact path {:?}", meta.file))
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        self.cache.lock().unwrap().insert(key, Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Pre-compile an operator at every bucket (warm-up; keeps compile
+    /// jitter off the request path).
+    pub fn warm(&self, op: &str) -> Result<usize> {
+        let metas: Vec<ArtifactMeta> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.op == op)
+            .cloned()
+            .collect();
+        if metas.is_empty() {
+            return Err(Error::Artifact(format!("no artifacts for op `{op}`")));
+        }
+        for m in &metas {
+            self.executable(m)?;
+        }
+        Ok(metas.len())
+    }
+
+    /// Execute `op` at the smallest bucket fitting `rows`, padding every
+    /// row-dimension input. Inputs must match the artifact's arity and
+    /// dtypes; outputs are truncated back to `rows` where row-shaped.
+    pub fn execute(
+        &self,
+        op: &str,
+        rows: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let bucket = self.manifest.bucket_for(rows)?;
+        let meta = self.manifest.find(op, bucket)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{op}: {} inputs given, artifact takes {}",
+                inputs.len(),
+                meta.inputs.len()
+            )));
+        }
+        // Marshal with padding to the declared shapes.
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&meta.inputs) {
+            let want = spec.elements();
+            let padded = if t.len() == want {
+                t.clone()
+            } else {
+                t.padded_to(want, 0.0, 0)?
+            };
+            let dtype_ok = matches!(
+                (&padded, spec.dtype.as_str()),
+                (HostTensor::F32(_), "float32") | (HostTensor::I32(_), "int32")
+            );
+            if !dtype_ok {
+                return Err(Error::Artifact(format!(
+                    "{op}: dtype mismatch (artifact wants {})",
+                    spec.dtype
+                )));
+            }
+            literals.push(padded.to_literal());
+        }
+        let exe = self.executable(&meta)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.iter().zip(&meta.outputs) {
+            let mut t = HostTensor::from_literal(lit)?;
+            // Row-shaped outputs get truncated back to the live row count.
+            if spec.shape == vec![bucket] && rows < bucket {
+                t = match t {
+                    HostTensor::F32(mut v) => {
+                        v.truncate(rows);
+                        HostTensor::F32(v)
+                    }
+                    HostTensor::I32(mut v) => {
+                        v.truncate(rows);
+                        HostTensor::I32(v)
+                    }
+                };
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The xla crate's handles are Rc-based (not Send/Sync), so each test
+    // constructs its own Runtime; executables compile on first use only.
+    thread_local! {
+        static RT: Runtime = {
+            let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            Runtime::new(&dir).expect("runtime (run `make artifacts` first)")
+        };
+    }
+
+    fn with_rt<T>(f: impl FnOnce(&Runtime) -> T) -> T {
+        RT.with(|rt| f(rt))
+    }
+
+    #[test]
+    fn filter_ge_round_trip() {
+        with_rt(|rt| {
+            let keys = HostTensor::F32(vec![1.0, 5.0, 3.0]);
+            let valid = HostTensor::F32(vec![1.0, 1.0, 1.0]);
+            let thr = HostTensor::F32(vec![3.0]);
+            let out = rt.execute("filter_ge", 3, &[keys, valid, thr]).unwrap();
+            assert_eq!(out.len(), 1);
+            assert_eq!(out[0].as_f32().unwrap(), &[0.0, 1.0, 1.0]);
+        });
+    }
+
+    #[test]
+    fn window_aggregate_pallas_kernel_runs() {
+        // 5 rows, groups 0/1; the pallas one-hot matmul kernel end-to-end
+        // through PJRT.
+        with_rt(|rt| {
+            let gid = HostTensor::I32(vec![0, 1, 0, 1, 0]);
+            let vals = HostTensor::F32(vec![1.0, 10.0, 2.0, 20.0, 3.0]);
+            let valid = HostTensor::F32(vec![1.0; 5]);
+            let out = rt.execute("window_aggregate", 5, &[gid, vals, valid]).unwrap();
+            let sums = out[0].as_f32().unwrap();
+            let counts = out[1].as_f32().unwrap();
+            assert_eq!(sums[0], 6.0);
+            assert_eq!(sums[1], 30.0);
+            assert_eq!(counts[0], 3.0);
+            assert_eq!(counts[1], 2.0);
+            assert!(sums[2..].iter().all(|&s| s == 0.0));
+        });
+    }
+
+    #[test]
+    fn padding_rows_are_inert() {
+        // 3 live rows in a 1024 bucket: padded rows must not contribute
+        // (their valid mask is 0).
+        with_rt(|rt| {
+            let gid = HostTensor::I32(vec![7, 7, 7]);
+            let vals = HostTensor::F32(vec![1.0, 1.0, 1.0]);
+            let valid = HostTensor::F32(vec![1.0, 1.0, 1.0]);
+            let out = rt.execute("window_aggregate", 3, &[gid, vals, valid]).unwrap();
+            assert_eq!(out[0].as_f32().unwrap()[7], 3.0);
+            assert_eq!(out[1].as_f32().unwrap()[7], 3.0);
+            assert_eq!(out[1].as_f32().unwrap()[0], 0.0);
+        });
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        with_rt(|rt| {
+            let thr = HostTensor::F32(vec![0.0]);
+            let k = HostTensor::F32(vec![1.0]);
+            let v = HostTensor::F32(vec![1.0]);
+            rt.execute("filter_lt", 1, &[k.clone(), v.clone(), thr.clone()]).unwrap();
+            let after_first = rt.cached_executables();
+            rt.execute("filter_lt", 1, &[k, v, thr]).unwrap();
+            assert_eq!(rt.cached_executables(), after_first);
+            assert!(after_first >= 1);
+        });
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        with_rt(|rt| {
+            let r = rt.execute("filter_ge", 1, &[HostTensor::F32(vec![1.0])]);
+            assert!(r.is_err());
+        });
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        with_rt(|rt| {
+            let r = rt.execute(
+                "filter_ge",
+                1,
+                &[
+                    HostTensor::I32(vec![1]),
+                    HostTensor::F32(vec![1.0]),
+                    HostTensor::F32(vec![0.0]),
+                ],
+            );
+            assert!(r.is_err());
+        });
+    }
+
+    #[test]
+    fn join_probe_semantics_via_pjrt() {
+        with_rt(|rt| {
+            let pk = HostTensor::F32(vec![5.0, 7.0, 9.0]);
+            let pv = HostTensor::F32(vec![1.0, 1.0, 1.0]);
+            let bk = HostTensor::F32(vec![7.0, 5.0]);
+            let bv = HostTensor::F32(vec![1.0, 1.0]);
+            let out = rt.execute("join_probe", 3, &[pk, pv, bk, bv]).unwrap();
+            assert_eq!(out[0].as_i32().unwrap(), &[1, 0, -1]);
+            assert_eq!(out[1].as_f32().unwrap(), &[1.0, 1.0, 0.0]);
+        });
+    }
+}

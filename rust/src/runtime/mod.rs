@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, lowered
+//! once from JAX/Pallas) and executes them on the request path. This is
+//! the only boundary between the rust coordinator and the XLA world;
+//! python is never involved at runtime.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactMeta, Manifest, TensorMeta};
+pub use client::Runtime;

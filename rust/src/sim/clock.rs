@@ -1,0 +1,180 @@
+//! Virtual / wall clock abstraction.
+//!
+//! All coordinator code reads time through [`Clock`], so a run is either
+//! driven by the discrete-event [`SimClock`] (paper-scale experiments,
+//! deterministic) or by [`WallClock`] (real execution through PJRT).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Nanoseconds since the start of the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Time(pub u64);
+
+impl Time {
+    pub const ZERO: Time = Time(0);
+
+    pub fn from_secs_f64(s: f64) -> Time {
+        Time((s.max(0.0) * 1e9) as u64)
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    pub fn saturating_sub(self, other: Time) -> Duration {
+        Duration::from_nanos(self.0.saturating_sub(other.0))
+    }
+
+    pub fn add(self, d: Duration) -> Time {
+        Time(self.0 + d.as_nanos() as u64)
+    }
+}
+
+/// Time source + time sink. `advance` models elapsed work: the sim clock
+/// jumps, the wall clock actually sleeps only when asked to idle (never
+/// for compute, whose duration is real there).
+pub trait Clock: Send + Sync {
+    /// Current time since run start.
+    fn now(&self) -> Time;
+
+    /// Account `d` of simulated work ending now (sim: jump; wall: no-op —
+    /// the work itself took the time).
+    fn advance(&self, d: Duration);
+
+    /// Idle until `deadline` (poll sleeps).
+    fn sleep_until(&self, deadline: Time);
+
+    /// True when this clock is virtual.
+    fn is_simulated(&self) -> bool;
+}
+
+/// Deterministic virtual clock.
+#[derive(Clone, Default)]
+pub struct SimClock {
+    now_ns: Arc<AtomicU64>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock::default()
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Time {
+        Time(self.now_ns.load(Ordering::SeqCst))
+    }
+
+    fn advance(&self, d: Duration) {
+        self.now_ns.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    fn sleep_until(&self, deadline: Time) {
+        // Monotone: never move backwards.
+        let mut cur = self.now_ns.load(Ordering::SeqCst);
+        while cur < deadline.0 {
+            match self.now_ns.compare_exchange(
+                cur,
+                deadline.0,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    fn is_simulated(&self) -> bool {
+        true
+    }
+}
+
+/// Real time anchored at construction.
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { start: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Time {
+        Time(self.start.elapsed().as_nanos() as u64)
+    }
+
+    fn advance(&self, _d: Duration) {
+        // Work on the wall clock takes real time already.
+    }
+
+    fn sleep_until(&self, deadline: Time) {
+        let now = self.now();
+        if deadline > now {
+            std::thread::sleep(deadline.saturating_sub(now));
+        }
+    }
+
+    fn is_simulated(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances_exactly() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), Time::ZERO);
+        c.advance(Duration::from_millis(1500));
+        assert_eq!(c.now().as_secs_f64(), 1.5);
+    }
+
+    #[test]
+    fn sim_sleep_until_jumps_forward_only() {
+        let c = SimClock::new();
+        c.sleep_until(Time::from_secs_f64(2.0));
+        assert_eq!(c.now().as_secs_f64(), 2.0);
+        c.sleep_until(Time::from_secs_f64(1.0)); // past deadline: no-op
+        assert_eq!(c.now().as_secs_f64(), 2.0);
+    }
+
+    #[test]
+    fn time_arithmetic() {
+        let t = Time::from_secs_f64(1.0).add(Duration::from_millis(500));
+        assert_eq!(t.as_secs_f64(), 1.5);
+        assert_eq!(
+            t.saturating_sub(Time::from_secs_f64(1.0)),
+            Duration::from_millis(500)
+        );
+        assert_eq!(Time::from_secs_f64(1.0).saturating_sub(t), Duration::ZERO);
+    }
+
+    #[test]
+    fn wall_clock_monotone() {
+        let c = WallClock::new();
+        let a = c.now();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(c.now() > a);
+    }
+
+    #[test]
+    fn sim_clock_shared_between_clones() {
+        let c = SimClock::new();
+        let c2 = c.clone();
+        c.advance(Duration::from_secs(1));
+        assert_eq!(c2.now().as_secs_f64(), 1.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Discrete-event simulation substrate: the virtual clock that lets the
+//! bench harness replay the paper's 20-minute cluster runs in
+//! milliseconds while executing the identical coordinator code.
+
+pub mod clock;
+
+pub use clock::{Clock, SimClock, Time, WallClock};

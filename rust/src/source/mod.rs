@@ -1,0 +1,8 @@
+//! Input side: traffic patterns ([`traffic`]) and the arrival-stamped
+//! input stream the coordinator polls ([`stream`]).
+
+pub mod stream;
+pub mod traffic;
+
+pub use stream::{InputStream, RowGen};
+pub use traffic::Traffic;

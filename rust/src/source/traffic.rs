@@ -1,0 +1,80 @@
+//! Stream ingestion traffic patterns (§V-A).
+//!
+//! * **Constant**: every second, a fixed number of rows arrives as one
+//!   dataset (the paper's fair-comparison traffic).
+//! * **RandomNormal**: per-second row counts drawn from a normal
+//!   distribution (the paper's realistic fluctuating traffic; mean 1000).
+
+use crate::util::rng::Rng;
+
+/// Rows-per-second generator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Traffic {
+    /// `rows` rows every tick.
+    Constant { rows: usize },
+    /// Normal(mean, std) rows per tick, clamped to >= 0.
+    RandomNormal { mean: f64, std: f64 },
+}
+
+impl Traffic {
+    /// Paper default: 1000 rows/s constant.
+    pub fn constant_default() -> Traffic {
+        Traffic::Constant { rows: 1000 }
+    }
+
+    /// Paper default random traffic: Normal(1000, 250).
+    pub fn random_default() -> Traffic {
+        Traffic::RandomNormal { mean: 1000.0, std: 250.0 }
+    }
+
+    /// Rows arriving in the next one-second tick.
+    pub fn next_rows(&self, rng: &mut Rng) -> usize {
+        match *self {
+            Traffic::Constant { rows } => rows,
+            Traffic::RandomNormal { mean, std } => {
+                rng.normal_ms(mean, std).round().max(0.0) as usize
+            }
+        }
+    }
+
+    /// Long-run mean rows/s.
+    pub fn mean_rows(&self) -> f64 {
+        match *self {
+            Traffic::Constant { rows } => rows as f64,
+            Traffic::RandomNormal { mean, .. } => mean,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let mut rng = Rng::new(1);
+        let t = Traffic::Constant { rows: 123 };
+        for _ in 0..10 {
+            assert_eq!(t.next_rows(&mut rng), 123);
+        }
+    }
+
+    #[test]
+    fn random_mean_close_to_target() {
+        let mut rng = Rng::new(2);
+        let t = Traffic::random_default();
+        let n = 20_000;
+        let total: usize = (0..n).map(|_| t.next_rows(&mut rng)).sum();
+        let mean = total as f64 / n as f64;
+        assert!((mean - 1000.0).abs() < 15.0, "mean {mean}");
+    }
+
+    #[test]
+    fn random_never_negative() {
+        let mut rng = Rng::new(3);
+        let t = Traffic::RandomNormal { mean: 10.0, std: 100.0 };
+        for _ in 0..1000 {
+            let _ = t.next_rows(&mut rng); // usize: would panic on negative
+        }
+    }
+}

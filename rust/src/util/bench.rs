@@ -1,0 +1,197 @@
+//! Micro-bench harness (criterion is unavailable offline).
+//!
+//! Each `rust/benches/*.rs` target is a `harness = false` binary that uses
+//! [`Bencher`] for timing loops and the table printers for paper-shaped
+//! output. Methodology: warm-up iterations, then timed batches until both
+//! a minimum iteration count and a minimum elapsed budget are reached;
+//! reports mean / p50 / p99 over per-iteration times.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Configuration for one measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub min_time: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            min_time: Duration::from_millis(300),
+            max_iters: 10_000,
+        }
+    }
+}
+
+/// One benchmark result row.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_secs_f64(self.summary.mean.max(0.0))
+    }
+}
+
+/// Timing loop driver.
+pub struct Bencher {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(BenchConfig::default())
+    }
+}
+
+impl Bencher {
+    pub fn new(cfg: BenchConfig) -> Self {
+        Bencher { cfg, results: Vec::new() }
+    }
+
+    /// Fast preset for heavyweight end-to-end benches (one sim run per
+    /// iteration).
+    pub fn endtoend() -> Self {
+        Bencher::new(BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            min_time: Duration::from_millis(100),
+            max_iters: 10,
+        })
+    }
+
+    /// Measure `f`, preventing dead-code elimination via the returned
+    /// value's observation.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.cfg.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while (times.len() < self.cfg.min_iters || start.elapsed() < self.cfg.min_time)
+            && times.len() < self.cfg.max_iters
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&times),
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Print a criterion-style summary of every measurement.
+    pub fn report(&self) {
+        println!("\n{:-<78}", "");
+        println!(
+            "{:<42} {:>10} {:>10} {:>10}",
+            "benchmark", "mean", "p50", "p99"
+        );
+        println!("{:-<78}", "");
+        for r in &self.results {
+            println!(
+                "{:<42} {:>10} {:>10} {:>10}",
+                r.name,
+                fmt_secs(r.summary.mean),
+                fmt_secs(r.summary.p50),
+                fmt_secs(r.summary.p99),
+            );
+        }
+        println!("{:-<78}", "");
+    }
+}
+
+/// Human duration formatting (ns/µs/ms/s auto-scale).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 0.0 {
+        return "-".into();
+    }
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Paper-style table printer: header + aligned rows.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut out = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            out.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+        }
+        println!("{}", out.trim_end());
+    };
+    line(header.iter().map(|s| s.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_minimum_iterations() {
+        let mut b = Bencher::new(BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            min_time: Duration::ZERO,
+            max_iters: 100,
+        });
+        let mut count = 0usize;
+        b.bench("noop", || {
+            count += 1;
+            count
+        });
+        assert!(count >= 5 + 1); // warmup + timed
+        assert!(b.results[0].summary.n >= 5);
+    }
+
+    #[test]
+    fn max_iters_caps_loop() {
+        let mut b = Bencher::new(BenchConfig {
+            warmup_iters: 0,
+            min_iters: 1,
+            min_time: Duration::from_secs(5),
+            max_iters: 7,
+        });
+        b.bench("noop", || 1);
+        assert_eq!(b.results[0].summary.n, 7);
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert!(fmt_secs(5e-10).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,182 @@
+//! Minimal command-line parser (clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value]...`. Typed accessors
+//! with defaults; unknown-argument detection via [`Args::finish`].
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First positional token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("bare `--` not supported".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.opts.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// String option.
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.opts.get(key).cloned()
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed numeric option.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: bad number `{v}`"))),
+        }
+    }
+
+    /// Typed integer option.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: bad integer `{v}`"))),
+        }
+    }
+
+    /// u64 option.
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: bad integer `{v}`"))),
+        }
+    }
+
+    /// Duration option given in (fractional) seconds, e.g. `--trigger 10`.
+    pub fn secs_or(&self, key: &str, default: Duration) -> Result<Duration> {
+        Ok(Duration::from_secs_f64(
+            self.f64_or(key, default.as_secs_f64())?,
+        ))
+    }
+
+    /// Boolean flag (`--verbose`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error on any option/flag that no accessor asked about (catches
+    /// typos like `--triger`).
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !seen.iter().any(|s| s == k) {
+                return Err(Error::Config(format!("unknown argument --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["run", "--workload", "lr1s", "--seed", "7"]);
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.str_or("workload", ""), "lr1s");
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse(&["bench", "--fig=6", "--verbose"]);
+        assert_eq!(a.str_or("fig", ""), "6");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn durations_in_seconds() {
+        let a = parse(&["run", "--trigger", "2.5"]);
+        assert_eq!(
+            a.secs_or("trigger", Duration::ZERO).unwrap(),
+            Duration::from_millis(2500)
+        );
+    }
+
+    #[test]
+    fn finish_rejects_unknown() {
+        let a = parse(&["run", "--bogus", "1"]);
+        assert!(a.finish().is_err());
+        let b = parse(&["run", "--seed", "1"]);
+        b.u64_or("seed", 0).unwrap();
+        b.finish().unwrap();
+    }
+
+    #[test]
+    fn bad_number_is_config_error() {
+        let a = parse(&["run", "--seed", "xyz"]);
+        assert!(a.u64_or("seed", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let a = parse(&["run", "--verbose", "--seed", "3"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 3);
+    }
+}

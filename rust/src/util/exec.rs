@@ -1,0 +1,188 @@
+//! Threading helpers: scoped parallel map over partitions and a
+//! single-consumer background worker (the tokio replacement).
+//!
+//! The coordinator's partition fan-out uses [`par_map`]; the paper's
+//! asynchronous optimizer (§III-E) runs on a [`Worker`].
+
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Parallel map over `items` with at most `threads` OS threads, preserving
+/// input order. Falls back to sequential for 1 thread or 1 item.
+pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads <= 1 || n == 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let work: Mutex<std::vec::IntoIter<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>().into_iter());
+    let results: Mutex<Vec<Option<R>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    thread::scope(|scope| {
+        for _ in 0..threads.min(n) {
+            scope.spawn(|| loop {
+                let next = work.lock().unwrap().next();
+                match next {
+                    None => break,
+                    Some((i, item)) => {
+                        let r = f(i, item);
+                        results.lock().unwrap()[i] = Some(r);
+                    }
+                }
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("par_map slot unfilled"))
+        .collect()
+}
+
+/// A background worker consuming jobs of type `J` and publishing the most
+/// recent result of type `R`. Job submission never blocks; result pickup
+/// is non-blocking (`latest`) or bounded-blocking (`wait_latest`).
+pub struct Worker<J: Send + 'static, R: Send + 'static> {
+    tx: Sender<J>,
+    latest: Arc<Mutex<Option<R>>>,
+    done_rx: Receiver<()>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl<J: Send + 'static, R: Send + 'static> Worker<J, R> {
+    /// Spawn with a job handler. The handler's return value replaces the
+    /// published `latest` result.
+    pub fn spawn<F>(name: &str, mut handler: F) -> Worker<J, R>
+    where
+        F: FnMut(J) -> R + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<J>();
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let latest: Arc<Mutex<Option<R>>> = Arc::new(Mutex::new(None));
+        let latest2 = Arc::clone(&latest);
+        let handle = thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    let r = handler(job);
+                    *latest2.lock().unwrap() = Some(r);
+                    let _ = done_tx.send(());
+                }
+            })
+            .expect("spawn worker");
+        Worker { tx, latest, done_rx, handle: Some(handle) }
+    }
+
+    /// Enqueue a job (non-blocking).
+    pub fn submit(&self, job: J) {
+        let _ = self.tx.send(job);
+    }
+
+    /// Take the most recent published result, if any.
+    pub fn latest(&self) -> Option<R> {
+        self.latest.lock().unwrap().take()
+    }
+
+    /// Wait up to `timeout` for at least one completion signal, then take
+    /// the latest result. Returns (result, waited), where `waited` is how
+    /// long the caller actually blocked — this is the paper's
+    /// "optimization blocking" time (Table IV).
+    pub fn wait_latest(&self, timeout: std::time::Duration) -> (Option<R>, std::time::Duration) {
+        let t0 = std::time::Instant::now();
+        if self.latest.lock().unwrap().is_some() {
+            return (self.latest(), std::time::Duration::ZERO);
+        }
+        // Drain stale signals, then block for a fresh one.
+        loop {
+            match self.done_rx.try_recv() {
+                Ok(()) => {
+                    if self.latest.lock().unwrap().is_some() {
+                        return (self.latest(), t0.elapsed());
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return (None, t0.elapsed()),
+            }
+        }
+        match self.done_rx.recv_timeout(timeout) {
+            Ok(()) => (self.latest(), t0.elapsed()),
+            Err(_) => (None, t0.elapsed()),
+        }
+    }
+}
+
+impl<J: Send + 'static, R: Send + 'static> Drop for Worker<J, R> {
+    fn drop(&mut self) {
+        // Closing the channel stops the worker loop.
+        let (tx, _) = mpsc::channel();
+        drop(std::mem::replace(&mut self.tx, tx));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let xs: Vec<usize> = (0..100).collect();
+        let ys = par_map(xs, 8, |_, x| x * 2);
+        assert_eq!(ys, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_sequential_fallback() {
+        let ys = par_map(vec![1, 2, 3], 1, |i, x| i + x);
+        assert_eq!(ys, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let ys: Vec<i32> = par_map(Vec::<i32>::new(), 4, |_, x| x);
+        assert!(ys.is_empty());
+    }
+
+    #[test]
+    fn worker_publishes_latest() {
+        let w: Worker<i32, i32> = Worker::spawn("test", |j| j * 10);
+        w.submit(1);
+        w.submit(2);
+        let (r, _) = w.wait_latest(Duration::from_secs(1));
+        assert!(matches!(r, Some(10) | Some(20)));
+    }
+
+    #[test]
+    fn worker_latest_is_consumed_once() {
+        let w: Worker<i32, i32> = Worker::spawn("test", |j| j);
+        w.submit(5);
+        let (r, _) = w.wait_latest(Duration::from_secs(1));
+        assert_eq!(r, Some(5));
+        assert_eq!(w.latest(), None);
+    }
+
+    #[test]
+    fn worker_timeout_returns_none() {
+        let w: Worker<i32, i32> = Worker::spawn("test", |j| {
+            std::thread::sleep(Duration::from_millis(200));
+            j
+        });
+        w.submit(1);
+        let (r, waited) = w.wait_latest(Duration::from_millis(10));
+        assert!(r.is_none());
+        assert!(waited >= Duration::from_millis(10));
+    }
+}

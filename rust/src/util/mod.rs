@@ -1,0 +1,13 @@
+//! In-repo replacements for crates unavailable in the offline build
+//! environment (see DESIGN.md "Environment constraints"): a seeded PRNG,
+//! statistics helpers, a JSON reader/writer, a mini CLI parser, a bench
+//! harness and a property-testing kit.
+
+pub mod bench;
+pub mod cli;
+pub mod exec;
+pub mod hash;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,172 @@
+//! Property-testing kit (proptest is unavailable offline).
+//!
+//! Seeded generator-driven sweeps with failing-case shrinking for the
+//! coordinator invariants (routing, batching, state). Usage:
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the xla rpath in this offline image
+//! use lmstream::util::prop::{prop_assert, Runner};
+//! let mut r = Runner::new(0xfeed, 200);
+//! r.run("sum non-negative", |g| {
+//!     let xs = g.vec_f64(0.0, 10.0, 1..50);
+//!     let s: f64 = xs.iter().sum();
+//!     prop_assert(s >= 0.0, format!("sum {s}"))
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::ops::Range;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Assert helper producing a property failure message.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Case-input generator with size tracking (shrinking re-runs the property
+/// at smaller `size` budgets).
+pub struct Gen {
+    rng: Rng,
+    /// Size budget in [0.0, 1.0]; generators scale ranges by it.
+    pub size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Gen {
+        Gen { rng: Rng::new(seed), size }
+    }
+
+    pub fn u64(&mut self, max: u64) -> u64 {
+        let scaled = ((max as f64) * self.size).max(1.0) as u64;
+        self.rng.below(scaled.min(max).max(1))
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        if r.is_empty() {
+            return r.start;
+        }
+        let span = (r.end - r.start) as u64;
+        let scaled = ((span as f64 * self.size).ceil() as u64).clamp(1, span);
+        r.start + self.rng.below(scaled) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let hi_scaled = lo + (hi - lo) * self.size.max(0.05);
+        self.rng.uniform(lo, hi_scaled.max(lo + f64::EPSILON))
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn vec_f64(&mut self, lo: f64, hi: f64, len: Range<usize>) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, max: usize, len: Range<usize>) -> Vec<usize> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.u64(max as u64) as usize).collect()
+    }
+
+    /// Access the raw RNG for domain-specific generation.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Property sweep driver.
+pub struct Runner {
+    seed: u64,
+    cases: usize,
+}
+
+impl Runner {
+    pub fn new(seed: u64, cases: usize) -> Runner {
+        Runner { seed, cases }
+    }
+
+    /// Run `prop` over `cases` seeded inputs; on failure, retry at smaller
+    /// size budgets (simple shrinking) and panic with the smallest
+    /// reproducer's seed + message.
+    pub fn run<F: FnMut(&mut Gen) -> CaseResult>(&mut self, name: &str, mut prop: F) {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+            if let Err(msg) = prop(&mut Gen::new(case_seed, 1.0)) {
+                // Shrink: re-run the same seed at smaller sizes, keep the
+                // smallest size that still fails.
+                let mut best = (1.0f64, msg);
+                for &size in &[0.5, 0.25, 0.1, 0.05, 0.02] {
+                    if let Err(m) = prop(&mut Gen::new(case_seed, size)) {
+                        best = (size, m);
+                    } else {
+                        break;
+                    }
+                }
+                panic!(
+                    "property `{name}` failed (case {case}, seed {case_seed:#x}, \
+                     shrunk size {}): {}",
+                    best.0, best.1
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        let mut r = Runner::new(1, 50);
+        r.run("abs non-negative", |g| {
+            let x = g.f64_in(-100.0, 100.0);
+            prop_assert(x.abs() >= 0.0, "impossible")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics_with_seed() {
+        let mut r = Runner::new(2, 10);
+        r.run("always fails", |g| {
+            let x = g.f64_in(0.0, 1.0);
+            prop_assert(x < 0.0, format!("x = {x}"))
+        });
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        let mut g = Gen::new(3, 1.0);
+        for _ in 0..1000 {
+            let v = g.usize_in(5..10);
+            assert!((5..10).contains(&v));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn vec_lengths_in_range() {
+        let mut g = Gen::new(4, 1.0);
+        for _ in 0..100 {
+            let v = g.vec_f64(0.0, 1.0, 2..7);
+            assert!((2..7).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn same_seed_same_cases() {
+        let mut g1 = Gen::new(99, 1.0);
+        let mut g2 = Gen::new(99, 1.0);
+        assert_eq!(g1.u64(1000), g2.u64(1000));
+        assert_eq!(g1.f64_in(0.0, 1.0), g2.f64_in(0.0, 1.0));
+    }
+}

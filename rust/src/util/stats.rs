@@ -1,0 +1,232 @@
+//! Statistics helpers: summary stats, percentiles, and the ordinary
+//! least-squares fit behind the paper's Eq. 10 online optimizer.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile by linear interpolation (`q` in [0, 100]); 0.0 for empty.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Summary of a sample (used by the bench harness and reports).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        Summary {
+            n: xs.len(),
+            mean: mean(xs),
+            std: stddev(xs),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            p50: percentile(xs, 50.0),
+            p99: percentile(xs, 99.0),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+}
+
+/// Ridge-regularized OLS for `y = b0 + b1*x1 + b2*x2` — the exact model
+/// shape of the paper's Eq. 10. Ridge `lambda` keeps the 3x3 normal system
+/// solvable when the history is (nearly) collinear, which happens in the
+/// first micro-batches when the inflection point has not moved yet.
+///
+/// Returns `[b0, b1, b2]`, or `None` if fewer than 3 samples.
+pub fn ols2(x1: &[f64], x2: &[f64], y: &[f64], lambda: f64) -> Option<[f64; 3]> {
+    let n = y.len();
+    if n < 3 || x1.len() != n || x2.len() != n {
+        return None;
+    }
+    // Normal equations: (X^T X + λI) b = X^T y with X = [1, x1, x2].
+    let nf = n as f64;
+    let s1: f64 = x1.iter().sum();
+    let s2: f64 = x2.iter().sum();
+    let s11: f64 = x1.iter().map(|a| a * a).sum();
+    let s22: f64 = x2.iter().map(|a| a * a).sum();
+    let s12: f64 = x1.iter().zip(x2).map(|(a, b)| a * b).sum();
+    let sy: f64 = y.iter().sum();
+    let s1y: f64 = x1.iter().zip(y).map(|(a, b)| a * b).sum();
+    let s2y: f64 = x2.iter().zip(y).map(|(a, b)| a * b).sum();
+
+    let mut a = [
+        [nf + lambda, s1, s2],
+        [s1, s11 + lambda, s12],
+        [s2, s12, s22 + lambda],
+    ];
+    let mut b = [sy, s1y, s2y];
+    solve3(&mut a, &mut b)
+}
+
+/// Gaussian elimination with partial pivoting for a 3x3 system.
+fn solve3(a: &mut [[f64; 3]; 3], b: &mut [f64; 3]) -> Option<[f64; 3]> {
+    for col in 0..3 {
+        // Pivot.
+        let mut piv = col;
+        for row in (col + 1)..3 {
+            if a[row][col].abs() > a[piv][col].abs() {
+                piv = row;
+            }
+        }
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        // Eliminate below.
+        for row in (col + 1)..3 {
+            let f = a[row][col] / a[col][col];
+            for k in col..3 {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    // Back substitution.
+    let mut x = [0.0; 3];
+    for col in (0..3).rev() {
+        let mut acc = b[col];
+        for k in (col + 1)..3 {
+            acc -= a[col][k] * x[k];
+        }
+        x[col] = acc / a[col][col];
+    }
+    Some(x)
+}
+
+/// Exponential moving average helper.
+#[derive(Clone, Copy, Debug)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn summary_fields_consistent() {
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn ols_recovers_exact_plane() {
+        // y = 2 + 3*x1 - 0.5*x2, noiseless.
+        let x1: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let x2: Vec<f64> = (0..20).map(|i| ((i * 7) % 13) as f64).collect();
+        let y: Vec<f64> =
+            x1.iter().zip(&x2).map(|(a, b)| 2.0 + 3.0 * a - 0.5 * b).collect();
+        let [b0, b1, b2] = ols2(&x1, &x2, &y, 0.0).unwrap();
+        assert!((b0 - 2.0).abs() < 1e-8, "{b0}");
+        assert!((b1 - 3.0).abs() < 1e-9, "{b1}");
+        assert!((b2 + 0.5).abs() < 1e-9, "{b2}");
+    }
+
+    #[test]
+    fn ols_degenerate_without_ridge_none() {
+        // x2 = 2*x1 exactly: singular normal matrix.
+        let x1: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let x2: Vec<f64> = x1.iter().map(|a| 2.0 * a).collect();
+        let y: Vec<f64> = x1.iter().map(|a| 1.0 + a).collect();
+        assert!(ols2(&x1, &x2, &y, 0.0).is_none());
+        // Ridge makes it solvable.
+        assert!(ols2(&x1, &x2, &y, 1e-3).is_some());
+    }
+
+    #[test]
+    fn ols_needs_three_points(){
+        assert!(ols2(&[1.0], &[1.0], &[1.0], 0.0).is_none());
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        e.update(0.0);
+        for _ in 0..30 {
+            e.update(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-3);
+    }
+}

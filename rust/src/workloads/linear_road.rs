@@ -1,0 +1,199 @@
+//! Linear Road stream benchmark (Arasu et al., VLDB'04) — the LR1/LR2
+//! queries of Table III over a synthetic highway-traffic feed.
+//!
+//! Generator cardinalities are chosen so the workload reproduces the
+//! paper's load regime: ~1000 readings/s with a vehicle pool sized such
+//! that the LR1 self-join against a 30 s window amplifies each probe row
+//! ~30x — the "fully loading the computing capacity" condition of §V-A.
+
+use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+use crate::engine::ops::aggregate::AggSpec;
+use crate::engine::ops::filter::Predicate;
+use crate::engine::window::WindowSpec;
+use crate::query::builder::QueryBuilder;
+use crate::source::stream::RowGen;
+use crate::source::traffic::Traffic;
+use crate::util::rng::Rng;
+use crate::workloads::Workload;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Vehicles driving concurrently (join-amplification knob).
+pub const NUM_VEHICLES: i64 = 1000;
+/// Highways / lanes / directions / segments of the benchmark's road net.
+pub const NUM_HIGHWAYS: i64 = 4;
+pub const NUM_LANES: i64 = 4;
+pub const NUM_DIRECTIONS: i64 = 2;
+pub const NUM_SEGMENTS: i64 = 96;
+
+/// `SegSpeedStr` schema: position reports.
+pub fn schema() -> Arc<Schema> {
+    Schema::new(vec![
+        Field::f32("timestamp"),
+        Field::i32("vehicle"),
+        Field::f32("speed"),
+        Field::i32("highway"),
+        Field::i32("lane"),
+        Field::i32("direction"),
+        Field::i32("segment"),
+    ])
+}
+
+/// Position-report generator.
+pub struct LinearRoadGen {
+    rng: Rng,
+}
+
+impl LinearRoadGen {
+    pub fn new(seed: u64) -> LinearRoadGen {
+        LinearRoadGen { rng: Rng::new(seed) }
+    }
+}
+
+impl RowGen for LinearRoadGen {
+    fn generate(&mut self, tick: u64, rows: usize) -> ColumnBatch {
+        let mut ts = Vec::with_capacity(rows);
+        let mut vehicle = Vec::with_capacity(rows);
+        let mut speed = Vec::with_capacity(rows);
+        let mut highway = Vec::with_capacity(rows);
+        let mut lane = Vec::with_capacity(rows);
+        let mut direction = Vec::with_capacity(rows);
+        let mut segment = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            ts.push(tick as f32);
+            vehicle.push(self.rng.range(0, NUM_VEHICLES) as i32);
+            // Bimodal speeds: free-flow ~60 mph, congested ~25 mph, so
+            // LR2S's HAVING avgSpeed < 40 selects a real subset.
+            let congested = self.rng.chance(0.3);
+            let base = if congested { 25.0 } else { 60.0 };
+            speed.push((base + self.rng.normal_ms(0.0, 8.0)).clamp(0.0, 100.0) as f32);
+            highway.push(self.rng.range(0, NUM_HIGHWAYS) as i32);
+            lane.push(self.rng.range(0, NUM_LANES) as i32);
+            direction.push(self.rng.range(0, NUM_DIRECTIONS) as i32);
+            segment.push(self.rng.range(0, NUM_SEGMENTS) as i32);
+        }
+        ColumnBatch::new(
+            schema(),
+            vec![
+                Column::F32(ts),
+                Column::I32(vehicle),
+                Column::F32(speed),
+                Column::I32(highway),
+                Column::I32(lane),
+                Column::I32(direction),
+                Column::I32(segment),
+            ],
+        )
+        .expect("LR schema consistent")
+    }
+}
+
+fn make_gen(seed: u64) -> Box<dyn RowGen> {
+    Box::new(LinearRoadGen::new(seed))
+}
+
+/// LR1S — sliding-window self-join (Table III):
+/// `SELECT L.* FROM SegSpeedStr [range 30 slide 5] as A, SegSpeedStr as L
+///  WHERE A.vehicle == L.vehicle`.
+pub fn lr1s() -> Workload {
+    let query = QueryBuilder::scan("LR1S")
+        .window(WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5)))
+        .join_window("vehicle", "vehicle")
+        .select(&[
+            "timestamp", "vehicle", "speed", "highway", "lane", "direction", "segment",
+        ])
+        .build()
+        .expect("LR1S valid");
+    Workload::new("LR1S", query, Traffic::constant_default(), make_gen)
+}
+
+/// LR1T — the same join over a tumbling [range 30] window.
+pub fn lr1t() -> Workload {
+    let query = QueryBuilder::scan("LR1T")
+        .window(WindowSpec::tumbling(Duration::from_secs(30)))
+        .join_window("vehicle", "vehicle")
+        .select(&[
+            "timestamp", "vehicle", "speed", "highway", "lane", "direction", "segment",
+        ])
+        .build()
+        .expect("LR1T valid");
+    Workload::new("LR1T", query, Traffic::constant_default(), make_gen)
+}
+
+/// LR2S — windowed average-speed aggregation (Table III):
+/// `SELECT timestamp, highway, direction, segment, AVG(speed) as avgSpeed
+///  FROM SegSpeedStr [range 30 slide 10]
+///  GROUP BY (highway, direction, segment) HAVING (avgSpeed < 40.0)`.
+pub fn lr2s() -> Workload {
+    let query = QueryBuilder::scan("LR2S")
+        .window(WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(10)))
+        .shuffle("segment")
+        .expand()
+        .aggregate(
+            &["highway", "direction", "segment"],
+            vec![AggSpec::avg("speed", "avgSpeed")],
+            Some(("avgSpeed", Predicate::Lt(40.0))),
+        )
+        .build()
+        .expect("LR2S valid");
+    Workload::new("LR2S", query, Traffic::constant_default(), make_gen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_respects_cardinalities() {
+        let mut g = LinearRoadGen::new(1);
+        let b = g.generate(5, 2000);
+        assert_eq!(b.rows(), 2000);
+        let vehicles = b.column("vehicle").unwrap().as_i32().unwrap();
+        assert!(vehicles.iter().all(|&v| (0..NUM_VEHICLES as i32).contains(&v)));
+        let speeds = b.column("speed").unwrap().as_f32().unwrap();
+        assert!(speeds.iter().all(|&s| (0.0..=100.0).contains(&s)));
+        let ts = b.column("timestamp").unwrap().as_f32().unwrap();
+        assert!(ts.iter().all(|&t| t == 5.0));
+    }
+
+    #[test]
+    fn join_amplification_in_target_band() {
+        // 30 s of window at 1000 rows/s vs 1 s of probe: each probe row
+        // should match ~30 window rows (±40 %) — the §V-A load regime.
+        use crate::engine::ops::hash_join;
+        let mut g = LinearRoadGen::new(2);
+        let window = g.generate(0, 30_000);
+        let probe = g.generate(30, 1000);
+        let joined = hash_join(&probe, &window, "vehicle", "vehicle").unwrap();
+        let amp = joined.rows() as f64 / probe.rows() as f64;
+        assert!((18.0..42.0).contains(&amp), "amplification {amp}");
+    }
+
+    #[test]
+    fn lr2s_having_selects_congested_subset() {
+        use crate::engine::ops::{hash_aggregate, AggSpec};
+        let mut g = LinearRoadGen::new(3);
+        let b = g.generate(0, 20_000);
+        let agg = hash_aggregate(
+            &b,
+            &["highway", "direction", "segment"],
+            &[AggSpec::avg("speed", "avgSpeed")],
+            Some(("avgSpeed", Predicate::Lt(40.0))),
+        )
+        .unwrap();
+        let kept = agg.live_rows();
+        let total = agg.rows();
+        assert!(kept > 0, "HAVING kept nothing");
+        assert!(kept < total, "HAVING kept everything ({kept}/{total})");
+    }
+
+    #[test]
+    fn speeds_are_bimodal_around_threshold() {
+        let mut g = LinearRoadGen::new(4);
+        let b = g.generate(0, 10_000);
+        let speeds = b.column("speed").unwrap().as_f32().unwrap();
+        let slow = speeds.iter().filter(|&&s| s < 40.0).count() as f64;
+        let frac = slow / speeds.len() as f64;
+        assert!((0.2..0.45).contains(&frac), "slow fraction {frac}");
+    }
+}

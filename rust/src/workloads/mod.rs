@@ -1,0 +1,107 @@
+//! The paper's evaluation workloads (Table III): Linear Road and Google
+//! Cluster Monitoring, plus the synthetic select-project-join of
+//! Figs. 2/5.
+
+pub mod cluster_monitoring;
+pub mod linear_road;
+pub mod synthetic;
+
+use crate::error::{Error, Result};
+use crate::query::dag::Query;
+use crate::source::stream::{InputStream, RowGen};
+use crate::source::traffic::Traffic;
+
+/// A runnable workload: query + data generator + default traffic.
+pub struct Workload {
+    pub name: &'static str,
+    pub query: Query,
+    pub traffic: Traffic,
+    make_gen: fn(u64) -> Box<dyn RowGen>,
+}
+
+impl Workload {
+    pub fn new(
+        name: &'static str,
+        query: Query,
+        traffic: Traffic,
+        make_gen: fn(u64) -> Box<dyn RowGen>,
+    ) -> Workload {
+        Workload { name, query, traffic, make_gen }
+    }
+
+    /// Instantiate the input stream (seeded).
+    pub fn make_stream(&self, seed: u64) -> InputStream {
+        InputStream::new((self.make_gen)(seed), self.traffic, seed)
+    }
+
+    /// Override traffic (the §V experiments switch constant ↔ random).
+    pub fn with_traffic(mut self, traffic: Traffic) -> Workload {
+        self.traffic = traffic;
+        self
+    }
+}
+
+/// All Table III workload names.
+pub const ALL: &[&str] = &["lr1s", "lr1t", "lr2s", "cm1s", "cm1t", "cm2s"];
+
+/// Look up a workload by its Table III notation (lowercase).
+pub fn by_name(name: &str) -> Result<Workload> {
+    match name {
+        "lr1s" => Ok(linear_road::lr1s()),
+        "lr1t" => Ok(linear_road::lr1t()),
+        "lr2s" => Ok(linear_road::lr2s()),
+        "cm1s" => Ok(cluster_monitoring::cm1s()),
+        "cm1t" => Ok(cluster_monitoring::cm1t()),
+        "cm2s" => Ok(cluster_monitoring::cm2s()),
+        "spj" => Ok(synthetic::spj()),
+        other => Err(Error::Config(format!(
+            "unknown workload `{other}` (expected one of {ALL:?} or spj)"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_workloads_resolve_and_validate() {
+        for name in ALL.iter().chain(&["spj"]) {
+            let w = by_name(name).unwrap();
+            w.query.validate().unwrap();
+            assert!(!w.query.is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_config_error() {
+        assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn window_kinds_match_table_three() {
+        use crate::engine::window::WindowKind;
+        for (name, kind) in [
+            ("lr1s", WindowKind::Sliding),
+            ("lr1t", WindowKind::Tumbling),
+            ("lr2s", WindowKind::Sliding),
+            ("cm1s", WindowKind::Sliding),
+            ("cm1t", WindowKind::Tumbling),
+            ("cm2s", WindowKind::Sliding),
+        ] {
+            assert_eq!(by_name(name).unwrap().query.window.kind(), kind, "{name}");
+        }
+    }
+
+    #[test]
+    fn streams_generate_rows() {
+        use crate::sim::Time;
+        for name in ALL {
+            let w = by_name(name).unwrap();
+            let mut s = w.make_stream(1);
+            let data = s.poll(Time::from_secs_f64(2.0));
+            assert!(!data.is_empty(), "{name}");
+            assert!(data[0].rows() > 0, "{name}");
+        }
+    }
+}

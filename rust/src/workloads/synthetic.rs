@@ -1,0 +1,115 @@
+//! Synthetic select-project-join query — the micro-benchmark of Figs. 2
+//! and 5 (PCIe overhead ratios and normalized execution times across
+//! batch sizes and CPU/GPU mapping scenarios).
+
+use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+use crate::engine::ops::filter::Predicate;
+use crate::engine::window::WindowSpec;
+use crate::query::builder::QueryBuilder;
+use crate::source::stream::RowGen;
+use crate::source::traffic::Traffic;
+use crate::util::rng::Rng;
+use crate::workloads::Workload;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Join-key cardinality (modest amplification: ~2 matches per probe row
+/// against an equal-sized build side).
+pub const NUM_KEYS: i64 = 4096;
+
+pub fn schema() -> Arc<Schema> {
+    Schema::new(vec![
+        Field::f32("key"),
+        Field::f32("a"),
+        Field::f32("b"),
+        Field::i32("jk"),
+    ])
+}
+
+/// Uniform random generator for the SPJ columns.
+pub struct SyntheticGen {
+    rng: Rng,
+}
+
+impl SyntheticGen {
+    pub fn new(seed: u64) -> SyntheticGen {
+        SyntheticGen { rng: Rng::new(seed) }
+    }
+
+    /// A batch of approximately `bytes` total size (17 B/row).
+    pub fn batch_of_bytes(&mut self, bytes: usize) -> ColumnBatch {
+        let rows = (bytes / 17).max(1);
+        self.generate(0, rows)
+    }
+}
+
+impl RowGen for SyntheticGen {
+    fn generate(&mut self, _tick: u64, rows: usize) -> ColumnBatch {
+        let mut key = Vec::with_capacity(rows);
+        let mut a = Vec::with_capacity(rows);
+        let mut b = Vec::with_capacity(rows);
+        let mut jk = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            key.push(self.rng.f32());
+            a.push(self.rng.f32());
+            b.push(self.rng.f32());
+            jk.push(self.rng.range(0, NUM_KEYS) as i32);
+        }
+        ColumnBatch::new(
+            schema(),
+            vec![Column::F32(key), Column::F32(a), Column::F32(b), Column::I32(jk)],
+        )
+        .expect("SPJ schema consistent")
+    }
+}
+
+fn make_gen(seed: u64) -> Box<dyn RowGen> {
+    Box::new(SyntheticGen::new(seed))
+}
+
+/// The select-project-join chain used by Figs. 2/5:
+/// scan → filter(key ≥ 0.2) → project(a+b) → join on jk.
+pub fn spj() -> Workload {
+    let query = QueryBuilder::scan("SPJ")
+        .window(WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(10)))
+        .filter("key", Predicate::Ge(0.2))
+        .project_affine("a", "b", 1.0, 1.0, "ab")
+        .join_window("jk", "jk")
+        .build()
+        .expect("SPJ valid");
+    Workload::new("SPJ", query, Traffic::constant_default(), make_gen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_of_bytes_hits_target() {
+        let mut g = SyntheticGen::new(1);
+        let b = g.batch_of_bytes(100 * 1024);
+        let ratio = b.bytes() as f64 / (100.0 * 1024.0);
+        assert!((0.9..1.1).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn filter_selectivity_about_eighty_percent() {
+        use crate::engine::ops::filter;
+        let mut g = SyntheticGen::new(2);
+        let b = g.generate(0, 10_000);
+        let f = filter(&b, "key", Predicate::Ge(0.2)).unwrap();
+        let frac = f.live_rows() as f64 / b.rows() as f64;
+        assert!((0.75..0.85).contains(&frac), "{frac}");
+    }
+
+    #[test]
+    fn spj_query_shape() {
+        use crate::query::dag::OpKind;
+        let w = spj();
+        let kinds: Vec<OpKind> = w.query.traverse().map(|o| o.spec.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec![OpKind::Scan, OpKind::Filter, OpKind::Project, OpKind::Join]
+        );
+    }
+}

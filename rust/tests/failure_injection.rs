@@ -1,0 +1,158 @@
+//! Failure injection: malformed inputs must fail loudly with typed
+//! errors, never corrupt state or panic.
+
+use lmstream::config::{Config, Mode};
+use lmstream::devices::Device;
+use lmstream::engine::column::{Column, ColumnBatch, Field, Schema};
+use lmstream::error::Error;
+use lmstream::query::exec::{self, DevicePlan, ExecEnv};
+use lmstream::runtime::artifacts::Manifest;
+use lmstream::workloads;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lmstream-fail-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_artifact_dir_is_artifact_error() {
+    let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+    assert!(matches!(err, Error::Artifact(_)), "{err:?}");
+    assert!(err.to_string().contains("make artifacts"));
+}
+
+#[test]
+fn corrupt_manifest_json_rejected() {
+    let d = tmpdir("badjson");
+    let mut f = std::fs::File::create(d.join("manifest.json")).unwrap();
+    f.write_all(b"{ this is not json ]").unwrap();
+    let err = Manifest::load(&d).unwrap_err();
+    assert!(matches!(err, Error::Json(_)), "{err:?}");
+}
+
+#[test]
+fn wrong_manifest_format_version_rejected() {
+    let d = tmpdir("badformat");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"format": 99, "num_groups": 256, "row_buckets": [1024], "artifacts": []}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&d).unwrap_err();
+    assert!(err.to_string().contains("format"), "{err}");
+}
+
+#[test]
+fn empty_artifact_list_rejected() {
+    let d = tmpdir("empty");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"format": 1, "num_groups": 256, "row_buckets": [1024], "artifacts": []}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&d).unwrap_err();
+    assert!(matches!(err, Error::Artifact(_)), "{err:?}");
+}
+
+#[test]
+fn manifest_missing_fields_rejected() {
+    let d = tmpdir("missingfields");
+    std::fs::write(d.join("manifest.json"), r#"{"format": 1}"#).unwrap();
+    let err = Manifest::load(&d).unwrap_err();
+    assert!(matches!(err, Error::Json(_)), "{err:?}");
+}
+
+#[test]
+fn invalid_configs_rejected_before_running() {
+    for cfg in [
+        Config { num_cores: 0, ..Config::default() },
+        Config { num_gpus: 0, ..Config::default() },
+        Config { trigger: std::time::Duration::ZERO, ..Config::default() },
+        Config { initial_inflection_bytes: -1.0, ..Config::default() },
+        Config { initial_throughput: 0.0, ..Config::default() },
+    ] {
+        assert!(cfg.validate().is_err());
+        let w = workloads::by_name("lr1s").unwrap();
+        let r = lmstream::coordinator::driver::run(
+            &w,
+            &cfg,
+            std::time::Duration::from_secs(5),
+            None,
+        );
+        assert!(r.is_err(), "driver accepted invalid config");
+    }
+}
+
+#[test]
+fn real_backend_without_runtime_fails_on_gpu_ops() {
+    use lmstream::config::ExecBackend;
+    let w = workloads::by_name("lr1s").unwrap();
+    let cfg = Config {
+        mode: Mode::AllGpu,
+        backend: ExecBackend::Real,
+        ..Config::default()
+    };
+    let r = lmstream::coordinator::driver::run(
+        &w,
+        &cfg,
+        std::time::Duration::from_secs(15),
+        None, // no runtime supplied
+    );
+    assert!(r.is_err(), "GPU ops without a runtime must fail");
+}
+
+#[test]
+fn plan_arity_mismatch_rejected() {
+    let w = workloads::by_name("lr2s").unwrap();
+    let model = lmstream::devices::model::DeviceModel::default();
+    let env = ExecEnv {
+        model: &model,
+        backend: lmstream::config::ExecBackend::Simulated,
+        num_cores: 12,
+        num_gpus: 1,
+        runtime: None,
+    };
+    let schema = Schema::new(vec![Field::f32("x")]);
+    let batch = ColumnBatch::new(schema, vec![Column::F32(vec![1.0])]).unwrap();
+    let bad_plan = DevicePlan::all(Device::Cpu, 1); // query has more ops
+    let r = exec::execute(&w.query, &bad_plan, batch, None, &env);
+    assert!(matches!(r, Err(Error::Plan(_))), "{r:?}");
+}
+
+#[test]
+fn unknown_columns_surface_schema_errors() {
+    use lmstream::engine::ops;
+    let schema = Schema::new(vec![Field::f32("x")]);
+    let batch = ColumnBatch::new(schema, vec![Column::F32(vec![1.0])]).unwrap();
+    assert!(matches!(
+        ops::filter(&batch, "nope", ops::Predicate::Ge(0.0)),
+        Err(Error::Schema(_))
+    ));
+    assert!(matches!(
+        ops::sort_by(&batch, "nope", false),
+        Err(Error::Schema(_))
+    ));
+    assert!(matches!(
+        ops::hash_join(&batch, &batch, "nope", "x"),
+        Err(Error::Schema(_))
+    ));
+}
+
+#[test]
+fn ragged_concat_rejected() {
+    let a = ColumnBatch::new(
+        Schema::new(vec![Field::f32("x")]),
+        vec![Column::F32(vec![1.0])],
+    )
+    .unwrap();
+    let b = ColumnBatch::new(
+        Schema::new(vec![Field::f32("y")]),
+        vec![Column::F32(vec![1.0])],
+    )
+    .unwrap();
+    assert!(ColumnBatch::concat(&[&a, &b]).is_err());
+}

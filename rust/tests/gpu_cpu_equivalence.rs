@@ -1,0 +1,225 @@
+//! CPU-path vs GPU-path (PJRT artifacts) semantic equivalence: every
+//! operator must produce identical results through both executors.
+//!
+//! Requires `make artifacts`. Runs on one thread per test (the xla
+//! crate's handles are not Send/Sync).
+
+use lmstream::devices::{cpu, gpu};
+use lmstream::engine::column::ColumnBatch;
+use lmstream::engine::ops::aggregate::AggSpec;
+use lmstream::engine::ops::filter::Predicate;
+use lmstream::engine::window::WindowSpec;
+use lmstream::query::dag::OpSpec;
+use lmstream::runtime::client::Runtime;
+use lmstream::workloads::linear_road::LinearRoadGen;
+use lmstream::source::stream::RowGen;
+use std::path::Path;
+use std::time::Duration;
+
+fn runtime() -> Runtime {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::new(&dir).expect("runtime (run `make artifacts`)")
+}
+
+fn wspec() -> WindowSpec {
+    WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5))
+}
+
+fn lr_batch(seed: u64, rows: usize) -> ColumnBatch {
+    LinearRoadGen::new(seed).generate(0, rows)
+}
+
+fn assert_equiv(rt: &Runtime, spec: &OpSpec, batch: &ColumnBatch, window: Option<&ColumnBatch>) {
+    let native = cpu::run_op(spec, batch, window, &wspec()).expect("cpu path");
+    let device = gpu::run_op(rt, spec, batch, window, &wspec()).expect("gpu path");
+    assert_eq!(native.rows(), device.rows(), "{spec:?} row count");
+    assert_eq!(native.valid, device.valid, "{spec:?} validity");
+    assert_eq!(native.schema, device.schema, "{spec:?} schema");
+    for (ci, (a, b)) in native.columns.iter().zip(&device.columns).enumerate() {
+        match (a, b) {
+            (
+                lmstream::engine::column::Column::F32(x),
+                lmstream::engine::column::Column::F32(y),
+            ) => {
+                for (i, (u, v)) in x.iter().zip(y).enumerate() {
+                    assert!(
+                        (u - v).abs() <= 1e-4 * u.abs().max(1.0),
+                        "{spec:?} col {ci} row {i}: {u} vs {v}"
+                    );
+                }
+            }
+            (a, b) => assert_eq!(a, b, "{spec:?} col {ci}"),
+        }
+    }
+}
+
+#[test]
+fn filters_equivalent() {
+    let rt = runtime();
+    let mut batch = lr_batch(1, 700);
+    for i in 0..700 {
+        if i % 7 == 0 {
+            batch.valid[i] = 0; // pre-dead rows must stay dead
+        }
+    }
+    for pred in [
+        Predicate::Ge(40.0),
+        Predicate::Lt(40.0),
+        Predicate::Eq(2.0),
+        Predicate::Band(20.0, 60.0),
+    ] {
+        let spec = OpSpec::Filter { col: "speed".into(), pred };
+        assert_equiv(&rt, &spec, &batch, None);
+    }
+}
+
+#[test]
+fn project_affine_equivalent() {
+    let rt = runtime();
+    let batch = lr_batch(2, 900);
+    let spec = OpSpec::ProjectAffine {
+        a: "speed".into(),
+        b: "timestamp".into(),
+        alpha: 2.0,
+        beta: -0.5,
+        out: "mix".into(),
+    };
+    assert_equiv(&rt, &spec, &batch, None);
+}
+
+#[test]
+fn aggregate_equivalent_single_key() {
+    let rt = runtime();
+    let batch = lr_batch(3, 1200);
+    let spec = OpSpec::Aggregate {
+        group: vec!["highway".into()],
+        aggs: vec![
+            AggSpec::sum("speed", "total"),
+            AggSpec::count("n"),
+            AggSpec::avg("speed", "avg"),
+        ],
+        having: None,
+    };
+    assert_equiv(&rt, &spec, &batch, None);
+}
+
+#[test]
+fn aggregate_equivalent_multi_key_with_having() {
+    let rt = runtime();
+    let batch = lr_batch(4, 2000);
+    let spec = OpSpec::Aggregate {
+        group: vec!["highway".into(), "direction".into(), "segment".into()],
+        aggs: vec![AggSpec::avg("speed", "avgSpeed")],
+        having: Some(("avgSpeed".into(), Predicate::Lt(40.0))),
+    };
+    assert_equiv(&rt, &spec, &batch, None);
+}
+
+#[test]
+fn aggregate_equivalent_many_groups_chunked() {
+    // > NUM_GROUPS (256) distinct groups exercises the chunked device
+    // reduction path.
+    let rt = runtime();
+    let batch = lr_batch(5, 3000);
+    let spec = OpSpec::Aggregate {
+        group: vec!["vehicle".into()], // up to 1000 distinct
+        aggs: vec![AggSpec::sum("speed", "s"), AggSpec::count("c")],
+        having: None,
+    };
+    assert_equiv(&rt, &spec, &batch, None);
+}
+
+#[test]
+fn join_equivalent() {
+    let rt = runtime();
+    let probe = lr_batch(6, 500);
+    let window = lr_batch(7, 1500);
+    let spec = OpSpec::JoinWithWindow {
+        probe_key: "vehicle".into(),
+        build_key: "vehicle".into(),
+    };
+    assert_equiv(&rt, &spec, &probe, Some(&window));
+}
+
+#[test]
+fn join_equivalent_large_build_chunked() {
+    // Build side > JOIN_CHUNK (4096) exercises probe/build chunking.
+    let rt = runtime();
+    let probe = lr_batch(8, 300);
+    let window = lr_batch(9, 9000);
+    let spec = OpSpec::JoinWithWindow {
+        probe_key: "vehicle".into(),
+        build_key: "vehicle".into(),
+    };
+    assert_equiv(&rt, &spec, &probe, Some(&window));
+}
+
+#[test]
+fn pruned_join_equivalent() {
+    // The optimizer-generated pruned join (projection pushdown) must
+    // agree across executors too.
+    let rt = runtime();
+    let probe = lr_batch(12, 400);
+    let window = lr_batch(13, 1200);
+    let spec = OpSpec::JoinWithWindowPruned {
+        probe_key: "vehicle".into(),
+        build_key: "vehicle".into(),
+        probe_cols: vec!["timestamp".into(), "vehicle".into(), "speed".into()],
+        build_cols: vec!["speed".into()],
+    };
+    assert_equiv(&rt, &spec, &probe, Some(&window));
+}
+
+#[test]
+fn optimized_query_matches_unoptimized_end_to_end() {
+    // Full-driver check: the projection-pushdown rewrite must not change
+    // observable results, only their cost.
+    use lmstream::config::{Config, Mode};
+    use lmstream::coordinator::driver;
+    use lmstream::engine::sink::CollectSink;
+    use lmstream::query::optimize;
+    use lmstream::workloads;
+
+    let w = workloads::by_name("lr1s").unwrap();
+    let optimized = optimize::optimize(&w.query);
+    assert!(optimized
+        .ops
+        .iter()
+        .any(|o| matches!(o.spec, OpSpec::JoinWithWindowPruned { .. })));
+
+    let cfg = Config { mode: Mode::AllCpu, ..Config::default() };
+    let mut sink = CollectSink::new(4);
+    driver::run_with_sink(&w, &cfg, Duration::from_secs(45), None, &mut sink).unwrap();
+    assert!(!sink.results.is_empty());
+    for (_, _, batch) in &sink.results {
+        // LR1S's SELECT keeps exactly the 7 probe columns.
+        assert_eq!(batch.schema.len(), 7);
+        assert!(batch.column("vehicle").is_ok());
+        assert!(batch.column("r_vehicle").is_err());
+    }
+}
+
+#[test]
+fn sort_equivalent() {
+    let rt = runtime();
+    let mut batch = lr_batch(10, 800);
+    for i in 0..800 {
+        if i % 11 == 0 {
+            batch.valid[i] = 0;
+        }
+    }
+    // Note: device sort uses a stable argsort on the key only, as does
+    // the native sort, so full column equality must hold.
+    for desc in [false, true] {
+        let spec = OpSpec::Sort { col: "timestamp".into(), desc };
+        assert_equiv(&rt, &spec, &batch, None);
+    }
+}
+
+#[test]
+fn empty_batches_pass_through_both_paths() {
+    let rt = runtime();
+    let batch = lr_batch(11, 1).slice(0, 0);
+    let spec = OpSpec::Filter { col: "speed".into(), pred: Predicate::Ge(0.0) };
+    assert_equiv(&rt, &spec, &batch, None);
+}

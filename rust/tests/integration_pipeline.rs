@@ -1,0 +1,191 @@
+//! Integration tests over the whole simulated pipeline: driver +
+//! admission + planner + optimizer + engine + device model.
+
+use lmstream::config::{Config, Mode};
+use lmstream::coordinator::driver;
+use lmstream::source::traffic::Traffic;
+use lmstream::workloads;
+use std::time::Duration;
+
+fn run(mode: Mode, workload: &str, secs: u64, seed: u64) -> driver::RunResult {
+    let w = workloads::by_name(workload).unwrap();
+    let cfg = Config { mode, seed, ..Config::default() };
+    driver::run(&w, &cfg, Duration::from_secs(secs), None).unwrap()
+}
+
+#[test]
+fn dataset_conservation_across_batches() {
+    // Every ingested dataset that was admitted appears in exactly one
+    // batch; ids are strictly increasing across the run.
+    let r = run(Mode::LmStream, "lr1s", 120, 3);
+    let total: usize = r.batches.iter().map(|b| b.num_datasets).sum();
+    // Constant traffic: 1 dataset/s for 120 s; the tail may still be
+    // buffered when the run ends.
+    assert!(total <= 120, "{total} datasets in batches");
+    assert!(total >= 100, "only {total} of ~120 datasets processed");
+}
+
+#[test]
+fn latencies_consistent_with_records() {
+    let r = run(Mode::LmStream, "cm2s", 120, 4);
+    // Per-dataset latency count matches the dataset totals.
+    let total: usize = r.batches.iter().map(|b| b.num_datasets).sum();
+    assert_eq!(r.dataset_latencies.len(), total);
+    // Eq. 5: every batch's max latency >= its proc time.
+    for b in &r.batches {
+        assert!(b.max_latency >= b.proc, "batch {}: maxlat < proc", b.index);
+        assert_eq!(b.max_latency, b.max_buffering + b.proc);
+    }
+}
+
+#[test]
+fn throughput_matches_bytes_over_proc() {
+    let r = run(Mode::Baseline, "lr2s", 180, 5);
+    let bytes: f64 = r.batches.iter().map(|b| b.bytes as f64).sum();
+    let proc: f64 = r.batches.iter().map(|b| b.proc.as_secs_f64()).sum();
+    let eq4 = bytes / proc;
+    assert!(
+        (r.avg_throughput - eq4).abs() / eq4 < 1e-9,
+        "Eq.4 mismatch: {} vs {eq4}",
+        r.avg_throughput
+    );
+}
+
+#[test]
+fn identical_seeds_identical_runs() {
+    let a = run(Mode::LmStream, "cm1s", 90, 42);
+    let b = run(Mode::LmStream, "cm1s", 90, 42);
+    assert_eq!(a.batches.len(), b.batches.len());
+    for (x, y) in a.batches.iter().zip(&b.batches) {
+        assert_eq!(x.bytes, y.bytes);
+        assert_eq!(x.num_datasets, y.num_datasets);
+        assert_eq!(x.proc, y.proc);
+    }
+}
+
+#[test]
+fn different_seeds_differ_under_random_traffic() {
+    let w = workloads::by_name("lr1s").unwrap().with_traffic(Traffic::random_default());
+    let mk = |seed| {
+        let cfg = Config { mode: Mode::LmStream, seed, ..Config::default() };
+        driver::run(&w, &cfg, Duration::from_secs(90), None).unwrap()
+    };
+    let a = mk(1);
+    let b = mk(2);
+    let a_bytes: Vec<usize> = a.batches.iter().map(|x| x.bytes).collect();
+    let b_bytes: Vec<usize> = b.batches.iter().map(|x| x.bytes).collect();
+    assert_ne!(a_bytes, b_bytes);
+}
+
+#[test]
+fn sliding_window_latency_tracks_slide_bound() {
+    // LR1S slide is 5 s: LMStream max latency per batch should hover near
+    // (not wildly above) the bound once converged.
+    let r = run(Mode::LmStream, "lr1s", 300, 6);
+    let tail = &r.batches[r.batches.len() / 2..];
+    let avg_maxlat: f64 =
+        tail.iter().map(|b| b.max_latency.as_secs_f64()).sum::<f64>() / tail.len() as f64;
+    assert!(
+        (3.0..12.0).contains(&avg_maxlat),
+        "LR1S converged max latency {avg_maxlat:.2}s should sit near the 5s slide"
+    );
+}
+
+#[test]
+fn tumbling_running_average_converges() {
+    let r = run(Mode::LmStream, "cm1t", 300, 7);
+    let lats: Vec<f64> = r.batches.iter().map(|b| b.max_latency.as_secs_f64()).collect();
+    let n = lats.len();
+    assert!(n > 10);
+    let first_half = lats[..n / 2].iter().sum::<f64>() / (n / 2) as f64;
+    let second_half = lats[n / 2..].iter().sum::<f64>() / (n - n / 2) as f64;
+    // Eq. 3 keeps the running average stable: halves within 2x.
+    assert!(
+        second_half < first_half * 2.0 + 1.0,
+        "tumbling bound diverged: {first_half:.2} -> {second_half:.2}"
+    );
+}
+
+#[test]
+fn baseline_buffers_for_full_trigger() {
+    let r = run(Mode::Baseline, "cm1t", 120, 8);
+    for b in &r.batches {
+        // With a 10 s trigger and 1 dataset/s, each batch spans ~10
+        // datasets and the oldest buffered ~10 s (first batch: ~9).
+        assert!(
+            b.max_buffering >= Duration::from_secs(8),
+            "batch {} buffered only {:?}",
+            b.index,
+            b.max_buffering
+        );
+    }
+}
+
+#[test]
+fn static_preference_ignores_size_dynamic_adapts() {
+    let stat = run(Mode::StaticPreference, "cm1s", 240, 9);
+    // Static plan for CM1S (scan,shuffle,expand,agg,sort) per Table II:
+    // GPU for scan/sort/expand(neutral), CPU for shuffle/agg → 3 GPU ops
+    // in every batch.
+    for b in &stat.batches {
+        assert_eq!(b.gpu_ops, 3, "static plan must not vary");
+    }
+    let dynamic = run(Mode::LmStream, "cm1s", 240, 9);
+    let distinct: std::collections::BTreeSet<usize> =
+        dynamic.batches.iter().map(|b| b.gpu_ops).collect();
+    // Dynamic planning reacts to batch size / learned ratios: over a run
+    // it should not be pinned to the static assignment the whole time.
+    assert!(
+        distinct.len() > 1 || !distinct.contains(&3),
+        "dynamic plan never deviated from static: {distinct:?}"
+    );
+}
+
+#[test]
+fn optimizer_moves_inflection_point() {
+    let r = run(Mode::LmStream, "lr1s", 300, 10);
+    let first = r.batches.first().unwrap().inf_pt;
+    let touched = r.batches.iter().any(|b| (b.inf_pt - first).abs() > 1.0);
+    assert!(touched, "online optimizer never updated the inflection point");
+    // And it stays clamped.
+    for b in &r.batches {
+        assert!((1024.0..=64.0 * 1024.0 * 1024.0).contains(&b.inf_pt));
+    }
+}
+
+#[test]
+fn phase_totals_cover_all_batches() {
+    let r = run(Mode::LmStream, "lr2s", 120, 11);
+    let phases = r.phases;
+    let proc_sum: f64 = r.batches.iter().map(|b| b.proc.as_secs_f64()).sum();
+    assert!((phases.processing.as_secs_f64() - proc_sum).abs() < 1e-6);
+    // Mechanism overhead (construct+map+optblock) is far below processing.
+    let mech = phases.construct + phases.map_device + phases.opt_blocking;
+    assert!(
+        mech.as_secs_f64() < 0.05 * phases.processing.as_secs_f64() + 0.5,
+        "mechanisms {mech:?} vs processing {:?}",
+        phases.processing
+    );
+}
+
+#[test]
+fn all_gpu_and_all_cpu_ablations_run() {
+    let gpu = run(Mode::AllGpu, "lr1s", 90, 12);
+    let cpu = run(Mode::AllCpu, "lr1s", 90, 12);
+    assert!(!gpu.batches.is_empty() && !cpu.batches.is_empty());
+    for b in &gpu.batches {
+        assert_eq!(b.gpu_ops, b.total_ops);
+    }
+    for b in &cpu.batches {
+        assert_eq!(b.gpu_ops, 0);
+    }
+}
+
+#[test]
+fn empty_traffic_produces_no_batches() {
+    let w = workloads::by_name("lr1s").unwrap().with_traffic(Traffic::Constant { rows: 0 });
+    let cfg = Config { mode: Mode::LmStream, ..Config::default() };
+    let r = driver::run(&w, &cfg, Duration::from_secs(30), None).unwrap();
+    assert!(r.batches.is_empty());
+    assert_eq!(r.avg_throughput, 0.0);
+}

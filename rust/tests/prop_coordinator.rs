@@ -1,0 +1,235 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state) using the in-repo prop kit (DESIGN.md: proptest substitute).
+
+use lmstream::coordinator::admission::{Admission, AdmissionDecision};
+use lmstream::coordinator::planner::{map_device, SizeEstimator};
+use lmstream::devices::Device;
+use lmstream::engine::column::{Column, ColumnBatch, Field, Schema};
+use lmstream::engine::dataset::Dataset;
+use lmstream::engine::partition;
+use lmstream::engine::window::WindowSpec;
+use lmstream::engine::ops::filter::Predicate;
+use lmstream::query::builder::QueryBuilder;
+use lmstream::sim::Time;
+use lmstream::util::prop::{prop_assert, Gen, Runner};
+use std::time::Duration;
+
+fn dataset(id: u64, t: f64, rows: usize) -> Dataset {
+    let schema = Schema::new(vec![Field::f32("x")]);
+    let batch =
+        ColumnBatch::new(schema, vec![Column::F32(vec![t as f32; rows.max(1)])]).unwrap();
+    let bytes = batch.bytes();
+    Dataset {
+        id,
+        created_at: Time::from_secs_f64(t),
+        event_time: Time::from_secs_f64(t),
+        batch,
+        wire_bytes: bytes,
+    }
+}
+
+fn random_datasets(g: &mut Gen, n: usize) -> Vec<Dataset> {
+    (0..n)
+        .map(|i| {
+            let t = g.f64_in(0.0, 30.0);
+            let rows = g.usize_in(1..2000);
+            dataset(i as u64, t, rows)
+        })
+        .collect()
+}
+
+/// Admission never loses or duplicates datasets: everything fed in is
+/// either admitted or still buffered.
+#[test]
+fn prop_admission_conserves_datasets() {
+    let mut r = Runner::new(0xadA11, 150);
+    r.run("admission conserves datasets", |g| {
+        let slide = g.usize_in(1..10) as u64;
+        let mut adm = Admission::new(
+            WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(slide)),
+            Duration::from_secs(1),
+        );
+        let rounds = g.usize_in(1..8);
+        let mut fed = 0usize;
+        let mut admitted = 0usize;
+        let mut now = 0.0f64;
+        for _ in 0..rounds {
+            now += g.f64_in(0.0, 10.0);
+            let n = g.usize_in(0..6);
+            let data = random_datasets(g, n);
+            fed += n;
+            let thput = g.f64_in(1.0, 1e7);
+            match adm.construct(data, Time::from_secs_f64(now + 31.0), thput, None) {
+                AdmissionDecision::Admit(mb) => admitted += mb.num_datasets(),
+                AdmissionDecision::Buffer { .. } | AdmissionDecision::Poll => {}
+            }
+        }
+        prop_assert(
+            admitted + adm.buffered_datasets() == fed,
+            format!(
+                "fed {fed}, admitted {admitted}, buffered {}",
+                adm.buffered_datasets()
+            ),
+        )
+    });
+}
+
+/// Admitted micro-batches are sorted by creation time (Alg. 1 line 5).
+#[test]
+fn prop_admitted_batches_creation_ordered() {
+    let mut r = Runner::new(0xadA12, 150);
+    r.run("admitted batches creation-ordered", |g| {
+        let mut adm = Admission::new(
+            WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(1)),
+            Duration::from_secs(1),
+        );
+        let n = g.usize_in(2..20);
+        let data = random_datasets(g, n);
+        // Far-future "now" with tiny throughput forces admission.
+        match adm.construct(data, Time::from_secs_f64(1000.0), 1.0, None) {
+            AdmissionDecision::Admit(mb) => {
+                let sorted = mb
+                    .datasets
+                    .windows(2)
+                    .all(|w| w[0].created_at <= w[1].created_at);
+                prop_assert(sorted, "datasets out of creation order")
+            }
+            other => prop_assert(false, format!("expected admit, got {other:?}")),
+        }
+    });
+}
+
+/// Eq. 6 estimate is monotone in polling time and in batch size.
+#[test]
+fn prop_estimate_monotone() {
+    let mut r = Runner::new(0xadA13, 200);
+    r.run("Eq.6 estimate monotone", |g| {
+        use lmstream::engine::dataset::MicroBatch;
+        let n = g.usize_in(1..5);
+        let mb_small = MicroBatch::new(random_datasets(g, n));
+        let mut bigger = mb_small.clone();
+        bigger.absorb(MicroBatch::new(vec![dataset(99, 0.0, 5000)]));
+        let thput = g.f64_in(100.0, 1e6);
+        let t1 = Time::from_secs_f64(40.0);
+        let t2 = Time::from_secs_f64(40.0 + g.f64_in(0.1, 50.0));
+        let e_t1 = Admission::estimate_max_latency(&mb_small, t1, thput);
+        let e_t2 = Admission::estimate_max_latency(&mb_small, t2, thput);
+        prop_assert(e_t2 >= e_t1, format!("time monotonicity {e_t1:?} > {e_t2:?}"))?;
+        let e_small = Admission::estimate_max_latency(&mb_small, t1, thput);
+        let e_big = Admission::estimate_max_latency(&bigger, t1, thput);
+        prop_assert(
+            e_big >= e_small,
+            format!("size monotonicity {e_small:?} > {e_big:?}"),
+        )
+    });
+}
+
+fn spj_query() -> lmstream::query::Query {
+    QueryBuilder::scan("prop")
+        .window(WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5)))
+        .filter("key", Predicate::Ge(0.0))
+        .project_affine("a", "b", 1.0, 1.0, "ab")
+        .join_window("jk", "jk")
+        .sort("ab", false)
+        .build()
+        .unwrap()
+}
+
+/// MapDevice always returns a full assignment, is deterministic, and is
+/// monotone: growing the partition never moves an op GPU -> CPU.
+#[test]
+fn prop_planner_total_deterministic_monotone() {
+    let mut r = Runner::new(0x9140, 250);
+    let q = spj_query();
+    r.run("planner total/deterministic/monotone", |g| {
+        let est = SizeEstimator::new(q.len());
+        let inf = g.f64_in(1024.0, 4.0 * 1024.0 * 1024.0);
+        let part = g.f64_in(128.0, 8.0 * 1024.0 * 1024.0);
+        let trans = g.f64_in(0.0, 1.0);
+        let p1 = map_device(&q, part, inf, trans, &est);
+        let p2 = map_device(&q, part, inf, trans, &est);
+        prop_assert(p1 == p2, "non-deterministic plan")?;
+        prop_assert(p1.per_op.len() == q.len(), "partial assignment")?;
+        let p_big = map_device(&q, part * 4.0, inf, trans, &est);
+        prop_assert(
+            p_big.gpu_ops() >= p1.gpu_ops(),
+            format!("bigger partition lost GPU ops: {:?} -> {:?}", p1, p_big),
+        )
+    });
+}
+
+/// Extremes: partitions far below/above the inflection point map all-CPU
+/// / all-GPU respectively, whatever the transition cost.
+#[test]
+fn prop_planner_extremes() {
+    let mut r = Runner::new(0x9141, 200);
+    let q = spj_query();
+    r.run("planner extremes", |g| {
+        let est = SizeEstimator::new(q.len());
+        let inf = g.f64_in(64.0 * 1024.0, 1024.0 * 1024.0);
+        let trans = g.f64_in(0.0, 0.5);
+        let tiny = map_device(&q, inf / 1000.0, inf, trans, &est);
+        prop_assert(
+            tiny.per_op.iter().all(|d| *d == Device::Cpu),
+            format!("tiny partitions must be all-CPU: {tiny:?}"),
+        )?;
+        let huge = map_device(&q, inf * 1000.0, inf, trans, &est);
+        prop_assert(
+            huge.per_op.iter().all(|d| *d == Device::Gpu),
+            format!("huge partitions must be all-GPU: {huge:?}"),
+        )
+    });
+}
+
+/// Partitioning covers every row exactly once with near-equal sizes.
+#[test]
+fn prop_partition_coverage() {
+    let mut r = Runner::new(0x9a47, 200);
+    r.run("partition coverage", |g| {
+        let rows = g.usize_in(0..5000);
+        let n = g.usize_in(1..64);
+        let schema = Schema::new(vec![Field::f32("x")]);
+        let batch = ColumnBatch::new(
+            schema,
+            vec![Column::F32((0..rows).map(|i| i as f32).collect())],
+        )
+        .unwrap();
+        let parts = partition::split(&batch, rows * 65, n);
+        let total: usize = parts.iter().map(|p| p.batch.rows()).sum();
+        prop_assert(total == rows, format!("covered {total} of {rows}"))?;
+        let sizes: Vec<usize> = parts.iter().map(|p| p.batch.rows()).collect();
+        let min = sizes.iter().min().unwrap();
+        let max = sizes.iter().max().unwrap();
+        prop_assert(max - min <= 1, format!("imbalanced {sizes:?}"))
+    });
+}
+
+/// Window eviction keeps exactly the datasets within range, regardless of
+/// push/evict interleaving.
+#[test]
+fn prop_window_eviction_exact() {
+    let mut r = Runner::new(0x3139, 200);
+    r.run("window eviction exact", |g| {
+        use lmstream::engine::window::WindowState;
+        let range_s = g.usize_in(5..60) as u64;
+        let spec =
+            WindowSpec::sliding(Duration::from_secs(range_s), Duration::from_secs(1));
+        let mut w = WindowState::new();
+        let n = g.usize_in(1..40);
+        let mut times = Vec::new();
+        let mut t = 0.0;
+        for i in 0..n {
+            t += g.f64_in(0.0, 5.0);
+            times.push(t);
+            w.push(&[dataset(i as u64, t, 3)]);
+        }
+        let now = t + g.f64_in(0.0, 20.0);
+        w.evict(Time::from_secs_f64(now), &spec);
+        let horizon = now - range_s as f64;
+        let expected = times.iter().filter(|&&et| et >= horizon).count();
+        prop_assert(
+            w.len() == expected,
+            format!("kept {} expected {expected} (horizon {horizon:.2})", w.len()),
+        )
+    });
+}
