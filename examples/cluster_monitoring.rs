@@ -7,6 +7,8 @@
 //! ```
 
 use lmstream::config::{Config, Mode};
+// `driver::run` is the single-query shim over `session::Session` —
+// exactly what these one-workload-at-a-time comparisons need.
 use lmstream::coordinator::driver;
 use lmstream::source::traffic::Traffic;
 use lmstream::util::bench::print_table;

@@ -12,6 +12,8 @@
 //! ```
 
 use lmstream::config::{Config, Mode};
+// `driver::run` is the single-query shim over `session::Session` —
+// exactly what these one-workload-at-a-time comparisons need.
 use lmstream::coordinator::driver;
 use lmstream::util::bench::print_table;
 use lmstream::util::stats::percentile;

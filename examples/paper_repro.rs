@@ -17,6 +17,8 @@
 //! ```
 
 use lmstream::config::{Config, ExecBackend, Mode};
+// `driver::run` is the single-query shim over `session::Session` —
+// exactly what these one-workload-at-a-time comparisons need.
 use lmstream::coordinator::driver;
 use lmstream::runtime::client::Runtime;
 use lmstream::util::bench::print_table;

@@ -11,6 +11,7 @@ use lmstream::engine::ops::aggregate::AggSpec;
 use lmstream::engine::ops::filter::Predicate;
 use lmstream::engine::window::WindowSpec;
 use lmstream::query::QueryBuilder;
+use lmstream::session::Session;
 use lmstream::source::traffic::Traffic;
 use lmstream::workloads::{linear_road, Workload};
 use std::time::Duration;
@@ -36,10 +37,16 @@ fn main() -> lmstream::Result<()> {
         Box::new(linear_road::LinearRoadGen::new(seed))
     });
 
-    // 3. Run under the LMStream coordinator (dynamic batching + dynamic
-    //    device planning + online optimizer) on the simulated cluster.
+    // 3. Register it on a Session — the session owns the shared
+    //    coordinator state (device model, online optimizer, config) and
+    //    can multiplex further queries over the same source (see
+    //    examples/multi_query.rs) — and run under the LMStream
+    //    coordinator (dynamic batching + dynamic device planning +
+    //    online optimizer) on the simulated cluster.
     let cfg = Config { mode: Mode::LmStream, ..Config::default() };
-    let result = driver::run(&workload, &cfg, Duration::from_secs(120), None)?;
+    let mut session = Session::new(cfg)?;
+    session.register(workload.clone())?;
+    let result = session.run(Duration::from_secs(120))?.remove(0);
 
     println!("quickstart: {} micro-batches in 2 simulated minutes", result.batches.len());
     println!("  avg end-to-end latency : {:.3} s", result.avg_latency);
@@ -52,7 +59,8 @@ fn main() -> lmstream::Result<()> {
     );
 
     // 4. The same workload under the throughput-oriented baseline, for
-    //    contrast (static 10 s trigger, all-GPU).
+    //    contrast (static 10 s trigger, all-GPU) — via the single-query
+    //    `driver::run` shim this time, which builds a one-shot session.
     let bl_cfg = Config { mode: Mode::Baseline, ..Config::default() };
     let bl = driver::run(&workload, &bl_cfg, Duration::from_secs(120), None)?;
     println!(

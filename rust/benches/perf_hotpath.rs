@@ -48,7 +48,7 @@ fn main() {
     // MapDevice planning (runs once per batch).
     let est = SizeEstimator::new(q.len());
     b.bench("alg2 map_device (LR1S dag)", || {
-        map_device(&q, 64.0 * 1024.0, 150.0 * 1024.0, 0.1, &est)
+        map_device(&q, 64.0 * 1024.0, 150.0 * 1024.0, 0.1, &est).expect("plan")
     });
 
     // Eq. 10 fit over a long history (background thread work).

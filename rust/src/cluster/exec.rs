@@ -10,7 +10,8 @@ use crate::devices::model::DeviceModel;
 use crate::engine::column::ColumnBatch;
 use crate::error::Result;
 use crate::query::dag::{OpKind, Query};
-use crate::query::exec::{self, DevicePlan, ExecEnv, ExecOutcome};
+use crate::query::exec::{self, ExecEnv, ExecOutcome};
+use crate::query::physical::PhysicalPlan;
 use crate::runtime::client::Runtime;
 use std::time::Duration;
 
@@ -39,7 +40,7 @@ pub struct ClusterOutcome {
 pub fn execute_on_cluster(
     cluster: &ClusterSpec,
     query: &Query,
-    plan: &DevicePlan,
+    plan: &PhysicalPlan,
     input: ColumnBatch,
     window: Option<&ColumnBatch>,
     model: &DeviceModel,
@@ -129,7 +130,7 @@ mod tests {
 
     fn run(cluster: &ClusterSpec, rows: usize) -> ClusterOutcome {
         let q = query();
-        let plan = DevicePlan::all(Device::Cpu, q.len());
+        let plan = PhysicalPlan::uniform(&q, Device::Cpu);
         let model = DeviceModel::default();
         execute_on_cluster(
             cluster,
@@ -189,7 +190,7 @@ mod tests {
             .join_window("vehicle", "vehicle")
             .build()
             .unwrap();
-        let plan = DevicePlan::all(Device::Cpu, q.len());
+        let plan = PhysicalPlan::uniform(&q, Device::Cpu);
         let model = DeviceModel::default();
         let window = input(2000);
         let single = execute_on_cluster(

@@ -80,10 +80,26 @@ impl Admission {
     ///   `None` before the first batch completes.
     pub fn construct(
         &mut self,
-        mut new_data: Vec<Dataset>,
+        new_data: Vec<Dataset>,
         now: Time,
         avg_thput: f64,
         past_max_lat_avg: Option<Duration>,
+    ) -> AdmissionDecision {
+        let bound = self.bound(past_max_lat_avg);
+        self.construct_with_bound(new_data, now, avg_thput, bound)
+    }
+
+    /// `ConstructMicroBatch()` against an explicit latency bound. A
+    /// [`crate::session::Session`] multiplexing several queries over one
+    /// source admits against the *tightest* bound across those queries;
+    /// single-query callers use [`Admission::construct`], which derives
+    /// the bound from this admission's own window (Eq. 2/3).
+    pub fn construct_with_bound(
+        &mut self,
+        mut new_data: Vec<Dataset>,
+        now: Time,
+        avg_thput: f64,
+        bound: Duration,
     ) -> AdmissionDecision {
         if new_data.is_empty() && self.buffered.is_empty() {
             return AdmissionDecision::Poll; // line 2-3: keep polling
@@ -94,7 +110,6 @@ impl Admission {
         tmp.absorb(MicroBatch::new(new_data));
 
         let est = Self::estimate_max_latency(&tmp, now, avg_thput);
-        let bound = self.bound(past_max_lat_avg);
 
         if est >= bound {
             // Lines 9-11 / 13-15: process immediately, clear buffer.
@@ -196,6 +211,20 @@ mod tests {
             }
             other => panic!("expected admit, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn explicit_bound_overrides_window_rule() {
+        let mut a = sliding(5);
+        // A co-registered query tightens the shared bound to 1 s: data
+        // buffered 2 s admits even though the slide bound is 5 s.
+        let d = a.construct_with_bound(
+            vec![ds(0, 0.0, 10)],
+            Time::from_secs_f64(2.0),
+            1e9,
+            Duration::from_secs(1),
+        );
+        assert!(matches!(d, AdmissionDecision::Admit(_)));
     }
 
     #[test]

@@ -1,78 +1,44 @@
-//! The micro-batch main loop (Fig. 3's execution flow).
+//! Single-query compatibility shims over [`crate::session::Session`].
 //!
-//! One iteration: poll the source → `ConstructMicroBatch` admission (or
-//! the baseline's static trigger) → collect the async optimizer's latest
-//! inflection point → `MapDevice` planning (or a baseline policy) →
-//! partitioned execution → metrics update → window-state maintenance →
-//! submit the optimizer's next fit. Identical code drives the simulated
-//! clock (paper-scale experiments) and the wall clock (real PJRT runs).
+//! The micro-batch main loop (Fig. 3's execution flow) lives in
+//! [`crate::session`]: a `Session` owns the shared coordinator state and
+//! multiplexes any number of registered queries per loop iteration. The
+//! free functions here are **deprecated thin wrappers** kept so the
+//! figure benches, tests and existing examples — all single-query —
+//! keep working unchanged: each call builds a one-shot session,
+//! registers the workload, and runs it.
+//!
+//! New code should construct a [`Session`] directly:
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the xla rpath in this offline image
+//! use lmstream::config::Config;
+//! use lmstream::session::Session;
+//! use lmstream::workloads;
+//! use std::time::Duration;
+//!
+//! # fn main() -> lmstream::Result<()> {
+//! let mut session = Session::new(Config::default())?;
+//! session.register(workloads::by_name("lr1s")?)?;
+//! let results = session.run(Duration::from_secs(120))?;
+//! # Ok(())
+//! # }
+//! ```
 
-use crate::cluster;
-use crate::config::{Config, ExecBackend, Mode};
-use crate::coordinator::admission::{Admission, AdmissionDecision};
-use crate::coordinator::checkpoint::{Checkpoint, CheckpointStore};
-use crate::coordinator::metrics::{BatchRecord, Metrics, PhaseTotals};
-use crate::coordinator::optimizer::{HistoryPoint, OnlineOptimizer};
-use crate::coordinator::planner::{map_device, static_preference_plan, SizeEstimator};
-use crate::devices::model::DeviceModel;
-use crate::devices::Device;
-use crate::engine::column::ColumnBatch;
-use crate::engine::dataset::MicroBatch;
-use crate::engine::partition::mean_partition_bytes;
+use crate::config::Config;
 use crate::engine::sink::{NullSink, Sink};
-use crate::engine::window::WindowState;
 use crate::error::Result;
-use crate::query::dag::OpKind;
-use crate::query::exec::{self, DevicePlan, ExecEnv, OpTrace};
 use crate::runtime::client::Runtime;
-use crate::sim::{Clock, SimClock, Time, WallClock};
+use crate::session::Session;
 use crate::workloads::Workload;
-use std::path::Path;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-/// Everything a finished run reports.
-#[derive(Debug)]
-pub struct RunResult {
-    pub workload: &'static str,
-    pub mode: Mode,
-    pub batches: Vec<BatchRecord>,
-    /// Mean per-dataset end-to-end latency, seconds (Fig. 6 metric).
-    pub avg_latency: f64,
-    /// Eq. 4 average throughput, bytes/s (Fig. 7 metric).
-    pub avg_throughput: f64,
-    /// Table IV phase totals.
-    pub phases: PhaseTotals,
-    /// Per-dataset latencies (distribution analysis).
-    pub dataset_latencies: Vec<f64>,
-    /// Final inflection point (bytes).
-    pub final_inf_pt: f64,
-}
-
-impl RunResult {
-    /// Mean processing-phase time per micro-batch (Fig. 10 metric), s.
-    pub fn avg_proc(&self) -> f64 {
-        if self.batches.is_empty() {
-            return 0.0;
-        }
-        self.batches.iter().map(|b| b.proc.as_secs_f64()).sum::<f64>()
-            / self.batches.len() as f64
-    }
-
-    /// Mean per-batch max latency, s.
-    pub fn avg_max_latency(&self) -> f64 {
-        if self.batches.is_empty() {
-            return 0.0;
-        }
-        self.batches
-            .iter()
-            .map(|b| b.max_latency.as_secs_f64())
-            .sum::<f64>()
-            / self.batches.len() as f64
-    }
-}
+pub use crate::session::RunResult;
 
 /// Run `workload` under `cfg` for `duration` (simulated or wall time).
 /// `runtime` is required only for the Real backend.
+///
+/// Deprecated shim: prefer [`Session::register`] + [`Session::run`].
 pub fn run(
     workload: &Workload,
     cfg: &Config,
@@ -83,6 +49,9 @@ pub fn run(
 }
 
 /// Run with results delivered to `sink` (the output stream).
+///
+/// Deprecated shim: prefer [`Session::register`] +
+/// [`Session::run_with_sink`].
 pub fn run_with_sink(
     workload: &Workload,
     cfg: &Config,
@@ -90,273 +59,16 @@ pub fn run_with_sink(
     runtime: Option<&Runtime>,
     sink: &mut dyn Sink,
 ) -> Result<RunResult> {
-    cfg.validate()?;
-    let clock: Box<dyn Clock> = match cfg.backend {
-        ExecBackend::Simulated => Box::new(SimClock::new()),
-        ExecBackend::Real => Box::new(WallClock::new()),
-    };
-    run_with_clock(workload, cfg, duration, runtime, clock.as_ref(), sink)
-}
-
-/// Tumbling-window bootstrap bound before any history exists (§III-C's
-/// Eq. 3 is undefined for i < 2; the paper seeds parameters from
-/// pre-experiments — one second is our seed).
-const INITIAL_TUMBLING_BOUND: Duration = Duration::from_secs(3);
-
-/// Optimizer pickup timeout: how long the driver will wait on the async
-/// regression before planning (bounds Table IV's "Optimization Blocking").
-const OPT_PICKUP_TIMEOUT: Duration = Duration::from_millis(20);
-
-fn run_with_clock(
-    workload: &Workload,
-    cfg: &Config,
-    duration: Duration,
-    runtime: Option<&Runtime>,
-    clock: &dyn Clock,
-    sink: &mut dyn Sink,
-) -> Result<RunResult> {
-    // Logical plan rewrites (projection pushdown into joins, §Perf).
-    let query = &crate::query::optimize::optimize(&workload.query);
-    query.validate()?;
-    let model = DeviceModel::default();
-    let env = ExecEnv {
-        model: &model,
-        backend: cfg.backend,
-        num_cores: cfg.num_cores,
-        num_gpus: cfg.num_gpus,
-        runtime,
-    };
-    // §III-E checkpoint/state-flush substrate.
-    let ckpt_store = match &cfg.checkpoint_dir {
-        Some(dir) => Some(CheckpointStore::new(Path::new(dir))?),
-        None => None,
-    };
-    let recovered: Option<Checkpoint> = match &ckpt_store {
-        Some(st) => st.load(workload.name)?,
-        None => None,
-    };
-
-    let mut stream = workload.make_stream(cfg.seed);
-    let mut window = WindowState::new();
-    let mut admission = Admission::new(query.window, INITIAL_TUMBLING_BOUND);
-    let mut metrics = Metrics::new();
-    let mut optimizer =
-        OnlineOptimizer::new(cfg.online_optimizer && cfg.mode == Mode::LmStream,
-                             cfg.history_cap, cfg.seed);
-    let mut size_est = SizeEstimator::new(query.len());
-    let mut inf_pt = cfg.initial_inflection_bytes;
-    // Resume from a checkpoint: restore the inflection point + optimizer
-    // history and skip the already-processed stream prefix.
-    if let Some(ckpt) = &recovered {
-        inf_pt = ckpt.inf_pt.max(1.0);
-        for h in &ckpt.history {
-            optimizer.record(*h, INITIAL_TUMBLING_BOUND);
-        }
-        stream.fast_forward(ckpt.processed_up_to); // skip processed prefix
-    }
-    let end = Time::ZERO.add(duration);
-    let mut next_trigger = Time::ZERO.add(cfg.trigger);
-    let mut construct_acc = Duration::ZERO;
-
-    let has_join = query
-        .ops
-        .iter()
-        .any(|o| matches!(o.spec.kind(), OpKind::Join));
-
-    while clock.now() < end {
-        // ---- Buffering phase: trigger (baseline) or admission (LMStream).
-        let batch: MicroBatch = if cfg.mode.uses_trigger() {
-            clock.sleep_until(next_trigger);
-            if clock.now() >= end {
-                break;
-            }
-            let data = stream.poll(clock.now());
-            next_trigger = next_trigger.add(cfg.trigger);
-            if data.is_empty() {
-                continue;
-            }
-            MicroBatch::new(data)
-        } else {
-            let deadline = clock.now().add(cfg.poll_interval);
-            clock.sleep_until(deadline);
-            if clock.now() >= end {
-                break;
-            }
-            let t0 = Instant::now();
-            let data = stream.poll(clock.now());
-            let thput = {
-                let t = metrics.avg_throughput();
-                if t > 0.0 { t } else { cfg.initial_throughput }
-            };
-            let decision =
-                admission.construct(data, clock.now(), thput, metrics.past_max_lat_avg());
-            construct_acc += t0.elapsed();
-            match decision {
-                AdmissionDecision::Poll | AdmissionDecision::Buffer { .. } => continue,
-                AdmissionDecision::Admit(mb) => mb,
-            }
-        };
-
-        let admitted_at = clock.now();
-        let batch_bytes = batch.wire_bytes();
-
-        // ---- Optimizer pickup (must land before the processing phase).
-        let (new_inf, opt_blocking) = if cfg.mode == Mode::LmStream {
-            optimizer.take(inf_pt, OPT_PICKUP_TIMEOUT)
-        } else {
-            (inf_pt, Duration::ZERO)
-        };
-        inf_pt = new_inf;
-
-        // ---- Window maintenance + execution input assembly.
-        if let Some(newest) = batch.newest_event_time() {
-            window.evict(newest, &query.window);
-        }
-        let snapshot = window.snapshot()?;
-        let input: ColumnBatch = if query.uses_window_state && !has_join {
-            // Windowed aggregation recomputes over state ∪ new data.
-            match &snapshot {
-                Some(s) => ColumnBatch::concat(&[s, &batch.concat()?])?,
-                None => batch.concat()?,
-            }
-        } else {
-            batch.concat()?
-        };
-
-        // ---- Query planning (MapDevice or a fixed policy).
-        let t_plan = Instant::now();
-        let plan: DevicePlan = match cfg.mode {
-            Mode::LmStream => {
-                // Part_(i,j): partition share of the data the processing
-                // phase actually touches (window scope included).
-                let part = mean_partition_bytes(input.bytes(), cfg.num_cores);
-                map_device(query, part, inf_pt, cfg.base_trans_cost, &size_est)
-            }
-            Mode::Baseline | Mode::AllGpu => DevicePlan::all(Device::Gpu, query.len()),
-            Mode::BaselineCpu | Mode::AllCpu => DevicePlan::all(Device::Cpu, query.len()),
-            Mode::StaticPreference => static_preference_plan(query),
-        };
-        let map_device_time = t_plan.elapsed();
-        // A join's build side before any state exists is an empty window.
-        let empty_window = ColumnBatch::empty(input.schema.clone());
-        let join_side = if has_join {
-            Some(snapshot.as_ref().unwrap_or(&empty_window))
-        } else {
-            None
-        };
-
-        // ---- Processing phase (single executor or cluster-wide).
-        let (result, proc, traces): (ColumnBatch, Duration, Vec<OpTrace>) =
-            match &cfg.cluster {
-                None => {
-                    let o = exec::execute(query, &plan, input, join_side, &env)?;
-                    (o.result, o.proc, o.traces)
-                }
-                Some(spec) => {
-                    let o = cluster::execute_on_cluster(
-                        spec, query, &plan, input, join_side, &model, cfg.backend,
-                        runtime,
-                    )?;
-                    // Merge per-executor traces (sum byte volumes per op)
-                    // for the size estimator.
-                    let mut merged: Vec<OpTrace> = o.per_executor[0].traces.clone();
-                    for ex in &o.per_executor[1..] {
-                        for (m, t) in merged.iter_mut().zip(&ex.traces) {
-                            m.in_bytes += t.in_bytes;
-                            m.out_bytes += t.out_bytes;
-                        }
-                    }
-                    (o.result, o.proc, merged)
-                }
-            };
-        clock.advance(proc + map_device_time + construct_acc + opt_blocking);
-        sink.deliver(metrics.batches(), &result, clock.now())?;
-
-        // ---- Metrics (Eqs. 4/5, Table IV).
-        let buffs: Vec<Duration> = batch
-            .datasets
-            .iter()
-            .map(|d| admitted_at.saturating_sub(d.created_at))
-            .collect();
-        let rec = BatchRecord {
-            index: metrics.batches(),
-            admitted_at,
-            num_datasets: batch.num_datasets(),
-            bytes: batch_bytes,
-            max_buffering: Duration::ZERO, // filled by Metrics::record
-            proc,
-            max_latency: Duration::ZERO, // filled by Metrics::record
-            inf_pt,
-            gpu_ops: plan.gpu_ops(),
-            total_ops: query.len(),
-            construct_time: construct_acc,
-            map_device_time,
-            opt_blocking,
-        };
-        construct_acc = Duration::ZERO;
-        metrics.record(rec, &buffs);
-        size_est.observe(&traces);
-
-        // ---- Async parameter optimization (Eq. 10 inputs).
-        if cfg.mode == Mode::LmStream {
-            let last = metrics.records().last().expect("just recorded");
-            optimizer.record(
-                HistoryPoint {
-                    throughput: metrics.avg_throughput(),
-                    max_latency: last.max_latency.as_secs_f64(),
-                    inf_pt,
-                },
-                admission.bound(metrics.past_max_lat_avg()),
-            );
-        }
-
-        // ---- Window state ingests the processed datasets.
-        if query.uses_window_state {
-            window.push(&batch.datasets);
-        }
-
-        // ---- §III-E checkpoint / state flush (overlapped with the async
-        // optimizer in the paper; sequential here, the cost is µs-scale).
-        if let Some(st) = &ckpt_store {
-            let newest = batch
-                .datasets
-                .iter()
-                .map(|d| d.created_at)
-                .max()
-                .unwrap_or(admitted_at);
-            st.save(&Checkpoint {
-                workload: workload.name.to_string(),
-                batches: metrics.batches(),
-                processed_up_to: newest,
-                inf_pt,
-                cumulative_bytes: metrics.cumulative_bytes(),
-                cumulative_proc_secs: metrics.cumulative_proc_secs(),
-                max_lat_sum_secs: metrics.max_lat_sum_secs(),
-                history: optimizer.history().to_vec(),
-            })?;
-        }
-
-        // Baseline trigger catches up if processing overran the interval.
-        if cfg.mode.uses_trigger() && next_trigger < clock.now() {
-            next_trigger = clock.now();
-        }
-    }
-
-    Ok(RunResult {
-        workload: workload.name,
-        mode: cfg.mode,
-        avg_latency: metrics.avg_dataset_latency(),
-        avg_throughput: metrics.avg_throughput(),
-        phases: metrics.phase_totals(),
-        dataset_latencies: metrics.dataset_latencies().to_vec(),
-        final_inf_pt: inf_pt,
-        batches: metrics.records().to_vec(),
-    })
+    let mut session = Session::with_runtime_ref(cfg.clone(), runtime)?;
+    let id = session.register(workload.clone())?;
+    let mut results = session.run_with_sink(duration, id, sink)?;
+    Ok(results.remove(0))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Mode;
     use crate::workloads;
 
     fn short_run(mode: Mode, workload: &str, secs: u64) -> RunResult {

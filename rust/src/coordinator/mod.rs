@@ -8,8 +8,9 @@
 //!   point (Eq. 10),
 //! * [`metrics`] — Eqs. 4/5 bookkeeping, per-dataset latency, Table IV
 //!   phase accounting,
-//! * [`driver`] — the micro-batch main loop tying it all together, also
-//!   hosting the baseline (static trigger + all-GPU) and the
+//! * [`driver`] — single-query compatibility shims over the session
+//!   ([`crate::session::Session`]), which hosts the micro-batch main
+//!   loop, the baselines (static trigger + all-GPU) and the
 //!   static-preference comparator.
 
 pub mod admission;

@@ -15,10 +15,18 @@
 //! shrinks), the planner propagates per-operation size estimates from
 //! ratios learned on past executions ([`SizeEstimator`]) — seeded at 1.0,
 //! i.e. the paper's plain per-partition size, before any history exists.
+//!
+//! The output is a [`PhysicalPlan`] — the logical DAG annotated with one
+//! device per op plus the size estimate that drove the choice — which
+//! [`crate::query::exec`] walks. Transfer-cost placement is shared with
+//! the executor through [`transfer_boundaries`] so the planner's Eq. 9
+//! charging and the executor's PCIe charging can never diverge.
 
 use crate::devices::Device;
+use crate::error::{Error, Result};
 use crate::query::dag::{OpKind, Query};
-use crate::query::exec::{DevicePlan, OpTrace};
+use crate::query::exec::OpTrace;
+use crate::query::physical::{transfer_boundaries, PhysicalOp, PhysicalPlan};
 use crate::util::stats::Ema;
 
 /// Table II: per-operation base cost and initial device preference.
@@ -26,11 +34,11 @@ use crate::util::stats::Ema;
 pub struct BaseCost;
 
 impl BaseCost {
-    /// Base cost of Table II.
+    /// Base cost of Table II (Union is a copy-bound merge, like Expand).
     pub fn cost(kind: OpKind) -> f64 {
         match kind {
             OpKind::Aggregate | OpKind::Filter | OpKind::Shuffle => 1.0,
-            OpKind::Project | OpKind::Join | OpKind::Expand => 0.9,
+            OpKind::Project | OpKind::Join | OpKind::Expand | OpKind::Union => 0.9,
             OpKind::Scan | OpKind::Sort => 0.8,
         }
     }
@@ -39,7 +47,8 @@ impl BaseCost {
     pub fn initial_preference(kind: OpKind) -> Option<Device> {
         match kind {
             OpKind::Aggregate | OpKind::Filter | OpKind::Shuffle => Some(Device::Cpu),
-            OpKind::Project | OpKind::Join | OpKind::Expand => None, // neutral
+            // neutral
+            OpKind::Project | OpKind::Join | OpKind::Expand | OpKind::Union => None,
             OpKind::Scan | OpKind::Sort => Some(Device::Gpu),
         }
     }
@@ -81,10 +90,11 @@ impl SizeEstimator {
         }
     }
 
-    /// Estimated *processed* size for each op given the source partition
-    /// size: the larger of the op's input and its estimated output (an
-    /// amplifying join/expand is output-bound, a filter input-bound) —
-    /// the "size of the data processed by the operation" of §II-B.
+    /// Estimated *processed* size for each op of a linear chain given
+    /// the source partition size: the larger of the op's input and its
+    /// estimated output (an amplifying join/expand is output-bound, a
+    /// filter input-bound) — the "size of the data processed by the
+    /// operation" of §II-B.
     pub fn op_sizes(&self, part_bytes: f64) -> Vec<f64> {
         let mut sizes = Vec::with_capacity(self.ratios.len());
         let mut s = part_bytes;
@@ -95,31 +105,64 @@ impl SizeEstimator {
         }
         sizes
     }
+
+    /// DAG-aware version of [`SizeEstimator::op_sizes`]: an op's input
+    /// is the sum of its producers' estimated outputs (a Union merges
+    /// branches; the scan reads `part_bytes` from the source). Returns
+    /// per-op processed sizes index-aligned with `query.ops`; for a
+    /// linear chain this equals `op_sizes(part_bytes)`.
+    pub fn op_sizes_for(&self, query: &Query, part_bytes: f64) -> Vec<f64> {
+        let n = query.ops.len();
+        let mut outs = vec![0.0f64; n];
+        let mut sizes = vec![0.0f64; n];
+        // Validated queries store producers before consumers (validate()
+        // rejects forward edges), so the storage order is topological —
+        // no need to re-run Kahn here on the planning hot path.
+        for op in &query.ops {
+            let input: f64 = if op.inputs.is_empty() {
+                part_bytes
+            } else {
+                op.inputs.iter().map(|&p| outs.get(p).copied().unwrap_or(0.0)).sum()
+            };
+            let out = input * self.ratio(op.id);
+            sizes[op.id] = input.max(out);
+            outs[op.id] = out;
+        }
+        sizes
+    }
 }
 
-/// Algorithm 2: map each operation to CPU or GPU.
+/// Algorithm 2: map each operation to CPU or GPU, producing the
+/// physical plan (device + size annotation per op).
 ///
 /// * `part_bytes` — `Part_(i,j)`: per-partition data size of this
 ///   micro-batch (mean partition; Spark plans once per batch),
 /// * `inf_pt` — `InfPT_i` in bytes,
 /// * `base_trans` — `baseTransCost` (initially 0.1, §III-D).
+///
+/// Errors with [`Error::Plan`] on an empty or cyclic query instead of
+/// panicking — plan before `validate()` at your peril no longer.
 pub fn map_device(
     query: &Query,
     part_bytes: f64,
     inf_pt: f64,
     base_trans: f64,
     estimator: &SizeEstimator,
-) -> DevicePlan {
+) -> Result<PhysicalPlan> {
     let n = query.ops.len();
+    if n == 0 {
+        return Err(Error::Plan("cannot plan an empty query".into()));
+    }
+    let order = query.topo_order()?;
+    let consumers = query.consumers();
     // Line 3: initially, map every operation to the GPU.
     let mut plan = vec![Device::Gpu; n];
-    let sizes = estimator.op_sizes(part_bytes.max(1.0));
+    let sizes = estimator.op_sizes_for(query, part_bytes.max(1.0));
     let inf = inf_pt.max(1.0);
-    let last = n - 1;
 
     // Line 4: traverse from the child node (topological order).
-    for (o, node) in query.ops.iter().enumerate() {
-        let kind = node.spec.kind();
+    for &o in &order {
+        let kind = query.ops[o].spec.kind();
         let size = sizes[o].max(1.0);
         let base = BaseCost::cost(kind);
 
@@ -127,13 +170,17 @@ pub fn map_device(
         let mut cpu_cost = base * (size / inf);
         let mut gpu_cost = base * (inf / size);
 
-        // Lines 6-9 (Eq. 9): transition cost placement. First/last ops
-        // must fetch/load host-side data; an op after a CPU-mapped op
-        // pays the hop onto the GPU; otherwise leaving the GPU chain
-        // costs the CPU side.
+        // Lines 6-9 (Eq. 9): transition cost placement, via the shared
+        // boundary rule. Producers are already mapped (topological
+        // order); consumers still sit on the line-3 GPU default, so a
+        // sink boundary is the only "leaving" case the planner sees —
+        // exactly Alg. 2's first/last/device-switch placement.
         let trans = base_trans * (size / inf);
-        let prev_on_cpu = o > 0 && plan[o - 1] == Device::Cpu;
-        if o == 0 || o == last || prev_on_cpu {
+        let (entering, leaving) =
+            transfer_boundaries(&query.ops[o].inputs, &consumers[o], |i| {
+                plan[i] == Device::Cpu
+            });
+        if entering || leaving {
             gpu_cost += trans;
         } else {
             cpu_cost += trans;
@@ -144,18 +191,35 @@ pub fn map_device(
             plan[o] = Device::Cpu;
         }
     }
-    DevicePlan { per_op: plan }
+    Ok(PhysicalPlan {
+        per_op: query
+            .ops
+            .iter()
+            .map(|op| PhysicalOp {
+                op_id: op.id,
+                kind: op.spec.kind(),
+                device: plan[op.id],
+                est_bytes: sizes[op.id],
+            })
+            .collect(),
+    })
 }
 
 /// The FineStream-like comparator of §V-D / Fig. 10: device per operation
 /// fixed by Table II's initial preference (neutral ops keep the all-GPU
 /// default), ignoring data size.
-pub fn static_preference_plan(query: &Query) -> DevicePlan {
-    DevicePlan {
+pub fn static_preference_plan(query: &Query) -> PhysicalPlan {
+    PhysicalPlan {
         per_op: query
             .ops
             .iter()
-            .map(|op| BaseCost::initial_preference(op.spec.kind()).unwrap_or(Device::Gpu))
+            .map(|op| PhysicalOp {
+                op_id: op.id,
+                kind: op.spec.kind(),
+                device: BaseCost::initial_preference(op.spec.kind())
+                    .unwrap_or(Device::Gpu),
+                est_bytes: 0.0,
+            })
             .collect(),
     }
 }
@@ -180,21 +244,47 @@ mod tests {
             .unwrap()
     }
 
+    fn devices(plan: &PhysicalPlan) -> Vec<Device> {
+        plan.per_op.iter().map(|o| o.device).collect()
+    }
+
     #[test]
     fn small_partitions_map_to_cpu() {
         let q = spj();
         let est = SizeEstimator::new(q.len());
-        let plan = map_device(&q, 10.0 * KB, 150.0 * KB, 0.1, &est);
+        let plan = map_device(&q, 10.0 * KB, 150.0 * KB, 0.1, &est).unwrap();
         // Part ≪ InfPT ⇒ CPU cost (S/I) tiny, GPU cost (I/S) huge.
-        assert!(plan.per_op.iter().all(|d| *d == Device::Cpu), "{plan:?}");
+        assert!(plan.per_op.iter().all(|o| o.device == Device::Cpu), "{plan:?}");
     }
 
     #[test]
     fn large_partitions_map_to_gpu() {
         let q = spj();
         let est = SizeEstimator::new(q.len());
-        let plan = map_device(&q, 4096.0 * KB, 150.0 * KB, 0.1, &est);
-        assert!(plan.per_op.iter().all(|d| *d == Device::Gpu), "{plan:?}");
+        let plan = map_device(&q, 4096.0 * KB, 150.0 * KB, 0.1, &est).unwrap();
+        assert!(plan.per_op.iter().all(|o| o.device == Device::Gpu), "{plan:?}");
+    }
+
+    #[test]
+    fn empty_query_is_plan_error_not_panic() {
+        let q = Query {
+            name: "e".into(),
+            ops: vec![],
+            window: WindowSpec::tumbling(Duration::from_secs(30)),
+            uses_window_state: false,
+        };
+        let est = SizeEstimator::new(0);
+        let r = map_device(&q, 10.0 * KB, 150.0 * KB, 0.1, &est);
+        assert!(matches!(r, Err(Error::Plan(_))), "{r:?}");
+    }
+
+    #[test]
+    fn plan_carries_size_estimates() {
+        let q = spj();
+        let est = SizeEstimator::new(q.len());
+        let plan = map_device(&q, 64.0 * KB, 150.0 * KB, 0.1, &est).unwrap();
+        assert!(plan.per_op.iter().all(|o| o.est_bytes >= 64.0 * KB));
+        assert_eq!(plan.per_op[3].kind, OpKind::Join);
     }
 
     #[test]
@@ -213,9 +303,9 @@ mod tests {
         }
         // Small source partition, but the estimated join input (50x) is
         // far beyond the inflection point: join goes GPU, scan stays CPU.
-        let plan = map_device(&q, 10.0 * KB, 150.0 * KB, 0.1, &est);
-        assert_eq!(plan.per_op[0], Device::Cpu);
-        assert_eq!(plan.per_op[3], Device::Gpu, "{plan:?}");
+        let plan = map_device(&q, 10.0 * KB, 150.0 * KB, 0.1, &est).unwrap();
+        assert_eq!(plan.device(0), Device::Cpu);
+        assert_eq!(plan.device(3), Device::Gpu, "{plan:?}");
     }
 
     #[test]
@@ -225,11 +315,12 @@ mod tests {
         // decides. With large base_trans the hop should not happen.
         let q = spj();
         let est = SizeEstimator::new(q.len());
-        let plan_cheap = map_device(&q, 160.0 * KB, 150.0 * KB, 0.0, &est);
-        let plan_dear = map_device(&q, 160.0 * KB, 150.0 * KB, 10.0, &est);
-        let gpu_cheap = plan_cheap.per_op.iter().filter(|d| **d == Device::Gpu).count();
-        let gpu_dear = plan_dear.per_op.iter().filter(|d| **d == Device::Gpu).count();
-        assert!(gpu_dear <= gpu_cheap, "{plan_cheap:?} vs {plan_dear:?}");
+        let plan_cheap = map_device(&q, 160.0 * KB, 150.0 * KB, 0.0, &est).unwrap();
+        let plan_dear = map_device(&q, 160.0 * KB, 150.0 * KB, 10.0, &est).unwrap();
+        assert!(
+            plan_dear.gpu_ops() <= plan_cheap.gpu_ops(),
+            "{plan_cheap:?} vs {plan_dear:?}"
+        );
     }
 
     #[test]
@@ -237,8 +328,8 @@ mod tests {
         let q = spj();
         let est = SizeEstimator::new(q.len());
         // Same partition size, two inflection points straddling it.
-        let low_inf = map_device(&q, 100.0 * KB, 50.0 * KB, 0.1, &est);
-        let high_inf = map_device(&q, 100.0 * KB, 200.0 * KB, 0.1, &est);
+        let low_inf = map_device(&q, 100.0 * KB, 50.0 * KB, 0.1, &est).unwrap();
+        let high_inf = map_device(&q, 100.0 * KB, 200.0 * KB, 0.1, &est).unwrap();
         assert!(low_inf.gpu_ops() > high_inf.gpu_ops());
     }
 
@@ -254,7 +345,7 @@ mod tests {
             .unwrap();
         let plan = static_preference_plan(&q);
         assert_eq!(
-            plan.per_op,
+            devices(&plan),
             vec![
                 Device::Gpu, // scan
                 Device::Cpu, // filter
@@ -289,5 +380,30 @@ mod tests {
         let sizes = est.op_sizes(100.0);
         assert_eq!(sizes[0], 100.0);
         assert!((sizes[1] - 3000.0).abs() < 1.0, "{sizes:?}");
+    }
+
+    #[test]
+    fn dag_sizes_match_chain_sizes_on_chains() {
+        let q = spj();
+        let mut est = SizeEstimator::new(q.len());
+        est.observe(&[
+            OpTrace { op_id: 1, kind: OpKind::Filter, device: Device::Cpu, time: Duration::ZERO, in_bytes: 1000, out_bytes: 500 },
+            OpTrace { op_id: 3, kind: OpKind::Join, device: Device::Cpu, time: Duration::ZERO, in_bytes: 500, out_bytes: 5000 },
+        ]);
+        assert_eq!(est.op_sizes_for(&q, 100.0 * KB), est.op_sizes(100.0 * KB));
+    }
+
+    #[test]
+    fn union_input_sums_branch_outputs() {
+        // Diamond: scan -> {direct, filter} -> union. The union's
+        // processed size is the sum of both branch outputs.
+        let q = QueryBuilder::scan("d")
+            .merge_union(|b| b.filter("x", Predicate::Ge(0.0)))
+            .build()
+            .unwrap();
+        let est = SizeEstimator::new(q.len());
+        let sizes = est.op_sizes_for(&q, 100.0);
+        // ratios default 1.0: scan out 100, filter out 100, union in 200.
+        assert_eq!(sizes[2], 200.0);
     }
 }

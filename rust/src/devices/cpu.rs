@@ -52,6 +52,9 @@ pub fn run_op(
             )
         }
         OpSpec::Sort { col, desc } => ops::sort_by(batch, col, *desc),
+        // The executor concatenates a Union's input branches while
+        // assembling its input batch; the op itself passes through.
+        OpSpec::Union => Ok(batch.clone()),
     }
 }
 

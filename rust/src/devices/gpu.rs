@@ -44,7 +44,8 @@ pub fn run_op(
         OpSpec::Scan
         | OpSpec::ProjectSelect { .. }
         | OpSpec::Expand
-        | OpSpec::Shuffle { .. } => {
+        | OpSpec::Shuffle { .. }
+        | OpSpec::Union => {
             crate::devices::cpu::run_op(spec, batch, window, window_spec)
         }
 

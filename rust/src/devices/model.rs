@@ -107,6 +107,7 @@ pub fn op_work_scale(kind: OpKind) -> f64 {
         OpKind::Aggregate => 1.5, // hash build + update
         OpKind::Join => 0.8,      // per effective byte; amplification via out_bytes
         OpKind::Sort => 1.3,
+        OpKind::Union => 0.3,     // branch merge: pure concat/copy
     }
 }
 
@@ -124,6 +125,7 @@ pub fn gpu_relative_cost(kind: OpKind) -> f64 {
         OpKind::Filter => 1.25,
         OpKind::Aggregate => 1.25,
         OpKind::Shuffle => 1.4,
+        OpKind::Union => 0.9, // copy-bound merge: mildly GPU-friendly
     }
 }
 

@@ -17,6 +17,13 @@
 //!   `InfPT = β0 + β1·Throughput + β2·Latency` fitted asynchronously on
 //!   per-batch history.
 //!
+//! The public query surface is session-centric: a [`session::Session`]
+//! owns the shared coordinator state (device model, online optimizer,
+//! PJRT runtime, config) and multiplexes any number of registered
+//! queries — logical DAGs that `MapDevice` lowers to per-op
+//! device-annotated physical plans — through one micro-batch loop. See
+//! `ARCHITECTURE.md` §Query-stack.
+//!
 //! The "GPU" compute path executes AOT-compiled XLA artifacts (lowered
 //! once from JAX/Pallas by `python/compile/aot.py`) through the PJRT C
 //! API ([`runtime`]); python is never on the request path. Paper-scale
@@ -33,6 +40,7 @@ pub mod error;
 pub mod query;
 pub mod report;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod source;
 pub mod util;
@@ -40,6 +48,7 @@ pub mod workloads;
 
 pub use config::Config;
 pub use error::{Error, Result};
+pub use session::Session;
 
 /// Crate version (mirrors Cargo.toml).
 pub fn version() -> &'static str {

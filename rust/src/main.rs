@@ -11,7 +11,6 @@
 //! ```
 
 use lmstream::config::{Config, ExecBackend, Mode};
-use lmstream::coordinator::driver;
 use lmstream::report::figures;
 use lmstream::runtime::client::{HostTensor, Runtime};
 use lmstream::util::bench::print_table;
@@ -79,13 +78,18 @@ fn cmd_run(args: &Args) -> lmstream::Result<()> {
     let export_dir = args.str_opt("export");
     args.finish()?;
 
-    let rt = if real {
-        Some(Runtime::new(Path::new(&cfg.artifact_dir))?)
+    // Session-centric surface: the session owns the runtime, the device
+    // model and the online optimizer; the workload is registered once
+    // and driven through the shared micro-batch loop.
+    let mut session = if real {
+        let rt = Runtime::new(Path::new(&cfg.artifact_dir))?;
+        lmstream::Session::with_runtime(cfg, rt)?
     } else {
-        None
+        lmstream::Session::new(cfg)?
     };
-    let w = workloads::by_name(&workload)?;
-    let result = driver::run(&w, &cfg, Duration::from_secs_f64(minutes * 60.0), rt.as_ref())?;
+    session.register(workloads::by_name(&workload)?)?;
+    let mut results = session.run(Duration::from_secs_f64(minutes * 60.0))?;
+    let result = results.remove(0);
 
     println!(
         "{} [{}] — {} micro-batches over {:.1} min",

@@ -1,6 +1,12 @@
 //! Fluent query builder — the "Spark SQL" authoring surface of the
 //! substrate. Workloads (Table III) are defined through this API; see
 //! [`crate::workloads`].
+//!
+//! The builder grows a true DAG: every fluent call appends an op reading
+//! the current *tip*; [`QueryBuilder::branch`] forks a side branch at the
+//! tip (its last op becomes an additional sink), and
+//! [`QueryBuilder::merge_union`] forks a branch and merges it back into
+//! the main chain through an [`OpSpec::Union`].
 
 use crate::engine::ops::aggregate::AggSpec;
 use crate::engine::ops::filter::Predicate;
@@ -9,10 +15,12 @@ use crate::error::Result;
 use crate::query::dag::{OpNode, OpSpec, Query};
 use std::time::Duration;
 
-/// Builder accumulating an operator chain.
+/// Builder accumulating an operation DAG.
 pub struct QueryBuilder {
     name: String,
-    ops: Vec<OpSpec>,
+    ops: Vec<OpNode>,
+    /// Node the next fluent call will read from.
+    tip: usize,
     window: WindowSpec,
     uses_window_state: bool,
 }
@@ -22,10 +30,18 @@ impl QueryBuilder {
     pub fn scan(name: &str) -> QueryBuilder {
         QueryBuilder {
             name: name.to_string(),
-            ops: vec![OpSpec::Scan],
+            ops: vec![OpNode { id: 0, spec: OpSpec::Scan, inputs: vec![] }],
+            tip: 0,
             window: WindowSpec::tumbling(Duration::from_secs(60)),
             uses_window_state: false,
         }
+    }
+
+    /// Append `spec` reading the current tip; the new op becomes the tip.
+    fn push(&mut self, spec: OpSpec) {
+        let id = self.ops.len();
+        self.ops.push(OpNode { id, spec, inputs: vec![self.tip] });
+        self.tip = id;
     }
 
     /// Set the window (`[range R slide S]` of Table III).
@@ -36,13 +52,13 @@ impl QueryBuilder {
 
     /// WHERE `col` satisfies `pred`.
     pub fn filter(mut self, col: &str, pred: Predicate) -> Self {
-        self.ops.push(OpSpec::Filter { col: col.to_string(), pred });
+        self.push(OpSpec::Filter { col: col.to_string(), pred });
         self
     }
 
     /// SELECT a column subset.
     pub fn select(mut self, keep: &[&str]) -> Self {
-        self.ops.push(OpSpec::ProjectSelect {
+        self.push(OpSpec::ProjectSelect {
             keep: keep.iter().map(|s| s.to_string()).collect(),
         });
         self
@@ -50,7 +66,7 @@ impl QueryBuilder {
 
     /// Computed column `out = alpha*a + beta*b`.
     pub fn project_affine(mut self, a: &str, b: &str, alpha: f32, beta: f32, out: &str) -> Self {
-        self.ops.push(OpSpec::ProjectAffine {
+        self.push(OpSpec::ProjectAffine {
             a: a.to_string(),
             b: b.to_string(),
             alpha,
@@ -62,13 +78,13 @@ impl QueryBuilder {
 
     /// Sliding-window instance replication (Spark's Expand rewrite).
     pub fn expand(mut self) -> Self {
-        self.ops.push(OpSpec::Expand);
+        self.push(OpSpec::Expand);
         self
     }
 
     /// Exchange by key before a partition-crossing operator.
     pub fn shuffle(mut self, key: &str) -> Self {
-        self.ops.push(OpSpec::Shuffle { key: key.to_string() });
+        self.push(OpSpec::Shuffle { key: key.to_string() });
         self
     }
 
@@ -79,7 +95,7 @@ impl QueryBuilder {
         aggs: Vec<AggSpec>,
         having: Option<(&str, Predicate)>,
     ) -> Self {
-        self.ops.push(OpSpec::Aggregate {
+        self.push(OpSpec::Aggregate {
             group: group.iter().map(|s| s.to_string()).collect(),
             aggs,
             having: having.map(|(c, p)| (c.to_string(), p)),
@@ -89,7 +105,7 @@ impl QueryBuilder {
 
     /// Join the stream against its own window state (LR1's self-join).
     pub fn join_window(mut self, probe_key: &str, build_key: &str) -> Self {
-        self.ops.push(OpSpec::JoinWithWindow {
+        self.push(OpSpec::JoinWithWindow {
             probe_key: probe_key.to_string(),
             build_key: build_key.to_string(),
         });
@@ -106,7 +122,43 @@ impl QueryBuilder {
 
     /// ORDER BY.
     pub fn sort(mut self, col: &str, desc: bool) -> Self {
-        self.ops.push(OpSpec::Sort { col: col.to_string(), desc });
+        self.push(OpSpec::Sort { col: col.to_string(), desc });
+        self
+    }
+
+    /// Fork a side branch at the current tip. `f` continues building
+    /// from the fork point; the branch's final op becomes an additional
+    /// sink of the query, and the main chain resumes from the fork
+    /// point. One scan can thus feed several independent pipelines:
+    ///
+    /// ```text
+    /// scan ──┬── filter ── aggregate   (branch sink)
+    ///        └── join_window ── sort   (main sink)
+    /// ```
+    pub fn branch(mut self, f: impl FnOnce(QueryBuilder) -> QueryBuilder) -> Self {
+        let fork = self.tip;
+        self = f(self);
+        self.tip = fork;
+        self
+    }
+
+    /// Fork a side branch at the current tip and union its output back
+    /// into the main chain: after `merge_union`, the tip is a
+    /// [`OpSpec::Union`] reading both the fork point and the branch's
+    /// final op (a diamond). The branch must append at least one op and
+    /// preserve the fork point's schema, or `build()`/execution will
+    /// reject the plan.
+    pub fn merge_union(mut self, f: impl FnOnce(QueryBuilder) -> QueryBuilder) -> Self {
+        let fork = self.tip;
+        self = f(self);
+        let branch_tip = self.tip;
+        let id = self.ops.len();
+        self.ops.push(OpNode {
+            id,
+            spec: OpSpec::Union,
+            inputs: vec![fork, branch_tip],
+        });
+        self.tip = id;
         self
     }
 
@@ -114,12 +166,7 @@ impl QueryBuilder {
     pub fn build(self) -> Result<Query> {
         let q = Query {
             name: self.name,
-            ops: self
-                .ops
-                .into_iter()
-                .enumerate()
-                .map(|(id, spec)| OpNode { id, spec })
-                .collect(),
+            ops: self.ops,
             window: self.window,
             uses_window_state: self.uses_window_state,
         };
@@ -155,6 +202,10 @@ mod tests {
             vec![OpKind::Scan, OpKind::Expand, OpKind::Shuffle, OpKind::Aggregate]
         );
         assert!(!q.uses_window_state);
+        // Chain wiring: every op reads its predecessor.
+        for (i, op) in q.ops.iter().enumerate().skip(1) {
+            assert_eq!(op.inputs, vec![i - 1]);
+        }
     }
 
     #[test]
@@ -170,5 +221,55 @@ mod tests {
     fn window_defaults_to_tumbling() {
         let q = QueryBuilder::scan("t").build().unwrap();
         assert_eq!(q.window.slide_time(), Duration::ZERO);
+    }
+
+    #[test]
+    fn branch_fans_out_to_two_sinks() {
+        let q = QueryBuilder::scan("b")
+            .filter("speed", Predicate::Lt(60.0))
+            .branch(|b| b.aggregate(&["segment"], vec![AggSpec::count("n")], None))
+            .sort("speed", false)
+            .build()
+            .unwrap();
+        // scan(0) -> filter(1) -> {aggregate(2), sort(3)}
+        assert_eq!(q.ops[2].inputs, vec![1]);
+        assert_eq!(q.ops[3].inputs, vec![1]);
+        assert_eq!(q.sinks(), vec![2, 3]);
+    }
+
+    #[test]
+    fn merge_union_builds_a_diamond() {
+        let q = QueryBuilder::scan("d")
+            .merge_union(|b| b.filter("speed", Predicate::Lt(20.0)))
+            .sort("speed", false)
+            .build()
+            .unwrap();
+        // scan(0) -> {direct, filter(1)} -> union(2) -> sort(3)
+        assert_eq!(q.ops[2].spec.kind(), OpKind::Union);
+        assert_eq!(q.ops[2].inputs, vec![0, 1]);
+        assert_eq!(q.sinks(), vec![3]);
+    }
+
+    #[test]
+    fn empty_merge_union_branch_rejected() {
+        // A branch that appends nothing would union the fork with itself.
+        let r = QueryBuilder::scan("d").merge_union(|b| b).build();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn branched_query_traverses_inputs_first() {
+        let q = QueryBuilder::scan("t")
+            .branch(|b| b.expand())
+            .branch(|b| b.filter("v", Predicate::Ge(0.0)))
+            .select(&["v"])
+            .build()
+            .unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for op in q.traverse() {
+            assert!(op.inputs.iter().all(|i| seen.contains(i)), "op {} early", op.id);
+            seen.insert(op.id);
+        }
+        assert_eq!(seen.len(), q.len());
     }
 }

@@ -1,9 +1,14 @@
 //! Operation DAG: the logical plan MapDevice traverses (Alg. 2).
 //!
-//! The Table III workloads compile to operator chains with a window
-//! side-input (the self-join's build side / the aggregation scope), so
-//! the DAG is stored in topological order; `traverse(queryPlan)` of
-//! Alg. 2 is iteration over that order.
+//! A query is a true directed acyclic graph of operations: every
+//! [`OpNode`] names its producer nodes in `inputs`, so one scan can fan
+//! out into several branches (e.g. an aggregation branch and a
+//! window-join branch) and branches can merge again through a
+//! [`OpSpec::Union`] or terminate in their own sinks. Nodes are stored
+//! with `inputs[k] < id` (producers before consumers), which makes the
+//! stored order a topological order; `traverse()` — Alg. 2's
+//! `traverse(queryPlan)` — recomputes that order with Kahn's algorithm
+//! from the edges rather than trusting the storage order.
 
 use crate::engine::ops::aggregate::AggSpec;
 use crate::engine::ops::filter::Predicate;
@@ -21,6 +26,8 @@ pub enum OpKind {
     Aggregate,
     Join,
     Sort,
+    /// Branch merge: concatenates the outputs of its input nodes.
+    Union,
 }
 
 impl OpKind {
@@ -34,6 +41,7 @@ impl OpKind {
             OpKind::Aggregate => "Aggregate",
             OpKind::Join => "Join",
             OpKind::Sort => "Sort",
+            OpKind::Union => "Union",
         }
     }
 }
@@ -72,6 +80,10 @@ pub enum OpSpec {
     },
     /// Order by column.
     Sort { col: String, desc: bool },
+    /// Merge the rows of all input branches (schemas must agree). The
+    /// executor concatenates the inputs while assembling this node's
+    /// input batch, so the operator itself is a pass-through.
+    Union,
 }
 
 impl OpSpec {
@@ -87,6 +99,7 @@ impl OpSpec {
                 OpKind::Join
             }
             OpSpec::Sort { .. } => OpKind::Sort,
+            OpSpec::Union => OpKind::Union,
         }
     }
 }
@@ -96,9 +109,21 @@ impl OpSpec {
 pub struct OpNode {
     pub id: usize,
     pub spec: OpSpec,
+    /// Producer node ids (empty only for the source scan). A linear
+    /// chain is the special case `inputs == [id - 1]`.
+    pub inputs: Vec<usize>,
 }
 
-/// A compiled streaming query: operator chain + window semantics.
+impl OpNode {
+    /// A chain node: reads the immediately preceding op (the scan, at
+    /// id 0, reads the source).
+    pub fn chained(id: usize, spec: OpSpec) -> OpNode {
+        let inputs = if id == 0 { vec![] } else { vec![id - 1] };
+        OpNode { id, spec, inputs }
+    }
+}
+
+/// A compiled streaming query: operation DAG + window semantics.
 #[derive(Clone, Debug)]
 pub struct Query {
     pub name: String,
@@ -110,8 +135,11 @@ pub struct Query {
 }
 
 impl Query {
-    /// Validate structural invariants (non-empty, scan-first, ids
-    /// contiguous, at most one windowed join).
+    /// Validate structural invariants: non-empty, the scan is the unique
+    /// source (node 0, no inputs), ids contiguous, every edge points
+    /// backward (`input < id` — which also rules out cycles), no
+    /// duplicate edges, every non-scan node has at least one input (no
+    /// disconnected islands), and at most one windowed join.
     pub fn validate(&self) -> Result<()> {
         if self.ops.is_empty() {
             return Err(Error::Plan("empty query".into()));
@@ -126,7 +154,32 @@ impl Query {
             if i > 0 && matches!(op.spec, OpSpec::Scan) {
                 return Err(Error::Plan("Scan only allowed at position 0".into()));
             }
+            if i == 0 {
+                if !op.inputs.is_empty() {
+                    return Err(Error::Plan("Scan cannot have inputs".into()));
+                }
+            } else if op.inputs.is_empty() {
+                return Err(Error::Plan(format!(
+                    "op {i} ({}) is disconnected: no inputs",
+                    op.spec.kind().name()
+                )));
+            }
+            for (k, &inp) in op.inputs.iter().enumerate() {
+                if inp >= i {
+                    return Err(Error::Plan(format!(
+                        "op {i} reads op {inp}: edges must point backward \
+                         (forward edges would allow cycles)"
+                    )));
+                }
+                if op.inputs[..k].contains(&inp) {
+                    return Err(Error::Plan(format!("op {i} reads op {inp} twice")));
+                }
+            }
         }
+        // The backward-edge rule above makes the graph acyclic by
+        // construction; Kahn's algorithm double-checks (and guards any
+        // future relaxation of the storage order).
+        self.topo_order()?;
         let joins = self
             .ops
             .iter()
@@ -138,9 +191,80 @@ impl Query {
         Ok(())
     }
 
-    /// Topological traversal order (Alg. 2's `traverse`).
+    /// Forward adjacency: `consumers()[i]` lists the nodes reading op
+    /// `i`'s output (ascending). Nodes with no consumers are sinks.
+    pub fn consumers(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.ops.len()];
+        for op in &self.ops {
+            for &inp in &op.inputs {
+                if inp < out.len() {
+                    out[inp].push(op.id);
+                }
+            }
+        }
+        out
+    }
+
+    /// Sink node ids (ops whose output leaves the query), ascending.
+    pub fn sinks(&self) -> Vec<usize> {
+        self.consumers()
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.is_empty())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Topological order via Kahn's algorithm, choosing the smallest
+    /// ready id at every step (so a chain traverses in id order).
+    /// Errors on a cycle — every node must be emitted.
+    pub fn topo_order(&self) -> Result<Vec<usize>> {
+        let n = self.ops.len();
+        let mut indegree = vec![0usize; n];
+        for op in &self.ops {
+            for &inp in &op.inputs {
+                if inp < n {
+                    indegree[op.id] += 1;
+                } else {
+                    return Err(Error::Plan(format!(
+                        "op {} reads nonexistent op {inp}",
+                        op.id
+                    )));
+                }
+            }
+        }
+        let consumers = self.consumers();
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indegree[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(pos) = ready
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &id)| id)
+            .map(|(p, _)| p)
+        {
+            let id = ready.swap_remove(pos);
+            order.push(id);
+            for &c in &consumers[id] {
+                indegree[c] -= 1;
+                if indegree[c] == 0 {
+                    ready.push(c);
+                }
+            }
+        }
+        if order.len() != n {
+            return Err(Error::Plan("operation graph contains a cycle".into()));
+        }
+        Ok(order)
+    }
+
+    /// Topological traversal (Alg. 2's `traverse`): every node is
+    /// visited after all of its inputs. Falls back to storage order if
+    /// the graph is invalid (callers validate first).
     pub fn traverse(&self) -> impl Iterator<Item = &OpNode> {
-        self.ops.iter()
+        let order = self
+            .topo_order()
+            .unwrap_or_else(|_| (0..self.ops.len()).collect());
+        order.into_iter().map(move |i| &self.ops[i])
     }
 
     pub fn len(&self) -> usize {
@@ -163,7 +287,7 @@ mod tests {
             ops: ops
                 .into_iter()
                 .enumerate()
-                .map(|(id, spec)| OpNode { id, spec })
+                .map(|(id, spec)| OpNode::chained(id, spec))
                 .collect(),
             window: WindowSpec::tumbling(Duration::from_secs(30)),
             uses_window_state: false,
@@ -213,5 +337,78 @@ mod tests {
             OpKind::Project
         );
         assert_eq!(OpSpec::Expand.kind(), OpKind::Expand);
+        assert_eq!(OpSpec::Union.kind(), OpKind::Union);
+    }
+
+    fn diamond() -> Query {
+        // scan -> {filter, expand} -> union
+        Query {
+            name: "d".into(),
+            ops: vec![
+                OpNode { id: 0, spec: OpSpec::Scan, inputs: vec![] },
+                OpNode {
+                    id: 1,
+                    spec: OpSpec::Filter { col: "v".into(), pred: Predicate::Ge(1.0) },
+                    inputs: vec![0],
+                },
+                OpNode { id: 2, spec: OpSpec::Expand, inputs: vec![0] },
+                OpNode { id: 3, spec: OpSpec::Union, inputs: vec![1, 2] },
+            ],
+            window: WindowSpec::tumbling(Duration::from_secs(30)),
+            uses_window_state: false,
+        }
+    }
+
+    #[test]
+    fn diamond_validates_and_traverses_in_topo_order() {
+        let d = diamond();
+        d.validate().unwrap();
+        let order: Vec<usize> = d.traverse().map(|o| o.id).collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        assert_eq!(d.sinks(), vec![3]);
+        assert_eq!(d.consumers()[0], vec![1, 2]);
+    }
+
+    #[test]
+    fn fan_out_has_multiple_sinks() {
+        let mut d = diamond();
+        d.ops.pop(); // drop the union: filter and expand both terminate
+        d.validate().unwrap();
+        assert_eq!(d.sinks(), vec![1, 2]);
+    }
+
+    #[test]
+    fn forward_edge_rejected() {
+        let mut d = diamond();
+        d.ops[1].inputs = vec![3]; // 1 reads 3 while 3 reads 1: a cycle
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn disconnected_node_rejected() {
+        let mut d = diamond();
+        d.ops[2].inputs = vec![]; // expand floats free
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn duplicate_edge_rejected() {
+        let mut d = diamond();
+        d.ops[3].inputs = vec![1, 1];
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn scan_with_inputs_rejected() {
+        let mut d = diamond();
+        d.ops[0].inputs = vec![1];
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn topo_order_detects_out_of_range_input() {
+        let mut d = diamond();
+        d.ops[3].inputs = vec![1, 99];
+        assert!(d.topo_order().is_err());
     }
 }

@@ -1,17 +1,22 @@
 //! Physical execution of a planned query over a micro-batch.
 //!
-//! Given a [`DevicePlan`] (one device per DAG operation, from MapDevice or
-//! a baseline policy), runs the operator chain and accounts processing
-//! time:
+//! Given a [`PhysicalPlan`] (one device-annotated op per DAG node, from
+//! MapDevice or a baseline policy), walks the operation DAG in
+//! topological order and accounts processing time:
 //!
 //! * **Simulated backend** — operators transform data natively; *time* is
 //!   charged by the calibrated [`DeviceModel`]: CPU ops at per-partition
 //!   volume (partitions run on `NumCores` cores in parallel), GPU ops at
 //!   coalesced volume divided across `NumGpus`, plus host↔device transfer
-//!   on every device boundary (Alg. 2's `Trans` placement: first / last /
-//!   device-switch).
+//!   on every device boundary (Alg. 2's `Trans` placement, shared with
+//!   the planner via [`transfer_boundaries`]) — including boundaries
+//!   where a branch fans out to consumers on the other device.
 //! * **Real backend** — CPU ops run native, GPU ops run through the PJRT
 //!   artifacts; wall-clock timing.
+//!
+//! A branching DAG can end in several sinks; [`ExecOutcome::result`] is
+//! the primary (highest-id) sink's output and
+//! [`ExecOutcome::branch_results`] carries the others.
 
 use crate::config::ExecBackend;
 use crate::devices::model::{DeviceModel, OpVolume};
@@ -19,24 +24,11 @@ use crate::devices::{cpu, gpu, Device};
 use crate::engine::column::ColumnBatch;
 use crate::error::{Error, Result};
 use crate::query::dag::{OpKind, Query};
+use crate::query::physical::{transfer_boundaries, PhysicalPlan};
 use crate::runtime::client::Runtime;
 use std::time::{Duration, Instant};
 
-/// Device assignment per DAG operation (index-aligned with `query.ops`).
-#[derive(Clone, Debug, PartialEq)]
-pub struct DevicePlan {
-    pub per_op: Vec<Device>,
-}
-
-impl DevicePlan {
-    pub fn all(device: Device, n: usize) -> DevicePlan {
-        DevicePlan { per_op: vec![device; n] }
-    }
-
-    pub fn gpu_ops(&self) -> usize {
-        self.per_op.iter().filter(|d| **d == Device::Gpu).count()
-    }
-}
+pub use crate::query::physical::DevicePlan;
 
 /// Execution environment.
 pub struct ExecEnv<'a> {
@@ -62,11 +54,16 @@ pub struct OpTrace {
 /// Result of one micro-batch execution.
 #[derive(Debug)]
 pub struct ExecOutcome {
+    /// Primary sink output (for a linear chain: the last op's output).
     pub result: ColumnBatch,
+    /// Outputs of the query's other sinks (empty for linear chains),
+    /// as `(op_id, batch)` in ascending op id.
+    pub branch_results: Vec<(usize, ColumnBatch)>,
     /// `Proc_i`: full processing-phase duration.
     pub proc: Duration,
     /// Host↔device transfer share of `proc`.
     pub transfer: Duration,
+    /// Per-op traces in topological (= op id) order.
     pub traces: Vec<OpTrace>,
 }
 
@@ -76,11 +73,14 @@ pub struct ExecOutcome {
 /// aggregation scope); `aux_bytes` its size for cost accounting.
 pub fn execute(
     query: &Query,
-    plan: &DevicePlan,
+    plan: &PhysicalPlan,
     input: ColumnBatch,
     window: Option<&ColumnBatch>,
     env: &ExecEnv,
 ) -> Result<ExecOutcome> {
+    if query.ops.is_empty() {
+        return Err(Error::Plan("cannot execute an empty query".into()));
+    }
     if plan.per_op.len() != query.ops.len() {
         return Err(Error::Plan(format!(
             "plan covers {} ops, query has {}",
@@ -92,16 +92,43 @@ pub fn execute(
         return Err(Error::Plan("need at least one core and one gpu".into()));
     }
     let aux_bytes = window.map(|w| w.bytes()).unwrap_or(0) as f64;
-    let last = query.ops.len() - 1;
+    let order = query.topo_order()?;
+    let consumers = query.consumers();
 
-    let mut current = input;
+    // Per-node output slots; a slot is taken (moved) by its last
+    // consumer and cloned for earlier ones.
+    let mut outputs: Vec<Option<ColumnBatch>> = Vec::new();
+    outputs.resize_with(query.ops.len(), || None);
+    let mut remaining_uses: Vec<usize> = consumers.iter().map(|c| c.len()).collect();
+    let mut source = Some(input);
+
     let mut proc = env.model.batch_fixed;
     let mut transfer_total = Duration::ZERO;
     let mut traces = Vec::with_capacity(query.ops.len());
 
-    for (i, op) in query.ops.iter().enumerate() {
-        let device = plan.per_op[i];
+    for &i in &order {
+        let op = &query.ops[i];
+        let device = plan.per_op[i].device;
         let kind = op.spec.kind();
+
+        // ---- Input assembly: move/clone/concat producer outputs. A
+        // multi-input node (Union) concatenates its branches here, so
+        // the operator itself stays unary.
+        let current: ColumnBatch = if op.inputs.is_empty() {
+            source
+                .take()
+                .ok_or_else(|| Error::Plan("query has more than one source scan".into()))?
+        } else if op.inputs.len() == 1 {
+            take_output(&mut outputs, &mut remaining_uses, op.inputs[0])?
+        } else {
+            let parts: Vec<ColumnBatch> = op
+                .inputs
+                .iter()
+                .map(|&p| take_output(&mut outputs, &mut remaining_uses, p))
+                .collect::<Result<_>>()?;
+            let refs: Vec<&ColumnBatch> = parts.iter().collect();
+            ColumnBatch::concat(&refs)?
+        };
         let in_bytes = current.bytes();
 
         let (next, measured) = match (env.backend, device) {
@@ -126,7 +153,7 @@ pub fn execute(
         let out_bytes = next.bytes();
 
         // Windowed operators also consume the window side input.
-        let op_aux = match op.spec.kind() {
+        let op_aux = match kind {
             OpKind::Join => aux_bytes,
             _ => 0.0,
         };
@@ -157,14 +184,17 @@ pub fn execute(
             }
         };
 
-        // Transfer charges (Alg. 2 placement): entering the device at the
-        // first op or on a CPU→GPU switch; leaving at the last op or on a
-        // GPU→CPU switch. Simulated backend only (real GPU ops include
+        // Transfer charges (Alg. 2 placement, shared with the planner):
+        // entering the device at a source op or on a CPU→GPU boundary;
+        // leaving at a sink op or on a GPU→CPU boundary — branch edges
+        // included. Simulated backend only (real GPU ops include
         // marshaling in their measured time).
         let mut op_transfer = Duration::ZERO;
         if env.backend == ExecBackend::Simulated && device == Device::Gpu {
-            let entering = i == 0 || plan.per_op[i - 1] == Device::Cpu;
-            let leaving = i == last || plan.per_op[i + 1] == Device::Cpu;
+            let (entering, leaving) =
+                transfer_boundaries(&op.inputs, &consumers[i], |n| {
+                    plan.per_op[n].device == Device::Cpu
+                });
             if entering {
                 op_transfer += env.model.transfer_time(in_bytes as f64 + op_aux);
             }
@@ -183,10 +213,50 @@ pub fn execute(
             in_bytes,
             out_bytes,
         });
-        current = next;
+        outputs[i] = Some(next);
     }
 
-    Ok(ExecOutcome { result: current, proc, transfer: transfer_total, traces })
+    // Collect sink outputs (slots never consumed); the highest-id sink
+    // is the primary result — for a linear chain, the last op.
+    let mut sink_outputs: Vec<(usize, ColumnBatch)> = outputs
+        .iter_mut()
+        .enumerate()
+        .filter(|(i, _)| consumers[*i].is_empty())
+        .map(|(i, slot)| {
+            let batch = slot.take().expect("sink executed");
+            (i, batch)
+        })
+        .collect();
+    // Kahn's min-ready rule on a validated (producers-before-consumers)
+    // DAG emits ids in ascending order, so `traces` is already sorted
+    // by op id — no sort needed.
+    let (_, result) = sink_outputs.pop().expect("validated query has a sink");
+
+    Ok(ExecOutcome {
+        result,
+        branch_results: sink_outputs,
+        proc,
+        transfer: transfer_total,
+        traces,
+    })
+}
+
+/// Consume producer `p`'s output slot: move it out on the last use,
+/// clone it while other consumers still need it.
+fn take_output(
+    outputs: &mut [Option<ColumnBatch>],
+    remaining_uses: &mut [usize],
+    p: usize,
+) -> Result<ColumnBatch> {
+    remaining_uses[p] = remaining_uses[p].saturating_sub(1);
+    if outputs[p].is_none() {
+        return Err(Error::Plan(format!("op {p} consumed before it produced")));
+    }
+    if remaining_uses[p] == 0 {
+        Ok(outputs[p].take().expect("checked above"))
+    } else {
+        Ok(outputs[p].as_ref().expect("checked above").clone())
+    }
 }
 
 #[cfg(test)]
@@ -229,24 +299,27 @@ mod tests {
         }
     }
 
+    fn all(q: &Query, d: Device) -> PhysicalPlan {
+        PhysicalPlan::uniform(q, d)
+    }
+
     #[test]
     fn sim_execution_transforms_and_times() {
         let model = DeviceModel::default();
         let q = query();
-        let plan = DevicePlan::all(Device::Cpu, q.len());
-        let out = execute(&q, &plan, batch(100), None, &env(&model)).unwrap();
+        let out = execute(&q, &all(&q, Device::Cpu), batch(100), None, &env(&model)).unwrap();
         assert_eq!(out.result.live_rows(), 90);
         assert!(out.proc >= model.batch_fixed);
         assert_eq!(out.traces.len(), 3);
         assert_eq!(out.transfer, Duration::ZERO); // all-CPU: no PCIe
+        assert!(out.branch_results.is_empty());
     }
 
     #[test]
     fn gpu_plan_charges_transfers() {
         let model = DeviceModel::default();
         let q = query();
-        let plan = DevicePlan::all(Device::Gpu, q.len());
-        let out = execute(&q, &plan, batch(100), None, &env(&model)).unwrap();
+        let out = execute(&q, &all(&q, Device::Gpu), batch(100), None, &env(&model)).unwrap();
         assert!(out.transfer > Duration::ZERO);
     }
 
@@ -255,19 +328,15 @@ mod tests {
         let model = DeviceModel::default();
         let q = query();
         // CPU -> GPU -> CPU: two boundaries around op 1.
-        let plan = DevicePlan {
-            per_op: vec![Device::Cpu, Device::Gpu, Device::Cpu],
-        };
-        let hybrid = execute(&q, &plan, batch(100), None, &env(&model)).unwrap();
-        assert!(hybrid.transfer > Duration::ZERO);
-        let all_cpu = execute(
+        let plan = PhysicalPlan::from_devices(
             &q,
-            &DevicePlan::all(Device::Cpu, q.len()),
-            batch(100),
-            None,
-            &env(&model),
+            &DevicePlan { per_op: vec![Device::Cpu, Device::Gpu, Device::Cpu] },
         )
         .unwrap();
+        let hybrid = execute(&q, &plan, batch(100), None, &env(&model)).unwrap();
+        assert!(hybrid.transfer > Duration::ZERO);
+        let all_cpu =
+            execute(&q, &all(&q, Device::Cpu), batch(100), None, &env(&model)).unwrap();
         assert_eq!(all_cpu.transfer, Duration::ZERO);
     }
 
@@ -275,7 +344,7 @@ mod tests {
     fn more_gpus_cut_gpu_time() {
         let model = DeviceModel::default();
         let q = query();
-        let plan = DevicePlan::all(Device::Gpu, q.len());
+        let plan = all(&q, Device::Gpu);
         let mut e1 = env(&model);
         e1.num_gpus = 1;
         let t1 = execute(&q, &plan, batch(50_000), None, &e1).unwrap().proc;
@@ -289,8 +358,24 @@ mod tests {
     fn plan_arity_checked() {
         let model = DeviceModel::default();
         let q = query();
-        let plan = DevicePlan::all(Device::Cpu, 1);
+        let plan = PhysicalPlan {
+            per_op: PhysicalPlan::uniform(&q, Device::Cpu).per_op[..1].to_vec(),
+        };
         assert!(execute(&q, &plan, batch(10), None, &env(&model)).is_err());
+    }
+
+    #[test]
+    fn empty_query_is_plan_error_not_panic() {
+        let model = DeviceModel::default();
+        let q = Query {
+            name: "e".into(),
+            ops: vec![],
+            window: WindowSpec::tumbling(D::from_secs(30)),
+            uses_window_state: false,
+        };
+        let plan = PhysicalPlan { per_op: vec![] };
+        let r = execute(&q, &plan, batch(1), None, &env(&model));
+        assert!(matches!(r, Err(Error::Plan(_))), "{r:?}");
     }
 
     #[test]
@@ -302,9 +387,73 @@ mod tests {
             .build()
             .unwrap();
         let w = batch(100);
-        let plan = DevicePlan::all(Device::Cpu, q.len());
-        let out = execute(&q, &plan, batch(100), Some(&w), &env(&model)).unwrap();
+        let out = execute(&q, &all(&q, Device::Cpu), batch(100), Some(&w), &env(&model)).unwrap();
         // Self-join on unique keys: 100 matches.
         assert_eq!(out.result.rows(), 100);
+    }
+
+    #[test]
+    fn branched_query_yields_multiple_sink_results() {
+        let model = DeviceModel::default();
+        // scan -> filter -> {select-k (branch sink), select-v (main sink)}
+        let q = QueryBuilder::scan("b")
+            .window(WindowSpec::sliding(D::from_secs(30), D::from_secs(5)))
+            .filter("v", Predicate::Ge(10.0))
+            .branch(|b| b.select(&["k"]))
+            .select(&["v"])
+            .build()
+            .unwrap();
+        let out = execute(&q, &all(&q, Device::Cpu), batch(100), None, &env(&model)).unwrap();
+        // Primary sink = highest id (select-v); one branch sink.
+        assert_eq!(out.result.schema.len(), 1);
+        assert!(out.result.column("v").is_ok());
+        assert_eq!(out.branch_results.len(), 1);
+        let (branch_id, branch) = &out.branch_results[0];
+        assert_eq!(*branch_id, 2);
+        assert!(branch.column("k").is_ok());
+        assert_eq!(branch.live_rows(), out.result.live_rows());
+        assert_eq!(out.traces.len(), 4);
+    }
+
+    #[test]
+    fn union_merges_branches() {
+        let model = DeviceModel::default();
+        // Diamond: rows < 10 fail the branch filter; union = all ∪ filtered.
+        let q = QueryBuilder::scan("u")
+            .window(WindowSpec::sliding(D::from_secs(30), D::from_secs(5)))
+            .merge_union(|b| b.filter("v", Predicate::Ge(10.0)))
+            .build()
+            .unwrap();
+        let out = execute(&q, &all(&q, Device::Cpu), batch(100), None, &env(&model)).unwrap();
+        assert_eq!(out.result.live_rows(), 100 + 90);
+        assert!(out.branch_results.is_empty());
+    }
+
+    #[test]
+    fn branch_boundary_charges_transfer_once() {
+        let model = DeviceModel::default();
+        // GPU filter fanning out to two CPU selects: the filter leaves
+        // the device once (one out-transfer), plus its entry.
+        let q = QueryBuilder::scan("b")
+            .window(WindowSpec::sliding(D::from_secs(30), D::from_secs(5)))
+            .filter("v", Predicate::Ge(10.0))
+            .branch(|b| b.select(&["k"]))
+            .select(&["v"])
+            .build()
+            .unwrap();
+        let plan = PhysicalPlan::from_devices(
+            &q,
+            &DevicePlan {
+                per_op: vec![Device::Cpu, Device::Gpu, Device::Cpu, Device::Cpu],
+            },
+        )
+        .unwrap();
+        let out = execute(&q, &plan, batch(100), None, &env(&model)).unwrap();
+        assert!(out.transfer > Duration::ZERO);
+        // The transfer equals entry(in) + exit(out) for the filter only.
+        let filter_trace = out.traces.iter().find(|t| t.op_id == 1).unwrap();
+        let expected = model.transfer_time(filter_trace.in_bytes as f64)
+            + model.transfer_time(filter_trace.out_bytes as f64);
+        assert_eq!(out.transfer, expected);
     }
 }

@@ -1,11 +1,33 @@
-//! Query representation: logical operation DAGs ([`dag`]), the fluent
-//! builder ([`builder`]) and physical execution over partitions with a
-//! per-operation device plan ([`exec`]).
+//! Query representation, layered the way production engines converge on
+//! (see `ARCHITECTURE.md` §Query-stack):
+//!
+//! 1. **Authoring** — the fluent [`builder`] (`scan → filter → … →
+//!    build`), including true DAG construction via
+//!    [`builder::QueryBuilder::branch`] (fan-out to multiple sinks) and
+//!    [`builder::QueryBuilder::merge_union`] (diamond merges);
+//! 2. **Logical plan** — the validated operation DAG ([`dag`]): nodes
+//!    name their producers, `validate()` enforces acyclicity /
+//!    connectivity / topological storage, `traverse()` is a real
+//!    Kahn-order iteration. [`optimize`] rewrites this DAG
+//!    (device-agnostic rules such as projection pushdown into joins);
+//! 3. **Physical plan** — [`physical`]: `MapDevice` (Alg. 2) annotates
+//!    every logical op with a device and the size estimate that drove
+//!    the choice, producing a [`physical::PhysicalPlan`];
+//! 4. **Execution** — [`exec`] walks the physical DAG over a
+//!    micro-batch, charging host↔device transfer at every boundary
+//!    (branch edges included) through the placement rule it shares with
+//!    the planner ([`physical::transfer_boundaries`]).
+//!
+//! Sessions ([`crate::session`]) sit on top: they own the shared
+//! coordinator state and drive many registered queries through one
+//! micro-batch loop.
 
 pub mod builder;
 pub mod dag;
 pub mod exec;
 pub mod optimize;
+pub mod physical;
 
 pub use builder::QueryBuilder;
 pub use dag::{OpKind, OpNode, OpSpec, Query};
+pub use physical::{DevicePlan, PhysicalOp, PhysicalPlan};

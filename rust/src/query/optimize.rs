@@ -16,11 +16,19 @@ pub fn optimize(query: &Query) -> Query {
 /// Rewrite `JoinWithWindow -> ProjectSelect(keep)` so the join only
 /// materializes the kept columns (plus nothing else); the subsequent
 /// selection becomes a metadata-only reorder.
+///
+/// DAG-aware: the rule fires only when the join's *sole* consumer is a
+/// projection — a join fanning out to several branches must still
+/// materialize every column the branches might read.
 pub fn pushdown_projection(query: &Query) -> Query {
     let mut out = query.clone();
-    for i in 0..out.ops.len().saturating_sub(1) {
-        let keep = match &out.ops[i + 1].spec {
-            OpSpec::ProjectSelect { keep } => keep.clone(),
+    let consumers = out.consumers();
+    for i in 0..out.ops.len() {
+        let keep = match consumers[i].as_slice() {
+            [only] => match &out.ops[*only].spec {
+                OpSpec::ProjectSelect { keep } => keep.clone(),
+                _ => continue,
+            },
             _ => continue,
         };
         if let OpSpec::JoinWithWindow { probe_key, build_key } = &out.ops[i].spec {
@@ -93,6 +101,20 @@ mod tests {
         let q = QueryBuilder::scan("t")
             .window(WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5)))
             .join_window("k", "k")
+            .build()
+            .unwrap();
+        let o = optimize(&q);
+        assert!(matches!(o.ops[1].spec, OpSpec::JoinWithWindow { .. }));
+    }
+
+    #[test]
+    fn join_feeding_two_branches_not_pruned() {
+        // A branch may read columns the projection drops: no pushdown.
+        let q = QueryBuilder::scan("t")
+            .window(WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5)))
+            .join_window("k", "k")
+            .branch(|b| b.sort("k", false))
+            .select(&["a"])
             .build()
             .unwrap();
         let o = optimize(&q);

@@ -1,0 +1,203 @@
+//! Physical plans: the device-annotated form of a logical [`Query`].
+//!
+//! The query surface is layered (see `ARCHITECTURE.md`):
+//!
+//! 1. **Logical plan** — the [`Query`] DAG the builder produces and
+//!    [`crate::query::optimize`] rewrites (device-agnostic),
+//! 2. **Physical plan** — this module: one [`PhysicalOp`] per logical
+//!    node carrying the device assignment and the planner's processed-
+//!    size estimate (`MapDevice`'s Eq. 7/8 inputs),
+//! 3. **Execution** — [`crate::query::exec`] walks the physical DAG.
+//!
+//! [`DevicePlan`] (a bare device vector) remains as the compact
+//! interchange form baselines and figure scenarios are written in; a
+//! `PhysicalPlan` subsumes it and is what the executor consumes.
+
+use crate::devices::Device;
+use crate::error::{Error, Result};
+use crate::query::dag::{OpKind, Query};
+
+/// Device assignment per DAG operation (index-aligned with `query.ops`).
+/// The compact policy form: baselines and Fig. 2/5 scenarios are
+/// expressed as bare device vectors and lifted into a [`PhysicalPlan`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DevicePlan {
+    pub per_op: Vec<Device>,
+}
+
+impl DevicePlan {
+    pub fn all(device: Device, n: usize) -> DevicePlan {
+        DevicePlan { per_op: vec![device; n] }
+    }
+
+    pub fn gpu_ops(&self) -> usize {
+        self.per_op.iter().filter(|d| **d == Device::Gpu).count()
+    }
+}
+
+/// One physical operation: a logical node bound to a device, with the
+/// planner's size estimate attached for inspection/replanning.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhysicalOp {
+    /// Logical node id (index into `query.ops`).
+    pub op_id: usize,
+    pub kind: OpKind,
+    pub device: Device,
+    /// Planner-estimated processed bytes per partition (Eq. 7/8's
+    /// `Part`-derived size); 0.0 when produced by a fixed policy.
+    pub est_bytes: f64,
+}
+
+/// The physical plan `MapDevice` (or a baseline policy) produces:
+/// index-aligned with the logical DAG it was planned for.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhysicalPlan {
+    pub per_op: Vec<PhysicalOp>,
+}
+
+impl PhysicalPlan {
+    /// Every op on one device (the all-GPU / all-CPU baselines).
+    pub fn uniform(query: &Query, device: Device) -> PhysicalPlan {
+        PhysicalPlan {
+            per_op: query
+                .ops
+                .iter()
+                .map(|op| PhysicalOp {
+                    op_id: op.id,
+                    kind: op.spec.kind(),
+                    device,
+                    est_bytes: 0.0,
+                })
+                .collect(),
+        }
+    }
+
+    /// Lift a bare device vector onto `query`'s DAG.
+    pub fn from_devices(query: &Query, devices: &DevicePlan) -> Result<PhysicalPlan> {
+        if devices.per_op.len() != query.ops.len() {
+            return Err(Error::Plan(format!(
+                "device plan covers {} ops, query has {}",
+                devices.per_op.len(),
+                query.ops.len()
+            )));
+        }
+        Ok(PhysicalPlan {
+            per_op: query
+                .ops
+                .iter()
+                .zip(&devices.per_op)
+                .map(|(op, &device)| PhysicalOp {
+                    op_id: op.id,
+                    kind: op.spec.kind(),
+                    device,
+                    est_bytes: 0.0,
+                })
+                .collect(),
+        })
+    }
+
+    /// The bare device vector (compat / display form).
+    pub fn devices(&self) -> DevicePlan {
+        DevicePlan { per_op: self.per_op.iter().map(|o| o.device).collect() }
+    }
+
+    pub fn device(&self, op_id: usize) -> Device {
+        self.per_op[op_id].device
+    }
+
+    pub fn gpu_ops(&self) -> usize {
+        self.per_op.iter().filter(|o| o.device == Device::Gpu).count()
+    }
+
+    pub fn len(&self) -> usize {
+        self.per_op.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.per_op.is_empty()
+    }
+}
+
+/// Alg. 2's `Trans` placement rule (first op / last op / device switch),
+/// generalized to the DAG and shared by the planner ([`map_device`]'s
+/// cost charging) and the executor (PCIe time charging) so the two can
+/// never diverge:
+///
+/// * a GPU-side op pays the **host→device** boundary when it is a source
+///   (reads host data) or any of its producers is CPU-mapped,
+/// * it pays the **device→host** boundary when it is a sink (its output
+///   leaves to the output stream) or any of its consumers is CPU-mapped.
+///
+/// `is_cpu(id)` reports whether node `id` is CPU-mapped; the planner,
+/// which maps in topological order over a line-3 all-GPU default, passes
+/// a closure that answers for already-visited nodes and defaults
+/// not-yet-mapped consumers to GPU — exactly Alg. 2's traversal.
+///
+/// [`map_device`]: crate::coordinator::planner::map_device
+pub fn transfer_boundaries(
+    inputs: &[usize],
+    consumers: &[usize],
+    is_cpu: impl Fn(usize) -> bool,
+) -> (bool, bool) {
+    let entering = inputs.is_empty() || inputs.iter().any(|&i| is_cpu(i));
+    let leaving = consumers.is_empty() || consumers.iter().any(|&c| is_cpu(c));
+    (entering, leaving)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ops::filter::Predicate;
+    use crate::query::builder::QueryBuilder;
+
+    fn chain() -> Query {
+        QueryBuilder::scan("t")
+            .filter("v", Predicate::Ge(0.0))
+            .select(&["v"])
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn uniform_covers_every_op() {
+        let q = chain();
+        let p = PhysicalPlan::uniform(&q, Device::Gpu);
+        assert_eq!(p.len(), q.len());
+        assert_eq!(p.gpu_ops(), q.len());
+        assert_eq!(p.devices(), DevicePlan::all(Device::Gpu, q.len()));
+    }
+
+    #[test]
+    fn from_devices_checks_arity() {
+        let q = chain();
+        let ok = PhysicalPlan::from_devices(&q, &DevicePlan::all(Device::Cpu, q.len()));
+        assert!(ok.is_ok());
+        let bad = PhysicalPlan::from_devices(&q, &DevicePlan::all(Device::Cpu, 1));
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn boundaries_match_linear_chain_rule() {
+        // chain of 3, all GPU: op0 enters (source), op2 leaves (sink),
+        // op1 pays nothing.
+        let never = |_: usize| false;
+        assert_eq!(transfer_boundaries(&[], &[1], never), (true, false));
+        assert_eq!(transfer_boundaries(&[0], &[2], never), (false, false));
+        assert_eq!(transfer_boundaries(&[1], &[], never), (false, true));
+    }
+
+    #[test]
+    fn boundaries_fire_on_device_switch() {
+        // CPU -> GPU -> CPU sandwich: the GPU op pays both directions.
+        let cpu_neighbors = |_: usize| true;
+        assert_eq!(transfer_boundaries(&[0], &[2], cpu_neighbors), (true, true));
+    }
+
+    #[test]
+    fn branch_boundary_fires_when_any_consumer_is_cpu() {
+        // GPU op fanning out to one GPU consumer and one CPU consumer
+        // still pays the device->host hop once.
+        let is_cpu = |id: usize| id == 2;
+        assert_eq!(transfer_boundaries(&[0], &[1, 2], is_cpu), (false, true));
+    }
+}

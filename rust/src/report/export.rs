@@ -10,7 +10,7 @@ use std::path::Path;
 /// Full-run JSON document (config echo + aggregates + per-batch series).
 pub fn run_to_json(r: &RunResult) -> Json {
     obj(vec![
-        ("workload", s(r.workload)),
+        ("workload", s(&r.workload)),
         ("mode", s(r.mode.name())),
         ("batches", num(r.batches.len() as f64)),
         ("avg_latency_s", num(r.avg_latency)),

@@ -12,6 +12,7 @@ use crate::devices::Device;
 use crate::engine::window::WindowSpec;
 use crate::error::Result;
 use crate::query::exec::{self, DevicePlan, ExecEnv};
+use crate::query::physical::PhysicalPlan;
 use crate::source::traffic::Traffic;
 use crate::workloads::{self, synthetic};
 use std::time::Duration;
@@ -56,7 +57,8 @@ pub fn spj_cell(
     let input = gen.batch_of_bytes(batch_bytes);
     // Build side: window of comparable size.
     let build = gen.batch_of_bytes(batch_bytes);
-    let out = exec::execute(&w.query, plan, input, Some(&build), &env)?;
+    let physical = PhysicalPlan::from_devices(&w.query, plan)?;
+    let out = exec::execute(&w.query, &physical, input, Some(&build), &env)?;
     Ok((out.proc.as_secs_f64(), out.transfer.as_secs_f64()))
 }
 
@@ -141,12 +143,13 @@ pub fn pcie_ratio(model: &DeviceModel, bytes: f64) -> f64 {
 pub fn plan_string(workload: &str, part_bytes: f64, inf_pt: f64) -> Result<String> {
     let w = workloads::by_name(workload)?;
     let est = SizeEstimator::new(w.query.len());
-    let plan = crate::coordinator::planner::map_device(&w.query, part_bytes, inf_pt, 0.1, &est);
+    let plan =
+        crate::coordinator::planner::map_device(&w.query, part_bytes, inf_pt, 0.1, &est)?;
     Ok(w.query
         .ops
         .iter()
         .zip(&plan.per_op)
-        .map(|(op, d)| format!("{}:{}", op.spec.kind().name(), d.name()))
+        .map(|(op, p)| format!("{}:{}", op.spec.kind().name(), p.device.name()))
         .collect::<Vec<_>>()
         .join(" → "))
 }

@@ -1,0 +1,808 @@
+//! The session — the top of the query stack.
+//!
+//! A [`Session`] owns everything the LMStream coordinator shares across
+//! queries: the calibrated [`DeviceModel`], the asynchronous
+//! [`OnlineOptimizer`] (and the inflection point it maintains), the PJRT
+//! [`Runtime`] handle, the [`Config`], and per-query learned
+//! [`SizeEstimator`]s. Queries are *registered* —
+//! [`Session::register`] attaches a workload (query + source),
+//! [`Session::register_shared`] attaches an additional query to an
+//! already-registered source — and [`Session::run`] drives them all
+//! through one micro-batch loop (Fig. 3's execution flow, generalized to
+//! concurrent queries):
+//!
+//! * **shared admission** — per source, `ConstructMicroBatch` (Alg. 1)
+//!   admits against the *tightest* latency bound across that source's
+//!   queries, so a sliding-window query co-registered with a tumbling
+//!   one keeps the batch latency-bounded for both;
+//! * **per-query planning & windows** — every admitted micro-batch is
+//!   planned (`MapDevice`, Alg. 2) and executed once per query, each
+//!   with its own window state, [`SizeEstimator`], and metrics;
+//! * **shared optimization** — one online regression (Eq. 10) fits the
+//!   inflection point from the primary query's history.
+//!
+//! One iteration: poll the source(s) → admission (or the baseline's
+//! static trigger) → collect the async optimizer's latest inflection
+//! point → per-query `MapDevice` planning → per-query execution →
+//! metrics update → window-state maintenance → submit the optimizer's
+//! next fit. Identical code drives the simulated clock (paper-scale
+//! experiments) and the wall clock (real PJRT runs).
+//!
+//! The free functions in [`crate::coordinator::driver`] remain as thin
+//! single-query shims over this type.
+
+use crate::cluster;
+use crate::config::{Config, ExecBackend, Mode};
+use crate::coordinator::admission::{Admission, AdmissionDecision};
+use crate::coordinator::checkpoint::{Checkpoint, CheckpointStore};
+use crate::coordinator::metrics::{BatchRecord, Metrics, PhaseTotals};
+use crate::coordinator::optimizer::{HistoryPoint, OnlineOptimizer};
+use crate::coordinator::planner::{map_device, static_preference_plan, SizeEstimator};
+use crate::devices::model::DeviceModel;
+use crate::devices::Device;
+use crate::engine::column::ColumnBatch;
+use crate::engine::dataset::MicroBatch;
+use crate::engine::partition::mean_partition_bytes;
+use crate::engine::sink::Sink;
+use crate::engine::window::{WindowKind, WindowState};
+use crate::error::{Error, Result};
+use crate::query::dag::{OpKind, Query};
+use crate::query::exec::{self, ExecEnv, OpTrace};
+use crate::query::physical::PhysicalPlan;
+use crate::runtime::client::Runtime;
+use crate::sim::{Clock, SimClock, Time, WallClock};
+use crate::workloads::Workload;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// Tumbling-window bootstrap bound before any history exists (§III-C's
+/// Eq. 3 is undefined for i < 2; the paper seeds parameters from
+/// pre-experiments — three seconds is our seed).
+pub(crate) const INITIAL_TUMBLING_BOUND: Duration = Duration::from_secs(3);
+
+/// Optimizer pickup timeout: how long the session will wait on the async
+/// regression before planning (bounds Table IV's "Optimization Blocking").
+const OPT_PICKUP_TIMEOUT: Duration = Duration::from_millis(20);
+
+/// Handle to a query registered on a [`Session`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueryId(pub(crate) usize);
+
+/// Everything a finished per-query run reports.
+#[derive(Debug)]
+pub struct RunResult {
+    /// Registered query name.
+    pub workload: String,
+    pub mode: Mode,
+    pub batches: Vec<BatchRecord>,
+    /// Mean per-dataset end-to-end latency, seconds (Fig. 6 metric).
+    pub avg_latency: f64,
+    /// Eq. 4 average throughput, bytes/s (Fig. 7 metric).
+    pub avg_throughput: f64,
+    /// Table IV phase totals.
+    pub phases: PhaseTotals,
+    /// Per-dataset latencies (distribution analysis).
+    pub dataset_latencies: Vec<f64>,
+    /// Final inflection point (bytes).
+    pub final_inf_pt: f64,
+}
+
+impl RunResult {
+    /// Mean processing-phase time per micro-batch (Fig. 10 metric), s.
+    pub fn avg_proc(&self) -> f64 {
+        if self.batches.is_empty() {
+            return 0.0;
+        }
+        self.batches.iter().map(|b| b.proc.as_secs_f64()).sum::<f64>()
+            / self.batches.len() as f64
+    }
+
+    /// Mean per-batch max latency, s.
+    pub fn avg_max_latency(&self) -> f64 {
+        if self.batches.is_empty() {
+            return 0.0;
+        }
+        self.batches
+            .iter()
+            .map(|b| b.max_latency.as_secs_f64())
+            .sum::<f64>()
+            / self.batches.len() as f64
+    }
+}
+
+/// One registered query: its (rewritten) logical plan plus the per-query
+/// state the session keeps across runs.
+struct QueryDef {
+    name: String,
+    source: usize,
+    /// The optimizer-rewritten logical DAG the planner/executor use.
+    query: Query,
+    has_join: bool,
+    size_est: SizeEstimator,
+}
+
+/// One registered source: the workload whose generator/traffic feed it,
+/// and the queries consuming its micro-batches.
+struct SourceDef {
+    workload: Workload,
+    /// Index into `Session::queries` of the source's first-registered
+    /// (primary) query — admission throughput estimates, optimizer
+    /// history, and checkpoints key off it.
+    primary: usize,
+    queries: Vec<usize>,
+}
+
+/// A streaming session: shared coordinator state + registered queries.
+/// See the module docs for the execution model.
+pub struct Session<'rt> {
+    cfg: Config,
+    model: DeviceModel,
+    owned_runtime: Option<Runtime>,
+    borrowed_runtime: Option<&'rt Runtime>,
+    optimizer: OnlineOptimizer,
+    inf_pt: f64,
+    sources: Vec<SourceDef>,
+    queries: Vec<QueryDef>,
+}
+
+impl<'rt> Session<'rt> {
+    /// Create a session without a PJRT runtime (Simulated backend, or
+    /// Real backend with CPU-only plans).
+    pub fn new(cfg: Config) -> Result<Session<'rt>> {
+        Self::build(cfg, None, None)
+    }
+
+    /// Create a session owning `runtime` (Real backend GPU path).
+    pub fn with_runtime(cfg: Config, runtime: Runtime) -> Result<Session<'rt>> {
+        Self::build(cfg, Some(runtime), None)
+    }
+
+    /// Create a session borrowing an externally-managed runtime (the
+    /// driver-shim path).
+    pub fn with_runtime_ref(cfg: Config, runtime: Option<&'rt Runtime>) -> Result<Session<'rt>> {
+        Self::build(cfg, None, runtime)
+    }
+
+    fn build(
+        cfg: Config,
+        owned: Option<Runtime>,
+        borrowed: Option<&'rt Runtime>,
+    ) -> Result<Session<'rt>> {
+        cfg.validate()?;
+        let optimizer = OnlineOptimizer::new(
+            cfg.online_optimizer && cfg.mode == Mode::LmStream,
+            cfg.history_cap,
+            cfg.seed,
+        );
+        let inf_pt = cfg.initial_inflection_bytes;
+        Ok(Session {
+            cfg,
+            model: DeviceModel::default(),
+            owned_runtime: owned,
+            borrowed_runtime: borrowed,
+            optimizer,
+            inf_pt,
+            sources: Vec::new(),
+            queries: Vec::new(),
+        })
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Registered query count.
+    pub fn num_queries(&self) -> usize {
+        self.queries.len()
+    }
+
+    /// Register a workload: its query plus the source stream feeding it.
+    /// The logical plan is rewritten ([`crate::query::optimize`]) and
+    /// validated here, once, not per run.
+    pub fn register(&mut self, workload: Workload) -> Result<QueryId> {
+        let query = Self::prepare(&workload.query)?;
+        let source = self.sources.len();
+        let qidx = self.queries.len();
+        self.queries.push(QueryDef {
+            name: workload.name.to_string(),
+            source,
+            has_join: has_join(&query),
+            size_est: SizeEstimator::new(query.len()),
+            query,
+        });
+        self.sources.push(SourceDef {
+            workload,
+            primary: qidx,
+            queries: vec![qidx],
+        });
+        Ok(QueryId(qidx))
+    }
+
+    /// Register an additional query on the source of an
+    /// already-registered query: both consume every micro-batch the
+    /// shared admission controller admits, each through its own plan,
+    /// window state and metrics.
+    pub fn register_shared(
+        &mut self,
+        share_source_with: QueryId,
+        name: &str,
+        query: Query,
+    ) -> Result<QueryId> {
+        let source = self
+            .queries
+            .get(share_source_with.0)
+            .ok_or_else(|| {
+                Error::Plan(format!("unknown query id {}", share_source_with.0))
+            })?
+            .source;
+        let query = Self::prepare(&query)?;
+        let qidx = self.queries.len();
+        self.queries.push(QueryDef {
+            name: name.to_string(),
+            source,
+            has_join: has_join(&query),
+            size_est: SizeEstimator::new(query.len()),
+            query,
+        });
+        self.sources[source].queries.push(qidx);
+        Ok(QueryId(qidx))
+    }
+
+    /// Logical rewrites + validation (register-time, not per-run).
+    fn prepare(query: &Query) -> Result<Query> {
+        let optimized = crate::query::optimize::optimize(query);
+        optimized.validate()?;
+        Ok(optimized)
+    }
+
+    fn runtime(&self) -> Option<&Runtime> {
+        match self.borrowed_runtime {
+            Some(r) => Some(r),
+            None => self.owned_runtime.as_ref(),
+        }
+    }
+
+    /// Run every registered query for `duration` (simulated or wall
+    /// time); returns one [`RunResult`] per query, in registration
+    /// order. Learned state (size estimators, optimizer history, the
+    /// inflection point) persists across calls; streams, windows and
+    /// metrics start fresh.
+    pub fn run(&mut self, duration: Duration) -> Result<Vec<RunResult>> {
+        self.run_delivering(duration, &mut |_, _, _, _| Ok(()))
+    }
+
+    /// [`Session::run`] delivering one query's results to `sink`.
+    pub fn run_with_sink(
+        &mut self,
+        duration: Duration,
+        query: QueryId,
+        sink: &mut dyn Sink,
+    ) -> Result<Vec<RunResult>> {
+        if query.0 >= self.queries.len() {
+            return Err(Error::Plan(format!(
+                "unknown query id {} (session has {} registered queries)",
+                query.0,
+                self.queries.len()
+            )));
+        }
+        self.run_delivering(duration, &mut |qidx, batch_idx, result, at| {
+            if qidx == query.0 {
+                sink.deliver(batch_idx, result, at)?;
+            }
+            Ok(())
+        })
+    }
+
+    fn run_delivering(
+        &mut self,
+        duration: Duration,
+        deliver: &mut dyn FnMut(usize, usize, &ColumnBatch, Time) -> Result<()>,
+    ) -> Result<Vec<RunResult>> {
+        if self.queries.is_empty() {
+            return Err(Error::Plan("no queries registered on this session".into()));
+        }
+        let clock: Box<dyn Clock> = match self.cfg.backend {
+            ExecBackend::Simulated => Box::new(SimClock::new()),
+            ExecBackend::Real => Box::new(WallClock::new()),
+        };
+        self.run_with_clock(duration, clock.as_ref(), deliver)
+    }
+
+    fn run_with_clock(
+        &mut self,
+        duration: Duration,
+        clock: &dyn Clock,
+        deliver: &mut dyn FnMut(usize, usize, &ColumnBatch, Time) -> Result<()>,
+    ) -> Result<Vec<RunResult>> {
+        let cfg = self.cfg.clone();
+        let runtime = match self.borrowed_runtime {
+            Some(r) => Some(r),
+            None => self.owned_runtime.as_ref(),
+        };
+
+        // §III-E checkpoint/state-flush substrate (keyed per source by
+        // its primary query's name).
+        let ckpt_store = match &cfg.checkpoint_dir {
+            Some(dir) => Some(CheckpointStore::new(Path::new(dir))?),
+            None => None,
+        };
+
+        // ---- Per-source run state.
+        let num_sources = self.sources.len();
+        let mut streams = Vec::with_capacity(num_sources);
+        let mut admissions = Vec::with_capacity(num_sources);
+        // Shared coordinator state (inflection point, optimizer history)
+        // is snapshotted identically into every source's checkpoint —
+        // restore it from the first checkpoint found only, so resume is
+        // independent of registration order and history isn't
+        // re-recorded once per source. Stream fast-forward stays
+        // per source.
+        let mut shared_state_restored = false;
+        for src in &self.sources {
+            let mut stream = src.workload.make_stream(cfg.seed);
+            let primary_window = self.queries[src.primary].query.window;
+            admissions.push(Admission::new(primary_window, INITIAL_TUMBLING_BOUND));
+            if let Some(st) = &ckpt_store {
+                if let Some(ckpt) = st.load(&self.queries[src.primary].name)? {
+                    if !shared_state_restored {
+                        self.inf_pt = ckpt.inf_pt.max(1.0);
+                        for h in &ckpt.history {
+                            self.optimizer.record(*h, INITIAL_TUMBLING_BOUND);
+                        }
+                        shared_state_restored = true;
+                    }
+                    stream.fast_forward(ckpt.processed_up_to);
+                }
+            }
+            streams.push(stream);
+        }
+        let mut next_trigger: Vec<Time> =
+            vec![Time::ZERO.add(cfg.trigger); num_sources];
+        let mut construct_acc: Vec<Duration> = vec![Duration::ZERO; num_sources];
+
+        // ---- Per-query run state.
+        let num_queries = self.queries.len();
+        let mut windows: Vec<WindowState> =
+            (0..num_queries).map(|_| WindowState::new()).collect();
+        let mut metrics: Vec<Metrics> = (0..num_queries).map(|_| Metrics::new()).collect();
+
+        let end = Time::ZERO.add(duration);
+
+        while clock.now() < end {
+            // ---- Buffering phase: trigger (baseline) or admission
+            // (LMStream), per source.
+            let mut admitted: Vec<(usize, MicroBatch)> = Vec::new();
+            if cfg.mode.uses_trigger() {
+                let wake = next_trigger.iter().min().copied().expect(">=1 source");
+                clock.sleep_until(wake);
+                if clock.now() >= end {
+                    break;
+                }
+                for s in 0..num_sources {
+                    if next_trigger[s] > clock.now() {
+                        continue;
+                    }
+                    let data = streams[s].poll(clock.now());
+                    next_trigger[s] = next_trigger[s].add(cfg.trigger);
+                    if !data.is_empty() {
+                        admitted.push((s, MicroBatch::new(data)));
+                    }
+                }
+            } else {
+                let deadline = clock.now().add(cfg.poll_interval);
+                clock.sleep_until(deadline);
+                if clock.now() >= end {
+                    break;
+                }
+                for s in 0..num_sources {
+                    let t0 = Instant::now();
+                    let data = streams[s].poll(clock.now());
+                    let primary = self.sources[s].primary;
+                    let thput = {
+                        let t = metrics[primary].avg_throughput();
+                        if t > 0.0 { t } else { cfg.initial_throughput }
+                    };
+                    // Shared admission: the tightest bound across the
+                    // source's queries keeps every query's latency
+                    // target honored.
+                    let bound = self.sources[s]
+                        .queries
+                        .iter()
+                        .map(|&qi| query_bound(&self.queries[qi].query, &metrics[qi]))
+                        .min()
+                        .expect("source has >=1 query");
+                    let decision = admissions[s].construct_with_bound(
+                        data,
+                        clock.now(),
+                        thput,
+                        bound,
+                    );
+                    construct_acc[s] += t0.elapsed();
+                    match decision {
+                        AdmissionDecision::Poll | AdmissionDecision::Buffer { .. } => {}
+                        AdmissionDecision::Admit(mb) => admitted.push((s, mb)),
+                    }
+                }
+            }
+
+            for (s, batch) in admitted {
+                let admitted_at = clock.now();
+                let batch_bytes = batch.wire_bytes();
+                let primary = self.sources[s].primary;
+
+                // ---- Optimizer pickup (must land before planning).
+                let (new_inf, opt_blocking) = if cfg.mode == Mode::LmStream {
+                    self.optimizer.take(self.inf_pt, OPT_PICKUP_TIMEOUT)
+                } else {
+                    (self.inf_pt, Duration::ZERO)
+                };
+                self.inf_pt = new_inf;
+
+                // ---- Per-query planning + execution.
+                struct Pending {
+                    qi: usize,
+                    result: ColumnBatch,
+                    proc: Duration,
+                    traces: Vec<OpTrace>,
+                    map_device_time: Duration,
+                    gpu_ops: usize,
+                    total_ops: usize,
+                }
+                let mut pending: Vec<Pending> = Vec::new();
+                let mut advance = Duration::ZERO;
+                let query_ids = self.sources[s].queries.clone();
+                for &qi in &query_ids {
+                    let qdef = &self.queries[qi];
+                    let query = &qdef.query;
+
+                    // Window maintenance + execution input assembly.
+                    if let Some(newest) = batch.newest_event_time() {
+                        windows[qi].evict(newest, &query.window);
+                    }
+                    let snapshot = windows[qi].snapshot()?;
+                    let input: ColumnBatch = if query.uses_window_state && !qdef.has_join
+                    {
+                        // Windowed aggregation recomputes over state ∪ new.
+                        match &snapshot {
+                            Some(st) => ColumnBatch::concat(&[st, &batch.concat()?])?,
+                            None => batch.concat()?,
+                        }
+                    } else {
+                        batch.concat()?
+                    };
+
+                    // Query planning (MapDevice or a fixed policy).
+                    let t_plan = Instant::now();
+                    let plan: PhysicalPlan = match cfg.mode {
+                        Mode::LmStream => {
+                            // Part_(i,j): partition share of the data the
+                            // processing phase actually touches.
+                            let part =
+                                mean_partition_bytes(input.bytes(), cfg.num_cores);
+                            map_device(
+                                query,
+                                part,
+                                self.inf_pt,
+                                cfg.base_trans_cost,
+                                &qdef.size_est,
+                            )?
+                        }
+                        Mode::Baseline | Mode::AllGpu => {
+                            PhysicalPlan::uniform(query, Device::Gpu)
+                        }
+                        Mode::BaselineCpu | Mode::AllCpu => {
+                            PhysicalPlan::uniform(query, Device::Cpu)
+                        }
+                        Mode::StaticPreference => static_preference_plan(query),
+                    };
+                    let map_device_time = t_plan.elapsed();
+                    // A join's build side before any state: empty window.
+                    let empty_window = ColumnBatch::empty(input.schema.clone());
+                    let join_side = if qdef.has_join {
+                        Some(snapshot.as_ref().unwrap_or(&empty_window))
+                    } else {
+                        None
+                    };
+
+                    // Processing phase (single executor or cluster-wide).
+                    let (result, proc, traces): (ColumnBatch, Duration, Vec<OpTrace>) =
+                        match &cfg.cluster {
+                            None => {
+                                let env = ExecEnv {
+                                    model: &self.model,
+                                    backend: cfg.backend,
+                                    num_cores: cfg.num_cores,
+                                    num_gpus: cfg.num_gpus,
+                                    runtime,
+                                };
+                                let o =
+                                    exec::execute(query, &plan, input, join_side, &env)?;
+                                (o.result, o.proc, o.traces)
+                            }
+                            Some(spec) => {
+                                let o = cluster::execute_on_cluster(
+                                    spec,
+                                    query,
+                                    &plan,
+                                    input,
+                                    join_side,
+                                    &self.model,
+                                    cfg.backend,
+                                    runtime,
+                                )?;
+                                // Merge per-executor traces (sum byte
+                                // volumes per op) for the size estimator.
+                                let mut merged: Vec<OpTrace> =
+                                    o.per_executor[0].traces.clone();
+                                for ex in &o.per_executor[1..] {
+                                    for (m, t) in merged.iter_mut().zip(&ex.traces) {
+                                        m.in_bytes += t.in_bytes;
+                                        m.out_bytes += t.out_bytes;
+                                    }
+                                }
+                                (o.result, o.proc, merged)
+                            }
+                        };
+                    advance += proc + map_device_time;
+                    pending.push(Pending {
+                        qi,
+                        result,
+                        proc,
+                        traces,
+                        map_device_time,
+                        gpu_ops: plan.gpu_ops(),
+                        total_ops: query.len(),
+                    });
+                }
+
+                clock.advance(advance + construct_acc[s] + opt_blocking);
+
+                // ---- Metrics (Eqs. 4/5, Table IV) + sinks + learning.
+                let buffs: Vec<Duration> = batch
+                    .datasets
+                    .iter()
+                    .map(|d| admitted_at.saturating_sub(d.created_at))
+                    .collect();
+                for p in pending {
+                    deliver(p.qi, metrics[p.qi].batches(), &p.result, clock.now())?;
+                    // Shared (per-source) phase costs are charged to the
+                    // primary query only, so phase totals don't double-
+                    // count admission/optimizer time.
+                    let shared = p.qi == primary;
+                    let rec = BatchRecord {
+                        index: metrics[p.qi].batches(),
+                        admitted_at,
+                        num_datasets: batch.num_datasets(),
+                        bytes: batch_bytes,
+                        max_buffering: Duration::ZERO, // filled by record
+                        proc: p.proc,
+                        max_latency: Duration::ZERO, // filled by record
+                        inf_pt: self.inf_pt,
+                        gpu_ops: p.gpu_ops,
+                        total_ops: p.total_ops,
+                        construct_time: if shared {
+                            construct_acc[s]
+                        } else {
+                            Duration::ZERO
+                        },
+                        map_device_time: p.map_device_time,
+                        opt_blocking: if shared { opt_blocking } else { Duration::ZERO },
+                    };
+                    metrics[p.qi].record(rec, &buffs);
+                    self.queries[p.qi].size_est.observe(&p.traces);
+                }
+                construct_acc[s] = Duration::ZERO;
+
+                // ---- Async parameter optimization (Eq. 10 inputs), fed
+                // from the source's primary query.
+                if cfg.mode == Mode::LmStream {
+                    let m = &metrics[primary];
+                    let last = m.records().last().expect("just recorded");
+                    let target = query_bound(&self.queries[primary].query, m);
+                    self.optimizer.record(
+                        HistoryPoint {
+                            throughput: m.avg_throughput(),
+                            max_latency: last.max_latency.as_secs_f64(),
+                            inf_pt: self.inf_pt,
+                        },
+                        target,
+                    );
+                }
+
+                // ---- Window state ingests the processed datasets.
+                for &qi in &query_ids {
+                    if self.queries[qi].query.uses_window_state {
+                        windows[qi].push(&batch.datasets);
+                    }
+                }
+
+                // ---- §III-E checkpoint / state flush.
+                if let Some(st) = &ckpt_store {
+                    let newest = batch
+                        .datasets
+                        .iter()
+                        .map(|d| d.created_at)
+                        .max()
+                        .unwrap_or(admitted_at);
+                    let m = &metrics[primary];
+                    st.save(&Checkpoint {
+                        workload: self.queries[primary].name.clone(),
+                        batches: m.batches(),
+                        processed_up_to: newest,
+                        inf_pt: self.inf_pt,
+                        cumulative_bytes: m.cumulative_bytes(),
+                        cumulative_proc_secs: m.cumulative_proc_secs(),
+                        max_lat_sum_secs: m.max_lat_sum_secs(),
+                        history: self.optimizer.history().to_vec(),
+                    })?;
+                }
+
+                // Baseline trigger catches up if processing overran.
+                if cfg.mode.uses_trigger() && next_trigger[s] < clock.now() {
+                    next_trigger[s] = clock.now();
+                }
+            }
+        }
+
+        Ok(self
+            .queries
+            .iter()
+            .zip(metrics)
+            .map(|(q, m)| RunResult {
+                workload: q.name.clone(),
+                mode: cfg.mode,
+                avg_latency: m.avg_dataset_latency(),
+                avg_throughput: m.avg_throughput(),
+                phases: m.phase_totals(),
+                dataset_latencies: m.dataset_latencies().to_vec(),
+                final_inf_pt: self.inf_pt,
+                batches: m.records().to_vec(),
+            })
+            .collect())
+    }
+}
+
+fn has_join(query: &Query) -> bool {
+    query
+        .ops
+        .iter()
+        .any(|o| matches!(o.spec.kind(), OpKind::Join))
+}
+
+/// Eq. 2/3's per-query latency bound: the slide time for sliding
+/// windows, the running average of past max-latencies (bootstrapped) for
+/// tumbling windows.
+fn query_bound(query: &Query, metrics: &Metrics) -> Duration {
+    match query.window.kind() {
+        WindowKind::Sliding => query.window.slide_time(),
+        WindowKind::Tumbling => metrics
+            .past_max_lat_avg()
+            .unwrap_or(INITIAL_TUMBLING_BOUND),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ops::aggregate::AggSpec;
+    use crate::engine::ops::filter::Predicate;
+    use crate::query::QueryBuilder;
+    use crate::workloads;
+
+    fn session(mode: Mode) -> Session<'static> {
+        Session::new(Config { mode, ..Config::default() }).unwrap()
+    }
+
+    #[test]
+    fn empty_session_rejects_run() {
+        let mut s = session(Mode::LmStream);
+        assert!(s.run(Duration::from_secs(10)).is_err());
+    }
+
+    #[test]
+    fn single_query_session_matches_driver_shim() {
+        let w = workloads::by_name("lr1s").unwrap();
+        let mut s = session(Mode::LmStream);
+        s.register(w).unwrap();
+        let rs = s.run(Duration::from_secs(60)).unwrap();
+        assert_eq!(rs.len(), 1);
+        assert!(!rs[0].batches.is_empty());
+
+        let w2 = workloads::by_name("lr1s").unwrap();
+        let cfg = Config { mode: Mode::LmStream, ..Config::default() };
+        let shim = crate::coordinator::driver::run(&w2, &cfg, Duration::from_secs(60), None)
+            .unwrap();
+        assert_eq!(shim.batches.len(), rs[0].batches.len());
+        assert_eq!(shim.avg_throughput, rs[0].avg_throughput);
+    }
+
+    #[test]
+    fn two_queries_share_one_source() {
+        let w = workloads::by_name("lr1s").unwrap();
+        let window = w.query.window;
+        let mut s = session(Mode::LmStream);
+        let first = s.register(w).unwrap();
+        let agg = QueryBuilder::scan("congestion")
+            .window(window)
+            .filter("speed", Predicate::Lt(60.0))
+            .aggregate(&["segment"], vec![AggSpec::avg("speed", "avgSpeed")], None)
+            .build()
+            .unwrap();
+        s.register_shared(first, "congestion", agg).unwrap();
+        let rs = s.run(Duration::from_secs(90)).unwrap();
+        assert_eq!(rs.len(), 2);
+        // Both queries saw every admitted batch.
+        assert_eq!(rs[0].batches.len(), rs[1].batches.len());
+        assert!(!rs[0].batches.is_empty());
+        assert!(rs[0].avg_throughput > 0.0 && rs[1].avg_throughput > 0.0);
+        assert_eq!(rs[1].workload, "congestion");
+    }
+
+    #[test]
+    fn multi_query_runs_are_deterministic() {
+        // Same seed, same registrations → byte-identical outcomes.
+        let run_once = || {
+            let w = workloads::by_name("lr1s").unwrap();
+            let window = w.query.window;
+            let mut s = session(Mode::LmStream);
+            let first = s.register(w).unwrap();
+            let q = QueryBuilder::scan("side")
+                .window(window)
+                .filter("speed", Predicate::Lt(60.0))
+                .build()
+                .unwrap();
+            s.register_shared(first, "side", q).unwrap();
+            s.run(Duration::from_secs(60)).unwrap()
+        };
+        let a = run_once();
+        let b = run_once();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.batches.len(), y.batches.len());
+            assert_eq!(x.avg_throughput, y.avg_throughput);
+        }
+    }
+
+    #[test]
+    fn unknown_share_handle_rejected() {
+        let mut s = session(Mode::LmStream);
+        let q = QueryBuilder::scan("q").build().unwrap();
+        assert!(s.register_shared(QueryId(7), "q", q).is_err());
+    }
+
+    #[test]
+    fn run_with_sink_rejects_unknown_query_id() {
+        let mut s = session(Mode::LmStream);
+        s.register(workloads::by_name("lr1s").unwrap()).unwrap();
+        let mut sink = crate::engine::sink::NullSink;
+        let r = s.run_with_sink(Duration::from_secs(5), QueryId(5), &mut sink);
+        assert!(r.is_err(), "out-of-range QueryId must error, not no-op");
+    }
+
+    #[test]
+    fn invalid_config_rejected_at_session_creation() {
+        let cfg = Config { num_cores: 0, ..Config::default() };
+        assert!(Session::new(cfg).is_err());
+    }
+
+    #[test]
+    fn branched_query_runs_through_session() {
+        let w = workloads::by_name("lr2s").unwrap();
+        let window = w.query.window;
+        let mut s = session(Mode::LmStream);
+        let first = s.register(w).unwrap();
+        // One scan fanning out: congestion aggregate + slow-vehicle sort.
+        let fanout = QueryBuilder::scan("fanout")
+            .window(window)
+            .filter("speed", Predicate::Lt(80.0))
+            .branch(|b| {
+                b.aggregate(&["segment"], vec![AggSpec::count("reports")], None)
+            })
+            .sort("speed", false)
+            .build()
+            .unwrap();
+        s.register_shared(first, "fanout", fanout).unwrap();
+        let rs = s.run(Duration::from_secs(60)).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert!(!rs[1].batches.is_empty());
+    }
+}

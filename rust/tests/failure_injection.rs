@@ -6,6 +6,7 @@ use lmstream::devices::Device;
 use lmstream::engine::column::{Column, ColumnBatch, Field, Schema};
 use lmstream::error::Error;
 use lmstream::query::exec::{self, DevicePlan, ExecEnv};
+use lmstream::query::physical::PhysicalPlan;
 use lmstream::runtime::artifacts::Manifest;
 use lmstream::workloads;
 use std::io::Write;
@@ -118,8 +119,50 @@ fn plan_arity_mismatch_rejected() {
     };
     let schema = Schema::new(vec![Field::f32("x")]);
     let batch = ColumnBatch::new(schema, vec![Column::F32(vec![1.0])]).unwrap();
-    let bad_plan = DevicePlan::all(Device::Cpu, 1); // query has more ops
-    let r = exec::execute(&w.query, &bad_plan, batch, None, &env);
+    // Lifting a short device vector onto the DAG is itself rejected…
+    let bad_devices = DevicePlan::all(Device::Cpu, 1); // query has more ops
+    assert!(matches!(
+        PhysicalPlan::from_devices(&w.query, &bad_devices),
+        Err(Error::Plan(_))
+    ));
+    // …and a hand-built under-length physical plan is rejected at
+    // execution time.
+    let truncated = PhysicalPlan {
+        per_op: PhysicalPlan::uniform(&w.query, Device::Cpu).per_op[..1].to_vec(),
+    };
+    let r = exec::execute(&w.query, &truncated, batch, None, &env);
+    assert!(matches!(r, Err(Error::Plan(_))), "{r:?}");
+}
+
+#[test]
+fn empty_query_planning_and_execution_are_plan_errors() {
+    use lmstream::coordinator::planner::{map_device, SizeEstimator};
+    use lmstream::engine::window::WindowSpec;
+    use lmstream::query::Query;
+
+    let empty = Query {
+        name: "empty".into(),
+        ops: vec![],
+        window: WindowSpec::tumbling(std::time::Duration::from_secs(30)),
+        uses_window_state: false,
+    };
+    // Planning an empty query must error, not underflow `n - 1`.
+    let est = SizeEstimator::new(0);
+    let planned = map_device(&empty, 64.0 * 1024.0, 150.0 * 1024.0, 0.1, &est);
+    assert!(matches!(planned, Err(Error::Plan(_))), "{planned:?}");
+
+    // Executing one must error too.
+    let model = lmstream::devices::model::DeviceModel::default();
+    let env = ExecEnv {
+        model: &model,
+        backend: lmstream::config::ExecBackend::Simulated,
+        num_cores: 12,
+        num_gpus: 1,
+        runtime: None,
+    };
+    let schema = Schema::new(vec![Field::f32("x")]);
+    let batch = ColumnBatch::new(schema, vec![Column::F32(vec![1.0])]).unwrap();
+    let r = exec::execute(&empty, &PhysicalPlan { per_op: vec![] }, batch, None, &env);
     assert!(matches!(r, Err(Error::Plan(_))), "{r:?}");
 }
 

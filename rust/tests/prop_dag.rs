@@ -1,0 +1,147 @@
+//! Property tests for the operation-DAG invariants (seeded sweeps via
+//! `util::prop`): every builder-produced DAG validates and traverses
+//! producers-first; corrupted graphs (cycles via forward edges,
+//! disconnected nodes, duplicate edges) are rejected; MapDevice covers
+//! any valid DAG with a full physical plan.
+
+use lmstream::coordinator::planner::{map_device, SizeEstimator};
+use lmstream::engine::ops::filter::Predicate;
+use lmstream::engine::window::WindowSpec;
+use lmstream::query::dag::{OpNode, OpSpec, Query};
+use lmstream::query::QueryBuilder;
+use lmstream::util::prop::{prop_assert, Gen, Runner};
+use std::collections::HashSet;
+use std::time::Duration;
+
+/// Append 1..5 random ops (possibly branching/merging recursively).
+fn grow(
+    mut b: QueryBuilder,
+    g: &mut Gen,
+    depth: usize,
+    join_used: &mut bool,
+) -> QueryBuilder {
+    let steps = g.usize_in(1..5);
+    for _ in 0..steps {
+        b = match g.u64(8) {
+            0 => b.filter("x", Predicate::Ge(0.0)),
+            1 => b.expand(),
+            2 => b.shuffle("k"),
+            3 => b.sort("x", false),
+            4 => b.project_affine("a", "b", 1.0, 1.0, "ab"),
+            5 if !*join_used => {
+                *join_used = true;
+                b.join_window("k", "k")
+            }
+            6 if depth > 0 => b.branch(|bb| grow(bb, g, depth - 1, join_used)),
+            _ if depth > 0 => b.merge_union(|bb| {
+                // merge_union's contract: the branch must advance the
+                // tip (an all-branch() inner grow would leave it at the
+                // fork, making the Union's inputs duplicates) — lead
+                // with a real op before growing further.
+                grow(bb.filter("m", Predicate::Ge(0.0)), g, depth - 1, join_used)
+            }),
+            _ => b.filter("y", Predicate::Lt(1.0)),
+        };
+    }
+    b
+}
+
+fn random_query(g: &mut Gen) -> Query {
+    let mut join_used = false;
+    let b = QueryBuilder::scan("prop-dag").window(WindowSpec::sliding(
+        Duration::from_secs(30),
+        Duration::from_secs(5),
+    ));
+    grow(b, g, 2, &mut join_used)
+        .build()
+        .expect("builder-produced DAGs always validate")
+}
+
+/// Any DAG the builder can produce validates, and its topological
+/// traversal visits every node exactly once, after all of its inputs.
+#[test]
+fn prop_builder_dags_validate_and_traverse_topologically() {
+    let mut r = Runner::new(0xda61, 300);
+    r.run("builder DAG validates + topo traversal", |g| {
+        let q = random_query(g);
+        prop_assert(q.validate().is_ok(), "validate failed")?;
+        let mut seen: HashSet<usize> = HashSet::new();
+        for op in q.traverse() {
+            prop_assert(
+                op.inputs.iter().all(|i| seen.contains(i)),
+                format!("op {} visited before an input ({:?})", op.id, op.inputs),
+            )?;
+            prop_assert(seen.insert(op.id), format!("op {} visited twice", op.id))?;
+        }
+        prop_assert(
+            seen.len() == q.len(),
+            format!("traversal covered {} of {} ops", seen.len(), q.len()),
+        )?;
+        prop_assert(!q.sinks().is_empty(), "query has no sinks")
+    });
+}
+
+/// MapDevice produces a full, deterministic physical plan for any valid
+/// DAG — branches and unions included.
+#[test]
+fn prop_planner_covers_any_valid_dag() {
+    let mut r = Runner::new(0xda62, 200);
+    r.run("planner covers DAGs", |g| {
+        let q = random_query(g);
+        let est = SizeEstimator::new(q.len());
+        let part = g.f64_in(1024.0, 4.0 * 1024.0 * 1024.0);
+        let inf = g.f64_in(1024.0, 4.0 * 1024.0 * 1024.0);
+        let p1 = map_device(&q, part, inf, 0.1, &est).expect("plan");
+        let p2 = map_device(&q, part, inf, 0.1, &est).expect("plan");
+        prop_assert(p1.len() == q.len(), "partial assignment")?;
+        prop_assert(p1 == p2, "non-deterministic plan")?;
+        prop_assert(
+            p1.per_op.iter().enumerate().all(|(i, o)| o.op_id == i),
+            "plan not index-aligned with the DAG",
+        )
+    });
+}
+
+/// Corrupting a valid chain — a forward/self edge (cycle), a
+/// disconnected node, a duplicate edge, or a non-contiguous id — must
+/// make validation fail.
+#[test]
+fn prop_corrupted_graphs_rejected() {
+    let mut r = Runner::new(0xda63, 300);
+    r.run("corrupted DAGs rejected", |g| {
+        let len = g.usize_in(2..8);
+        let mut ops: Vec<OpNode> = vec![OpNode::chained(0, OpSpec::Scan)];
+        for id in 1..len {
+            ops.push(OpNode::chained(
+                id,
+                OpSpec::Filter { col: "x".into(), pred: Predicate::Ge(0.0) },
+            ));
+        }
+        let mut q = Query {
+            name: "corrupt".into(),
+            ops,
+            window: WindowSpec::tumbling(Duration::from_secs(30)),
+            uses_window_state: false,
+        };
+        prop_assert(q.validate().is_ok(), "baseline chain must validate")?;
+
+        let victim = g.usize_in(1..len);
+        match g.u64(4) {
+            0 => {
+                // Forward or self edge: the only way to close a cycle.
+                let target = victim + g.usize_in(0..len - victim);
+                q.ops[victim].inputs = vec![target.min(len - 1).max(victim)];
+            }
+            1 => q.ops[victim].inputs = vec![], // disconnected
+            2 => {
+                let inp = q.ops[victim].inputs[0];
+                q.ops[victim].inputs = vec![inp, inp]; // duplicate edge
+            }
+            _ => q.ops[victim].id = victim + len, // non-contiguous id
+        }
+        prop_assert(
+            q.validate().is_err(),
+            format!("corrupted graph accepted: {:?}", q.ops[victim]),
+        )
+    });
+}
