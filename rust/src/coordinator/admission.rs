@@ -130,8 +130,8 @@ mod tests {
     fn ds(id: u64, t: f64, rows: usize) -> Dataset {
         let schema = Schema::new(vec![Field::f32("x")]);
         let batch =
-            ColumnBatch::new(schema, vec![Column::F32(vec![0.0; rows])]).unwrap();
-        let bytes = batch.bytes();
+            ColumnBatch::new(schema, vec![Column::F32(vec![0.0; rows].into())]).unwrap();
+        let bytes = batch.alloc_bytes();
         Dataset {
             id,
             created_at: Time::from_secs_f64(t),

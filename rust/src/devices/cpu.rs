@@ -69,7 +69,10 @@ mod tests {
         let schema = Schema::new(vec![Field::i32("k"), Field::f32("v")]);
         ColumnBatch::new(
             schema,
-            vec![Column::I32(vec![1, 2, 3]), Column::F32(vec![1.0, 2.0, 3.0])],
+            vec![
+                Column::I32(vec![1, 2, 3].into()),
+                Column::F32(vec![1.0, 2.0, 3.0].into()),
+            ],
         )
         .unwrap()
     }
@@ -116,9 +119,9 @@ mod tests {
     #[test]
     fn shuffle_compacts() {
         let mut b = batch();
-        b.valid[0] = 0;
+        b.validity.set_live(0, false);
         let out = run_op(&OpSpec::Shuffle { key: "k".into() }, &b, None, &wspec()).unwrap();
         assert_eq!(out.rows(), 2);
-        assert!(out.valid.iter().all(|&v| v == 1));
+        assert_eq!(out.live_rows(), out.rows());
     }
 }

@@ -7,7 +7,7 @@
 //! stay host-side, as Rapids keeps them in the JVM. Semantics are
 //! identical to [`crate::devices::cpu`], asserted by integration tests.
 
-use crate::engine::column::{Column, ColumnBatch, DType, Field, Schema};
+use crate::engine::column::{Column, ColumnBatch, DType, Field, Schema, Validity};
 use crate::engine::ops;
 use crate::engine::ops::filter::Predicate;
 use crate::engine::window::WindowSpec;
@@ -22,13 +22,17 @@ const JOIN_CHUNK: usize = 4096;
 
 fn col_to_f32(c: &Column) -> Vec<f32> {
     match c {
-        Column::F32(v) => v.clone(),
+        Column::F32(v) => v.to_vec(),
         Column::I32(v) => v.iter().map(|&x| x as f32).collect(),
     }
 }
 
-fn valid_to_f32(valid: &[u8]) -> Vec<f32> {
-    valid.iter().map(|&v| v as f32).collect()
+/// Marshal the validity as the f32 0/1 vector the artifacts expect.
+fn valid_to_f32(valid: &Validity) -> Vec<f32> {
+    match valid.mask() {
+        None => vec![1.0; valid.len()],
+        Some(m) => m.iter().map(|&v| (v != 0) as u8 as f32).collect(),
+    }
 }
 
 /// Execute one operator through the artifacts.
@@ -86,7 +90,7 @@ fn gpu_filter(rt: &Runtime, batch: &ColumnBatch, col: &str, pred: Predicate) -> 
         return Ok(batch.clone());
     }
     let keys = HostTensor::F32(col_to_f32(batch.column(col)?));
-    let valid = HostTensor::F32(valid_to_f32(&batch.valid));
+    let valid = HostTensor::F32(valid_to_f32(&batch.validity));
     let out = match pred {
         Predicate::Ge(v) => rt.execute(
             "filter_ge",
@@ -115,7 +119,8 @@ fn gpu_filter(rt: &Runtime, batch: &ColumnBatch, col: &str, pred: Predicate) -> 
         )?,
     };
     let mut result = batch.clone();
-    result.valid = out[0].as_f32()?.iter().map(|&v| (v > 0.0) as u8).collect();
+    result.validity =
+        Validity::from_mask(out[0].as_f32()?.iter().map(|&v| (v > 0.0) as u8).collect());
     Ok(result)
 }
 
@@ -133,7 +138,7 @@ fn gpu_project_affine(
     fields.push(Field::f32(out_name));
     let mut columns = batch.columns.clone();
     if rows == 0 {
-        columns.push(Column::F32(Vec::new()));
+        columns.push(Column::F32(Vec::new().into()));
     } else {
         let ca = HostTensor::F32(batch.column(a)?.as_f32()?.to_vec());
         let cb = HostTensor::F32(batch.column(b)?.as_f32()?.to_vec());
@@ -147,9 +152,13 @@ fn gpu_project_affine(
                 HostTensor::F32(vec![beta]),
             ],
         )?;
-        columns.push(Column::F32(out[0].as_f32()?.to_vec()));
+        columns.push(Column::F32(out[0].as_f32()?.to_vec().into()));
     }
-    Ok(ColumnBatch { schema: Schema::new(fields), columns, valid: batch.valid.clone() })
+    Ok(ColumnBatch {
+        schema: Schema::new(fields),
+        columns,
+        validity: batch.validity.clone(),
+    })
 }
 
 /// GPU hash aggregation via the pallas `window_aggregate` kernel: group
@@ -173,9 +182,12 @@ fn gpu_aggregate(
     let mut slots: FxHashMap<Vec<i64>, i32> = FxHashMap::default();
     let mut order: Vec<Vec<i64>> = Vec::new();
     let mut gids = vec![0i32; rows];
+    let live_mask = batch.validity.mask();
     for row in 0..rows {
-        if batch.valid[row] == 0 {
-            continue;
+        if let Some(m) = live_mask {
+            if m[row] == 0 {
+                continue;
+            }
         }
         let key: Vec<i64> = key_idx
             .iter()
@@ -194,7 +206,7 @@ fn gpu_aggregate(
     let n_groups = order.len();
 
     // Per-agg device reduction, chunked over group ranges of NUM_GROUPS.
-    let valid_f = valid_to_f32(&batch.valid);
+    let valid_f = valid_to_f32(&batch.validity);
     let mut sums: Vec<Vec<f32>> = vec![vec![0.0; n_groups]; aggs.len()];
     let mut counts: Vec<f32> = vec![0.0; n_groups];
     if rows > 0 {
@@ -204,9 +216,7 @@ fn gpu_aggregate(
             let mut cvalid = vec![0.0f32; rows];
             for row in 0..rows {
                 let g = gids[row] as usize;
-                if batch.valid[row] == 1
-                    && g >= chunk_start
-                    && g < chunk_start + num_groups
+                if valid_f[row] > 0.0 && g >= chunk_start && g < chunk_start + num_groups
                 {
                     cgids[row] = (g - chunk_start) as i32;
                     cvalid[row] = valid_f[row];
@@ -254,10 +264,14 @@ fn gpu_aggregate(
     for (k, &ci) in key_idx.iter().enumerate() {
         match batch.schema.fields[ci].dtype {
             DType::I32 => columns.push(Column::I32(
-                order.iter().map(|key| key[k] as i32).collect(),
+                order.iter().map(|key| key[k] as i32).collect::<Vec<i32>>().into(),
             )),
             DType::F32 => columns.push(Column::F32(
-                order.iter().map(|key| f32::from_bits(key[k] as u32)).collect(),
+                order
+                    .iter()
+                    .map(|key| f32::from_bits(key[k] as u32))
+                    .collect::<Vec<f32>>()
+                    .into(),
             )),
         }
     }
@@ -269,12 +283,12 @@ fn gpu_aggregate(
                 ops::AggFunc::Avg => sums[ai][g] / counts[g].max(1.0),
             })
             .collect();
-        columns.push(Column::F32(vals));
+        columns.push(Column::F32(vals.into()));
     }
     let mut out = ColumnBatch {
         schema: Schema::new(fields),
         columns,
-        valid: vec![1; n_groups],
+        validity: Validity::all_live(n_groups),
     };
     if let Some((col, pred)) = having {
         out = ops::filter(&out, col, *pred)?;
@@ -294,7 +308,8 @@ fn gpu_join(
 ) -> Result<ColumnBatch> {
     let pk = col_to_f32(probe.column(probe_key)?);
     let bk = col_to_f32(build.column(build_key)?);
-    let p_valid = valid_to_f32(&probe.valid);
+    let p_valid = valid_to_f32(&probe.validity);
+    let b_valid = valid_to_f32(&build.validity);
 
     let mut probe_idx: Vec<usize> = Vec::new();
     let mut build_idx: Vec<usize> = Vec::new();
@@ -309,10 +324,7 @@ fn gpu_join(
     for chunk_start in (0..build.rows()).step_by(JOIN_CHUNK) {
         let chunk_end = (chunk_start + JOIN_CHUNK).min(build.rows());
         let keys: Vec<f32> = bk[chunk_start..chunk_end].to_vec();
-        let valid: Vec<f32> = build.valid[chunk_start..chunk_end]
-            .iter()
-            .map(|&v| v as f32)
-            .collect();
+        let valid: Vec<f32> = b_valid[chunk_start..chunk_end].to_vec();
         let mut table: FxHashMap<u32, Vec<usize>> = FxHashMap::default();
         for (off, &k) in keys.iter().enumerate() {
             if valid[off] > 0.0 {
@@ -377,7 +389,7 @@ fn gpu_join(
     Ok(ColumnBatch {
         schema: Schema::new(fields),
         columns,
-        valid: vec![1; probe_idx.len()],
+        validity: Validity::all_live(probe_idx.len()),
     })
 }
 
@@ -392,7 +404,7 @@ fn gpu_sort(rt: &Runtime, batch: &ColumnBatch, col: &str, desc: bool) -> Result<
             *k = -*k;
         }
     }
-    let valid = valid_to_f32(&batch.valid);
+    let valid = valid_to_f32(&batch.validity);
     let out = rt.execute(
         "sort_perm",
         rows,
@@ -407,9 +419,15 @@ fn gpu_sort(rt: &Runtime, batch: &ColumnBatch, col: &str, desc: bool) -> Result<
     if perm.len() != rows {
         return Err(Error::Xla("sort permutation lost rows".into()));
     }
+    // Mask hoisted out of the gather (all-live inputs allocate nothing),
+    // mirroring the CPU sort path.
+    let validity = match batch.validity.mask() {
+        None => Validity::all_live(rows),
+        Some(mask) => Validity::from_mask(perm.iter().map(|&i| mask[i]).collect()),
+    };
     Ok(ColumnBatch {
         schema: batch.schema.clone(),
         columns: batch.columns.iter().map(|c| c.take(&perm)).collect(),
-        valid: perm.iter().map(|&i| batch.valid[i]).collect(),
+        validity,
     })
 }

@@ -1,11 +1,123 @@
-//! Columnar storage: typed columns, schemas and batches.
+//! Columnar storage: shared buffers, typed columns, schemas and batches.
 //!
 //! Matches the layout the AOT artifacts expect (f32 data columns, i32 key
-//! columns, and a 0/1 row-validity mask — filtered rows stay in place and
-//! are compacted only at shuffle boundaries, like columnar engines do).
+//! columns, and a row-validity mask — filtered rows stay in place and are
+//! compacted only at shuffle boundaries, like columnar engines do).
+//!
+//! # Buffer sharing and copy-on-write
+//!
+//! Column data lives in immutable [`Buffer`]s: an `Arc<Vec<T>>` plus an
+//! `(offset, len)` view window. `clone()` and `slice()` are O(1) pointer
+//! bumps; two batches may alias the same allocation. Nothing ever mutates
+//! a buffer in place — kernels that change data (filter, sort, join
+//! materialization, aggregation) write *fresh* buffers and leave their
+//! inputs untouched, so aliasing is always safe. The one appender
+//! ([`crate::engine::window::WindowState`]'s snapshot cache) extends its
+//! accumulation vectors only while it holds the sole `Arc` reference and
+//! falls back to copy-on-write otherwise.
+//!
+//! Row liveness is split out of the columns into [`Validity`]: a filter
+//! writes only a new mask (plus O(#columns) Arc clones), never a column
+//! byte. The live-row count is cached at mask construction, so
+//! [`ColumnBatch::live_rows`] is O(1).
 
 use crate::error::{Error, Result};
+use std::fmt;
 use std::sync::Arc;
+
+/// A shared, immutable, sliceable run of `T`: `Arc`'d storage plus an
+/// `(offset, len)` view. Cloning and slicing are O(1); the data is never
+/// mutated through a `Buffer`.
+pub struct Buffer<T> {
+    data: Arc<Vec<T>>,
+    offset: usize,
+    len: usize,
+}
+
+impl<T> Buffer<T> {
+    /// Wrap an owned vector (no copy).
+    pub fn from_vec(v: Vec<T>) -> Buffer<T> {
+        let len = v.len();
+        Buffer { data: Arc::new(v), offset: 0, len }
+    }
+
+    /// View `[offset, offset+len)` of an existing allocation (no copy).
+    pub fn view(data: Arc<Vec<T>>, offset: usize, len: usize) -> Buffer<T> {
+        assert!(
+            offset + len <= data.len(),
+            "buffer view [{offset}, {offset}+{len}) out of bounds for {}",
+            data.len()
+        );
+        Buffer { data, offset, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        &self.data[self.offset..self.offset + self.len]
+    }
+
+    /// O(1) sub-view `[start, start+len)` relative to this view.
+    pub fn slice(&self, start: usize, len: usize) -> Buffer<T> {
+        assert!(start + len <= self.len, "slice [{start}, {start}+{len}) of {}", self.len);
+        Buffer { data: Arc::clone(&self.data), offset: self.offset + start, len }
+    }
+
+    /// True when both views alias the same allocation (the zero-copy
+    /// invariant the property tests pin down).
+    pub fn shares_memory(&self, other: &Buffer<T>) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
+    }
+}
+
+impl<T> Clone for Buffer<T> {
+    fn clone(&self) -> Buffer<T> {
+        Buffer { data: Arc::clone(&self.data), offset: self.offset, len: self.len }
+    }
+}
+
+impl<T> std::ops::Deref for Buffer<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T> From<Vec<T>> for Buffer<T> {
+    fn from(v: Vec<T>) -> Buffer<T> {
+        Buffer::from_vec(v)
+    }
+}
+
+impl<'a, T> IntoIterator for &'a Buffer<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl<T: PartialEq> PartialEq for Buffer<T> {
+    /// Content equality (views over different allocations compare equal
+    /// when their visible elements agree).
+    fn eq(&self, other: &Buffer<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Buffer<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
 
 /// Column element type.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -58,11 +170,11 @@ impl Schema {
     }
 }
 
-/// A single column's values.
+/// A single column's values (a typed [`Buffer`] view).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Column {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
+    F32(Buffer<f32>),
+    I32(Buffer<i32>),
 }
 
 impl Column {
@@ -86,19 +198,21 @@ impl Column {
 
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
-            Column::F32(v) => Ok(v),
+            Column::F32(v) => Ok(v.as_slice()),
             Column::I32(_) => Err(Error::Schema("expected f32 column".into())),
         }
     }
 
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
-            Column::I32(v) => Ok(v),
+            Column::I32(v) => Ok(v.as_slice()),
             Column::F32(_) => Err(Error::Schema("expected i32 column".into())),
         }
     }
 
     /// Value at `i` as f64 (for predicates that work across types).
+    /// Kernels should prefer matching the dtype once and iterating the
+    /// typed slice; this per-row dispatch is for cold paths.
     pub fn get_f64(&self, i: usize) -> f64 {
         match self {
             Column::F32(v) => v[i] as f64,
@@ -106,56 +220,222 @@ impl Column {
         }
     }
 
-    /// Gather rows by index.
+    /// Gather rows by index (materializes a fresh buffer).
     pub fn take(&self, idx: &[usize]) -> Column {
         match self {
-            Column::F32(v) => Column::F32(idx.iter().map(|&i| v[i]).collect()),
-            Column::I32(v) => Column::I32(idx.iter().map(|&i| v[i]).collect()),
+            Column::F32(v) => {
+                Column::F32(idx.iter().map(|&i| v[i]).collect::<Vec<f32>>().into())
+            }
+            Column::I32(v) => {
+                Column::I32(idx.iter().map(|&i| v[i]).collect::<Vec<i32>>().into())
+            }
         }
     }
 
-    /// Concatenate many columns of the same dtype.
+    /// Concatenate many columns of the same dtype. A single part is an
+    /// O(1) view clone; multiple parts copy into one fresh buffer.
     pub fn concat(parts: &[&Column]) -> Result<Column> {
         let first = parts.first().ok_or_else(|| Error::Schema("empty concat".into()))?;
+        if parts.len() == 1 {
+            return Ok((*first).clone());
+        }
         match first {
             Column::F32(_) => {
-                let mut out = Vec::new();
+                let total: usize = parts.iter().map(|p| p.len()).sum();
+                let mut out = Vec::with_capacity(total);
                 for p in parts {
                     out.extend_from_slice(p.as_f32()?);
                 }
-                Ok(Column::F32(out))
+                Ok(Column::F32(out.into()))
             }
             Column::I32(_) => {
-                let mut out = Vec::new();
+                let total: usize = parts.iter().map(|p| p.len()).sum();
+                let mut out = Vec::with_capacity(total);
                 for p in parts {
                     out.extend_from_slice(p.as_i32()?);
                 }
-                Ok(Column::I32(out))
+                Ok(Column::I32(out.into()))
             }
         }
     }
 
-    /// Contiguous slice [start, start+len).
+    /// Contiguous view `[start, start+len)` — O(1), shares the allocation.
     pub fn slice(&self, start: usize, len: usize) -> Column {
         match self {
-            Column::F32(v) => Column::F32(v[start..start + len].to_vec()),
-            Column::I32(v) => Column::I32(v[start..start + len].to_vec()),
+            Column::F32(v) => Column::F32(v.slice(start, len)),
+            Column::I32(v) => Column::I32(v.slice(start, len)),
         }
     }
 
-    /// Bytes of in-memory representation.
+    /// Bytes of this column's visible (allocated-view) representation.
     pub fn bytes(&self) -> usize {
         self.len() * 4
     }
+
+    /// True when both columns alias the same allocation.
+    pub fn shares_memory(&self, other: &Column) -> bool {
+        match (self, other) {
+            (Column::F32(a), Column::F32(b)) => a.shares_memory(b),
+            (Column::I32(a), Column::I32(b)) => a.shares_memory(b),
+            _ => false,
+        }
+    }
 }
 
-/// A batch: schema + columns + row-validity mask.
+/// Row liveness for a batch, split out of the column data so filters
+/// rewrite only the mask. `None` mask means "every row live" (the common
+/// case — no allocation); the live count is cached at construction, so
+/// [`Validity::live`] is O(1).
+#[derive(Clone, Debug)]
+pub struct Validity {
+    rows: usize,
+    live: usize,
+    mask: Option<Buffer<u8>>,
+}
+
+impl Validity {
+    /// All `rows` rows live; allocates nothing.
+    pub fn all_live(rows: usize) -> Validity {
+        Validity { rows, live: rows, mask: None }
+    }
+
+    /// From an explicit 0/1 mask (nonzero = live). Counts live rows once;
+    /// an all-live mask is normalized to the no-mask representation.
+    pub fn from_mask(mask: Vec<u8>) -> Validity {
+        let rows = mask.len();
+        let live = mask.iter().filter(|&&v| v != 0).count();
+        if live == rows {
+            Validity::all_live(rows)
+        } else {
+            Validity { rows, live, mask: Some(mask.into()) }
+        }
+    }
+
+    /// From a shared mask view with a pre-counted live total (the window
+    /// snapshot cache tracks live counts incrementally).
+    pub(crate) fn from_parts(mask: Buffer<u8>, live: usize) -> Validity {
+        let rows = mask.len();
+        debug_assert_eq!(live, mask.iter().filter(|&&v| v != 0).count());
+        if live == rows {
+            Validity::all_live(rows)
+        } else {
+            Validity { rows, live, mask: Some(mask) }
+        }
+    }
+
+    /// From an owned mask whose live count the producing kernel already
+    /// accumulated in its sweep (saves the recount pass of
+    /// [`Validity::from_mask`]).
+    pub(crate) fn from_parts_counted(mask: Vec<u8>, live: usize) -> Validity {
+        Validity::from_parts(mask.into(), live)
+    }
+
+    /// Total rows (live + dead).
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Live rows — O(1), cached.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_live(&self, i: usize) -> bool {
+        match &self.mask {
+            None => {
+                assert!(i < self.rows, "row {i} of {}", self.rows);
+                true
+            }
+            Some(m) => m[i] != 0,
+        }
+    }
+
+    /// Mask byte at `i` (1 = live, 0 = dead).
+    pub fn get(&self, i: usize) -> u8 {
+        self.is_live(i) as u8
+    }
+
+    /// The explicit mask, if one is materialized (`None` = all live).
+    /// Kernels hoist this out of their row loops.
+    pub fn mask(&self) -> Option<&[u8]> {
+        self.mask.as_ref().map(|m| m.as_slice())
+    }
+
+    /// Materialize the mask as a 0/1 vector (test/marshaling helper).
+    pub fn to_vec(&self) -> Vec<u8> {
+        match &self.mask {
+            None => vec![1; self.rows],
+            Some(m) => m.iter().map(|&v| (v != 0) as u8).collect(),
+        }
+    }
+
+    /// Set one row's liveness (copy-on-write; test/tooling path).
+    pub fn set_live(&mut self, i: usize, live: bool) {
+        assert!(i < self.rows, "row {i} of {}", self.rows);
+        let mut mask = self.to_vec();
+        mask[i] = live as u8;
+        *self = Validity::from_mask(mask);
+    }
+
+    /// O(1) view slice for the no-mask case; with a mask, an O(len)
+    /// recount of the window (the mask bytes themselves are shared).
+    pub fn slice(&self, start: usize, len: usize) -> Validity {
+        assert!(start + len <= self.rows, "slice [{start}, {start}+{len}) of {}", self.rows);
+        match &self.mask {
+            None => Validity::all_live(len),
+            Some(m) => {
+                let view = m.slice(start, len);
+                let live = view.iter().filter(|&&v| v != 0).count();
+                Validity::from_parts(view, live)
+            }
+        }
+    }
+
+    /// Concatenate; all-live parts concatenate to all-live without
+    /// materializing anything.
+    pub fn concat(parts: &[&Validity]) -> Validity {
+        let rows: usize = parts.iter().map(|p| p.rows).sum();
+        if parts.iter().all(|p| p.mask.is_none()) {
+            return Validity::all_live(rows);
+        }
+        let mut mask = Vec::with_capacity(rows);
+        for p in parts {
+            match &p.mask {
+                None => mask.resize(mask.len() + p.rows, 1),
+                Some(m) => mask.extend_from_slice(m.as_slice()),
+            }
+        }
+        let live = parts.iter().map(|p| p.live).sum();
+        Validity { rows, live, mask: Some(mask.into()) }
+    }
+}
+
+impl PartialEq for Validity {
+    /// Logical equality: same row count and same per-row liveness,
+    /// regardless of representation (mask vs. no-mask).
+    fn eq(&self, other: &Validity) -> bool {
+        if self.rows != other.rows || self.live != other.live {
+            return false;
+        }
+        match (&self.mask, &other.mask) {
+            (None, None) => true,
+            _ => (0..self.rows).all(|i| self.is_live(i) == other.is_live(i)),
+        }
+    }
+}
+
+/// A batch: schema + shared columns + row-validity.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ColumnBatch {
     pub schema: Arc<Schema>,
     pub columns: Vec<Column>,
-    /// 1 = live row, 0 = filtered/padding.
-    pub valid: Vec<u8>,
+    /// Row liveness (1 = live, 0 = filtered/padding), with a cached live
+    /// count. Kernels AND into a *fresh* mask; columns are never touched.
+    pub validity: Validity,
 }
 
 impl ColumnBatch {
@@ -177,7 +457,7 @@ impl ColumnBatch {
                 return Err(Error::Schema(format!("dtype mismatch on `{}`", f.name)));
             }
         }
-        Ok(ColumnBatch { schema, columns, valid: vec![1; rows] })
+        Ok(ColumnBatch { schema, columns, validity: Validity::all_live(rows) })
     }
 
     /// Empty batch with the given schema.
@@ -186,21 +466,21 @@ impl ColumnBatch {
             .fields
             .iter()
             .map(|f| match f.dtype {
-                DType::F32 => Column::F32(Vec::new()),
-                DType::I32 => Column::I32(Vec::new()),
+                DType::F32 => Column::F32(Vec::new().into()),
+                DType::I32 => Column::I32(Vec::new().into()),
             })
             .collect();
-        ColumnBatch { schema, columns, valid: Vec::new() }
+        ColumnBatch { schema, columns, validity: Validity::all_live(0) }
     }
 
     /// Total rows (live + dead).
     pub fn rows(&self) -> usize {
-        self.valid.len()
+        self.validity.len()
     }
 
-    /// Live rows only.
+    /// Live rows only — O(1), cached in the validity.
     pub fn live_rows(&self) -> usize {
-        self.valid.iter().map(|&v| v as usize).sum()
+        self.validity.live()
     }
 
     /// Column accessor by name.
@@ -208,12 +488,24 @@ impl ColumnBatch {
         Ok(&self.columns[self.schema.index_of(name)?])
     }
 
-    /// In-memory bytes of the live representation.
-    pub fn bytes(&self) -> usize {
-        self.columns.iter().map(|c| c.bytes()).sum::<usize>() + self.valid.len()
+    /// **Allocated** in-memory bytes of this batch's view: all rows, live
+    /// *and* dead, plus one mask byte per row. This is what buffers
+    /// actually occupy and what the device cost models / admission sizing
+    /// charge (dead rows still travel through kernels until a shuffle
+    /// compacts them). For the live-data size, use
+    /// [`ColumnBatch::live_bytes`].
+    pub fn alloc_bytes(&self) -> usize {
+        self.columns.iter().map(|c| c.bytes()).sum::<usize>() + self.rows()
     }
 
-    /// Concatenate batches that share a schema.
+    /// Bytes of the *live* rows only (columns + mask byte per live row) —
+    /// the post-compaction footprint.
+    pub fn live_bytes(&self) -> usize {
+        self.live_rows() * (4 * self.columns.len() + 1)
+    }
+
+    /// Concatenate batches that share a schema. A single part is an O(1)
+    /// clone (no copy).
     pub fn concat(parts: &[&ColumnBatch]) -> Result<ColumnBatch> {
         let first = parts.first().ok_or_else(|| Error::Schema("empty concat".into()))?;
         let schema = Arc::clone(&first.schema);
@@ -222,34 +514,41 @@ impl ColumnBatch {
                 return Err(Error::Schema("concat over mixed schemas".into()));
             }
         }
+        if parts.len() == 1 {
+            return Ok((*first).clone());
+        }
         let mut columns = Vec::with_capacity(schema.len());
         for ci in 0..schema.len() {
             let cols: Vec<&Column> = parts.iter().map(|p| &p.columns[ci]).collect();
             columns.push(Column::concat(&cols)?);
         }
-        let mut valid = Vec::new();
-        for p in parts {
-            valid.extend_from_slice(&p.valid);
-        }
-        Ok(ColumnBatch { schema, columns, valid })
+        let validity =
+            Validity::concat(&parts.iter().map(|p| &p.validity).collect::<Vec<_>>());
+        Ok(ColumnBatch { schema, columns, validity })
     }
 
-    /// Contiguous row slice.
+    /// Contiguous row view `[start, start+len)` — O(1) per column, shares
+    /// the allocations.
     pub fn slice(&self, start: usize, len: usize) -> ColumnBatch {
         ColumnBatch {
             schema: Arc::clone(&self.schema),
             columns: self.columns.iter().map(|c| c.slice(start, len)).collect(),
-            valid: self.valid[start..start + len].to_vec(),
+            validity: self.validity.slice(start, len),
         }
     }
 
-    /// Drop dead rows (shuffle-boundary compaction).
+    /// Drop dead rows (shuffle-boundary compaction). All-live batches
+    /// return an O(1) clone.
     pub fn compact(&self) -> ColumnBatch {
-        let idx: Vec<usize> = (0..self.rows()).filter(|&i| self.valid[i] == 1).collect();
+        if self.validity.mask().is_none() {
+            return self.clone();
+        }
+        let idx: Vec<usize> =
+            (0..self.rows()).filter(|&i| self.validity.is_live(i)).collect();
         ColumnBatch {
             schema: Arc::clone(&self.schema),
             columns: self.columns.iter().map(|c| c.take(&idx)).collect(),
-            valid: vec![1; idx.len()],
+            validity: Validity::all_live(idx.len()),
         }
     }
 }
@@ -263,8 +562,8 @@ mod tests {
         ColumnBatch::new(
             schema,
             vec![
-                Column::F32(vec![10.0, 20.0, 30.0]),
-                Column::I32(vec![1, 2, 3]),
+                Column::F32(vec![10.0, 20.0, 30.0].into()),
+                Column::I32(vec![1, 2, 3].into()),
             ],
         )
         .unwrap()
@@ -275,9 +574,9 @@ mod tests {
         let schema = Schema::new(vec![Field::f32("a")]);
         assert!(ColumnBatch::new(schema.clone(), vec![]).is_err());
         assert!(
-            ColumnBatch::new(schema.clone(), vec![Column::I32(vec![1])]).is_err()
+            ColumnBatch::new(schema.clone(), vec![Column::I32(vec![1].into())]).is_err()
         );
-        assert!(ColumnBatch::new(schema, vec![Column::F32(vec![1.0])]).is_ok());
+        assert!(ColumnBatch::new(schema, vec![Column::F32(vec![1.0].into())]).is_ok());
     }
 
     #[test]
@@ -285,7 +584,7 @@ mod tests {
         let schema = Schema::new(vec![Field::f32("a"), Field::f32("b")]);
         let r = ColumnBatch::new(
             schema,
-            vec![Column::F32(vec![1.0]), Column::F32(vec![1.0, 2.0])],
+            vec![Column::F32(vec![1.0].into()), Column::F32(vec![1.0, 2.0].into())],
         );
         assert!(r.is_err());
     }
@@ -309,7 +608,7 @@ mod tests {
     #[test]
     fn compact_drops_dead_rows() {
         let mut b = demo();
-        b.valid[1] = 0;
+        b.validity.set_live(1, false);
         assert_eq!(b.live_rows(), 2);
         let c = b.compact();
         assert_eq!(c.rows(), 2);
@@ -318,13 +617,98 @@ mod tests {
 
     #[test]
     fn take_gathers() {
-        let c = Column::F32(vec![1.0, 2.0, 3.0]);
+        let c = Column::F32(vec![1.0, 2.0, 3.0].into());
         assert_eq!(c.take(&[2, 0]).as_f32().unwrap(), &[3.0, 1.0]);
     }
 
     #[test]
-    fn bytes_accounts_columns_and_mask() {
+    fn alloc_bytes_counts_columns_and_mask() {
         let b = demo();
-        assert_eq!(b.bytes(), 3 * 4 + 3 * 4 + 3);
+        assert_eq!(b.alloc_bytes(), 3 * 4 + 3 * 4 + 3);
+    }
+
+    /// Pins the allocated-vs-live distinction the cost model and admission
+    /// rely on: `alloc_bytes` charges dead rows (they still move through
+    /// kernels and over PCIe until a shuffle compacts them); `live_bytes`
+    /// is the post-compaction footprint.
+    #[test]
+    fn alloc_bytes_counts_dead_rows_live_bytes_does_not() {
+        let mut b = demo();
+        let before = b.alloc_bytes();
+        b.validity.set_live(0, false);
+        b.validity.set_live(2, false);
+        assert_eq!(b.alloc_bytes(), before, "alloc bytes ignore liveness");
+        assert_eq!(b.live_bytes(), 4 * 2 + 1); // one live row, two columns + mask byte
+        let compacted = b.compact();
+        assert_eq!(compacted.alloc_bytes(), compacted.live_bytes());
+    }
+
+    #[test]
+    fn clone_and_slice_share_memory() {
+        let b = demo();
+        let c = b.clone();
+        for (x, y) in b.columns.iter().zip(&c.columns) {
+            assert!(x.shares_memory(y), "clone must not copy column data");
+        }
+        let s = b.slice(1, 2);
+        for (x, y) in b.columns.iter().zip(&s.columns) {
+            assert!(x.shares_memory(y), "slice must not copy column data");
+        }
+        assert_eq!(s.column("speed").unwrap().as_f32().unwrap(), &[20.0, 30.0]);
+    }
+
+    #[test]
+    fn single_part_concat_is_zero_copy() {
+        let b = demo();
+        let c = ColumnBatch::concat(&[&b]).unwrap();
+        for (x, y) in b.columns.iter().zip(&c.columns) {
+            assert!(x.shares_memory(y));
+        }
+        let multi = ColumnBatch::concat(&[&b, &b]).unwrap();
+        for (x, y) in b.columns.iter().zip(&multi.columns) {
+            assert!(!x.shares_memory(y), "multi-part concat materializes");
+        }
+    }
+
+    #[test]
+    fn validity_caches_live_count() {
+        let v = Validity::from_mask(vec![1, 0, 1, 1, 0]);
+        assert_eq!(v.len(), 5);
+        assert_eq!(v.live(), 3);
+        assert!(!v.is_live(1));
+        assert_eq!(v.to_vec(), vec![1, 0, 1, 1, 0]);
+        let s = v.slice(1, 3);
+        assert_eq!(s.live(), 2);
+        assert_eq!(s.to_vec(), vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn all_live_mask_normalized_away() {
+        let v = Validity::from_mask(vec![1, 1, 1]);
+        assert!(v.mask().is_none(), "all-live masks carry no allocation");
+        assert_eq!(v, Validity::all_live(3));
+    }
+
+    #[test]
+    fn validity_concat_fast_path_and_mixed() {
+        let a = Validity::all_live(2);
+        let b = Validity::all_live(3);
+        let both = Validity::concat(&[&a, &b]);
+        assert!(both.mask().is_none());
+        assert_eq!(both.live(), 5);
+        let c = Validity::from_mask(vec![0, 1]);
+        let mixed = Validity::concat(&[&a, &c]);
+        assert_eq!(mixed.to_vec(), vec![1, 1, 0, 1]);
+        assert_eq!(mixed.live(), 3);
+    }
+
+    #[test]
+    fn buffer_views_window_correctly() {
+        let buf: Buffer<i32> = vec![0, 1, 2, 3, 4, 5].into();
+        let mid = buf.slice(2, 3);
+        assert_eq!(mid.as_slice(), &[2, 3, 4]);
+        let inner = mid.slice(1, 1);
+        assert_eq!(inner.as_slice(), &[3]);
+        assert!(inner.shares_memory(&buf));
     }
 }

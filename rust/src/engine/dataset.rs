@@ -69,7 +69,8 @@ impl MicroBatch {
         self.datasets.iter().map(|d| d.event_time).max()
     }
 
-    /// All rows concatenated into one batch.
+    /// All rows concatenated into one batch (O(1) — a shared view — when
+    /// the micro-batch holds a single dataset).
     pub fn concat(&self) -> Result<ColumnBatch> {
         let parts: Vec<&ColumnBatch> = self.datasets.iter().map(|d| &d.batch).collect();
         ColumnBatch::concat(&parts)
@@ -91,7 +92,7 @@ mod tests {
     fn ds(id: u64, t: f64, rows: usize) -> Dataset {
         let schema = Schema::new(vec![Field::f32("x")]);
         let batch =
-            ColumnBatch::new(schema, vec![Column::F32(vec![1.0; rows])]).unwrap();
+            ColumnBatch::new(schema, vec![Column::F32(vec![1.0; rows].into())]).unwrap();
         Dataset {
             id,
             created_at: Time::from_secs_f64(t),

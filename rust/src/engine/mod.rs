@@ -15,6 +15,6 @@ pub mod partition;
 pub mod sink;
 pub mod window;
 
-pub use column::{Column, ColumnBatch, DType, Field, Schema};
+pub use column::{Buffer, Column, ColumnBatch, DType, Field, Schema, Validity};
 pub use dataset::{Dataset, MicroBatch};
 pub use window::{WindowKind, WindowSpec, WindowState};

@@ -1,7 +1,7 @@
 //! Hash aggregation: GROUP BY over key columns with SUM/COUNT/AVG, plus
 //! optional HAVING.
 
-use crate::engine::column::{Column, ColumnBatch, DType, Field, Schema};
+use crate::engine::column::{Column, ColumnBatch, DType, Field, Schema, Validity};
 use crate::engine::ops::filter::Predicate;
 use crate::error::{Error, Result};
 use crate::util::hash::FxHashMap;
@@ -64,6 +64,10 @@ pub fn hash_aggregate(
             }
         })
         .collect::<Result<_>>()?;
+    // Pre-resolve key columns; the validity mask is hoisted out of the
+    // row loop (None = every row live).
+    let key_cols: Vec<&Column> = key_idx.iter().map(|&ci| &batch.columns[ci]).collect();
+    let mask = batch.validity.mask();
 
     // Group index: composite i64-encoded key -> dense group slot.
     let mut slots: FxHashMap<Vec<i64>, usize> = FxHashMap::default();
@@ -74,12 +78,14 @@ pub fn hash_aggregate(
     // Scratch key reused across rows; cloned only on first occurrence.
     let mut key: Vec<i64> = Vec::with_capacity(key_idx.len());
     for row in 0..batch.rows() {
-        if batch.valid[row] == 0 {
-            continue;
+        if let Some(m) = mask {
+            if m[row] == 0 {
+                continue;
+            }
         }
         key.clear();
-        for &ci in &key_idx {
-            key.push(match &batch.columns[ci] {
+        for kc in &key_cols {
+            key.push(match kc {
                 Column::I32(v) => v[row] as i64,
                 Column::F32(v) => v[row].to_bits() as i64,
             });
@@ -116,10 +122,14 @@ pub fn hash_aggregate(
     for (k, &ci) in key_idx.iter().enumerate() {
         match batch.schema.fields[ci].dtype {
             DType::I32 => columns.push(Column::I32(
-                order.iter().map(|key| key[k] as i32).collect(),
+                order.iter().map(|key| key[k] as i32).collect::<Vec<i32>>().into(),
             )),
             DType::F32 => columns.push(Column::F32(
-                order.iter().map(|key| f32::from_bits(key[k] as u32)).collect(),
+                order
+                    .iter()
+                    .map(|key| f32::from_bits(key[k] as u32))
+                    .collect::<Vec<f32>>()
+                    .into(),
             )),
         }
     }
@@ -131,12 +141,12 @@ pub fn hash_aggregate(
                 AggFunc::Avg => (sums[g][ai] / counts[g].max(1.0)) as f32,
             })
             .collect();
-        columns.push(Column::F32(vals));
+        columns.push(Column::F32(vals.into()));
     }
     let mut out = ColumnBatch {
         schema: Schema::new(fields),
         columns,
-        valid: vec![1; n_groups],
+        validity: Validity::all_live(n_groups),
     };
     if let Some((col, pred)) = having {
         out = crate::engine::ops::filter::filter(&out, col, pred)?;
@@ -153,8 +163,8 @@ mod tests {
         ColumnBatch::new(
             schema,
             vec![
-                Column::I32(vec![1, 2, 1, 2, 1]),
-                Column::F32(vec![10.0, 20.0, 30.0, 40.0, 50.0]),
+                Column::I32(vec![1, 2, 1, 2, 1].into()),
+                Column::F32(vec![10.0, 20.0, 30.0, 40.0, 50.0].into()),
             ],
         )
         .unwrap()
@@ -183,7 +193,7 @@ mod tests {
     #[test]
     fn dead_rows_excluded() {
         let mut b = batch();
-        b.valid[4] = 0; // drop the 50.0 in group 1
+        b.validity.set_live(4, false); // drop the 50.0 in group 1
         let out =
             hash_aggregate(&b, &["g"], &[AggSpec::sum("v", "s")], None).unwrap();
         assert_eq!(out.column("s").unwrap().as_f32().unwrap(), &[40.0, 60.0]);
@@ -216,9 +226,9 @@ mod tests {
         let b = ColumnBatch::new(
             schema,
             vec![
-                Column::I32(vec![1, 1, 2]),
-                Column::I32(vec![5, 6, 5]),
-                Column::F32(vec![1.0, 2.0, 3.0]),
+                Column::I32(vec![1, 1, 2].into()),
+                Column::I32(vec![5, 6, 5].into()),
+                Column::F32(vec![1.0, 2.0, 3.0].into()),
             ],
         )
         .unwrap();
@@ -233,8 +243,8 @@ mod tests {
         let b = ColumnBatch::new(
             schema,
             vec![
-                Column::F32(vec![0.5, 0.5, 1.5]),
-                Column::F32(vec![1.0, 2.0, 3.0]),
+                Column::F32(vec![0.5, 0.5, 1.5].into()),
+                Column::F32(vec![1.0, 2.0, 3.0].into()),
             ],
         )
         .unwrap();

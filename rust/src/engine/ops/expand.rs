@@ -2,7 +2,7 @@
 //! tag — Spark's rewrite assigning rows of a sliding window to their
 //! range/slide overlapping window instances.
 
-use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+use crate::engine::column::{Column, ColumnBatch, Field, Schema, Validity};
 use crate::error::{Error, Result};
 
 /// Replicate rows `factor` times, appending an i32 `window_id` column
@@ -23,9 +23,14 @@ pub fn expand(batch: &ColumnBatch, factor: usize) -> Result<ColumnBatch> {
     let mut fields = batch.schema.fields.clone();
     fields.push(Field::i32("window_id"));
     let mut columns: Vec<Column> = batch.columns.iter().map(|c| c.take(&idx)).collect();
-    columns.push(Column::I32(wid));
-    let valid: Vec<u8> = idx.iter().map(|&i| batch.valid[i]).collect();
-    Ok(ColumnBatch { schema: Schema::new(fields), columns, valid })
+    columns.push(Column::I32(wid.into()));
+    // Replicas of live rows are live: an all-live input yields an
+    // all-live output without materializing a mask.
+    let validity = match batch.validity.mask() {
+        None => Validity::all_live(rows * factor),
+        Some(mask) => Validity::from_mask(idx.iter().map(|&i| mask[i]).collect()),
+    };
+    Ok(ColumnBatch { schema: Schema::new(fields), columns, validity })
 }
 
 #[cfg(test)]
@@ -34,7 +39,7 @@ mod tests {
 
     fn batch() -> ColumnBatch {
         let schema = Schema::new(vec![Field::f32("v")]);
-        ColumnBatch::new(schema, vec![Column::F32(vec![1.0, 2.0])]).unwrap()
+        ColumnBatch::new(schema, vec![Column::F32(vec![1.0, 2.0].into())]).unwrap()
     }
 
     #[test]
@@ -57,9 +62,9 @@ mod tests {
     #[test]
     fn dead_rows_stay_dead_in_replicas() {
         let mut b = batch();
-        b.valid[0] = 0;
+        b.validity.set_live(0, false);
         let out = expand(&b, 2).unwrap();
-        assert_eq!(out.valid, vec![0, 1, 0, 1]);
+        assert_eq!(out.validity.to_vec(), vec![0, 1, 0, 1]);
     }
 
     #[test]

@@ -1,7 +1,13 @@
 //! Filter: predicate over one column, ANDed into the validity mask.
+//!
+//! Zero-copy: the output batch shares every column buffer with its input
+//! (O(1) Arc clones) and only a fresh validity mask is written. The
+//! kernel matches the column dtype *once* and runs a typed inner loop —
+//! no per-row enum dispatch.
 
-use crate::engine::column::ColumnBatch;
+use crate::engine::column::{Column, ColumnBatch, Validity};
 use crate::error::Result;
+use std::sync::Arc;
 
 /// Scalar predicates the workloads need (Table III WHERE/HAVING clauses).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -27,16 +33,62 @@ impl Predicate {
     }
 }
 
-/// Apply `pred` on `col`; dead rows stay dead (mask is monotone).
-pub fn filter(batch: &ColumnBatch, col: &str, pred: Predicate) -> Result<ColumnBatch> {
-    let c = batch.column(col)?;
-    let mut out = batch.clone();
-    for i in 0..out.rows() {
-        if out.valid[i] == 1 && !pred.eval(c.get_f64(i)) {
-            out.valid[i] = 0;
+/// Typed inner loop: one predicate branch chosen per kernel invocation,
+/// then a straight-line sweep ANDing into the mask (monotone: dead rows
+/// stay dead). Returns the surviving live-row count, accumulated in the
+/// same pass so the caller needs no recount sweep.
+fn apply_pred<T: Copy>(
+    vals: &[T],
+    mask: &mut [u8],
+    pred: Predicate,
+    to: impl Fn(T) -> f64,
+) -> usize {
+    let mut live = 0usize;
+    match pred {
+        Predicate::Ge(v) => {
+            for (m, &x) in mask.iter_mut().zip(vals) {
+                *m &= (to(x) >= v) as u8;
+                live += *m as usize;
+            }
+        }
+        Predicate::Lt(v) => {
+            for (m, &x) in mask.iter_mut().zip(vals) {
+                *m &= (to(x) < v) as u8;
+                live += *m as usize;
+            }
+        }
+        Predicate::Eq(v) => {
+            for (m, &x) in mask.iter_mut().zip(vals) {
+                *m &= (to(x) == v) as u8;
+                live += *m as usize;
+            }
+        }
+        Predicate::Band(lo, hi) => {
+            for (m, &x) in mask.iter_mut().zip(vals) {
+                let x = to(x);
+                *m &= (x >= lo && x < hi) as u8;
+                live += *m as usize;
+            }
         }
     }
-    Ok(out)
+    live
+}
+
+/// Apply `pred` on `col`; dead rows stay dead (mask is monotone). Columns
+/// are shared with the input — only the mask is written, in a single
+/// seed + sweep (the live count comes out of the sweep itself).
+pub fn filter(batch: &ColumnBatch, col: &str, pred: Predicate) -> Result<ColumnBatch> {
+    let c = batch.column(col)?;
+    let mut mask = batch.validity.to_vec();
+    let live = match c {
+        Column::F32(v) => apply_pred(v.as_slice(), &mut mask, pred, |x| x as f64),
+        Column::I32(v) => apply_pred(v.as_slice(), &mut mask, pred, |x| x as f64),
+    };
+    Ok(ColumnBatch {
+        schema: Arc::clone(&batch.schema),
+        columns: batch.columns.clone(),
+        validity: Validity::from_parts_counted(mask, live),
+    })
 }
 
 #[cfg(test)]
@@ -46,39 +98,60 @@ mod tests {
 
     fn batch() -> ColumnBatch {
         let schema = Schema::new(vec![Field::f32("v")]);
-        ColumnBatch::new(schema, vec![Column::F32(vec![1.0, 2.0, 3.0, 4.0])]).unwrap()
+        ColumnBatch::new(schema, vec![Column::F32(vec![1.0, 2.0, 3.0, 4.0].into())])
+            .unwrap()
     }
 
     #[test]
     fn ge_keeps_boundary() {
         let out = filter(&batch(), "v", Predicate::Ge(2.0)).unwrap();
-        assert_eq!(out.valid, vec![0, 1, 1, 1]);
+        assert_eq!(out.validity.to_vec(), vec![0, 1, 1, 1]);
     }
 
     #[test]
     fn lt_excludes_boundary() {
         let out = filter(&batch(), "v", Predicate::Lt(3.0)).unwrap();
-        assert_eq!(out.valid, vec![1, 1, 0, 0]);
+        assert_eq!(out.validity.to_vec(), vec![1, 1, 0, 0]);
     }
 
     #[test]
     fn eq_matches_exact() {
         let out = filter(&batch(), "v", Predicate::Eq(3.0)).unwrap();
-        assert_eq!(out.valid, vec![0, 0, 1, 0]);
+        assert_eq!(out.validity.to_vec(), vec![0, 0, 1, 0]);
     }
 
     #[test]
     fn band_half_open() {
         let out = filter(&batch(), "v", Predicate::Band(2.0, 4.0)).unwrap();
-        assert_eq!(out.valid, vec![0, 1, 1, 0]);
+        assert_eq!(out.validity.to_vec(), vec![0, 1, 1, 0]);
     }
 
     #[test]
     fn mask_is_monotone() {
         let mut b = batch();
-        b.valid[3] = 0; // already dead
+        b.validity.set_live(3, false); // already dead
         let out = filter(&b, "v", Predicate::Ge(0.0)).unwrap();
-        assert_eq!(out.valid, vec![1, 1, 1, 0]);
+        assert_eq!(out.validity.to_vec(), vec![1, 1, 1, 0]);
+    }
+
+    #[test]
+    fn i32_columns_filter_typed() {
+        let schema = Schema::new(vec![Field::i32("k")]);
+        let b = ColumnBatch::new(schema, vec![Column::I32(vec![5, 10, 15].into())])
+            .unwrap();
+        let out = filter(&b, "k", Predicate::Band(6.0, 15.0)).unwrap();
+        assert_eq!(out.validity.to_vec(), vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn output_shares_column_buffers() {
+        let b = batch();
+        let out = filter(&b, "v", Predicate::Ge(2.0)).unwrap();
+        for (x, y) in b.columns.iter().zip(&out.columns) {
+            assert!(x.shares_memory(y), "filter must not copy column data");
+        }
+        // And the input's own mask is untouched.
+        assert_eq!(b.live_rows(), 4);
     }
 
     #[test]

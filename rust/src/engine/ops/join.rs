@@ -4,16 +4,10 @@
 //! L WHERE A.vehicle == L.vehicle`) probes the current micro-batch against
 //! the window state snapshot.
 
-use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+use crate::engine::column::{Column, ColumnBatch, Field, Schema, Validity};
+use crate::engine::ops::for_each_live_key;
 use crate::error::Result;
 use crate::util::hash::FxHashMap;
-
-fn key_bits(col: &Column, row: usize) -> i64 {
-    match col {
-        Column::I32(v) => v[row] as i64,
-        Column::F32(v) => v[row].to_bits() as i64,
-    }
-}
 
 /// Inner join: every (probe-row, matching build-row) pair, with build
 /// columns appended under a `r_` prefix (self-join disambiguation).
@@ -43,29 +37,24 @@ pub fn hash_join_pruned(
     let pk = probe.column(probe_key)?;
     let bk = build.column(build_key)?;
 
-    // Build side index: key -> row list.
+    // Build side index: key -> row list (typed sweep, mask hoisted).
     let mut table: FxHashMap<i64, Vec<usize>> = FxHashMap::default();
-    for row in 0..build.rows() {
-        if build.valid[row] == 1 {
-            table.entry(key_bits(bk, row)).or_default().push(row);
-        }
-    }
+    for_each_live_key(bk, &build.validity, |row, key| {
+        table.entry(key).or_default().push(row);
+    });
 
     // Probe: collect matching index pairs (pre-sized: the windowed
     // self-join typically amplifies; start at probe cardinality).
     let mut probe_idx = Vec::with_capacity(probe.rows());
     let mut build_idx = Vec::with_capacity(probe.rows());
-    for row in 0..probe.rows() {
-        if probe.valid[row] == 0 {
-            continue;
-        }
-        if let Some(matches) = table.get(&key_bits(pk, row)) {
+    for_each_live_key(pk, &probe.validity, |row, key| {
+        if let Some(matches) = table.get(&key) {
             for &b in matches {
                 probe_idx.push(row);
                 build_idx.push(b);
             }
         }
-    }
+    });
 
     // Output schema: (kept) probe columns + prefixed (kept) build columns.
     let probe_sel: Vec<usize> = match keep_probe {
@@ -106,7 +95,7 @@ pub fn hash_join_pruned(
     Ok(ColumnBatch {
         schema: Schema::new(fields),
         columns,
-        valid: vec![1; probe_idx.len()],
+        validity: Validity::all_live(probe_idx.len()),
     })
 }
 
@@ -116,7 +105,8 @@ mod tests {
 
     fn side(names: (&str, &str), keys: Vec<i32>, vals: Vec<f32>) -> ColumnBatch {
         let schema = Schema::new(vec![Field::i32(names.0), Field::f32(names.1)]);
-        ColumnBatch::new(schema, vec![Column::I32(keys), Column::F32(vals)]).unwrap()
+        ColumnBatch::new(schema, vec![Column::I32(keys.into()), Column::F32(vals.into())])
+            .unwrap()
     }
 
     #[test]
@@ -134,8 +124,8 @@ mod tests {
     fn dead_rows_do_not_match() {
         let mut probe = side(("k", "pv"), vec![1, 2], vec![1.0, 2.0]);
         let mut build = side(("k", "bv"), vec![1, 2], vec![0.1, 0.2]);
-        probe.valid[0] = 0;
-        build.valid[1] = 0;
+        probe.validity.set_live(0, false);
+        build.validity.set_live(1, false);
         let out = hash_join(&probe, &build, "k", "k").unwrap();
         assert_eq!(out.rows(), 0);
     }

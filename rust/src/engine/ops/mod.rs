@@ -20,3 +20,43 @@ pub use project::{project_affine, project_select};
 pub use scan::scan;
 pub use shuffle::shuffle;
 pub use sort::sort_by;
+
+use crate::engine::column::{Column, Validity};
+
+/// Visit every live row's key as canonical i64 bits (i32 widened, f32 by
+/// bit pattern — the hash/equality encoding the join, shuffle and
+/// aggregate kernels share). The dtype is matched once per call and the
+/// validity mask hoisted out of the loop: typed straight-line sweeps, no
+/// per-row enum dispatch.
+pub(crate) fn for_each_live_key(
+    col: &Column,
+    validity: &Validity,
+    mut f: impl FnMut(usize, i64),
+) {
+    match (col, validity.mask()) {
+        (Column::I32(v), None) => {
+            for (row, &x) in v.iter().enumerate() {
+                f(row, x as i64);
+            }
+        }
+        (Column::I32(v), Some(mask)) => {
+            for (row, (&x, &m)) in v.iter().zip(mask).enumerate() {
+                if m != 0 {
+                    f(row, x as i64);
+                }
+            }
+        }
+        (Column::F32(v), None) => {
+            for (row, &x) in v.iter().enumerate() {
+                f(row, x.to_bits() as i64);
+            }
+        }
+        (Column::F32(v), Some(mask)) => {
+            for (row, (&x, &m)) in v.iter().zip(mask).enumerate() {
+                if m != 0 {
+                    f(row, x.to_bits() as i64);
+                }
+            }
+        }
+    }
+}

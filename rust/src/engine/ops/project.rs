@@ -1,9 +1,13 @@
 //! Projection: column selection and arithmetic projection.
+//!
+//! Selection is zero-copy: the kept columns are O(1) Arc clones of the
+//! input's buffers; only `project_affine` materializes (one new column).
 
 use crate::engine::column::{Column, ColumnBatch, Field, Schema};
 use crate::error::Result;
 
-/// SELECT a subset of columns (order follows `keep`).
+/// SELECT a subset of columns (order follows `keep`). Shares the kept
+/// columns' buffers with the input.
 pub fn project_select(batch: &ColumnBatch, keep: &[&str]) -> Result<ColumnBatch> {
     let mut fields = Vec::with_capacity(keep.len());
     let mut columns = Vec::with_capacity(keep.len());
@@ -15,11 +19,12 @@ pub fn project_select(batch: &ColumnBatch, keep: &[&str]) -> Result<ColumnBatch>
     Ok(ColumnBatch {
         schema: Schema::new(fields),
         columns,
-        valid: batch.valid.clone(),
+        validity: batch.validity.clone(),
     })
 }
 
-/// Append `out = alpha*a + beta*b` as a new f32 column.
+/// Append `out = alpha*a + beta*b` as a new f32 column (existing columns
+/// are shared, only the new one is written).
 pub fn project_affine(
     batch: &ColumnBatch,
     a: &str,
@@ -38,11 +43,11 @@ pub fn project_affine(
     let mut fields = batch.schema.fields.clone();
     fields.push(Field::f32(out));
     let mut columns = batch.columns.clone();
-    columns.push(Column::F32(values));
+    columns.push(Column::F32(values.into()));
     Ok(ColumnBatch {
         schema: Schema::new(fields),
         columns,
-        valid: batch.valid.clone(),
+        validity: batch.validity.clone(),
     })
 }
 
@@ -55,9 +60,9 @@ mod tests {
         ColumnBatch::new(
             schema,
             vec![
-                Column::F32(vec![1.0, 2.0]),
-                Column::F32(vec![10.0, 20.0]),
-                Column::I32(vec![7, 8]),
+                Column::F32(vec![1.0, 2.0].into()),
+                Column::F32(vec![10.0, 20.0].into()),
+                Column::I32(vec![7, 8].into()),
             ],
         )
         .unwrap()
@@ -72,6 +77,14 @@ mod tests {
     }
 
     #[test]
+    fn select_shares_buffers() {
+        let b = batch();
+        let out = project_select(&b, &["a", "k"]).unwrap();
+        assert!(b.columns[0].shares_memory(&out.columns[0]));
+        assert!(b.columns[2].shares_memory(&out.columns[1]));
+    }
+
+    #[test]
     fn affine_appends_column() {
         let out = project_affine(&batch(), "a", "b", 2.0, 0.5, "mix").unwrap();
         assert_eq!(out.column("mix").unwrap().as_f32().unwrap(), &[7.0, 14.0]);
@@ -81,9 +94,9 @@ mod tests {
     #[test]
     fn validity_preserved() {
         let mut b = batch();
-        b.valid[0] = 0;
+        b.validity.set_live(0, false);
         let out = project_select(&b, &["a"]).unwrap();
-        assert_eq!(out.valid, vec![0, 1]);
+        assert_eq!(out.validity.to_vec(), vec![0, 1]);
     }
 
     #[test]

@@ -10,7 +10,8 @@ use crate::engine::column::{ColumnBatch, Schema};
 use crate::error::{Error, Result};
 use std::sync::Arc;
 
-/// Validate schema identity and pass rows through.
+/// Validate schema identity and pass rows through — zero-copy: the
+/// returned batch shares every buffer with the input (O(1) Arc clones).
 pub fn scan(batch: &ColumnBatch, expected: &Arc<Schema>) -> Result<ColumnBatch> {
     if batch.schema.as_ref() != expected.as_ref() {
         return Err(Error::Schema(format!(
@@ -29,15 +30,18 @@ mod tests {
     #[test]
     fn passes_matching_schema() {
         let schema = Schema::new(vec![Field::f32("x")]);
-        let b = ColumnBatch::new(schema.clone(), vec![Column::F32(vec![1.0])]).unwrap();
-        assert_eq!(scan(&b, &schema).unwrap().rows(), 1);
+        let b = ColumnBatch::new(schema.clone(), vec![Column::F32(vec![1.0].into())])
+            .unwrap();
+        let out = scan(&b, &schema).unwrap();
+        assert_eq!(out.rows(), 1);
+        assert!(b.columns[0].shares_memory(&out.columns[0]), "scan is zero-copy");
     }
 
     #[test]
     fn rejects_mismatched_schema() {
         let schema = Schema::new(vec![Field::f32("x")]);
         let other = Schema::new(vec![Field::f32("y")]);
-        let b = ColumnBatch::new(schema, vec![Column::F32(vec![1.0])]).unwrap();
+        let b = ColumnBatch::new(schema, vec![Column::F32(vec![1.0].into())]).unwrap();
         assert!(scan(&b, &other).is_err());
     }
 }

@@ -2,8 +2,10 @@
 //! partition-crossing aggregation/join). Compacts dead rows — the shuffle
 //! boundary is where columnar engines drop filtered data.
 
-use crate::engine::column::{Column, ColumnBatch};
+use crate::engine::column::{ColumnBatch, Validity};
+use crate::engine::ops::for_each_live_key;
 use crate::error::Result;
+use std::sync::Arc;
 
 fn hash64(x: i64) -> u64 {
     // splitmix64 finalizer — cheap, well-distributed.
@@ -18,22 +20,15 @@ pub fn shuffle(batch: &ColumnBatch, key: &str, n: usize) -> Result<Vec<ColumnBat
     assert!(n > 0);
     let kc = batch.column(key)?;
     let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); n];
-    for row in 0..batch.rows() {
-        if batch.valid[row] == 0 {
-            continue;
-        }
-        let bits = match kc {
-            Column::I32(v) => v[row] as i64,
-            Column::F32(v) => v[row].to_bits() as i64,
-        };
+    for_each_live_key(kc, &batch.validity, |row, bits| {
         buckets[(hash64(bits) % n as u64) as usize].push(row);
-    }
+    });
     Ok(buckets
         .into_iter()
         .map(|idx| ColumnBatch {
-            schema: batch.schema.clone(),
+            schema: Arc::clone(&batch.schema),
             columns: batch.columns.iter().map(|c| c.take(&idx)).collect(),
-            valid: vec![1; idx.len()],
+            validity: Validity::all_live(idx.len()),
         })
         .collect())
 }
@@ -41,15 +36,15 @@ pub fn shuffle(batch: &ColumnBatch, key: &str, n: usize) -> Result<Vec<ColumnBat
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::column::{Field, Schema};
+    use crate::engine::column::{Column, Field, Schema};
 
     fn batch() -> ColumnBatch {
         let schema = Schema::new(vec![Field::i32("k"), Field::f32("v")]);
         ColumnBatch::new(
             schema,
             vec![
-                Column::I32((0..100).collect()),
-                Column::F32((0..100).map(|i| i as f32).collect()),
+                Column::I32((0..100).collect::<Vec<i32>>().into()),
+                Column::F32((0..100).map(|i| i as f32).collect::<Vec<f32>>().into()),
             ],
         )
         .unwrap()
@@ -66,7 +61,8 @@ mod tests {
     #[test]
     fn same_key_same_partition() {
         let schema = Schema::new(vec![Field::i32("k")]);
-        let b = ColumnBatch::new(schema, vec![Column::I32(vec![7, 7, 7, 8])]).unwrap();
+        let b = ColumnBatch::new(schema, vec![Column::I32(vec![7, 7, 7, 8].into())])
+            .unwrap();
         let parts = shuffle(&b, "k", 3).unwrap();
         let with_seven: Vec<usize> = parts
             .iter()
@@ -75,19 +71,19 @@ mod tests {
             .map(|(i, _)| i)
             .collect();
         assert_eq!(with_seven.len(), 1);
-        assert_eq!(parts[with_seven[0]].rows() >= 3, true);
+        assert!(parts[with_seven[0]].rows() >= 3);
     }
 
     #[test]
     fn dead_rows_dropped() {
         let mut b = batch();
         for i in 0..50 {
-            b.valid[i] = 0;
+            b.validity.set_live(i, false);
         }
         let parts = shuffle(&b, "k", 4).unwrap();
         let total: usize = parts.iter().map(|p| p.rows()).sum();
         assert_eq!(total, 50);
-        assert!(parts.iter().all(|p| p.valid.iter().all(|&v| v == 1)));
+        assert!(parts.iter().all(|p| p.live_rows() == p.rows()));
     }
 
     #[test]

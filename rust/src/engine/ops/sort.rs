@@ -1,28 +1,52 @@
 //! Sort by one column (stable; dead rows sink to the end).
+//!
+//! The sort key is extracted into a typed vector once (one dtype match
+//! per kernel), so comparisons are plain f64 compares — no per-comparison
+//! enum dispatch.
 
-use crate::engine::column::ColumnBatch;
+use crate::engine::column::{Column, ColumnBatch, Validity};
 use crate::error::Result;
+use std::cmp::Ordering;
+use std::sync::Arc;
 
 /// Sort rows by `col` (ascending unless `desc`), keeping the validity
 /// mask aligned. Dead rows always order after live rows.
 pub fn sort_by(batch: &ColumnBatch, col: &str, desc: bool) -> Result<ColumnBatch> {
     let c = batch.column(col)?;
-    let mut idx: Vec<usize> = (0..batch.rows()).collect();
-    idx.sort_by(|&a, &b| {
-        match (batch.valid[a], batch.valid[b]) {
-            (1, 0) => return std::cmp::Ordering::Less,
-            (0, 1) => return std::cmp::Ordering::Greater,
-            (0, 0) => return std::cmp::Ordering::Equal,
-            _ => {}
+    // Typed key extraction: dtype dispatched once, not per comparison.
+    let keys: Vec<f64> = match c {
+        Column::F32(v) => v.iter().map(|&x| x as f64).collect(),
+        Column::I32(v) => v.iter().map(|&x| x as f64).collect(),
+    };
+    let cmp_keys = |a: usize, b: usize| {
+        let ord = keys[a].partial_cmp(&keys[b]).unwrap_or(Ordering::Equal);
+        if desc {
+            ord.reverse()
+        } else {
+            ord
         }
-        let (x, y) = (c.get_f64(a), c.get_f64(b));
-        let ord = x.partial_cmp(&y).unwrap_or(std::cmp::Ordering::Equal);
-        if desc { ord.reverse() } else { ord }
-    });
+    };
+    let mut idx: Vec<usize> = (0..batch.rows()).collect();
+    match batch.validity.mask() {
+        None => idx.sort_by(|&a, &b| cmp_keys(a, b)),
+        Some(mask) => idx.sort_by(|&a, &b| {
+            match (mask[a] != 0, mask[b] != 0) {
+                (true, false) => return Ordering::Less,
+                (false, true) => return Ordering::Greater,
+                (false, false) => return Ordering::Equal,
+                (true, true) => {}
+            }
+            cmp_keys(a, b)
+        }),
+    }
+    let validity = match batch.validity.mask() {
+        None => Validity::all_live(batch.rows()),
+        Some(mask) => Validity::from_mask(idx.iter().map(|&i| mask[i]).collect()),
+    };
     Ok(ColumnBatch {
-        schema: batch.schema.clone(),
+        schema: Arc::clone(&batch.schema),
         columns: batch.columns.iter().map(|cc| cc.take(&idx)).collect(),
-        valid: idx.iter().map(|&i| batch.valid[i]).collect(),
+        validity,
     })
 }
 
@@ -36,8 +60,8 @@ mod tests {
         ColumnBatch::new(
             schema,
             vec![
-                Column::F32(vec![3.0, 1.0, 2.0]),
-                Column::I32(vec![30, 10, 20]),
+                Column::F32(vec![3.0, 1.0, 2.0].into()),
+                Column::I32(vec![30, 10, 20].into()),
             ],
         )
         .unwrap()
@@ -59,10 +83,10 @@ mod tests {
     #[test]
     fn dead_rows_sink() {
         let mut b = batch();
-        b.valid[1] = 0; // kill the smallest value
+        b.validity.set_live(1, false); // kill the smallest value
         let out = sort_by(&b, "v", false).unwrap();
         assert_eq!(out.column("v").unwrap().as_f32().unwrap(), &[2.0, 3.0, 1.0]);
-        assert_eq!(out.valid, vec![1, 1, 0]);
+        assert_eq!(out.validity.to_vec(), vec![1, 1, 0]);
     }
 
     #[test]
@@ -70,10 +94,22 @@ mod tests {
         let schema = Schema::new(vec![Field::f32("v"), Field::i32("seq")]);
         let b = ColumnBatch::new(
             schema,
-            vec![Column::F32(vec![1.0, 1.0, 1.0]), Column::I32(vec![0, 1, 2])],
+            vec![
+                Column::F32(vec![1.0, 1.0, 1.0].into()),
+                Column::I32(vec![0, 1, 2].into()),
+            ],
         )
         .unwrap();
         let out = sort_by(&b, "v", false).unwrap();
         assert_eq!(out.column("seq").unwrap().as_i32().unwrap(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn i32_sort_key() {
+        let schema = Schema::new(vec![Field::i32("k")]);
+        let b =
+            ColumnBatch::new(schema, vec![Column::I32(vec![3, 1, 2].into())]).unwrap();
+        let out = sort_by(&b, "k", false).unwrap();
+        assert_eq!(out.column("k").unwrap().as_i32().unwrap(), &[1, 2, 3]);
     }
 }

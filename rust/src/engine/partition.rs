@@ -16,7 +16,8 @@ pub struct Partition {
 
 /// Split `batch` into `n` contiguous row chunks, distributing the
 /// remainder one row at a time (sizes differ by at most one row).
-/// `wire_bytes` is apportioned proportionally to rows.
+/// `wire_bytes` is apportioned proportionally to rows. Partitions are
+/// O(1) views sharing the batch's buffers — no rows are copied.
 pub fn split(batch: &ColumnBatch, wire_bytes: usize, n: usize) -> Vec<Partition> {
     assert!(n > 0, "partition count must be positive");
     let rows = batch.rows();
@@ -50,7 +51,7 @@ mod tests {
         let schema = Schema::new(vec![Field::f32("x")]);
         ColumnBatch::new(
             schema,
-            vec![Column::F32((0..rows).map(|i| i as f32).collect())],
+            vec![Column::F32((0..rows).map(|i| i as f32).collect::<Vec<f32>>().into())],
         )
         .unwrap()
     }

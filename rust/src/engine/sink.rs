@@ -42,7 +42,7 @@ impl Sink for CountingSink {
         self.batches += 1;
         self.rows += result.rows();
         self.live_rows += result.live_rows();
-        self.bytes += result.bytes();
+        self.bytes += result.alloc_bytes();
         self.last_completed_at = self.last_completed_at.max(t);
         Ok(())
     }
@@ -77,7 +77,7 @@ mod tests {
 
     fn batch(rows: usize) -> ColumnBatch {
         let schema = Schema::new(vec![Field::f32("x")]);
-        ColumnBatch::new(schema, vec![Column::F32(vec![1.0; rows])]).unwrap()
+        ColumnBatch::new(schema, vec![Column::F32(vec![1.0; rows].into())]).unwrap()
     }
 
     #[test]

@@ -91,7 +91,7 @@ pub fn execute(
     if env.num_cores == 0 || env.num_gpus == 0 {
         return Err(Error::Plan("need at least one core and one gpu".into()));
     }
-    let aux_bytes = window.map(|w| w.bytes()).unwrap_or(0) as f64;
+    let aux_bytes = window.map(|w| w.alloc_bytes()).unwrap_or(0) as f64;
     let order = query.topo_order()?;
     let consumers = query.consumers();
 
@@ -113,7 +113,8 @@ pub fn execute(
 
         // ---- Input assembly: move/clone/concat producer outputs. A
         // multi-input node (Union) concatenates its branches here, so
-        // the operator itself stays unary.
+        // the operator itself stays unary. Branch fan-out clones are
+        // O(#columns) Arc bumps (shared buffers), not row copies.
         let current: ColumnBatch = if op.inputs.is_empty() {
             source
                 .take()
@@ -129,7 +130,9 @@ pub fn execute(
             let refs: Vec<&ColumnBatch> = parts.iter().collect();
             ColumnBatch::concat(&refs)?
         };
-        let in_bytes = current.bytes();
+        // Cost models charge *allocated* bytes (dead rows still travel
+        // through kernels and over PCIe until a shuffle compacts them).
+        let in_bytes = current.alloc_bytes();
 
         let (next, measured) = match (env.backend, device) {
             (ExecBackend::Real, Device::Gpu) => {
@@ -150,7 +153,7 @@ pub fn execute(
                 (out, None)
             }
         };
-        let out_bytes = next.bytes();
+        let out_bytes = next.alloc_bytes();
 
         // Windowed operators also consume the window side input.
         let op_aux = match kind {
@@ -273,8 +276,8 @@ mod tests {
         ColumnBatch::new(
             schema,
             vec![
-                Column::I32((0..rows as i32).collect()),
-                Column::F32((0..rows).map(|i| i as f32).collect()),
+                Column::I32((0..rows as i32).collect::<Vec<i32>>().into()),
+                Column::F32((0..rows).map(|i| i as f32).collect::<Vec<f32>>().into()),
             ],
         )
         .unwrap()
@@ -376,6 +379,24 @@ mod tests {
         let plan = PhysicalPlan { per_op: vec![] };
         let r = execute(&q, &plan, batch(1), None, &env(&model));
         assert!(matches!(r, Err(Error::Plan(_))), "{r:?}");
+    }
+
+    /// Pins the byte measure the device cost model charges: *allocated*
+    /// bytes (dead rows included), not live bytes — filtered rows still
+    /// flow through downstream kernels until a shuffle compacts them.
+    #[test]
+    fn cost_model_charges_allocated_not_live_bytes() {
+        let model = DeviceModel::default();
+        let q = query();
+        let mut input = batch(100);
+        for i in 0..50 {
+            input.validity.set_live(i, false);
+        }
+        assert!(input.live_bytes() < input.alloc_bytes());
+        let expected_in = input.alloc_bytes();
+        let out = execute(&q, &all(&q, Device::Cpu), input, None, &env(&model)).unwrap();
+        // The scan (op 0) sees the full allocated volume.
+        assert_eq!(out.traces[0].in_bytes, expected_in);
     }
 
     #[test]

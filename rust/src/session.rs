@@ -455,20 +455,30 @@ impl<'rt> Session<'rt> {
                     let qdef = &self.queries[qi];
                     let query = &qdef.query;
 
-                    // Window maintenance + execution input assembly.
+                    // Window maintenance + execution input assembly. The
+                    // snapshot is an Arc'd view maintained incrementally
+                    // by the window state (O(delta) per batch, not
+                    // O(window) — see engine::window).
                     if let Some(newest) = batch.newest_event_time() {
                         windows[qi].evict(newest, &query.window);
                     }
-                    let snapshot = windows[qi].snapshot()?;
-                    let input: ColumnBatch = if query.uses_window_state && !qdef.has_join
+                    let (input, snapshot): (ColumnBatch, _) = if query.uses_window_state
+                        && !qdef.has_join
                     {
-                        // Windowed aggregation recomputes over state ∪ new.
-                        match &snapshot {
-                            Some(st) => ColumnBatch::concat(&[st, &batch.concat()?])?,
+                        // Windowed aggregation recomputes over state ∪ new:
+                        // ingest the new datasets first (O(delta) append),
+                        // then the input *is* the shared snapshot view —
+                        // no per-batch O(window) copy. The late push below
+                        // skips these queries.
+                        windows[qi].push(&batch.datasets);
+                        let snap = windows[qi].snapshot()?;
+                        let input = match &snap {
+                            Some(st) => (**st).clone(),
                             None => batch.concat()?,
-                        }
+                        };
+                        (input, snap)
                     } else {
-                        batch.concat()?
+                        (batch.concat()?, windows[qi].snapshot()?)
                     };
 
                     // Query planning (MapDevice or a fixed policy).
@@ -478,7 +488,7 @@ impl<'rt> Session<'rt> {
                             // Part_(i,j): partition share of the data the
                             // processing phase actually touches.
                             let part =
-                                mean_partition_bytes(input.bytes(), cfg.num_cores);
+                                mean_partition_bytes(input.alloc_bytes(), cfg.num_cores);
                             map_device(
                                 query,
                                 part,
@@ -499,7 +509,7 @@ impl<'rt> Session<'rt> {
                     // A join's build side before any state: empty window.
                     let empty_window = ColumnBatch::empty(input.schema.clone());
                     let join_side = if qdef.has_join {
-                        Some(snapshot.as_ref().unwrap_or(&empty_window))
+                        Some(snapshot.as_deref().unwrap_or(&empty_window))
                     } else {
                         None
                     };
@@ -610,8 +620,11 @@ impl<'rt> Session<'rt> {
                 }
 
                 // ---- Window state ingests the processed datasets.
+                // (Aggregation-path queries already ingested the batch
+                // before snapshotting their execution input, above.)
                 for &qi in &query_ids {
-                    if self.queries[qi].query.uses_window_state {
+                    let q = &self.queries[qi];
+                    if q.query.uses_window_state && q.has_join {
                         windows[qi].push(&batch.datasets);
                     }
                 }

@@ -55,7 +55,7 @@ impl InputStream {
             let rows = self.traffic.next_rows(&mut self.rng);
             if rows > 0 {
                 let batch = self.gen.generate(self.next_tick_no, rows);
-                let bytes = batch.bytes();
+                let bytes = batch.alloc_bytes();
                 self.pending.push_back(Dataset {
                     id: self.next_id,
                     created_at: self.next_tick_at,
@@ -115,7 +115,7 @@ mod tests {
     impl RowGen for OneColGen {
         fn generate(&mut self, tick: u64, rows: usize) -> ColumnBatch {
             let schema = Schema::new(vec![Field::f32("t")]);
-            ColumnBatch::new(schema, vec![Column::F32(vec![tick as f32; rows])])
+            ColumnBatch::new(schema, vec![Column::F32(vec![tick as f32; rows].into())])
                 .unwrap()
         }
     }

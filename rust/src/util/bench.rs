@@ -92,6 +92,20 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// All measurements so far (machine-readable export).
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Mean seconds of the measurement named `name` (0.0 if absent).
+    pub fn mean_of(&self, name: &str) -> f64 {
+        self.results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.summary.mean)
+            .unwrap_or(0.0)
+    }
+
     /// Print a criterion-style summary of every measurement.
     pub fn report(&self) {
         println!("\n{:-<78}", "");

@@ -87,14 +87,14 @@ impl RowGen for ClusterMonitoringGen {
         ColumnBatch::new(
             schema(),
             vec![
-                Column::F32(ts),
-                Column::I32(job),
-                Column::I32(cat),
-                Column::F32(cpu),
-                Column::F32(mem),
-                Column::F32(disk),
-                Column::I32(ev),
-                Column::I32(prio),
+                Column::F32(ts.into()),
+                Column::I32(job.into()),
+                Column::I32(cat.into()),
+                Column::F32(cpu.into()),
+                Column::F32(mem.into()),
+                Column::F32(disk.into()),
+                Column::I32(ev.into()),
+                Column::I32(prio.into()),
             ],
         )
         .expect("CM schema consistent")
@@ -192,8 +192,8 @@ mod tests {
         use crate::source::stream::RowGen as _;
         let mut cm = ClusterMonitoringGen::new(4);
         let mut lr = LinearRoadGen::new(4);
-        let cm_bytes = cm.generate(0, ROWS_PER_SEC).bytes();
-        let lr_bytes = lr.generate(0, 1000).bytes();
+        let cm_bytes = cm.generate(0, ROWS_PER_SEC).alloc_bytes();
+        let lr_bytes = lr.generate(0, 1000).alloc_bytes();
         let ratio = cm_bytes as f64 / lr_bytes as f64;
         assert!((1.8..3.2).contains(&ratio), "CM/LR byte ratio {ratio}");
     }

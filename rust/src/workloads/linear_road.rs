@@ -75,13 +75,13 @@ impl RowGen for LinearRoadGen {
         ColumnBatch::new(
             schema(),
             vec![
-                Column::F32(ts),
-                Column::I32(vehicle),
-                Column::F32(speed),
-                Column::I32(highway),
-                Column::I32(lane),
-                Column::I32(direction),
-                Column::I32(segment),
+                Column::F32(ts.into()),
+                Column::I32(vehicle.into()),
+                Column::F32(speed.into()),
+                Column::I32(highway.into()),
+                Column::I32(lane.into()),
+                Column::I32(direction.into()),
+                Column::I32(segment.into()),
             ],
         )
         .expect("LR schema consistent")

@@ -57,7 +57,12 @@ impl RowGen for SyntheticGen {
         }
         ColumnBatch::new(
             schema(),
-            vec![Column::F32(key), Column::F32(a), Column::F32(b), Column::I32(jk)],
+            vec![
+                Column::F32(key.into()),
+                Column::F32(a.into()),
+                Column::F32(b.into()),
+                Column::I32(jk.into()),
+            ],
         )
         .expect("SPJ schema consistent")
     }
@@ -88,7 +93,7 @@ mod tests {
     fn batch_of_bytes_hits_target() {
         let mut g = SyntheticGen::new(1);
         let b = g.batch_of_bytes(100 * 1024);
-        let ratio = b.bytes() as f64 / (100.0 * 1024.0);
+        let ratio = b.alloc_bytes() as f64 / (100.0 * 1024.0);
         assert!((0.9..1.1).contains(&ratio), "{ratio}");
     }
 

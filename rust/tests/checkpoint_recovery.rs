@@ -90,7 +90,7 @@ fn collected_results_match_query_semantics() {
     for (_, _, batch) in &sink.results {
         let avg = batch.column("avgSpeed").unwrap().as_f32().unwrap();
         for (i, &v) in avg.iter().enumerate() {
-            if batch.valid[i] == 1 {
+            if batch.validity.is_live(i) {
                 assert!(v < 40.0, "HAVING violated: avgSpeed {v}");
             }
         }

@@ -118,7 +118,7 @@ fn plan_arity_mismatch_rejected() {
         runtime: None,
     };
     let schema = Schema::new(vec![Field::f32("x")]);
-    let batch = ColumnBatch::new(schema, vec![Column::F32(vec![1.0])]).unwrap();
+    let batch = ColumnBatch::new(schema, vec![Column::F32(vec![1.0].into())]).unwrap();
     // Lifting a short device vector onto the DAG is itself rejected…
     let bad_devices = DevicePlan::all(Device::Cpu, 1); // query has more ops
     assert!(matches!(
@@ -161,7 +161,7 @@ fn empty_query_planning_and_execution_are_plan_errors() {
         runtime: None,
     };
     let schema = Schema::new(vec![Field::f32("x")]);
-    let batch = ColumnBatch::new(schema, vec![Column::F32(vec![1.0])]).unwrap();
+    let batch = ColumnBatch::new(schema, vec![Column::F32(vec![1.0].into())]).unwrap();
     let r = exec::execute(&empty, &PhysicalPlan { per_op: vec![] }, batch, None, &env);
     assert!(matches!(r, Err(Error::Plan(_))), "{r:?}");
 }
@@ -170,7 +170,7 @@ fn empty_query_planning_and_execution_are_plan_errors() {
 fn unknown_columns_surface_schema_errors() {
     use lmstream::engine::ops;
     let schema = Schema::new(vec![Field::f32("x")]);
-    let batch = ColumnBatch::new(schema, vec![Column::F32(vec![1.0])]).unwrap();
+    let batch = ColumnBatch::new(schema, vec![Column::F32(vec![1.0].into())]).unwrap();
     assert!(matches!(
         ops::filter(&batch, "nope", ops::Predicate::Ge(0.0)),
         Err(Error::Schema(_))
@@ -189,12 +189,12 @@ fn unknown_columns_surface_schema_errors() {
 fn ragged_concat_rejected() {
     let a = ColumnBatch::new(
         Schema::new(vec![Field::f32("x")]),
-        vec![Column::F32(vec![1.0])],
+        vec![Column::F32(vec![1.0].into())],
     )
     .unwrap();
     let b = ColumnBatch::new(
         Schema::new(vec![Field::f32("y")]),
-        vec![Column::F32(vec![1.0])],
+        vec![Column::F32(vec![1.0].into())],
     )
     .unwrap();
     assert!(ColumnBatch::concat(&[&a, &b]).is_err());

@@ -33,7 +33,7 @@ fn assert_equiv(rt: &Runtime, spec: &OpSpec, batch: &ColumnBatch, window: Option
     let native = cpu::run_op(spec, batch, window, &wspec()).expect("cpu path");
     let device = gpu::run_op(rt, spec, batch, window, &wspec()).expect("gpu path");
     assert_eq!(native.rows(), device.rows(), "{spec:?} row count");
-    assert_eq!(native.valid, device.valid, "{spec:?} validity");
+    assert_eq!(native.validity.to_vec(), device.validity.to_vec(), "{spec:?} validity");
     assert_eq!(native.schema, device.schema, "{spec:?} schema");
     for (ci, (a, b)) in native.columns.iter().zip(&device.columns).enumerate() {
         match (a, b) {
@@ -59,7 +59,7 @@ fn filters_equivalent() {
     let mut batch = lr_batch(1, 700);
     for i in 0..700 {
         if i % 7 == 0 {
-            batch.valid[i] = 0; // pre-dead rows must stay dead
+            batch.validity.set_live(i, false); // pre-dead rows must stay dead
         }
     }
     for pred in [
@@ -205,7 +205,7 @@ fn sort_equivalent() {
     let mut batch = lr_batch(10, 800);
     for i in 0..800 {
         if i % 11 == 0 {
-            batch.valid[i] = 0;
+            batch.validity.set_live(i, false);
         }
     }
     // Note: device sort uses a stable argsort on the key only, as does

@@ -17,8 +17,9 @@ use std::time::Duration;
 fn dataset(id: u64, t: f64, rows: usize) -> Dataset {
     let schema = Schema::new(vec![Field::f32("x")]);
     let batch =
-        ColumnBatch::new(schema, vec![Column::F32(vec![t as f32; rows.max(1)])]).unwrap();
-    let bytes = batch.bytes();
+        ColumnBatch::new(schema, vec![Column::F32(vec![t as f32; rows.max(1)].into())])
+            .unwrap();
+    let bytes = batch.alloc_bytes();
     Dataset {
         id,
         created_at: Time::from_secs_f64(t),
@@ -191,7 +192,7 @@ fn prop_partition_coverage() {
         let schema = Schema::new(vec![Field::f32("x")]);
         let batch = ColumnBatch::new(
             schema,
-            vec![Column::F32((0..rows).map(|i| i as f32).collect())],
+            vec![Column::F32((0..rows).map(|i| i as f32).collect::<Vec<f32>>().into())],
         )
         .unwrap();
         let parts = partition::split(&batch, rows * 65, n);
