@@ -3,23 +3,37 @@
 //! (through the same [`crate::query::exec`] engine); shuffle boundaries
 //! pay a network all-to-all; the batch completes at the slowest executor
 //! (barrier), plus master coordination.
+//!
+//! Shares are chunk-list views of the input ([`ChunkedBatch::slice`])
+//! and executor outputs are reassembled by chunk appends
+//! ([`ChunkedBatch::extend`]) — the cluster path copies no rows on
+//! either side of the barrier. Branch-sink outputs are merged the same
+//! way and surfaced in [`ClusterOutcome::branch_results`] (they used to
+//! be dropped on the floor).
 
 use crate::config::ExecBackend;
 use crate::cluster::topology::ClusterSpec;
 use crate::devices::model::DeviceModel;
-use crate::engine::column::ColumnBatch;
+use crate::engine::chunked::ChunkedBatch;
 use crate::error::Result;
 use crate::query::dag::{OpKind, Query};
 use crate::query::exec::{self, ExecEnv, ExecOutcome};
 use crate::query::physical::PhysicalPlan;
 use crate::runtime::client::Runtime;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Result of one cluster-wide batch execution.
 #[derive(Debug)]
 pub struct ClusterOutcome {
-    /// Concatenated result rows from all executors.
-    pub result: ColumnBatch,
+    /// Primary-sink rows from all executors (chunk-appended, in
+    /// executor order — no materializing concat).
+    pub result: ChunkedBatch,
+    /// Branch-sink outputs merged across executors, as `(op_id, batch)`
+    /// in ascending op id — the same shape as
+    /// [`ExecOutcome::branch_results`], so single-node and cluster runs
+    /// deliver identical branch outputs.
+    pub branch_results: Vec<(usize, ChunkedBatch)>,
     /// Wall/simulated processing time: max executor chain + exchanges +
     /// coordination.
     pub proc: Duration,
@@ -41,17 +55,19 @@ pub fn execute_on_cluster(
     cluster: &ClusterSpec,
     query: &Query,
     plan: &PhysicalPlan,
-    input: ColumnBatch,
-    window: Option<&ColumnBatch>,
+    input: impl Into<ChunkedBatch>,
+    window: Option<&ChunkedBatch>,
     model: &DeviceModel,
     backend: ExecBackend,
     runtime: Option<&Runtime>,
 ) -> Result<ClusterOutcome> {
+    let input = input.into();
     cluster.validate()?;
     let total_cores = cluster.total_cores();
     let rows = input.rows();
 
-    // Row shares proportional to executor cores (remainder to the first).
+    // Row shares proportional to executor cores (remainder to the last);
+    // each share is a chunk-list view — no rows are copied.
     let mut shares = Vec::with_capacity(cluster.executors.len());
     let mut start = 0usize;
     for (i, e) in cluster.executors.iter().enumerate() {
@@ -96,10 +112,24 @@ pub fn execute_on_cluster(
         per_executor.push(out);
     }
 
-    let parts: Vec<&ColumnBatch> = per_executor.iter().map(|o| &o.result).collect();
-    let result = ColumnBatch::concat(&parts)?;
+    // Reassembly: O(#chunks) appends per sink, executor order = row
+    // order (shares are contiguous row ranges).
+    let mut result = ChunkedBatch::new(Arc::clone(per_executor[0].result.schema()));
+    for o in &per_executor {
+        result.extend(&o.result)?;
+    }
+    // Branch sinks: every executor ran the same plan, so branch slots
+    // align by position; merge each across executors.
+    let mut branch_results: Vec<(usize, ChunkedBatch)> = Vec::new();
+    for (slot, (op_id, first)) in per_executor[0].branch_results.iter().enumerate() {
+        let mut merged = ChunkedBatch::new(Arc::clone(first.schema()));
+        for o in &per_executor {
+            merged.extend(&o.branch_results[slot].1)?;
+        }
+        branch_results.push((*op_id, merged));
+    }
     let proc = straggler + network + cluster.coordination();
-    Ok(ClusterOutcome { result, proc, straggler, network, per_executor })
+    Ok(ClusterOutcome { result, branch_results, proc, straggler, network, per_executor })
 }
 
 #[cfg(test)]
@@ -192,7 +222,7 @@ mod tests {
             .unwrap();
         let plan = PhysicalPlan::uniform(&q, Device::Cpu);
         let model = DeviceModel::default();
-        let window = input(2000);
+        let window = ChunkedBatch::from_batch(input(2000));
         let single = execute_on_cluster(
             &ClusterSpec::single(),
             &q,
@@ -223,5 +253,52 @@ mod tests {
     fn empty_input_runs() {
         let out = run(&ClusterSpec::paper(), 0);
         assert_eq!(out.result.rows(), 0);
+    }
+
+    #[test]
+    fn reassembly_shares_executor_chunks() {
+        // The cluster result aliases the per-executor outputs' chunks —
+        // partition reassembly is chunk appends, not a materializing
+        // concat.
+        let out = run(&ClusterSpec::paper(), 4000);
+        assert!(out.result.num_chunks() >= out.per_executor.len());
+        let first_exec_chunk = &out.per_executor[0].result.chunks()[0];
+        assert!(out.result.chunks()[0].columns[0]
+            .shares_memory(&first_exec_chunk.columns[0]));
+    }
+
+    #[test]
+    fn branch_sinks_surface_through_cluster() {
+        use crate::engine::ops::filter::Predicate as P;
+        // scan -> filter -> {select branch sink, select primary sink}.
+        let q = QueryBuilder::scan("b")
+            .window(WindowSpec::sliding(
+                Duration::from_secs(30),
+                Duration::from_secs(5),
+            ))
+            .filter("speed", P::Ge(20.0))
+            .branch(|b| b.select(&["vehicle"]))
+            .select(&["speed"])
+            .build()
+            .unwrap();
+        let plan = PhysicalPlan::uniform(&q, Device::Cpu);
+        let model = DeviceModel::default();
+        let out = execute_on_cluster(
+            &ClusterSpec::paper(),
+            &q,
+            &plan,
+            input(2000),
+            None,
+            &model,
+            ExecBackend::Simulated,
+            None,
+        )
+        .unwrap();
+        assert_eq!(out.branch_results.len(), 1);
+        let (op_id, branch) = &out.branch_results[0];
+        assert_eq!(*op_id, 2);
+        assert_eq!(branch.schema().fields[0].name, "vehicle");
+        // Branch rows survive the same filter as the primary sink.
+        assert_eq!(branch.live_rows(), out.result.live_rows());
     }
 }

@@ -25,6 +25,34 @@ pub enum AdmissionDecision {
     Buffer { est_max_lat: Duration },
 }
 
+/// The `AvgThPut_(i-1)` a multi-query source should feed Eq. 6: the
+/// **minimum** positive observed throughput across its registered
+/// queries — the slowest query dominates how long the batch will really
+/// take, so the latency estimate must be sized by it. Queries with no
+/// history yet (estimate `<= 0`) are skipped; with no history anywhere,
+/// falls back to `initial` (the configured bootstrap throughput).
+///
+/// Because [`Admission::estimate_max_latency`] is anti-monotone in the
+/// throughput, using the minimum yields the **largest** (most
+/// conservative) estimate: admission under the shared estimate is at
+/// least as eager as under any single query's — pinned by
+/// `prop_shared_throughput_is_tightest` in `tests/prop_coordinator.rs`.
+pub fn min_positive_throughput(
+    estimates: impl IntoIterator<Item = f64>,
+    initial: f64,
+) -> f64 {
+    let mut min: Option<f64> = None;
+    for e in estimates {
+        if e > 0.0 {
+            min = Some(match min {
+                None => e,
+                Some(m) => m.min(e),
+            });
+        }
+    }
+    min.unwrap_or(initial)
+}
+
 /// Admission controller state.
 pub struct Admission {
     window: WindowSpec,
@@ -248,6 +276,14 @@ mod tests {
         let a = tumbling();
         assert_eq!(a.bound(None), Duration::from_secs(1));
         assert_eq!(a.bound(Some(Duration::from_secs(7))), Duration::from_secs(7));
+    }
+
+    #[test]
+    fn min_positive_throughput_skips_unobserved_queries() {
+        assert_eq!(min_positive_throughput([3e4, 1e4, 2e4], 5e4), 1e4);
+        assert_eq!(min_positive_throughput([0.0, 2e4], 5e4), 2e4);
+        assert_eq!(min_positive_throughput([0.0, 0.0], 5e4), 5e4);
+        assert_eq!(min_positive_throughput(std::iter::empty(), 5e4), 5e4);
     }
 
     #[test]

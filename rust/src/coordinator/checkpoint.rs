@@ -19,6 +19,19 @@ use crate::util::json::{arr, num, obj, s, Json};
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
+/// Per-query recoverable metric state. Checkpoints are keyed per source
+/// by its *primary* query's name, but a source can carry any number of
+/// co-registered queries — their Eq. 3/4 running state is persisted here
+/// so secondary-query metrics survive recovery too.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryMetricState {
+    pub name: String,
+    pub batches: usize,
+    pub cumulative_bytes: f64,
+    pub cumulative_proc_secs: f64,
+    pub max_lat_sum_secs: f64,
+}
+
 /// Recoverable coordinator state.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
@@ -30,11 +43,16 @@ pub struct Checkpoint {
     pub processed_up_to: Time,
     /// Current inflection point (bytes).
     pub inf_pt: f64,
-    /// Eq. 4 cumulative state.
+    /// Eq. 4 cumulative state (primary query; kept for compatibility —
+    /// `queries` carries the authoritative per-query states).
     pub cumulative_bytes: f64,
     pub cumulative_proc_secs: f64,
-    /// Eq. 3 running state.
+    /// Eq. 3 running state (primary query).
     pub max_lat_sum_secs: f64,
+    /// Per-query metric states for every query registered on the source
+    /// (primary included). Empty when loading a pre-multi-query file;
+    /// recovery then falls back to the legacy primary-only fields.
+    pub queries: Vec<QueryMetricState>,
     /// Optimizer history.
     pub history: Vec<HistoryPoint>,
 }
@@ -50,6 +68,22 @@ impl Checkpoint {
             ("cumulative_bytes", num(self.cumulative_bytes)),
             ("cumulative_proc_secs", num(self.cumulative_proc_secs)),
             ("max_lat_sum_secs", num(self.max_lat_sum_secs)),
+            (
+                "queries",
+                arr(self
+                    .queries
+                    .iter()
+                    .map(|q| {
+                        obj(vec![
+                            ("name", s(&q.name)),
+                            ("batches", num(q.batches as f64)),
+                            ("bytes", num(q.cumulative_bytes)),
+                            ("proc", num(q.cumulative_proc_secs)),
+                            ("maxlat", num(q.max_lat_sum_secs)),
+                        ])
+                    })
+                    .collect()),
+            ),
             (
                 "history",
                 arr(self
@@ -85,6 +119,23 @@ impl Checkpoint {
                 })
             })
             .collect::<Result<Vec<_>>>()?;
+        // Optional: absent in files written before multi-query metric
+        // persistence (recovery then uses the legacy primary fields).
+        let queries = match j.get("queries").and_then(|q| q.as_arr()) {
+            None => Vec::new(),
+            Some(items) => items
+                .iter()
+                .map(|q| {
+                    Ok(QueryMetricState {
+                        name: q.req("name")?.as_str().unwrap_or("").to_string(),
+                        batches: q.req("batches")?.as_usize().unwrap_or(0),
+                        cumulative_bytes: q.req("bytes")?.as_f64().unwrap_or(0.0),
+                        cumulative_proc_secs: q.req("proc")?.as_f64().unwrap_or(0.0),
+                        max_lat_sum_secs: q.req("maxlat")?.as_f64().unwrap_or(0.0),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
         Ok(Checkpoint {
             workload: j.req("workload")?.as_str().unwrap_or("").to_string(),
             batches: j.req("batches")?.as_usize().unwrap_or(0),
@@ -93,6 +144,7 @@ impl Checkpoint {
             cumulative_bytes: j.req("cumulative_bytes")?.as_f64().unwrap_or(0.0),
             cumulative_proc_secs: j.req("cumulative_proc_secs")?.as_f64().unwrap_or(0.0),
             max_lat_sum_secs: j.req("max_lat_sum_secs")?.as_f64().unwrap_or(0.0),
+            queries,
             history,
         })
     }
@@ -185,6 +237,22 @@ mod tests {
             cumulative_bytes: 5e6,
             cumulative_proc_secs: 100.0,
             max_lat_sum_secs: 210.0,
+            queries: vec![
+                QueryMetricState {
+                    name: "LR1S".into(),
+                    batches: 42,
+                    cumulative_bytes: 5e6,
+                    cumulative_proc_secs: 100.0,
+                    max_lat_sum_secs: 210.0,
+                },
+                QueryMetricState {
+                    name: "side".into(),
+                    batches: 42,
+                    cumulative_bytes: 5e6,
+                    cumulative_proc_secs: 80.0,
+                    max_lat_sum_secs: 150.0,
+                },
+            ],
             history: vec![
                 HistoryPoint { throughput: 3e4, max_latency: 5.0, inf_pt: 1.5e5 },
                 HistoryPoint { throughput: 3.2e4, max_latency: 4.5, inf_pt: 1.4e5 },
@@ -209,6 +277,31 @@ mod tests {
         assert_eq!(loaded.inf_pt, c.inf_pt);
         assert_eq!(loaded.history.len(), 2);
         assert_eq!(loaded.history[1].max_latency, 4.5);
+        // Per-query states (secondary-query metrics) round trip.
+        assert_eq!(loaded.queries, c.queries);
+        assert_eq!(loaded.queries[1].name, "side");
+        assert_eq!(loaded.queries[1].cumulative_proc_secs, 80.0);
+    }
+
+    #[test]
+    fn legacy_checkpoint_without_queries_loads() {
+        // A pre-multi-query file has no `queries` array; loading must
+        // succeed with an empty vec (recovery falls back to the legacy
+        // primary-only fields).
+        let st = store("legacy");
+        let mut c = demo();
+        c.queries.clear();
+        st.save(&c).unwrap();
+        let text = std::fs::read_to_string(st.path_for("lr1s")).unwrap();
+        let stripped = text.replace(
+            "\"queries\":[],",
+            "",
+        );
+        assert_ne!(text, stripped, "fixture must drop the queries field");
+        std::fs::write(st.path_for("lr1s"), stripped).unwrap();
+        let loaded = st.load("lr1s").unwrap().unwrap();
+        assert!(loaded.queries.is_empty());
+        assert_eq!(loaded.batches, c.batches);
     }
 
     #[test]

@@ -71,6 +71,9 @@ pub struct Metrics {
     records: Vec<BatchRecord>,
     /// Per-dataset end-to-end latency (buffering + its batch's proc), s.
     dataset_latencies: Vec<f64>,
+    /// Batches accounted by a restored checkpoint (their records are
+    /// gone, but they still weight Eq. 3/4's running state).
+    restored_batches: usize,
     cumulative_bytes: f64,
     cumulative_proc: f64,
     max_lat_sum: f64,
@@ -79,6 +82,23 @@ pub struct Metrics {
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
+    }
+
+    /// Seed the cumulative Eq. 3/4 state from a recovered checkpoint:
+    /// the restored batches keep weighting `avg_throughput` /
+    /// `past_max_lat_avg` (and offset batch indices), while their
+    /// per-batch records are not resurrected.
+    pub fn restore(
+        &mut self,
+        batches: usize,
+        cumulative_bytes: f64,
+        cumulative_proc_secs: f64,
+        max_lat_sum_secs: f64,
+    ) {
+        self.restored_batches = batches;
+        self.cumulative_bytes = cumulative_bytes;
+        self.cumulative_proc = cumulative_proc_secs;
+        self.max_lat_sum = max_lat_sum_secs;
     }
 
     /// Record one executed batch. `dataset_buffs` are the per-dataset
@@ -121,14 +141,14 @@ impl Metrics {
         }
     }
 
-    /// Eq. 3 RHS: running average of past `MaxLat_k` (None before first).
+    /// Eq. 3 RHS: running average of past `MaxLat_k` (None before the
+    /// first batch — restored batches count).
     pub fn past_max_lat_avg(&self) -> Option<Duration> {
-        if self.records.is_empty() {
+        let n = self.batches();
+        if n == 0 {
             None
         } else {
-            Some(Duration::from_secs_f64(
-                self.max_lat_sum / self.records.len() as f64,
-            ))
+            Some(Duration::from_secs_f64(self.max_lat_sum / n as f64))
         }
     }
 
@@ -145,8 +165,9 @@ impl Metrics {
         &self.records
     }
 
+    /// Total batches accounted: restored (checkpoint) + this run's.
     pub fn batches(&self) -> usize {
-        self.records.len()
+        self.restored_batches + self.records.len()
     }
 
     /// Table IV totals. Buffering per batch = max dataset buffering (the
@@ -223,6 +244,21 @@ mod tests {
         );
         assert_eq!(m.dataset_latencies(), &[1.0, 3.0]);
         assert_eq!(m.avg_dataset_latency(), 2.0);
+    }
+
+    #[test]
+    fn restore_seeds_cumulative_state() {
+        let mut m = Metrics::new();
+        m.restore(10, 20_000.0, 10.0, 30.0);
+        // Eq. 4/3 derive from the restored state before any new batch.
+        assert_eq!(m.batches(), 10);
+        assert_eq!(m.avg_throughput(), 2000.0);
+        assert_eq!(m.past_max_lat_avg().unwrap(), Duration::from_secs(3));
+        assert!(m.records().is_empty(), "restored batches have no records");
+        // New batches blend into the restored running state.
+        m.record(rec(10, 2000, 1.0), &[Duration::from_secs(1)]);
+        assert_eq!(m.batches(), 11);
+        assert_eq!(m.avg_throughput(), 22_000.0 / 11.0);
     }
 
     #[test]

@@ -132,6 +132,12 @@ impl SizeEstimator {
     }
 }
 
+/// Contiguous-staging share of Eq. 9's transition cost, charged on
+/// *entering* boundaries only: the planner's counterpart of the
+/// executor's `DeviceModel::coalesce_time` (memcpy staging runs ~4x the
+/// PCIe+conversion rate, hence 1/4 of the transfer cost).
+pub const COALESCE_TRANS_SHARE: f64 = 0.25;
+
 /// Algorithm 2: map each operation to CPU or GPU, producing the
 /// physical plan (device + size annotation per op).
 ///
@@ -182,6 +188,14 @@ pub fn map_device(
             });
         if entering || leaving {
             gpu_cost += trans;
+            if entering {
+                // A GPU op's chunked input must be staged contiguously
+                // before crossing host→device (ChunkedBatch::coalesce):
+                // charge the staging share alongside Eq. 9, mirroring
+                // the executor's DeviceModel::coalesce_time so planner
+                // and executor see the same boundary economics.
+                gpu_cost += COALESCE_TRANS_SHARE * trans;
+            }
         } else {
             cpu_cost += trans;
         }
@@ -331,6 +345,22 @@ mod tests {
         let low_inf = map_device(&q, 100.0 * KB, 50.0 * KB, 0.1, &est).unwrap();
         let high_inf = map_device(&q, 100.0 * KB, 200.0 * KB, 0.1, &est).unwrap();
         assert!(low_inf.gpu_ops() > high_inf.gpu_ops());
+    }
+
+    #[test]
+    fn entering_boundary_charges_coalesce_staging_share() {
+        // Single scan: both entering and leaving. At 1.5x the inflection
+        // point with base_trans 0.4, Eq. 9 alone would leave it on GPU
+        // (0.8/1.5 + 0.4·1.5 ≈ 1.13 < 1.2); the entering coalesce share
+        // (+0.25 · 0.4 · 1.5 = 0.15) tips it to CPU. A cheaper
+        // transition cost keeps it on GPU.
+        let q = QueryBuilder::scan("s").build().unwrap();
+        let est = SizeEstimator::new(q.len());
+        let inf = 100.0 * KB;
+        let dear = map_device(&q, 1.5 * inf, inf, 0.4, &est).unwrap();
+        assert_eq!(dear.device(0), Device::Cpu, "{dear:?}");
+        let cheap = map_device(&q, 1.5 * inf, inf, 0.3, &est).unwrap();
+        assert_eq!(cheap.device(0), Device::Gpu, "{cheap:?}");
     }
 
     #[test]

@@ -1,12 +1,79 @@
 //! CPU-path executor: dispatches an [`OpSpec`] to the native operators.
+//!
+//! [`run_op_chunked`] is the engine path — every operator consumes and
+//! produces a [`ChunkedBatch`], iterating the chunk list instead of a
+//! coalesced batch (only `sort` coalesces; see `engine::ops::sort`).
+//! [`run_op`] remains as the single-batch kernel dispatcher (used per
+//! chunk, by the GPU path's host-side fallbacks, and by the CPU↔GPU
+//! equivalence tests); the differential harness
+//! (`rust/tests/diff_chunked.rs`) pins that the two agree.
 
+use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::ColumnBatch;
 use crate::engine::ops;
 use crate::engine::window::WindowSpec;
 use crate::error::{Error, Result};
 use crate::query::dag::OpSpec;
 
-/// Execute one operator natively. `window` supplies the build side for
+/// Execute one operator over the chunked representation. `window`
+/// supplies the build side for windowed joins (as a chunk list — the
+/// window snapshot is never coalesced on this path); `expand_factor`
+/// comes from the query's window spec.
+pub fn run_op_chunked(
+    spec: &OpSpec,
+    batch: &ChunkedBatch,
+    window: Option<&ChunkedBatch>,
+    window_spec: &WindowSpec,
+) -> Result<ChunkedBatch> {
+    match spec {
+        OpSpec::Scan => Ok(batch.clone()),
+        OpSpec::Filter { col, pred } => ops::filter_chunks(batch, col, *pred),
+        OpSpec::ProjectSelect { keep } => {
+            let names: Vec<&str> = keep.iter().map(|s| s.as_str()).collect();
+            ops::project_select_chunks(batch, &names)
+        }
+        OpSpec::ProjectAffine { a, b, alpha, beta, out } => {
+            ops::project_affine_chunks(batch, a, b, *alpha, *beta, out)
+        }
+        OpSpec::Expand => {
+            ops::expand_chunks(batch, window_spec.expand_factor() as usize)
+        }
+        OpSpec::Shuffle { key } => {
+            // Single-process exchange: repartition and re-collect
+            // (compacts dead rows — the shuffle's observable effect here).
+            let parts = ops::shuffle_chunks(batch, key, 1)?;
+            Ok(parts.into_iter().next().expect("one shuffle partition"))
+        }
+        OpSpec::Aggregate { group, aggs, having } => {
+            let groups: Vec<&str> = group.iter().map(|s| s.as_str()).collect();
+            let hv = having.as_ref().map(|(c, p)| (c.as_str(), *p));
+            ops::hash_aggregate_chunks(batch, &groups, aggs, hv)
+        }
+        OpSpec::JoinWithWindow { probe_key, build_key } => {
+            let build = window.ok_or_else(|| {
+                Error::Plan("windowed join requires window state".into())
+            })?;
+            ops::hash_join_chunks(batch, build, probe_key, build_key)
+        }
+        OpSpec::JoinWithWindowPruned { probe_key, build_key, probe_cols, build_cols } => {
+            let build = window.ok_or_else(|| {
+                Error::Plan("windowed join requires window state".into())
+            })?;
+            ops::join::hash_join_chunks_pruned(
+                batch, build, probe_key, build_key,
+                Some(probe_cols), Some(build_cols),
+            )
+        }
+        OpSpec::Sort { col, desc } => ops::sort_chunks(batch, col, *desc),
+        // The executor concatenates a Union's input branches (an
+        // O(#chunks) chunk-list append) while assembling its input; the
+        // op itself passes through.
+        OpSpec::Union => Ok(batch.clone()),
+    }
+}
+
+/// Execute one operator natively over a single contiguous batch — the
+/// per-chunk kernel dispatcher. `window` supplies the build side for
 /// windowed joins; `expand_factor` comes from the query's window spec.
 pub fn run_op(
     spec: &OpSpec,
@@ -123,5 +190,30 @@ mod tests {
         let out = run_op(&OpSpec::Shuffle { key: "k".into() }, &b, None, &wspec()).unwrap();
         assert_eq!(out.rows(), 2);
         assert_eq!(out.live_rows(), out.rows());
+    }
+
+    #[test]
+    fn chunked_dispatch_matches_single_batch_kernels() {
+        let b = batch();
+        let mut layout = ChunkedBatch::from_batch(b.slice(0, 1));
+        layout.push(b.slice(1, 2)).unwrap();
+        for spec in [
+            OpSpec::Scan,
+            OpSpec::Filter { col: "v".into(), pred: Predicate::Ge(2.0) },
+            OpSpec::ProjectSelect { keep: vec!["v".into()] },
+            OpSpec::Expand,
+            OpSpec::Shuffle { key: "k".into() },
+            OpSpec::Sort { col: "v".into(), desc: true },
+            OpSpec::Union,
+        ] {
+            let chunked = run_op_chunked(&spec, &layout, None, &wspec()).unwrap();
+            let single = run_op(&spec, &b, None, &wspec()).unwrap();
+            assert_eq!(chunked.coalesce(), single, "{spec:?}");
+        }
+        let join = OpSpec::JoinWithWindow { probe_key: "k".into(), build_key: "k".into() };
+        let window = ChunkedBatch::from_batch(b.clone());
+        let chunked = run_op_chunked(&join, &layout, Some(&window), &wspec()).unwrap();
+        let single = run_op(&join, &b, Some(&b), &wspec()).unwrap();
+        assert_eq!(chunked.coalesce(), single);
     }
 }

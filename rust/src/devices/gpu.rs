@@ -7,6 +7,7 @@
 //! stay host-side, as Rapids keeps them in the JVM. Semantics are
 //! identical to [`crate::devices::cpu`], asserted by integration tests.
 
+use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::{Column, ColumnBatch, DType, Field, Schema, Validity};
 use crate::engine::ops;
 use crate::engine::ops::filter::Predicate;
@@ -19,6 +20,49 @@ use crate::util::hash::FxHashMap;
 /// Max probe rows per `join_probe` invocation (the artifact's build
 /// bucket; larger probes are chunked).
 const JOIN_CHUNK: usize = 4096;
+
+/// Execute one operator over the chunked representation through the
+/// artifacts. Host-side plan reshapes stay chunk-iterating (via the CPU
+/// dispatcher); device kernels marshal contiguous staging buffers, so a
+/// chunked input crossing the host→device boundary pays one **explicit
+/// coalesce** here (Alg. 2's `Trans` placement; the planner and the
+/// simulated cost model charge the same staging via
+/// `DeviceModel::coalesce_time`). Kernel outputs come back as a single
+/// fresh chunk.
+pub fn run_op_chunked(
+    rt: &Runtime,
+    spec: &OpSpec,
+    batch: &ChunkedBatch,
+    window: Option<&ChunkedBatch>,
+    window_spec: &WindowSpec,
+) -> Result<ChunkedBatch> {
+    match spec {
+        // Host-side plan reshapes (Rapids keeps these in the JVM too):
+        // no device boundary, no coalesce.
+        OpSpec::Scan
+        | OpSpec::ProjectSelect { .. }
+        | OpSpec::Expand
+        | OpSpec::Shuffle { .. }
+        | OpSpec::Union => {
+            crate::devices::cpu::run_op_chunked(spec, batch, window, window_spec)
+        }
+        // Device kernels: stage contiguously once, then run the
+        // single-batch artifact path. The window chunk list is staged
+        // only for the ops that actually read it (the joins) — other
+        // kernels must not pay an O(window) coalesce they'd discard.
+        _ => {
+            let contiguous = batch.coalesce();
+            let staged_window = match spec {
+                OpSpec::JoinWithWindow { .. } | OpSpec::JoinWithWindowPruned { .. } => {
+                    window.map(|w| w.coalesce())
+                }
+                _ => None,
+            };
+            let out = run_op(rt, spec, &contiguous, staged_window.as_ref(), window_spec)?;
+            Ok(ChunkedBatch::from_batch(out))
+        }
+    }
+}
 
 fn col_to_f32(c: &Column) -> Vec<f32> {
     match c {

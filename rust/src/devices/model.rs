@@ -64,6 +64,10 @@ pub struct DeviceModel {
     /// Transfer cost per byte (includes row↔columnar conversion, the
     /// dominant Spark-Rapids transfer cost).
     pub pcie_ns_per_byte: f64,
+    /// Host-side contiguous staging cost per byte: gathering a chunked
+    /// batch into the pinned transfer buffer before a host→device copy
+    /// (memcpy-rate — cheaper than PCIe + conversion, but not free).
+    pub coalesce_ns_per_byte: f64,
     /// Per-micro-batch scheduling overhead (driver, DAG submit, commit).
     pub batch_fixed: Duration,
     /// GPU working-set size beyond which Rapids spills device memory
@@ -87,6 +91,7 @@ impl Default for DeviceModel {
             gpu_ns_per_byte: 150.0, // 0.15 µs/B ≈ 6.5 MB/s effective
             pcie_lat: Duration::from_micros(50),
             pcie_ns_per_byte: 120.0, // ≈ 8 MB/s incl. columnar conversion
+            coalesce_ns_per_byte: 30.0, // ≈ 4x the PCIe rate: pure memcpy
             batch_fixed: Duration::from_millis(300),
             gpu_mem_bytes: 4.5 * 1024.0 * 1024.0,
             cpu_mem_bytes: 48.0 * 1024.0 * 1024.0,
@@ -168,6 +173,16 @@ impl DeviceModel {
     /// Host↔device transfer time for `bytes`.
     pub fn transfer_time(&self, bytes: f64) -> Duration {
         self.pcie_lat + Duration::from_nanos((bytes * self.pcie_ns_per_byte) as u64)
+    }
+
+    /// Contiguous staging time for `bytes` entering the device: the
+    /// explicit `ChunkedBatch::coalesce` a GPU-mapped op performs at a
+    /// host→device boundary (charged alongside [`transfer_time`] on
+    /// entering edges; leaving edges are already contiguous device-side).
+    ///
+    /// [`transfer_time`]: DeviceModel::transfer_time
+    pub fn coalesce_time(&self, bytes: f64) -> Duration {
+        Duration::from_nanos((bytes * self.coalesce_ns_per_byte) as u64)
     }
 
     /// Data size where CPU and GPU op costs cross for a simple
@@ -274,6 +289,19 @@ mod tests {
         let total = m().op_time(Device::Gpu, OpKind::Project, sym(s)).as_secs_f64()
             + transfer;
         assert!(transfer / total > 0.05, "ratio {}", transfer / total);
+    }
+
+    #[test]
+    fn coalesce_staging_cheaper_than_transfer() {
+        // Gathering chunks into the staging buffer is memcpy-rate: it
+        // must cost strictly less than the PCIe+conversion copy of the
+        // same bytes, and scale linearly with no fixed latency.
+        let s = 256.0 * KB;
+        assert!(m().coalesce_time(s) < m().transfer_time(s));
+        assert_eq!(m().coalesce_time(0.0), Duration::ZERO);
+        let one = m().coalesce_time(s).as_secs_f64();
+        let four = m().coalesce_time(4.0 * s).as_secs_f64();
+        assert!((four / one - 4.0).abs() < 0.01, "nonlinear staging cost");
     }
 
     #[test]

@@ -1,0 +1,361 @@
+//! Chunked batches: the engine's execution representation.
+//!
+//! A [`ChunkedBatch`] is an ordered list of `Arc<ColumnBatch>` *chunks*
+//! sharing one schema, with cached total and live row counts. It is what
+//! every engine operator consumes and produces (see `engine::ops` and
+//! `devices::{cpu,gpu}`), so the places that used to materialize a
+//! multi-part [`ColumnBatch::concat`] — `Union` input assembly in the
+//! executor, cluster partition reassembly, and the window snapshot ∪
+//! new-input union — become O(#chunks) Arc appends with **zero row
+//! copies**.
+//!
+//! # Invariants
+//!
+//! * Every chunk's schema content-equals the batch schema (checked on
+//!   [`ChunkedBatch::push`] / [`ChunkedBatch::extend`]).
+//! * Chunks are immutable (shared `Arc`s); a retained `ChunkedBatch`
+//!   clone is never affected by later appends elsewhere — there is no
+//!   copy-on-write anywhere on this path.
+//! * Zero-row chunks are permitted; `rows()`/`live_rows()` are cached,
+//!   O(1).
+//! * Logical content is the in-order concatenation of the chunks:
+//!   [`ChunkedBatch::coalesce`] materializes it, and `PartialEq`
+//!   compares it — two layouts of the same rows are equal.
+//!
+//! # Coalesce points
+//!
+//! Ops that genuinely need contiguity call an explicit coalesce, whose
+//! cost the planner and device model charge:
+//!
+//! * `sort` (global order over all rows),
+//! * real-GPU kernels at a host→device boundary (PJRT wants contiguous
+//!   staging buffers; see [`crate::devices::gpu::run_op_chunked`] and
+//!   `DeviceModel::coalesce_time`),
+//! * validation sinks ([`crate::engine::sink::CollectSink`]).
+//!
+//! Everything else (filter, project, expand, scan, aggregate, join
+//! probe, shuffle) iterates the chunk list directly; the differential
+//! harness (`rust/tests/diff_chunked.rs`) pins that chunked execution is
+//! bit-identical to coalesced single-chunk execution.
+
+use crate::engine::column::{ColumnBatch, Schema};
+use crate::error::{Error, Result};
+use std::sync::Arc;
+
+/// An ordered list of schema-sharing column-batch chunks; see the
+/// module docs for the invariants.
+#[derive(Clone, Debug)]
+pub struct ChunkedBatch {
+    schema: Arc<Schema>,
+    chunks: Vec<Arc<ColumnBatch>>,
+    /// Cached total rows (live + dead) across chunks.
+    rows: usize,
+    /// Cached live rows across chunks.
+    live: usize,
+}
+
+impl ChunkedBatch {
+    /// Empty batch (no chunks) of `schema`.
+    pub fn new(schema: Arc<Schema>) -> ChunkedBatch {
+        ChunkedBatch { schema, chunks: Vec::new(), rows: 0, live: 0 }
+    }
+
+    /// Single-chunk batch wrapping `batch` (no row copies).
+    pub fn from_batch(batch: ColumnBatch) -> ChunkedBatch {
+        ChunkedBatch::from_arc(Arc::new(batch))
+    }
+
+    /// Single-chunk batch sharing an already-Arc'd chunk — O(1).
+    pub fn from_arc(batch: Arc<ColumnBatch>) -> ChunkedBatch {
+        let rows = batch.rows();
+        let live = batch.live_rows();
+        let schema = Arc::clone(&batch.schema);
+        ChunkedBatch { schema, chunks: vec![batch], rows, live }
+    }
+
+    /// Assemble from a chunk list; every chunk must match `schema`.
+    pub fn from_chunks(
+        schema: Arc<Schema>,
+        chunks: Vec<Arc<ColumnBatch>>,
+    ) -> Result<ChunkedBatch> {
+        let mut out = ChunkedBatch::new(schema);
+        for c in chunks {
+            out.push_arc(c)?;
+        }
+        Ok(out)
+    }
+
+    pub fn schema(&self) -> &Arc<Schema> {
+        &self.schema
+    }
+
+    pub fn chunks(&self) -> &[Arc<ColumnBatch>] {
+        &self.chunks
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Total rows (live + dead) — O(1), cached.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Live rows — O(1), cached.
+    pub fn live_rows(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Allocated view bytes across chunks (what kernels/PCIe move; the
+    /// cost model and admission charge this, as for [`ColumnBatch`]).
+    pub fn alloc_bytes(&self) -> usize {
+        self.chunks.iter().map(|c| c.alloc_bytes()).sum()
+    }
+
+    /// Live-row bytes across chunks (post-compaction footprint).
+    pub fn live_bytes(&self) -> usize {
+        self.chunks.iter().map(|c| c.live_bytes()).sum()
+    }
+
+    /// Append one chunk — O(1) beyond the schema check.
+    pub fn push(&mut self, chunk: ColumnBatch) -> Result<()> {
+        self.push_arc(Arc::new(chunk))
+    }
+
+    /// Append one shared chunk — O(1) beyond the schema check.
+    pub fn push_arc(&mut self, chunk: Arc<ColumnBatch>) -> Result<()> {
+        if *chunk.schema != *self.schema {
+            return Err(Error::Schema("concat over mixed schemas".into()));
+        }
+        self.rows += chunk.rows();
+        self.live += chunk.live_rows();
+        self.chunks.push(chunk);
+        Ok(())
+    }
+
+    /// Append every chunk of `other` — O(#chunks) Arc bumps, no copies.
+    pub fn extend(&mut self, other: &ChunkedBatch) -> Result<()> {
+        if *other.schema != *self.schema {
+            return Err(Error::Schema("concat over mixed schemas".into()));
+        }
+        self.rows += other.rows;
+        self.live += other.live;
+        self.chunks.extend(other.chunks.iter().cloned());
+        Ok(())
+    }
+
+    /// Concatenate chunked batches — O(total #chunks) Arc appends: this
+    /// is the `Union` / reassembly path that used to materialize.
+    pub fn concat(parts: &[&ChunkedBatch]) -> Result<ChunkedBatch> {
+        let first = parts.first().ok_or_else(|| Error::Schema("empty concat".into()))?;
+        let mut out = ChunkedBatch::new(Arc::clone(&first.schema));
+        for p in parts {
+            out.extend(p)?;
+        }
+        Ok(out)
+    }
+
+    /// Materialize the in-order concatenation as one contiguous batch —
+    /// the explicit coalesce point. A single chunk is an O(1) clone; an
+    /// empty chunk list yields an empty batch of the schema.
+    pub fn coalesce(&self) -> ColumnBatch {
+        match self.chunks.len() {
+            0 => ColumnBatch::empty(Arc::clone(&self.schema)),
+            1 => (*self.chunks[0]).clone(),
+            _ => {
+                let refs: Vec<&ColumnBatch> =
+                    self.chunks.iter().map(|c| c.as_ref()).collect();
+                ColumnBatch::concat(&refs).expect("chunks share one schema")
+            }
+        }
+    }
+
+    /// [`ChunkedBatch::coalesce`] behind an `Arc`; a single chunk is
+    /// shared, not cloned.
+    pub fn coalesce_arc(&self) -> Arc<ColumnBatch> {
+        if self.chunks.len() == 1 {
+            Arc::clone(&self.chunks[0])
+        } else {
+            Arc::new(self.coalesce())
+        }
+    }
+
+    /// Contiguous row range `[start, start+len)` as a chunk-list view:
+    /// fully covered chunks are shared (O(1) Arc bumps), at most the two
+    /// edge chunks are sliced (themselves O(#columns) buffer views).
+    pub fn slice(&self, start: usize, len: usize) -> ChunkedBatch {
+        assert!(
+            start + len <= self.rows,
+            "slice [{start}, {start}+{len}) of {}",
+            self.rows
+        );
+        let mut out = ChunkedBatch::new(Arc::clone(&self.schema));
+        let mut skip = start;
+        let mut need = len;
+        for c in &self.chunks {
+            if need == 0 {
+                break;
+            }
+            let r = c.rows();
+            if skip >= r {
+                skip -= r;
+                continue;
+            }
+            let take = (r - skip).min(need);
+            if skip == 0 && take == r {
+                out.push_arc(Arc::clone(c)).expect("chunk schemas are uniform");
+            } else {
+                out.push(c.slice(skip, take)).expect("chunk schemas are uniform");
+            }
+            skip = 0;
+            need -= take;
+        }
+        debug_assert_eq!(out.rows, len);
+        out
+    }
+}
+
+impl From<ColumnBatch> for ChunkedBatch {
+    fn from(b: ColumnBatch) -> ChunkedBatch {
+        ChunkedBatch::from_batch(b)
+    }
+}
+
+impl From<Arc<ColumnBatch>> for ChunkedBatch {
+    fn from(b: Arc<ColumnBatch>) -> ChunkedBatch {
+        ChunkedBatch::from_arc(b)
+    }
+}
+
+impl PartialEq for ChunkedBatch {
+    /// Layout-independent logical equality: same schema and the same
+    /// in-order rows (values + liveness), whatever the chunking.
+    fn eq(&self, other: &ChunkedBatch) -> bool {
+        *self.schema == *other.schema
+            && self.rows == other.rows
+            && self.live == other.live
+            && self.coalesce() == other.coalesce()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::column::{Column, Field};
+
+    fn batch(vals: &[f32]) -> ColumnBatch {
+        let schema = Schema::new(vec![Field::f32("x")]);
+        ColumnBatch::new(schema, vec![Column::F32(vals.to_vec().into())]).unwrap()
+    }
+
+    #[test]
+    fn caches_row_and_live_counts() {
+        let mut c = ChunkedBatch::from_batch(batch(&[1.0, 2.0]));
+        let mut dead = batch(&[3.0, 4.0, 5.0]);
+        dead.validity.set_live(0, false);
+        c.push(dead).unwrap();
+        assert_eq!(c.num_chunks(), 2);
+        assert_eq!(c.rows(), 5);
+        assert_eq!(c.live_rows(), 4);
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        let mut c = ChunkedBatch::from_batch(batch(&[1.0]));
+        let other = ColumnBatch::new(
+            Schema::new(vec![Field::f32("y")]),
+            vec![Column::F32(vec![1.0].into())],
+        )
+        .unwrap();
+        assert!(c.push(other).is_err());
+    }
+
+    #[test]
+    fn coalesce_is_in_order_concat() {
+        let mut c = ChunkedBatch::from_batch(batch(&[1.0, 2.0]));
+        c.push(batch(&[3.0])).unwrap();
+        let whole = c.coalesce();
+        assert_eq!(whole.column("x").unwrap().as_f32().unwrap(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn single_chunk_coalesce_shares_memory() {
+        let b = batch(&[1.0, 2.0]);
+        let c = ChunkedBatch::from_batch(b.clone());
+        let w = c.coalesce();
+        assert!(b.columns[0].shares_memory(&w.columns[0]));
+        let arc1 = c.coalesce_arc();
+        let arc2 = c.coalesce_arc();
+        assert!(Arc::ptr_eq(&arc1, &arc2));
+    }
+
+    #[test]
+    fn empty_chunk_list_coalesces_to_empty_batch() {
+        let c = ChunkedBatch::new(Schema::new(vec![Field::f32("x")]));
+        assert!(c.is_empty());
+        let w = c.coalesce();
+        assert_eq!(w.rows(), 0);
+        assert_eq!(w.schema.len(), 1);
+    }
+
+    #[test]
+    fn concat_is_chunk_appends_not_copies() {
+        let a = ChunkedBatch::from_batch(batch(&[1.0]));
+        let b = ChunkedBatch::from_batch(batch(&[2.0, 3.0]));
+        let u = ChunkedBatch::concat(&[&a, &b]).unwrap();
+        assert_eq!(u.num_chunks(), 2);
+        assert_eq!(u.rows(), 3);
+        // The union's chunks alias the inputs' chunk allocations.
+        assert!(u.chunks()[0].columns[0].shares_memory(&a.chunks()[0].columns[0]));
+        assert!(u.chunks()[1].columns[0].shares_memory(&b.chunks()[0].columns[0]));
+    }
+
+    #[test]
+    fn slice_crosses_chunk_boundaries() {
+        let mut c = ChunkedBatch::from_batch(batch(&[0.0, 1.0, 2.0]));
+        c.push(batch(&[3.0, 4.0])).unwrap();
+        c.push(batch(&[5.0, 6.0, 7.0])).unwrap();
+        let s = c.slice(2, 4);
+        assert_eq!(s.rows(), 4);
+        assert_eq!(
+            s.coalesce().column("x").unwrap().as_f32().unwrap(),
+            &[2.0, 3.0, 4.0, 5.0]
+        );
+        // The fully covered middle chunk is shared, not sliced.
+        assert!(s.chunks()[1].columns[0].shares_memory(&c.chunks()[1].columns[0]));
+        assert_eq!(s.chunks()[1].rows(), 2);
+    }
+
+    #[test]
+    fn slice_empty_range() {
+        let c = ChunkedBatch::from_batch(batch(&[1.0, 2.0]));
+        let s = c.slice(1, 0);
+        assert_eq!(s.rows(), 0);
+        assert_eq!(s.num_chunks(), 0);
+    }
+
+    #[test]
+    fn equality_is_layout_independent() {
+        let whole = ChunkedBatch::from_batch(batch(&[1.0, 2.0, 3.0]));
+        let mut split = ChunkedBatch::from_batch(batch(&[1.0]));
+        split.push(batch(&[2.0, 3.0])).unwrap();
+        assert_eq!(whole, split);
+        let different = ChunkedBatch::from_batch(batch(&[1.0, 2.0, 4.0]));
+        assert_ne!(whole, different);
+    }
+
+    #[test]
+    fn retained_clone_unaffected_by_later_pushes() {
+        let mut c = ChunkedBatch::from_batch(batch(&[1.0]));
+        let held = c.clone();
+        c.push(batch(&[2.0])).unwrap();
+        assert_eq!(held.rows(), 1);
+        assert_eq!(c.rows(), 2);
+        assert_eq!(held.coalesce().column("x").unwrap().as_f32().unwrap(), &[1.0]);
+    }
+}

@@ -1,9 +1,11 @@
 //! Datasets (the paper's arrival unit — one "file" / row-record group per
 //! ingest tick) and micro-batches (the execution unit, `NumDS_i` datasets).
 
+use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::ColumnBatch;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::sim::Time;
+use std::sync::Arc;
 
 /// One ingested dataset: rows that arrived together, stamped with their
 /// creation time (the paper's file creation time; latency is measured from
@@ -76,6 +78,21 @@ impl MicroBatch {
         ColumnBatch::concat(&parts)
     }
 
+    /// All rows as a chunk list — one shared chunk per dataset, zero row
+    /// copies (the execution-input form; [`MicroBatch::concat`] remains
+    /// as the materializing reference).
+    pub fn chunked(&self) -> Result<ChunkedBatch> {
+        let first = self
+            .datasets
+            .first()
+            .ok_or_else(|| Error::Schema("empty concat".into()))?;
+        let mut out = ChunkedBatch::new(Arc::clone(&first.batch.schema));
+        for d in &self.datasets {
+            out.push_arc(Arc::new(d.batch.clone()))?;
+        }
+        Ok(out)
+    }
+
     /// Append datasets from another micro-batch (re-buffered data joining
     /// newly polled data, Alg. 1 line 7).
     pub fn absorb(&mut self, other: MicroBatch) {
@@ -116,6 +133,17 @@ mod tests {
     fn concat_merges_rows() {
         let mb = MicroBatch::new(vec![ds(0, 1.0, 3), ds(1, 2.0, 4)]);
         assert_eq!(mb.concat().unwrap().rows(), 7);
+    }
+
+    #[test]
+    fn chunked_shares_dataset_rows() {
+        let mb = MicroBatch::new(vec![ds(0, 1.0, 3), ds(1, 2.0, 4)]);
+        let c = mb.chunked().unwrap();
+        assert_eq!(c.num_chunks(), 2);
+        assert_eq!(c.rows(), 7);
+        assert!(c.chunks()[0].columns[0].shares_memory(&mb.datasets[0].batch.columns[0]));
+        assert_eq!(c.coalesce(), mb.concat().unwrap());
+        assert!(MicroBatch::default().chunked().is_err(), "empty mirrors concat");
     }
 
     #[test]

@@ -2,12 +2,15 @@
 //! (the Spark analog the paper's mechanisms are implemented into).
 //!
 //! * [`column`] — typed columns, schemas, batches
+//! * [`chunked`] — the chunked execution representation every operator
+//!   consumes and produces (Arc'd chunk lists; explicit coalesce points)
 //! * [`dataset`] — arrival-stamped datasets and micro-batches
 //! * [`partition`] — splitting a micro-batch across `NumCores` partitions
 //! * [`window`] — sliding/tumbling window state management
 //! * [`ops`] — native CPU operators (scan, filter, project, aggregate,
 //!   join, sort, expand, shuffle)
 
+pub mod chunked;
 pub mod column;
 pub mod dataset;
 pub mod ops;
@@ -15,6 +18,7 @@ pub mod partition;
 pub mod sink;
 pub mod window;
 
+pub use chunked::ChunkedBatch;
 pub use column::{Buffer, Column, ColumnBatch, DType, Field, Schema, Validity};
 pub use dataset::{Dataset, MicroBatch};
 pub use window::{WindowKind, WindowSpec, WindowState};

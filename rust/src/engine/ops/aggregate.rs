@@ -1,10 +1,12 @@
 //! Hash aggregation: GROUP BY over key columns with SUM/COUNT/AVG, plus
 //! optional HAVING.
 
+use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::{Column, ColumnBatch, DType, Field, Schema, Validity};
 use crate::engine::ops::filter::Predicate;
 use crate::error::{Error, Result};
 use crate::util::hash::FxHashMap;
+use std::sync::Arc;
 
 /// Aggregate function.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,28 +48,57 @@ pub fn hash_aggregate(
     aggs: &[AggSpec],
     having: Option<(&str, Predicate)>,
 ) -> Result<ColumnBatch> {
+    hash_aggregate_parts(&batch.schema, &[batch], group_cols, aggs, having)
+}
+
+/// Chunked aggregation: one group table fed chunk by chunk in order, so
+/// first-appearance group order — and therefore the output — is
+/// identical to aggregating the coalesced batch. The result is a single
+/// fresh chunk (aggregation materializes by nature).
+pub fn hash_aggregate_chunks(
+    batch: &ChunkedBatch,
+    group_cols: &[&str],
+    aggs: &[AggSpec],
+    having: Option<(&str, Predicate)>,
+) -> Result<ChunkedBatch> {
+    let parts: Vec<&ColumnBatch> = batch.chunks().iter().map(|c| c.as_ref()).collect();
+    let out = hash_aggregate_parts(batch.schema(), &parts, group_cols, aggs, having)?;
+    Ok(ChunkedBatch::from_batch(out))
+}
+
+/// Shared core: aggregate over an ordered part list (a coalesced batch
+/// is the one-part case). `schema` is the parts' common schema — used to
+/// resolve columns so errors surface even for an empty part list.
+fn hash_aggregate_parts(
+    schema: &Arc<Schema>,
+    parts: &[&ColumnBatch],
+    group_cols: &[&str],
+    aggs: &[AggSpec],
+    having: Option<(&str, Predicate)>,
+) -> Result<ColumnBatch> {
     if group_cols.is_empty() {
         return Err(Error::Plan("aggregate needs at least one group column".into()));
     }
     let key_idx: Vec<usize> = group_cols
         .iter()
-        .map(|c| batch.schema.index_of(c))
+        .map(|c| schema.index_of(c))
         .collect::<Result<_>>()?;
-    // Pre-resolve value columns.
-    let value_cols: Vec<Option<&[f32]>> = aggs
+    // Pre-resolve value column indices (COUNT needs none), checking the
+    // dtype once against the schema.
+    let val_idx: Vec<Option<usize>> = aggs
         .iter()
         .map(|a| {
             if a.func == AggFunc::Count {
                 Ok(None)
             } else {
-                batch.column(&a.value_col)?.as_f32().map(Some)
+                let i = schema.index_of(&a.value_col)?;
+                if schema.fields[i].dtype != DType::F32 {
+                    return Err(Error::Schema("expected f32 column".into()));
+                }
+                Ok(Some(i))
             }
         })
         .collect::<Result<_>>()?;
-    // Pre-resolve key columns; the validity mask is hoisted out of the
-    // row loop (None = every row live).
-    let key_cols: Vec<&Column> = key_idx.iter().map(|&ci| &batch.columns[ci]).collect();
-    let mask = batch.validity.mask();
 
     // Group index: composite i64-encoded key -> dense group slot.
     let mut slots: FxHashMap<Vec<i64>, usize> = FxHashMap::default();
@@ -77,34 +108,44 @@ pub fn hash_aggregate(
 
     // Scratch key reused across rows; cloned only on first occurrence.
     let mut key: Vec<i64> = Vec::with_capacity(key_idx.len());
-    for row in 0..batch.rows() {
-        if let Some(m) = mask {
-            if m[row] == 0 {
-                continue;
+    for part in parts {
+        // Per-part hoists: key/value columns and the validity mask.
+        let key_cols: Vec<&Column> =
+            key_idx.iter().map(|&ci| &part.columns[ci]).collect();
+        let value_cols: Vec<Option<&[f32]>> = val_idx
+            .iter()
+            .map(|vi| vi.map(|i| part.columns[i].as_f32().expect("dtype checked")))
+            .collect();
+        let mask = part.validity.mask();
+        for row in 0..part.rows() {
+            if let Some(m) = mask {
+                if m[row] == 0 {
+                    continue;
+                }
             }
-        }
-        key.clear();
-        for kc in &key_cols {
-            key.push(match kc {
-                Column::I32(v) => v[row] as i64,
-                Column::F32(v) => v[row].to_bits() as i64,
-            });
-        }
-        let slot = match slots.get(&key) {
-            Some(&s) => s,
-            None => {
-                let s = order.len();
-                slots.insert(key.clone(), s);
-                order.push(key.clone());
-                sums.push(vec![0.0; aggs.len()]);
-                counts.push(0.0);
-                s
+            key.clear();
+            for kc in &key_cols {
+                key.push(match kc {
+                    Column::I32(v) => v[row] as i64,
+                    Column::F32(v) => v[row].to_bits() as i64,
+                });
             }
-        };
-        counts[slot] += 1.0;
-        for (ai, vc) in value_cols.iter().enumerate() {
-            if let Some(vals) = vc {
-                sums[slot][ai] += vals[row] as f64;
+            let slot = match slots.get(&key) {
+                Some(&s) => s,
+                None => {
+                    let s = order.len();
+                    slots.insert(key.clone(), s);
+                    order.push(key.clone());
+                    sums.push(vec![0.0; aggs.len()]);
+                    counts.push(0.0);
+                    s
+                }
+            };
+            counts[slot] += 1.0;
+            for (ai, vc) in value_cols.iter().enumerate() {
+                if let Some(vals) = vc {
+                    sums[slot][ai] += vals[row] as f64;
+                }
             }
         }
     }
@@ -112,7 +153,7 @@ pub fn hash_aggregate(
     // Assemble output schema: group keys + aggregate columns.
     let mut fields: Vec<Field> = key_idx
         .iter()
-        .map(|&ci| batch.schema.fields[ci].clone())
+        .map(|&ci| schema.fields[ci].clone())
         .collect();
     for a in aggs {
         fields.push(Field::f32(&a.out));
@@ -120,7 +161,7 @@ pub fn hash_aggregate(
     let n_groups = order.len();
     let mut columns: Vec<Column> = Vec::with_capacity(fields.len());
     for (k, &ci) in key_idx.iter().enumerate() {
-        match batch.schema.fields[ci].dtype {
+        match schema.fields[ci].dtype {
             DType::I32 => columns.push(Column::I32(
                 order.iter().map(|key| key[k] as i32).collect::<Vec<i32>>().into(),
             )),

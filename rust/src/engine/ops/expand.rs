@@ -2,8 +2,10 @@
 //! tag — Spark's rewrite assigning rows of a sliding window to their
 //! range/slide overlapping window instances.
 
+use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::{Column, ColumnBatch, Field, Schema, Validity};
 use crate::error::{Error, Result};
+use std::sync::Arc;
 
 /// Replicate rows `factor` times, appending an i32 `window_id` column
 /// (0..factor) per replica.
@@ -31,6 +33,33 @@ pub fn expand(batch: &ColumnBatch, factor: usize) -> Result<ColumnBatch> {
         Some(mask) => Validity::from_mask(idx.iter().map(|&i| mask[i]).collect()),
     };
     Ok(ColumnBatch { schema: Schema::new(fields), columns, validity })
+}
+
+/// Chunked expand: emits one chunk per (window instance, input chunk) in
+/// window-major order — the same global row order as the coalesced
+/// kernel (`w0` rows, then `w1` rows, …) — but each replica *shares* the
+/// input chunk's columns and only materializes the constant `window_id`
+/// column, so the O(rows × factor) gather disappears.
+pub fn expand_chunks(batch: &ChunkedBatch, factor: usize) -> Result<ChunkedBatch> {
+    if factor == 0 {
+        return Err(Error::Plan("expand factor must be >= 1".into()));
+    }
+    let mut fields = batch.schema().fields.clone();
+    fields.push(Field::i32("window_id"));
+    let schema = Schema::new(fields);
+    let mut out = ChunkedBatch::new(Arc::clone(&schema));
+    for w in 0..factor {
+        for chunk in batch.chunks() {
+            let mut columns = chunk.columns.clone();
+            columns.push(Column::I32(vec![w as i32; chunk.rows()].into()));
+            out.push(ColumnBatch {
+                schema: Arc::clone(&schema),
+                columns,
+                validity: chunk.validity.clone(),
+            })?;
+        }
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

@@ -5,6 +5,7 @@
 //! kernel matches the column dtype *once* and runs a typed inner loop —
 //! no per-row enum dispatch.
 
+use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::{Column, ColumnBatch, Validity};
 use crate::error::Result;
 use std::sync::Arc;
@@ -89,6 +90,24 @@ pub fn filter(batch: &ColumnBatch, col: &str, pred: Predicate) -> Result<ColumnB
         columns: batch.columns.clone(),
         validity: Validity::from_parts_counted(mask, live),
     })
+}
+
+/// Chunked filter: the per-chunk kernel runs over each chunk in place of
+/// the coalesced sweep — the chunk layout is preserved, columns stay
+/// shared, only fresh per-chunk masks are written.
+pub fn filter_chunks(
+    batch: &ChunkedBatch,
+    col: &str,
+    pred: Predicate,
+) -> Result<ChunkedBatch> {
+    // Resolve against the shared schema so an unknown column errors even
+    // for an empty chunk list, exactly like the coalesced path.
+    batch.schema().index_of(col)?;
+    let mut out = ChunkedBatch::new(Arc::clone(batch.schema()));
+    for chunk in batch.chunks() {
+        out.push(filter(chunk, col, pred)?)?;
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

@@ -4,10 +4,12 @@
 //! L WHERE A.vehicle == L.vehicle`) probes the current micro-batch against
 //! the window state snapshot.
 
+use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::{Column, ColumnBatch, Field, Schema, Validity};
 use crate::engine::ops::for_each_live_key;
 use crate::error::Result;
 use crate::util::hash::FxHashMap;
+use std::sync::Arc;
 
 /// Inner join: every (probe-row, matching build-row) pair, with build
 /// columns appended under a `r_` prefix (self-join disambiguation).
@@ -97,6 +99,131 @@ pub fn hash_join_pruned(
         columns,
         validity: Validity::all_live(probe_idx.len()),
     })
+}
+
+/// Chunked inner join: build the hash table across the build side's
+/// chunk list (no window-state coalesce) and probe chunk by chunk,
+/// emitting one output chunk per probe chunk. Build entries are inserted
+/// in global (chunk-major) row order and probe chunks are traversed in
+/// order, so the concatenated output is bit-identical to joining the
+/// coalesced sides.
+pub fn hash_join_chunks(
+    probe: &ChunkedBatch,
+    build: &ChunkedBatch,
+    probe_key: &str,
+    build_key: &str,
+) -> Result<ChunkedBatch> {
+    hash_join_chunks_pruned(probe, build, probe_key, build_key, None, None)
+}
+
+/// [`hash_join_chunks`] with projection pushdown (`None` = keep all).
+pub fn hash_join_chunks_pruned(
+    probe: &ChunkedBatch,
+    build: &ChunkedBatch,
+    probe_key: &str,
+    build_key: &str,
+    keep_probe: Option<&[String]>,
+    keep_build: Option<&[String]>,
+) -> Result<ChunkedBatch> {
+    let pk_idx = probe.schema().index_of(probe_key)?;
+    let bk_idx = build.schema().index_of(build_key)?;
+
+    // Build-side index over the chunk list: key -> (chunk, row) in
+    // global row order (chunk-major), matching the coalesced build scan.
+    let mut table: FxHashMap<i64, Vec<(u32, u32)>> = FxHashMap::default();
+    for (ci, chunk) in build.chunks().iter().enumerate() {
+        for_each_live_key(&chunk.columns[bk_idx], &chunk.validity, |row, key| {
+            table.entry(key).or_default().push((ci as u32, row as u32));
+        });
+    }
+
+    // Output schema: (kept) probe columns + prefixed (kept) build columns.
+    let probe_sel: Vec<usize> = match keep_probe {
+        None => (0..probe.schema().len()).collect(),
+        Some(names) => names
+            .iter()
+            .map(|n| probe.schema().index_of(n))
+            .collect::<Result<_>>()?,
+    };
+    let build_sel: Vec<usize> = match keep_build {
+        None => (0..build.schema().len()).collect(),
+        Some(names) => names
+            .iter()
+            .map(|n| build.schema().index_of(n))
+            .collect::<Result<_>>()?,
+    };
+    let mut fields: Vec<Field> =
+        probe_sel.iter().map(|&i| probe.schema().fields[i].clone()).collect();
+    for &i in &build_sel {
+        let f = &build.schema().fields[i];
+        fields.push(Field { name: format!("r_{}", f.name), dtype: f.dtype });
+    }
+    let out_schema = Schema::new(fields);
+
+    let mut out = ChunkedBatch::new(Arc::clone(&out_schema));
+    for pchunk in probe.chunks() {
+        let mut probe_idx: Vec<usize> = Vec::new();
+        let mut build_pairs: Vec<(u32, u32)> = Vec::new();
+        for_each_live_key(&pchunk.columns[pk_idx], &pchunk.validity, |row, key| {
+            if let Some(matches) = table.get(&key) {
+                for &pair in matches {
+                    probe_idx.push(row);
+                    build_pairs.push(pair);
+                }
+            }
+        });
+        if probe_idx.is_empty() {
+            continue;
+        }
+        let mut columns: Vec<Column> = probe_sel
+            .iter()
+            .map(|&i| pchunk.columns[i].take(&probe_idx))
+            .collect();
+        for &i in &build_sel {
+            columns.push(take_pairs(build.chunks(), i, &build_pairs));
+        }
+        out.push(ColumnBatch {
+            schema: Arc::clone(&out_schema),
+            columns,
+            validity: Validity::all_live(probe_idx.len()),
+        })?;
+    }
+    Ok(out)
+}
+
+/// Gather one column's values across a chunk list by (chunk, row) pairs
+/// — the cross-chunk analog of [`Column::take`]. Dtype is dispatched
+/// once (chunk schemas are uniform); only called with a non-empty pair
+/// list, which implies the chunk list is non-empty.
+fn take_pairs(chunks: &[Arc<ColumnBatch>], col: usize, pairs: &[(u32, u32)]) -> Column {
+    match &chunks[0].columns[col] {
+        Column::F32(_) => {
+            let slices: Vec<&[f32]> = chunks
+                .iter()
+                .map(|c| c.columns[col].as_f32().expect("uniform chunk schemas"))
+                .collect();
+            Column::F32(
+                pairs
+                    .iter()
+                    .map(|&(c, r)| slices[c as usize][r as usize])
+                    .collect::<Vec<f32>>()
+                    .into(),
+            )
+        }
+        Column::I32(_) => {
+            let slices: Vec<&[i32]> = chunks
+                .iter()
+                .map(|c| c.columns[col].as_i32().expect("uniform chunk schemas"))
+                .collect();
+            Column::I32(
+                pairs
+                    .iter()
+                    .map(|&(c, r)| slices[c as usize][r as usize])
+                    .collect::<Vec<i32>>()
+                    .into(),
+            )
+        }
+    }
 }
 
 #[cfg(test)]

@@ -12,14 +12,16 @@ pub mod scan;
 pub mod shuffle;
 pub mod sort;
 
-pub use aggregate::{AggFunc, AggSpec, hash_aggregate};
-pub use expand::expand;
-pub use filter::{Predicate, filter};
-pub use join::hash_join;
-pub use project::{project_affine, project_select};
-pub use scan::scan;
-pub use shuffle::shuffle;
-pub use sort::sort_by;
+pub use aggregate::{AggFunc, AggSpec, hash_aggregate, hash_aggregate_chunks};
+pub use expand::{expand, expand_chunks};
+pub use filter::{Predicate, filter, filter_chunks};
+pub use join::{hash_join, hash_join_chunks};
+pub use project::{
+    project_affine, project_affine_chunks, project_select, project_select_chunks,
+};
+pub use scan::{scan, scan_chunks};
+pub use shuffle::{shuffle, shuffle_chunks};
+pub use sort::{sort_by, sort_chunks};
 
 use crate::engine::column::{Column, Validity};
 

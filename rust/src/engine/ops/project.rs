@@ -3,8 +3,10 @@
 //! Selection is zero-copy: the kept columns are O(1) Arc clones of the
 //! input's buffers; only `project_affine` materializes (one new column).
 
-use crate::engine::column::{Column, ColumnBatch, Field, Schema};
-use crate::error::Result;
+use crate::engine::chunked::ChunkedBatch;
+use crate::engine::column::{Column, ColumnBatch, DType, Field, Schema};
+use crate::error::{Error, Result};
+use std::sync::Arc;
 
 /// SELECT a subset of columns (order follows `keep`). Shares the kept
 /// columns' buffers with the input.
@@ -49,6 +51,66 @@ pub fn project_affine(
         columns,
         validity: batch.validity.clone(),
     })
+}
+
+/// Chunked column selection: indices are resolved once against the
+/// shared schema, then every chunk re-shares its kept columns — O(#chunks
+/// × #kept) Arc bumps, no row copies.
+pub fn project_select_chunks(batch: &ChunkedBatch, keep: &[&str]) -> Result<ChunkedBatch> {
+    let mut idx = Vec::with_capacity(keep.len());
+    let mut fields = Vec::with_capacity(keep.len());
+    for name in keep {
+        let i = batch.schema().index_of(name)?;
+        idx.push(i);
+        fields.push(batch.schema().fields[i].clone());
+    }
+    let schema = Schema::new(fields);
+    let mut out = ChunkedBatch::new(Arc::clone(&schema));
+    for chunk in batch.chunks() {
+        out.push(ColumnBatch {
+            schema: Arc::clone(&schema),
+            columns: idx.iter().map(|&i| chunk.columns[i].clone()).collect(),
+            validity: chunk.validity.clone(),
+        })?;
+    }
+    Ok(out)
+}
+
+/// Chunked affine projection: per-chunk fresh output column, every
+/// existing column shared.
+pub fn project_affine_chunks(
+    batch: &ChunkedBatch,
+    a: &str,
+    b: &str,
+    alpha: f32,
+    beta: f32,
+    out_name: &str,
+) -> Result<ChunkedBatch> {
+    let ai = batch.schema().index_of(a)?;
+    let bi = batch.schema().index_of(b)?;
+    if batch.schema().fields[ai].dtype != DType::F32
+        || batch.schema().fields[bi].dtype != DType::F32
+    {
+        return Err(Error::Schema("expected f32 column".into()));
+    }
+    let mut fields = batch.schema().fields.clone();
+    fields.push(Field::f32(out_name));
+    let schema = Schema::new(fields);
+    let mut out = ChunkedBatch::new(Arc::clone(&schema));
+    for chunk in batch.chunks() {
+        let ca = chunk.columns[ai].as_f32()?;
+        let cb = chunk.columns[bi].as_f32()?;
+        let values: Vec<f32> =
+            ca.iter().zip(cb).map(|(x, y)| alpha * x + beta * y).collect();
+        let mut columns = chunk.columns.clone();
+        columns.push(Column::F32(values.into()));
+        out.push(ColumnBatch {
+            schema: Arc::clone(&schema),
+            columns,
+            validity: chunk.validity.clone(),
+        })?;
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

@@ -6,6 +6,7 @@
 //! compacts padding; the *cost* of parsing is charged by the device model
 //! (bytes-proportional, GPU-leaning base cost 0.8).
 
+use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::{ColumnBatch, Schema};
 use crate::error::{Error, Result};
 use std::sync::Arc;
@@ -14,6 +15,18 @@ use std::sync::Arc;
 /// returned batch shares every buffer with the input (O(1) Arc clones).
 pub fn scan(batch: &ColumnBatch, expected: &Arc<Schema>) -> Result<ColumnBatch> {
     if batch.schema.as_ref() != expected.as_ref() {
+        return Err(Error::Schema(format!(
+            "scan schema mismatch: expected {:?}",
+            expected.fields.iter().map(|f| &f.name).collect::<Vec<_>>()
+        )));
+    }
+    Ok(batch.clone())
+}
+
+/// Chunked scan: one schema check, then an O(#chunks) Arc-clone of the
+/// chunk list — no per-chunk work, no row copies.
+pub fn scan_chunks(batch: &ChunkedBatch, expected: &Arc<Schema>) -> Result<ChunkedBatch> {
+    if batch.schema().as_ref() != expected.as_ref() {
         return Err(Error::Schema(format!(
             "scan schema mismatch: expected {:?}",
             expected.fields.iter().map(|f| &f.name).collect::<Vec<_>>()

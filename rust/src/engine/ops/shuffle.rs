@@ -2,6 +2,7 @@
 //! partition-crossing aggregation/join). Compacts dead rows — the shuffle
 //! boundary is where columnar engines drop filtered data.
 
+use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::{ColumnBatch, Validity};
 use crate::engine::ops::for_each_live_key;
 use crate::error::Result;
@@ -31,6 +32,38 @@ pub fn shuffle(batch: &ColumnBatch, key: &str, n: usize) -> Result<Vec<ColumnBat
             validity: Validity::all_live(idx.len()),
         })
         .collect())
+}
+
+/// Chunked shuffle: each chunk is bucketed independently and every
+/// partition accumulates its per-chunk gathers as chunks. Chunk-major
+/// traversal preserves global row order per partition, so each
+/// partition's coalesced content equals the coalesced-input shuffle.
+pub fn shuffle_chunks(
+    batch: &ChunkedBatch,
+    key: &str,
+    n: usize,
+) -> Result<Vec<ChunkedBatch>> {
+    assert!(n > 0);
+    let ki = batch.schema().index_of(key)?;
+    let mut parts: Vec<ChunkedBatch> =
+        (0..n).map(|_| ChunkedBatch::new(Arc::clone(batch.schema()))).collect();
+    for chunk in batch.chunks() {
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for_each_live_key(&chunk.columns[ki], &chunk.validity, |row, bits| {
+            buckets[(hash64(bits) % n as u64) as usize].push(row);
+        });
+        for (p, idx) in buckets.into_iter().enumerate() {
+            if idx.is_empty() {
+                continue;
+            }
+            parts[p].push(ColumnBatch {
+                schema: Arc::clone(&chunk.schema),
+                columns: chunk.columns.iter().map(|c| c.take(&idx)).collect(),
+                validity: Validity::all_live(idx.len()),
+            })?;
+        }
+    }
+    Ok(parts)
 }
 
 #[cfg(test)]

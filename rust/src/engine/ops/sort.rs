@@ -4,6 +4,7 @@
 //! per kernel), so comparisons are plain f64 compares — no per-comparison
 //! enum dispatch.
 
+use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::{Column, ColumnBatch, Validity};
 use crate::error::Result;
 use std::cmp::Ordering;
@@ -48,6 +49,16 @@ pub fn sort_by(batch: &ColumnBatch, col: &str, desc: bool) -> Result<ColumnBatch
         columns: batch.columns.iter().map(|cc| cc.take(&idx)).collect(),
         validity,
     })
+}
+
+/// Chunked sort. Sorting is the one CPU op whose output genuinely needs
+/// a global contiguous view, so it is an **explicit coalesce point**:
+/// the chunk list is materialized once, sorted, and returned as a single
+/// chunk. The planner/cost model charge this materialization through the
+/// op's byte volume.
+pub fn sort_chunks(batch: &ChunkedBatch, col: &str, desc: bool) -> Result<ChunkedBatch> {
+    batch.schema().index_of(col)?;
+    Ok(ChunkedBatch::from_batch(sort_by(&batch.coalesce(), col, desc)?))
 }
 
 #[cfg(test)]

@@ -4,6 +4,7 @@
 //! CPU cores used per application" (§II-A); MapDevice's cost models run on
 //! the *partition* size, not the micro-batch size (§III-D).
 
+use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::ColumnBatch;
 
 /// One data partition with its wire-size share (`Part_(i,j)` in Table I).
@@ -11,6 +12,14 @@ use crate::engine::column::ColumnBatch;
 pub struct Partition {
     pub index: usize,
     pub batch: ColumnBatch,
+    pub wire_bytes: usize,
+}
+
+/// [`Partition`] over the chunked execution representation.
+#[derive(Clone, Debug)]
+pub struct ChunkedPartition {
+    pub index: usize,
+    pub batch: ChunkedBatch,
     pub wire_bytes: usize,
 }
 
@@ -30,6 +39,32 @@ pub fn split(batch: &ColumnBatch, wire_bytes: usize, n: usize) -> Vec<Partition>
         let part = batch.slice(start, len);
         let wb = if rows == 0 { 0 } else { wire_bytes * len / rows };
         out.push(Partition { index: j, batch: part, wire_bytes: wb });
+        start += len;
+    }
+    debug_assert_eq!(start, rows);
+    out
+}
+
+/// Chunk-aware split: contiguous row ranges as chunk-list views. Fully
+/// covered chunks are shared (O(1) Arc bumps); at most one chunk is
+/// sliced at each partition edge. Reassembling the partitions is an
+/// O(#chunks) [`ChunkedBatch::concat`] — the round trip copies no rows.
+pub fn split_chunked(
+    batch: &ChunkedBatch,
+    wire_bytes: usize,
+    n: usize,
+) -> Vec<ChunkedPartition> {
+    assert!(n > 0, "partition count must be positive");
+    let rows = batch.rows();
+    let base = rows / n;
+    let extra = rows % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0usize;
+    for j in 0..n {
+        let len = base + usize::from(j < extra);
+        let part = batch.slice(start, len);
+        let wb = if rows == 0 { 0 } else { wire_bytes * len / rows };
+        out.push(ChunkedPartition { index: j, batch: part, wire_bytes: wb });
         start += len;
     }
     debug_assert_eq!(start, rows);
@@ -100,5 +135,27 @@ mod tests {
     fn mean_partition_size() {
         assert_eq!(mean_partition_bytes(1200, 12), 100.0);
         assert_eq!(mean_partition_bytes(0, 12), 0.0);
+    }
+
+    #[test]
+    fn chunked_split_matches_contiguous_split() {
+        let b = batch(103);
+        // Lay the same rows out as three chunks.
+        let mut chunked = ChunkedBatch::from_batch(b.slice(0, 40));
+        chunked.push(b.slice(40, 30)).unwrap();
+        chunked.push(b.slice(70, 33)).unwrap();
+        let flat = split(&b, 103 * 65, 12);
+        let parts = split_chunked(&chunked, 103 * 65, 12);
+        assert_eq!(parts.len(), 12);
+        let total: usize = parts.iter().map(|p| p.batch.rows()).sum();
+        assert_eq!(total, 103);
+        for (cp, fp) in parts.iter().zip(&flat) {
+            assert_eq!(cp.wire_bytes, fp.wire_bytes);
+            assert_eq!(cp.batch.coalesce().columns, fp.batch.columns);
+        }
+        // Reassembly is chunk appends and reproduces the input.
+        let refs: Vec<&ChunkedBatch> = parts.iter().map(|p| &p.batch).collect();
+        let back = ChunkedBatch::concat(&refs).unwrap();
+        assert_eq!(back.coalesce().columns, b.columns);
     }
 }

@@ -1,10 +1,15 @@
 //! Output sinks: where micro-batch results leave the system ("goes out
 //! to the output stream", §V-B).
 //!
-//! The [`Sink`] trait receives each batch's result rows with completion
-//! time; implementations collect rows for validation ([`CollectSink`]),
-//! count/summarize ([`CountingSink`]), or drop ([`NullSink`]).
+//! The [`Sink`] trait receives each batch's result rows — in the
+//! engine's chunked representation, so pass-through results reach the
+//! sink without a materializing concat — with completion time;
+//! implementations collect rows for validation ([`CollectSink`], which
+//! coalesces: validation wants one contiguous batch and is an explicit
+//! coalesce point), count/summarize ([`CountingSink`]), or drop
+//! ([`NullSink`]).
 
+use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::ColumnBatch;
 use crate::error::Result;
 use crate::sim::Time;
@@ -13,7 +18,7 @@ use crate::sim::Time;
 pub trait Sink: Send {
     /// Deliver one micro-batch result. `completed_at` is the processing
     /// completion time (output-stream timestamp).
-    fn deliver(&mut self, batch_index: usize, result: &ColumnBatch, completed_at: Time)
+    fn deliver(&mut self, batch_index: usize, result: &ChunkedBatch, completed_at: Time)
         -> Result<()>;
 }
 
@@ -22,12 +27,12 @@ pub trait Sink: Send {
 pub struct NullSink;
 
 impl Sink for NullSink {
-    fn deliver(&mut self, _i: usize, _r: &ColumnBatch, _t: Time) -> Result<()> {
+    fn deliver(&mut self, _i: usize, _r: &ChunkedBatch, _t: Time) -> Result<()> {
         Ok(())
     }
 }
 
-/// Counts delivered rows/batches.
+/// Counts delivered rows/batches (O(#chunks) per delivery — no coalesce).
 #[derive(Default, Debug)]
 pub struct CountingSink {
     pub batches: usize,
@@ -38,7 +43,7 @@ pub struct CountingSink {
 }
 
 impl Sink for CountingSink {
-    fn deliver(&mut self, _i: usize, result: &ColumnBatch, t: Time) -> Result<()> {
+    fn deliver(&mut self, _i: usize, result: &ChunkedBatch, t: Time) -> Result<()> {
         self.batches += 1;
         self.rows += result.rows();
         self.live_rows += result.live_rows();
@@ -49,7 +54,8 @@ impl Sink for CountingSink {
 }
 
 /// Retains full results for validation (bounded by `max_batches` to keep
-/// long runs from hoarding memory).
+/// long runs from hoarding memory). Coalesces on delivery — an explicit
+/// coalesce point (O(1) for the common single-chunk aggregate results).
 pub struct CollectSink {
     pub results: Vec<(usize, Time, ColumnBatch)>,
     max_batches: usize,
@@ -62,9 +68,9 @@ impl CollectSink {
 }
 
 impl Sink for CollectSink {
-    fn deliver(&mut self, i: usize, result: &ColumnBatch, t: Time) -> Result<()> {
+    fn deliver(&mut self, i: usize, result: &ChunkedBatch, t: Time) -> Result<()> {
         if self.results.len() < self.max_batches {
-            self.results.push((i, t, result.clone()));
+            self.results.push((i, t, result.coalesce()));
         }
         Ok(())
     }
@@ -75,9 +81,11 @@ mod tests {
     use super::*;
     use crate::engine::column::{Column, Field, Schema};
 
-    fn batch(rows: usize) -> ColumnBatch {
+    fn batch(rows: usize) -> ChunkedBatch {
         let schema = Schema::new(vec![Field::f32("x")]);
-        ColumnBatch::new(schema, vec![Column::F32(vec![1.0; rows].into())]).unwrap()
+        ChunkedBatch::from_batch(
+            ColumnBatch::new(schema, vec![Column::F32(vec![1.0; rows].into())]).unwrap(),
+        )
     }
 
     #[test]
@@ -91,12 +99,31 @@ mod tests {
     }
 
     #[test]
+    fn counting_sink_sums_across_chunks() {
+        let mut multi = batch(3);
+        multi.push(batch(4).coalesce()).unwrap();
+        let mut s = CountingSink::default();
+        s.deliver(0, &multi, Time::ZERO).unwrap();
+        assert_eq!(s.rows, 7);
+        assert_eq!(s.live_rows, 7);
+    }
+
+    #[test]
     fn collect_sink_bounded() {
         let mut s = CollectSink::new(2);
         for i in 0..5 {
             s.deliver(i, &batch(1), Time::ZERO).unwrap();
         }
         assert_eq!(s.results.len(), 2);
+    }
+
+    #[test]
+    fn collect_sink_coalesces_chunked_results() {
+        let mut multi = batch(2);
+        multi.push(batch(3).coalesce()).unwrap();
+        let mut s = CollectSink::new(4);
+        s.deliver(0, &multi, Time::ZERO).unwrap();
+        assert_eq!(s.results[0].2.rows(), 5);
     }
 
     #[test]

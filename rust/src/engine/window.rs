@@ -6,21 +6,27 @@
 //! max-latencies, Eq. 3). Window *state* holds the recent datasets a
 //! windowed operator (self-join / windowed aggregate) computes over.
 //!
-//! # Incremental snapshot
+//! # Chunked snapshot
 //!
 //! The build side a windowed operator reads every micro-batch used to be
-//! re-concatenated from scratch — O(window rows) of copying per batch.
-//! [`WindowState`] now maintains a [`SnapshotCache`]: per-column append
-//! buffers that grow by O(delta) on [`WindowState::push`] (via
-//! `Arc::make_mut`, copy-on-write only if a previous snapshot is still
-//! alive) and shrink by an O(1) offset bump on [`WindowState::evict`]
-//! (the dead prefix is compacted away only once it exceeds the live
-//! region, keeping memory bounded at 2x and amortized cost O(1)/row).
-//! [`WindowState::snapshot`] then hands out an `Arc<ColumnBatch>` whose
-//! columns are O(1) views into the cache — per-batch snapshot cost is
-//! O(#columns + delta), not O(window).
+//! re-concatenated from scratch — O(window rows) of copying per batch —
+//! and, after PR 2, maintained in per-column append buffers whose
+//! copy-on-write still cost one O(window) copy whenever a sink retained
+//! an old snapshot. The state ∪ new-input union is now a
+//! [`ChunkedBatch`]: one shared `Arc<ColumnBatch>` chunk per in-window
+//! dataset. [`WindowState::push`] appends chunks (O(#columns) Arc wraps
+//! per dataset), [`WindowState::evict`] pops them (O(1) per dataset),
+//! and [`WindowState::snapshot_chunks`] assembles the chunk-list view in
+//! O(#datasets) Arc bumps — zero row copies, and **no copy-on-write at
+//! all**: chunks are immutable, so a snapshot held across pushes/evicts
+//! keeps exactly what it captured for free.
+//!
+//! [`WindowState::snapshot`] (the memoized *contiguous* snapshot) and
+//! [`WindowState::snapshot_fresh`] remain as the coalesced reference
+//! implementations the equivalence tests and benches compare against.
 
-use crate::engine::column::{Buffer, Column, ColumnBatch, Schema, Validity};
+use crate::engine::chunked::ChunkedBatch;
+use crate::engine::column::ColumnBatch;
 use crate::engine::dataset::Dataset;
 use crate::error::{Error, Result};
 use crate::sim::Time;
@@ -78,150 +84,16 @@ impl WindowSpec {
     }
 }
 
-/// One append buffer of the snapshot cache (parallel to the schema).
-#[derive(Debug)]
-enum AccumCol {
-    F32(Arc<Vec<f32>>),
-    I32(Arc<Vec<i32>>),
-}
-
-/// Incrementally maintained concatenation of the in-window datasets.
-/// `[start, start+len)` of every buffer is the current window; rows in
-/// front of `start` were evicted and await compaction.
-#[derive(Debug)]
-struct SnapshotCache {
-    schema: Arc<Schema>,
-    cols: Vec<AccumCol>,
-    /// Row mask aligned with `cols`; `None` while every appended dataset
-    /// was fully live (the common case — nothing allocated).
-    mask: Option<Arc<Vec<u8>>>,
-    /// Dead (evicted) prefix rows.
-    start: usize,
-    /// Rows currently in the window.
-    len: usize,
-    /// Live rows within `[start, start+len)` (kept incrementally so the
-    /// snapshot's validity needs no recount).
-    live: usize,
-    /// Total buffer rows (= start + len; tracked explicitly so an empty
-    /// schema cannot desync it).
-    buf_rows: usize,
-}
-
-impl SnapshotCache {
-    fn new(schema: Arc<Schema>) -> SnapshotCache {
-        let cols = schema
-            .fields
-            .iter()
-            .map(|f| match f.dtype {
-                crate::engine::column::DType::F32 => AccumCol::F32(Arc::new(Vec::new())),
-                crate::engine::column::DType::I32 => AccumCol::I32(Arc::new(Vec::new())),
-            })
-            .collect();
-        SnapshotCache { schema, cols, mask: None, start: 0, len: 0, live: 0, buf_rows: 0 }
-    }
-
-    /// Append one dataset's rows; O(rows appended), copy-on-write only if
-    /// an old snapshot still aliases the buffers. Returns `false` on a
-    /// schema mismatch (caller drops the cache and falls back to a full
-    /// rebuild, which surfaces the error).
-    fn append(&mut self, batch: &ColumnBatch) -> bool {
-        if *batch.schema != *self.schema {
-            return false;
-        }
-        let rows = batch.rows();
-        // Mask maintenance: materialize lazily on the first dataset that
-        // carries dead rows.
-        if let Some(inc) = batch.validity.mask() {
-            if self.mask.is_none() {
-                self.mask = Some(Arc::new(vec![1u8; self.buf_rows]));
-            }
-            Arc::make_mut(self.mask.as_mut().expect("just ensured"))
-                .extend_from_slice(inc);
-        } else if let Some(m) = &mut self.mask {
-            let v = Arc::make_mut(m);
-            v.resize(v.len() + rows, 1);
-        }
-        for (acc, col) in self.cols.iter_mut().zip(&batch.columns) {
-            match (acc, col) {
-                (AccumCol::F32(b), Column::F32(v)) => {
-                    Arc::make_mut(b).extend_from_slice(v.as_slice())
-                }
-                (AccumCol::I32(b), Column::I32(v)) => {
-                    Arc::make_mut(b).extend_from_slice(v.as_slice())
-                }
-                // Unreachable after the schema check; bail so the caller
-                // rebuilds rather than serving a corrupt cache.
-                _ => return false,
-            }
-        }
-        self.buf_rows += rows;
-        self.len += rows;
-        self.live += batch.live_rows();
-        true
-    }
-
-    /// Drop `rows` evicted rows (with `live` of them live) off the front —
-    /// an O(1) offset bump, compacting only when the dead prefix exceeds
-    /// the live region.
-    fn trim_front(&mut self, rows: usize, live: usize) {
-        debug_assert!(rows <= self.len && live <= self.live);
-        self.start += rows;
-        self.len -= rows;
-        self.live -= live;
-    }
-
-    fn maybe_compact(&mut self) {
-        if self.start == 0 || self.start < self.len {
-            return;
-        }
-        let (s, l) = (self.start, self.len);
-        for acc in &mut self.cols {
-            match acc {
-                AccumCol::F32(b) => *b = Arc::new(b[s..s + l].to_vec()),
-                AccumCol::I32(b) => *b = Arc::new(b[s..s + l].to_vec()),
-            }
-        }
-        if let Some(m) = &mut self.mask {
-            *m = Arc::new(m[s..s + l].to_vec());
-        }
-        self.start = 0;
-        self.buf_rows = l;
-    }
-
-    /// Assemble the snapshot batch: O(#columns) Arc clones, zero row
-    /// copies.
-    fn assemble(&self) -> ColumnBatch {
-        let columns = self
-            .cols
-            .iter()
-            .map(|acc| match acc {
-                AccumCol::F32(b) => {
-                    Column::F32(Buffer::view(Arc::clone(b), self.start, self.len))
-                }
-                AccumCol::I32(b) => {
-                    Column::I32(Buffer::view(Arc::clone(b), self.start, self.len))
-                }
-            })
-            .collect();
-        let validity = match &self.mask {
-            None => Validity::all_live(self.len),
-            Some(m) => Validity::from_parts(
-                Buffer::view(Arc::clone(m), self.start, self.len),
-                self.live,
-            ),
-        };
-        ColumnBatch { schema: Arc::clone(&self.schema), columns, validity }
-    }
-}
-
 /// Retained stream history for windowed operators (the `SegSpeedStr as A`
 /// side of LR1's self-join; the aggregation scope of LR2S/CM*).
 #[derive(Debug, Default)]
 pub struct WindowState {
     entries: VecDeque<Dataset>,
-    /// Incremental build-side concatenation (rebuilt lazily when absent).
-    cache: Option<SnapshotCache>,
-    /// Memoized assembled snapshot; invalidated by push/evict.
+    /// One shared chunk per entry (same order): the building blocks of
+    /// [`WindowState::snapshot_chunks`]. Chunks are immutable, so held
+    /// snapshots never see later mutations — no copy-on-write exists.
+    chunks: VecDeque<Arc<ColumnBatch>>,
+    /// Memoized *contiguous* snapshot; invalidated by push/evict.
     snap: Option<Arc<ColumnBatch>>,
 }
 
@@ -249,35 +121,28 @@ impl WindowState {
         self.entries.iter().map(|d| d.wire_bytes).sum()
     }
 
-    /// Insert processed datasets into state: O(delta) appends into the
-    /// snapshot cache (dataset clones are O(#columns) Arc bumps).
+    /// Insert processed datasets into state: one O(#columns) Arc-wrapped
+    /// chunk append per dataset — no row copies.
     pub fn push(&mut self, datasets: &[Dataset]) {
         if datasets.is_empty() {
             return;
         }
         self.snap = None;
         for d in datasets {
-            if let Some(c) = &mut self.cache {
-                if !c.append(&d.batch) {
-                    // Schema drift: drop the cache; snapshot() rebuilds
-                    // (and reports mixed schemas, as concat used to).
-                    self.cache = None;
-                }
-            }
+            self.chunks.push_back(Arc::new(d.batch.clone()));
             self.entries.push_back(d.clone());
         }
     }
 
-    /// Evict datasets whose event time has fallen out of `[now - range, now]`.
+    /// Evict datasets whose event time has fallen out of `[now - range, now]`
+    /// — an O(1) chunk pop per evicted dataset.
     pub fn evict(&mut self, now: Time, spec: &WindowSpec) {
         let horizon = Time(now.0.saturating_sub(spec.range.as_nanos() as u64));
         let mut evicted = false;
         while let Some(front) = self.entries.front() {
             if front.event_time < horizon {
-                let d = self.entries.pop_front().expect("front exists");
-                if let Some(c) = &mut self.cache {
-                    c.trim_front(d.rows(), d.batch.live_rows());
-                }
+                self.entries.pop_front();
+                self.chunks.pop_front();
                 evicted = true;
             } else {
                 break;
@@ -285,19 +150,32 @@ impl WindowState {
         }
         if evicted {
             self.snap = None;
-            if self.entries.is_empty() {
-                self.cache = None;
-            } else if let Some(c) = &mut self.cache {
-                c.maybe_compact();
-            }
         }
     }
 
-    /// Snapshot of all in-window rows as one shared batch (build side of
-    /// joins / aggregation scope). `None` when state is empty. Amortized
-    /// O(#columns) per call: rows were already appended into the cache by
-    /// `push`; only the first call after a cold start (or schema drift)
-    /// pays a full O(window) rebuild.
+    /// The state ∪ window view as a chunk list — the execution input /
+    /// join build side [`crate::session::Session`] consumes. `None` when
+    /// state is empty. O(#datasets) Arc bumps, zero row copies, and a
+    /// held snapshot is never perturbed by later push/evict (chunks are
+    /// immutable). Errors if the state holds mixed schemas.
+    pub fn snapshot_chunks(&self) -> Result<Option<ChunkedBatch>> {
+        let first = match self.chunks.front() {
+            None => return Ok(None),
+            Some(c) => c,
+        };
+        let mut out = ChunkedBatch::new(Arc::clone(&first.schema));
+        for c in &self.chunks {
+            out.push_arc(Arc::clone(c)).map_err(|_| {
+                Error::Schema("window state holds datasets with mixed schemas".into())
+            })?;
+        }
+        Ok(Some(out))
+    }
+
+    /// Memoized *contiguous* snapshot (coalesced chunk list): the
+    /// reference/compat form for callers that need one `ColumnBatch`.
+    /// A single-dataset window shares the chunk (O(1)); otherwise the
+    /// first call after a state change pays the one O(window) coalesce.
     pub fn snapshot(&mut self) -> Result<Option<Arc<ColumnBatch>>> {
         if self.entries.is_empty() {
             return Ok(None);
@@ -305,17 +183,15 @@ impl WindowState {
         if let Some(s) = &self.snap {
             return Ok(Some(Arc::clone(s)));
         }
-        if self.cache.is_none() {
-            self.rebuild_cache()?;
-        }
-        let snap = Arc::new(self.cache.as_ref().expect("just built").assemble());
+        let chunked = self.snapshot_chunks()?.expect("non-empty state");
+        let snap = chunked.coalesce_arc();
         self.snap = Some(Arc::clone(&snap));
         Ok(Some(snap))
     }
 
     /// Reference implementation: concatenate every in-window dataset from
     /// scratch — O(window rows). Kept for equivalence tests and as the
-    /// baseline the `perf_hotpath` bench compares the incremental path
+    /// baseline the `perf_hotpath` bench compares the chunked path
     /// against.
     pub fn snapshot_fresh(&self) -> Result<Option<ColumnBatch>> {
         if self.entries.is_empty() {
@@ -323,28 +199,6 @@ impl WindowState {
         }
         let parts: Vec<&ColumnBatch> = self.entries.iter().map(|d| &d.batch).collect();
         Ok(Some(ColumnBatch::concat(&parts)?))
-    }
-
-    /// Test hook: `(dead-prefix rows, total buffer rows)` of the
-    /// snapshot cache, `None` while no cache is built. Pins the
-    /// compaction memory bound (`buf_rows <= 2 * live region`).
-    #[cfg(test)]
-    fn cache_geometry(&self) -> Option<(usize, usize)> {
-        self.cache.as_ref().map(|c| (c.start, c.buf_rows))
-    }
-
-    fn rebuild_cache(&mut self) -> Result<()> {
-        let first = self.entries.front().expect("rebuild over non-empty state");
-        let mut cache = SnapshotCache::new(Arc::clone(&first.batch.schema));
-        for d in &self.entries {
-            if !cache.append(&d.batch) {
-                return Err(Error::Schema(
-                    "window state holds datasets with mixed schemas".into(),
-                ));
-            }
-        }
-        self.cache = Some(cache);
-        Ok(())
     }
 }
 
@@ -464,7 +318,7 @@ mod tests {
     }
 
     #[test]
-    fn eviction_compacts_dead_prefix_eventually() {
+    fn long_runs_keep_memory_bounded_to_the_window() {
         let spec = WindowSpec::sliding(Duration::from_secs(3), Duration::from_secs(1));
         let mut w = WindowState::new();
         let mut t = 0.0;
@@ -475,18 +329,49 @@ mod tests {
             let snap = w.snapshot().unwrap().unwrap();
             let fresh = w.snapshot_fresh().unwrap().unwrap();
             assert_eq!(*snap, fresh, "step {step}");
-            // Window is 3-4 datasets; the cache must not grow unboundedly.
+            // Window is 3-4 datasets; chunk count tracks it exactly —
+            // evicted chunks are dropped immediately, so state memory is
+            // bounded by the in-window rows (no dead prefix exists).
             assert!(w.len() <= 4, "window kept {} datasets", w.len());
-            // Compaction bound: the accumulation buffers never exceed 2x
-            // the live region (dead prefix is trimmed once it outgrows it).
-            let (start, buf_rows) =
-                w.cache_geometry().expect("cache built by snapshot");
-            let live_region = w.rows();
-            assert!(
-                start <= live_region && buf_rows <= 2 * live_region.max(1),
-                "step {step}: cache grew unboundedly \
-                 (start {start}, buf {buf_rows}, live region {live_region})"
-            );
+            let chunked = w.snapshot_chunks().unwrap().unwrap();
+            assert_eq!(chunked.num_chunks(), w.len(), "step {step}");
+            assert_eq!(chunked.rows(), w.rows(), "step {step}");
         }
+    }
+
+    #[test]
+    fn chunked_snapshot_shares_dataset_buffers() {
+        let mut w = WindowState::new();
+        let d = ds(0, 1.0);
+        w.push(&[d.clone(), ds(1, 2.0)]);
+        let chunked = w.snapshot_chunks().unwrap().unwrap();
+        assert_eq!(chunked.num_chunks(), 2);
+        assert_eq!(chunked.rows(), 10);
+        // Chunk 0 aliases the pushed dataset's buffers: zero row copies.
+        assert!(chunked.chunks()[0].columns[0].shares_memory(&d.batch.columns[0]));
+    }
+
+    #[test]
+    fn held_chunked_snapshot_unaffected_by_push_and_evict() {
+        // The CoW caveat is gone: chunks are immutable, so a held
+        // snapshot needs no copy-on-write to stay stable.
+        let spec = WindowSpec::sliding(Duration::from_secs(5), Duration::from_secs(1));
+        let mut w = WindowState::new();
+        w.push(&[ds(0, 0.0), ds(1, 1.0)]);
+        let held = w.snapshot_chunks().unwrap().unwrap();
+        let before = held.coalesce();
+        w.push(&[ds(2, 2.0)]);
+        w.evict(Time::from_secs_f64(7.0), &spec);
+        assert_eq!(held.rows(), 10);
+        assert_eq!(held.coalesce(), before);
+    }
+
+    #[test]
+    fn chunked_and_contiguous_snapshots_agree() {
+        let mut w = WindowState::new();
+        w.push(&[ds(0, 1.0), ds(1, 2.0), ds(2, 3.0)]);
+        let chunked = w.snapshot_chunks().unwrap().unwrap();
+        let contiguous = w.snapshot().unwrap().unwrap();
+        assert_eq!(chunked.coalesce(), *contiguous);
     }
 }

@@ -10,9 +10,17 @@
 //!   coalesced volume divided across `NumGpus`, plus host↔device transfer
 //!   on every device boundary (Alg. 2's `Trans` placement, shared with
 //!   the planner via [`transfer_boundaries`]) — including boundaries
-//!   where a branch fans out to consumers on the other device.
+//!   where a branch fans out to consumers on the other device. A
+//!   GPU-mapped op additionally pays `DeviceModel::coalesce_time` on its
+//!   **entering** boundary: the explicit contiguous staging of its
+//!   chunked input (the real backend performs exactly that coalesce in
+//!   [`gpu::run_op_chunked`]).
 //! * **Real backend** — CPU ops run native, GPU ops run through the PJRT
 //!   artifacts; wall-clock timing.
+//!
+//! Data flows as [`ChunkedBatch`]es end to end: a `Union` node's input
+//! assembly and branch fan-out are O(#chunks) appends/Arc bumps, never a
+//! materializing concat.
 //!
 //! A branching DAG can end in several sinks; [`ExecOutcome::result`] is
 //! the primary (highest-id) sink's output and
@@ -21,7 +29,7 @@
 use crate::config::ExecBackend;
 use crate::devices::model::{DeviceModel, OpVolume};
 use crate::devices::{cpu, gpu, Device};
-use crate::engine::column::ColumnBatch;
+use crate::engine::chunked::ChunkedBatch;
 use crate::error::{Error, Result};
 use crate::query::dag::{OpKind, Query};
 use crate::query::physical::{transfer_boundaries, PhysicalPlan};
@@ -55,13 +63,13 @@ pub struct OpTrace {
 #[derive(Debug)]
 pub struct ExecOutcome {
     /// Primary sink output (for a linear chain: the last op's output).
-    pub result: ColumnBatch,
+    pub result: ChunkedBatch,
     /// Outputs of the query's other sinks (empty for linear chains),
     /// as `(op_id, batch)` in ascending op id.
-    pub branch_results: Vec<(usize, ColumnBatch)>,
+    pub branch_results: Vec<(usize, ChunkedBatch)>,
     /// `Proc_i`: full processing-phase duration.
     pub proc: Duration,
-    /// Host↔device transfer share of `proc`.
+    /// Host↔device transfer share of `proc` (incl. coalesce staging).
     pub transfer: Duration,
     /// Per-op traces in topological (= op id) order.
     pub traces: Vec<OpTrace>,
@@ -70,14 +78,17 @@ pub struct ExecOutcome {
 /// Execute `query` over `input` with `plan`.
 ///
 /// `window` is the window-state snapshot (join build side / windowed
-/// aggregation scope); `aux_bytes` its size for cost accounting.
+/// aggregation scope) as a chunk list; `aux_bytes` its size for cost
+/// accounting. `input` accepts a [`ChunkedBatch`] or a plain
+/// `ColumnBatch` (lifted to a single chunk).
 pub fn execute(
     query: &Query,
     plan: &PhysicalPlan,
-    input: ColumnBatch,
-    window: Option<&ColumnBatch>,
+    input: impl Into<ChunkedBatch>,
+    window: Option<&ChunkedBatch>,
     env: &ExecEnv,
 ) -> Result<ExecOutcome> {
+    let input = input.into();
     if query.ops.is_empty() {
         return Err(Error::Plan("cannot execute an empty query".into()));
     }
@@ -97,7 +108,7 @@ pub fn execute(
 
     // Per-node output slots; a slot is taken (moved) by its last
     // consumer and cloned for earlier ones.
-    let mut outputs: Vec<Option<ColumnBatch>> = Vec::new();
+    let mut outputs: Vec<Option<ChunkedBatch>> = Vec::new();
     outputs.resize_with(query.ops.len(), || None);
     let mut remaining_uses: Vec<usize> = consumers.iter().map(|c| c.len()).collect();
     let mut source = Some(input);
@@ -111,24 +122,24 @@ pub fn execute(
         let device = plan.per_op[i].device;
         let kind = op.spec.kind();
 
-        // ---- Input assembly: move/clone/concat producer outputs. A
-        // multi-input node (Union) concatenates its branches here, so
-        // the operator itself stays unary. Branch fan-out clones are
-        // O(#columns) Arc bumps (shared buffers), not row copies.
-        let current: ColumnBatch = if op.inputs.is_empty() {
+        // ---- Input assembly: move/clone/append producer outputs. A
+        // multi-input node (Union) appends its branches' chunk lists
+        // here — O(#chunks), zero row copies — so the operator itself
+        // stays unary. Branch fan-out clones are O(#chunks) Arc bumps.
+        let current: ChunkedBatch = if op.inputs.is_empty() {
             source
                 .take()
                 .ok_or_else(|| Error::Plan("query has more than one source scan".into()))?
         } else if op.inputs.len() == 1 {
             take_output(&mut outputs, &mut remaining_uses, op.inputs[0])?
         } else {
-            let parts: Vec<ColumnBatch> = op
+            let parts: Vec<ChunkedBatch> = op
                 .inputs
                 .iter()
                 .map(|&p| take_output(&mut outputs, &mut remaining_uses, p))
                 .collect::<Result<_>>()?;
-            let refs: Vec<&ColumnBatch> = parts.iter().collect();
-            ColumnBatch::concat(&refs)?
+            let refs: Vec<&ChunkedBatch> = parts.iter().collect();
+            ChunkedBatch::concat(&refs)?
         };
         // Cost models charge *allocated* bytes (dead rows still travel
         // through kernels and over PCIe until a shuffle compacts them).
@@ -140,16 +151,17 @@ pub fn execute(
                     Error::Plan("Real backend needs a PJRT runtime for GPU ops".into())
                 })?;
                 let t0 = Instant::now();
-                let out = gpu::run_op(rt, &op.spec, &current, window, &query.window)?;
+                let out =
+                    gpu::run_op_chunked(rt, &op.spec, &current, window, &query.window)?;
                 (out, Some(t0.elapsed()))
             }
             (ExecBackend::Real, Device::Cpu) => {
                 let t0 = Instant::now();
-                let out = cpu::run_op(&op.spec, &current, window, &query.window)?;
+                let out = cpu::run_op_chunked(&op.spec, &current, window, &query.window)?;
                 (out, Some(t0.elapsed()))
             }
             (ExecBackend::Simulated, _) => {
-                let out = cpu::run_op(&op.spec, &current, window, &query.window)?;
+                let out = cpu::run_op_chunked(&op.spec, &current, window, &query.window)?;
                 (out, None)
             }
         };
@@ -188,10 +200,12 @@ pub fn execute(
         };
 
         // Transfer charges (Alg. 2 placement, shared with the planner):
-        // entering the device at a source op or on a CPU→GPU boundary;
-        // leaving at a sink op or on a GPU→CPU boundary — branch edges
-        // included. Simulated backend only (real GPU ops include
-        // marshaling in their measured time).
+        // entering the device at a source op or on a CPU→GPU boundary —
+        // paying the contiguous coalesce staging plus the PCIe copy —
+        // and leaving at a sink op or on a GPU→CPU boundary (already
+        // contiguous device-side, PCIe only) — branch edges included.
+        // Simulated backend only (real GPU ops include marshaling in
+        // their measured time).
         let mut op_transfer = Duration::ZERO;
         if env.backend == ExecBackend::Simulated && device == Device::Gpu {
             let (entering, leaving) =
@@ -199,7 +213,9 @@ pub fn execute(
                     plan.per_op[n].device == Device::Cpu
                 });
             if entering {
-                op_transfer += env.model.transfer_time(in_bytes as f64 + op_aux);
+                let staged = in_bytes as f64 + op_aux;
+                op_transfer +=
+                    env.model.coalesce_time(staged) + env.model.transfer_time(staged);
             }
             if leaving {
                 op_transfer += env.model.transfer_time(out_bytes as f64);
@@ -221,7 +237,7 @@ pub fn execute(
 
     // Collect sink outputs (slots never consumed); the highest-id sink
     // is the primary result — for a linear chain, the last op.
-    let mut sink_outputs: Vec<(usize, ColumnBatch)> = outputs
+    let mut sink_outputs: Vec<(usize, ChunkedBatch)> = outputs
         .iter_mut()
         .enumerate()
         .filter(|(i, _)| consumers[*i].is_empty())
@@ -245,12 +261,12 @@ pub fn execute(
 }
 
 /// Consume producer `p`'s output slot: move it out on the last use,
-/// clone it while other consumers still need it.
+/// clone it while other consumers still need it (O(#chunks) Arc bumps).
 fn take_output(
-    outputs: &mut [Option<ColumnBatch>],
+    outputs: &mut [Option<ChunkedBatch>],
     remaining_uses: &mut [usize],
     p: usize,
-) -> Result<ColumnBatch> {
+) -> Result<ChunkedBatch> {
     remaining_uses[p] = remaining_uses[p].saturating_sub(1);
     if outputs[p].is_none() {
         return Err(Error::Plan(format!("op {p} consumed before it produced")));
@@ -407,7 +423,7 @@ mod tests {
             .join_window("k", "k")
             .build()
             .unwrap();
-        let w = batch(100);
+        let w = ChunkedBatch::from_batch(batch(100));
         let out = execute(&q, &all(&q, Device::Cpu), batch(100), Some(&w), &env(&model)).unwrap();
         // Self-join on unique keys: 100 matches.
         assert_eq!(out.result.rows(), 100);
@@ -426,12 +442,12 @@ mod tests {
             .unwrap();
         let out = execute(&q, &all(&q, Device::Cpu), batch(100), None, &env(&model)).unwrap();
         // Primary sink = highest id (select-v); one branch sink.
-        assert_eq!(out.result.schema.len(), 1);
-        assert!(out.result.column("v").is_ok());
+        assert_eq!(out.result.schema().len(), 1);
+        assert!(out.result.coalesce().column("v").is_ok());
         assert_eq!(out.branch_results.len(), 1);
         let (branch_id, branch) = &out.branch_results[0];
         assert_eq!(*branch_id, 2);
-        assert!(branch.column("k").is_ok());
+        assert!(branch.coalesce().column("k").is_ok());
         assert_eq!(branch.live_rows(), out.result.live_rows());
         assert_eq!(out.traces.len(), 4);
     }
@@ -450,11 +466,38 @@ mod tests {
         assert!(out.branch_results.is_empty());
     }
 
+    /// The tentpole claim at the executor level: a Union's input
+    /// assembly appends its branches' chunk lists — the merged batch
+    /// aliases the branch outputs' chunk allocations, row copies never
+    /// happen.
+    #[test]
+    fn union_assembly_shares_branch_chunks() {
+        let model = DeviceModel::default();
+        let q = QueryBuilder::scan("u")
+            .window(WindowSpec::sliding(D::from_secs(30), D::from_secs(5)))
+            .merge_union(|b| b.filter("v", Predicate::Ge(10.0)))
+            .build()
+            .unwrap();
+        let input = batch(100);
+        let input_col = input.columns[1].clone();
+        let out = execute(&q, &all(&q, Device::Cpu), input, None, &env(&model)).unwrap();
+        // Union output: scan branch chunk + filter branch chunk, both
+        // sharing the source allocation (scan and filter are zero-copy).
+        assert_eq!(out.result.num_chunks(), 2);
+        for chunk in out.result.chunks() {
+            assert!(
+                chunk.columns[1].shares_memory(&input_col),
+                "union materialized a branch instead of appending its chunks"
+            );
+        }
+    }
+
     #[test]
     fn branch_boundary_charges_transfer_once() {
         let model = DeviceModel::default();
         // GPU filter fanning out to two CPU selects: the filter leaves
-        // the device once (one out-transfer), plus its entry.
+        // the device once (one out-transfer), plus its entry (coalesce
+        // staging + in-transfer).
         let q = QueryBuilder::scan("b")
             .window(WindowSpec::sliding(D::from_secs(30), D::from_secs(5)))
             .filter("v", Predicate::Ge(10.0))
@@ -471,9 +514,11 @@ mod tests {
         .unwrap();
         let out = execute(&q, &plan, batch(100), None, &env(&model)).unwrap();
         assert!(out.transfer > Duration::ZERO);
-        // The transfer equals entry(in) + exit(out) for the filter only.
+        // The transfer equals coalesce(in) + entry(in) + exit(out) for
+        // the filter only.
         let filter_trace = out.traces.iter().find(|t| t.op_id == 1).unwrap();
-        let expected = model.transfer_time(filter_trace.in_bytes as f64)
+        let expected = model.coalesce_time(filter_trace.in_bytes as f64)
+            + model.transfer_time(filter_trace.in_bytes as f64)
             + model.transfer_time(filter_trace.out_bytes as f64);
         assert_eq!(out.transfer, expected);
     }

@@ -9,6 +9,7 @@ use crate::coordinator::driver::{run, RunResult};
 use crate::coordinator::planner::SizeEstimator;
 use crate::devices::model::{DeviceModel, OpVolume};
 use crate::devices::Device;
+use crate::engine::chunked::ChunkedBatch;
 use crate::engine::window::WindowSpec;
 use crate::error::Result;
 use crate::query::exec::{self, DevicePlan, ExecEnv};
@@ -55,8 +56,9 @@ pub fn spj_cell(
     };
     let mut gen = synthetic::SyntheticGen::new(seed);
     let input = gen.batch_of_bytes(batch_bytes);
-    // Build side: window of comparable size.
-    let build = gen.batch_of_bytes(batch_bytes);
+    // Build side: window of comparable size (chunked, like the window
+    // snapshot the session hands the executor).
+    let build = ChunkedBatch::from_batch(gen.batch_of_bytes(batch_bytes));
     let physical = PhysicalPlan::from_devices(&w.query, plan)?;
     let out = exec::execute(&w.query, &physical, input, Some(&build), &env)?;
     Ok((out.proc.as_secs_f64(), out.transfer.as_secs_f64()))

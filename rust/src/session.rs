@@ -33,14 +33,16 @@
 
 use crate::cluster;
 use crate::config::{Config, ExecBackend, Mode};
-use crate::coordinator::admission::{Admission, AdmissionDecision};
-use crate::coordinator::checkpoint::{Checkpoint, CheckpointStore};
+use crate::coordinator::admission::{
+    min_positive_throughput, Admission, AdmissionDecision,
+};
+use crate::coordinator::checkpoint::{Checkpoint, CheckpointStore, QueryMetricState};
 use crate::coordinator::metrics::{BatchRecord, Metrics, PhaseTotals};
 use crate::coordinator::optimizer::{HistoryPoint, OnlineOptimizer};
 use crate::coordinator::planner::{map_device, static_preference_plan, SizeEstimator};
 use crate::devices::model::DeviceModel;
 use crate::devices::Device;
-use crate::engine::column::ColumnBatch;
+use crate::engine::chunked::ChunkedBatch;
 use crate::engine::dataset::MicroBatch;
 use crate::engine::partition::mean_partition_bytes;
 use crate::engine::sink::Sink;
@@ -296,7 +298,7 @@ impl<'rt> Session<'rt> {
     fn run_delivering(
         &mut self,
         duration: Duration,
-        deliver: &mut dyn FnMut(usize, usize, &ColumnBatch, Time) -> Result<()>,
+        deliver: &mut dyn FnMut(usize, usize, &ChunkedBatch, Time) -> Result<()>,
     ) -> Result<Vec<RunResult>> {
         if self.queries.is_empty() {
             return Err(Error::Plan("no queries registered on this session".into()));
@@ -312,7 +314,7 @@ impl<'rt> Session<'rt> {
         &mut self,
         duration: Duration,
         clock: &dyn Clock,
-        deliver: &mut dyn FnMut(usize, usize, &ColumnBatch, Time) -> Result<()>,
+        deliver: &mut dyn FnMut(usize, usize, &ChunkedBatch, Time) -> Result<()>,
     ) -> Result<Vec<RunResult>> {
         let cfg = self.cfg.clone();
         let runtime = match self.borrowed_runtime {
@@ -327,6 +329,13 @@ impl<'rt> Session<'rt> {
             None => None,
         };
 
+        // ---- Per-query run state (metrics first: checkpoint recovery
+        // below seeds them).
+        let num_queries = self.queries.len();
+        let mut windows: Vec<WindowState> =
+            (0..num_queries).map(|_| WindowState::new()).collect();
+        let mut metrics: Vec<Metrics> = (0..num_queries).map(|_| Metrics::new()).collect();
+
         // ---- Per-source run state.
         let num_sources = self.sources.len();
         let mut streams = Vec::with_capacity(num_sources);
@@ -335,8 +344,8 @@ impl<'rt> Session<'rt> {
         // is snapshotted identically into every source's checkpoint —
         // restore it from the first checkpoint found only, so resume is
         // independent of registration order and history isn't
-        // re-recorded once per source. Stream fast-forward stays
-        // per source.
+        // re-recorded once per source. Stream fast-forward and per-query
+        // metric recovery stay per source.
         let mut shared_state_restored = false;
         for src in &self.sources {
             let mut stream = src.workload.make_stream(cfg.seed);
@@ -352,6 +361,33 @@ impl<'rt> Session<'rt> {
                         shared_state_restored = true;
                     }
                     stream.fast_forward(ckpt.processed_up_to);
+                    // Metric recovery for *every* query on the source
+                    // (checkpoints are keyed by the primary query's name
+                    // but carry per-query states, so secondary-query
+                    // metrics survive too; pre-`queries` checkpoints
+                    // fall back to the legacy primary-only fields).
+                    for &qi in &src.queries {
+                        let name = &self.queries[qi].name;
+                        if let Some(qs) = ckpt
+                            .queries
+                            .iter()
+                            .find(|q| q.name.eq_ignore_ascii_case(name))
+                        {
+                            metrics[qi].restore(
+                                qs.batches,
+                                qs.cumulative_bytes,
+                                qs.cumulative_proc_secs,
+                                qs.max_lat_sum_secs,
+                            );
+                        } else if qi == src.primary {
+                            metrics[qi].restore(
+                                ckpt.batches,
+                                ckpt.cumulative_bytes,
+                                ckpt.cumulative_proc_secs,
+                                ckpt.max_lat_sum_secs,
+                            );
+                        }
+                    }
                 }
             }
             streams.push(stream);
@@ -359,12 +395,6 @@ impl<'rt> Session<'rt> {
         let mut next_trigger: Vec<Time> =
             vec![Time::ZERO.add(cfg.trigger); num_sources];
         let mut construct_acc: Vec<Duration> = vec![Duration::ZERO; num_sources];
-
-        // ---- Per-query run state.
-        let num_queries = self.queries.len();
-        let mut windows: Vec<WindowState> =
-            (0..num_queries).map(|_| WindowState::new()).collect();
-        let mut metrics: Vec<Metrics> = (0..num_queries).map(|_| Metrics::new()).collect();
 
         let end = Time::ZERO.add(duration);
 
@@ -397,11 +427,19 @@ impl<'rt> Session<'rt> {
                 for s in 0..num_sources {
                     let t0 = Instant::now();
                     let data = streams[s].poll(clock.now());
-                    let primary = self.sources[s].primary;
-                    let thput = {
-                        let t = metrics[primary].avg_throughput();
-                        if t > 0.0 { t } else { cfg.initial_throughput }
-                    };
+                    // Eq. 6's AvgThPut over a multi-query source: the
+                    // *minimum* observed throughput across its queries
+                    // (the slowest query dominates the batch's real
+                    // processing time), not the primary's alone — the
+                    // estimate stays conservative, so admission is at
+                    // least as eager for every co-registered query.
+                    let thput = min_positive_throughput(
+                        self.sources[s]
+                            .queries
+                            .iter()
+                            .map(|&qi| metrics[qi].avg_throughput()),
+                        cfg.initial_throughput,
+                    );
                     // Shared admission: the tightest bound across the
                     // source's queries keeps every query's latency
                     // target honored.
@@ -441,7 +479,7 @@ impl<'rt> Session<'rt> {
                 // ---- Per-query planning + execution.
                 struct Pending {
                     qi: usize,
-                    result: ColumnBatch,
+                    result: ChunkedBatch,
                     proc: Duration,
                     traces: Vec<OpTrace>,
                     map_device_time: Duration,
@@ -456,30 +494,32 @@ impl<'rt> Session<'rt> {
                     let query = &qdef.query;
 
                     // Window maintenance + execution input assembly. The
-                    // snapshot is an Arc'd view maintained incrementally
-                    // by the window state (O(delta) per batch, not
-                    // O(window) — see engine::window).
+                    // snapshot is a chunk list — one shared chunk per
+                    // in-window dataset (O(#datasets) Arc bumps, zero
+                    // row copies, no copy-on-write even while a sink
+                    // retains an old snapshot — see engine::window).
                     if let Some(newest) = batch.newest_event_time() {
                         windows[qi].evict(newest, &query.window);
                     }
-                    let (input, snapshot): (ColumnBatch, _) = if query.uses_window_state
-                        && !qdef.has_join
-                    {
-                        // Windowed aggregation recomputes over state ∪ new:
-                        // ingest the new datasets first (O(delta) append),
-                        // then the input *is* the shared snapshot view —
-                        // no per-batch O(window) copy. The late push below
-                        // skips these queries.
-                        windows[qi].push(&batch.datasets);
-                        let snap = windows[qi].snapshot()?;
-                        let input = match &snap {
-                            Some(st) => (**st).clone(),
-                            None => batch.concat()?,
+                    let (input, snapshot): (ChunkedBatch, Option<ChunkedBatch>) =
+                        if query.uses_window_state && !qdef.has_join {
+                            // Windowed aggregation recomputes over state ∪
+                            // new: ingest the new datasets first (O(delta)
+                            // chunk appends), then the input *is* the
+                            // chunk-list union — the old per-batch concat
+                            // (and the CoW copy a retained snapshot used
+                            // to force) is gone. The late push below
+                            // skips these queries.
+                            windows[qi].push(&batch.datasets);
+                            let snap = windows[qi].snapshot_chunks()?;
+                            let input = match &snap {
+                                Some(st) => st.clone(),
+                                None => batch.chunked()?,
+                            };
+                            (input, snap)
+                        } else {
+                            (batch.chunked()?, windows[qi].snapshot_chunks()?)
                         };
-                        (input, snap)
-                    } else {
-                        (batch.concat()?, windows[qi].snapshot()?)
-                    };
 
                     // Query planning (MapDevice or a fixed policy).
                     let t_plan = Instant::now();
@@ -507,15 +547,15 @@ impl<'rt> Session<'rt> {
                     };
                     let map_device_time = t_plan.elapsed();
                     // A join's build side before any state: empty window.
-                    let empty_window = ColumnBatch::empty(input.schema.clone());
+                    let empty_window = ChunkedBatch::new(input.schema().clone());
                     let join_side = if qdef.has_join {
-                        Some(snapshot.as_deref().unwrap_or(&empty_window))
+                        Some(snapshot.as_ref().unwrap_or(&empty_window))
                     } else {
                         None
                     };
 
                     // Processing phase (single executor or cluster-wide).
-                    let (result, proc, traces): (ColumnBatch, Duration, Vec<OpTrace>) =
+                    let (result, proc, traces): (ChunkedBatch, Duration, Vec<OpTrace>) =
                         match &cfg.cluster {
                             None => {
                                 let env = ExecEnv {
@@ -629,7 +669,10 @@ impl<'rt> Session<'rt> {
                     }
                 }
 
-                // ---- §III-E checkpoint / state flush.
+                // ---- §III-E checkpoint / state flush. The file stays
+                // keyed by the source's primary query name, but carries
+                // one metric state per registered query, so secondary
+                // queries recover too.
                 if let Some(st) = &ckpt_store {
                     let newest = batch
                         .datasets
@@ -638,6 +681,16 @@ impl<'rt> Session<'rt> {
                         .max()
                         .unwrap_or(admitted_at);
                     let m = &metrics[primary];
+                    let queries: Vec<QueryMetricState> = query_ids
+                        .iter()
+                        .map(|&qi| QueryMetricState {
+                            name: self.queries[qi].name.clone(),
+                            batches: metrics[qi].batches(),
+                            cumulative_bytes: metrics[qi].cumulative_bytes(),
+                            cumulative_proc_secs: metrics[qi].cumulative_proc_secs(),
+                            max_lat_sum_secs: metrics[qi].max_lat_sum_secs(),
+                        })
+                        .collect();
                     st.save(&Checkpoint {
                         workload: self.queries[primary].name.clone(),
                         batches: m.batches(),
@@ -646,6 +699,7 @@ impl<'rt> Session<'rt> {
                         cumulative_bytes: m.cumulative_bytes(),
                         cumulative_proc_secs: m.cumulative_proc_secs(),
                         max_lat_sum_secs: m.max_lat_sum_secs(),
+                        queries,
                         history: self.optimizer.history().to_vec(),
                     })?;
                 }

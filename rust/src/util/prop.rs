@@ -42,6 +42,12 @@ impl Gen {
         Gen { rng: Rng::new(seed), size }
     }
 
+    /// Standalone full-size generator for tests that want seeded random
+    /// inputs outside a [`Runner`] sweep.
+    pub fn for_tests(seed: u64) -> Gen {
+        Gen::new(seed, 1.0)
+    }
+
     pub fn u64(&mut self, max: u64) -> u64 {
         let scaled = ((max as f64) * self.size).max(1.0) as u64;
         self.rng.below(scaled.min(max).max(1))

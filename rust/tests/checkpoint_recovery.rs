@@ -5,7 +5,10 @@
 use lmstream::config::{Config, Mode};
 use lmstream::coordinator::checkpoint::CheckpointStore;
 use lmstream::coordinator::driver;
+use lmstream::engine::ops::filter::Predicate;
 use lmstream::engine::sink::{CollectSink, CountingSink};
+use lmstream::query::QueryBuilder;
+use lmstream::session::Session;
 use lmstream::workloads;
 use std::path::PathBuf;
 use std::time::Duration;
@@ -66,6 +69,60 @@ fn resume_skips_processed_prefix_and_restores_inf_pt() {
         "resumed inf_pt {resumed_first} vs checkpointed {}",
         ckpt.inf_pt
     );
+}
+
+/// Multi-query checkpointing: a source's checkpoint (keyed by its
+/// primary query's name) carries one metric state per registered query,
+/// and a resumed session seeds *secondary* metrics from it too — the
+/// per-source primary-key gap this file used to leave untested.
+#[test]
+fn secondary_query_metrics_survive_recovery() {
+    let dir = ckpt_dir("secondary");
+    let build_session = || {
+        let cfg = Config {
+            mode: Mode::LmStream,
+            checkpoint_dir: Some(dir.to_string_lossy().to_string()),
+            ..Config::default()
+        };
+        let mut s = Session::new(cfg).unwrap();
+        let w = workloads::by_name("lr1s").unwrap();
+        let window = w.query.window;
+        let first = s.register(w).unwrap();
+        let side = QueryBuilder::scan("side")
+            .window(window)
+            .filter("speed", Predicate::Lt(60.0))
+            .build()
+            .unwrap();
+        s.register_shared(first, "side", side).unwrap();
+        s
+    };
+
+    // First incarnation: both queries record batches; the checkpoint
+    // must carry a metric state for the secondary under its own name.
+    let first_rs = build_session().run(Duration::from_secs(90)).unwrap();
+    assert!(!first_rs[1].batches.is_empty());
+    let store = CheckpointStore::new(&dir).unwrap();
+    let ckpt = store.load("lr1s").unwrap().expect("checkpoint exists");
+    let side_state = ckpt
+        .queries
+        .iter()
+        .find(|q| q.name == "side")
+        .expect("secondary query state persisted");
+    assert_eq!(side_state.batches, first_rs[1].batches.len());
+    assert!(side_state.cumulative_proc_secs > 0.0);
+
+    // Second incarnation: the secondary's restored batch count offsets
+    // its new batch indices — pre-fix, secondary metrics started from
+    // zero and the first index was 0 again.
+    let second_rs = build_session().run(Duration::from_secs(60)).unwrap();
+    assert!(!second_rs[1].batches.is_empty());
+    assert_eq!(
+        second_rs[1].batches[0].index,
+        side_state.batches,
+        "secondary metrics were not seeded from the checkpoint"
+    );
+    // And the resumed primary continues its own count too.
+    assert_eq!(second_rs[0].batches[0].index, ckpt.batches);
 }
 
 #[test]

@@ -1,0 +1,22 @@
+//! Helpers shared across the engine test harnesses (`prop_engine`,
+//! `diff_chunked`). Kept in one place so the definition of
+//! "bit-identical" cannot drift between suites.
+
+use lmstream::engine::column::{Column, ColumnBatch};
+
+/// Deep byte-level snapshot of a batch's observable content (column
+/// values by bit pattern + per-row liveness). Two batches are
+/// "bit-identical" exactly when their fingerprints compare equal.
+pub fn fingerprint(b: &ColumnBatch) -> (Vec<Vec<u8>>, Vec<u8>) {
+    let cols = b
+        .columns
+        .iter()
+        .map(|c| match c {
+            Column::F32(v) => {
+                v.iter().flat_map(|x| x.to_bits().to_le_bytes()).collect::<Vec<u8>>()
+            }
+            Column::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect::<Vec<u8>>(),
+        })
+        .collect();
+    (cols, b.validity.to_vec())
+}

@@ -1,7 +1,9 @@
 //! Property-based tests over coordinator invariants (routing, batching,
 //! state) using the in-repo prop kit (DESIGN.md: proptest substitute).
 
-use lmstream::coordinator::admission::{Admission, AdmissionDecision};
+use lmstream::coordinator::admission::{
+    min_positive_throughput, Admission, AdmissionDecision,
+};
 use lmstream::coordinator::planner::{map_device, SizeEstimator};
 use lmstream::devices::Device;
 use lmstream::engine::column::{Column, ColumnBatch, Field, Schema};
@@ -122,6 +124,56 @@ fn prop_estimate_monotone() {
             e_big >= e_small,
             format!("size monotonicity {e_small:?} > {e_big:?}"),
         )
+    });
+}
+
+/// The shared admission throughput (min positive across a source's
+/// queries) is the *tightest* choice: it never exceeds any observed
+/// per-query estimate, falls back to the bootstrap value only when no
+/// query has history, and — because Eq. 6 is anti-monotone in the
+/// throughput — yields a latency estimate at least as large as the one
+/// any single query (the old primary-only rule included) would produce,
+/// so admission fires at least as eagerly for every co-registered query.
+#[test]
+fn prop_shared_throughput_is_tightest() {
+    let mut r = Runner::new(0xadA14, 200);
+    r.run("shared throughput is tightest", |g| {
+        let n = 1 + g.usize_in(0..6);
+        let estimates: Vec<f64> = (0..n)
+            .map(|_| if g.bool() { g.f64_in(1.0, 1e6) } else { 0.0 })
+            .collect();
+        let initial = g.f64_in(1.0, 1e6);
+        let shared = min_positive_throughput(estimates.iter().copied(), initial);
+        let positives: Vec<f64> =
+            estimates.iter().copied().filter(|&e| e > 0.0).collect();
+        if positives.is_empty() {
+            prop_assert(shared == initial, "no history must fall back to initial")?;
+        } else {
+            for &e in &positives {
+                prop_assert(
+                    shared <= e,
+                    format!("shared {shared} exceeds a query's estimate {e}"),
+                )?;
+            }
+            prop_assert(
+                positives.contains(&shared),
+                "shared estimate must be one of the observed ones",
+            )?;
+        }
+        // Anti-monotonicity in action: the shared estimate's latency is
+        // >= the estimate under any per-query throughput, so admission
+        // (est >= bound) can only fire earlier, never later.
+        let mb = lmstream::engine::dataset::MicroBatch::new(random_datasets(g, 3));
+        let now = Time::from_secs_f64(40.0);
+        let shared_est = Admission::estimate_max_latency(&mb, now, shared);
+        for &e in &positives {
+            let per_query = Admission::estimate_max_latency(&mb, now, e);
+            prop_assert(
+                shared_est >= per_query,
+                format!("shared {shared_est:?} < per-query {per_query:?}"),
+            )?;
+        }
+        Ok(())
     });
 }
 

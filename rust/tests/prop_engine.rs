@@ -15,23 +15,8 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Duration;
 
-/// Deep byte-level snapshot of a batch's observable content (column
-/// values + liveness), used to assert inputs survive kernels unchanged.
-fn fingerprint(b: &ColumnBatch) -> (Vec<Vec<u8>>, Vec<u8>) {
-    let cols = b
-        .columns
-        .iter()
-        .map(|c| match c {
-            Column::F32(v) => {
-                v.iter().flat_map(|x| x.to_bits().to_le_bytes()).collect::<Vec<u8>>()
-            }
-            Column::I32(v) => {
-                v.iter().flat_map(|x| x.to_le_bytes()).collect::<Vec<u8>>()
-            }
-        })
-        .collect();
-    (cols, b.validity.to_vec())
-}
+mod common;
+use common::fingerprint;
 
 /// Rebuild a batch with freshly allocated buffers (the pre-refactor
 /// deep-copy representation).

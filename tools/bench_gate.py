@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Perf-smoke gate: diff a freshly measured BENCH_hotpath.json against the
+committed baseline.
+
+Usage: bench_gate.py BASELINE.json MEASURED.json
+
+Three checks, in decreasing order of machine-independence:
+
+1. ratio gates (always enforced when the baseline declares them):
+     - window_snapshot_speedup >= baseline's `min_window_snapshot_speedup`
+     - union_fanin_scaling     <= baseline's `max_union_fanin_scaling`
+   These are dimensionless and stable across runners — they encode the
+   chunked-path claims (O(#datasets) snapshots; Union assembly cost
+   independent of total rows).
+
+2. per-bench mean gate (enforced per entry the baseline carries): each
+   measured mean must sit within +/-20% of the baseline mean. Only
+   meaningful once the baseline holds a CI-measured point (the committed
+   file starts with an empty `results` list; promote a downloaded
+   `bench-hotpath` artifact to arm this gate).
+
+3. schema sanity: measured file must be schema_version >= 2 with a
+   non-empty results list.
+
+Exit code 0 = pass, 1 = regression, 2 = usage/IO error.
+"""
+
+import json
+import sys
+
+TOLERANCE = 0.20
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_gate: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    baseline = load(sys.argv[1])
+    measured = load(sys.argv[2])
+    failures = []
+
+    # 3. schema sanity on the measured point.
+    if measured.get("schema_version", 0) < 2:
+        failures.append(
+            f"measured schema_version {measured.get('schema_version')} < 2"
+        )
+    if not measured.get("results"):
+        failures.append("measured results list is empty — bench did not run")
+
+    # 1. ratio gates.
+    min_speedup = baseline.get("min_window_snapshot_speedup")
+    if min_speedup is not None:
+        got = measured.get("window_snapshot_speedup") or 0.0
+        if got < min_speedup:
+            failures.append(
+                f"window_snapshot_speedup {got:.2f} < required {min_speedup}"
+            )
+        else:
+            print(f"ok: window_snapshot_speedup {got:.2f} >= {min_speedup}")
+    max_scaling = baseline.get("max_union_fanin_scaling")
+    if max_scaling is not None:
+        got = measured.get("union_fanin_scaling")
+        if got is None or got <= 0.0:
+            failures.append("union_fanin_scaling missing from measured point")
+        elif got > max_scaling:
+            failures.append(
+                f"union_fanin_scaling {got:.2f} > allowed {max_scaling} "
+                "(Union assembly is scaling with total rows)"
+            )
+        else:
+            print(f"ok: union_fanin_scaling {got:.2f} <= {max_scaling}")
+
+    # 2. per-bench +/-20% mean gate against whatever the baseline carries.
+    base_means = {
+        r["name"]: r["mean_s"]
+        for r in baseline.get("results", [])
+        if r.get("mean_s")
+    }
+    got_means = {
+        r["name"]: r["mean_s"] for r in measured.get("results", []) if r.get("mean_s")
+    }
+    for name, base in sorted(base_means.items()):
+        got = got_means.get(name)
+        if got is None:
+            failures.append(f"bench `{name}` missing from measured point")
+            continue
+        drift = (got - base) / base
+        if abs(drift) > TOLERANCE:
+            failures.append(
+                f"bench `{name}` mean {got:.3e}s drifted {drift:+.0%} "
+                f"from baseline {base:.3e}s (gate +/-{TOLERANCE:.0%})"
+            )
+        else:
+            print(f"ok: `{name}` {drift:+.1%} vs baseline")
+    if not base_means:
+        print(
+            "note: baseline carries no per-bench means yet — +/-20% mean gate "
+            "idle until a CI-measured artifact is committed as the baseline"
+        )
+
+    if failures:
+        print("\nbench_gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print("bench_gate OK")
+
+
+if __name__ == "__main__":
+    main()
