@@ -3,15 +3,17 @@
 //! (Table IV's "Construct Micro-batch" and "Map Device" rows).
 //!
 //! Measured pieces: admission estimate (Eq. 6), MapDevice planning
-//! (Alg. 2), the OLS fit (Eq. 10), micro-batch assembly (chunked vs.
-//! materializing concat) and partitioning, the native operator kernels
-//! the simulated path runs per batch, the zero-copy batch plumbing
-//! (clone/slice/scan), the window-snapshot path (chunk-list vs. fresh
-//! concat — the O(#datasets) vs O(window-rows) claim), 8-way `Union`
-//! fan-in assembly (chunk appends must be independent of total row
-//! count), and an end-to-end `Session::run` micro-batch loop.
+//! (Alg. 2), joint cross-query scheduling (N queries, one GPU — with
+//! the co-scheduled ≤ independent makespan assertion), the OLS fit
+//! (Eq. 10), micro-batch assembly (chunked vs. materializing concat)
+//! and partitioning, the native operator kernels the simulated path
+//! runs per batch, the zero-copy batch plumbing (clone/slice/scan), the
+//! window-snapshot path (chunk-list vs. fresh concat — the O(#datasets)
+//! vs O(window-rows) claim), 8-way `Union` fan-in assembly (chunk
+//! appends must be independent of total row count), and end-to-end
+//! `Session::run` micro-batch loops (single- and multi-query).
 //!
-//! Emits `BENCH_hotpath.json` (machine-readable, schema_version 2) into
+//! Emits `BENCH_hotpath.json` (machine-readable, schema_version 3) into
 //! the working directory — the perf-trajectory artifact CI uploads and
 //! gates against the committed baseline (`tools/bench_gate.py`).
 
@@ -19,6 +21,8 @@ use lmstream::config::{Config, Mode};
 use lmstream::coordinator::admission::Admission;
 use lmstream::coordinator::optimizer::{fit_inflection, FitJob, HistoryPoint};
 use lmstream::coordinator::planner::{map_device, SizeEstimator};
+use lmstream::coordinator::schedule::{plan_joint, QueryCandidate};
+use lmstream::devices::model::DeviceModel;
 use lmstream::engine::chunked::ChunkedBatch;
 use lmstream::engine::column::ColumnBatch;
 use lmstream::engine::dataset::{Dataset, MicroBatch};
@@ -79,8 +83,48 @@ fn main() {
     // MapDevice planning (runs once per batch).
     let est = SizeEstimator::new(q.len());
     b.bench("alg2 map_device (LR1S dag)", || {
-        map_device(&q, 64.0 * 1024.0, 150.0 * 1024.0, 0.1, &est).expect("plan")
+        map_device(&q, 64.0 * 1024.0, 150.0 * 1024.0, 0.1, &est, 2).expect("plan")
     });
+
+    // Joint cross-query scheduling: 4 GPU-leaning queries, one GPU. The
+    // scheduler must stay far below the 10 ms poll interval, and its
+    // predicted co-scheduled makespan must never exceed the independent
+    // plans' shared-timeline makespan (gated below and in CI).
+    let model = DeviceModel::default();
+    let contenders: Vec<_> = (0..4).map(|_| q.clone()).collect();
+    let make_cands = || {
+        contenders
+            .iter()
+            .map(|cq| {
+                let cest = SizeEstimator::new(cq.len());
+                QueryCandidate::build(
+                    cq,
+                    48.0 * 1024.0,
+                    10.0 * 1024.0,
+                    0.1,
+                    &cest,
+                    4,
+                    0.0,
+                    0,
+                )
+                .expect("candidate")
+            })
+            .collect::<Vec<_>>()
+    };
+    b.bench("joint co-schedule (4 queries, 1 GPU)", || {
+        let cands = make_cands();
+        plan_joint(&cands, &model, 12, 1).predicted.makespan
+    });
+    let cands = make_cands();
+    let joint = plan_joint(&cands, &model, 12, 1);
+    let cosched_ratio = if joint.predicted.independent_shared_makespan > 0.0 {
+        joint.predicted.makespan / joint.predicted.independent_shared_makespan
+    } else {
+        0.0
+    };
+    println!(
+        "co-schedule makespan ratio (joint / independent-serialized): {cosched_ratio:.3}"
+    );
 
     // Eq. 10 fit over a long history (background thread work).
     let history: Vec<HistoryPoint> = (0..1000)
@@ -199,6 +243,24 @@ fn main() {
         s.register(workloads::by_name("lr1s").expect("lr1s")).expect("register");
         s.run(Duration::from_secs(60)).expect("run").len()
     });
+    // Multi-query contention loop: two queries, one source, one shared
+    // GPU timeline, joint planning per batch.
+    e2e.bench("session::run 2-query co-scheduled (60s simulated loop)", || {
+        use lmstream::engine::ops::filter::Predicate;
+        use lmstream::query::QueryBuilder;
+        let mut s = Session::new(Config { mode: Mode::LmStream, ..Config::default() })
+            .expect("session");
+        let w = workloads::by_name("lr1s").expect("lr1s");
+        let window = w.query.window;
+        let first = s.register(w).expect("register");
+        let side = QueryBuilder::scan("side")
+            .window(window)
+            .filter("speed", Predicate::Lt(60.0))
+            .build()
+            .expect("query");
+        s.register_shared(first, "side", side).expect("register_shared");
+        s.run(Duration::from_secs(60)).expect("run").len()
+    });
 
     b.report();
     e2e.report();
@@ -227,9 +289,10 @@ fn main() {
         b.results().iter().chain(e2e.results().iter()).map(row).collect();
     let doc = json::obj(vec![
         ("bench", json::s("perf_hotpath")),
-        ("schema_version", json::num(2.0)),
+        ("schema_version", json::num(3.0)),
         ("window_snapshot_speedup", json::num(speedup)),
         ("union_fanin_scaling", json::num(union_scaling)),
+        ("coschedule_makespan_ratio", json::num(cosched_ratio)),
         ("results", json::arr(results)),
     ]);
     std::fs::write("BENCH_hotpath.json", doc.render() + "\n")
@@ -247,6 +310,13 @@ fn main() {
     assert!(
         union_scaling < 3.0,
         "union fan-in must be independent of row count, got {union_scaling:.2}x"
+    );
+    // Co-scheduling must never predict a worse makespan than the
+    // independent plans serialized on the same shared device (the
+    // scheduler falls back to exactly those plans if it cannot improve).
+    assert!(
+        cosched_ratio > 0.0 && cosched_ratio <= 1.0 + 1e-6,
+        "co-scheduled makespan must be <= independent-plan makespan, ratio {cosched_ratio:.3}"
     );
     println!("perf_hotpath OK");
 }

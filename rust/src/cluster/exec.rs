@@ -15,9 +15,9 @@ use crate::config::ExecBackend;
 use crate::cluster::topology::ClusterSpec;
 use crate::devices::model::DeviceModel;
 use crate::engine::chunked::ChunkedBatch;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::query::dag::{OpKind, Query};
-use crate::query::exec::{self, ExecEnv, ExecOutcome};
+use crate::query::exec::{self, ExecEnv, ExecOutcome, GpuTimeline};
 use crate::query::physical::PhysicalPlan;
 use crate::runtime::client::Runtime;
 use std::sync::Arc;
@@ -61,8 +61,41 @@ pub fn execute_on_cluster(
     backend: ExecBackend,
     runtime: Option<&Runtime>,
 ) -> Result<ClusterOutcome> {
+    execute_on_cluster_with_occupancy(
+        cluster, query, plan, input, window, model, backend, runtime, None,
+    )
+}
+
+/// [`execute_on_cluster`] routing a session's *joint* plan per executor:
+/// each executor's GPU is a shared device across the concurrent queries
+/// of one micro-batch round, so the caller hands one [`GpuTimeline`] per
+/// executor (`timelines.len() == cluster.executors.len()`) and this
+/// function charges executor `i`'s simulated GPU ops against
+/// `timelines[i]`. With `None` every executor sees an idle device (the
+/// single-query behavior).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_on_cluster_with_occupancy(
+    cluster: &ClusterSpec,
+    query: &Query,
+    plan: &PhysicalPlan,
+    input: impl Into<ChunkedBatch>,
+    window: Option<&ChunkedBatch>,
+    model: &DeviceModel,
+    backend: ExecBackend,
+    runtime: Option<&Runtime>,
+    mut timelines: Option<&mut [GpuTimeline]>,
+) -> Result<ClusterOutcome> {
     let input = input.into();
     cluster.validate()?;
+    if let Some(tl) = timelines.as_deref() {
+        if tl.len() != cluster.executors.len() {
+            return Err(Error::Plan(format!(
+                "{} GPU timelines for {} executors",
+                tl.len(),
+                cluster.executors.len()
+            )));
+        }
+    }
     let total_cores = cluster.total_cores();
     let rows = input.rows();
 
@@ -89,7 +122,7 @@ pub fn execute_on_cluster(
     let mut per_executor = Vec::with_capacity(shares.len());
     let mut straggler = Duration::ZERO;
     let mut network = Duration::ZERO;
-    for (share, spec) in shares.into_iter().zip(&cluster.executors) {
+    for (e, (share, spec)) in shares.into_iter().zip(&cluster.executors).enumerate() {
         let env = ExecEnv {
             model,
             backend,
@@ -97,7 +130,12 @@ pub fn execute_on_cluster(
             num_gpus: spec.gpus,
             runtime,
         };
-        let out = exec::execute(query, plan, share, window, &env)?;
+        let out = match timelines.as_deref_mut() {
+            Some(tl) => {
+                exec::execute_with_occupancy(query, plan, share, window, &env, &mut tl[e])?
+            }
+            None => exec::execute(query, plan, share, window, &env)?,
+        };
         // Charge this executor's shuffle exchanges.
         if e_count > 1.0 {
             for t in &out.traces {
@@ -136,6 +174,7 @@ pub fn execute_on_cluster(
 mod tests {
     use super::*;
     use crate::devices::Device;
+    use crate::engine::column::ColumnBatch;
     use crate::engine::ops::filter::Predicate;
     use crate::engine::window::WindowSpec;
     use crate::query::builder::QueryBuilder;
@@ -253,6 +292,61 @@ mod tests {
     fn empty_input_runs() {
         let out = run(&ClusterSpec::paper(), 0);
         assert_eq!(out.result.rows(), 0);
+    }
+
+    #[test]
+    fn per_executor_timelines_arbitrate_gpu_shares() {
+        // A busy per-executor timeline delays that executor's GPU ops;
+        // results stay identical to the idle-device run.
+        let q = query();
+        let plan = PhysicalPlan::uniform(&q, Device::Gpu);
+        let model = DeviceModel::default();
+        let spec = ClusterSpec::paper();
+        let idle = execute_on_cluster(
+            &spec, &q, &plan, input(4000), None, &model, ExecBackend::Simulated, None,
+        )
+        .unwrap();
+        let mut timelines: Vec<GpuTimeline> =
+            (0..spec.executors.len()).map(|_| GpuTimeline::new()).collect();
+        // Pre-book executor 0's GPU for 5 simulated seconds.
+        use crate::query::exec::GpuOccupancy;
+        timelines[0].request(Duration::ZERO, Duration::from_secs(5));
+        let contended = execute_on_cluster_with_occupancy(
+            &spec,
+            &q,
+            &plan,
+            input(4000),
+            None,
+            &model,
+            ExecBackend::Simulated,
+            None,
+            Some(&mut timelines),
+        )
+        .unwrap();
+        assert!(contended.per_executor[0].contention > Duration::ZERO);
+        assert_eq!(contended.per_executor[1].contention, Duration::ZERO);
+        assert!(contended.straggler > idle.straggler);
+        assert_eq!(contended.result, idle.result);
+    }
+
+    #[test]
+    fn timeline_arity_checked() {
+        let q = query();
+        let plan = PhysicalPlan::uniform(&q, Device::Cpu);
+        let model = DeviceModel::default();
+        let mut one = vec![GpuTimeline::new()];
+        let r = execute_on_cluster_with_occupancy(
+            &ClusterSpec::paper(),
+            &q,
+            &plan,
+            input(10),
+            None,
+            &model,
+            ExecBackend::Simulated,
+            None,
+            Some(&mut one),
+        );
+        assert!(r.is_err(), "timeline/executor arity mismatch must error");
     }
 
     #[test]

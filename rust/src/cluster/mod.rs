@@ -12,5 +12,5 @@
 pub mod exec;
 pub mod topology;
 
-pub use exec::{execute_on_cluster, ClusterOutcome};
+pub use exec::{execute_on_cluster, execute_on_cluster_with_occupancy, ClusterOutcome};
 pub use topology::{ClusterSpec, ExecutorSpec, NetworkModel};

@@ -100,6 +100,12 @@ pub struct Config {
     pub initial_throughput: f64,
     /// Enable the online optimizer (Eq. 10). Disabled for ablations.
     pub online_optimizer: bool,
+    /// Joint cross-query planning (LMStream mode, multi-query sessions):
+    /// plan each micro-batch across all of a source's queries under one
+    /// shared-GPU budget instead of per-query idle-GPU `MapDevice`.
+    /// Disabled for ablations — execution still charges the shared GPU
+    /// timeline either way (the device is shared physics, not policy).
+    pub co_schedule: bool,
     /// Optimizer history cap (None = unbounded, the paper's default; the
     /// last-N policy is the paper's §III-E future-work extension).
     pub history_cap: Option<usize>,
@@ -130,6 +136,7 @@ impl Default for Config {
             base_trans_cost: 0.1,
             initial_throughput: 400.0 * 1024.0,
             online_optimizer: true,
+            co_schedule: true,
             history_cap: None,
             seed: 0x1a2b3c4d,
             artifact_dir: "artifacts".to_string(),

@@ -17,8 +17,13 @@ pub struct BatchRecord {
     pub bytes: usize,
     /// max_j Buff_(i,j).
     pub max_buffering: Duration,
-    /// `Proc_i`.
+    /// `Proc_i` (includes any shared-GPU contention wait).
     pub proc: Duration,
+    /// Share of `proc` spent waiting on the shared GPU timeline while
+    /// other queries of the same micro-batch round held the device
+    /// (zero for single-query rounds). Observability for cross-query
+    /// co-scheduling; already included in `proc`.
+    pub gpu_wait: Duration,
     /// `MaxLat_i` (Eq. 5).
     pub max_latency: Duration,
     /// Inflection point used (bytes).
@@ -197,6 +202,7 @@ mod tests {
             bytes,
             max_buffering: Duration::ZERO,
             proc: Duration::from_secs_f64(proc_s),
+            gpu_wait: Duration::ZERO,
             max_latency: Duration::ZERO,
             inf_pt: 150.0 * 1024.0,
             gpu_ops: 0,

@@ -4,6 +4,9 @@
 //!   dynamic batching,
 //! * [`planner`] — `MapDevice` (Alg. 2): operation-level CPU/GPU planning
 //!   around the inflection point (Eqs. 7–9, Table II),
+//! * [`schedule`] — cross-query co-scheduling: one micro-batch planned
+//!   jointly across a source's queries under a shared GPU timeline
+//!   (reuses the planner's Eq. 7–9 candidate costs),
 //! * [`optimizer`] — asynchronous online regression of the inflection
 //!   point (Eq. 10),
 //! * [`metrics`] — Eqs. 4/5 bookkeeping, per-dataset latency, Table IV
@@ -19,9 +22,14 @@ pub mod driver;
 pub mod metrics;
 pub mod optimizer;
 pub mod planner;
+pub mod schedule;
 
 pub use admission::{Admission, AdmissionDecision};
 pub use driver::{run, RunResult};
 pub use metrics::{BatchRecord, Metrics, PhaseTotals};
 pub use optimizer::OnlineOptimizer;
-pub use planner::{map_device, static_preference_plan, BaseCost, SizeEstimator};
+pub use planner::{
+    map_device, op_candidates, select_devices, static_preference_plan, BaseCost,
+    OpCandidate, SizeEstimator,
+};
+pub use schedule::{plan_joint, JointPlan, Prediction, QueryCandidate};

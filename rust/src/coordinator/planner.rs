@@ -21,6 +21,18 @@
 //! [`crate::query::exec`] walks. Transfer-cost placement is shared with
 //! the executor through [`transfer_boundaries`] so the planner's Eq. 9
 //! charging and the executor's PCIe charging can never diverge.
+//!
+//! `MapDevice` is split into two reusable halves:
+//!
+//! 1. [`op_candidates`] — pure candidate costing: Eq. 7/8/9 cost vectors
+//!    per op (no device decision),
+//! 2. [`select_devices`] — Alg. 2's traversal: boundary placement +
+//!    greedy per-op choice over those vectors.
+//!
+//! [`map_device`] composes the two. The cross-query scheduler
+//! ([`crate::coordinator::schedule`]) consumes [`op_candidates`]
+//! directly, so the joint plan reuses — never re-derives — the same
+//! Eq. 7–9 economics the per-query planner runs on.
 
 use crate::devices::Device;
 use crate::error::{Error, Result};
@@ -106,15 +118,15 @@ impl SizeEstimator {
         sizes
     }
 
-    /// DAG-aware version of [`SizeEstimator::op_sizes`]: an op's input
-    /// is the sum of its producers' estimated outputs (a Union merges
-    /// branches; the scan reads `part_bytes` from the source). Returns
-    /// per-op processed sizes index-aligned with `query.ops`; for a
-    /// linear chain this equals `op_sizes(part_bytes)`.
-    pub fn op_sizes_for(&self, query: &Query, part_bytes: f64) -> Vec<f64> {
+    /// DAG-propagated per-op `(input, output)` byte estimates: an op's
+    /// input is the sum of its producers' estimated outputs (a Union
+    /// merges branches; the scan reads `part_bytes` from the source),
+    /// its output follows the learned ratio. Index-aligned with
+    /// `query.ops`.
+    pub fn op_flows_for(&self, query: &Query, part_bytes: f64) -> Vec<(f64, f64)> {
         let n = query.ops.len();
         let mut outs = vec![0.0f64; n];
-        let mut sizes = vec![0.0f64; n];
+        let mut flows = vec![(0.0f64, 0.0f64); n];
         // Validated queries store producers before consumers (validate()
         // rejects forward edges), so the storage order is topological —
         // no need to re-run Kahn here on the planning hot path.
@@ -125,10 +137,20 @@ impl SizeEstimator {
                 op.inputs.iter().map(|&p| outs.get(p).copied().unwrap_or(0.0)).sum()
             };
             let out = input * self.ratio(op.id);
-            sizes[op.id] = input.max(out);
+            flows[op.id] = (input, out);
             outs[op.id] = out;
         }
-        sizes
+        flows
+    }
+
+    /// DAG-aware version of [`SizeEstimator::op_sizes`]: per-op
+    /// processed size = max(estimated input, estimated output); for a
+    /// linear chain this equals `op_sizes(part_bytes)`.
+    pub fn op_sizes_for(&self, query: &Query, part_bytes: f64) -> Vec<f64> {
+        self.op_flows_for(query, part_bytes)
+            .iter()
+            .map(|&(i, o)| i.max(o))
+            .collect()
     }
 }
 
@@ -138,66 +160,135 @@ impl SizeEstimator {
 /// PCIe+conversion rate, hence 1/4 of the transfer cost).
 pub const COALESCE_TRANS_SHARE: f64 = 0.25;
 
-/// Algorithm 2: map each operation to CPU or GPU, producing the
-/// physical plan (device + size annotation per op).
+/// Per-operation candidate costs — Alg. 2's Eq. 7/8/9 inputs, computed
+/// *before* any device decision. [`select_devices`] consumes these for
+/// the per-query greedy choice; the cross-query scheduler
+/// ([`crate::coordinator::schedule`]) consumes them to ration a shared
+/// GPU across queries with the exact same economics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpCandidate {
+    /// Logical node id (index into `query.ops`).
+    pub op_id: usize,
+    pub kind: OpKind,
+    /// Estimated per-partition input bytes (DAG-propagated).
+    pub est_in_bytes: f64,
+    /// Estimated per-partition output bytes.
+    pub est_out_bytes: f64,
+    /// Processed size `max(in, out)` — the Eq. 7/8 `Part`-derived size.
+    pub est_bytes: f64,
+    /// Eq. 7: `baseCost × (size / InfPT)`.
+    pub cpu_cost: f64,
+    /// Eq. 8: `baseCost × (InfPT / size)`.
+    pub gpu_cost: f64,
+    /// Eq. 9: `baseTransCost × (size / InfPT)` — one boundary crossing.
+    pub trans_cost: f64,
+}
+
+/// Candidate costing: Eq. 7/8/9 vectors for every op of `query`, using
+/// the learned size estimates. Pure — no device is chosen here.
 ///
-/// * `part_bytes` — `Part_(i,j)`: per-partition data size of this
-///   micro-batch (mean partition; Spark plans once per batch),
-/// * `inf_pt` — `InfPT_i` in bytes,
-/// * `base_trans` — `baseTransCost` (initially 0.1, §III-D).
-///
-/// Errors with [`Error::Plan`] on an empty or cyclic query instead of
-/// panicking — plan before `validate()` at your peril no longer.
-pub fn map_device(
+/// Errors with [`Error::Plan`] on an empty or cyclic query.
+pub fn op_candidates(
     query: &Query,
     part_bytes: f64,
     inf_pt: f64,
     base_trans: f64,
     estimator: &SizeEstimator,
+) -> Result<Vec<OpCandidate>> {
+    if query.ops.is_empty() {
+        return Err(Error::Plan("cannot plan an empty query".into()));
+    }
+    query.topo_order()?;
+    let flows = estimator.op_flows_for(query, part_bytes.max(1.0));
+    let inf = inf_pt.max(1.0);
+    Ok(query
+        .ops
+        .iter()
+        .map(|op| {
+            let kind = op.spec.kind();
+            let (fin, fout) = flows[op.id];
+            let size = fin.max(fout).max(1.0);
+            let base = BaseCost::cost(kind);
+            OpCandidate {
+                op_id: op.id,
+                kind,
+                est_in_bytes: fin,
+                est_out_bytes: fout,
+                est_bytes: size,
+                cpu_cost: base * (size / inf),
+                gpu_cost: base * (inf / size),
+                trans_cost: base_trans * (size / inf),
+            }
+        })
+        .collect())
+}
+
+/// Algorithm 2's traversal over precomputed [`OpCandidate`] costs: line
+/// 3's all-GPU default, then the greedy per-op choice with Eq. 9
+/// boundary placement via the shared [`transfer_boundaries`] rule.
+///
+/// `input_chunks` is the chunk count of the micro-batch entering the
+/// query: the coalesce staging share is charged on entering boundaries
+/// only for genuinely chunked inputs — a single-chunk input coalesces as
+/// an O(1) clone, mirroring [`DeviceModel::coalesce_time`]'s chunk-count
+/// gate. The *rule* is identical to the executor's; like the Eq. 7/8
+/// sizes, the chunk count is an estimate — the planner applies the
+/// micro-batch's count to every entering boundary, while the executor
+/// charges each op's actual assembled input (interior boundaries can
+/// differ once kernels re-chunk; per-op chunk-count propagation is a
+/// ROADMAP follow-up).
+///
+/// [`DeviceModel::coalesce_time`]: crate::devices::model::DeviceModel::coalesce_time
+pub fn select_devices(
+    query: &Query,
+    candidates: &[OpCandidate],
+    input_chunks: usize,
 ) -> Result<PhysicalPlan> {
     let n = query.ops.len();
     if n == 0 {
         return Err(Error::Plan("cannot plan an empty query".into()));
     }
+    if candidates.len() != n {
+        return Err(Error::Plan(format!(
+            "candidate costs cover {} ops, query has {n}",
+            candidates.len()
+        )));
+    }
     let order = query.topo_order()?;
     let consumers = query.consumers();
     // Line 3: initially, map every operation to the GPU.
     let mut plan = vec![Device::Gpu; n];
-    let sizes = estimator.op_sizes_for(query, part_bytes.max(1.0));
-    let inf = inf_pt.max(1.0);
 
     // Line 4: traverse from the child node (topological order).
     for &o in &order {
-        let kind = query.ops[o].spec.kind();
-        let size = sizes[o].max(1.0);
-        let base = BaseCost::cost(kind);
+        let c = &candidates[o];
 
         // Line 5 (Eqs. 7/8).
-        let mut cpu_cost = base * (size / inf);
-        let mut gpu_cost = base * (inf / size);
+        let mut cpu_cost = c.cpu_cost;
+        let mut gpu_cost = c.gpu_cost;
 
         // Lines 6-9 (Eq. 9): transition cost placement, via the shared
         // boundary rule. Producers are already mapped (topological
         // order); consumers still sit on the line-3 GPU default, so a
         // sink boundary is the only "leaving" case the planner sees —
         // exactly Alg. 2's first/last/device-switch placement.
-        let trans = base_trans * (size / inf);
         let (entering, leaving) =
             transfer_boundaries(&query.ops[o].inputs, &consumers[o], |i| {
                 plan[i] == Device::Cpu
             });
         if entering || leaving {
-            gpu_cost += trans;
-            if entering {
+            gpu_cost += c.trans_cost;
+            if entering && input_chunks > 1 {
                 // A GPU op's chunked input must be staged contiguously
                 // before crossing host→device (ChunkedBatch::coalesce):
                 // charge the staging share alongside Eq. 9, mirroring
                 // the executor's DeviceModel::coalesce_time so planner
-                // and executor see the same boundary economics.
-                gpu_cost += COALESCE_TRANS_SHARE * trans;
+                // and executor see the same boundary economics. A
+                // single-chunk input coalesces as an O(1) clone — free.
+                gpu_cost += COALESCE_TRANS_SHARE * c.trans_cost;
             }
         } else {
-            cpu_cost += trans;
+            cpu_cost += c.trans_cost;
         }
 
         // Lines 10-11.
@@ -213,10 +304,36 @@ pub fn map_device(
                 op_id: op.id,
                 kind: op.spec.kind(),
                 device: plan[op.id],
-                est_bytes: sizes[op.id],
+                est_bytes: candidates[op.id].est_bytes,
             })
             .collect(),
     })
+}
+
+/// Algorithm 2: map each operation to CPU or GPU, producing the
+/// physical plan (device + size annotation per op). Composes
+/// [`op_candidates`] (Eq. 7/8/9 costing) with [`select_devices`]
+/// (boundary placement + greedy choice).
+///
+/// * `part_bytes` — `Part_(i,j)`: per-partition data size of this
+///   micro-batch (mean partition; Spark plans once per batch),
+/// * `inf_pt` — `InfPT_i` in bytes,
+/// * `base_trans` — `baseTransCost` (initially 0.1, §III-D),
+/// * `input_chunks` — chunk count of the micro-batch (gates the
+///   entering coalesce share; see [`select_devices`]).
+///
+/// Errors with [`Error::Plan`] on an empty or cyclic query instead of
+/// panicking — plan before `validate()` at your peril no longer.
+pub fn map_device(
+    query: &Query,
+    part_bytes: f64,
+    inf_pt: f64,
+    base_trans: f64,
+    estimator: &SizeEstimator,
+    input_chunks: usize,
+) -> Result<PhysicalPlan> {
+    let candidates = op_candidates(query, part_bytes, inf_pt, base_trans, estimator)?;
+    select_devices(query, &candidates, input_chunks)
 }
 
 /// The FineStream-like comparator of §V-D / Fig. 10: device per operation
@@ -266,7 +383,7 @@ mod tests {
     fn small_partitions_map_to_cpu() {
         let q = spj();
         let est = SizeEstimator::new(q.len());
-        let plan = map_device(&q, 10.0 * KB, 150.0 * KB, 0.1, &est).unwrap();
+        let plan = map_device(&q, 10.0 * KB, 150.0 * KB, 0.1, &est, 4).unwrap();
         // Part ≪ InfPT ⇒ CPU cost (S/I) tiny, GPU cost (I/S) huge.
         assert!(plan.per_op.iter().all(|o| o.device == Device::Cpu), "{plan:?}");
     }
@@ -275,7 +392,7 @@ mod tests {
     fn large_partitions_map_to_gpu() {
         let q = spj();
         let est = SizeEstimator::new(q.len());
-        let plan = map_device(&q, 4096.0 * KB, 150.0 * KB, 0.1, &est).unwrap();
+        let plan = map_device(&q, 4096.0 * KB, 150.0 * KB, 0.1, &est, 4).unwrap();
         assert!(plan.per_op.iter().all(|o| o.device == Device::Gpu), "{plan:?}");
     }
 
@@ -288,7 +405,7 @@ mod tests {
             uses_window_state: false,
         };
         let est = SizeEstimator::new(0);
-        let r = map_device(&q, 10.0 * KB, 150.0 * KB, 0.1, &est);
+        let r = map_device(&q, 10.0 * KB, 150.0 * KB, 0.1, &est, 4);
         assert!(matches!(r, Err(Error::Plan(_))), "{r:?}");
     }
 
@@ -296,7 +413,7 @@ mod tests {
     fn plan_carries_size_estimates() {
         let q = spj();
         let est = SizeEstimator::new(q.len());
-        let plan = map_device(&q, 64.0 * KB, 150.0 * KB, 0.1, &est).unwrap();
+        let plan = map_device(&q, 64.0 * KB, 150.0 * KB, 0.1, &est, 4).unwrap();
         assert!(plan.per_op.iter().all(|o| o.est_bytes >= 64.0 * KB));
         assert_eq!(plan.per_op[3].kind, OpKind::Join);
     }
@@ -317,7 +434,7 @@ mod tests {
         }
         // Small source partition, but the estimated join input (50x) is
         // far beyond the inflection point: join goes GPU, scan stays CPU.
-        let plan = map_device(&q, 10.0 * KB, 150.0 * KB, 0.1, &est).unwrap();
+        let plan = map_device(&q, 10.0 * KB, 150.0 * KB, 0.1, &est, 4).unwrap();
         assert_eq!(plan.device(0), Device::Cpu);
         assert_eq!(plan.device(3), Device::Gpu, "{plan:?}");
     }
@@ -329,8 +446,8 @@ mod tests {
         // decides. With large base_trans the hop should not happen.
         let q = spj();
         let est = SizeEstimator::new(q.len());
-        let plan_cheap = map_device(&q, 160.0 * KB, 150.0 * KB, 0.0, &est).unwrap();
-        let plan_dear = map_device(&q, 160.0 * KB, 150.0 * KB, 10.0, &est).unwrap();
+        let plan_cheap = map_device(&q, 160.0 * KB, 150.0 * KB, 0.0, &est, 4).unwrap();
+        let plan_dear = map_device(&q, 160.0 * KB, 150.0 * KB, 10.0, &est, 4).unwrap();
         assert!(
             plan_dear.gpu_ops() <= plan_cheap.gpu_ops(),
             "{plan_cheap:?} vs {plan_dear:?}"
@@ -342,8 +459,8 @@ mod tests {
         let q = spj();
         let est = SizeEstimator::new(q.len());
         // Same partition size, two inflection points straddling it.
-        let low_inf = map_device(&q, 100.0 * KB, 50.0 * KB, 0.1, &est).unwrap();
-        let high_inf = map_device(&q, 100.0 * KB, 200.0 * KB, 0.1, &est).unwrap();
+        let low_inf = map_device(&q, 100.0 * KB, 50.0 * KB, 0.1, &est, 4).unwrap();
+        let high_inf = map_device(&q, 100.0 * KB, 200.0 * KB, 0.1, &est, 4).unwrap();
         assert!(low_inf.gpu_ops() > high_inf.gpu_ops());
     }
 
@@ -357,10 +474,65 @@ mod tests {
         let q = QueryBuilder::scan("s").build().unwrap();
         let est = SizeEstimator::new(q.len());
         let inf = 100.0 * KB;
-        let dear = map_device(&q, 1.5 * inf, inf, 0.4, &est).unwrap();
+        let dear = map_device(&q, 1.5 * inf, inf, 0.4, &est, 4).unwrap();
         assert_eq!(dear.device(0), Device::Cpu, "{dear:?}");
-        let cheap = map_device(&q, 1.5 * inf, inf, 0.3, &est).unwrap();
+        let cheap = map_device(&q, 1.5 * inf, inf, 0.3, &est, 4).unwrap();
         assert_eq!(cheap.device(0), Device::Gpu, "{cheap:?}");
+    }
+
+    #[test]
+    fn single_chunk_input_skips_coalesce_share() {
+        // Same dear-transition scenario as above, but the micro-batch is
+        // a single chunk: the real backend's coalesce is an O(1) clone,
+        // so the staging share is not charged and the op stays on GPU —
+        // mirroring DeviceModel::coalesce_time's chunk-count gate.
+        let q = QueryBuilder::scan("s").build().unwrap();
+        let est = SizeEstimator::new(q.len());
+        let inf = 100.0 * KB;
+        let single = map_device(&q, 1.5 * inf, inf, 0.4, &est, 1).unwrap();
+        assert_eq!(single.device(0), Device::Gpu, "{single:?}");
+        let chunked = map_device(&q, 1.5 * inf, inf, 0.4, &est, 2).unwrap();
+        assert_eq!(chunked.device(0), Device::Cpu, "{chunked:?}");
+    }
+
+    #[test]
+    fn candidate_selection_split_equals_composed_map_device() {
+        // op_candidates + select_devices is exactly map_device — the
+        // scheduler reuses, not re-derives, Eq. 7–9.
+        let q = spj();
+        let est = SizeEstimator::new(q.len());
+        for part in [10.0 * KB, 64.0 * KB, 400.0 * KB] {
+            let cands = op_candidates(&q, part, 150.0 * KB, 0.1, &est).unwrap();
+            let split = select_devices(&q, &cands, 4).unwrap();
+            let composed = map_device(&q, part, 150.0 * KB, 0.1, &est, 4).unwrap();
+            assert_eq!(split, composed);
+        }
+    }
+
+    #[test]
+    fn candidates_carry_eq789_costs() {
+        let q = spj();
+        let est = SizeEstimator::new(q.len());
+        let inf = 150.0 * KB;
+        let part = 64.0 * KB;
+        let cands = op_candidates(&q, part, inf, 0.1, &est).unwrap();
+        assert_eq!(cands.len(), q.len());
+        for c in &cands {
+            // Identity ratios: every op processes `part` bytes.
+            assert_eq!(c.est_bytes, part);
+            let base = BaseCost::cost(c.kind);
+            assert!((c.cpu_cost - base * part / inf).abs() < 1e-12);
+            assert!((c.gpu_cost - base * inf / part).abs() < 1e-12);
+            assert!((c.trans_cost - 0.1 * part / inf).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn select_devices_checks_candidate_arity() {
+        let q = spj();
+        let est = SizeEstimator::new(q.len());
+        let cands = op_candidates(&q, 64.0 * KB, 150.0 * KB, 0.1, &est).unwrap();
+        assert!(select_devices(&q, &cands[..1], 4).is_err());
     }
 
     #[test]

@@ -175,13 +175,21 @@ impl DeviceModel {
         self.pcie_lat + Duration::from_nanos((bytes * self.pcie_ns_per_byte) as u64)
     }
 
-    /// Contiguous staging time for `bytes` entering the device: the
-    /// explicit `ChunkedBatch::coalesce` a GPU-mapped op performs at a
-    /// host→device boundary (charged alongside [`transfer_time`] on
-    /// entering edges; leaving edges are already contiguous device-side).
+    /// Contiguous staging time for `bytes` entering the device as
+    /// `chunks` chunks: the explicit `ChunkedBatch::coalesce` a
+    /// GPU-mapped op performs at a host→device boundary (charged
+    /// alongside [`transfer_time`] on entering edges; leaving edges are
+    /// already contiguous device-side). A single-chunk input coalesces
+    /// as an O(1) clone — no per-byte staging copy — so it is free here,
+    /// matching the real backend ([`ChunkedBatch::coalesce`]'s
+    /// one-chunk short-circuit).
     ///
     /// [`transfer_time`]: DeviceModel::transfer_time
-    pub fn coalesce_time(&self, bytes: f64) -> Duration {
+    /// [`ChunkedBatch::coalesce`]: crate::engine::chunked::ChunkedBatch::coalesce
+    pub fn coalesce_time(&self, bytes: f64, chunks: usize) -> Duration {
+        if chunks <= 1 {
+            return Duration::ZERO;
+        }
         Duration::from_nanos((bytes * self.coalesce_ns_per_byte) as u64)
     }
 
@@ -297,11 +305,21 @@ mod tests {
         // must cost strictly less than the PCIe+conversion copy of the
         // same bytes, and scale linearly with no fixed latency.
         let s = 256.0 * KB;
-        assert!(m().coalesce_time(s) < m().transfer_time(s));
-        assert_eq!(m().coalesce_time(0.0), Duration::ZERO);
-        let one = m().coalesce_time(s).as_secs_f64();
-        let four = m().coalesce_time(4.0 * s).as_secs_f64();
+        assert!(m().coalesce_time(s, 4) < m().transfer_time(s));
+        assert_eq!(m().coalesce_time(0.0, 4), Duration::ZERO);
+        let one = m().coalesce_time(s, 4).as_secs_f64();
+        let four = m().coalesce_time(4.0 * s, 4).as_secs_f64();
         assert!((four / one - 4.0).abs() < 0.01, "nonlinear staging cost");
+    }
+
+    #[test]
+    fn single_chunk_coalesce_is_free() {
+        // A one-chunk (or empty) input crosses the boundary via an O(1)
+        // clone — no staging copy, no charge.
+        let s = 256.0 * KB;
+        assert_eq!(m().coalesce_time(s, 1), Duration::ZERO);
+        assert_eq!(m().coalesce_time(s, 0), Duration::ZERO);
+        assert!(m().coalesce_time(s, 2) > Duration::ZERO);
     }
 
     #[test]

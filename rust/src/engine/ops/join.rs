@@ -160,8 +160,26 @@ pub fn hash_join_chunks_pruned(
     }
     let out_schema = Schema::new(fields);
 
-    let mut out = ChunkedBatch::new(Arc::clone(&out_schema));
-    for pchunk in probe.chunks() {
+    // Materialization dominates join cost; the single-batch path fans
+    // its per-column gathers across cores. Mirror that here — tiny
+    // chunks must not serialize the probe path — at the same
+    // work threshold: many chunks fan out chunk-wise (each task probes
+    // and gathers one chunk), a lone big chunk fans out column-wise
+    // (exactly the single-batch strategy); never both at once, so the
+    // thread pool is not oversubscribed.
+    let width = probe_sel.len() + build_sel.len();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get().min(8))
+        .unwrap_or(1);
+    let chunk_parallel = threads > 1
+        && probe.num_chunks() > 1
+        && probe.rows() * width.max(1) > 200_000;
+
+    // Probe + gather one chunk: deterministic and independent per probe
+    // chunk (the shared hash table is read-only), producing at most one
+    // output chunk. `fan_columns` spreads this chunk's gathers across
+    // cores when the chunk itself carries enough work.
+    let probe_one = |pchunk: &Arc<ColumnBatch>, fan_columns: bool| -> Option<ColumnBatch> {
         let mut probe_idx: Vec<usize> = Vec::new();
         let mut build_pairs: Vec<(u32, u32)> = Vec::new();
         for_each_live_key(&pchunk.columns[pk_idx], &pchunk.validity, |row, key| {
@@ -173,20 +191,45 @@ pub fn hash_join_chunks_pruned(
             }
         });
         if probe_idx.is_empty() {
-            continue;
+            return None;
         }
-        let mut columns: Vec<Column> = probe_sel
+        enum Gather {
+            Probe(usize),
+            Build(usize),
+        }
+        let tasks: Vec<Gather> = probe_sel
             .iter()
-            .map(|&i| pchunk.columns[i].take(&probe_idx))
+            .map(|&i| Gather::Probe(i))
+            .chain(build_sel.iter().map(|&i| Gather::Build(i)))
             .collect();
-        for &i in &build_sel {
-            columns.push(take_pairs(build.chunks(), i, &build_pairs));
-        }
-        out.push(ColumnBatch {
+        let run = |t: &Gather| match *t {
+            Gather::Probe(i) => pchunk.columns[i].take(&probe_idx),
+            Gather::Build(i) => take_pairs(build.chunks(), i, &build_pairs),
+        };
+        let columns: Vec<Column> =
+            if fan_columns && probe_idx.len() * tasks.len() > 200_000 {
+                crate::util::exec::par_map(tasks, threads, |_, t| run(&t))
+            } else {
+                tasks.iter().map(run).collect()
+            };
+        Some(ColumnBatch {
             schema: Arc::clone(&out_schema),
             columns,
             validity: Validity::all_live(probe_idx.len()),
-        })?;
+        })
+    };
+
+    let out_chunks: Vec<Option<ColumnBatch>> = if chunk_parallel {
+        crate::util::exec::par_map(probe.chunks().to_vec(), threads, |_, chunk| {
+            probe_one(&chunk, false)
+        })
+    } else {
+        probe.chunks().iter().map(|c| probe_one(c, threads > 1)).collect()
+    };
+
+    let mut out = ChunkedBatch::new(Arc::clone(&out_schema));
+    for chunk in out_chunks.into_iter().flatten() {
+        out.push(chunk)?;
     }
     Ok(out)
 }
@@ -290,6 +333,31 @@ mod tests {
         let probe = side(("k", "pv"), vec![1], vec![1.0]);
         let keep = vec!["nope".to_string()];
         assert!(hash_join_pruned(&probe, &probe, "k", "k", Some(&keep), None).is_err());
+    }
+
+    #[test]
+    fn parallel_chunked_probe_matches_single_batch_join() {
+        // Enough rows x columns to cross the par_map threshold with many
+        // tiny chunks: the fanned-out probe must stay bit-identical (in
+        // row order) to the single-batch join over the coalesced sides.
+        let chunk_rows = 2_000;
+        let chunks = 30;
+        let mut probe = ChunkedBatch::new(
+            side(("k", "pv"), vec![], vec![]).schema,
+        );
+        for c in 0..chunks {
+            let keys: Vec<i32> = (0..chunk_rows).map(|r| ((c * 7 + r) % 100) as i32).collect();
+            let vals: Vec<f32> = (0..chunk_rows).map(|r| (c * chunk_rows + r) as f32).collect();
+            probe.push(side(("k", "pv"), keys, vals)).unwrap();
+        }
+        let build_keys: Vec<i32> = (0..200).map(|r| (r % 100) as i32).collect();
+        let build_vals: Vec<f32> = (0..200).map(|r| r as f32 / 10.0).collect();
+        let build = ChunkedBatch::from_batch(side(("k", "bv"), build_keys, build_vals));
+
+        let chunked = hash_join_chunks(&probe, &build, "k", "k").unwrap();
+        let whole = hash_join(&probe.coalesce(), &build.coalesce(), "k", "k").unwrap();
+        assert_eq!(chunked.rows(), whole.rows());
+        assert_eq!(chunked.coalesce(), whole);
     }
 
     #[test]

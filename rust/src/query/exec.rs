@@ -25,6 +25,20 @@
 //! A branching DAG can end in several sinks; [`ExecOutcome::result`] is
 //! the primary (highest-id) sink's output and
 //! [`ExecOutcome::branch_results`] carries the others.
+//!
+//! # Shared-device occupancy
+//!
+//! A session multiplexes many queries over **one** GPU per executor, so
+//! a simulated GPU op cannot assume the device is idle:
+//! [`execute_with_occupancy`] takes an externally-imposed device plan
+//! plus a [`GpuOccupancy`] arbiter. Before each simulated GPU op runs,
+//! the executor requests the device at the op's ready time on the
+//! query's local timeline; the arbiter (e.g. the session's shared
+//! [`GpuTimeline`]) returns the contention wait, which is charged into
+//! `proc` and surfaced separately as [`ExecOutcome::contention`] — so
+//! metrics, admission (Eq. 6) and the online optimizer all learn the
+//! *contended* latencies. [`execute`] is the uncontended form
+//! ([`NoContention`]).
 
 use crate::config::ExecBackend;
 use crate::devices::model::{DeviceModel, OpVolume};
@@ -48,6 +62,78 @@ pub struct ExecEnv<'a> {
     pub runtime: Option<&'a Runtime>,
 }
 
+/// Arbiter of simulated shared-GPU occupancy. The executor calls
+/// [`GpuOccupancy::request`] once per simulated GPU-mapped op with the
+/// op's ready time on the *query-local* timeline (elapsed `proc` so far)
+/// and the device-busy duration (kernel time + its boundary transfers);
+/// the arbiter returns the extra wait before the op may start.
+pub trait GpuOccupancy {
+    fn request(&mut self, local_start: Duration, busy: Duration) -> Duration;
+}
+
+/// An unshared device: every op starts the moment it is ready.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoContention;
+
+impl GpuOccupancy for NoContention {
+    fn request(&mut self, _local_start: Duration, _busy: Duration) -> Duration {
+        Duration::ZERO
+    }
+}
+
+/// FIFO single-device timeline shared across the queries of one
+/// micro-batch round: reservations serialize in request order (queries
+/// run in registration order, each walking its ops in topological
+/// order), so the device is never double-booked. The session charges
+/// every query's simulated GPU ops against one of these instead of
+/// per-query idle-GPU clocks. Deliberately *not* `Copy`: a timeline is
+/// mutable shared state — an accidental by-value use would fork it and
+/// silently double-book the device.
+#[derive(Clone, Debug, Default)]
+pub struct GpuTimeline {
+    free_at: Duration,
+    busy: Duration,
+    waited: Duration,
+    reservations: usize,
+}
+
+impl GpuTimeline {
+    pub fn new() -> GpuTimeline {
+        GpuTimeline::default()
+    }
+
+    /// When the device next becomes free (local-timeline offset).
+    pub fn free_at(&self) -> Duration {
+        self.free_at
+    }
+
+    /// Total reserved device-busy time.
+    pub fn busy(&self) -> Duration {
+        self.busy
+    }
+
+    /// Total contention wait handed out to requesters.
+    pub fn waited(&self) -> Duration {
+        self.waited
+    }
+
+    pub fn reservations(&self) -> usize {
+        self.reservations
+    }
+}
+
+impl GpuOccupancy for GpuTimeline {
+    fn request(&mut self, local_start: Duration, busy: Duration) -> Duration {
+        let start = self.free_at.max(local_start);
+        let wait = start - local_start;
+        self.free_at = start + busy;
+        self.busy += busy;
+        self.waited += wait;
+        self.reservations += 1;
+        wait
+    }
+}
+
 /// Per-operation execution record.
 #[derive(Clone, Debug)]
 pub struct OpTrace {
@@ -67,15 +153,19 @@ pub struct ExecOutcome {
     /// Outputs of the query's other sinks (empty for linear chains),
     /// as `(op_id, batch)` in ascending op id.
     pub branch_results: Vec<(usize, ChunkedBatch)>,
-    /// `Proc_i`: full processing-phase duration.
+    /// `Proc_i`: full processing-phase duration (contention included).
     pub proc: Duration,
     /// Host↔device transfer share of `proc` (incl. coalesce staging).
     pub transfer: Duration,
+    /// Share of `proc` spent waiting on the shared GPU timeline
+    /// (cross-query contention; zero under [`NoContention`]).
+    pub contention: Duration,
     /// Per-op traces in topological (= op id) order.
     pub traces: Vec<OpTrace>,
 }
 
-/// Execute `query` over `input` with `plan`.
+/// Execute `query` over `input` with `plan` on an unshared device
+/// ([`execute_with_occupancy`] with [`NoContention`]).
 ///
 /// `window` is the window-state snapshot (join build side / windowed
 /// aggregation scope) as a chunk list; `aux_bytes` its size for cost
@@ -87,6 +177,21 @@ pub fn execute(
     input: impl Into<ChunkedBatch>,
     window: Option<&ChunkedBatch>,
     env: &ExecEnv,
+) -> Result<ExecOutcome> {
+    execute_with_occupancy(query, plan, input, window, env, &mut NoContention)
+}
+
+/// Execute `query` over `input` with an externally-imposed `plan`,
+/// arbitrating simulated GPU ops through `occupancy` (see the module
+/// docs on shared-device occupancy). Data results are *identical* for
+/// every occupancy — contention only adds simulated wait time.
+pub fn execute_with_occupancy(
+    query: &Query,
+    plan: &PhysicalPlan,
+    input: impl Into<ChunkedBatch>,
+    window: Option<&ChunkedBatch>,
+    env: &ExecEnv,
+    occupancy: &mut dyn GpuOccupancy,
 ) -> Result<ExecOutcome> {
     let input = input.into();
     if query.ops.is_empty() {
@@ -103,6 +208,7 @@ pub fn execute(
         return Err(Error::Plan("need at least one core and one gpu".into()));
     }
     let aux_bytes = window.map(|w| w.alloc_bytes()).unwrap_or(0) as f64;
+    let aux_chunks = window.map(|w| w.num_chunks()).unwrap_or(0);
     let order = query.topo_order()?;
     let consumers = query.consumers();
 
@@ -115,6 +221,7 @@ pub fn execute(
 
     let mut proc = env.model.batch_fixed;
     let mut transfer_total = Duration::ZERO;
+    let mut contention_total = Duration::ZERO;
     let mut traces = Vec::with_capacity(query.ops.len());
 
     for &i in &order {
@@ -144,6 +251,7 @@ pub fn execute(
         // Cost models charge *allocated* bytes (dead rows still travel
         // through kernels and over PCIe until a shuffle compacts them).
         let in_bytes = current.alloc_bytes();
+        let in_chunks = current.num_chunks();
 
         let (next, measured) = match (env.backend, device) {
             (ExecBackend::Real, Device::Gpu) => {
@@ -201,12 +309,14 @@ pub fn execute(
 
         // Transfer charges (Alg. 2 placement, shared with the planner):
         // entering the device at a source op or on a CPU→GPU boundary —
-        // paying the contiguous coalesce staging plus the PCIe copy —
-        // and leaving at a sink op or on a GPU→CPU boundary (already
-        // contiguous device-side, PCIe only) — branch edges included.
-        // Simulated backend only (real GPU ops include marshaling in
-        // their measured time).
+        // paying the contiguous coalesce staging (chunk-count-aware: a
+        // single-chunk side coalesces as an O(1) clone, free) plus the
+        // PCIe copy — and leaving at a sink op or on a GPU→CPU boundary
+        // (already contiguous device-side, PCIe only) — branch edges
+        // included. Simulated backend only (real GPU ops include
+        // marshaling in their measured time).
         let mut op_transfer = Duration::ZERO;
+        let mut op_wait = Duration::ZERO;
         if env.backend == ExecBackend::Simulated && device == Device::Gpu {
             let (entering, leaving) =
                 transfer_boundaries(&op.inputs, &consumers[i], |n| {
@@ -214,16 +324,24 @@ pub fn execute(
                 });
             if entering {
                 let staged = in_bytes as f64 + op_aux;
-                op_transfer +=
-                    env.model.coalesce_time(staged) + env.model.transfer_time(staged);
+                op_transfer += env.model.coalesce_time(in_bytes as f64, in_chunks)
+                    + env.model.transfer_time(staged);
+                if op_aux > 0.0 {
+                    op_transfer += env.model.coalesce_time(op_aux, aux_chunks);
+                }
             }
             if leaving {
                 op_transfer += env.model.transfer_time(out_bytes as f64);
             }
+            // Shared-device arbitration: the op is ready at the local
+            // elapsed `proc`; it holds the device for its kernel time
+            // plus its boundary transfers.
+            op_wait = occupancy.request(proc, op_time + op_transfer);
         }
 
-        proc += op_time + op_transfer;
+        proc += op_wait + op_time + op_transfer;
         transfer_total += op_transfer;
+        contention_total += op_wait;
         traces.push(OpTrace {
             op_id: i,
             kind,
@@ -256,6 +374,7 @@ pub fn execute(
         branch_results: sink_outputs,
         proc,
         transfer: transfer_total,
+        contention: contention_total,
         traces,
     })
 }
@@ -497,7 +616,9 @@ mod tests {
         let model = DeviceModel::default();
         // GPU filter fanning out to two CPU selects: the filter leaves
         // the device once (one out-transfer), plus its entry (coalesce
-        // staging + in-transfer).
+        // staging + in-transfer). Two-chunk input: the entering coalesce
+        // is charged (a single-chunk input would cross via an O(1)
+        // clone, below).
         let q = QueryBuilder::scan("b")
             .window(WindowSpec::sliding(D::from_secs(30), D::from_secs(5)))
             .filter("v", Predicate::Ge(10.0))
@@ -512,14 +633,81 @@ mod tests {
             },
         )
         .unwrap();
-        let out = execute(&q, &plan, batch(100), None, &env(&model)).unwrap();
+        let mut input = ChunkedBatch::from_batch(batch(60));
+        input.push(batch(40)).unwrap();
+        let out = execute(&q, &plan, input, None, &env(&model)).unwrap();
         assert!(out.transfer > Duration::ZERO);
-        // The transfer equals coalesce(in) + entry(in) + exit(out) for
-        // the filter only.
+        // The transfer equals coalesce(in, 2 chunks) + entry(in) +
+        // exit(out) for the filter only (scan preserves the chunk list).
         let filter_trace = out.traces.iter().find(|t| t.op_id == 1).unwrap();
-        let expected = model.coalesce_time(filter_trace.in_bytes as f64)
+        let expected = model.coalesce_time(filter_trace.in_bytes as f64, 2)
             + model.transfer_time(filter_trace.in_bytes as f64)
             + model.transfer_time(filter_trace.out_bytes as f64);
         assert_eq!(out.transfer, expected);
+        assert!(model.coalesce_time(filter_trace.in_bytes as f64, 2) > Duration::ZERO);
+    }
+
+    #[test]
+    fn single_chunk_entry_skips_coalesce_charge() {
+        // The same plan over a one-chunk input pays PCIe but no staging
+        // copy: the real backend's coalesce of one chunk is an O(1)
+        // clone (ROADMAP chunk-count-aware coalesce charge).
+        let model = DeviceModel::default();
+        let q = query();
+        let plan = PhysicalPlan::from_devices(
+            &q,
+            &DevicePlan { per_op: vec![Device::Cpu, Device::Gpu, Device::Cpu] },
+        )
+        .unwrap();
+        let out = execute(&q, &plan, batch(100), None, &env(&model)).unwrap();
+        let filter_trace = out.traces.iter().find(|t| t.op_id == 1).unwrap();
+        let expected = model.transfer_time(filter_trace.in_bytes as f64)
+            + model.transfer_time(filter_trace.out_bytes as f64);
+        assert_eq!(out.transfer, expected, "single-chunk coalesce must be free");
+    }
+
+    #[test]
+    fn occupancy_waits_extend_proc_not_results() {
+        // A busy shared timeline delays GPU ops (contention observable
+        // in `proc`/`contention`) without perturbing data results.
+        let model = DeviceModel::default();
+        let q = query();
+        let plan = all(&q, Device::Gpu);
+        let free = execute(&q, &plan, batch(1000), None, &env(&model)).unwrap();
+
+        let mut timeline = GpuTimeline::new();
+        // Pre-book the device for one simulated second.
+        timeline.request(Duration::ZERO, Duration::from_secs(1));
+        let contended = execute_with_occupancy(
+            &q,
+            &plan,
+            batch(1000),
+            None,
+            &env(&model),
+            &mut timeline,
+        )
+        .unwrap();
+        assert!(contended.contention > Duration::ZERO);
+        assert_eq!(contended.proc, free.proc + contended.contention);
+        assert_eq!(free.contention, Duration::ZERO);
+        assert_eq!(contended.result, free.result);
+    }
+
+    #[test]
+    fn gpu_timeline_serializes_reservations() {
+        let mut t = GpuTimeline::new();
+        // First op: ready at 0, runs 2s.
+        assert_eq!(t.request(Duration::ZERO, Duration::from_secs(2)), Duration::ZERO);
+        // Second requester ready at 1s must wait 1s (device busy to 2s).
+        assert_eq!(
+            t.request(Duration::from_secs(1), Duration::from_secs(3)),
+            Duration::from_secs(1)
+        );
+        // Third ready at 10s: device free at 5s, no wait.
+        assert_eq!(t.request(Duration::from_secs(10), Duration::from_secs(1)), Duration::ZERO);
+        assert_eq!(t.free_at(), Duration::from_secs(11));
+        assert_eq!(t.busy(), Duration::from_secs(6));
+        assert_eq!(t.waited(), Duration::from_secs(1));
+        assert_eq!(t.reservations(), 3);
     }
 }

@@ -146,7 +146,7 @@ pub fn plan_string(workload: &str, part_bytes: f64, inf_pt: f64) -> Result<Strin
     let w = workloads::by_name(workload)?;
     let est = SizeEstimator::new(w.query.len());
     let plan =
-        crate::coordinator::planner::map_device(&w.query, part_bytes, inf_pt, 0.1, &est)?;
+        crate::coordinator::planner::map_device(&w.query, part_bytes, inf_pt, 0.1, &est, 2)?;
     Ok(w.query
         .ops
         .iter()

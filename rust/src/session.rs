@@ -15,21 +15,42 @@
 //!   admits against the *tightest* latency bound across that source's
 //!   queries, so a sliding-window query co-registered with a tumbling
 //!   one keeps the batch latency-bounded for both;
-//! * **per-query planning & windows** — every admitted micro-batch is
-//!   planned (`MapDevice`, Alg. 2) and executed once per query, each
-//!   with its own window state, [`SizeEstimator`], and metrics;
+//! * **joint planning on a shared device** — a multi-query micro-batch
+//!   is planned **jointly** across the source's queries
+//!   ([`crate::coordinator::schedule`]): the scheduler collects each
+//!   query's Eq. 7–9 candidate costs and rations the GPU by
+//!   benefit-per-GPU-second, because concurrent idle-GPU `MapDevice`
+//!   plans would double-book the device (single-query batches keep the
+//!   plain Alg. 2 path; `Config::co_schedule = false` ablates back to
+//!   independent plans);
+//! * **shared GPU timeline** — execution charges every query's
+//!   simulated GPU ops against one FIFO
+//!   [`GpuTimeline`](crate::query::exec::GpuTimeline) per device (per
+//!   executor on a cluster), so a batch round advances the clock by the
+//!   *contended makespan* across its queries, not per-query fictions;
+//!   the contended latencies are what metrics, Eq. 6 admission and the
+//!   Eq. 10 optimizer then learn from;
+//! * **per-query windows, estimators, metrics, sinks** — each query
+//!   keeps its own window state, [`SizeEstimator`], metrics, and
+//!   (optionally) registered sinks: [`Session::set_sink`] routes a
+//!   query's primary results, [`Session::set_branch_sink`] routes one
+//!   of its DAG's branch sinks ([`ExecOutcome::branch_results`] /
+//!   `ClusterOutcome::branch_results`), instead of dropping all but the
+//!   primary output;
 //! * **shared optimization** — one online regression (Eq. 10) fits the
 //!   inflection point from the primary query's history.
 //!
 //! One iteration: poll the source(s) → admission (or the baseline's
 //! static trigger) → collect the async optimizer's latest inflection
-//! point → per-query `MapDevice` planning → per-query execution →
-//! metrics update → window-state maintenance → submit the optimizer's
-//! next fit. Identical code drives the simulated clock (paper-scale
-//! experiments) and the wall clock (real PJRT runs).
+//! point → window upkeep + joint (or per-query) planning → execution on
+//! the shared timeline → metrics update → sink routing → submit the
+//! optimizer's next fit. Identical code drives the simulated clock
+//! (paper-scale experiments) and the wall clock (real PJRT runs).
 //!
 //! The free functions in [`crate::coordinator::driver`] remain as thin
 //! single-query shims over this type.
+//!
+//! [`ExecOutcome::branch_results`]: crate::query::exec::ExecOutcome::branch_results
 
 use crate::cluster;
 use crate::config::{Config, ExecBackend, Mode};
@@ -40,6 +61,7 @@ use crate::coordinator::checkpoint::{Checkpoint, CheckpointStore, QueryMetricSta
 use crate::coordinator::metrics::{BatchRecord, Metrics, PhaseTotals};
 use crate::coordinator::optimizer::{HistoryPoint, OnlineOptimizer};
 use crate::coordinator::planner::{map_device, static_preference_plan, SizeEstimator};
+use crate::coordinator::schedule::{self, QueryCandidate};
 use crate::devices::model::DeviceModel;
 use crate::devices::Device;
 use crate::engine::chunked::ChunkedBatch;
@@ -49,7 +71,7 @@ use crate::engine::sink::Sink;
 use crate::engine::window::{WindowKind, WindowState};
 use crate::error::{Error, Result};
 use crate::query::dag::{OpKind, Query};
-use crate::query::exec::{self, ExecEnv, OpTrace};
+use crate::query::exec::{self, ExecEnv, GpuTimeline, OpTrace};
 use crate::query::physical::PhysicalPlan;
 use crate::runtime::client::Runtime;
 use crate::sim::{Clock, SimClock, Time, WallClock};
@@ -121,6 +143,11 @@ struct QueryDef {
     query: Query,
     has_join: bool,
     size_est: SizeEstimator,
+    /// Owned primary sink ([`Session::set_sink`]).
+    sink: Option<Box<dyn Sink>>,
+    /// Owned branch sinks keyed by sink op id
+    /// ([`Session::set_branch_sink`]).
+    branch_sinks: Vec<(usize, Box<dyn Sink>)>,
 }
 
 /// One registered source: the workload whose generator/traffic feed it,
@@ -211,6 +238,8 @@ impl<'rt> Session<'rt> {
             has_join: has_join(&query),
             size_est: SizeEstimator::new(query.len()),
             query,
+            sink: None,
+            branch_sinks: Vec::new(),
         });
         self.sources.push(SourceDef {
             workload,
@@ -245,9 +274,80 @@ impl<'rt> Session<'rt> {
             has_join: has_join(&query),
             size_est: SizeEstimator::new(query.len()),
             query,
+            sink: None,
+            branch_sinks: Vec::new(),
         });
         self.sources[source].queries.push(qidx);
         Ok(QueryId(qidx))
+    }
+
+    /// Register an owned sink receiving `query`'s primary results on
+    /// every [`Session::run`] (in addition to any `run_with_sink`
+    /// delivery). Replaces a previously set sink; take it back with
+    /// [`Session::take_sink`].
+    pub fn set_sink(&mut self, query: QueryId, sink: Box<dyn Sink>) -> Result<()> {
+        let q = self.query_mut(query)?;
+        q.sink = Some(sink);
+        Ok(())
+    }
+
+    /// Register an owned sink for one of `query`'s *branch* sinks: the
+    /// DAG node `branch_op` must be a sink (no consumers) other than
+    /// the primary (highest-id) one. Its per-batch output —
+    /// `ExecOutcome::branch_results` / `ClusterOutcome::branch_results`,
+    /// previously dropped — is delivered there every run.
+    pub fn set_branch_sink(
+        &mut self,
+        query: QueryId,
+        branch_op: usize,
+        sink: Box<dyn Sink>,
+    ) -> Result<()> {
+        let q = self.query_mut(query)?;
+        let sinks = q.query.sinks();
+        let primary = *sinks.last().expect("validated query has a sink");
+        if branch_op == primary {
+            return Err(Error::Plan(format!(
+                "op {branch_op} is the primary sink — use set_sink for it"
+            )));
+        }
+        if !sinks.contains(&branch_op) {
+            return Err(Error::Plan(format!(
+                "op {branch_op} is not a sink of query `{}` (sinks: {sinks:?})",
+                q.name
+            )));
+        }
+        match q.branch_sinks.iter_mut().find(|(id, _)| *id == branch_op) {
+            Some(slot) => slot.1 = sink,
+            None => q.branch_sinks.push((branch_op, sink)),
+        }
+        Ok(())
+    }
+
+    /// Remove and return `query`'s registered primary sink, if any.
+    pub fn take_sink(&mut self, query: QueryId) -> Option<Box<dyn Sink>> {
+        self.queries.get_mut(query.0).and_then(|q| q.sink.take())
+    }
+
+    /// Remove and return the sink registered for `query`'s branch
+    /// `branch_op`, if any.
+    pub fn take_branch_sink(
+        &mut self,
+        query: QueryId,
+        branch_op: usize,
+    ) -> Option<Box<dyn Sink>> {
+        let q = self.queries.get_mut(query.0)?;
+        let pos = q.branch_sinks.iter().position(|(id, _)| *id == branch_op)?;
+        Some(q.branch_sinks.remove(pos).1)
+    }
+
+    fn query_mut(&mut self, query: QueryId) -> Result<&mut QueryDef> {
+        let n = self.queries.len();
+        self.queries.get_mut(query.0).ok_or_else(|| {
+            Error::Plan(format!(
+                "unknown query id {} (session has {n} registered queries)",
+                query.0
+            ))
+        })
     }
 
     /// Logical rewrites + validation (register-time, not per-run).
@@ -476,28 +576,23 @@ impl<'rt> Session<'rt> {
                 };
                 self.inf_pt = new_inf;
 
-                // ---- Per-query planning + execution.
-                struct Pending {
+                // ---- Window upkeep + execution input assembly, per
+                // query (before planning: the joint scheduler needs
+                // every query's input sizes at once). The snapshot is a
+                // chunk list — one shared chunk per in-window dataset
+                // (O(#datasets) Arc bumps, zero row copies, no
+                // copy-on-write even while a sink retains an old
+                // snapshot — see engine::window).
+                struct Staged {
                     qi: usize,
-                    result: ChunkedBatch,
-                    proc: Duration,
-                    traces: Vec<OpTrace>,
-                    map_device_time: Duration,
-                    gpu_ops: usize,
-                    total_ops: usize,
+                    input: ChunkedBatch,
+                    snapshot: Option<ChunkedBatch>,
                 }
-                let mut pending: Vec<Pending> = Vec::new();
-                let mut advance = Duration::ZERO;
                 let query_ids = self.sources[s].queries.clone();
+                let mut staged: Vec<Staged> = Vec::with_capacity(query_ids.len());
                 for &qi in &query_ids {
                     let qdef = &self.queries[qi];
                     let query = &qdef.query;
-
-                    // Window maintenance + execution input assembly. The
-                    // snapshot is a chunk list — one shared chunk per
-                    // in-window dataset (O(#datasets) Arc bumps, zero
-                    // row copies, no copy-on-write even while a sink
-                    // retains an old snapshot — see engine::window).
                     if let Some(newest) = batch.newest_event_time() {
                         windows[qi].evict(newest, &query.window);
                     }
@@ -520,32 +615,123 @@ impl<'rt> Session<'rt> {
                         } else {
                             (batch.chunked()?, windows[qi].snapshot_chunks()?)
                         };
+                    staged.push(Staged { qi, input, snapshot });
+                }
 
-                    // Query planning (MapDevice or a fixed policy).
-                    let t_plan = Instant::now();
-                    let plan: PhysicalPlan = match cfg.mode {
-                        Mode::LmStream => {
-                            // Part_(i,j): partition share of the data the
-                            // processing phase actually touches.
-                            let part =
-                                mean_partition_bytes(input.alloc_bytes(), cfg.num_cores);
-                            map_device(
-                                query,
-                                part,
-                                self.inf_pt,
-                                cfg.base_trans_cost,
-                                &qdef.size_est,
-                            )?
-                        }
-                        Mode::Baseline | Mode::AllGpu => {
-                            PhysicalPlan::uniform(query, Device::Gpu)
-                        }
-                        Mode::BaselineCpu | Mode::AllCpu => {
-                            PhysicalPlan::uniform(query, Device::Cpu)
-                        }
-                        Mode::StaticPreference => static_preference_plan(query),
-                    };
-                    let map_device_time = t_plan.elapsed();
+                // ---- Planning. A multi-query LMStream batch is planned
+                // jointly: the scheduler collects every query's Eq. 7–9
+                // candidate costs (the same SizeEstimator-fed path
+                // map_device runs on) and rations the shared GPU by
+                // benefit-per-GPU-second — concurrent idle-GPU MapDevice
+                // plans would double-book the device. Single-query
+                // batches, ablations (co_schedule = false) and fixed
+                // policies keep per-query plans. Cluster runs also keep
+                // per-query plans: the scheduler models one shared
+                // device, while a cluster executes 1/E row shares
+                // against per-executor GPUs — joint demotions tuned for
+                // the wrong topology could *worsen* the cluster
+                // makespan (topology-aware joint planning is a ROADMAP
+                // follow-up); per-executor timelines below still charge
+                // the real contention either way.
+                let t_plan = Instant::now();
+                let plans: Vec<PhysicalPlan> = if cfg.mode == Mode::LmStream
+                    && cfg.co_schedule
+                    && cfg.cluster.is_none()
+                    && staged.len() > 1
+                {
+                    let mut cands: Vec<QueryCandidate> =
+                        Vec::with_capacity(staged.len());
+                    for st in &staged {
+                        let qdef = &self.queries[st.qi];
+                        // Part_(i,j): partition share of the data the
+                        // processing phase actually touches.
+                        let part =
+                            mean_partition_bytes(st.input.alloc_bytes(), cfg.num_cores);
+                        let (aux_bytes, aux_chunks) = if qdef.has_join {
+                            match st.snapshot.as_ref() {
+                                Some(w) => (w.alloc_bytes() as f64, w.num_chunks()),
+                                None => (0.0, 0),
+                            }
+                        } else {
+                            (0.0, 0)
+                        };
+                        cands.push(QueryCandidate::build(
+                            &qdef.query,
+                            part,
+                            self.inf_pt,
+                            cfg.base_trans_cost,
+                            &qdef.size_est,
+                            st.input.num_chunks(),
+                            aux_bytes,
+                            aux_chunks,
+                        )?);
+                    }
+                    schedule::plan_joint(&cands, &self.model, cfg.num_cores, cfg.num_gpus)
+                        .plans
+                } else {
+                    let mut plans = Vec::with_capacity(staged.len());
+                    for st in &staged {
+                        let qdef = &self.queries[st.qi];
+                        let query = &qdef.query;
+                        let plan = match cfg.mode {
+                            Mode::LmStream => {
+                                let part = mean_partition_bytes(
+                                    st.input.alloc_bytes(),
+                                    cfg.num_cores,
+                                );
+                                map_device(
+                                    query,
+                                    part,
+                                    self.inf_pt,
+                                    cfg.base_trans_cost,
+                                    &qdef.size_est,
+                                    st.input.num_chunks(),
+                                )?
+                            }
+                            Mode::Baseline | Mode::AllGpu => {
+                                PhysicalPlan::uniform(query, Device::Gpu)
+                            }
+                            Mode::BaselineCpu | Mode::AllCpu => {
+                                PhysicalPlan::uniform(query, Device::Cpu)
+                            }
+                            Mode::StaticPreference => static_preference_plan(query),
+                        };
+                        plans.push(plan);
+                    }
+                    plans
+                };
+                let map_device_total = t_plan.elapsed();
+
+                // ---- Execution on the shared device timeline. Queries
+                // run concurrently from batch start (their CPU pipelines
+                // are independent Spark jobs) while all simulated GPU
+                // ops of this round serialize FIFO on one GpuTimeline
+                // per device (per executor on a cluster) — so the clock
+                // advances by the *contended makespan*, not the sum of
+                // per-query idle-device procs, and each query's proc
+                // carries its observable gpu_wait share.
+                struct Pending {
+                    qi: usize,
+                    result: ChunkedBatch,
+                    branch_results: Vec<(usize, ChunkedBatch)>,
+                    proc: Duration,
+                    gpu_wait: Duration,
+                    traces: Vec<OpTrace>,
+                    map_device_time: Duration,
+                    gpu_ops: usize,
+                    total_ops: usize,
+                }
+                let mut pending: Vec<Pending> = Vec::new();
+                let mut makespan = Duration::ZERO;
+                let mut timeline = GpuTimeline::new();
+                let mut cluster_timelines: Vec<GpuTimeline> = match &cfg.cluster {
+                    Some(spec) => vec![GpuTimeline::new(); spec.executors.len()],
+                    None => Vec::new(),
+                };
+                for (st, plan) in staged.into_iter().zip(plans.iter()) {
+                    let Staged { qi, input, snapshot } = st;
+                    let qdef = &self.queries[qi];
+                    let query = &qdef.query;
                     // A join's build side before any state: empty window.
                     let empty_window = ChunkedBatch::new(input.schema().clone());
                     let join_side = if qdef.has_join {
@@ -555,7 +741,7 @@ impl<'rt> Session<'rt> {
                     };
 
                     // Processing phase (single executor or cluster-wide).
-                    let (result, proc, traces): (ChunkedBatch, Duration, Vec<OpTrace>) =
+                    let (result, branch_results, proc, gpu_wait, traces) =
                         match &cfg.cluster {
                             None => {
                                 let env = ExecEnv {
@@ -565,20 +751,27 @@ impl<'rt> Session<'rt> {
                                     num_gpus: cfg.num_gpus,
                                     runtime,
                                 };
-                                let o =
-                                    exec::execute(query, &plan, input, join_side, &env)?;
-                                (o.result, o.proc, o.traces)
+                                let o = exec::execute_with_occupancy(
+                                    query,
+                                    plan,
+                                    input,
+                                    join_side,
+                                    &env,
+                                    &mut timeline,
+                                )?;
+                                (o.result, o.branch_results, o.proc, o.contention, o.traces)
                             }
                             Some(spec) => {
-                                let o = cluster::execute_on_cluster(
+                                let o = cluster::execute_on_cluster_with_occupancy(
                                     spec,
                                     query,
-                                    &plan,
+                                    plan,
                                     input,
                                     join_side,
                                     &self.model,
                                     cfg.backend,
                                     runtime,
+                                    Some(&mut cluster_timelines),
                                 )?;
                                 // Merge per-executor traces (sum byte
                                 // volumes per op) for the size estimator.
@@ -590,22 +783,45 @@ impl<'rt> Session<'rt> {
                                         m.out_bytes += t.out_bytes;
                                     }
                                 }
-                                (o.result, o.proc, merged)
+                                // The batch completes at the straggler,
+                                // so the wait that actually sits inside
+                                // this record's proc is the *straggler
+                                // executor's* contention (another
+                                // executor's larger wait can hide
+                                // entirely behind the barrier).
+                                let wait = o
+                                    .per_executor
+                                    .iter()
+                                    .max_by_key(|e| e.proc)
+                                    .map(|e| e.contention)
+                                    .unwrap_or(Duration::ZERO);
+                                (o.result, o.branch_results, o.proc, wait, merged)
                             }
                         };
-                    advance += proc + map_device_time;
+                    makespan = makespan.max(proc);
                     pending.push(Pending {
                         qi,
                         result,
+                        branch_results,
                         proc,
+                        gpu_wait,
                         traces,
-                        map_device_time,
+                        // Planning is one shared (possibly joint) pass:
+                        // charge it to the primary query only, like the
+                        // other shared phase costs.
+                        map_device_time: if qi == primary {
+                            map_device_total
+                        } else {
+                            Duration::ZERO
+                        },
                         gpu_ops: plan.gpu_ops(),
                         total_ops: query.len(),
                     });
                 }
 
-                clock.advance(advance + construct_acc[s] + opt_blocking);
+                clock.advance(
+                    makespan + map_device_total + construct_acc[s] + opt_blocking,
+                );
 
                 // ---- Metrics (Eqs. 4/5, Table IV) + sinks + learning.
                 let buffs: Vec<Duration> = batch
@@ -614,18 +830,37 @@ impl<'rt> Session<'rt> {
                     .map(|d| admitted_at.saturating_sub(d.created_at))
                     .collect();
                 for p in pending {
-                    deliver(p.qi, metrics[p.qi].batches(), &p.result, clock.now())?;
+                    let batch_index = metrics[p.qi].batches();
+                    let completed_at = clock.now();
+                    deliver(p.qi, batch_index, &p.result, completed_at)?;
+                    // Owned per-query sinks: primary result plus any
+                    // registered branch sinks (ExecOutcome/
+                    // ClusterOutcome branch_results — no longer dropped).
+                    {
+                        let qdef = &mut self.queries[p.qi];
+                        if let Some(sink) = qdef.sink.as_mut() {
+                            sink.deliver(batch_index, &p.result, completed_at)?;
+                        }
+                        for (op_id, sink) in qdef.branch_sinks.iter_mut() {
+                            if let Some((_, b)) =
+                                p.branch_results.iter().find(|(id, _)| *id == *op_id)
+                            {
+                                sink.deliver(batch_index, b, completed_at)?;
+                            }
+                        }
+                    }
                     // Shared (per-source) phase costs are charged to the
                     // primary query only, so phase totals don't double-
                     // count admission/optimizer time.
                     let shared = p.qi == primary;
                     let rec = BatchRecord {
-                        index: metrics[p.qi].batches(),
+                        index: batch_index,
                         admitted_at,
                         num_datasets: batch.num_datasets(),
                         bytes: batch_bytes,
                         max_buffering: Duration::ZERO, // filled by record
                         proc: p.proc,
+                        gpu_wait: p.gpu_wait,
                         max_latency: Duration::ZERO, // filled by record
                         inf_pt: self.inf_pt,
                         gpu_ops: p.gpu_ops,
@@ -849,6 +1084,166 @@ mod tests {
     fn invalid_config_rejected_at_session_creation() {
         let cfg = Config { num_cores: 0, ..Config::default() };
         assert!(Session::new(cfg).is_err());
+    }
+
+    /// A sink publishing its delivery count/rows through shared state —
+    /// observable after the session consumed the Box.
+    struct SharedCountSink {
+        batches: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+        rows: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    }
+
+    impl SharedCountSink {
+        fn new() -> (
+            SharedCountSink,
+            std::sync::Arc<std::sync::atomic::AtomicUsize>,
+            std::sync::Arc<std::sync::atomic::AtomicUsize>,
+        ) {
+            let batches = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+            let rows = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+            (
+                SharedCountSink {
+                    batches: std::sync::Arc::clone(&batches),
+                    rows: std::sync::Arc::clone(&rows),
+                },
+                batches,
+                rows,
+            )
+        }
+    }
+
+    impl Sink for SharedCountSink {
+        fn deliver(&mut self, _i: usize, result: &ChunkedBatch, _t: Time) -> Result<()> {
+            use std::sync::atomic::Ordering;
+            self.batches.fetch_add(1, Ordering::SeqCst);
+            self.rows.fetch_add(result.rows(), Ordering::SeqCst);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn registered_sinks_receive_per_query_results() {
+        use std::sync::atomic::Ordering;
+        let w = workloads::by_name("lr1s").unwrap();
+        let window = w.query.window;
+        let mut s = session(Mode::LmStream);
+        let first = s.register(w).unwrap();
+        let side = QueryBuilder::scan("side")
+            .window(window)
+            .filter("speed", Predicate::Lt(60.0))
+            .build()
+            .unwrap();
+        let second = s.register_shared(first, "side", side).unwrap();
+        let (sink, batches, _rows) = SharedCountSink::new();
+        s.set_sink(second, Box::new(sink)).unwrap();
+        let rs = s.run(Duration::from_secs(60)).unwrap();
+        assert_eq!(batches.load(Ordering::SeqCst), rs[1].batches.len());
+        assert!(batches.load(Ordering::SeqCst) > 0);
+        assert!(s.take_sink(second).is_some(), "sink still registered");
+        assert!(s.take_sink(second).is_none(), "sink already taken");
+    }
+
+    #[test]
+    fn branch_sinks_route_branch_results() {
+        use std::sync::atomic::Ordering;
+        let w = workloads::by_name("lr1s").unwrap();
+        let window = w.query.window;
+        let mut s = session(Mode::LmStream);
+        let first = s.register(w).unwrap();
+        // scan(0) -> filter(1) -> {select vehicle (2, branch sink),
+        // select speed (3, primary)}.
+        let fanout = QueryBuilder::scan("fanout")
+            .window(window)
+            .filter("speed", Predicate::Lt(80.0))
+            .branch(|b| b.select(&["vehicle"]))
+            .select(&["speed"])
+            .build()
+            .unwrap();
+        let second = s.register_shared(first, "fanout", fanout).unwrap();
+        let (sink, batches, rows) = SharedCountSink::new();
+        s.set_branch_sink(second, 2, Box::new(sink)).unwrap();
+        let rs = s.run(Duration::from_secs(60)).unwrap();
+        // Every executed batch delivered its branch output.
+        assert_eq!(batches.load(Ordering::SeqCst), rs[1].batches.len());
+        assert!(batches.load(Ordering::SeqCst) > 0);
+        assert!(rows.load(Ordering::SeqCst) > 0, "branch delivered no rows");
+        assert!(s.take_branch_sink(second, 2).is_some());
+        assert!(s.take_branch_sink(second, 2).is_none());
+    }
+
+    #[test]
+    fn branch_sink_registration_validated() {
+        let w = workloads::by_name("lr1s").unwrap();
+        let window = w.query.window;
+        let mut s = session(Mode::LmStream);
+        let first = s.register(w).unwrap();
+        let fanout = QueryBuilder::scan("fanout")
+            .window(window)
+            .filter("speed", Predicate::Lt(80.0))
+            .branch(|b| b.select(&["vehicle"]))
+            .select(&["speed"])
+            .build()
+            .unwrap();
+        let second = s.register_shared(first, "fanout", fanout).unwrap();
+        let sink = || Box::new(crate::engine::sink::NullSink);
+        // Interior (non-sink) node rejected.
+        assert!(s.set_branch_sink(second, 1, sink()).is_err());
+        // Primary sink rejected (that's set_sink's job).
+        assert!(s.set_branch_sink(second, 3, sink()).is_err());
+        // Unknown query id rejected.
+        assert!(s.set_sink(QueryId(9), sink()).is_err());
+        assert!(s.set_branch_sink(QueryId(9), 2, sink()).is_err());
+    }
+
+    #[test]
+    fn multi_query_batches_record_contended_gpu_waits() {
+        // Two GPU-using queries per batch on one simulated GPU: the
+        // shared timeline makes at least one query's records carry a
+        // nonzero gpu_wait, and every proc bounds its wait.
+        let w = workloads::by_name("lr1s").unwrap();
+        let window = w.query.window;
+        let mut s = session(Mode::AllGpu);
+        let first = s.register(w).unwrap();
+        let q = QueryBuilder::scan("side")
+            .window(window)
+            .filter("speed", Predicate::Lt(60.0))
+            .build()
+            .unwrap();
+        s.register_shared(first, "side", q).unwrap();
+        let rs = s.run(Duration::from_secs(60)).unwrap();
+        assert!(!rs[0].batches.is_empty());
+        for r in &rs {
+            for b in &r.batches {
+                assert!(b.gpu_wait <= b.proc, "wait beyond proc");
+            }
+        }
+        let waited: u32 = rs
+            .iter()
+            .flat_map(|r| r.batches.iter())
+            .map(|b| u32::from(b.gpu_wait > Duration::ZERO))
+            .sum();
+        assert!(waited > 0, "all-GPU two-query batches never contended");
+    }
+
+    #[test]
+    fn co_schedule_ablation_still_runs() {
+        // co_schedule = false keeps independent per-query plans but the
+        // shared timeline still arbitrates the device.
+        let w = workloads::by_name("lr1s").unwrap();
+        let window = w.query.window;
+        let cfg = Config { mode: Mode::LmStream, co_schedule: false, ..Config::default() };
+        let mut s = Session::new(cfg).unwrap();
+        let first = s.register(w).unwrap();
+        let q = QueryBuilder::scan("side")
+            .window(window)
+            .filter("speed", Predicate::Lt(60.0))
+            .build()
+            .unwrap();
+        s.register_shared(first, "side", q).unwrap();
+        let rs = s.run(Duration::from_secs(60)).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].batches.len(), rs[1].batches.len());
+        assert!(!rs[0].batches.is_empty());
     }
 
     #[test]

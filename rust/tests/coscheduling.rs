@@ -1,0 +1,370 @@
+//! Cross-query GPU co-scheduling: correctness and honesty.
+//!
+//! * **Differential** — co-scheduled execution (joint plans + shared
+//!   GPU timeline) is bit-identical to independently-planned execution
+//!   with an idle device: scheduling moves *time*, never rows.
+//! * **Property** — the joint plan's predicted makespan is never worse
+//!   than all-CPU and never exceeds the sum of the independent
+//!   per-query GPU plans, across sizes/inflection points/query mixes.
+//! * **Pinned contention scenario** (acceptance) — two GPU-leaning
+//!   queries on one GPU: independent planning double-books the device
+//!   (its idle-GPU latency prediction under-estimates the
+//!   shared-timeline simulation), while the joint plan respects the
+//!   shared timeline and achieves a lower simulated makespan.
+
+mod common;
+
+use common::fingerprint;
+use lmstream::config::ExecBackend;
+use lmstream::coordinator::planner::SizeEstimator;
+use lmstream::coordinator::schedule::{plan_joint, QueryCandidate};
+use lmstream::devices::model::DeviceModel;
+use lmstream::engine::chunked::ChunkedBatch;
+use lmstream::engine::ops::aggregate::AggSpec;
+use lmstream::engine::ops::filter::Predicate;
+use lmstream::engine::window::WindowSpec;
+use lmstream::query::exec::{self, ExecEnv, ExecOutcome, GpuTimeline, NoContention};
+use lmstream::query::physical::PhysicalPlan;
+use lmstream::query::{Query, QueryBuilder};
+use lmstream::source::stream::RowGen;
+use lmstream::workloads::linear_road::LinearRoadGen;
+use std::time::Duration;
+
+const KB: f64 = 1024.0;
+
+fn window() -> WindowSpec {
+    WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5))
+}
+
+/// A mixed bag of query shapes over the Linear Road schema: chain,
+/// branch, union, windowed join, aggregate.
+fn query_zoo() -> Vec<Query> {
+    vec![
+        QueryBuilder::scan("chain")
+            .window(window())
+            .filter("speed", Predicate::Ge(20.0))
+            .select(&["vehicle", "speed"])
+            .build()
+            .unwrap(),
+        QueryBuilder::scan("branchy")
+            .window(window())
+            .filter("speed", Predicate::Lt(80.0))
+            .branch(|b| b.select(&["vehicle"]))
+            .sort("speed", false)
+            .build()
+            .unwrap(),
+        QueryBuilder::scan("diamond")
+            .window(window())
+            .merge_union(|b| b.filter("speed", Predicate::Ge(55.0)))
+            .build()
+            .unwrap(),
+        QueryBuilder::scan("joiny")
+            .window(window())
+            .join_window("vehicle", "vehicle")
+            .select(&["vehicle", "speed"])
+            .build()
+            .unwrap(),
+        QueryBuilder::scan("aggy")
+            .window(window())
+            .shuffle("segment")
+            .aggregate(&["segment"], vec![AggSpec::avg("speed", "avgSpeed")], None)
+            .build()
+            .unwrap(),
+    ]
+}
+
+fn input(seed: u64, rows: usize, chunks: usize) -> ChunkedBatch {
+    let mut gen = LinearRoadGen::new(seed);
+    let per = rows / chunks;
+    let mut out = ChunkedBatch::from_batch(gen.generate(0, per));
+    for c in 1..chunks {
+        out.push(gen.generate(c as u64, per)).unwrap();
+    }
+    out
+}
+
+fn build_candidates<'a>(
+    queries: &'a [Query],
+    inputs: &[ChunkedBatch],
+    windows: &[Option<ChunkedBatch>],
+    part: f64,
+    inf: f64,
+) -> Vec<QueryCandidate<'a>> {
+    queries
+        .iter()
+        .zip(inputs)
+        .zip(windows)
+        .map(|((q, i), w)| {
+            let est = SizeEstimator::new(q.len());
+            let aux = w.as_ref().map(|w| w.alloc_bytes()).unwrap_or(0) as f64;
+            let aux_chunks = w.as_ref().map(|w| w.num_chunks()).unwrap_or(0);
+            QueryCandidate::build(q, part, inf, 0.1, &est, i.num_chunks(), aux, aux_chunks)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Execute every query against `plans`, arbitrating GPU ops through one
+/// shared timeline when `shared` (otherwise each query sees an idle
+/// device). Returns the outcomes plus the timeline.
+fn run_all(
+    queries: &[Query],
+    plans: &[PhysicalPlan],
+    inputs: &[ChunkedBatch],
+    windows: &[Option<ChunkedBatch>],
+    shared: bool,
+) -> (Vec<ExecOutcome>, GpuTimeline) {
+    let model = DeviceModel::default();
+    let env = ExecEnv {
+        model: &model,
+        backend: ExecBackend::Simulated,
+        num_cores: 12,
+        num_gpus: 1,
+        runtime: None,
+    };
+    let mut timeline = GpuTimeline::new();
+    let outcomes = queries
+        .iter()
+        .zip(plans)
+        .zip(inputs)
+        .zip(windows)
+        .map(|(((q, p), i), w)| {
+            if shared {
+                exec::execute_with_occupancy(q, p, i.clone(), w.as_ref(), &env, &mut timeline)
+                    .unwrap()
+            } else {
+                exec::execute_with_occupancy(
+                    q,
+                    p,
+                    i.clone(),
+                    w.as_ref(),
+                    &env,
+                    &mut NoContention,
+                )
+                .unwrap()
+            }
+        })
+        .collect();
+    (outcomes, timeline)
+}
+
+/// Differential: joint plans on the contended timeline produce exactly
+/// the rows the independent plans produce on idle devices — outputs
+/// must not depend on scheduling.
+#[test]
+fn coscheduled_outputs_bit_identical_to_independent() {
+    let queries = query_zoo();
+    let inputs: Vec<ChunkedBatch> =
+        (0..queries.len()).map(|k| input(11 + k as u64, 3000, 5)).collect();
+    let windows: Vec<Option<ChunkedBatch>> = queries
+        .iter()
+        .enumerate()
+        .map(|(k, q)| {
+            q.ops
+                .iter()
+                .any(|o| matches!(o.spec.kind(), lmstream::query::OpKind::Join))
+                .then(|| input(90 + k as u64, 6000, 6))
+        })
+        .collect();
+
+    for (part, inf) in [(8.0 * KB, 40.0 * KB), (60.0 * KB, 10.0 * KB), (200.0 * KB, 150.0 * KB)]
+    {
+        let cands = build_candidates(&queries, &inputs, &windows, part, inf);
+        let joint = plan_joint(&cands, &DeviceModel::default(), 12, 1);
+        let independent: Vec<PhysicalPlan> =
+            cands.iter().map(|c| c.independent.clone()).collect();
+
+        let (contended, timeline) = run_all(&queries, &joint.plans, &inputs, &windows, true);
+        let (idle, _) = run_all(&queries, &independent, &inputs, &windows, false);
+
+        for (a, b) in contended.iter().zip(&idle) {
+            assert_eq!(
+                fingerprint(&a.result.coalesce()),
+                fingerprint(&b.result.coalesce()),
+                "primary results diverged under co-scheduling"
+            );
+            assert_eq!(a.branch_results.len(), b.branch_results.len());
+            for ((ia, ba), (ib, bb)) in a.branch_results.iter().zip(&b.branch_results) {
+                assert_eq!(ia, ib);
+                assert_eq!(fingerprint(&ba.coalesce()), fingerprint(&bb.coalesce()));
+            }
+        }
+        // The timeline really arbitrated (it saw every GPU reservation).
+        let gpu_ops: usize = joint.plans.iter().map(|p| p.gpu_ops()).sum();
+        assert_eq!(timeline.reservations(), gpu_ops);
+    }
+}
+
+/// Property: across sizes, inflection points and query mixes, the joint
+/// prediction is bounded by all-CPU below-worst and the serialized sum
+/// of independent plans above.
+#[test]
+fn joint_makespan_bounded_by_all_cpu_and_independent_sum() {
+    let queries = query_zoo();
+    let model = DeviceModel::default();
+    let est_inputs: Vec<ChunkedBatch> =
+        (0..queries.len()).map(|k| input(31 + k as u64, 2000, 4)).collect();
+    let windows: Vec<Option<ChunkedBatch>> = queries.iter().map(|_| None).collect();
+    for part_kb in [2.0, 10.0, 50.0, 150.0, 600.0] {
+        for inf_kb in [5.0, 50.0, 300.0] {
+            for n in 1..=queries.len() {
+                let cands = build_candidates(
+                    &queries[..n],
+                    &est_inputs[..n],
+                    &windows[..n],
+                    part_kb * KB,
+                    inf_kb * KB,
+                );
+                let jp = plan_joint(&cands, &model, 12, 1);
+                let p = &jp.predicted;
+                assert!(
+                    p.makespan <= p.all_cpu_makespan + 1e-6,
+                    "part {part_kb}KB inf {inf_kb}KB n {n}: joint {} > all-CPU {}",
+                    p.makespan,
+                    p.all_cpu_makespan
+                );
+                let independent_sum: f64 = p.independent.iter().sum();
+                assert!(
+                    p.makespan <= independent_sum + 1e-6,
+                    "part {part_kb}KB inf {inf_kb}KB n {n}: joint {} > Σ independent {}",
+                    p.makespan,
+                    independent_sum
+                );
+                // Full assignment, every query covered.
+                assert_eq!(jp.plans.len(), n);
+                for (qc, plan) in cands.iter().zip(&jp.plans) {
+                    assert_eq!(plan.len(), qc.query.len());
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance pin: a contended two-query scenario.
+///
+/// 1. Independent planning double-books the GPU: the per-query idle-GPU
+///    prediction under-estimates what the shared-timeline simulation
+///    actually measures for those same plans.
+/// 2. The joint plan respects the shared GPU timeline (every simulated
+///    reservation went through it; waits are accounted in proc).
+/// 3. The joint plan's simulated makespan beats the independent plans'.
+/// 4. Results are bit-identical either way (differential equivalence).
+#[test]
+fn pinned_two_query_contention_scenario() {
+    let queries = vec![
+        QueryBuilder::scan("hot-a")
+            .window(window())
+            .filter("speed", Predicate::Ge(0.0))
+            .select(&["vehicle", "speed"])
+            .build()
+            .unwrap(),
+        QueryBuilder::scan("hot-b")
+            .window(window())
+            .filter("speed", Predicate::Ge(0.0))
+            .select(&["vehicle", "speed"])
+            .build()
+            .unwrap(),
+    ];
+    // ~600 KB per query (50 KB per partition over 12 cores): GPU is
+    // faster but the CPU is competitive — exactly the regime where two
+    // all-GPU plans queueing on one device lose to rationing.
+    let inputs: Vec<ChunkedBatch> = (0..2).map(|k| input(7 + k, 9000, 6)).collect();
+    let windows: Vec<Option<ChunkedBatch>> = vec![None, None];
+    let part = inputs[0].alloc_bytes() as f64 / 12.0;
+    // A small inflection point: Alg. 2 wants every op on the GPU.
+    let cands = build_candidates(&queries, &inputs, &windows, part, 10.0 * KB);
+    assert!(
+        cands.iter().all(|c| c.independent.gpu_ops() == c.query.len()),
+        "scenario needs GPU-hungry independent plans"
+    );
+
+    let joint = plan_joint(&cands, &DeviceModel::default(), 12, 1);
+    let independent: Vec<PhysicalPlan> =
+        cands.iter().map(|c| c.independent.clone()).collect();
+
+    // --- Simulate both worlds on the shared device.
+    let (ind_contended, ind_timeline) =
+        run_all(&queries, &independent, &inputs, &windows, true);
+    let (ind_idle, _) = run_all(&queries, &independent, &inputs, &windows, false);
+    let (joint_contended, joint_timeline) =
+        run_all(&queries, &joint.plans, &inputs, &windows, true);
+
+    // 1. Double-booking: the idle-GPU prediction (what per-query
+    //    MapDevice believes) under-estimates the contended simulation of
+    //    the very same plans — by at least 20% here, since the second
+    //    query queues behind the whole first chain.
+    let ind_sim_makespan =
+        ind_contended.iter().map(|o| o.proc).max().unwrap().as_secs_f64();
+    let ind_idle_makespan = ind_idle.iter().map(|o| o.proc).max().unwrap().as_secs_f64();
+    assert!(
+        ind_sim_makespan > ind_idle_makespan * 1.2,
+        "no double-booking: contended {ind_sim_makespan}s vs idle {ind_idle_makespan}s"
+    );
+    // The scheduler's own prediction agrees about the under-estimate.
+    let predicted_ind_max =
+        joint.predicted.independent.iter().copied().fold(0.0, f64::max);
+    assert!(
+        joint.predicted.independent_shared_makespan > predicted_ind_max * 1.2,
+        "prediction missed the double-booking"
+    );
+
+    // 2. The joint run respected the shared timeline: every simulated
+    //    GPU reservation passed through it, its busy time fits inside
+    //    the makespan, and waits surfaced in proc/contention.
+    let joint_sim_makespan =
+        joint_contended.iter().map(|o| o.proc).max().unwrap().as_secs_f64();
+    let joint_gpu_ops: usize = joint.plans.iter().map(|p| p.gpu_ops()).sum();
+    assert_eq!(joint_timeline.reservations(), joint_gpu_ops);
+    assert!(joint_timeline.busy().as_secs_f64() <= joint_sim_makespan + 1e-9);
+    assert_eq!(ind_timeline.reservations(), 2 * queries[0].len());
+    for o in &joint_contended {
+        assert!(o.proc >= o.contention);
+    }
+
+    // 3. Lower simulated makespan than the independent plans.
+    assert!(
+        joint_sim_makespan < ind_sim_makespan,
+        "joint {joint_sim_makespan}s !< independent {ind_sim_makespan}s"
+    );
+    // And the prediction saw it coming.
+    assert!(
+        joint.predicted.makespan < joint.predicted.independent_shared_makespan,
+        "prediction: joint {} !< independent-serialized {}",
+        joint.predicted.makespan,
+        joint.predicted.independent_shared_makespan
+    );
+
+    // 4. Result equivalence: co-scheduling moved time, not rows.
+    for (a, b) in joint_contended.iter().zip(&ind_idle) {
+        assert_eq!(
+            fingerprint(&a.result.coalesce()),
+            fingerprint(&b.result.coalesce())
+        );
+    }
+}
+
+/// The executor surfaces contention: a session-shaped sequential run of
+/// two all-GPU queries through one timeline charges the second query's
+/// wait into its proc, and the makespan matches the timeline tail.
+#[test]
+fn contention_delay_is_observable_and_consistent() {
+    let q = QueryBuilder::scan("obs")
+        .window(window())
+        .filter("speed", Predicate::Ge(0.0))
+        .build()
+        .unwrap();
+    let queries = vec![q.clone(), q];
+    let plans: Vec<PhysicalPlan> = queries
+        .iter()
+        .map(|q| PhysicalPlan::uniform(q, lmstream::devices::Device::Gpu))
+        .collect();
+    let inputs: Vec<ChunkedBatch> = (0..2).map(|k| input(40 + k, 4000, 4)).collect();
+    let windows = vec![None, None];
+    let (outs, timeline) = run_all(&queries, &plans, &inputs, &windows, true);
+    assert_eq!(outs[0].contention, Duration::ZERO, "first query sees a free device");
+    assert!(outs[1].contention > Duration::ZERO, "second query must queue");
+    assert!(timeline.waited() >= outs[1].contention);
+    // Its proc grew by exactly the waits it was handed.
+    let (idle, _) = run_all(&queries, &plans, &inputs, &windows, false);
+    assert_eq!(outs[1].proc, idle[1].proc + outs[1].contention);
+}

@@ -148,7 +148,7 @@ fn empty_query_planning_and_execution_are_plan_errors() {
     };
     // Planning an empty query must error, not underflow `n - 1`.
     let est = SizeEstimator::new(0);
-    let planned = map_device(&empty, 64.0 * 1024.0, 150.0 * 1024.0, 0.1, &est);
+    let planned = map_device(&empty, 64.0 * 1024.0, 150.0 * 1024.0, 0.1, &est, 2);
     assert!(matches!(planned, Err(Error::Plan(_))), "{planned:?}");
 
     // Executing one must error too.

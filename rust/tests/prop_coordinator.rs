@@ -199,11 +199,11 @@ fn prop_planner_total_deterministic_monotone() {
         let inf = g.f64_in(1024.0, 4.0 * 1024.0 * 1024.0);
         let part = g.f64_in(128.0, 8.0 * 1024.0 * 1024.0);
         let trans = g.f64_in(0.0, 1.0);
-        let p1 = map_device(&q, part, inf, trans, &est).expect("plan");
-        let p2 = map_device(&q, part, inf, trans, &est).expect("plan");
+        let p1 = map_device(&q, part, inf, trans, &est, 2).expect("plan");
+        let p2 = map_device(&q, part, inf, trans, &est, 2).expect("plan");
         prop_assert(p1 == p2, "non-deterministic plan")?;
         prop_assert(p1.per_op.len() == q.len(), "partial assignment")?;
-        let p_big = map_device(&q, part * 4.0, inf, trans, &est).expect("plan");
+        let p_big = map_device(&q, part * 4.0, inf, trans, &est, 2).expect("plan");
         prop_assert(
             p_big.gpu_ops() >= p1.gpu_ops(),
             format!("bigger partition lost GPU ops: {:?} -> {:?}", p1, p_big),
@@ -221,12 +221,12 @@ fn prop_planner_extremes() {
         let est = SizeEstimator::new(q.len());
         let inf = g.f64_in(64.0 * 1024.0, 1024.0 * 1024.0);
         let trans = g.f64_in(0.0, 0.5);
-        let tiny = map_device(&q, inf / 1000.0, inf, trans, &est).expect("plan");
+        let tiny = map_device(&q, inf / 1000.0, inf, trans, &est, 2).expect("plan");
         prop_assert(
             tiny.per_op.iter().all(|o| o.device == Device::Cpu),
             format!("tiny partitions must be all-CPU: {tiny:?}"),
         )?;
-        let huge = map_device(&q, inf * 1000.0, inf, trans, &est).expect("plan");
+        let huge = map_device(&q, inf * 1000.0, inf, trans, &est, 2).expect("plan");
         prop_assert(
             huge.per_op.iter().all(|o| o.device == Device::Gpu),
             format!("huge partitions must be all-GPU: {huge:?}"),

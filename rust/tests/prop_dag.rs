@@ -91,8 +91,8 @@ fn prop_planner_covers_any_valid_dag() {
         let est = SizeEstimator::new(q.len());
         let part = g.f64_in(1024.0, 4.0 * 1024.0 * 1024.0);
         let inf = g.f64_in(1024.0, 4.0 * 1024.0 * 1024.0);
-        let p1 = map_device(&q, part, inf, 0.1, &est).expect("plan");
-        let p2 = map_device(&q, part, inf, 0.1, &est).expect("plan");
+        let p1 = map_device(&q, part, inf, 0.1, &est, 2).expect("plan");
+        let p2 = map_device(&q, part, inf, 0.1, &est, 2).expect("plan");
         prop_assert(p1.len() == q.len(), "partial assignment")?;
         prop_assert(p1 == p2, "non-deterministic plan")?;
         prop_assert(

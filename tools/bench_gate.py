@@ -7,11 +7,14 @@ Usage: bench_gate.py BASELINE.json MEASURED.json
 Three checks, in decreasing order of machine-independence:
 
 1. ratio gates (always enforced when the baseline declares them):
-     - window_snapshot_speedup >= baseline's `min_window_snapshot_speedup`
-     - union_fanin_scaling     <= baseline's `max_union_fanin_scaling`
+     - window_snapshot_speedup    >= baseline's `min_window_snapshot_speedup`
+     - union_fanin_scaling        <= baseline's `max_union_fanin_scaling`
+     - coschedule_makespan_ratio  <= baseline's `max_coschedule_makespan_ratio`
    These are dimensionless and stable across runners — they encode the
    chunked-path claims (O(#datasets) snapshots; Union assembly cost
-   independent of total rows).
+   independent of total rows) and the co-scheduling claim (the joint
+   plan's predicted makespan never exceeds the independent plans
+   serialized on the shared GPU).
 
 2. per-bench mean gate (enforced per entry the baseline carries): each
    measured mean must sit within +/-20% of the baseline mean. Only
@@ -78,6 +81,18 @@ def main():
             )
         else:
             print(f"ok: union_fanin_scaling {got:.2f} <= {max_scaling}")
+    max_cosched = baseline.get("max_coschedule_makespan_ratio")
+    if max_cosched is not None:
+        got = measured.get("coschedule_makespan_ratio")
+        if got is None or got <= 0.0:
+            failures.append("coschedule_makespan_ratio missing from measured point")
+        elif got > max_cosched:
+            failures.append(
+                f"coschedule_makespan_ratio {got:.3f} > allowed {max_cosched} "
+                "(joint plan predicted worse than independent plans)"
+            )
+        else:
+            print(f"ok: coschedule_makespan_ratio {got:.3f} <= {max_cosched}")
 
     # 2. per-bench +/-20% mean gate against whatever the baseline carries.
     base_means = {
