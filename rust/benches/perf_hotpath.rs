@@ -17,6 +17,7 @@
 //! the working directory — the perf-trajectory artifact CI uploads and
 //! gates against the committed baseline (`tools/bench_gate.py`).
 
+use lmstream::cluster::DeviceTopology;
 use lmstream::config::{Config, Mode};
 use lmstream::coordinator::admission::Admission;
 use lmstream::coordinator::optimizer::{fit_inflection, FitJob, HistoryPoint};
@@ -111,12 +112,21 @@ fn main() {
             })
             .collect::<Vec<_>>()
     };
+    let topo = DeviceTopology::single(12, 1);
     b.bench("joint co-schedule (4 queries, 1 GPU)", || {
         let cands = make_cands();
-        plan_joint(&cands, &model, 12, 1).predicted.makespan
+        plan_joint(&cands, &model, &topo).predicted.makespan
+    });
+    // Topology-aware joint planning over the paper's 4-executor
+    // testbed: one simulated timeline per executor GPU.
+    let cluster_topo =
+        DeviceTopology::from_cluster(&lmstream::cluster::ClusterSpec::paper());
+    b.bench("joint co-schedule (4 queries, 4 executors)", || {
+        let cands = make_cands();
+        plan_joint(&cands, &model, &cluster_topo).predicted.makespan
     });
     let cands = make_cands();
-    let joint = plan_joint(&cands, &model, 12, 1);
+    let joint = plan_joint(&cands, &model, &topo);
     let cosched_ratio = if joint.predicted.independent_shared_makespan > 0.0 {
         joint.predicted.makespan / joint.predicted.independent_shared_makespan
     } else {

@@ -66,12 +66,17 @@ pub fn execute_on_cluster(
     )
 }
 
-/// [`execute_on_cluster`] routing a session's *joint* plan per executor:
-/// each executor's GPU is a shared device across the concurrent queries
-/// of one micro-batch round, so the caller hands one [`GpuTimeline`] per
-/// executor (`timelines.len() == cluster.executors.len()`) and this
+/// [`execute_on_cluster`] routing a session round's *joint* plan per
+/// executor: each executor's GPU is a shared device across the
+/// concurrent queries of one scheduling round (all sources), so the
+/// caller hands one [`GpuTimeline`] per executor (`timelines.len() ==
+/// cluster.executors.len()` — the same per-executor bank
+/// `schedule::plan_joint` simulated over the round's
+/// [`DeviceTopology`](crate::cluster::DeviceTopology)) and this
 /// function charges executor `i`'s simulated GPU ops against
-/// `timelines[i]`. With `None` every executor sees an idle device (the
+/// `timelines[i]`. Cluster rounds consume joint, topology-aware plans —
+/// the round's queries call this in the scheduler's grant order against
+/// one shared bank. With `None` every executor sees an idle device (the
 /// single-query behavior).
 #[allow(clippy::too_many_arguments)]
 pub fn execute_on_cluster_with_occupancy(

@@ -13,4 +13,4 @@ pub mod exec;
 pub mod topology;
 
 pub use exec::{execute_on_cluster, execute_on_cluster_with_occupancy, ClusterOutcome};
-pub use topology::{ClusterSpec, ExecutorSpec, NetworkModel};
+pub use topology::{ClusterSpec, DeviceTopology, ExecutorSpec, NetworkModel};

@@ -110,6 +110,54 @@ impl ClusterSpec {
     }
 }
 
+/// The device shape a scheduling round plans against: one entry per
+/// executor (its cores and GPUs). This is the **source of truth** for
+/// joint planning — `schedule::plan_joint` simulates one GPU timeline
+/// per executor of this topology, and the session allocates one
+/// execution [`GpuTimeline`](crate::query::exec::GpuTimeline) per entry.
+/// A single-node session is the 1-executor special case
+/// ([`DeviceTopology::single`]); a cluster session derives its topology
+/// from the [`ClusterSpec`] ([`DeviceTopology::from_cluster`]), so the
+/// planner's simulated device layout and the executor's arbitration can
+/// never disagree.
+#[derive(Clone, Debug)]
+pub struct DeviceTopology {
+    pub executors: Vec<ExecutorSpec>,
+}
+
+impl DeviceTopology {
+    /// Single-node topology: one executor owning all of the session's
+    /// cores and GPUs.
+    pub fn single(cores: usize, gpus: usize) -> DeviceTopology {
+        DeviceTopology { executors: vec![ExecutorSpec { cores, gpus }] }
+    }
+
+    /// The topology a cluster session executes on — one entry per
+    /// executor of the spec.
+    pub fn from_cluster(spec: &ClusterSpec) -> DeviceTopology {
+        DeviceTopology { executors: spec.executors.clone() }
+    }
+
+    pub fn num_executors(&self) -> usize {
+        self.executors.len()
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.executors.iter().map(|e| e.cores).sum()
+    }
+
+    /// Fraction of a micro-batch's rows executor `e` processes (the
+    /// cluster splits proportionally to core counts; a single node takes
+    /// everything).
+    pub fn row_share(&self, e: usize) -> f64 {
+        let total = self.total_cores();
+        if total == 0 {
+            return 0.0;
+        }
+        self.executors[e].cores as f64 / total as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,5 +198,23 @@ mod tests {
     #[test]
     fn coordination_grows_with_executors() {
         assert!(ClusterSpec::of(4).coordination() > ClusterSpec::of(1).coordination());
+    }
+
+    #[test]
+    fn topology_row_shares_sum_to_one() {
+        let t = DeviceTopology::from_cluster(&ClusterSpec::paper());
+        assert_eq!(t.num_executors(), 4);
+        assert_eq!(t.total_cores(), 48);
+        let sum: f64 = (0..t.num_executors()).map(|e| t.row_share(e)).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_node_topology_is_one_executor() {
+        let t = DeviceTopology::single(12, 2);
+        assert_eq!(t.num_executors(), 1);
+        assert_eq!(t.total_cores(), 12);
+        assert_eq!(t.executors[0].gpus, 2);
+        assert_eq!(t.row_share(0), 1.0);
     }
 }

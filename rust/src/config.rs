@@ -100,11 +100,15 @@ pub struct Config {
     pub initial_throughput: f64,
     /// Enable the online optimizer (Eq. 10). Disabled for ablations.
     pub online_optimizer: bool,
-    /// Joint cross-query planning (LMStream mode, multi-query sessions):
-    /// plan each micro-batch across all of a source's queries under one
-    /// shared-GPU budget instead of per-query idle-GPU `MapDevice`.
-    /// Disabled for ablations — execution still charges the shared GPU
-    /// timeline either way (the device is shared physics, not policy).
+    /// Joint cross-query planning (LMStream mode, multi-query rounds):
+    /// plan each scheduling round across *every* admitted query — all
+    /// sources, all executors — under the session's [`DeviceTopology`]
+    /// (one simulated GPU timeline per executor) instead of per-query
+    /// idle-GPU `MapDevice`. Disabled for ablations — execution still
+    /// charges the shared per-executor GPU timelines either way (the
+    /// device is shared physics, not policy).
+    ///
+    /// [`DeviceTopology`]: crate::cluster::DeviceTopology
     pub co_schedule: bool,
     /// Optimizer history cap (None = unbounded, the paper's default; the
     /// last-N policy is the paper's §III-E future-work extension).
@@ -173,6 +177,16 @@ impl Config {
         Ok(())
     }
 
+    /// The device topology a scheduling round plans and executes
+    /// against: one executor per cluster entry, or the single-node
+    /// 1-executor special case owning `num_cores`/`num_gpus`.
+    pub fn topology(&self) -> crate::cluster::DeviceTopology {
+        match &self.cluster {
+            Some(spec) => crate::cluster::DeviceTopology::from_cluster(spec),
+            None => crate::cluster::DeviceTopology::single(self.num_cores, self.num_gpus),
+        }
+    }
+
     /// Baseline preset (§IV/§V-A).
     pub fn baseline() -> Self {
         Config { mode: Mode::Baseline, ..Config::default() }
@@ -203,6 +217,20 @@ mod tests {
     fn rejects_zero_trigger() {
         let cfg = Config { trigger: Duration::ZERO, ..Config::default() };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn topology_mirrors_cluster_or_single_node() {
+        let single = Config::default();
+        let t = single.topology();
+        assert_eq!(t.num_executors(), 1);
+        assert_eq!(t.total_cores(), single.num_cores);
+        let clustered = Config {
+            cluster: Some(crate::cluster::ClusterSpec::paper()),
+            ..Config::default()
+        };
+        assert_eq!(clustered.topology().num_executors(), 4);
+        assert_eq!(clustered.topology().total_cores(), 48);
     }
 
     #[test]

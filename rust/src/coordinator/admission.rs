@@ -6,6 +6,13 @@
 //! slide time for sliding windows (Eq. 2), the running average of past
 //! max-latencies for tumbling windows (Eq. 3). Otherwise it is canceled
 //! and keeps buffering.
+//!
+//! The throughput feeding Eq. 6 comes from `Metrics::avg_throughput`,
+//! whose per-batch `proc`s are recorded by the session's scheduling
+//! rounds: a query co-scheduled with others (any source) carries its
+//! share of the *contended* round makespan, so admission estimates are
+//! honest under load — a loaded device makes batches admit sooner, not
+//! on idle-device fictions.
 
 use crate::engine::dataset::{Dataset, MicroBatch};
 use crate::engine::window::{WindowKind, WindowSpec};

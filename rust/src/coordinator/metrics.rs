@@ -9,6 +9,11 @@ use std::time::Duration;
 pub struct BatchRecord {
     /// Micro-batch index `i`.
     pub index: usize,
+    /// Session-wide scheduling round this batch executed in (monotone,
+    /// 1-based). Records sharing a `round` — across queries *and*
+    /// sources — were co-scheduled on the same per-executor device
+    /// timelines, so their `proc`s embed one contended round makespan.
+    pub round: usize,
     /// Admission time.
     pub admitted_at: Time,
     /// `NumDS_i`.
@@ -197,6 +202,7 @@ mod tests {
     fn rec(index: usize, bytes: usize, proc_s: f64) -> BatchRecord {
         BatchRecord {
             index,
+            round: index + 1,
             admitted_at: Time::ZERO,
             num_datasets: 1,
             bytes,

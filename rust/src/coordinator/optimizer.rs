@@ -1,7 +1,11 @@
 //! Online cost-model parameter optimization — §III-E, Eq. 10.
 //!
 //! After every micro-batch the coordinator records
-//! `(AvgThPut_i, MaxLat_i, InfPT_i)`; a background worker fits
+//! `(AvgThPut_i, MaxLat_i, InfPT_i)` — per source, from its primary
+//! query's latest record, whose `MaxLat` embeds the session round's
+//! *contended* makespan (shared per-executor GPU timelines), so the fit
+//! learns the inflection point of the loaded system, not of a private
+//! idle device; a background worker fits
 //!
 //! ```text
 //! InflectionPoint = β0 + β1·Throughput + β2·Latency        (Eq. 10)

@@ -152,6 +152,43 @@ impl SizeEstimator {
             .map(|&(i, o)| i.max(o))
             .collect()
     }
+
+    /// DAG-propagated per-op `(input, output)` **chunk-count** estimates
+    /// — the layout analog of [`SizeEstimator::op_flows_for`]. The scan
+    /// reads the micro-batch's `input_chunks`; each op's output layout
+    /// follows [`op_output_chunks`]'s kernel physics (per-chunk kernels
+    /// preserve, aggregate/sort materialize one chunk, expand multiplies
+    /// by the window factor); a Union's input is the *sum* of its
+    /// branches' chunk lists. Structural today (the chunked kernels'
+    /// layouts are deterministic, nothing to learn), but threaded through
+    /// the estimator so boundary pricing and size estimation stay one
+    /// per-op propagation pass. Index-aligned with `query.ops`.
+    ///
+    /// [`op_output_chunks`]: crate::devices::model::op_output_chunks
+    pub fn op_chunk_flows_for(
+        &self,
+        query: &Query,
+        input_chunks: usize,
+    ) -> Vec<(usize, usize)> {
+        let n = query.ops.len();
+        let expand = query.window.expand_factor() as usize;
+        let mut outs = vec![0usize; n];
+        let mut flows = vec![(0usize, 0usize); n];
+        // Storage order is topological (validate() rejects forward
+        // edges), exactly as in op_flows_for.
+        for op in &query.ops {
+            let cin: usize = if op.inputs.is_empty() {
+                input_chunks
+            } else {
+                op.inputs.iter().map(|&p| outs.get(p).copied().unwrap_or(0)).sum()
+            };
+            let cout =
+                crate::devices::model::op_output_chunks(op.spec.kind(), cin, expand);
+            flows[op.id] = (cin, cout);
+            outs[op.id] = cout;
+        }
+        flows
+    }
 }
 
 /// Contiguous-staging share of Eq. 9's transition cost, charged on
@@ -176,6 +213,12 @@ pub struct OpCandidate {
     pub est_out_bytes: f64,
     /// Processed size `max(in, out)` — the Eq. 7/8 `Part`-derived size.
     pub est_bytes: f64,
+    /// Estimated chunk count of the op's assembled input
+    /// ([`SizeEstimator::op_chunk_flows_for`]): gates the coalesce
+    /// staging share at this op's entering boundary — an interior op fed
+    /// by an aggregate/sort sees a single chunk however chunked the
+    /// micro-batch was.
+    pub est_in_chunks: usize,
     /// Eq. 7: `baseCost × (size / InfPT)`.
     pub cpu_cost: f64,
     /// Eq. 8: `baseCost × (InfPT / size)`.
@@ -185,7 +228,9 @@ pub struct OpCandidate {
 }
 
 /// Candidate costing: Eq. 7/8/9 vectors for every op of `query`, using
-/// the learned size estimates. Pure — no device is chosen here.
+/// the learned size estimates plus the DAG-propagated chunk layout
+/// seeded by the micro-batch's `input_chunks`. Pure — no device is
+/// chosen here.
 ///
 /// Errors with [`Error::Plan`] on an empty or cyclic query.
 pub fn op_candidates(
@@ -194,12 +239,14 @@ pub fn op_candidates(
     inf_pt: f64,
     base_trans: f64,
     estimator: &SizeEstimator,
+    input_chunks: usize,
 ) -> Result<Vec<OpCandidate>> {
     if query.ops.is_empty() {
         return Err(Error::Plan("cannot plan an empty query".into()));
     }
     query.topo_order()?;
     let flows = estimator.op_flows_for(query, part_bytes.max(1.0));
+    let chunk_flows = estimator.op_chunk_flows_for(query, input_chunks);
     let inf = inf_pt.max(1.0);
     Ok(query
         .ops
@@ -215,6 +262,7 @@ pub fn op_candidates(
                 est_in_bytes: fin,
                 est_out_bytes: fout,
                 est_bytes: size,
+                est_in_chunks: chunk_flows[op.id].0,
                 cpu_cost: base * (size / inf),
                 gpu_cost: base * (inf / size),
                 trans_cost: base_trans * (size / inf),
@@ -227,22 +275,20 @@ pub fn op_candidates(
 /// 3's all-GPU default, then the greedy per-op choice with Eq. 9
 /// boundary placement via the shared [`transfer_boundaries`] rule.
 ///
-/// `input_chunks` is the chunk count of the micro-batch entering the
-/// query: the coalesce staging share is charged on entering boundaries
-/// only for genuinely chunked inputs — a single-chunk input coalesces as
-/// an O(1) clone, mirroring [`DeviceModel::coalesce_time`]'s chunk-count
-/// gate. The *rule* is identical to the executor's; like the Eq. 7/8
-/// sizes, the chunk count is an estimate — the planner applies the
-/// micro-batch's count to every entering boundary, while the executor
-/// charges each op's actual assembled input (interior boundaries can
-/// differ once kernels re-chunk; per-op chunk-count propagation is a
-/// ROADMAP follow-up).
+/// The coalesce staging share is charged on entering boundaries only for
+/// genuinely chunked inputs — a single-chunk input coalesces as an O(1)
+/// clone, mirroring [`DeviceModel::coalesce_time`]'s chunk-count gate —
+/// using each op's **own** estimated input layout
+/// (`OpCandidate::est_in_chunks`, DAG-propagated from the micro-batch's
+/// chunk count through [`SizeEstimator::op_chunk_flows_for`]): an
+/// interior boundary after an aggregate or sort prices a single-chunk
+/// coalesce no matter how chunked the query input was, exactly as the
+/// executor charges each op's actual assembled input.
 ///
 /// [`DeviceModel::coalesce_time`]: crate::devices::model::DeviceModel::coalesce_time
 pub fn select_devices(
     query: &Query,
     candidates: &[OpCandidate],
-    input_chunks: usize,
 ) -> Result<PhysicalPlan> {
     let n = query.ops.len();
     if n == 0 {
@@ -278,7 +324,7 @@ pub fn select_devices(
             });
         if entering || leaving {
             gpu_cost += c.trans_cost;
-            if entering && input_chunks > 1 {
+            if entering && c.est_in_chunks > 1 {
                 // A GPU op's chunked input must be staged contiguously
                 // before crossing host→device (ChunkedBatch::coalesce):
                 // charge the staging share alongside Eq. 9, mirroring
@@ -316,11 +362,13 @@ pub fn select_devices(
 /// (boundary placement + greedy choice).
 ///
 /// * `part_bytes` — `Part_(i,j)`: per-partition data size of this
-///   micro-batch (mean partition; Spark plans once per batch),
+///   micro-batch (mean partition over the topology's total cores; Spark
+///   plans once per batch),
 /// * `inf_pt` — `InfPT_i` in bytes,
 /// * `base_trans` — `baseTransCost` (initially 0.1, §III-D),
-/// * `input_chunks` — chunk count of the micro-batch (gates the
-///   entering coalesce share; see [`select_devices`]).
+/// * `input_chunks` — chunk count of the micro-batch (seeds the per-op
+///   chunk propagation gating entering coalesce shares; see
+///   [`select_devices`]).
 ///
 /// Errors with [`Error::Plan`] on an empty or cyclic query instead of
 /// panicking — plan before `validate()` at your peril no longer.
@@ -332,8 +380,9 @@ pub fn map_device(
     estimator: &SizeEstimator,
     input_chunks: usize,
 ) -> Result<PhysicalPlan> {
-    let candidates = op_candidates(query, part_bytes, inf_pt, base_trans, estimator)?;
-    select_devices(query, &candidates, input_chunks)
+    let candidates =
+        op_candidates(query, part_bytes, inf_pt, base_trans, estimator, input_chunks)?;
+    select_devices(query, &candidates)
 }
 
 /// The FineStream-like comparator of §V-D / Fig. 10: device per operation
@@ -502,8 +551,8 @@ mod tests {
         let q = spj();
         let est = SizeEstimator::new(q.len());
         for part in [10.0 * KB, 64.0 * KB, 400.0 * KB] {
-            let cands = op_candidates(&q, part, 150.0 * KB, 0.1, &est).unwrap();
-            let split = select_devices(&q, &cands, 4).unwrap();
+            let cands = op_candidates(&q, part, 150.0 * KB, 0.1, &est, 4).unwrap();
+            let split = select_devices(&q, &cands).unwrap();
             let composed = map_device(&q, part, 150.0 * KB, 0.1, &est, 4).unwrap();
             assert_eq!(split, composed);
         }
@@ -515,11 +564,14 @@ mod tests {
         let est = SizeEstimator::new(q.len());
         let inf = 150.0 * KB;
         let part = 64.0 * KB;
-        let cands = op_candidates(&q, part, inf, 0.1, &est).unwrap();
+        let cands = op_candidates(&q, part, inf, 0.1, &est, 4).unwrap();
         assert_eq!(cands.len(), q.len());
         for c in &cands {
-            // Identity ratios: every op processes `part` bytes.
+            // Identity ratios: every op processes `part` bytes; the spj
+            // chain has no re-chunking op, so every input keeps the
+            // micro-batch's 4-chunk layout.
             assert_eq!(c.est_bytes, part);
+            assert_eq!(c.est_in_chunks, 4);
             let base = BaseCost::cost(c.kind);
             assert!((c.cpu_cost - base * part / inf).abs() < 1e-12);
             assert!((c.gpu_cost - base * inf / part).abs() < 1e-12);
@@ -531,8 +583,68 @@ mod tests {
     fn select_devices_checks_candidate_arity() {
         let q = spj();
         let est = SizeEstimator::new(q.len());
-        let cands = op_candidates(&q, 64.0 * KB, 150.0 * KB, 0.1, &est).unwrap();
-        assert!(select_devices(&q, &cands[..1], 4).is_err());
+        let cands = op_candidates(&q, 64.0 * KB, 150.0 * KB, 0.1, &est, 4).unwrap();
+        assert!(select_devices(&q, &cands[..1]).is_err());
+    }
+
+    #[test]
+    fn chunk_flows_propagate_re_chunking_ops() {
+        // scan (4) -> aggregate (in 4, out 1) -> sort (in 1, out 1).
+        let q = QueryBuilder::scan("agg")
+            .aggregate(&["k"], vec![], None)
+            .sort("x", false)
+            .build()
+            .unwrap();
+        let est = SizeEstimator::new(q.len());
+        let flows = est.op_chunk_flows_for(&q, 4);
+        assert_eq!(flows, vec![(4, 4), (4, 1), (1, 1)]);
+        // Diamond: the union's input sums both branch layouts.
+        let d = QueryBuilder::scan("d")
+            .merge_union(|b| b.filter("x", Predicate::Ge(0.0)))
+            .build()
+            .unwrap();
+        let est = SizeEstimator::new(d.len());
+        let flows = est.op_chunk_flows_for(&d, 3);
+        assert_eq!(flows[2].0, 6, "union input = sum of branch chunk lists");
+    }
+
+    /// The aggregate-then-GPU pin: an interior CPU→GPU boundary after a
+    /// re-chunking op (aggregate emits one chunk) must price the
+    /// coalesce share by the op's *own* single-chunk input — so the plan
+    /// is identical whether the micro-batch arrived as 1 chunk or 4, and
+    /// the downstream op stays on the GPU where charging the query
+    /// input's chunk count would have flipped it to CPU.
+    #[test]
+    fn interior_boundary_priced_by_op_output_chunk_count() {
+        // scan -> aggregate -> sort, with a learned 7.5x sort-side
+        // amplification: scan/aggregate see 0.2x the inflection point
+        // (firmly CPU), the sort's processed size is 1.5x — the margin
+        // where the staging share is decisive (see
+        // entering_boundary_charges_coalesce_staging_share).
+        let q = QueryBuilder::scan("agg-gpu")
+            .aggregate(&["k"], vec![], None)
+            .sort("x", false)
+            .build()
+            .unwrap();
+        let mut est = SizeEstimator::new(q.len());
+        for _ in 0..10 {
+            est.observe(&[
+                OpTrace { op_id: 0, kind: OpKind::Scan, device: Device::Cpu, time: Duration::ZERO, in_bytes: 10_000, out_bytes: 10_000 },
+                OpTrace { op_id: 1, kind: OpKind::Aggregate, device: Device::Cpu, time: Duration::ZERO, in_bytes: 10_000, out_bytes: 10_000 },
+                OpTrace { op_id: 2, kind: OpKind::Sort, device: Device::Cpu, time: Duration::ZERO, in_bytes: 10_000, out_bytes: 75_000 },
+            ]);
+        }
+        let inf = 100.0 * KB;
+        let chunked = map_device(&q, 0.2 * inf, inf, 0.4, &est, 4).unwrap();
+        let single = map_device(&q, 0.2 * inf, inf, 0.4, &est, 1).unwrap();
+        assert_eq!(chunked, single, "interior boundaries must not see the input layout");
+        assert_eq!(chunked.device(0), Device::Cpu, "{chunked:?}");
+        assert_eq!(chunked.device(1), Device::Cpu, "{chunked:?}");
+        assert_eq!(
+            chunked.device(2),
+            Device::Gpu,
+            "sort's single-chunk (post-aggregate) input must not be charged staging: {chunked:?}"
+        );
     }
 
     #[test]

@@ -1,47 +1,71 @@
 //! Cross-query GPU co-scheduling — the shared-device layer between the
-//! session and the per-query planner.
+//! session's scheduling rounds and the per-query planner.
 //!
 //! `MapDevice` (Alg. 2) maps each op of *one* query assuming the GPU is
-//! idle. Since the session multiplexes many queries per micro-batch,
-//! concurrent independent plans double-book the device: every plan's
-//! latency prediction (and therefore Eq. 6 admission and the Eq. 10
-//! history) is wrong exactly when the system is loaded. This module
-//! plans one micro-batch **jointly across all of a source's queries**:
+//! idle. Since a session round multiplexes many queries — across
+//! sources, over the executors of a [`DeviceTopology`] — concurrent
+//! independent plans double-book the devices: every plan's latency
+//! prediction (and therefore Eq. 6 admission and the Eq. 10 history) is
+//! wrong exactly when the system is loaded. This module plans one
+//! scheduling round **jointly across every admitted query**:
 //!
 //! 1. collect per-query candidates — each op's Eq. 7/8/9 cost vectors
 //!    from [`planner::op_candidates`] (the same `SizeEstimator`-fed path
 //!    `map_device` runs on) plus the independently-selected plan;
 //! 2. convert candidates to *seconds* through the calibrated
-//!    [`DeviceModel`] — mirroring exactly how the executor charges
-//!    simulated time (per-core CPU shares, coalesced GPU volumes divided
-//!    across `num_gpus`, PCIe + chunk-count-aware coalesce staging at
-//!    the [`transfer_boundaries`] the planner and executor share);
+//!    [`DeviceModel`], **per executor of the topology** — mirroring
+//!    exactly how the cluster executor charges simulated time: each
+//!    executor processes its core-proportional row share (per-core CPU
+//!    volumes are share-invariant; GPU volumes scale with the share and
+//!    divide across that executor's GPUs), window sides are broadcast in
+//!    full, and PCIe + chunk-count-aware coalesce staging land at the
+//!    [`transfer_boundaries`] the planner and executor share (each op's
+//!    *own* propagated input layout gates the staging charge). A
+//!    single-node session is the 1-executor topology — the old
+//!    one-device model is the special case, not the rule;
 //! 3. solve the shared-GPU-budget assignment greedily by
 //!    **GPU-benefit-per-GPU-second**: starting all-CPU, repeatedly flip
 //!    the op (among those the per-query planner itself would put on the
-//!    GPU) whose flip buys the largest reduction in summed completion
-//!    time per second of device time it books — respecting Alg. 2's
+//!    GPU) whose flip buys the largest completion-time reduction per
+//!    second of device time it books — respecting Alg. 2's
 //!    transfer/coalesce boundary economics at every evaluation — while
-//!    never letting the predicted makespan grow.
+//!    never letting the predicted makespan grow;
+//! 4. choose the **grant order**: FIFO registration order is just one
+//!    permutation of the round's queries on the per-executor timelines.
+//!    A shortest-GPU-segment-first pass (queries sorted by total device
+//!    busy time, ascending) is evaluated against FIFO for every
+//!    candidate assignment, and the better order is emitted as
+//!    [`Prediction::order`] — the session executes the round in that
+//!    order, so the executor's FIFO-in-request-order timelines realize
+//!    exactly the predicted serialization.
 //!
 //! The result is a [`JointPlan`]: one [`PhysicalPlan`] per query plus a
-//! [`Prediction`] with the **serialized GPU timeline** ([`GpuSlot`]s) the
-//! assignment implies. The prediction uses the same FIFO arbitration as
-//! the executor's [`GpuTimeline`](crate::query::exec::GpuTimeline), so
-//! predicted and simulated contention
-//! agree by construction:
+//! [`Prediction`] with the **serialized per-executor GPU timelines**
+//! ([`GpuSlot`]s, each tagged with its executor). The prediction uses
+//! the same FIFO arbitration as the executor's
+//! [`GpuTimeline`](crate::query::exec::GpuTimeline) (one per executor),
+//! so predicted and simulated contention agree by construction:
 //!
 //! * `makespan ≤ all-CPU makespan` — the greedy starts all-CPU and only
-//!   accepts non-worsening moves (and the final plan is the best of
-//!   {greedy, independent-under-timeline, all-CPU});
-//! * `makespan ≤ Σ independent per-query plan costs` — under FIFO
+//!   accepts non-worsening moves;
+//! * `makespan ≤ fifo_makespan` — the emitted (assignment, order) pair
+//!   is the argmin over a pool that includes every assignment under
+//!   plain FIFO; [`Prediction::fifo_makespan`] is what the
+//!   registration-order scheduler would have emitted;
+//! * `fifo_makespan ≤ Σ independent per-query plan costs` — under FIFO
 //!   serialization a query waits at most the total device time of the
 //!   queries ahead of it.
 //!
+//! The predicted makespan covers the processing chains (batch overhead +
+//! op/transfer/contention time); a cluster round's network exchanges and
+//! master coordination are plan-independent per-round constants, so they
+//! cancel out of every comparison the scheduler makes.
+//!
 //! Data results never depend on the schedule (pinned by the
-//! differential test in `rust/tests/coscheduling.rs`) — co-scheduling
+//! differential tests in `rust/tests/coscheduling.rs`) — co-scheduling
 //! moves *time*, not rows.
 
+use crate::cluster::DeviceTopology;
 use crate::coordinator::planner::{self, OpCandidate};
 use crate::devices::model::{DeviceModel, OpVolume};
 use crate::devices::Device;
@@ -62,8 +86,9 @@ pub struct QueryCandidate<'a> {
     pub candidates: Vec<OpCandidate>,
     /// The plan Alg. 2 picks for this query alone (idle-GPU assumption).
     pub independent: PhysicalPlan,
-    /// Chunk count of the micro-batch entering the query (gates the
-    /// coalesce staging charge, as everywhere else).
+    /// Chunk count of the micro-batch entering the query (seeds the
+    /// per-op chunk propagation gating coalesce staging, as everywhere
+    /// else).
     pub input_chunks: usize,
     /// Window-state bytes the query's join reads (0 without a join).
     pub aux_bytes: f64,
@@ -88,9 +113,15 @@ impl<'a> QueryCandidate<'a> {
         aux_bytes: f64,
         aux_chunks: usize,
     ) -> Result<QueryCandidate<'a>> {
-        let candidates =
-            planner::op_candidates(query, part_bytes, inf_pt, base_trans, estimator)?;
-        let independent = planner::select_devices(query, &candidates, input_chunks)?;
+        let candidates = planner::op_candidates(
+            query,
+            part_bytes,
+            inf_pt,
+            base_trans,
+            estimator,
+            input_chunks,
+        )?;
+        let independent = planner::select_devices(query, &candidates)?;
         Ok(QueryCandidate {
             query,
             candidates,
@@ -102,14 +133,16 @@ impl<'a> QueryCandidate<'a> {
     }
 }
 
-/// One reservation on the predicted serialized GPU timeline.
+/// One reservation on a predicted serialized per-executor GPU timeline.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct GpuSlot {
-    /// Index into the candidate list (session registration order).
+    /// Index into the candidate list (round staging order).
     pub query: usize,
     /// Logical op id within that query.
     pub op_id: usize,
-    /// Reservation start/end, seconds from micro-batch start.
+    /// Executor whose GPU the reservation occupies.
+    pub exec: usize,
+    /// Reservation start/end, seconds from round start.
     pub start: f64,
     pub end: f64,
 }
@@ -117,22 +150,32 @@ pub struct GpuSlot {
 /// What the scheduler predicts for the assignment it emits.
 #[derive(Clone, Debug, Default)]
 pub struct Prediction {
-    /// Per-query completion under the shared timeline (seconds from
-    /// micro-batch start), in candidate order.
+    /// Per-query completion under the shared per-executor timelines
+    /// (seconds from round start), in candidate order.
     pub completions: Vec<f64>,
-    /// max(completions): the joint plan's predicted batch makespan.
+    /// max(completions): the joint plan's predicted round makespan.
     pub makespan: f64,
-    /// Total GPU-busy seconds the joint plan books.
+    /// Total GPU-busy seconds the joint plan books (all executors).
     pub gpu_busy: f64,
+    /// The grant order the session should execute the round in
+    /// (candidate indices). FIFO is `[0, 1, …]`; a reordered round puts
+    /// shorter total-GPU queries first where that shrinks the makespan.
+    pub order: Vec<usize>,
+    /// Makespan the plain FIFO registration-order scheduler would have
+    /// emitted (its best assignment, FIFO grants). `makespan ≤
+    /// fifo_makespan` by construction.
+    pub fifo_makespan: f64,
     /// Per-query completion each *independent* plan predicts for itself
-    /// (idle-GPU assumption) — what per-query `map_device` believes.
+    /// (idle devices) — what per-query `map_device` believes.
     pub independent: Vec<f64>,
     /// Makespan the independent plans actually reach once their GPU ops
-    /// serialize on the shared timeline (the double-booking corrected).
+    /// serialize FIFO on the shared timelines (the double-booking
+    /// corrected).
     pub independent_shared_makespan: f64,
     /// Makespan with every op of every query on the CPU.
     pub all_cpu_makespan: f64,
-    /// The serialized device reservations of the emitted assignment.
+    /// The serialized per-executor device reservations of the emitted
+    /// (assignment, order) pair.
     pub timeline: Vec<GpuSlot>,
 }
 
@@ -144,9 +187,10 @@ pub struct JointPlan {
     pub predicted: Prediction,
 }
 
-/// Per-op seconds profile, mirroring the executor's simulated charging
-/// (`query::exec`): CPU per-core share, GPU coalesced volume over
-/// `num_gpus`, PCIe + staging at boundaries.
+/// Per-op seconds profile on one executor, mirroring the executor's
+/// simulated charging (`query::exec` / `cluster::exec`): CPU per-core
+/// share (share-invariant), GPU at the executor's coalesced row-share
+/// volume over its GPUs, PCIe + staging at boundaries.
 #[derive(Clone, Copy, Debug)]
 struct OpSecs {
     cpu: f64,
@@ -156,18 +200,20 @@ struct OpSecs {
     coalesce: f64,
 }
 
-/// Precomputed per-query scheduling context.
+/// Precomputed per-query scheduling context: DAG shape plus one
+/// `OpSecs` vector per executor of the topology.
 struct ChainCtx {
     order: Vec<usize>,
     inputs: Vec<Vec<usize>>,
     consumers: Vec<Vec<usize>>,
-    secs: Vec<OpSecs>,
+    /// `secs[e][o]`: op `o`'s seconds profile on executor `e`.
+    secs: Vec<Vec<OpSecs>>,
 }
 
-/// A query's predicted execution shape under one device assignment: the
-/// CPU time run before each GPU reservation, then a trailing CPU tail.
-/// `segments[k] = (cpu_before, gpu_busy, op_id)`; the final element has
-/// `gpu_busy == 0`.
+/// One (query, executor) predicted execution shape under a device
+/// assignment: the CPU time run before each GPU reservation, then a
+/// trailing CPU tail. `segments[k] = (cpu_before, gpu_busy, op_id)`; the
+/// final element has `gpu_busy == 0`.
 struct Chain {
     segments: Vec<(f64, f64, usize)>,
 }
@@ -175,17 +221,21 @@ struct Chain {
 fn op_secs(
     cand: &OpCandidate,
     aux: f64,
-    input_chunks: usize,
     aux_chunks: usize,
     model: &DeviceModel,
-    num_cores: usize,
-    num_gpus: usize,
+    total_cores: usize,
+    row_share: f64,
+    gpus: usize,
 ) -> OpSecs {
-    // Estimates are per partition (Part_(i,j)); the executor charges the
-    // whole batch: CPU ops at per-core volume, GPU ops at the coalesced
-    // total divided across the GPUs.
-    let total_in = cand.est_in_bytes * num_cores as f64;
-    let total_out = cand.est_out_bytes * num_cores as f64;
+    // Estimates are per partition (Part over the topology's total
+    // cores); this executor's share of the batch is `row_share` of the
+    // total. CPU ops charge per-core volume (identical on every
+    // executor: share/cores_e == batch/total_cores); GPU ops charge the
+    // executor's coalesced share divided across its GPUs — exactly the
+    // volumes `cluster::execute_on_cluster` hands `query::exec`.
+    let share_in = cand.est_in_bytes * total_cores as f64 * row_share;
+    let share_out = cand.est_out_bytes * total_cores as f64 * row_share;
+    // The window side is broadcast: every executor reads it in full.
     let op_aux = match cand.kind {
         OpKind::Join => aux,
         _ => 0.0,
@@ -198,30 +248,26 @@ fn op_secs(
         )
         .as_secs_f64();
     let gpu = model
-        .op_time(Device::Gpu, cand.kind, OpVolume::new(total_in, total_out, op_aux))
+        .op_time(Device::Gpu, cand.kind, OpVolume::new(share_in, share_out, op_aux))
         .as_secs_f64()
-        / num_gpus as f64;
-    let staged = total_in + op_aux;
+        / gpus as f64;
+    let staged = share_in + op_aux;
     OpSecs {
         cpu,
         gpu,
         trans_in: model.transfer_time(staged).as_secs_f64(),
-        trans_out: model.transfer_time(total_out).as_secs_f64(),
+        trans_out: model.transfer_time(share_out).as_secs_f64(),
         // Both the batch side and (for joins) the window side stage at
-        // the boundary, each by its own real chunk count — a
-        // single-chunk side coalesces for free, exactly as the
-        // executor charges it.
-        coalesce: model.coalesce_time(total_in, input_chunks).as_secs_f64()
+        // the boundary, each by its own layout: the batch side by the
+        // op's *propagated* input chunk count (an aggregate/sort
+        // upstream collapses it to one — free), the window side by the
+        // snapshot's — exactly as the executor charges it.
+        coalesce: model.coalesce_time(share_in, cand.est_in_chunks).as_secs_f64()
             + model.coalesce_time(op_aux, aux_chunks).as_secs_f64(),
     }
 }
 
-fn chain_ctx(
-    qc: &QueryCandidate,
-    model: &DeviceModel,
-    num_cores: usize,
-    num_gpus: usize,
-) -> ChainCtx {
+fn chain_ctx(qc: &QueryCandidate, model: &DeviceModel, topo: &DeviceTopology) -> ChainCtx {
     // QueryCandidate::build already ran topo_order()? via
     // op_candidates, so an invalid DAG here is a caller bug — fail
     // loudly rather than lay out a silently wrong chain.
@@ -232,44 +278,49 @@ fn chain_ctx(
     let inputs: Vec<Vec<usize>> =
         qc.query.ops.iter().map(|op| op.inputs.clone()).collect();
     let consumers = qc.query.consumers();
-    let secs = qc
-        .candidates
-        .iter()
-        .map(|c| {
-            op_secs(
-                c,
-                qc.aux_bytes,
-                qc.input_chunks,
-                qc.aux_chunks,
-                model,
-                num_cores,
-                num_gpus,
-            )
+    let total_cores = topo.total_cores();
+    let secs = (0..topo.num_executors())
+        .map(|e| {
+            qc.candidates
+                .iter()
+                .map(|c| {
+                    op_secs(
+                        c,
+                        qc.aux_bytes,
+                        qc.aux_chunks,
+                        model,
+                        total_cores,
+                        topo.row_share(e),
+                        topo.executors[e].gpus,
+                    )
+                })
+                .collect()
         })
         .collect();
     ChainCtx { order, inputs, consumers, secs }
 }
 
-/// Lay one query's ops out on its local timeline under `devices`,
-/// charging boundary transfers exactly where the executor does
-/// ([`transfer_boundaries`] over the *full* assignment).
-fn chain(ctx: &ChainCtx, devices: &[Device], batch_fixed: f64) -> Chain {
+/// Lay one query's ops out on executor `e`'s local timeline under
+/// `devices`, charging boundary transfers exactly where the executor
+/// does ([`transfer_boundaries`] over the *full* assignment).
+fn chain(ctx: &ChainCtx, e: usize, devices: &[Device], batch_fixed: f64) -> Chain {
+    let secs = &ctx.secs[e];
     let mut segments = Vec::new();
     let mut cpu_acc = batch_fixed;
     for &o in &ctx.order {
         match devices[o] {
-            Device::Cpu => cpu_acc += ctx.secs[o].cpu,
+            Device::Cpu => cpu_acc += secs[o].cpu,
             Device::Gpu => {
                 let (entering, leaving) =
                     transfer_boundaries(&ctx.inputs[o], &ctx.consumers[o], |i| {
                         devices[i] == Device::Cpu
                     });
-                let mut busy = ctx.secs[o].gpu;
+                let mut busy = secs[o].gpu;
                 if entering {
-                    busy += ctx.secs[o].coalesce + ctx.secs[o].trans_in;
+                    busy += secs[o].coalesce + secs[o].trans_in;
                 }
                 if leaving {
-                    busy += ctx.secs[o].trans_out;
+                    busy += secs[o].trans_out;
                 }
                 segments.push((cpu_acc, busy, o));
                 cpu_acc = 0.0;
@@ -280,32 +331,51 @@ fn chain(ctx: &ChainCtx, devices: &[Device], batch_fixed: f64) -> Chain {
     Chain { segments }
 }
 
-/// FIFO shared-timeline simulation — the predictive twin of the
-/// executor's [`GpuTimeline`](crate::query::exec::GpuTimeline)
-/// arbitration: queries run concurrently from
-/// batch start (in candidate order), each GPU reservation starts at
-/// `max(ready, device free)`.
-fn simulate(chains: &[Chain]) -> (Vec<f64>, f64, f64, Vec<GpuSlot>) {
-    let mut cursor = 0.0f64;
+/// One query's chains across every executor of the topology.
+fn query_chains(ctx: &ChainCtx, devices: &[Device], batch_fixed: f64) -> Vec<Chain> {
+    (0..ctx.secs.len()).map(|e| chain(ctx, e, devices, batch_fixed)).collect()
+}
+
+/// Simulation result of one (assignment, grant order) pair.
+struct Sim {
+    completions: Vec<f64>,
+    makespan: f64,
+    busy: f64,
+    slots: Vec<GpuSlot>,
+}
+
+/// FIFO-per-executor shared-timeline simulation — the predictive twin of
+/// the executor's [`GpuTimeline`](crate::query::exec::GpuTimeline)
+/// arbitration: the round's queries run concurrently from round start,
+/// each executor runs its row-share chain of every query, and grants on
+/// each executor's timeline serialize in `grant_order` (the order the
+/// session executes the round in). A query completes at its slowest
+/// executor chain (the barrier).
+fn simulate(chains: &[Vec<Chain>], num_execs: usize, grant_order: &[usize]) -> Sim {
+    let mut cursors = vec![0.0f64; num_execs];
     let mut busy_total = 0.0f64;
-    let mut completions = Vec::with_capacity(chains.len());
+    let mut completions = vec![0.0f64; chains.len()];
     let mut slots = Vec::new();
-    for (qi, chain) in chains.iter().enumerate() {
-        let mut local = 0.0f64;
-        for &(cpu, busy, op_id) in &chain.segments {
-            local += cpu;
-            if busy > 0.0 {
-                let start = cursor.max(local);
-                local = start + busy;
-                cursor = local;
-                busy_total += busy;
-                slots.push(GpuSlot { query: qi, op_id, start, end: local });
+    for &qi in grant_order {
+        let mut comp = 0.0f64;
+        for (e, chain) in chains[qi].iter().enumerate() {
+            let mut local = 0.0f64;
+            for &(cpu, busy, op_id) in &chain.segments {
+                local += cpu;
+                if busy > 0.0 {
+                    let start = cursors[e].max(local);
+                    local = start + busy;
+                    cursors[e] = local;
+                    busy_total += busy;
+                    slots.push(GpuSlot { query: qi, op_id, exec: e, start, end: local });
+                }
             }
+            comp = comp.max(local);
         }
-        completions.push(local);
+        completions[qi] = comp;
     }
     let makespan = completions.iter().copied().fold(0.0, f64::max);
-    (completions, makespan, busy_total, slots)
+    Sim { completions, makespan, busy: busy_total, slots }
 }
 
 /// Σ completions — the greedy's tie-breaking objective (mean latency).
@@ -313,92 +383,95 @@ fn total(completions: &[f64]) -> f64 {
     completions.iter().sum()
 }
 
-/// Plan one micro-batch jointly across `cands` (a source's queries, in
-/// registration order) under one shared GPU. See the module docs for the
-/// algorithm and the guarantees on [`Prediction::makespan`].
-pub fn plan_joint(
-    cands: &[QueryCandidate],
-    model: &DeviceModel,
-    num_cores: usize,
-    num_gpus: usize,
-) -> JointPlan {
-    if cands.is_empty() {
-        return JointPlan { plans: Vec::new(), predicted: Prediction::default() };
+/// Shortest-GPU-segment-first grant order: queries sorted by total
+/// booked device time ascending (ties keep registration order), so
+/// short device users are not queued behind a long occupant they would
+/// otherwise idle on.
+fn shortest_first_order(chains: &[Vec<Chain>]) -> Vec<usize> {
+    let busy: Vec<f64> = chains
+        .iter()
+        .map(|per_exec| {
+            per_exec
+                .iter()
+                .flat_map(|c| c.segments.iter())
+                .map(|&(_, b, _)| b)
+                .sum()
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..chains.len()).collect();
+    order.sort_by(|&a, &b| busy[a].total_cmp(&busy[b]).then(a.cmp(&b)));
+    order
+}
+
+/// Evaluate an assignment's chains: FIFO always; when `reorder`, also
+/// shortest-GPU-first, returning the better (makespan, then Σ
+/// completions; FIFO wins ties).
+fn evaluate(chains: &[Vec<Chain>], num_execs: usize, reorder: bool) -> (Sim, Vec<usize>) {
+    let fifo: Vec<usize> = (0..chains.len()).collect();
+    let sim_fifo = simulate(chains, num_execs, &fifo);
+    if !reorder {
+        return (sim_fifo, fifo);
     }
-    let batch_fixed = model.batch_fixed.as_secs_f64();
-    let ctxs: Vec<ChainCtx> =
-        cands.iter().map(|qc| chain_ctx(qc, model, num_cores, num_gpus)).collect();
+    let alt = shortest_first_order(chains);
+    if alt == fifo {
+        return (sim_fifo, fifo);
+    }
+    let sim_alt = simulate(chains, num_execs, &alt);
+    if sim_alt.makespan < sim_fifo.makespan - EPS
+        || (sim_alt.makespan <= sim_fifo.makespan + EPS
+            && total(&sim_alt.completions) < total(&sim_fifo.completions) - EPS)
+    {
+        (sim_alt, alt)
+    } else {
+        (sim_fifo, fifo)
+    }
+}
 
-    // Reference assignments.
-    let independent_devices: Vec<Vec<Device>> = cands
+/// Greedy CPU→GPU rationing over `movable` (the ops the per-query
+/// planner itself mapped to GPU — the scheduler rations the devices, it
+/// never overrides Alg. 2's per-op economics), evaluated under FIFO
+/// grants or (with `reorder`) the better of FIFO/shortest-first. Starts
+/// all-CPU; never worsens the evaluated makespan.
+fn greedy_assign(
+    ctxs: &[ChainCtx],
+    movable: &[(usize, usize)],
+    num_execs: usize,
+    batch_fixed: f64,
+    reorder: bool,
+) -> Vec<Vec<Device>> {
+    let mut devices: Vec<Vec<Device>> = ctxs
         .iter()
-        .map(|qc| qc.independent.per_op.iter().map(|o| o.device).collect())
+        .map(|ctx| vec![Device::Cpu; ctx.inputs.len()])
         .collect();
-    let ind_chains: Vec<Chain> = ctxs
-        .iter()
-        .zip(&independent_devices)
-        .map(|(ctx, d)| chain(ctx, d, batch_fixed))
-        .collect();
-    // What each independent plan believes, alone on an idle device.
-    let independent: Vec<f64> = ind_chains
-        .iter()
-        .map(|c| {
-            let (comp, _, _, _) = simulate(std::slice::from_ref(c));
-            comp[0]
-        })
-        .collect();
-    let (_, ind_shared_makespan, _, _) = simulate(&ind_chains);
-
-    let all_cpu_devices: Vec<Vec<Device>> =
-        cands.iter().map(|qc| vec![Device::Cpu; qc.query.ops.len()]).collect();
-    let all_cpu_chains: Vec<Chain> = ctxs
-        .iter()
-        .zip(&all_cpu_devices)
-        .map(|(ctx, d)| chain(ctx, d, batch_fixed))
-        .collect();
-    let (_, all_cpu_makespan, _, _) = simulate(&all_cpu_chains);
-
-    // Greedy: start all-CPU; flip the best CPU→GPU move (restricted to
-    // ops the per-query planner itself mapped to GPU — the scheduler
-    // *rations* the device, it never overrides Alg. 2's per-op
-    // economics) by benefit-per-GPU-second until no move helps.
-    let mut devices = all_cpu_devices;
-    let movable: Vec<(usize, usize)> = independent_devices
-        .iter()
-        .enumerate()
-        .flat_map(|(q, d)| {
-            d.iter()
-                .enumerate()
-                .filter(|(_, dev)| **dev == Device::Gpu)
-                .map(move |(o, _)| (q, o))
-        })
-        .collect();
-    let mut chains: Vec<Chain> = ctxs
+    let mut chains: Vec<Vec<Chain>> = ctxs
         .iter()
         .zip(&devices)
-        .map(|(ctx, d)| chain(ctx, d, batch_fixed))
+        .map(|(ctx, d)| query_chains(ctx, d, batch_fixed))
         .collect();
-    let (mut completions, mut makespan, mut busy, _) = simulate(&chains);
+    let (mut cur, _) = evaluate(&chains, num_execs, reorder);
     loop {
-        let cur_total = total(&completions);
+        let cur_total = total(&cur.completions);
         let mut best: Option<(f64, usize, usize)> = None;
-        for &(q, o) in &movable {
+        for &(q, o) in movable {
             if devices[q][o] == Device::Gpu {
                 continue;
             }
             devices[q][o] = Device::Gpu;
-            let trial = chain(&ctxs[q], &devices[q], batch_fixed);
+            let trial = query_chains(&ctxs[q], &devices[q], batch_fixed);
             let saved = std::mem::replace(&mut chains[q], trial);
-            let (comp, mk, b, _) = simulate(&chains);
-            if mk <= makespan + EPS && total(&comp) < cur_total - EPS {
-                // Benefit per GPU-second; a flip that *frees* device
-                // time (boundary merging) is a free win.
-                let gpu_added = b - busy;
-                let score = if gpu_added > EPS {
-                    (cur_total - total(&comp)) / gpu_added
-                } else {
-                    f64::INFINITY
-                };
+            let (sim, _) = evaluate(&chains, num_execs, reorder);
+            let improves = sim.makespan < cur.makespan - EPS
+                || (sim.makespan <= cur.makespan + EPS
+                    && total(&sim.completions) < cur_total - EPS);
+            if improves {
+                // Benefit per GPU-second (makespan reductions weighted
+                // by round width so they dominate mean-latency ones); a
+                // flip that *frees* device time (boundary merging) is a
+                // free win.
+                let gain = (cur_total - total(&sim.completions))
+                    + (cur.makespan - sim.makespan) * ctxs.len() as f64;
+                let gpu_added = sim.busy - cur.busy;
+                let score = if gpu_added > EPS { gain / gpu_added } else { f64::INFINITY };
                 if best.map(|(s, _, _)| score > s).unwrap_or(true) {
                     best = Some((score, q, o));
                 }
@@ -409,36 +482,117 @@ pub fn plan_joint(
         match best {
             Some((_, q, o)) => {
                 devices[q][o] = Device::Gpu;
-                chains[q] = chain(&ctxs[q], &devices[q], batch_fixed);
-                let (comp, mk, b, _) = simulate(&chains);
-                completions = comp;
-                makespan = mk;
-                busy = b;
+                chains[q] = query_chains(&ctxs[q], &devices[q], batch_fixed);
+                let (sim, _) = evaluate(&chains, num_execs, reorder);
+                cur = sim;
             }
             None => break,
         }
     }
+    devices
+}
 
-    // Final pick: the greedy result unless the independent plans, once
-    // serialized on the shared timeline, are predicted strictly better
-    // (e.g. a lone GPU segment only pays off as a block the one-op-at-a-
-    // time greedy cannot reach). The all-CPU bound holds either way:
-    // greedy starts there and never worsens.
-    let chosen_devices = if ind_shared_makespan + EPS < makespan {
-        independent_devices
-    } else {
-        devices
+/// Plan one scheduling round jointly across `cands` (the round's
+/// queries, in staging order) over the per-executor GPUs of `topo`. See
+/// the module docs for the algorithm and the guarantees on
+/// [`Prediction::makespan`].
+pub fn plan_joint(
+    cands: &[QueryCandidate],
+    model: &DeviceModel,
+    topo: &DeviceTopology,
+) -> JointPlan {
+    if cands.is_empty() {
+        return JointPlan { plans: Vec::new(), predicted: Prediction::default() };
+    }
+    let batch_fixed = model.batch_fixed.as_secs_f64();
+    let num_execs = topo.num_executors();
+    let ctxs: Vec<ChainCtx> = cands.iter().map(|qc| chain_ctx(qc, model, topo)).collect();
+    let build = |devices: &[Vec<Device>]| -> Vec<Vec<Chain>> {
+        ctxs.iter()
+            .zip(devices)
+            .map(|(ctx, d)| query_chains(ctx, d, batch_fixed))
+            .collect()
     };
-    let chosen_chains: Vec<Chain> = ctxs
+
+    // Reference assignments.
+    let independent_devices: Vec<Vec<Device>> = cands
         .iter()
-        .zip(&chosen_devices)
-        .map(|(ctx, d)| chain(ctx, d, batch_fixed))
+        .map(|qc| qc.independent.per_op.iter().map(|o| o.device).collect())
         .collect();
-    let (completions, makespan, gpu_busy, timeline) = simulate(&chosen_chains);
+    let ind_chains = build(&independent_devices);
+    // What each independent plan believes, alone on idle devices.
+    let independent: Vec<f64> = (0..cands.len())
+        .map(|q| simulate(&ind_chains, num_execs, &[q]).completions[q])
+        .collect();
+    let fifo: Vec<usize> = (0..cands.len()).collect();
+    let ind_shared_makespan = simulate(&ind_chains, num_execs, &fifo).makespan;
+
+    let all_cpu_devices: Vec<Vec<Device>> =
+        cands.iter().map(|qc| vec![Device::Cpu; qc.query.ops.len()]).collect();
+    let all_cpu_makespan =
+        simulate(&build(&all_cpu_devices), num_execs, &fifo).makespan;
+
+    let movable: Vec<(usize, usize)> = independent_devices
+        .iter()
+        .enumerate()
+        .flat_map(|(q, d)| {
+            d.iter()
+                .enumerate()
+                .filter(|(_, dev)| **dev == Device::Gpu)
+                .map(move |(o, _)| (q, o))
+        })
+        .collect();
+
+    // Two greedy passes: the plain FIFO rationer (what the
+    // registration-order scheduler emits — its makespan is reported as
+    // `fifo_makespan`), and a reorder-aware pass that can accept flips
+    // only a different grant order makes profitable.
+    let dev_fifo = greedy_assign(&ctxs, &movable, num_execs, batch_fixed, false);
+    let dev_reorder = greedy_assign(&ctxs, &movable, num_execs, batch_fixed, true);
+
+    // Final pick: the best (assignment, order) pair across the
+    // independent plans and both greedy results, under FIFO and
+    // shortest-GPU-first grants. Including every assignment's FIFO
+    // variant guarantees makespan ≤ fifo_makespan; the FIFO greedy's
+    // all-CPU start guarantees ≤ all-CPU; FIFO serialization of the
+    // independent plans guarantees ≤ Σ independent.
+    let assignments = [&independent_devices, &dev_fifo, &dev_reorder];
+    let mut fifo_makespan = f64::INFINITY;
+    let mut chosen: Option<(Sim, Vec<usize>, usize)> = None;
+    for (ai, &devices) in assignments.iter().enumerate() {
+        let chains = build(devices);
+        for reordered in [false, true] {
+            let (order, sim) = if reordered {
+                let order = shortest_first_order(&chains);
+                let sim = simulate(&chains, num_execs, &order);
+                (order, sim)
+            } else {
+                (fifo.clone(), simulate(&chains, num_execs, &fifo))
+            };
+            // The FIFO scheduler's emission: its own greedy (ai == 1) or
+            // the independent fallback (ai == 0), FIFO grants.
+            if !reordered && ai < 2 {
+                fifo_makespan = fifo_makespan.min(sim.makespan);
+            }
+            let better = match &chosen {
+                None => true,
+                Some((best, _, _)) => {
+                    sim.makespan < best.makespan - EPS
+                        || (sim.makespan <= best.makespan + EPS
+                            && total(&sim.completions) < total(&best.completions) - EPS)
+                }
+            };
+            if better {
+                chosen = Some((sim, order, ai));
+            }
+        }
+    }
+    let (sim, order, chosen_ai) = chosen.expect("non-empty candidate pool");
+    let chosen_devices = assignments[chosen_ai];
 
     let plans: Vec<PhysicalPlan> = cands
         .iter()
-        .zip(&chosen_devices)
+        .zip(chosen_devices)
         .map(|(qc, d)| PhysicalPlan {
             per_op: qc
                 .candidates
@@ -456,13 +610,15 @@ pub fn plan_joint(
     JointPlan {
         plans,
         predicted: Prediction {
-            completions,
-            makespan,
-            gpu_busy,
+            completions: sim.completions,
+            makespan: sim.makespan,
+            gpu_busy: sim.busy,
+            order,
+            fifo_makespan,
             independent,
             independent_shared_makespan: ind_shared_makespan,
             all_cpu_makespan,
-            timeline,
+            timeline: sim.slots,
         },
     }
 }
@@ -477,6 +633,10 @@ mod tests {
     use std::time::Duration;
 
     const KB: f64 = 1024.0;
+
+    fn single_topo() -> DeviceTopology {
+        DeviceTopology::single(12, 1)
+    }
 
     fn chain_query(name: &str) -> Query {
         QueryBuilder::scan(name)
@@ -494,7 +654,7 @@ mod tests {
 
     #[test]
     fn empty_input_yields_empty_plan() {
-        let jp = plan_joint(&[], &DeviceModel::default(), 12, 1);
+        let jp = plan_joint(&[], &DeviceModel::default(), &single_topo());
         assert!(jp.plans.is_empty());
         assert_eq!(jp.predicted.makespan, 0.0);
     }
@@ -505,13 +665,14 @@ mod tests {
         let model = DeviceModel::default();
         for part in [4.0 * KB, 50.0 * KB, 400.0 * KB] {
             let qc = cand(&q, part, 10.0 * KB, 4);
-            let jp = plan_joint(std::slice::from_ref(&qc), &model, 12, 1);
+            let jp = plan_joint(std::slice::from_ref(&qc), &model, &single_topo());
             assert_eq!(jp.plans.len(), 1);
             assert_eq!(jp.plans[0].len(), q.len());
             let p = &jp.predicted;
             assert!(p.makespan <= p.all_cpu_makespan + 1e-6, "{p:?}");
             assert!(p.makespan <= p.independent.iter().sum::<f64>() + 1e-6, "{p:?}");
             assert_eq!(p.completions.len(), 1);
+            assert_eq!(p.order, vec![0]);
             assert!((p.makespan - p.completions[0]).abs() < 1e-12);
         }
     }
@@ -524,7 +685,7 @@ mod tests {
         let q2 = chain_query("b");
         let model = DeviceModel::default();
         let cands = vec![cand(&q1, 60.0 * KB, 8.0 * KB, 4), cand(&q2, 60.0 * KB, 8.0 * KB, 4)];
-        let jp = plan_joint(&cands, &model, 12, 1);
+        let jp = plan_joint(&cands, &model, &single_topo());
         for (qc, plan) in cands.iter().zip(&jp.plans) {
             for (ind, joint) in qc.independent.per_op.iter().zip(&plan.per_op) {
                 if joint.device == Device::Gpu {
@@ -535,22 +696,33 @@ mod tests {
     }
 
     #[test]
-    fn predicted_timeline_is_serialized() {
+    fn predicted_timeline_is_serialized_per_executor() {
         let q1 = chain_query("a");
         let q2 = chain_query("b");
         let model = DeviceModel::default();
-        let cands = vec![cand(&q1, 60.0 * KB, 8.0 * KB, 4), cand(&q2, 60.0 * KB, 8.0 * KB, 4)];
-        let jp = plan_joint(&cands, &model, 12, 1);
-        let tl = &jp.predicted.timeline;
-        for w in tl.windows(2) {
-            assert!(w[0].end <= w[1].start + 1e-12, "overlapping slots {w:?}");
+        let two_exec = DeviceTopology::from_cluster(&crate::cluster::ClusterSpec::of(2));
+        for topo in [single_topo(), two_exec] {
+            let cands =
+                vec![cand(&q1, 60.0 * KB, 8.0 * KB, 4), cand(&q2, 60.0 * KB, 8.0 * KB, 4)];
+            let jp = plan_joint(&cands, &model, &topo);
+            let tl = &jp.predicted.timeline;
+            for e in 0..topo.num_executors() {
+                let per_exec: Vec<&GpuSlot> = tl.iter().filter(|s| s.exec == e).collect();
+                for w in per_exec.windows(2) {
+                    assert!(
+                        w[0].end <= w[1].start + 1e-12,
+                        "executor {e}: overlapping slots {w:?}"
+                    );
+                }
+            }
+            for s in tl {
+                assert!(s.end > s.start, "empty slot {s:?}");
+                assert!(s.end <= jp.predicted.makespan + 1e-9);
+                assert!(s.exec < topo.num_executors());
+            }
+            let booked: f64 = tl.iter().map(|s| s.end - s.start).sum();
+            assert!((booked - jp.predicted.gpu_busy).abs() < 1e-9);
         }
-        for s in tl {
-            assert!(s.end > s.start, "empty slot {s:?}");
-            assert!(s.end <= jp.predicted.makespan + 1e-9);
-        }
-        let booked: f64 = tl.iter().map(|s| s.end - s.start).sum();
-        assert!((booked - jp.predicted.gpu_busy).abs() < 1e-9);
     }
 
     #[test]
@@ -567,7 +739,7 @@ mod tests {
         // Sanity: the per-query planner wants the GPU for both.
         assert!(cands[0].independent.gpu_ops() > 0);
         assert!(cands[1].independent.gpu_ops() > 0);
-        let jp = plan_joint(&cands, &model, 12, 1);
+        let jp = plan_joint(&cands, &model, &single_topo());
         let p = &jp.predicted;
         assert!(
             p.makespan < p.independent_shared_makespan - 1e-9,
@@ -584,5 +756,48 @@ mod tests {
             p.independent_shared_makespan,
             ind_max
         );
+    }
+
+    #[test]
+    fn two_executor_topology_halves_gpu_pressure() {
+        // The same contended pair over a 2-executor topology: each
+        // executor carries half the rows on its own GPU, so the
+        // independent plans' shared-timeline makespan shrinks vs the
+        // single shared device (the one-device model over-predicts
+        // cluster contention — the mis-prediction the topology-aware
+        // scheduler removes).
+        let q1 = chain_query("a");
+        let q2 = chain_query("b");
+        let model = DeviceModel::default();
+        let mk = |topo: &DeviceTopology| {
+            let cands =
+                vec![cand(&q1, 50.0 * KB, 10.0 * KB, 4), cand(&q2, 50.0 * KB, 10.0 * KB, 4)];
+            plan_joint(&cands, &model, topo).predicted.independent_shared_makespan
+        };
+        let one = mk(&single_topo());
+        let two = mk(&DeviceTopology::from_cluster(&crate::cluster::ClusterSpec::of(2)));
+        assert!(two < one, "2-executor {two} !< 1-executor {one}");
+    }
+
+    #[test]
+    fn order_is_a_permutation_and_bounds_hold() {
+        let q1 = chain_query("a");
+        let q2 = chain_query("b");
+        let q3 = chain_query("c");
+        let model = DeviceModel::default();
+        for part in [10.0 * KB, 50.0 * KB, 200.0 * KB] {
+            let cands = vec![
+                cand(&q1, part, 10.0 * KB, 4),
+                cand(&q2, 2.0 * part, 10.0 * KB, 4),
+                cand(&q3, 0.5 * part, 10.0 * KB, 4),
+            ];
+            let p = plan_joint(&cands, &model, &single_topo()).predicted;
+            let mut sorted = p.order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2], "not a permutation: {:?}", p.order);
+            assert!(p.makespan <= p.fifo_makespan + 1e-9, "{p:?}");
+            assert!(p.fifo_makespan <= p.independent.iter().sum::<f64>() + 1e-6, "{p:?}");
+            assert!(p.makespan <= p.all_cpu_makespan + 1e-6, "{p:?}");
+        }
     }
 }

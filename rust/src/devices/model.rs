@@ -116,6 +116,32 @@ pub fn op_work_scale(kind: OpKind) -> f64 {
     }
 }
 
+/// Chunk count an operator's output carries for an `in_chunks`-chunk
+/// input — the layout "physics" of the chunked kernels in `engine/ops`
+/// (mirrored so the planner can price interior CPU→GPU coalesce
+/// boundaries by each op's *actual* input layout, not the query input's):
+///
+/// * per-chunk kernels (scan/filter/project, the join's chunk-by-chunk
+///   probe gather, shuffle's per-chunk bucketing) preserve the layout;
+/// * `expand` emits one chunk per (window, chunk) pair —
+///   `expand_factor × in_chunks`;
+/// * `aggregate` (one group table fed chunk-by-chunk) and `sort` (one
+///   merged run) materialize a single output chunk;
+/// * `Union` is handled by the DAG walk (its input is the *sum* of its
+///   branches' chunk lists) and passes that layout through.
+pub fn op_output_chunks(kind: OpKind, in_chunks: usize, expand_factor: usize) -> usize {
+    match kind {
+        OpKind::Aggregate | OpKind::Sort => in_chunks.min(1),
+        OpKind::Expand => in_chunks.saturating_mul(expand_factor.max(1)),
+        OpKind::Scan
+        | OpKind::Filter
+        | OpKind::Project
+        | OpKind::Shuffle
+        | OpKind::Join
+        | OpKind::Union => in_chunks,
+    }
+}
+
 /// GPU efficiency per operator kind (>1 = GPU relatively poor at it).
 /// Mirrors the measured preferences of the authors' prior study ([14],
 /// Table II): hash aggregation / filtering / shuffling lean CPU; scan and
@@ -320,6 +346,28 @@ mod tests {
         assert_eq!(m().coalesce_time(s, 1), Duration::ZERO);
         assert_eq!(m().coalesce_time(s, 0), Duration::ZERO);
         assert!(m().coalesce_time(s, 2) > Duration::ZERO);
+    }
+
+    #[test]
+    fn chunk_propagation_mirrors_kernel_layouts() {
+        // Per-chunk kernels preserve; aggregate/sort materialize one
+        // chunk; expand multiplies by the window factor.
+        for kind in [
+            OpKind::Scan,
+            OpKind::Filter,
+            OpKind::Project,
+            OpKind::Shuffle,
+            OpKind::Join,
+            OpKind::Union,
+        ] {
+            assert_eq!(op_output_chunks(kind, 4, 6), 4, "{kind:?}");
+            assert_eq!(op_output_chunks(kind, 1, 6), 1, "{kind:?}");
+        }
+        assert_eq!(op_output_chunks(OpKind::Aggregate, 4, 6), 1);
+        assert_eq!(op_output_chunks(OpKind::Sort, 4, 6), 1);
+        assert_eq!(op_output_chunks(OpKind::Sort, 0, 6), 0);
+        assert_eq!(op_output_chunks(OpKind::Expand, 2, 6), 12);
+        assert_eq!(op_output_chunks(OpKind::Expand, 2, 0), 2);
     }
 
     #[test]

@@ -51,14 +51,143 @@ pub fn sort_by(batch: &ColumnBatch, col: &str, desc: bool) -> Result<ColumnBatch
     })
 }
 
-/// Chunked sort. Sorting is the one CPU op whose output genuinely needs
-/// a global contiguous view, so it is an **explicit coalesce point**:
-/// the chunk list is materialized once, sorted, and returned as a single
-/// chunk. The planner/cost model charge this materialization through the
-/// op's byte volume.
+/// Comparator shared by the single-batch kernel and the k-way merge:
+/// dead rows order after live rows (and compare Equal among themselves,
+/// so stability preserves their original order); live rows compare by
+/// key, reversed for descending.
+fn cmp_rows(a_live: bool, a_key: f64, b_live: bool, b_key: f64, desc: bool) -> Ordering {
+    match (a_live, b_live) {
+        (true, false) => Ordering::Less,
+        (false, true) => Ordering::Greater,
+        (false, false) => Ordering::Equal,
+        (true, true) => {
+            let ord = a_key.partial_cmp(&b_key).unwrap_or(Ordering::Equal);
+            if desc {
+                ord.reverse()
+            } else {
+                ord
+            }
+        }
+    }
+}
+
+/// Chunked sort: **k-way merge over per-chunk sorted runs**. Each chunk
+/// is index-sorted in place (keys extracted once, no per-chunk
+/// materialization), then the runs merge directly into the single
+/// output batch — ties take the earliest run, so the result is exactly
+/// the stable global sort of the coalesced input (chunk order is row
+/// order), pinned by `rust/tests/diff_chunked.rs`. The old
+/// coalesce-then-sort path materialized the rows twice (the contiguous
+/// staging copy, then the sorted gather); the merge materializes them
+/// once, at the gather. Sorting still *outputs* one contiguous chunk —
+/// it remains the explicit coalesce point downstream ops rely on, and
+/// the planner/cost model charge the materialization through the op's
+/// byte volume.
 pub fn sort_chunks(batch: &ChunkedBatch, col: &str, desc: bool) -> Result<ChunkedBatch> {
     batch.schema().index_of(col)?;
-    Ok(ChunkedBatch::from_batch(sort_by(&batch.coalesce(), col, desc)?))
+    let chunks = batch.chunks();
+    if chunks.len() <= 1 {
+        // Zero/one chunk: coalesce is an O(1) clone (or empty) — the
+        // single-batch kernel is already copy-minimal.
+        return Ok(ChunkedBatch::from_batch(sort_by(&batch.coalesce(), col, desc)?));
+    }
+
+    // Per-run typed keys + liveness (dtype dispatched once per chunk).
+    let keys: Vec<Vec<f64>> = chunks
+        .iter()
+        .map(|c| match c.column(col).expect("schema checked above") {
+            Column::F32(v) => v.iter().map(|&x| x as f64).collect(),
+            Column::I32(v) => v.iter().map(|&x| x as f64).collect(),
+        })
+        .collect();
+    let masks: Vec<Option<&[u8]>> = chunks.iter().map(|c| c.validity.mask()).collect();
+    let live = |r: usize, i: usize| match masks[r] {
+        None => true,
+        Some(m) => m[i] != 0,
+    };
+
+    // Sorted runs: per-chunk index sorts (stable, same comparator as
+    // the single-batch kernel).
+    let orders: Vec<Vec<usize>> = chunks
+        .iter()
+        .enumerate()
+        .map(|(r, c)| {
+            let mut idx: Vec<usize> = (0..c.rows()).collect();
+            idx.sort_by(|&a, &b| {
+                cmp_rows(live(r, a), keys[r][a], live(r, b), keys[r][b], desc)
+            });
+            idx
+        })
+        .collect();
+
+    // K-way merge of the run fronts; strict-less keeps ties on the
+    // earliest run (== global stable order). Linear front scan: chunk
+    // counts are small (micro-batch assembly / window dataset counts),
+    // so a heap would cost more than it saves.
+    let mut pos = vec![0usize; chunks.len()];
+    let mut picks: Vec<(usize, usize)> = Vec::with_capacity(batch.rows());
+    loop {
+        let mut best: Option<usize> = None;
+        for r in 0..chunks.len() {
+            if pos[r] >= orders[r].len() {
+                continue;
+            }
+            match best {
+                None => best = Some(r),
+                Some(b) => {
+                    let (ri, bi) = (orders[r][pos[r]], orders[b][pos[b]]);
+                    if cmp_rows(live(r, ri), keys[r][ri], live(b, bi), keys[b][bi], desc)
+                        == Ordering::Less
+                    {
+                        best = Some(r);
+                    }
+                }
+            }
+        }
+        match best {
+            Some(r) => {
+                picks.push((r, orders[r][pos[r]]));
+                pos[r] += 1;
+            }
+            None => break,
+        }
+    }
+
+    // Single materialization: gather every column across the runs.
+    let columns: Vec<Column> = (0..batch.schema().len())
+        .map(|ci| match &chunks[0].columns[ci] {
+            Column::F32(_) => {
+                let slices: Vec<&[f32]> = chunks
+                    .iter()
+                    .map(|c| c.columns[ci].as_f32().expect("uniform chunk schemas"))
+                    .collect();
+                Column::F32(
+                    picks.iter().map(|&(r, i)| slices[r][i]).collect::<Vec<f32>>().into(),
+                )
+            }
+            Column::I32(_) => {
+                let slices: Vec<&[i32]> = chunks
+                    .iter()
+                    .map(|c| c.columns[ci].as_i32().expect("uniform chunk schemas"))
+                    .collect();
+                Column::I32(
+                    picks.iter().map(|&(r, i)| slices[r][i]).collect::<Vec<i32>>().into(),
+                )
+            }
+        })
+        .collect();
+    let validity = if masks.iter().all(|m| m.is_none()) {
+        Validity::all_live(picks.len())
+    } else {
+        Validity::from_mask(
+            picks.iter().map(|&(r, i)| chunks[r].validity.get(i)).collect(),
+        )
+    };
+    Ok(ChunkedBatch::from_batch(ColumnBatch {
+        schema: Arc::clone(batch.schema()),
+        columns,
+        validity,
+    }))
 }
 
 #[cfg(test)]
@@ -122,5 +251,75 @@ mod tests {
             ColumnBatch::new(schema, vec![Column::I32(vec![3, 1, 2].into())]).unwrap();
         let out = sort_by(&b, "k", false).unwrap();
         assert_eq!(out.column("k").unwrap().as_i32().unwrap(), &[1, 2, 3]);
+    }
+
+    fn tagged(vals: &[f32], first_tag: i32) -> ColumnBatch {
+        let schema = Schema::new(vec![Field::f32("v"), Field::i32("tag")]);
+        ColumnBatch::new(
+            schema,
+            vec![
+                Column::F32(vals.to_vec().into()),
+                Column::I32(
+                    (0..vals.len() as i32).map(|i| first_tag + i).collect::<Vec<i32>>().into(),
+                ),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn kway_merge_equals_coalesced_sort() {
+        // Three chunks with interleaved + duplicate keys, a dead row in
+        // the middle chunk, both directions: the merge must match the
+        // single-batch kernel over the coalesced rows bit for bit, and
+        // emit one contiguous chunk (sort stays a coalesce point).
+        let mut c = ChunkedBatch::from_batch(tagged(&[5.0, 1.0, 3.0], 0));
+        let mut mid = tagged(&[3.0, 2.0, 9.0], 10);
+        mid.validity.set_live(1, false);
+        c.push(mid).unwrap();
+        c.push(tagged(&[4.0, 3.0], 20)).unwrap();
+        for desc in [false, true] {
+            let merged = sort_chunks(&c, "v", desc).unwrap();
+            let reference = sort_by(&c.coalesce(), "v", desc).unwrap();
+            assert_eq!(merged.num_chunks(), 1, "sort must stay a coalesce point");
+            assert_eq!(merged.coalesce(), reference, "desc={desc}");
+        }
+    }
+
+    #[test]
+    fn kway_merge_is_stable_across_chunks() {
+        // Equal keys keep (chunk order, then within-chunk order): the
+        // tag column pins the provenance of every duplicate.
+        let mut c = ChunkedBatch::from_batch(tagged(&[1.0, 1.0], 0));
+        c.push(tagged(&[1.0, 0.0], 10)).unwrap();
+        c.push(tagged(&[1.0], 20)).unwrap();
+        let out = sort_chunks(&c, "v", false).unwrap().coalesce();
+        assert_eq!(out.column("tag").unwrap().as_i32().unwrap(), &[11, 0, 1, 10, 20]);
+    }
+
+    #[test]
+    fn kway_merge_sinks_dead_rows_in_chunk_order() {
+        let mut a = tagged(&[1.0, 9.0], 0);
+        a.validity.set_live(1, false);
+        let mut b = tagged(&[0.5, 2.0], 10);
+        b.validity.set_live(0, false);
+        let mut c = ChunkedBatch::from_batch(a);
+        c.push(b).unwrap();
+        let out = sort_chunks(&c, "v", false).unwrap().coalesce();
+        // Live rows sorted first; dead rows trail in original order
+        // (chunk 0's dead row before chunk 1's).
+        assert_eq!(out.column("tag").unwrap().as_i32().unwrap(), &[0, 11, 1, 10]);
+        assert_eq!(out.validity.to_vec(), vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn single_chunk_sort_unchanged() {
+        let c = ChunkedBatch::from_batch(batch());
+        let out = sort_chunks(&c, "v", false).unwrap();
+        assert_eq!(out.num_chunks(), 1);
+        assert_eq!(
+            out.coalesce().column("v").unwrap().as_f32().unwrap(),
+            &[1.0, 2.0, 3.0]
+        );
     }
 }

@@ -28,17 +28,23 @@
 //!
 //! # Shared-device occupancy
 //!
-//! A session multiplexes many queries over **one** GPU per executor, so
-//! a simulated GPU op cannot assume the device is idle:
-//! [`execute_with_occupancy`] takes an externally-imposed device plan
-//! plus a [`GpuOccupancy`] arbiter. Before each simulated GPU op runs,
-//! the executor requests the device at the op's ready time on the
-//! query's local timeline; the arbiter (e.g. the session's shared
-//! [`GpuTimeline`]) returns the contention wait, which is charged into
-//! `proc` and surfaced separately as [`ExecOutcome::contention`] — so
-//! metrics, admission (Eq. 6) and the online optimizer all learn the
-//! *contended* latencies. [`execute`] is the uncontended form
-//! ([`NoContention`]).
+//! A session round multiplexes many queries — across sources — over
+//! **one** GPU per executor of its topology, so a simulated GPU op
+//! cannot assume the device is idle: [`execute_with_occupancy`] takes
+//! an externally-imposed device plan plus a [`GpuOccupancy`] arbiter.
+//! Before each simulated GPU op runs, the executor requests the device
+//! at the op's ready time on the query's local timeline; the arbiter
+//! (one of the session round's per-executor [`GpuTimeline`]s) returns
+//! the contention wait, which is charged into `proc` and surfaced
+//! separately as [`ExecOutcome::contention`] — so metrics, admission
+//! (Eq. 6) and the online optimizer all learn the *contended*
+//! latencies. Each timeline serializes reservations FIFO **in request
+//! order**, which is the order the session executes the round's queries
+//! — the scheduler's chosen grant order
+//! ([`Prediction::order`](crate::coordinator::schedule::Prediction::order),
+//! shortest-GPU-segment-first when that beats FIFO), so the executed
+//! serialization realizes exactly the predicted one. [`execute`] is the
+//! uncontended form ([`NoContention`]).
 
 use crate::config::ExecBackend;
 use crate::devices::model::{DeviceModel, OpVolume};
@@ -82,13 +88,14 @@ impl GpuOccupancy for NoContention {
 }
 
 /// FIFO single-device timeline shared across the queries of one
-/// micro-batch round: reservations serialize in request order (queries
-/// run in registration order, each walking its ops in topological
+/// scheduling round: reservations serialize in request order (queries
+/// run in the round's grant order, each walking its ops in topological
 /// order), so the device is never double-booked. The session charges
-/// every query's simulated GPU ops against one of these instead of
-/// per-query idle-GPU clocks. Deliberately *not* `Copy`: a timeline is
-/// mutable shared state — an accidental by-value use would fork it and
-/// silently double-book the device.
+/// every query's simulated GPU ops against one of these **per executor
+/// of its topology** instead of per-query idle-GPU clocks.
+/// Deliberately *not* `Copy`: a timeline is mutable shared state — an
+/// accidental by-value use would fork it and silently double-book the
+/// device.
 #[derive(Clone, Debug, Default)]
 pub struct GpuTimeline {
     free_at: Duration,

@@ -15,21 +15,27 @@
 //!   admits against the *tightest* latency bound across that source's
 //!   queries, so a sliding-window query co-registered with a tumbling
 //!   one keeps the batch latency-bounded for both;
-//! * **joint planning on a shared device** — a multi-query micro-batch
-//!   is planned **jointly** across the source's queries
-//!   ([`crate::coordinator::schedule`]): the scheduler collects each
-//!   query's Eq. 7–9 candidate costs and rations the GPU by
-//!   benefit-per-GPU-second, because concurrent idle-GPU `MapDevice`
-//!   plans would double-book the device (single-query batches keep the
-//!   plain Alg. 2 path; `Config::co_schedule = false` ablates back to
-//!   independent plans);
-//! * **shared GPU timeline** — execution charges every query's
+//! * **session-wide scheduling rounds** — everything admitted in one
+//!   loop iteration, across *all* sources, forms one round: a single
+//!   [`crate::coordinator::schedule::plan_joint`] call plans every
+//!   staged query against the session's
+//!   [`DeviceTopology`](crate::cluster::DeviceTopology) (one simulated
+//!   GPU timeline per executor; single-node is the 1-executor special
+//!   case), rationing the devices by benefit-per-GPU-second and picking
+//!   the round's grant order (shortest-GPU-segment-first where that
+//!   beats FIFO) — because concurrent idle-GPU `MapDevice` plans would
+//!   double-book the devices (single-query rounds keep the plain Alg. 2
+//!   path; `Config::co_schedule = false` ablates back to independent
+//!   plans);
+//! * **per-executor GPU timelines** — execution charges every query's
 //!   simulated GPU ops against one FIFO
-//!   [`GpuTimeline`](crate::query::exec::GpuTimeline) per device (per
-//!   executor on a cluster), so a batch round advances the clock by the
-//!   *contended makespan* across its queries, not per-query fictions;
-//!   the contended latencies are what metrics, Eq. 6 admission and the
-//!   Eq. 10 optimizer then learn from;
+//!   [`GpuTimeline`](crate::query::exec::GpuTimeline) per executor of
+//!   the topology, walking the round in the scheduler's grant order, so
+//!   a round advances the clock by the *contended makespan* across its
+//!   queries and sources, not per-query (or per-source) fictions; the
+//!   contended latencies are what metrics, Eq. 6 admission and the
+//!   Eq. 10 optimizer then learn from, and each record carries the
+//!   `round` it was co-scheduled in;
 //! * **per-query windows, estimators, metrics, sinks** — each query
 //!   keeps its own window state, [`SizeEstimator`], metrics, and
 //!   (optionally) registered sinks: [`Session::set_sink`] routes a
@@ -40,12 +46,14 @@
 //! * **shared optimization** — one online regression (Eq. 10) fits the
 //!   inflection point from the primary query's history.
 //!
-//! One iteration: poll the source(s) → admission (or the baseline's
-//! static trigger) → collect the async optimizer's latest inflection
-//! point → window upkeep + joint (or per-query) planning → execution on
-//! the shared timeline → metrics update → sink routing → submit the
-//! optimizer's next fit. Identical code drives the simulated clock
-//! (paper-scale experiments) and the wall clock (real PJRT runs).
+//! One iteration: poll every source → admission (or the baseline's
+//! static trigger) → **one round** over everything admitted: collect
+//! the async optimizer's latest inflection point → window upkeep +
+//! joint (or per-query) planning → execution on the per-executor
+//! timelines in the scheduler's grant order → one clock advance by the
+//! round makespan → metrics update → sink routing → per-source
+//! optimizer/checkpoint upkeep. Identical code drives the simulated
+//! clock (paper-scale experiments) and the wall clock (real PJRT runs).
 //!
 //! The free functions in [`crate::coordinator::driver`] remain as thin
 //! single-query shims over this type.
@@ -496,6 +504,14 @@ impl<'rt> Session<'rt> {
             vec![Time::ZERO.add(cfg.trigger); num_sources];
         let mut construct_acc: Vec<Duration> = vec![Duration::ZERO; num_sources];
 
+        // The device topology every scheduling round plans and executes
+        // against: per-executor GPUs on a cluster, the 1-executor
+        // special case on a single node.
+        let topo = cfg.topology();
+        // Monotone scheduling-round counter — records sharing a `round`
+        // were co-scheduled on the same device timelines.
+        let mut round: usize = 0;
+
         let end = Time::ZERO.add(duration);
 
         while clock.now() < end {
@@ -563,34 +579,46 @@ impl<'rt> Session<'rt> {
                 }
             }
 
-            for (s, batch) in admitted {
-                let admitted_at = clock.now();
-                let batch_bytes = batch.wire_bytes();
-                let primary = self.sources[s].primary;
+            if admitted.is_empty() {
+                continue;
+            }
+            // ================= One session-wide scheduling round =====
+            // Everything admitted in this loop iteration — across *all*
+            // sources — stages, plans, and executes together against one
+            // set of per-executor device timelines, and the clock
+            // advances once by the round's contended makespan.
+            round += 1;
+            let admitted_at = clock.now();
+            // The round's shared phase costs (the joint planning pass,
+            // the optimizer pickup) are charged once, to the first
+            // admitted source's primary query; per-source construct work
+            // stays with each source's own primary.
+            let lead_primary = self.sources[admitted[0].0].primary;
 
-                // ---- Optimizer pickup (must land before planning).
-                let (new_inf, opt_blocking) = if cfg.mode == Mode::LmStream {
-                    self.optimizer.take(self.inf_pt, OPT_PICKUP_TIMEOUT)
-                } else {
-                    (self.inf_pt, Duration::ZERO)
-                };
-                self.inf_pt = new_inf;
+            // ---- Optimizer pickup (must land before planning).
+            let (new_inf, opt_blocking) = if cfg.mode == Mode::LmStream {
+                self.optimizer.take(self.inf_pt, OPT_PICKUP_TIMEOUT)
+            } else {
+                (self.inf_pt, Duration::ZERO)
+            };
+            self.inf_pt = new_inf;
 
-                // ---- Window upkeep + execution input assembly, per
-                // query (before planning: the joint scheduler needs
-                // every query's input sizes at once). The snapshot is a
-                // chunk list — one shared chunk per in-window dataset
-                // (O(#datasets) Arc bumps, zero row copies, no
-                // copy-on-write even while a sink retains an old
-                // snapshot — see engine::window).
-                struct Staged {
-                    qi: usize,
-                    input: ChunkedBatch,
-                    snapshot: Option<ChunkedBatch>,
-                }
-                let query_ids = self.sources[s].queries.clone();
-                let mut staged: Vec<Staged> = Vec::with_capacity(query_ids.len());
-                for &qi in &query_ids {
+            // ---- Window upkeep + execution input assembly, per query
+            // of every admitted source (before planning: the joint
+            // scheduler needs every staged query's input sizes at
+            // once). The snapshot is a chunk list — one shared chunk
+            // per in-window dataset (O(#datasets) Arc bumps, zero row
+            // copies, no copy-on-write even while a sink retains an old
+            // snapshot — see engine::window).
+            struct Staged {
+                s: usize,
+                qi: usize,
+                input: ChunkedBatch,
+                snapshot: Option<ChunkedBatch>,
+            }
+            let mut staged: Vec<Staged> = Vec::new();
+            for &(s, ref batch) in &admitted {
+                for &qi in &self.sources[s].queries {
                     let qdef = &self.queries[qi];
                     let query = &qdef.query;
                     if let Some(newest) = batch.newest_event_time() {
@@ -615,271 +643,293 @@ impl<'rt> Session<'rt> {
                         } else {
                             (batch.chunked()?, windows[qi].snapshot_chunks()?)
                         };
-                    staged.push(Staged { qi, input, snapshot });
+                    staged.push(Staged { s, qi, input, snapshot });
                 }
+            }
 
-                // ---- Planning. A multi-query LMStream batch is planned
-                // jointly: the scheduler collects every query's Eq. 7–9
-                // candidate costs (the same SizeEstimator-fed path
-                // map_device runs on) and rations the shared GPU by
-                // benefit-per-GPU-second — concurrent idle-GPU MapDevice
-                // plans would double-book the device. Single-query
-                // batches, ablations (co_schedule = false) and fixed
-                // policies keep per-query plans. Cluster runs also keep
-                // per-query plans: the scheduler models one shared
-                // device, while a cluster executes 1/E row shares
-                // against per-executor GPUs — joint demotions tuned for
-                // the wrong topology could *worsen* the cluster
-                // makespan (topology-aware joint planning is a ROADMAP
-                // follow-up); per-executor timelines below still charge
-                // the real contention either way.
-                let t_plan = Instant::now();
-                let plans: Vec<PhysicalPlan> = if cfg.mode == Mode::LmStream
-                    && cfg.co_schedule
-                    && cfg.cluster.is_none()
-                    && staged.len() > 1
-                {
-                    let mut cands: Vec<QueryCandidate> =
-                        Vec::with_capacity(staged.len());
-                    for st in &staged {
-                        let qdef = &self.queries[st.qi];
-                        // Part_(i,j): partition share of the data the
-                        // processing phase actually touches.
-                        let part =
-                            mean_partition_bytes(st.input.alloc_bytes(), cfg.num_cores);
-                        let (aux_bytes, aux_chunks) = if qdef.has_join {
-                            match st.snapshot.as_ref() {
-                                Some(w) => (w.alloc_bytes() as f64, w.num_chunks()),
-                                None => (0.0, 0),
-                            }
-                        } else {
-                            (0.0, 0)
-                        };
-                        cands.push(QueryCandidate::build(
-                            &qdef.query,
-                            part,
-                            self.inf_pt,
-                            cfg.base_trans_cost,
-                            &qdef.size_est,
-                            st.input.num_chunks(),
-                            aux_bytes,
-                            aux_chunks,
-                        )?);
-                    }
-                    schedule::plan_joint(&cands, &self.model, cfg.num_cores, cfg.num_gpus)
-                        .plans
-                } else {
-                    let mut plans = Vec::with_capacity(staged.len());
-                    for st in &staged {
-                        let qdef = &self.queries[st.qi];
-                        let query = &qdef.query;
-                        let plan = match cfg.mode {
-                            Mode::LmStream => {
-                                let part = mean_partition_bytes(
-                                    st.input.alloc_bytes(),
-                                    cfg.num_cores,
-                                );
-                                map_device(
-                                    query,
-                                    part,
-                                    self.inf_pt,
-                                    cfg.base_trans_cost,
-                                    &qdef.size_est,
-                                    st.input.num_chunks(),
-                                )?
-                            }
-                            Mode::Baseline | Mode::AllGpu => {
-                                PhysicalPlan::uniform(query, Device::Gpu)
-                            }
-                            Mode::BaselineCpu | Mode::AllCpu => {
-                                PhysicalPlan::uniform(query, Device::Cpu)
-                            }
-                            Mode::StaticPreference => static_preference_plan(query),
-                        };
-                        plans.push(plan);
-                    }
-                    plans
-                };
-                let map_device_total = t_plan.elapsed();
-
-                // ---- Execution on the shared device timeline. Queries
-                // run concurrently from batch start (their CPU pipelines
-                // are independent Spark jobs) while all simulated GPU
-                // ops of this round serialize FIFO on one GpuTimeline
-                // per device (per executor on a cluster) — so the clock
-                // advances by the *contended makespan*, not the sum of
-                // per-query idle-device procs, and each query's proc
-                // carries its observable gpu_wait share.
-                struct Pending {
-                    qi: usize,
-                    result: ChunkedBatch,
-                    branch_results: Vec<(usize, ChunkedBatch)>,
-                    proc: Duration,
-                    gpu_wait: Duration,
-                    traces: Vec<OpTrace>,
-                    map_device_time: Duration,
-                    gpu_ops: usize,
-                    total_ops: usize,
-                }
-                let mut pending: Vec<Pending> = Vec::new();
-                let mut makespan = Duration::ZERO;
-                let mut timeline = GpuTimeline::new();
-                let mut cluster_timelines: Vec<GpuTimeline> = match &cfg.cluster {
-                    Some(spec) => vec![GpuTimeline::new(); spec.executors.len()],
-                    None => Vec::new(),
-                };
-                for (st, plan) in staged.into_iter().zip(plans.iter()) {
-                    let Staged { qi, input, snapshot } = st;
-                    let qdef = &self.queries[qi];
-                    let query = &qdef.query;
-                    // A join's build side before any state: empty window.
-                    let empty_window = ChunkedBatch::new(input.schema().clone());
-                    let join_side = if qdef.has_join {
-                        Some(snapshot.as_ref().unwrap_or(&empty_window))
+            // ---- Planning. A multi-query LMStream round is planned
+            // jointly across *everything* staged — all sources, all
+            // executors: the scheduler collects every query's Eq. 7–9
+            // candidate costs (the same SizeEstimator-fed path
+            // map_device runs on) and rations the topology's
+            // per-executor GPUs by benefit-per-GPU-second, choosing the
+            // grant order (shortest-GPU-segment-first where that beats
+            // FIFO) the execution below follows — concurrent idle-GPU
+            // MapDevice plans would double-book the devices.
+            // Single-query rounds, ablations (co_schedule = false) and
+            // fixed policies keep per-query plans in staging order.
+            let t_plan = Instant::now();
+            let (plans, exec_order): (Vec<PhysicalPlan>, Vec<usize>) = if cfg.mode
+                == Mode::LmStream
+                && cfg.co_schedule
+                && staged.len() > 1
+            {
+                let mut cands: Vec<QueryCandidate> = Vec::with_capacity(staged.len());
+                for st in &staged {
+                    let qdef = &self.queries[st.qi];
+                    // Part_(i,j): partition share of the data the
+                    // processing phase actually touches — one core of
+                    // the whole topology (each executor's per-core
+                    // share of its row split is exactly this).
+                    let part = mean_partition_bytes(
+                        st.input.alloc_bytes(),
+                        topo.total_cores(),
+                    );
+                    let (aux_bytes, aux_chunks) = if qdef.has_join {
+                        match st.snapshot.as_ref() {
+                            Some(w) => (w.alloc_bytes() as f64, w.num_chunks()),
+                            None => (0.0, 0),
+                        }
                     } else {
-                        None
+                        (0.0, 0)
                     };
-
-                    // Processing phase (single executor or cluster-wide).
-                    let (result, branch_results, proc, gpu_wait, traces) =
-                        match &cfg.cluster {
-                            None => {
-                                let env = ExecEnv {
-                                    model: &self.model,
-                                    backend: cfg.backend,
-                                    num_cores: cfg.num_cores,
-                                    num_gpus: cfg.num_gpus,
-                                    runtime,
-                                };
-                                let o = exec::execute_with_occupancy(
-                                    query,
-                                    plan,
-                                    input,
-                                    join_side,
-                                    &env,
-                                    &mut timeline,
-                                )?;
-                                (o.result, o.branch_results, o.proc, o.contention, o.traces)
-                            }
-                            Some(spec) => {
-                                let o = cluster::execute_on_cluster_with_occupancy(
-                                    spec,
-                                    query,
-                                    plan,
-                                    input,
-                                    join_side,
-                                    &self.model,
-                                    cfg.backend,
-                                    runtime,
-                                    Some(&mut cluster_timelines),
-                                )?;
-                                // Merge per-executor traces (sum byte
-                                // volumes per op) for the size estimator.
-                                let mut merged: Vec<OpTrace> =
-                                    o.per_executor[0].traces.clone();
-                                for ex in &o.per_executor[1..] {
-                                    for (m, t) in merged.iter_mut().zip(&ex.traces) {
-                                        m.in_bytes += t.in_bytes;
-                                        m.out_bytes += t.out_bytes;
-                                    }
-                                }
-                                // The batch completes at the straggler,
-                                // so the wait that actually sits inside
-                                // this record's proc is the *straggler
-                                // executor's* contention (another
-                                // executor's larger wait can hide
-                                // entirely behind the barrier).
-                                let wait = o
-                                    .per_executor
-                                    .iter()
-                                    .max_by_key(|e| e.proc)
-                                    .map(|e| e.contention)
-                                    .unwrap_or(Duration::ZERO);
-                                (o.result, o.branch_results, o.proc, wait, merged)
-                            }
-                        };
-                    makespan = makespan.max(proc);
-                    pending.push(Pending {
-                        qi,
-                        result,
-                        branch_results,
-                        proc,
-                        gpu_wait,
-                        traces,
-                        // Planning is one shared (possibly joint) pass:
-                        // charge it to the primary query only, like the
-                        // other shared phase costs.
-                        map_device_time: if qi == primary {
-                            map_device_total
-                        } else {
-                            Duration::ZERO
-                        },
-                        gpu_ops: plan.gpu_ops(),
-                        total_ops: query.len(),
-                    });
+                    cands.push(QueryCandidate::build(
+                        &qdef.query,
+                        part,
+                        self.inf_pt,
+                        cfg.base_trans_cost,
+                        &qdef.size_est,
+                        st.input.num_chunks(),
+                        aux_bytes,
+                        aux_chunks,
+                    )?);
                 }
+                let jp = schedule::plan_joint(&cands, &self.model, &topo);
+                let order = jp.predicted.order.clone();
+                (jp.plans, order)
+            } else {
+                let mut plans = Vec::with_capacity(staged.len());
+                for st in &staged {
+                    let qdef = &self.queries[st.qi];
+                    let query = &qdef.query;
+                    let plan = match cfg.mode {
+                        Mode::LmStream => {
+                            let part = mean_partition_bytes(
+                                st.input.alloc_bytes(),
+                                topo.total_cores(),
+                            );
+                            map_device(
+                                query,
+                                part,
+                                self.inf_pt,
+                                cfg.base_trans_cost,
+                                &qdef.size_est,
+                                st.input.num_chunks(),
+                            )?
+                        }
+                        Mode::Baseline | Mode::AllGpu => {
+                            PhysicalPlan::uniform(query, Device::Gpu)
+                        }
+                        Mode::BaselineCpu | Mode::AllCpu => {
+                            PhysicalPlan::uniform(query, Device::Cpu)
+                        }
+                        Mode::StaticPreference => static_preference_plan(query),
+                    };
+                    plans.push(plan);
+                }
+                (plans, (0..staged.len()).collect())
+            };
+            let map_device_total = t_plan.elapsed();
 
-                clock.advance(
-                    makespan + map_device_total + construct_acc[s] + opt_blocking,
-                );
+            // ---- Execution on the round's shared device timelines.
+            // Queries run concurrently from round start (their CPU
+            // pipelines are independent Spark jobs) while all simulated
+            // GPU ops of the round serialize on one GpuTimeline per
+            // executor of the topology, in the scheduler's chosen grant
+            // order — so the clock advances by the *contended makespan*
+            // across every admitted source, not per-source fictions,
+            // and each query's proc carries its observable gpu_wait
+            // share.
+            struct Pending {
+                s: usize,
+                qi: usize,
+                result: ChunkedBatch,
+                branch_results: Vec<(usize, ChunkedBatch)>,
+                proc: Duration,
+                gpu_wait: Duration,
+                traces: Vec<OpTrace>,
+                gpu_ops: usize,
+                total_ops: usize,
+            }
+            let mut pending: Vec<Pending> = Vec::new();
+            let mut makespan = Duration::ZERO;
+            // One execution timeline per executor of the topology — the
+            // same bank the scheduler simulated (single node = 1).
+            let mut timelines: Vec<GpuTimeline> =
+                vec![GpuTimeline::new(); topo.num_executors()];
+            let mut staged: Vec<Option<Staged>> = staged.into_iter().map(Some).collect();
+            for &idx in &exec_order {
+                let Staged { s, qi, input, snapshot } =
+                    staged[idx].take().expect("each staged query executes once");
+                let plan = &plans[idx];
+                let qdef = &self.queries[qi];
+                let query = &qdef.query;
+                // A join's build side before any state: empty window.
+                let empty_window = ChunkedBatch::new(input.schema().clone());
+                let join_side = if qdef.has_join {
+                    Some(snapshot.as_ref().unwrap_or(&empty_window))
+                } else {
+                    None
+                };
 
-                // ---- Metrics (Eqs. 4/5, Table IV) + sinks + learning.
-                let buffs: Vec<Duration> = batch
+                // Processing phase (single executor or cluster-wide).
+                let (result, branch_results, proc, gpu_wait, traces) =
+                    match &cfg.cluster {
+                        None => {
+                            let env = ExecEnv {
+                                model: &self.model,
+                                backend: cfg.backend,
+                                num_cores: cfg.num_cores,
+                                num_gpus: cfg.num_gpus,
+                                runtime,
+                            };
+                            let o = exec::execute_with_occupancy(
+                                query,
+                                plan,
+                                input,
+                                join_side,
+                                &env,
+                                &mut timelines[0],
+                            )?;
+                            (o.result, o.branch_results, o.proc, o.contention, o.traces)
+                        }
+                        Some(spec) => {
+                            let o = cluster::execute_on_cluster_with_occupancy(
+                                spec,
+                                query,
+                                plan,
+                                input,
+                                join_side,
+                                &self.model,
+                                cfg.backend,
+                                runtime,
+                                Some(&mut timelines),
+                            )?;
+                            // Merge per-executor traces (sum byte
+                            // volumes per op) for the size estimator.
+                            let mut merged: Vec<OpTrace> =
+                                o.per_executor[0].traces.clone();
+                            for ex in &o.per_executor[1..] {
+                                for (m, t) in merged.iter_mut().zip(&ex.traces) {
+                                    m.in_bytes += t.in_bytes;
+                                    m.out_bytes += t.out_bytes;
+                                }
+                            }
+                            // The batch completes at the straggler,
+                            // so the wait that actually sits inside
+                            // this record's proc is the *straggler
+                            // executor's* contention (another
+                            // executor's larger wait can hide
+                            // entirely behind the barrier).
+                            let wait = o
+                                .per_executor
+                                .iter()
+                                .max_by_key(|e| e.proc)
+                                .map(|e| e.contention)
+                                .unwrap_or(Duration::ZERO);
+                            (o.result, o.branch_results, o.proc, wait, merged)
+                        }
+                    };
+                makespan = makespan.max(proc);
+                pending.push(Pending {
+                    s,
+                    qi,
+                    result,
+                    branch_results,
+                    proc,
+                    gpu_wait,
+                    traces,
+                    gpu_ops: plan.gpu_ops(),
+                    total_ops: query.len(),
+                });
+            }
+
+            // The round's construct work: every admitted source spent
+            // its accumulated admission time getting here.
+            let construct_total: Duration =
+                admitted.iter().map(|&(s, _)| construct_acc[s]).sum();
+            clock.advance(makespan + map_device_total + construct_total + opt_blocking);
+
+            // ---- Metrics (Eqs. 4/5, Table IV) + sinks + learning.
+            // Per-source batch context (bytes, dataset count, buffering
+            // shares) for the records below.
+            let mut src_bytes: Vec<usize> = vec![0; num_sources];
+            let mut src_datasets: Vec<usize> = vec![0; num_sources];
+            let mut src_buffs: Vec<Vec<Duration>> = vec![Vec::new(); num_sources];
+            for &(s, ref batch) in &admitted {
+                src_bytes[s] = batch.wire_bytes();
+                src_datasets[s] = batch.num_datasets();
+                src_buffs[s] = batch
                     .datasets
                     .iter()
                     .map(|d| admitted_at.saturating_sub(d.created_at))
                     .collect();
-                for p in pending {
-                    let batch_index = metrics[p.qi].batches();
-                    let completed_at = clock.now();
-                    deliver(p.qi, batch_index, &p.result, completed_at)?;
-                    // Owned per-query sinks: primary result plus any
-                    // registered branch sinks (ExecOutcome/
-                    // ClusterOutcome branch_results — no longer dropped).
-                    {
-                        let qdef = &mut self.queries[p.qi];
-                        if let Some(sink) = qdef.sink.as_mut() {
-                            sink.deliver(batch_index, &p.result, completed_at)?;
-                        }
-                        for (op_id, sink) in qdef.branch_sinks.iter_mut() {
-                            if let Some((_, b)) =
-                                p.branch_results.iter().find(|(id, _)| *id == *op_id)
-                            {
-                                sink.deliver(batch_index, b, completed_at)?;
-                            }
+            }
+            for p in pending {
+                let batch_index = metrics[p.qi].batches();
+                let completed_at = clock.now();
+                deliver(p.qi, batch_index, &p.result, completed_at)?;
+                // Owned per-query sinks: primary result plus any
+                // registered branch sinks (ExecOutcome/
+                // ClusterOutcome branch_results — no longer dropped).
+                {
+                    let qdef = &mut self.queries[p.qi];
+                    if let Some(sink) = qdef.sink.as_mut() {
+                        sink.deliver(batch_index, &p.result, completed_at)?;
+                    }
+                    for (op_id, sink) in qdef.branch_sinks.iter_mut() {
+                        if let Some((_, b)) =
+                            p.branch_results.iter().find(|(id, _)| *id == *op_id)
+                        {
+                            sink.deliver(batch_index, b, completed_at)?;
                         }
                     }
-                    // Shared (per-source) phase costs are charged to the
-                    // primary query only, so phase totals don't double-
-                    // count admission/optimizer time.
-                    let shared = p.qi == primary;
-                    let rec = BatchRecord {
-                        index: batch_index,
-                        admitted_at,
-                        num_datasets: batch.num_datasets(),
-                        bytes: batch_bytes,
-                        max_buffering: Duration::ZERO, // filled by record
-                        proc: p.proc,
-                        gpu_wait: p.gpu_wait,
-                        max_latency: Duration::ZERO, // filled by record
-                        inf_pt: self.inf_pt,
-                        gpu_ops: p.gpu_ops,
-                        total_ops: p.total_ops,
-                        construct_time: if shared {
-                            construct_acc[s]
-                        } else {
-                            Duration::ZERO
-                        },
-                        map_device_time: p.map_device_time,
-                        opt_blocking: if shared { opt_blocking } else { Duration::ZERO },
-                    };
-                    metrics[p.qi].record(rec, &buffs);
-                    self.queries[p.qi].size_est.observe(&p.traces);
                 }
-                construct_acc[s] = Duration::ZERO;
+                // Shared phase costs are charged once so phase totals
+                // never double count: per-source construct work to that
+                // source's primary, the round-wide planning pass and
+                // optimizer pickup to the round's lead primary.
+                let rec = BatchRecord {
+                    index: batch_index,
+                    round,
+                    admitted_at,
+                    num_datasets: src_datasets[p.s],
+                    bytes: src_bytes[p.s],
+                    max_buffering: Duration::ZERO, // filled by record
+                    proc: p.proc,
+                    gpu_wait: p.gpu_wait,
+                    max_latency: Duration::ZERO, // filled by record
+                    inf_pt: self.inf_pt,
+                    gpu_ops: p.gpu_ops,
+                    total_ops: p.total_ops,
+                    construct_time: if p.qi == self.sources[p.s].primary {
+                        construct_acc[p.s]
+                    } else {
+                        Duration::ZERO
+                    },
+                    map_device_time: if p.qi == lead_primary {
+                        map_device_total
+                    } else {
+                        Duration::ZERO
+                    },
+                    opt_blocking: if p.qi == lead_primary {
+                        opt_blocking
+                    } else {
+                        Duration::ZERO
+                    },
+                };
+                metrics[p.qi].record(rec, &src_buffs[p.s]);
+                self.queries[p.qi].size_est.observe(&p.traces);
+            }
 
-                // ---- Async parameter optimization (Eq. 10 inputs), fed
-                // from the source's primary query.
+            // ---- Per-source learning, window upkeep, checkpointing.
+            for &(s, ref batch) in &admitted {
+                construct_acc[s] = Duration::ZERO;
+                let primary = self.sources[s].primary;
+
+                // Async parameter optimization (Eq. 10 inputs), fed from
+                // the source's primary query — whose latest record now
+                // carries the *round's* contended latency.
                 if cfg.mode == Mode::LmStream {
                     let m = &metrics[primary];
                     let last = m.records().last().expect("just recorded");
@@ -894,19 +944,19 @@ impl<'rt> Session<'rt> {
                     );
                 }
 
-                // ---- Window state ingests the processed datasets.
+                // Window state ingests the processed datasets.
                 // (Aggregation-path queries already ingested the batch
                 // before snapshotting their execution input, above.)
-                for &qi in &query_ids {
+                for &qi in &self.sources[s].queries {
                     let q = &self.queries[qi];
                     if q.query.uses_window_state && q.has_join {
                         windows[qi].push(&batch.datasets);
                     }
                 }
 
-                // ---- §III-E checkpoint / state flush. The file stays
-                // keyed by the source's primary query name, but carries
-                // one metric state per registered query, so secondary
+                // §III-E checkpoint / state flush. The file stays keyed
+                // by the source's primary query name, but carries one
+                // metric state per registered query, so secondary
                 // queries recover too.
                 if let Some(st) = &ckpt_store {
                     let newest = batch
@@ -916,7 +966,8 @@ impl<'rt> Session<'rt> {
                         .max()
                         .unwrap_or(admitted_at);
                     let m = &metrics[primary];
-                    let queries: Vec<QueryMetricState> = query_ids
+                    let queries: Vec<QueryMetricState> = self.sources[s]
+                        .queries
                         .iter()
                         .map(|&qi| QueryMetricState {
                             name: self.queries[qi].name.clone(),

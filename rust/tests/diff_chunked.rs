@@ -528,6 +528,49 @@ fn prop_window_chunked_snapshot_interleavings() {
     });
 }
 
+/// Dedicated pin for the k-way-merge chunked sort (it no longer
+/// coalesces before sorting): arbitrary layouts × masks × directions ×
+/// duplicate-heavy keys must stay bit-identical to the single-batch
+/// kernel on the coalesced input — including stability across chunk
+/// boundaries — and the output must remain a single chunk (sort is the
+/// pipeline's coalesce point).
+#[test]
+fn prop_kway_merge_sort_equals_coalesced_sort() {
+    let mut r = Runner::new(0xd1ff_0005, 200);
+    r.run("sort_chunks == sort_by(coalesce)", |g| {
+        let mut seed = random_batch(g);
+        if g.bool() {
+            // Duplicate-heavy keys: quantize v to a handful of values so
+            // cross-chunk ties (the stability cases) are common.
+            let vals: Vec<f32> = seed
+                .column("v")
+                .map_err(|e| e.to_string())?
+                .as_f32()
+                .map_err(|e| e.to_string())?
+                .iter()
+                .map(|x| x.round() / 4.0)
+                .collect();
+            seed.columns[0] = lmstream::engine::column::Column::F32(vals.into());
+        }
+        let chunked = random_layout(g, &seed);
+        let col = any_col(g, &seed.schema);
+        let desc = g.bool();
+        let merged =
+            lmstream::engine::ops::sort_chunks(&chunked, &col, desc).map_err(|e| e.to_string())?;
+        let reference =
+            lmstream::engine::ops::sort_by(&seed, &col, desc).map_err(|e| e.to_string())?;
+        prop_assert(
+            merged.num_chunks() <= 1,
+            "sort output must stay a single (or empty) chunk".to_string(),
+        )?;
+        prop_assert(
+            fingerprint(&merged.coalesce()) == fingerprint(&reference),
+            format!("k-way merge diverged on `{col}` desc={desc}"),
+        )?;
+        Ok(())
+    });
+}
+
 // ------------------------------- 4. single-node vs cluster branch outputs
 
 /// The cluster path no longer drops branch sinks: a branched query run

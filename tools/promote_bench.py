@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Promote a CI-measured `bench-hotpath` artifact into the committed
+perf baseline, arming bench_gate.py's +/-20% per-bench mean drift gate.
+
+Usage:
+  promote_bench.py MEASURED.json [--baseline PATH] [--out PATH] [--note TEXT]
+
+  MEASURED.json   a BENCH_hotpath.json downloaded from a green CI
+                  perf-smoke run (the `bench-hotpath` artifact)
+  --baseline      the committed baseline whose gate fields to preserve
+                  (default: rust/BENCH_hotpath.json)
+  --out           where to write the promoted baseline
+                  (default: overwrite --baseline in place)
+  --note          provenance note appended to the output
+
+The promoted file is the measured point (per-bench means + ratio
+metrics) with the baseline's machine-independent gate fields
+(min_window_snapshot_speedup, max_union_fanin_scaling,
+max_coschedule_makespan_ratio) carried over, and provenance flipped to
+"ci-measured". Before writing, the measured point is validated against
+those gates — promoting a point that would immediately fail CI is
+refused.
+
+Workflow: CI's perf-smoke job runs this after every bench run and
+uploads the result as the `bench-baseline-promoted` artifact; download
+it from a green run and commit it over rust/BENCH_hotpath.json.
+
+Exit code 0 = promoted, 1 = measured point rejected, 2 = usage/IO error.
+"""
+
+import argparse
+import json
+import sys
+
+GATE_FIELDS = (
+    "min_window_snapshot_speedup",
+    "max_union_fanin_scaling",
+    "max_coschedule_makespan_ratio",
+)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"promote_bench: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def validate(measured, gates):
+    """The measured point must satisfy the gates it will be committed
+    with — otherwise the very next CI run would fail on its own
+    baseline."""
+    problems = []
+    if measured.get("schema_version", 0) < 3:
+        problems.append(
+            f"schema_version {measured.get('schema_version')} < 3 — stale bench output"
+        )
+    results = measured.get("results") or []
+    if not results:
+        problems.append("results list is empty — bench did not run")
+    for r in results:
+        if not r.get("name") or "mean_s" not in r or r["mean_s"] is None:
+            problems.append(f"result entry missing name/mean_s: {r}")
+    speedup = measured.get("window_snapshot_speedup") or 0.0
+    floor = gates.get("min_window_snapshot_speedup")
+    if floor is not None and speedup < floor:
+        problems.append(f"window_snapshot_speedup {speedup:.2f} < {floor}")
+    scaling = measured.get("union_fanin_scaling")
+    cap = gates.get("max_union_fanin_scaling")
+    if cap is not None and (scaling is None or scaling <= 0.0 or scaling > cap):
+        problems.append(f"union_fanin_scaling {scaling} outside (0, {cap}]")
+    ratio = measured.get("coschedule_makespan_ratio")
+    cap = gates.get("max_coschedule_makespan_ratio")
+    if cap is not None and (ratio is None or ratio <= 0.0 or ratio > cap):
+        problems.append(f"coschedule_makespan_ratio {ratio} outside (0, {cap}]")
+    return problems
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="Promote a CI bench artifact into the committed baseline."
+    )
+    ap.add_argument("measured")
+    ap.add_argument("--baseline", default="rust/BENCH_hotpath.json")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--note", default=None)
+    args = ap.parse_args()
+
+    measured = load(args.measured)
+    baseline = load(args.baseline)
+    gates = {k: baseline.get(k) for k in GATE_FIELDS if baseline.get(k) is not None}
+    if not gates:
+        print(
+            "promote_bench: baseline declares no gate fields — refusing to "
+            "promote an ungated baseline",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+
+    problems = validate(measured, gates)
+    if problems:
+        print("promote_bench REJECTED the measured point:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        sys.exit(1)
+
+    promoted = dict(measured)
+    promoted.update(gates)
+    promoted["provenance"] = "ci-measured"
+    promoted["note"] = args.note or (
+        "CI-measured perf baseline (promoted via tools/promote_bench.py). "
+        "Per-bench mean_s entries arm tools/bench_gate.py's +/-20% drift "
+        "gate; the min_/max_ ratio gate fields are machine-independent "
+        "and carried from the previous baseline. To refresh: download the "
+        "bench-baseline-promoted artifact from a green perf-smoke run and "
+        "commit it over rust/BENCH_hotpath.json."
+    )
+    out = args.out or args.baseline
+    try:
+        with open(out, "w") as f:
+            json.dump(promoted, f, separators=(",", ":"))
+            f.write("\n")
+    except OSError as e:
+        print(f"promote_bench: cannot write {out}: {e}", file=sys.stderr)
+        sys.exit(2)
+    print(
+        f"promoted {len(promoted.get('results', []))} bench means into {out} "
+        f"(gates: {', '.join(sorted(gates))})"
+    )
+
+
+if __name__ == "__main__":
+    main()
