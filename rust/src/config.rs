@@ -125,6 +125,17 @@ pub struct Config {
     /// after every micro-batch (§III-E's checkpointing/state-flush step)
     /// and restored on the next run of the same workload.
     pub checkpoint_dir: Option<String>,
+    /// Write-ahead-log directory — when set, every admitted micro-batch
+    /// is appended (length-prefixed, CRC-checksummed) and fsynced to a
+    /// per-source log *before* execution, and sink deliveries are
+    /// recorded in an exactly-once ledger; on restart the session
+    /// reconciles checkpoint ⨯ WAL ⨯ ledger per [`Config::recovery_mode`].
+    /// Unset = the pre-durability engine, byte-for-byte.
+    pub wal_dir: Option<String>,
+    /// How a restart treats logged-but-uncheckpointed micro-batches when
+    /// [`Config::wal_dir`] is set (see
+    /// [`RecoveryMode`](crate::durability::RecoveryMode)).
+    pub recovery_mode: crate::durability::RecoveryMode,
 }
 
 impl Default for Config {
@@ -146,6 +157,8 @@ impl Default for Config {
             artifact_dir: "artifacts".to_string(),
             cluster: None,
             checkpoint_dir: None,
+            wal_dir: None,
+            recovery_mode: crate::durability::RecoveryMode::Precise,
         }
     }
 }

@@ -55,13 +55,25 @@ pub struct Checkpoint {
     pub queries: Vec<QueryMetricState>,
     /// Optimizer history.
     pub history: Vec<HistoryPoint>,
+    /// Highest WAL sequence number this checkpoint covers (format ≥ 2;
+    /// 0 for legacy files and WAL-less runs — every logged record is
+    /// then part of the recovery tail).
+    pub wal_high_water: u64,
+    /// Scheduling round counter at checkpoint time (format ≥ 2; the
+    /// resumed session continues numbering from here so WAL-logged
+    /// rounds stay unique across incarnations).
+    pub round_high_water: usize,
 }
 
 impl Checkpoint {
     fn to_json(&self) -> Json {
         obj(vec![
-            ("format", num(1.0)),
+            // Format 2 = format 1 + WAL position / round high-water
+            // (absent fields read back as 0 under the same loader).
+            ("format", num(2.0)),
             ("workload", s(&self.workload)),
+            ("wal_high_water", num(self.wal_high_water as f64)),
+            ("round_high_water", num(self.round_high_water as f64)),
             ("batches", num(self.batches as f64)),
             ("processed_up_to_ns", num(self.processed_up_to.0 as f64)),
             ("inf_pt", num(self.inf_pt)),
@@ -103,7 +115,7 @@ impl Checkpoint {
 
     fn from_json(j: &Json) -> Result<Checkpoint> {
         let format = j.req("format")?.as_usize().unwrap_or(0);
-        if format != 1 {
+        if !(1..=2).contains(&format) {
             return Err(Error::Json(format!("unsupported checkpoint format {format}")));
         }
         let history = j
@@ -146,6 +158,17 @@ impl Checkpoint {
             max_lat_sum_secs: j.req("max_lat_sum_secs")?.as_f64().unwrap_or(0.0),
             queries,
             history,
+            // Format-1 files predate the WAL: high-water 0 means "the
+            // whole log is tail", round numbering restarts — exactly the
+            // legacy primary-only recovery semantics.
+            wal_high_water: j
+                .get("wal_high_water")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0) as u64,
+            round_high_water: j
+                .get("round_high_water")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
         })
     }
 
@@ -185,12 +208,26 @@ impl CheckpointStore {
         self.dir.join(format!("{}.ckpt.json", workload.to_lowercase()))
     }
 
-    /// Atomically persist (write temp + rename).
+    /// Durably and atomically persist.
+    ///
+    /// Ordering invariant: write temp → fsync temp → rename → fsync
+    /// parent dir. The temp fsync guarantees the *contents* are on disk
+    /// before the rename can make them visible (else a crash after the
+    /// rename journals can surface an empty/partial checkpoint); the
+    /// directory fsync guarantees the rename itself survives. The WAL
+    /// is only truncated after this returns, so a checkpoint that
+    /// didn't make it durable leaves the log covering its batches.
     pub fn save(&self, ckpt: &Checkpoint) -> Result<()> {
         let path = self.path_for(&ckpt.workload);
         let tmp = path.with_extension("tmp");
-        std::fs::write(&tmp, ckpt.to_json().render())?;
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            use std::io::Write as _;
+            f.write_all(ckpt.to_json().render().as_bytes())?;
+            f.sync_all()?;
+        }
         std::fs::rename(&tmp, &path)?;
+        crate::durability::wal::sync_parent_dir(&path)?;
         Ok(())
     }
 
@@ -257,6 +294,8 @@ mod tests {
                 HistoryPoint { throughput: 3e4, max_latency: 5.0, inf_pt: 1.5e5 },
                 HistoryPoint { throughput: 3.2e4, max_latency: 4.5, inf_pt: 1.4e5 },
             ],
+            wal_high_water: 42,
+            round_high_water: 17,
         }
     }
 
@@ -281,6 +320,40 @@ mod tests {
         assert_eq!(loaded.queries, c.queries);
         assert_eq!(loaded.queries[1].name, "side");
         assert_eq!(loaded.queries[1].cumulative_proc_secs, 80.0);
+        // Format-2 durability fields round trip.
+        assert_eq!(loaded.wal_high_water, 42);
+        assert_eq!(loaded.round_high_water, 17);
+    }
+
+    #[test]
+    fn format1_file_loads_with_zero_wal_position() {
+        // A pre-durability (format-1) file has neither wal_high_water
+        // nor round_high_water; it must still load, with both at 0 (the
+        // whole WAL — if any — is recovery tail, rounds renumber).
+        let st = store("format1");
+        st.save(&demo()).unwrap();
+        let path = st.path_for("lr1s");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let legacy = text
+            .replace("\"format\":2,", "\"format\":1,")
+            .replace("\"wal_high_water\":42,", "")
+            .replace("\"round_high_water\":17,", "");
+        assert_ne!(text, legacy, "fixture must strip the format-2 fields");
+        std::fs::write(&path, legacy).unwrap();
+        let loaded = st.load("lr1s").unwrap().unwrap();
+        assert_eq!(loaded.wal_high_water, 0);
+        assert_eq!(loaded.round_high_water, 0);
+        assert_eq!(loaded.batches, demo().batches);
+    }
+
+    #[test]
+    fn future_format_rejected() {
+        let st = store("future");
+        st.save(&demo()).unwrap();
+        let path = st.path_for("lr1s");
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"format\":2,", "\"format\":3,")).unwrap();
+        assert!(matches!(st.load("lr1s"), Err(Error::Json(_))));
     }
 
     #[test]

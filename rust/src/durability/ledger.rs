@@ -1,0 +1,199 @@
+//! Exactly-once sink ledger.
+//!
+//! One JSON file per session records, per query, the high-water batch
+//! index (and the scheduling round that produced it) whose output has
+//! been durably delivered to the sinks. Batch indices are per-query
+//! monotone (checkpoint-restored counts keep them monotone *across*
+//! incarnations), so a high-water mark is a complete dedup record: on
+//! WAL replay the session consults [`SinkLedger::already_delivered`]
+//! and skips re-emission, turning at-least-once replay into
+//! exactly-once output.
+//!
+//! Persistence runs after *every* delivery (atomic replace + fsync file
+//! + fsync dir), so a crash between two deliveries never leaves an
+//! unrecorded one. The remaining window — a crash after the sink
+//! accepted a batch but before its ledger write hit disk — degrades
+//! that single batch to at-least-once; a transactional sink protocol
+//! (two-phase commit with the sink) is the documented follow-up.
+
+use crate::error::{Error, Result};
+use crate::util::json::{num, obj, Json};
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Per-query delivery high-water.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LedgerEntry {
+    /// Scheduling round of the highest delivered batch.
+    pub round: u64,
+    /// Highest batch index delivered (indices below it are delivered
+    /// too — delivery is in index order).
+    pub batch: u64,
+}
+
+/// Durable record of what each query's sinks have already received.
+pub struct SinkLedger {
+    path: PathBuf,
+    /// Keyed by lowercased query name.
+    entries: BTreeMap<String, LedgerEntry>,
+}
+
+impl SinkLedger {
+    /// Load the ledger at `path`, or start empty if absent.
+    pub fn open(path: &Path) -> Result<SinkLedger> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(SinkLedger { path: path.to_path_buf(), entries: BTreeMap::new() })
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let j = Json::parse(&text)?;
+        let format = j.req("format")?.as_usize().unwrap_or(0);
+        if format != 1 {
+            return Err(Error::Durability(format!(
+                "unsupported sink ledger format {format}"
+            )));
+        }
+        let mut entries = BTreeMap::new();
+        if let Some(Json::Obj(queries)) = j.get("queries") {
+            for (name, e) in queries {
+                entries.insert(
+                    name.clone(),
+                    LedgerEntry {
+                        round: e.req("round")?.as_f64().unwrap_or(0.0) as u64,
+                        batch: e.req("batch")?.as_f64().unwrap_or(0.0) as u64,
+                    },
+                );
+            }
+        }
+        Ok(SinkLedger { path: path.to_path_buf(), entries })
+    }
+
+    /// Highest delivered batch index for `query`, if any delivery has
+    /// been recorded.
+    pub fn high_water(&self, query: &str) -> Option<LedgerEntry> {
+        self.entries.get(&query.to_lowercase()).copied()
+    }
+
+    /// True when `batch_index` of `query` has already been durably
+    /// delivered (replay must not re-emit it).
+    pub fn already_delivered(&self, query: &str, batch_index: u64) -> bool {
+        self.high_water(query).is_some_and(|e| e.batch >= batch_index)
+    }
+
+    /// Record a delivery (monotone: an older index never regresses the
+    /// mark). Call [`SinkLedger::persist`] to make it durable.
+    pub fn record(&mut self, query: &str, round: u64, batch_index: u64) {
+        let key = query.to_lowercase();
+        match self.entries.get_mut(&key) {
+            Some(e) if e.batch >= batch_index => {}
+            Some(e) => *e = LedgerEntry { round, batch: batch_index },
+            None => {
+                self.entries.insert(key, LedgerEntry { round, batch: batch_index });
+            }
+        }
+    }
+
+    /// Durably persist: write-temp → fsync temp → rename → fsync dir
+    /// (the same ordering invariant the checkpoint store states).
+    pub fn persist(&self) -> Result<()> {
+        let queries = Json::Obj(
+            self.entries
+                .iter()
+                .map(|(name, e)| {
+                    (
+                        name.clone(),
+                        obj(vec![
+                            ("round", num(e.round as f64)),
+                            ("batch", num(e.batch as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let doc = obj(vec![("format", num(1.0)), ("queries", queries)]);
+        let tmp = self.path.with_extension("json.tmp");
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(doc.render().as_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &self.path)?;
+        super::wal::sync_parent_dir(&self.path)?;
+        Ok(())
+    }
+
+    /// All recorded entries (report/printing surface), in name order.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, LedgerEntry)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ledger_path(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("lmstream-ledger-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d.join("sink.ledger.json")
+    }
+
+    #[test]
+    fn record_persist_reload_round_trip() {
+        let path = ledger_path("roundtrip");
+        let mut l = SinkLedger::open(&path).unwrap();
+        assert!(l.high_water("q").is_none());
+        l.record("Q", 3, 5);
+        l.record("side", 3, 2);
+        l.persist().unwrap();
+
+        let l2 = SinkLedger::open(&path).unwrap();
+        assert_eq!(l2.high_water("q"), Some(LedgerEntry { round: 3, batch: 5 }));
+        assert!(l2.already_delivered("q", 5));
+        assert!(l2.already_delivered("q", 0));
+        assert!(!l2.already_delivered("q", 6));
+        assert!(!l2.already_delivered("other", 0));
+        assert_eq!(l2.entries().count(), 2);
+    }
+
+    #[test]
+    fn high_water_is_monotone() {
+        let path = ledger_path("monotone");
+        let mut l = SinkLedger::open(&path).unwrap();
+        l.record("q", 9, 7);
+        l.record("q", 2, 3); // stale replay record: must not regress
+        assert_eq!(l.high_water("q"), Some(LedgerEntry { round: 9, batch: 7 }));
+    }
+
+    #[test]
+    fn index_zero_delivery_is_recorded() {
+        // batch 0 delivered vs nothing delivered are distinct states.
+        let path = ledger_path("zero");
+        let mut l = SinkLedger::open(&path).unwrap();
+        assert!(!l.already_delivered("q", 0));
+        l.record("q", 1, 0);
+        assert!(l.already_delivered("q", 0));
+        assert!(!l.already_delivered("q", 1));
+    }
+
+    #[test]
+    fn corrupt_ledger_rejected() {
+        let path = ledger_path("corrupt");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, "{\"format\": 9}").unwrap();
+        assert!(matches!(
+            SinkLedger::open(&path),
+            Err(Error::Durability(_))
+        ));
+        std::fs::write(&path, "not json").unwrap();
+        assert!(SinkLedger::open(&path).is_err());
+    }
+}

@@ -1,0 +1,88 @@
+//! Durability: the failure story the engine previously lacked.
+//!
+//! §III-E treats checkpointing as a post-batch side task; production
+//! micro-batch streaming is defined by its fault-tolerance semantics
+//! (SNIPPETS.md §1 on Spark/Dataflow exactly-once mechanics). Three
+//! parts compose the pipeline:
+//!
+//! * [`wal`] — a per-source **write-ahead log**: every admitted
+//!   micro-batch is appended (length-prefixed, CRC-checksummed) and
+//!   fsynced *before* execution, so replay from the last checkpoint is
+//!   deterministic;
+//! * [`ledger`] — an **exactly-once sink ledger**: the high-water
+//!   (query, round, batch-index) durably delivered; the session skips
+//!   re-delivery on replay, turning at-least-once WAL replay into
+//!   exactly-once output;
+//! * [`recover`] — the **recovery driver**: on restart it reconciles
+//!   checkpoint ⨯ WAL ⨯ ledger into one of three explicit modes (the
+//!   SNIPPETS.md §3 taxonomy), selected by
+//!   [`Config::recovery_mode`](crate::config::Config::recovery_mode).
+//!
+//! The session activates all three when
+//! [`Config::wal_dir`](crate::config::Config::wal_dir) is set; without
+//! it, behavior is byte-identical to the pre-durability engine.
+
+pub mod ledger;
+pub mod recover;
+pub mod wal;
+
+pub use ledger::SinkLedger;
+pub use recover::{reconcile, LossEntry, RecoveryReport, SourceRecovery, WalPosition};
+pub use wal::{ScanEntry, Wal, WalRecord, WalScan};
+
+use crate::error::{Error, Result};
+
+/// How a restart treats the gap between the last checkpoint and the
+/// crash point (SNIPPETS.md §3's recovery taxonomy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryMode {
+    /// Replay every logged-but-uncheckpointed micro-batch from the WAL;
+    /// the sink ledger suppresses re-delivery, so a failure has no
+    /// visible effect on the output stream beyond latency.
+    Precise,
+    /// Roll back to the checkpoint: tail batches whose output every
+    /// query already delivered (per the ledger) are *skipped* — not
+    /// re-executed — and only the undelivered remainder replays. Sink
+    /// output stays exactly-once, but internal state (windows, metric
+    /// records) diverges from the uninterrupted run: side effects
+    /// without information loss.
+    Rollback,
+    /// Resume from the live stream only: nothing replays, and every
+    /// logged-but-undelivered batch is reported as an accounted loss
+    /// (amnesia with a receipt).
+    Gap,
+}
+
+impl RecoveryMode {
+    /// Parse a CLI token.
+    pub fn parse(s: &str) -> Result<RecoveryMode> {
+        match s {
+            "precise" => Ok(RecoveryMode::Precise),
+            "rollback" => Ok(RecoveryMode::Rollback),
+            "gap" => Ok(RecoveryMode::Gap),
+            other => Err(Error::Config(format!("unknown recovery mode `{other}`"))),
+        }
+    }
+
+    /// Display name used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryMode::Precise => "precise",
+            RecoveryMode::Rollback => "rollback",
+            RecoveryMode::Gap => "gap",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_round_trip() {
+        for m in [RecoveryMode::Precise, RecoveryMode::Rollback, RecoveryMode::Gap] {
+            assert_eq!(RecoveryMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(RecoveryMode::parse("bogus").is_err());
+    }
+}

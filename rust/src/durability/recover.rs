@@ -1,0 +1,554 @@
+//! Recovery driver: reconcile checkpoint ⨯ WAL ⨯ ledger on restart.
+//!
+//! Per source, [`reconcile`] takes what the last checkpoint claims
+//! (`wal_high_water`: WAL records at or below it are fully processed
+//! *and* checkpointed), what the WAL actually holds (the open-time
+//! [`WalScan`]), and what the sink ledger proves was delivered, and
+//! resolves them under the configured [`RecoveryMode`]:
+//!
+//! * **Precise** — the whole uncheckpointed tail replays; the ledger
+//!   suppresses re-delivery. Requires an intact, contiguous tail
+//!   (corrupt records, sequence gaps, or a ledger that claims
+//!   deliveries beyond the replayable range are typed
+//!   [`Error::Durability`] failures — precise recovery cannot invent
+//!   the missing bytes).
+//! * **Rollback** — the tail prefix every query of the source already
+//!   delivered (per the ledger) is skipped outright — not re-executed —
+//!   and only the undelivered remainder replays. Same intactness
+//!   requirements: rollback trades internal-state fidelity for work,
+//!   never output loss.
+//! * **Gap** — nothing replays. Every tail record (including corrupt
+//!   ones and inferred sequence gaps) becomes a [`LossEntry`], so the
+//!   loss is *accounted*, batch id by batch id, rather than silent.
+//!
+//! The returned [`SourceRecovery`] also carries the stream
+//! fast-forward horizon (checkpoint horizon ∪ newest logged
+//! `created_at` — logged data must not regenerate from the source, in
+//! any mode: replayed it would duplicate, lost it is lost) and the
+//! per-query batch-index bases the session must seed so live indices
+//! never collide with ledger-recorded deliveries.
+
+use super::ledger::SinkLedger;
+use super::wal::{ScanEntry, WalRecord, WalScan};
+use super::RecoveryMode;
+use crate::error::{Error, Result};
+use crate::sim::Time;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// What the checkpoint knew about the WAL when it was written.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WalPosition {
+    /// Highest WAL sequence number whose batch the checkpoint covers.
+    pub wal_high_water: u64,
+    /// Stream horizon the checkpoint persisted.
+    pub processed_up_to: Time,
+}
+
+/// One batch that did not survive recovery (Gap mode), identified well
+/// enough to audit: which WAL record, which datasets, how many rows.
+#[derive(Clone, Debug)]
+pub struct LossEntry {
+    pub seq: u64,
+    pub round: usize,
+    pub dataset_ids: Vec<u64>,
+    pub rows: usize,
+    /// Why it was lost: `"not replayed (gap mode)"`, `"crc mismatch"`,
+    /// `"missing wal records"`, ...
+    pub reason: String,
+}
+
+/// The reconciled plan for one source.
+#[derive(Debug)]
+pub struct SourceRecovery {
+    /// Source name (its primary query's name).
+    pub source: String,
+    pub mode: RecoveryMode,
+    /// Records to re-execute, in sequence order (empty in Gap mode).
+    pub replay: Vec<WalRecord>,
+    /// Rollback: tail records skipped because every query of the source
+    /// already delivered their output.
+    pub skipped: u64,
+    /// Gap: accounted losses.
+    pub lost: Vec<LossEntry>,
+    /// Stream fast-forward horizon (max of checkpoint horizon and the
+    /// newest logged dataset creation time).
+    pub horizon: Time,
+    /// Highest WAL seq the *next* checkpoint may immediately truncate
+    /// through (already-checkpointed prefix, plus skipped records in
+    /// Rollback, plus accounted records in Gap).
+    pub checkpointed_through: u64,
+    /// Per query (in the order given to [`reconcile`]): the batch-index
+    /// base the session must seed its metrics to before replaying, so
+    /// replayed and live indices line up with the ledger.
+    pub batch_base: Vec<(String, usize)>,
+    /// Torn trailing bytes the WAL scan truncated away (that data was
+    /// never durably admitted; the stream regenerates it).
+    pub torn_tail_bytes: usize,
+}
+
+impl SourceRecovery {
+    /// Render an audit summary (the session writes one per recovery).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("source", s(&self.source)),
+            ("mode", s(self.mode.name())),
+            ("replayed", num(self.replay.len() as f64)),
+            ("skipped", num(self.skipped as f64)),
+            ("torn_tail_bytes", num(self.torn_tail_bytes as f64)),
+            ("horizon_ns", num(self.horizon.0 as f64)),
+            (
+                "lost",
+                arr(self
+                    .lost
+                    .iter()
+                    .map(|l| {
+                        obj(vec![
+                            ("seq", num(l.seq as f64)),
+                            ("round", num(l.round as f64)),
+                            (
+                                "dataset_ids",
+                                arr(l
+                                    .dataset_ids
+                                    .iter()
+                                    .map(|&id| num(id as f64))
+                                    .collect()),
+                            ),
+                            ("rows", num(l.rows as f64)),
+                            ("reason", s(&l.reason)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+/// Everything one restart reconciled, across sources.
+#[derive(Debug, Default)]
+pub struct RecoveryReport {
+    pub sources: Vec<SourceRecovery>,
+}
+
+impl RecoveryReport {
+    /// Total accounted losses across sources.
+    pub fn total_lost_rows(&self) -> usize {
+        self.sources.iter().flat_map(|s| &s.lost).map(|l| l.rows).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![(
+            "sources",
+            arr(self.sources.iter().map(|s| s.to_json()).collect()),
+        )])
+    }
+}
+
+/// Reconcile one source's checkpoint, WAL scan, and the sink ledger
+/// into a recovery plan. `queries` lists the source's queries in
+/// registration order with their checkpoint-restored batch counts (the
+/// index the next recorded batch would take).
+pub fn reconcile(
+    source: &str,
+    ckpt: Option<WalPosition>,
+    scan: WalScan,
+    ledger: &SinkLedger,
+    mode: RecoveryMode,
+    queries: &[(String, usize)],
+) -> Result<SourceRecovery> {
+    let pos = ckpt.unwrap_or_default();
+    let wal_high = pos.wal_high_water;
+    let mut lost: Vec<LossEntry> = Vec::new();
+
+    // The horizon must cover every durably logged record — replayed or
+    // lost, its data must not regenerate from the live stream.
+    let mut horizon = pos.processed_up_to;
+    for e in &scan.entries {
+        if let ScanEntry::Ok(r) = e {
+            if let Some(newest) = r.batch.datasets.iter().map(|d| d.created_at).max() {
+                horizon = horizon.max(newest);
+            }
+        }
+    }
+
+    // Partition the scan: records at or below the checkpoint's
+    // high-water are done (they survive in the file only until the next
+    // truncation); the rest is the crash tail.
+    let mut tail: Vec<WalRecord> = Vec::new();
+    for e in scan.entries {
+        match e {
+            ScanEntry::Ok(r) if r.seq <= wal_high => {}
+            ScanEntry::Ok(r) => tail.push(r),
+            ScanEntry::Corrupt { offset, inferred_seq, reason } => match mode {
+                RecoveryMode::Gap => lost.push(LossEntry {
+                    seq: inferred_seq,
+                    round: 0,
+                    dataset_ids: Vec::new(),
+                    rows: 0,
+                    reason: format!("corrupt wal record at byte {offset}: {reason}"),
+                }),
+                _ => {
+                    return Err(Error::Durability(format!(
+                        "source `{source}`: corrupt WAL record at byte {offset} \
+                         ({reason}) — {} recovery cannot reconstruct it \
+                         (use gap mode to resume with accounted loss)",
+                        mode.name()
+                    )))
+                }
+            },
+        }
+    }
+
+    // Contiguity: the tail must continue exactly where the checkpoint
+    // stopped. A gap means the checkpoint and the log disagree about
+    // what was admitted.
+    let mut expected = wal_high + 1;
+    for r in &tail {
+        if r.seq != expected {
+            match mode {
+                RecoveryMode::Gap => {
+                    lost.push(LossEntry {
+                        seq: expected,
+                        round: 0,
+                        dataset_ids: Vec::new(),
+                        rows: 0,
+                        reason: format!(
+                            "missing wal records [{expected}, {}) — \
+                             checkpoint/WAL position mismatch",
+                            r.seq
+                        ),
+                    });
+                    expected = r.seq;
+                }
+                _ => {
+                    return Err(Error::Durability(format!(
+                        "source `{source}`: checkpoint/WAL position mismatch — \
+                         expected seq {expected}, log holds {} ({} recovery \
+                         requires a contiguous tail)",
+                        r.seq,
+                        mode.name()
+                    )))
+                }
+            }
+        }
+        expected = r.seq + 1;
+    }
+
+    let last_seq = tail.last().map(|r| r.seq).unwrap_or(wal_high);
+    let tail_len = tail.len();
+
+    // The ledger cannot claim deliveries the log can't reproduce:
+    // each tail record advances every query's batch index by exactly
+    // one, so the replayable index range per query is
+    // [base, base + tail_len).
+    if mode != RecoveryMode::Gap {
+        for (name, base) in queries {
+            if let Some(hw) = ledger.high_water(name) {
+                if hw.batch >= (*base as u64) + tail_len as u64 {
+                    return Err(Error::Durability(format!(
+                        "source `{source}`: sink ledger for `{name}` is ahead of \
+                         the WAL (delivered through batch {}, replayable range \
+                         ends at {}) — the log was truncated past delivered, \
+                         uncheckpointed batches",
+                        hw.batch,
+                        *base as u64 + tail_len as u64
+                    )));
+                }
+            }
+        }
+    }
+
+    let (replay, skipped, batch_base) = match mode {
+        RecoveryMode::Precise => {
+            // Replay everything; the ledger gates re-delivery downstream.
+            let base = queries.to_vec();
+            (tail, 0u64, base)
+        }
+        RecoveryMode::Rollback => {
+            // Skip the prefix whose output every query already has.
+            let mut skip = 0usize;
+            'prefix: while skip < tail_len {
+                for (name, base) in queries {
+                    let idx = (*base + skip) as u64;
+                    if !ledger.already_delivered(name, idx) {
+                        break 'prefix;
+                    }
+                }
+                skip += 1;
+            }
+            let replay = tail.into_iter().skip(skip).collect();
+            let base = queries
+                .iter()
+                .map(|(n, b)| (n.clone(), b + skip))
+                .collect();
+            (replay, skip as u64, base)
+        }
+        RecoveryMode::Gap => {
+            // Nothing replays; account every tail record as lost, and
+            // bump each query past any ledger-recorded delivery so live
+            // batches never collide with (and get suppressed by) it.
+            for r in &tail {
+                lost.push(LossEntry {
+                    seq: r.seq,
+                    round: r.round,
+                    dataset_ids: r.batch.datasets.iter().map(|d| d.id).collect(),
+                    rows: r.batch.rows(),
+                    reason: "not replayed (gap mode)".into(),
+                });
+            }
+            let base = queries
+                .iter()
+                .map(|(n, b)| {
+                    let floor = ledger
+                        .high_water(n)
+                        .map(|hw| hw.batch as usize + 1)
+                        .unwrap_or(0);
+                    (n.clone(), (*b).max(floor))
+                })
+                .collect();
+            (Vec::new(), 0u64, base)
+        }
+    };
+
+    let checkpointed_through = match mode {
+        RecoveryMode::Precise => wal_high,
+        RecoveryMode::Rollback => wal_high + skipped,
+        RecoveryMode::Gap => last_seq,
+    };
+
+    Ok(SourceRecovery {
+        source: source.to_string(),
+        mode,
+        replay,
+        skipped,
+        lost,
+        horizon,
+        checkpointed_through,
+        batch_base,
+        torn_tail_bytes: scan.torn_tail_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+    use crate::engine::dataset::{Dataset, MicroBatch};
+
+    fn rec(seq: u64, ids: &[u64]) -> WalRecord {
+        let datasets = ids
+            .iter()
+            .map(|&id| {
+                let schema = Schema::new(vec![Field::f32("x")]);
+                Dataset {
+                    id,
+                    created_at: Time::from_secs_f64(id as f64),
+                    event_time: Time::from_secs_f64(id as f64),
+                    wire_bytes: 8,
+                    batch: ColumnBatch::new(
+                        schema,
+                        vec![Column::F32(vec![id as f32, 0.0].into())],
+                    )
+                    .unwrap(),
+                }
+            })
+            .collect();
+        WalRecord { seq, round: seq as usize, batch: MicroBatch::new(datasets) }
+    }
+
+    fn scan(recs: Vec<WalRecord>) -> WalScan {
+        WalScan {
+            entries: recs.into_iter().map(ScanEntry::Ok).collect(),
+            torn_tail_bytes: 0,
+        }
+    }
+
+    fn ledger_with(entries: &[(&str, u64)]) -> SinkLedger {
+        let d = std::env::temp_dir().join(format!(
+            "lmstream-reconcile-{}-{}",
+            entries.len(),
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        let mut l = SinkLedger::open(&d.join("l.json")).unwrap();
+        for (name, batch) in entries {
+            l.record(name, 0, *batch);
+        }
+        l
+    }
+
+    fn pos(high: u64) -> Option<WalPosition> {
+        Some(WalPosition { wal_high_water: high, processed_up_to: Time::ZERO })
+    }
+
+    #[test]
+    fn precise_replays_whole_tail() {
+        let l = ledger_with(&[("q", 2)]);
+        let qs = vec![("q".to_string(), 2usize)];
+        let r = reconcile(
+            "q",
+            pos(2),
+            scan(vec![rec(1, &[0]), rec(2, &[1]), rec(3, &[2]), rec(4, &[3])]),
+            &l,
+            RecoveryMode::Precise,
+            &qs,
+        )
+        .unwrap();
+        // Seqs 1–2 are checkpointed; 3–4 replay.
+        assert_eq!(r.replay.iter().map(|x| x.seq).collect::<Vec<_>>(), vec![3, 4]);
+        assert_eq!(r.skipped, 0);
+        assert!(r.lost.is_empty());
+        assert_eq!(r.checkpointed_through, 2);
+        assert_eq!(r.batch_base, qs);
+        assert_eq!(r.horizon, Time::from_secs_f64(3.0));
+    }
+
+    #[test]
+    fn rollback_skips_fully_delivered_prefix() {
+        // base 2; tail indices are 2,3 — ledger says q delivered
+        // through 2, side through 2: record at index 2 skips, 3 replays.
+        let l = ledger_with(&[("q", 2), ("side", 2)]);
+        let qs = vec![("q".to_string(), 2usize), ("side".to_string(), 2usize)];
+        let r = reconcile(
+            "q",
+            pos(2),
+            scan(vec![rec(3, &[2]), rec(4, &[3])]),
+            &l,
+            RecoveryMode::Rollback,
+            &qs,
+        )
+        .unwrap();
+        assert_eq!(r.skipped, 1);
+        assert_eq!(r.replay.iter().map(|x| x.seq).collect::<Vec<_>>(), vec![4]);
+        assert_eq!(r.checkpointed_through, 3);
+        assert_eq!(r.batch_base[0].1, 3);
+        assert_eq!(r.batch_base[1].1, 3);
+    }
+
+    #[test]
+    fn rollback_partial_delivery_does_not_skip() {
+        // side never delivered index 2 → the record must replay (the
+        // ledger will suppress q's re-emission downstream).
+        let l = ledger_with(&[("q", 2)]);
+        let qs = vec![("q".to_string(), 2usize), ("side".to_string(), 2usize)];
+        let r = reconcile(
+            "q",
+            pos(2),
+            scan(vec![rec(3, &[2])]),
+            &l,
+            RecoveryMode::Rollback,
+            &qs,
+        )
+        .unwrap();
+        assert_eq!(r.skipped, 0);
+        assert_eq!(r.replay.len(), 1);
+    }
+
+    #[test]
+    fn gap_accounts_every_tail_record() {
+        let l = ledger_with(&[("q", 2)]);
+        let qs = vec![("q".to_string(), 2usize)];
+        let r = reconcile(
+            "q",
+            pos(2),
+            scan(vec![rec(3, &[2, 5]), rec(4, &[6])]),
+            &l,
+            RecoveryMode::Gap,
+            &qs,
+        )
+        .unwrap();
+        assert!(r.replay.is_empty());
+        assert_eq!(r.lost.len(), 2);
+        assert_eq!(r.lost[0].dataset_ids, vec![2, 5]);
+        assert_eq!(r.lost[0].rows, 4);
+        assert_eq!(r.lost[1].dataset_ids, vec![6]);
+        // Live batches start above the ledger's high-water.
+        assert_eq!(r.batch_base[0].1, 3);
+        assert_eq!(r.checkpointed_through, 4);
+        // Lost data is inside the horizon: amnesia, not duplication.
+        assert_eq!(r.horizon, Time::from_secs_f64(6.0));
+    }
+
+    #[test]
+    fn corrupt_record_fatal_except_in_gap() {
+        let l = ledger_with(&[]);
+        let qs = vec![("q".to_string(), 0usize)];
+        let entries = || WalScan {
+            entries: vec![
+                ScanEntry::Ok(rec(1, &[0])),
+                ScanEntry::Corrupt {
+                    offset: 99,
+                    inferred_seq: 2,
+                    reason: "crc mismatch".into(),
+                },
+            ],
+            torn_tail_bytes: 0,
+        };
+        for mode in [RecoveryMode::Precise, RecoveryMode::Rollback] {
+            let err = reconcile("q", pos(0), entries(), &l, mode, &qs).unwrap_err();
+            assert!(matches!(err, Error::Durability(_)), "{err:?}");
+            assert!(err.to_string().contains("corrupt"), "{err}");
+        }
+        let r = reconcile("q", pos(0), entries(), &l, RecoveryMode::Gap, &qs).unwrap();
+        assert!(r.lost.iter().any(|x| x.reason.contains("corrupt")));
+    }
+
+    #[test]
+    fn position_mismatch_fatal_except_in_gap() {
+        let l = ledger_with(&[]);
+        let qs = vec![("q".to_string(), 0usize)];
+        // Checkpoint says high-water 1, but the log starts at 3.
+        for mode in [RecoveryMode::Precise, RecoveryMode::Rollback] {
+            let err = reconcile("q", pos(1), scan(vec![rec(3, &[2])]), &l, mode, &qs)
+                .unwrap_err();
+            assert!(matches!(err, Error::Durability(_)), "{err:?}");
+            assert!(err.to_string().contains("mismatch"), "{err}");
+        }
+        let r = reconcile("q", pos(1), scan(vec![rec(3, &[2])]), &l, RecoveryMode::Gap, &qs)
+            .unwrap();
+        assert!(r.lost.iter().any(|x| x.reason.contains("missing wal records")));
+    }
+
+    #[test]
+    fn ledger_beyond_replayable_range_fatal_except_in_gap() {
+        // Ledger claims delivery through batch 5 but base 0 + 2 tail
+        // records only reproduce indices 0–1.
+        let l = ledger_with(&[("q", 5)]);
+        let qs = vec![("q".to_string(), 0usize)];
+        for mode in [RecoveryMode::Precise, RecoveryMode::Rollback] {
+            let err = reconcile(
+                "q",
+                pos(0),
+                scan(vec![rec(1, &[0]), rec(2, &[1])]),
+                &l,
+                mode,
+                &qs,
+            )
+            .unwrap_err();
+            assert!(matches!(err, Error::Durability(_)), "{err:?}");
+            assert!(err.to_string().contains("ahead"), "{err}");
+        }
+        let r = reconcile(
+            "q",
+            pos(0),
+            scan(vec![rec(1, &[0]), rec(2, &[1])]),
+            &l,
+            RecoveryMode::Gap,
+            &qs,
+        )
+        .unwrap();
+        // Live indices start above the ledger mark.
+        assert_eq!(r.batch_base[0].1, 6);
+    }
+
+    #[test]
+    fn empty_everything_is_a_clean_start() {
+        let l = ledger_with(&[]);
+        let qs = vec![("q".to_string(), 0usize)];
+        for mode in [RecoveryMode::Precise, RecoveryMode::Rollback, RecoveryMode::Gap] {
+            let r = reconcile("q", None, WalScan::default(), &l, mode, &qs).unwrap();
+            assert!(r.replay.is_empty() && r.lost.is_empty());
+            assert_eq!(r.checkpointed_through, 0);
+            assert_eq!(r.horizon, Time::ZERO);
+        }
+    }
+}

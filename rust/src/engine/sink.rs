@@ -76,6 +76,46 @@ impl Sink for CollectSink {
     }
 }
 
+/// Exactly-once wrapper: forwards each batch index to the inner sink at
+/// most once, in index order. Batch indices are per-query monotone (the
+/// checkpoint restores counts across incarnations), so a single
+/// high-water mark is a complete dedup record — the same gate the
+/// session's durable [`SinkLedger`](crate::durability::SinkLedger)
+/// applies before owned sinks are even reached; `DedupSink` lets
+/// externally-owned sinks enforce the contract locally too.
+pub struct DedupSink<S: Sink> {
+    inner: S,
+    /// Highest index delivered, if any (index 0 delivered ≠ nothing).
+    high_water: Option<usize>,
+}
+
+impl<S: Sink> DedupSink<S> {
+    pub fn new(inner: S) -> DedupSink<S> {
+        DedupSink { inner, high_water: None }
+    }
+
+    /// Highest batch index forwarded to the inner sink so far.
+    pub fn delivered_high_water(&self) -> Option<usize> {
+        self.high_water
+    }
+
+    /// The wrapped sink (inspect collected/counted state).
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+}
+
+impl<S: Sink> Sink for DedupSink<S> {
+    fn deliver(&mut self, i: usize, result: &ChunkedBatch, t: Time) -> Result<()> {
+        if self.high_water.is_some_and(|hw| i <= hw) {
+            return Ok(()); // replayed duplicate: suppress
+        }
+        self.inner.deliver(i, result, t)?;
+        self.high_water = Some(i);
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +170,30 @@ mod tests {
     fn null_sink_accepts_everything() {
         let mut s = NullSink;
         s.deliver(0, &batch(100), Time::ZERO).unwrap();
+    }
+
+    #[test]
+    fn dedup_sink_suppresses_replayed_indices() {
+        let mut s = DedupSink::new(CountingSink::default());
+        s.deliver(0, &batch(2), Time::ZERO).unwrap();
+        s.deliver(1, &batch(3), Time::ZERO).unwrap();
+        // Replay from the start: both already delivered.
+        s.deliver(0, &batch(2), Time::ZERO).unwrap();
+        s.deliver(1, &batch(3), Time::ZERO).unwrap();
+        // Fresh index passes through.
+        s.deliver(2, &batch(5), Time::ZERO).unwrap();
+        assert_eq!(s.inner().batches, 3);
+        assert_eq!(s.inner().rows, 10);
+        assert_eq!(s.delivered_high_water(), Some(2));
+    }
+
+    #[test]
+    fn dedup_sink_index_zero_is_delivered_state() {
+        let mut s = DedupSink::new(CountingSink::default());
+        assert_eq!(s.delivered_high_water(), None);
+        s.deliver(0, &batch(1), Time::ZERO).unwrap();
+        s.deliver(0, &batch(1), Time::ZERO).unwrap();
+        assert_eq!(s.inner().batches, 1);
+        assert_eq!(s.delivered_high_water(), Some(0));
     }
 }

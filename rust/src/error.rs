@@ -33,6 +33,12 @@ pub enum Error {
     /// JSON parse failure (manifest).
     #[error("json: {0}")]
     Json(String),
+
+    /// Durability pipeline failure: corrupt WAL record, checkpoint/WAL
+    /// position mismatch, sink ledger ahead of the replayable range, or
+    /// an unrecoverable condition for the configured recovery mode.
+    #[error("durability: {0}")]
+    Durability(String),
 }
 
 impl From<xla::Error> for Error {

@@ -35,6 +35,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod devices;
+pub mod durability;
 pub mod engine;
 pub mod error;
 pub mod query;

@@ -72,6 +72,9 @@ use crate::coordinator::planner::{map_device, static_preference_plan, SizeEstima
 use crate::coordinator::schedule::{self, QueryCandidate};
 use crate::devices::model::DeviceModel;
 use crate::devices::Device;
+use crate::durability::{
+    self, RecoveryReport, SinkLedger, Wal, WalPosition, WalRecord,
+};
 use crate::engine::chunked::ChunkedBatch;
 use crate::engine::dataset::MicroBatch;
 use crate::engine::partition::mean_partition_bytes;
@@ -84,7 +87,8 @@ use crate::query::physical::PhysicalPlan;
 use crate::runtime::client::Runtime;
 use crate::sim::{Clock, SimClock, Time, WallClock};
 use crate::workloads::Workload;
-use std::path::Path;
+use std::collections::{BTreeMap, VecDeque};
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// Tumbling-window bootstrap bound before any history exists (§III-C's
@@ -180,6 +184,9 @@ pub struct Session<'rt> {
     inf_pt: f64,
     sources: Vec<SourceDef>,
     queries: Vec<QueryDef>,
+    /// What the last `run`'s startup reconciliation replayed, skipped
+    /// and lost (Some only when `Config::wal_dir` is set).
+    last_recovery: Option<RecoveryReport>,
 }
 
 impl<'rt> Session<'rt> {
@@ -221,7 +228,16 @@ impl<'rt> Session<'rt> {
             inf_pt,
             sources: Vec::new(),
             queries: Vec::new(),
+            last_recovery: None,
         })
+    }
+
+    /// The recovery reconciliation report from the most recent
+    /// [`Session::run`] start: per source, what the durability pipeline
+    /// replayed from the WAL, skipped (rollback), or lost-with-receipt
+    /// (gap). `None` unless [`Config::wal_dir`] is set.
+    pub fn recovery_report(&self) -> Option<&RecoveryReport> {
+        self.last_recovery.as_ref()
     }
 
     pub fn config(&self) -> &Config {
@@ -437,6 +453,17 @@ impl<'rt> Session<'rt> {
             None => None,
         };
 
+        // Durability pipeline (per-source WAL + exactly-once sink
+        // ledger + recovery reconciliation) — active only when
+        // `wal_dir` is set; without it the run is byte-identical to the
+        // pre-durability engine.
+        let wal_dir = cfg.wal_dir.as_ref().map(PathBuf::from);
+        let mut ledger: Option<SinkLedger> = match &wal_dir {
+            Some(dir) => Some(SinkLedger::open(&dir.join("sink.ledger.json"))?),
+            None => None,
+        };
+        self.last_recovery = None;
+
         // ---- Per-query run state (metrics first: checkpoint recovery
         // below seeds them).
         let num_queries = self.queries.len();
@@ -455,50 +482,133 @@ impl<'rt> Session<'rt> {
         // re-recorded once per source. Stream fast-forward and per-query
         // metric recovery stay per source.
         let mut shared_state_restored = false;
-        for src in &self.sources {
+        // Monotone scheduling-round counter — records sharing a `round`
+        // were co-scheduled on the same device timelines. Resumes from
+        // the checkpoint's round high-water so WAL-logged rounds stay
+        // unique across incarnations.
+        let mut round: usize = 0;
+        // Per-source WAL handles, the highest fully-processed WAL seq
+        // per source (what the next checkpoint may truncate through),
+        // and the replay rounds recovery reconstructed (keyed by their
+        // original round number so co-admitted batches re-execute as
+        // one round again).
+        let mut wals: Option<Vec<Wal>> = wal_dir.as_ref().map(|_| Vec::new());
+        let mut wal_high: Vec<u64> = vec![0; num_sources];
+        let mut replay_by_round: BTreeMap<usize, Vec<(usize, WalRecord)>> = BTreeMap::new();
+        let mut recoveries: Vec<durability::SourceRecovery> = Vec::new();
+        for (s, src) in self.sources.iter().enumerate() {
             let mut stream = src.workload.make_stream(cfg.seed);
             let primary_window = self.queries[src.primary].query.window;
             admissions.push(Admission::new(primary_window, INITIAL_TUMBLING_BOUND));
+            let mut ckpt = None;
             if let Some(st) = &ckpt_store {
-                if let Some(ckpt) = st.load(&self.queries[src.primary].name)? {
-                    if !shared_state_restored {
-                        self.inf_pt = ckpt.inf_pt.max(1.0);
-                        for h in &ckpt.history {
-                            self.optimizer.record(*h, INITIAL_TUMBLING_BOUND);
-                        }
-                        shared_state_restored = true;
+                ckpt = st.load(&self.queries[src.primary].name)?;
+            }
+            if let Some(ckpt) = &ckpt {
+                if !shared_state_restored {
+                    self.inf_pt = ckpt.inf_pt.max(1.0);
+                    for h in &ckpt.history {
+                        self.optimizer.record(*h, INITIAL_TUMBLING_BOUND);
                     }
-                    stream.fast_forward(ckpt.processed_up_to);
-                    // Metric recovery for *every* query on the source
-                    // (checkpoints are keyed by the primary query's name
-                    // but carry per-query states, so secondary-query
-                    // metrics survive too; pre-`queries` checkpoints
-                    // fall back to the legacy primary-only fields).
-                    for &qi in &src.queries {
-                        let name = &self.queries[qi].name;
-                        if let Some(qs) = ckpt
-                            .queries
-                            .iter()
-                            .find(|q| q.name.eq_ignore_ascii_case(name))
-                        {
-                            metrics[qi].restore(
-                                qs.batches,
-                                qs.cumulative_bytes,
-                                qs.cumulative_proc_secs,
-                                qs.max_lat_sum_secs,
+                    shared_state_restored = true;
+                }
+                round = round.max(ckpt.round_high_water);
+                // Metric recovery for *every* query on the source
+                // (checkpoints are keyed by the primary query's name
+                // but carry per-query states, so secondary-query
+                // metrics survive too; pre-`queries` checkpoints
+                // fall back to the legacy primary-only fields).
+                for &qi in &src.queries {
+                    let name = &self.queries[qi].name;
+                    if let Some(qs) = ckpt
+                        .queries
+                        .iter()
+                        .find(|q| q.name.eq_ignore_ascii_case(name))
+                    {
+                        metrics[qi].restore(
+                            qs.batches,
+                            qs.cumulative_bytes,
+                            qs.cumulative_proc_secs,
+                            qs.max_lat_sum_secs,
+                        );
+                    } else if qi == src.primary {
+                        metrics[qi].restore(
+                            ckpt.batches,
+                            ckpt.cumulative_bytes,
+                            ckpt.cumulative_proc_secs,
+                            ckpt.max_lat_sum_secs,
+                        );
+                    }
+                }
+            }
+            match (&wal_dir, wals.as_mut()) {
+                (Some(dir), Some(ws)) => {
+                    // Reconcile checkpoint ⨯ WAL ⨯ ledger under the
+                    // configured recovery mode. The stream fast-forwards
+                    // to the *recovery* horizon (checkpoint ∪ newest
+                    // logged data): logged batches must never regenerate
+                    // from the live stream — replayed they would
+                    // duplicate, lost (gap) they are lost.
+                    let name = self.queries[src.primary].name.clone();
+                    let (wal, scan) =
+                        Wal::open(&dir.join(format!("{}.wal", name.to_lowercase())))?;
+                    let pos = ckpt.as_ref().map(|c| WalPosition {
+                        wal_high_water: c.wal_high_water,
+                        processed_up_to: c.processed_up_to,
+                    });
+                    let bases: Vec<(String, usize)> = src
+                        .queries
+                        .iter()
+                        .map(|&qi| (self.queries[qi].name.clone(), metrics[qi].batches()))
+                        .collect();
+                    let rec = durability::reconcile(
+                        &name,
+                        pos,
+                        scan,
+                        ledger.as_ref().expect("wal_dir implies ledger"),
+                        cfg.recovery_mode,
+                        &bases,
+                    )?;
+                    stream.fast_forward(rec.horizon);
+                    // Rollback/Gap: bump each query's batch-index base
+                    // so live indices line up with the ledger (skipped
+                    // and lost batches still consume an index).
+                    for (&qi, (_, base)) in src.queries.iter().zip(&rec.batch_base) {
+                        if *base > metrics[qi].batches() {
+                            let (by, pr, ml) = (
+                                metrics[qi].cumulative_bytes(),
+                                metrics[qi].cumulative_proc_secs(),
+                                metrics[qi].max_lat_sum_secs(),
                             );
-                        } else if qi == src.primary {
-                            metrics[qi].restore(
-                                ckpt.batches,
-                                ckpt.cumulative_bytes,
-                                ckpt.cumulative_proc_secs,
-                                ckpt.max_lat_sum_secs,
-                            );
+                            metrics[qi].restore(*base, by, pr, ml);
                         }
+                    }
+                    wal_high[s] = rec.checkpointed_through;
+                    for r in &rec.replay {
+                        replay_by_round.entry(r.round).or_default().push((s, r.clone()));
+                    }
+                    recoveries.push(rec);
+                    ws.push(wal);
+                }
+                _ => {
+                    if let Some(ckpt) = &ckpt {
+                        stream.fast_forward(ckpt.processed_up_to);
                     }
                 }
             }
             streams.push(stream);
+        }
+        let mut replay_rounds: VecDeque<(usize, Vec<(usize, WalRecord)>)> =
+            replay_by_round.into_iter().collect();
+        if !recoveries.is_empty() {
+            let report = RecoveryReport { sources: recoveries };
+            if let Some(dir) = &wal_dir {
+                std::fs::write(
+                    dir.join("recovery_report.json"),
+                    report.to_json().render(),
+                )?;
+            }
+            self.last_recovery = Some(report);
         }
         let mut next_trigger: Vec<Time> =
             vec![Time::ZERO.add(cfg.trigger); num_sources];
@@ -508,17 +618,28 @@ impl<'rt> Session<'rt> {
         // against: per-executor GPUs on a cluster, the 1-executor
         // special case on a single node.
         let topo = cfg.topology();
-        // Monotone scheduling-round counter — records sharing a `round`
-        // were co-scheduled on the same device timelines.
-        let mut round: usize = 0;
 
         let end = Time::ZERO.add(duration);
 
         while clock.now() < end {
-            // ---- Buffering phase: trigger (baseline) or admission
+            // ---- Buffering phase: recovery replay first (batches come
+            // from the WAL — already admitted, durably, by a previous
+            // incarnation), then trigger (baseline) or admission
             // (LMStream), per source.
             let mut admitted: Vec<(usize, MicroBatch)> = Vec::new();
-            if cfg.mode.uses_trigger() {
+            let mut replay_seqs: Option<Vec<Option<u64>>> = None;
+            if let Some((orig_round, group)) = replay_rounds.pop_front() {
+                // Keep the round counter monotone across incarnations
+                // while preserving the original co-scheduling grouping
+                // (the `round += 1` below lands at >= orig_round).
+                round = round.max(orig_round.saturating_sub(1));
+                let mut seqs = Vec::with_capacity(group.len());
+                for (s, r) in group {
+                    seqs.push(Some(r.seq));
+                    admitted.push((s, r.batch));
+                }
+                replay_seqs = Some(seqs);
+            } else if cfg.mode.uses_trigger() {
                 let wake = next_trigger.iter().min().copied().expect(">=1 source");
                 clock.sleep_until(wake);
                 if clock.now() >= end {
@@ -594,6 +715,23 @@ impl<'rt> Session<'rt> {
             // admitted source's primary query; per-source construct work
             // stays with each source's own primary.
             let lead_primary = self.sources[admitted[0].0].primary;
+
+            // ---- Write-ahead log: every live admitted micro-batch is
+            // appended and fsynced *before* execution, so a crash
+            // anywhere past this point replays deterministically from
+            // the log. Replayed rounds are already in it and keep their
+            // original sequence numbers.
+            let admitted_seqs: Vec<Option<u64>> = match (replay_seqs, wals.as_mut()) {
+                (Some(seqs), _) => seqs,
+                (None, Some(ws)) => {
+                    let mut seqs = Vec::with_capacity(admitted.len());
+                    for &(s, ref batch) in &admitted {
+                        seqs.push(Some(ws[s].append(round, batch)?));
+                    }
+                    seqs
+                }
+                (None, None) => vec![None; admitted.len()],
+            };
 
             // ---- Optimizer pickup (must land before planning).
             let (new_inf, opt_blocking) = if cfg.mode == Mode::LmStream {
@@ -868,21 +1006,44 @@ impl<'rt> Session<'rt> {
             for p in pending {
                 let batch_index = metrics[p.qi].batches();
                 let completed_at = clock.now();
-                deliver(p.qi, batch_index, &p.result, completed_at)?;
-                // Owned per-query sinks: primary result plus any
-                // registered branch sinks (ExecOutcome/
-                // ClusterOutcome branch_results — no longer dropped).
-                {
-                    let qdef = &mut self.queries[p.qi];
-                    if let Some(sink) = qdef.sink.as_mut() {
-                        sink.deliver(batch_index, &p.result, completed_at)?;
+                // Exactly-once gate: on WAL replay the ledger suppresses
+                // re-delivery of batch indices the sinks already
+                // received (cluster rounds included — per-executor
+                // outputs were already reassembled into `p.result`, so
+                // one ledger entry covers the whole reassembled batch).
+                // Metrics and learning below still record either way:
+                // replay rebuilds them identically.
+                let fresh = match &ledger {
+                    Some(l) => {
+                        !l.already_delivered(&self.queries[p.qi].name, batch_index as u64)
                     }
-                    for (op_id, sink) in qdef.branch_sinks.iter_mut() {
-                        if let Some((_, b)) =
-                            p.branch_results.iter().find(|(id, _)| *id == *op_id)
-                        {
-                            sink.deliver(batch_index, b, completed_at)?;
+                    None => true,
+                };
+                if fresh {
+                    deliver(p.qi, batch_index, &p.result, completed_at)?;
+                    // Owned per-query sinks: primary result plus any
+                    // registered branch sinks (ExecOutcome/
+                    // ClusterOutcome branch_results — no longer dropped).
+                    {
+                        let qdef = &mut self.queries[p.qi];
+                        if let Some(sink) = qdef.sink.as_mut() {
+                            sink.deliver(batch_index, &p.result, completed_at)?;
                         }
+                        for (op_id, sink) in qdef.branch_sinks.iter_mut() {
+                            if let Some((_, b)) =
+                                p.branch_results.iter().find(|(id, _)| *id == *op_id)
+                            {
+                                sink.deliver(batch_index, b, completed_at)?;
+                            }
+                        }
+                    }
+                    // Persist the delivery before anything else can
+                    // happen (crash after the sink accepted but before
+                    // this write degrades exactly that one batch to
+                    // at-least-once — see durability::ledger docs).
+                    if let Some(l) = ledger.as_mut() {
+                        l.record(&self.queries[p.qi].name, round as u64, batch_index as u64);
+                        l.persist()?;
                     }
                 }
                 // Shared phase costs are charged once so phase totals
@@ -923,9 +1084,15 @@ impl<'rt> Session<'rt> {
             }
 
             // ---- Per-source learning, window upkeep, checkpointing.
-            for &(s, ref batch) in &admitted {
+            for (ai, &(s, ref batch)) in admitted.iter().enumerate() {
                 construct_acc[s] = Duration::ZERO;
                 let primary = self.sources[s].primary;
+                // The source's WAL record for this round is now fully
+                // processed (executed, delivered, metered): the next
+                // checkpoint covers it and may truncate through it.
+                if let Some(seq) = admitted_seqs[ai] {
+                    wal_high[s] = wal_high[s].max(seq);
+                }
 
                 // Async parameter optimization (Eq. 10 inputs), fed from
                 // the source's primary query — whose latest record now
@@ -987,7 +1154,15 @@ impl<'rt> Session<'rt> {
                         max_lat_sum_secs: m.max_lat_sum_secs(),
                         queries,
                         history: self.optimizer.history().to_vec(),
+                        wal_high_water: wal_high[s],
+                        round_high_water: round,
                     })?;
+                    // Checkpointed batches no longer need the log.
+                    // Truncation is safe only *after* the checkpoint is
+                    // durable — save() fsyncs before returning.
+                    if let Some(ws) = wals.as_mut() {
+                        ws[s].truncate_through(wal_high[s])?;
+                    }
                 }
 
                 // Baseline trigger catches up if processing overran.

@@ -125,6 +125,58 @@ fn secondary_query_metrics_survive_recovery() {
     assert_eq!(second_rs[0].batches[0].index, ckpt.batches);
 }
 
+/// Remove a `"key":<value>,` pair from a compact JSON document (the
+/// checkpoint writer's values here are plain numbers, always followed
+/// by a comma — neither field sorts last).
+fn strip_field(text: &str, key: &str) -> String {
+    let pat = format!("\"{key}\":");
+    let Some(start) = text.find(&pat) else { return text.to_string() };
+    let end = start + text[start..].find(',').expect("field not last") + 1;
+    format!("{}{}", &text[..start], &text[end..])
+}
+
+/// Back-compat: a pre-durability (format-1) checkpoint file — no
+/// `wal_high_water`, no `round_high_water` — must still load and drive
+/// recovery through the driver path with legacy semantics: the stream
+/// prefix is skipped and batch indices continue, exactly as before the
+/// format-2 fields existed.
+#[test]
+fn format1_checkpoint_recovers_through_driver_with_legacy_semantics() {
+    let dir = ckpt_dir("format1-it");
+    let w = workloads::by_name("lr1s").unwrap();
+    let cfg = Config {
+        mode: Mode::LmStream,
+        checkpoint_dir: Some(dir.to_string_lossy().to_string()),
+        ..Config::default()
+    };
+    let first = driver::run(&w, &cfg, Duration::from_secs(90), None).unwrap();
+
+    // Downgrade the on-disk file to what a format-1 writer produced.
+    let path = dir.join("lr1s.ckpt.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let legacy = strip_field(
+        &strip_field(&text.replace("\"format\":2,", "\"format\":1,"), "wal_high_water"),
+        "round_high_water",
+    );
+    assert_ne!(text, legacy, "fixture must actually strip the format-2 fields");
+    std::fs::write(&path, legacy).unwrap();
+
+    // The loader applies legacy defaults…
+    let store = CheckpointStore::new(&dir).unwrap();
+    let ckpt = store.load("lr1s").unwrap().unwrap();
+    assert_eq!(ckpt.wal_high_water, 0);
+    assert_eq!(ckpt.round_high_water, 0);
+    assert_eq!(ckpt.batches, first.batches.len());
+
+    // …and the resumed incarnation behaves like the pre-durability
+    // engine: no reprocessed prefix, continued batch numbering.
+    let second = driver::run(&w, &cfg, Duration::from_secs(60), None).unwrap();
+    assert!(!second.batches.is_empty());
+    let replayed: usize = second.batches.iter().map(|b| b.num_datasets).sum();
+    assert!(replayed <= 61, "legacy resume re-processed {replayed} datasets");
+    assert_eq!(second.batches[0].index, first.batches.len());
+}
+
 #[test]
 fn sinks_receive_every_batch_result() {
     let w = workloads::by_name("lr2s").unwrap();

@@ -1,0 +1,500 @@
+//! Differential crash-recovery harness for the durability subsystem.
+//!
+//! The oracle is analytic: a deterministic generator stamps every row
+//! with its (tick, row-id) identity, the query is stateless
+//! (filter + select — window state is not checkpointed, so windowed
+//! aggregates are out of scope here; see ARCHITECTURE.md §Durability),
+//! and sinks deliver whole datasets in tick order — so the flattened
+//! delivered row sequence of ANY correct run must be an exact prefix of
+//! the analytic oracle sequence. A crash is injected at an arbitrary
+//! batch boundary (property-tested over crash points, chunk layouts and
+//! sources), the session resumes from checkpoint + WAL in a fresh
+//! incarnation, and the concatenated deliveries across incarnations
+//! must still be that exact prefix: bit-identical to an uninterrupted
+//! run, with zero duplicates (`Precise`/`Rollback`), while `Gap`'s loss
+//! report must exactly account for every skipped batch id.
+
+use lmstream::config::{Config, Mode};
+use lmstream::engine::chunked::ChunkedBatch;
+use lmstream::engine::column::{Column, ColumnBatch, Field, Schema};
+use lmstream::engine::ops::filter::Predicate;
+use lmstream::engine::sink::Sink;
+use lmstream::error::{Error, Result};
+use lmstream::query::QueryBuilder;
+use lmstream::session::Session;
+use lmstream::sim::Time;
+use lmstream::source::stream::RowGen;
+use lmstream::source::traffic::Traffic;
+use lmstream::workloads::Workload;
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+// ---------- deterministic identity-stamped workload ----------
+
+/// Every row is (t = tick, v = tick*10_000 + i, m = i % 10): globally
+/// unique (t, v) identities, exact in f32 for the tick ranges used.
+struct IdentGen;
+
+impl RowGen for IdentGen {
+    fn generate(&mut self, tick: u64, rows: usize) -> ColumnBatch {
+        let schema =
+            Schema::new(vec![Field::f32("t"), Field::f32("v"), Field::f32("m")]);
+        let t: Vec<f32> = vec![tick as f32; rows];
+        let v: Vec<f32> =
+            (0..rows).map(|i| (tick * 10_000 + i as u64) as f32).collect();
+        let m: Vec<f32> = (0..rows).map(|i| (i % 10) as f32).collect();
+        ColumnBatch::new(
+            schema,
+            vec![Column::F32(t.into()), Column::F32(v.into()), Column::F32(m.into())],
+        )
+        .unwrap()
+    }
+}
+
+fn make_gen(_seed: u64) -> Box<dyn RowGen> {
+    Box::new(IdentGen)
+}
+
+/// Stateless query (filter keeps rows with m < 6, i.e. i % 10 < 6).
+fn ident_query(name: &str) -> lmstream::query::dag::Query {
+    QueryBuilder::scan(name)
+        .filter("m", Predicate::Lt(6.0))
+        .select(&["t", "v"])
+        .build()
+        .unwrap()
+}
+
+fn ident_workload(name: &'static str, rows_per_tick: usize) -> Workload {
+    Workload::new(
+        name,
+        ident_query(name),
+        Traffic::Constant { rows: rows_per_tick },
+        make_gen,
+    )
+}
+
+/// The analytic oracle: the exact flattened row sequence any correct
+/// run's sink must observe (one dataset per tick, in tick order).
+fn oracle(rows_per_tick: usize, max_tick: u64) -> Vec<(f32, f32)> {
+    let mut out = Vec::new();
+    for tick in 0..=max_tick {
+        for i in 0..rows_per_tick {
+            if i % 10 < 6 {
+                out.push((tick as f32, (tick * 10_000 + i as u64) as f32));
+            }
+        }
+    }
+    out
+}
+
+fn assert_oracle_prefix(delivered: &[(f32, f32)], rows_per_tick: usize, ctx: &str) {
+    let full = oracle(rows_per_tick, 4_000);
+    assert!(delivered.len() <= full.len(), "{ctx}: run too long for oracle");
+    assert_eq!(
+        delivered,
+        &full[..delivered.len()],
+        "{ctx}: delivered rows diverge from the uninterrupted oracle"
+    );
+}
+
+// ---------- crash-injecting, row-recording sink ----------
+
+/// Records every delivered (t, v) row into shared state and optionally
+/// fails the Nth delivery of its incarnation ("the sink machine died").
+struct RecordingSink {
+    rows: Arc<Mutex<Vec<(f32, f32)>>>,
+    fail_after: Option<usize>,
+    delivered: usize,
+}
+
+impl RecordingSink {
+    fn new(rows: &Arc<Mutex<Vec<(f32, f32)>>>, fail_after: Option<usize>) -> RecordingSink {
+        RecordingSink { rows: Arc::clone(rows), fail_after, delivered: 0 }
+    }
+}
+
+impl Sink for RecordingSink {
+    fn deliver(&mut self, _i: usize, result: &ChunkedBatch, _t: Time) -> Result<()> {
+        if self.fail_after == Some(self.delivered) {
+            return Err(Error::Durability("injected crash".into()));
+        }
+        self.delivered += 1;
+        let b = result.coalesce();
+        let t = b.column("t").unwrap().as_f32().unwrap();
+        let v = b.column("v").unwrap().as_f32().unwrap();
+        let mut rows = self.rows.lock().unwrap();
+        for i in 0..b.rows() {
+            if b.validity.is_live(i) {
+                rows.push((t[i], v[i]));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------- harness plumbing ----------
+
+struct Dirs {
+    ckpt: PathBuf,
+    wal: PathBuf,
+}
+
+fn dirs(name: &str) -> Dirs {
+    let base = std::env::temp_dir()
+        .join(format!("lmstream-durability-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    Dirs { ckpt: base.join("ckpt"), wal: base.join("wal") }
+}
+
+fn durable_cfg(d: &Dirs, mode: &str) -> Config {
+    Config {
+        mode: Mode::LmStream,
+        checkpoint_dir: Some(d.ckpt.to_string_lossy().into_owned()),
+        wal_dir: Some(d.wal.to_string_lossy().into_owned()),
+        recovery_mode: lmstream::durability::RecoveryMode::parse(mode).unwrap(),
+        seed: 11,
+        ..Config::default()
+    }
+}
+
+/// One incarnation: fresh session, one identity workload, a recording
+/// (and optionally crashing) sink; returns the run outcome and whether
+/// a recovery reconciliation reported losses.
+fn incarnation(
+    cfg: Config,
+    workload: Workload,
+    rows_sink: &Arc<Mutex<Vec<(f32, f32)>>>,
+    fail_after: Option<usize>,
+    duration: Duration,
+) -> (Result<()>, Vec<lmstream::durability::recover::LossEntry>, u64) {
+    let mut session = Session::new(cfg).unwrap();
+    let qid = session.register(workload).unwrap();
+    session
+        .set_sink(qid, Box::new(RecordingSink::new(rows_sink, fail_after)))
+        .unwrap();
+    let outcome = session.run(duration).map(|_| ());
+    let (lost, skipped) = match session.recovery_report() {
+        Some(rep) => (
+            rep.sources.iter().flat_map(|s| s.lost.iter().cloned()).collect(),
+            rep.sources.iter().map(|s| s.skipped).sum(),
+        ),
+        None => (Vec::new(), 0),
+    };
+    (outcome, lost, skipped)
+}
+
+// ---------- the differential property tests ----------
+
+#[test]
+fn precise_crash_resume_is_bit_identical_with_zero_duplicates() {
+    // Property sweep: crash point × chunk layout (rows per tick changes
+    // dataset sizes, hence admission grouping and chunk counts).
+    for &rows_per_tick in &[4usize, 10] {
+        for &crash_at in &[0usize, 1, 2, 4] {
+            let name = format!("precise-{rows_per_tick}-{crash_at}");
+            let d = dirs(&name);
+            let rows = Arc::new(Mutex::new(Vec::new()));
+
+            // Incarnation 1: crash at the `crash_at`-th delivery.
+            // (crash_at = 0 also covers the admitted-but-never-delivered
+            // shape: the batch is in the WAL, the ledger and checkpoint
+            // know nothing.)
+            let (out, _, _) = incarnation(
+                durable_cfg(&d, "precise"),
+                ident_workload("durprec", rows_per_tick),
+                &rows,
+                Some(crash_at),
+                Duration::from_secs(60),
+            );
+            assert!(out.is_err(), "{name}: the injected crash must abort the run");
+            let delivered_before = rows.lock().unwrap().len();
+
+            // Incarnation 2: resume from checkpoint + WAL.
+            let (out, lost, skipped) = incarnation(
+                durable_cfg(&d, "precise"),
+                ident_workload("durprec", rows_per_tick),
+                &rows,
+                None,
+                Duration::from_secs(60),
+            );
+            out.unwrap();
+            assert!(lost.is_empty(), "{name}: precise recovery reported losses");
+            assert_eq!(skipped, 0, "{name}: precise recovery skipped records");
+
+            // Differential check: the concatenation across incarnations
+            // is an exact prefix of the uninterrupted oracle — replayed
+            // batches were re-delivered exactly once (zero duplicates),
+            // already-delivered ones were suppressed by the ledger.
+            let all = rows.lock().unwrap().clone();
+            assert!(all.len() > delivered_before, "{name}: resume delivered nothing");
+            assert_oracle_prefix(&all, rows_per_tick, &name);
+        }
+    }
+}
+
+#[test]
+fn rollback_crash_resume_has_no_duplicate_sink_rows() {
+    for &crash_at in &[0usize, 2, 3] {
+        let name = format!("rollback-{crash_at}");
+        let d = dirs(&name);
+        let rows = Arc::new(Mutex::new(Vec::new()));
+        let (out, _, _) = incarnation(
+            durable_cfg(&d, "rollback"),
+            ident_workload("durroll", 10),
+            &rows,
+            Some(crash_at),
+            Duration::from_secs(60),
+        );
+        assert!(out.is_err(), "{name}: the injected crash must abort the run");
+
+        let (out, lost, _) = incarnation(
+            durable_cfg(&d, "rollback"),
+            ident_workload("durroll", 10),
+            &rows,
+            None,
+            Duration::from_secs(60),
+        );
+        out.unwrap();
+        assert!(lost.is_empty(), "{name}: rollback recovery reported losses");
+
+        // Rollback trades internal-state fidelity, never output: for a
+        // stateless query the sink stream is still the exact oracle
+        // prefix — and exact-prefix equality implies zero duplicates.
+        let all = rows.lock().unwrap().clone();
+        assert_oracle_prefix(&all, 10, &name);
+    }
+}
+
+#[test]
+fn gap_mode_loss_report_exactly_accounts_skipped_batch_ids() {
+    for &crash_at in &[1usize, 3] {
+        let name = format!("gap-{crash_at}");
+        let d = dirs(&name);
+        let rows_per_tick = 10usize;
+        let rows = Arc::new(Mutex::new(Vec::new()));
+        let (out, _, _) = incarnation(
+            durable_cfg(&d, "gap"),
+            ident_workload("durgap", rows_per_tick),
+            &rows,
+            Some(crash_at),
+            Duration::from_secs(60),
+        );
+        assert!(out.is_err(), "{name}: the injected crash must abort the run");
+
+        let (out, lost, _) = incarnation(
+            durable_cfg(&d, "gap"),
+            ident_workload("durgap", rows_per_tick),
+            &rows,
+            None,
+            Duration::from_secs(60),
+        );
+        out.unwrap();
+        // The crashed round was in the WAL but not checkpointed: gap
+        // mode must surface it as accounted loss, not replay it.
+        assert!(!lost.is_empty(), "{name}: no loss reported for the crashed round");
+
+        // With constant traffic every tick yields exactly one dataset,
+        // so dataset id == tick: the loss report's batch ids map
+        // directly onto oracle ticks.
+        let lost_ticks: BTreeSet<u64> =
+            lost.iter().flat_map(|l| l.dataset_ids.iter().copied()).collect();
+        assert!(!lost_ticks.is_empty(), "{name}: loss entries carry no dataset ids");
+        for l in &lost {
+            // Raw (pre-filter) rows: rows_per_tick per lost dataset.
+            assert_eq!(
+                l.rows,
+                l.dataset_ids.len() * rows_per_tick,
+                "{name}: loss entry row count wrong"
+            );
+        }
+
+        // Exact accounting: delivered ∪ lost must tile the oracle
+        // prefix with no overlap — every processed tick was either
+        // delivered exactly once or reported lost, never both/neither.
+        let all = rows.lock().unwrap().clone();
+        let delivered_ticks: BTreeSet<u64> =
+            all.iter().map(|&(t, _)| t as u64).collect();
+        assert!(
+            delivered_ticks.is_disjoint(&lost_ticks),
+            "{name}: a tick was both delivered and reported lost"
+        );
+        let max_tick = delivered_ticks
+            .iter()
+            .chain(lost_ticks.iter())
+            .copied()
+            .max()
+            .unwrap();
+        let expected: Vec<(f32, f32)> = oracle(rows_per_tick, max_tick)
+            .into_iter()
+            .filter(|&(t, _)| !lost_ticks.contains(&(t as u64)))
+            .collect();
+        assert_eq!(all, expected, "{name}: delivered + lost don't tile the oracle");
+    }
+}
+
+#[test]
+fn multi_query_partial_round_redelivery_is_suppressed() {
+    // Two queries on one source. The crash lands on the *side* query's
+    // delivery, after the primary's delivery of the same round was
+    // already ledgered — on replay the primary's re-delivery must be
+    // suppressed while the side query receives the batch it never got.
+    let d = dirs("multiq");
+    let rows_per_tick = 10usize;
+    let primary_rows = Arc::new(Mutex::new(Vec::new()));
+    let side_rows = Arc::new(Mutex::new(Vec::new()));
+
+    let run = |fail_side: Option<usize>,
+               primary_rows: &Arc<Mutex<Vec<(f32, f32)>>>,
+               side_rows: &Arc<Mutex<Vec<(f32, f32)>>>| {
+        let mut session = Session::new(durable_cfg(&d, "precise")).unwrap();
+        let qid = session.register(ident_workload("durmq", rows_per_tick)).unwrap();
+        let side = session
+            .register_shared(qid, "durmq-side", ident_query("durmq-side"))
+            .unwrap();
+        session
+            .set_sink(qid, Box::new(RecordingSink::new(primary_rows, None)))
+            .unwrap();
+        session
+            .set_sink(side, Box::new(RecordingSink::new(side_rows, fail_side)))
+            .unwrap();
+        session.run(Duration::from_secs(60)).map(|_| ())
+    };
+
+    assert!(run(Some(2), &primary_rows, &side_rows).is_err(), "crash must abort");
+    assert!(run(None, &primary_rows, &side_rows).is_ok());
+
+    // Both queries' streams are exact oracle prefixes: no duplicates on
+    // the primary (whose crashed-round delivery was ledgered before the
+    // side query failed), no holes on the side.
+    let p = primary_rows.lock().unwrap().clone();
+    let s = side_rows.lock().unwrap().clone();
+    assert_oracle_prefix(&p, rows_per_tick, "multiq primary");
+    assert_oracle_prefix(&s, rows_per_tick, "multiq side");
+    assert!(!p.is_empty() && !s.is_empty());
+}
+
+#[test]
+fn two_sources_recover_independently() {
+    // Crash with two registered sources (each with its own WAL and
+    // checkpoint, different chunk layouts); both must resume to exact
+    // oracle prefixes.
+    let d = dirs("twosrc");
+    let rows_a = Arc::new(Mutex::new(Vec::new()));
+    let rows_b = Arc::new(Mutex::new(Vec::new()));
+
+    let run = |fail_a: Option<usize>,
+               rows_a: &Arc<Mutex<Vec<(f32, f32)>>>,
+               rows_b: &Arc<Mutex<Vec<(f32, f32)>>>| {
+        let mut session = Session::new(durable_cfg(&d, "precise")).unwrap();
+        let qa = session.register(ident_workload("dursrca", 4)).unwrap();
+        let qb = session.register(ident_workload("dursrcb", 10)).unwrap();
+        session
+            .set_sink(qa, Box::new(RecordingSink::new(rows_a, fail_a)))
+            .unwrap();
+        session
+            .set_sink(qb, Box::new(RecordingSink::new(rows_b, None)))
+            .unwrap();
+        session.run(Duration::from_secs(60)).map(|_| ())
+    };
+
+    assert!(run(Some(3), &rows_a, &rows_b).is_err(), "crash must abort");
+    assert!(run(None, &rows_a, &rows_b).is_ok());
+
+    let a = rows_a.lock().unwrap().clone();
+    let b = rows_b.lock().unwrap().clone();
+    assert_oracle_prefix(&a, 4, "source a");
+    assert_oracle_prefix(&b, 10, "source b");
+    assert!(!a.is_empty() && !b.is_empty());
+}
+
+#[test]
+fn cluster_rounds_keep_one_ledger_entry_per_reassembled_batch() {
+    // Cluster path: per-executor outputs reassemble into one result
+    // before delivery, so a single ledger entry covers the whole batch
+    // — crash + resume must still yield the exact oracle prefix.
+    let d = dirs("cluster");
+    let rows = Arc::new(Mutex::new(Vec::new()));
+    let cfg = || Config {
+        cluster: Some(lmstream::cluster::ClusterSpec::paper()),
+        ..durable_cfg(&d, "precise")
+    };
+    let (out, _, _) = incarnation(
+        cfg(),
+        ident_workload("durclu", 10),
+        &rows,
+        Some(1),
+        Duration::from_secs(60),
+    );
+    assert!(out.is_err(), "crash must abort");
+    let (out, lost, _) = incarnation(
+        cfg(),
+        ident_workload("durclu", 10),
+        &rows,
+        None,
+        Duration::from_secs(60),
+    );
+    out.unwrap();
+    assert!(lost.is_empty());
+    let all = rows.lock().unwrap().clone();
+    assert_oracle_prefix(&all, 10, "cluster");
+    assert!(!all.is_empty());
+}
+
+#[test]
+fn without_wal_dir_behavior_is_unchanged_and_unreported() {
+    // wal_dir unset: no recovery report, and two identical fresh runs
+    // produce identical sink streams (the pre-durability engine).
+    let run = || {
+        let rows = Arc::new(Mutex::new(Vec::new()));
+        let cfg = Config { mode: Mode::LmStream, seed: 11, ..Config::default() };
+        let mut session = Session::new(cfg).unwrap();
+        let qid = session.register(ident_workload("durplain", 10)).unwrap();
+        session
+            .set_sink(qid, Box::new(RecordingSink::new(&rows, None)))
+            .unwrap();
+        session.run(Duration::from_secs(30)).unwrap();
+        assert!(session.recovery_report().is_none());
+        let got = rows.lock().unwrap().clone();
+        got
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b);
+    assert!(!a.is_empty());
+    assert_oracle_prefix(&a, 10, "plain");
+}
+
+#[test]
+fn clean_restart_after_graceful_run_replays_nothing() {
+    // No crash: run to completion, then restart. Everything processed
+    // is checkpointed (the WAL is truncated on checkpoint), so the
+    // second incarnation replays nothing and appends fresh data only.
+    let d = dirs("clean");
+    let rows = Arc::new(Mutex::new(Vec::new()));
+    let (out, lost, skipped) = incarnation(
+        durable_cfg(&d, "precise"),
+        ident_workload("durclean", 10),
+        &rows,
+        None,
+        Duration::from_secs(45),
+    );
+    out.unwrap();
+    assert!(lost.is_empty() && skipped == 0);
+    let after_first = rows.lock().unwrap().len();
+    assert!(after_first > 0);
+
+    let (out, lost, skipped) = incarnation(
+        durable_cfg(&d, "precise"),
+        ident_workload("durclean", 10),
+        &rows,
+        None,
+        Duration::from_secs(45),
+    );
+    out.unwrap();
+    assert!(lost.is_empty() && skipped == 0);
+    let all = rows.lock().unwrap().clone();
+    assert!(all.len() > after_first, "second incarnation made no progress");
+    assert_oracle_prefix(&all, 10, "clean restart");
+}

@@ -199,3 +199,155 @@ fn ragged_concat_rejected() {
     .unwrap();
     assert!(ColumnBatch::concat(&[&a, &b]).is_err());
 }
+
+// ---- Durability faults ----------------------------------------------
+//
+// Damage a real on-disk WAL / ledger / checkpoint-position triple and
+// assert each declared recovery mode honors its contract: Precise and
+// Rollback fail loudly with typed `Error::Durability`, Gap resumes with
+// the damage accounted in the loss report.
+
+use lmstream::durability::{
+    reconcile, RecoveryMode, ScanEntry, SinkLedger, Wal, WalPosition,
+};
+use lmstream::engine::dataset::{Dataset, MicroBatch};
+use lmstream::sim::Time;
+
+/// One-dataset micro-batch with `rows` f32 rows, tagged with `id`.
+fn mb(id: u64, rows: usize) -> MicroBatch {
+    let schema = Schema::new(vec![Field::f32("x")]);
+    let batch = ColumnBatch::new(
+        schema,
+        vec![Column::F32(vec![id as f32; rows].into())],
+    )
+    .unwrap();
+    MicroBatch::new(vec![Dataset {
+        id,
+        created_at: Time::from_secs_f64(id as f64),
+        event_time: Time::from_secs_f64(id as f64),
+        wire_bytes: rows * 4,
+        batch,
+    }])
+}
+
+#[test]
+fn torn_wal_tail_is_recovered_by_scan_in_every_mode() {
+    let d = tmpdir("torn-tail");
+    let path = d.join("src.wal");
+    let (mut wal, _) = Wal::open(&path).unwrap();
+    wal.append(1, &mb(0, 3)).unwrap();
+    let before = std::fs::metadata(&path).unwrap().len();
+    wal.append(2, &mb(1, 3)).unwrap();
+    drop(wal);
+    // Crash mid-append of the second record: cut it off mid-frame,
+    // leaving the header plus part of the payload.
+    let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+    f.set_len(before + 10).unwrap();
+    drop(f);
+
+    let (_, scan) = Wal::open(&path).unwrap();
+    assert_eq!(scan.torn_tail_bytes, 10, "torn frame must be detected");
+    assert_eq!(scan.entries.len(), 1, "records before the tear stay intact");
+    assert!(matches!(scan.entries[0], ScanEntry::Ok(_)));
+    // A torn tail is NOT an error in any mode — the record never
+    // finished its durable append, so the stream regenerates it.
+    let ledger = SinkLedger::open(&d.join("l.json")).unwrap();
+    let qs = vec![("q".to_string(), 0usize)];
+    for mode in [RecoveryMode::Precise, RecoveryMode::Rollback, RecoveryMode::Gap] {
+        let (_, scan) = Wal::open(&path).unwrap();
+        let r = reconcile("q", None, scan, &ledger, mode, &qs).unwrap();
+        assert!(r.lost.is_empty(), "{mode:?}: torn tail is not a loss");
+        assert_eq!(r.torn_tail_bytes, 0, "tear already truncated at first reopen");
+    }
+}
+
+#[test]
+fn corrupt_mid_log_record_rejected_with_typed_error() {
+    let d = tmpdir("corrupt-mid");
+    let path = d.join("src.wal");
+    let (mut wal, _) = Wal::open(&path).unwrap();
+    let first_end = {
+        wal.append(1, &mb(0, 2)).unwrap();
+        std::fs::metadata(&path).unwrap().len() as usize
+    };
+    wal.append(2, &mb(1, 2)).unwrap();
+    wal.append(3, &mb(2, 2)).unwrap();
+    drop(wal);
+    // Flip a payload byte inside the middle record (past its 8-byte
+    // frame header) — a complete frame with a CRC mismatch.
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[first_end + 12] ^= 0xff;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let ledger = SinkLedger::open(&d.join("l.json")).unwrap();
+    let qs = vec![("q".to_string(), 0usize)];
+    for mode in [RecoveryMode::Precise, RecoveryMode::Rollback] {
+        let (_, scan) = Wal::open(&path).unwrap();
+        let err = reconcile("q", None, scan, &ledger, mode, &qs).unwrap_err();
+        assert!(matches!(err, Error::Durability(_)), "{err:?}");
+        assert!(err.to_string().contains("corrupt"), "{err}");
+    }
+    // Gap accounts the damaged record and keeps the readable ones lost
+    // but audited (gap mode replays nothing).
+    let (_, scan) = Wal::open(&path).unwrap();
+    let r = reconcile("q", None, scan, &ledger, RecoveryMode::Gap, &qs).unwrap();
+    assert!(r.replay.is_empty());
+    assert!(r.lost.iter().any(|l| l.reason.contains("corrupt")));
+}
+
+#[test]
+fn checkpoint_wal_position_mismatch_rejected_with_typed_error() {
+    let d = tmpdir("pos-mismatch");
+    let path = d.join("src.wal");
+    let (mut wal, _) = Wal::open(&path).unwrap();
+    for i in 0..3 {
+        wal.append(1, &mb(i, 2)).unwrap();
+    }
+    // Checkpoint truncation dropped seqs 1–2, so the log now starts at
+    // 3 — but pair it with a *stale* checkpoint claiming high-water 0
+    // (as if checkpoint state was restored from an older copy).
+    wal.truncate_through(2).unwrap();
+    drop(wal);
+
+    let stale = Some(WalPosition { wal_high_water: 0, processed_up_to: Time::ZERO });
+    let ledger = SinkLedger::open(&d.join("l.json")).unwrap();
+    let qs = vec![("q".to_string(), 0usize)];
+    for mode in [RecoveryMode::Precise, RecoveryMode::Rollback] {
+        let (_, scan) = Wal::open(&path).unwrap();
+        let err = reconcile("q", stale, scan, &ledger, mode, &qs).unwrap_err();
+        assert!(matches!(err, Error::Durability(_)), "{err:?}");
+        assert!(err.to_string().contains("mismatch"), "{err}");
+    }
+    // Gap resumes, accounting the unreachable range [1, 3).
+    let (_, scan) = Wal::open(&path).unwrap();
+    let r = reconcile("q", stale, scan, &ledger, RecoveryMode::Gap, &qs).unwrap();
+    assert!(r.lost.iter().any(|l| l.reason.contains("position mismatch")));
+}
+
+#[test]
+fn ledger_ahead_of_checkpoint_rejected_with_typed_error() {
+    let d = tmpdir("ledger-ahead");
+    let path = d.join("src.wal");
+    let (mut wal, _) = Wal::open(&path).unwrap();
+    wal.append(1, &mb(0, 2)).unwrap();
+    wal.append(2, &mb(1, 2)).unwrap();
+    drop(wal);
+    // The ledger proves batch 7 was delivered, but base 0 plus a
+    // 2-record tail only reproduces indices 0–1: the WAL was truncated
+    // past delivered, uncheckpointed work.
+    let mut ledger = SinkLedger::open(&d.join("l.json")).unwrap();
+    ledger.record("q", 9, 7);
+    ledger.persist().unwrap();
+
+    let qs = vec![("q".to_string(), 0usize)];
+    for mode in [RecoveryMode::Precise, RecoveryMode::Rollback] {
+        let (_, scan) = Wal::open(&path).unwrap();
+        let err = reconcile("q", None, scan, &ledger, mode, &qs).unwrap_err();
+        assert!(matches!(err, Error::Durability(_)), "{err:?}");
+        assert!(err.to_string().contains("ahead"), "{err}");
+    }
+    // Gap restarts live batches above the ledger mark instead.
+    let (_, scan) = Wal::open(&path).unwrap();
+    let r = reconcile("q", None, scan, &ledger, RecoveryMode::Gap, &qs).unwrap();
+    assert_eq!(r.batch_base[0].1, 8);
+}
