@@ -12,6 +12,7 @@
 //! be dropped on the floor).
 
 use crate::config::ExecBackend;
+use crate::cluster::faults::RoundFaults;
 use crate::cluster::topology::ClusterSpec;
 use crate::devices::model::DeviceModel;
 use crate::engine::chunked::ChunkedBatch;
@@ -88,7 +89,42 @@ pub fn execute_on_cluster_with_occupancy(
     model: &DeviceModel,
     backend: ExecBackend,
     runtime: Option<&Runtime>,
+    timelines: Option<&mut [GpuTimeline]>,
+) -> Result<ClusterOutcome> {
+    execute_on_cluster_faulted(
+        cluster,
+        query,
+        plan,
+        input,
+        window,
+        model,
+        backend,
+        runtime,
+        timelines,
+        &RoundFaults::default(),
+    )
+}
+
+/// [`execute_on_cluster_with_occupancy`] under injected faults: an
+/// executor listed in `faults.fail` loses its share mid-execution
+/// (typed [`Error::Executor`] — the caller's detection/retry path takes
+/// over), and an executor listed in `faults.cpu_only` runs its share on
+/// the CPU-demoted plan (its GPU device is faulted; row output is
+/// unchanged, only the charged physics differ). Fault indices are local
+/// to `cluster` — when the caller executes on a survivor subset, it
+/// maps physical ids to subset positions first.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_on_cluster_faulted(
+    cluster: &ClusterSpec,
+    query: &Query,
+    plan: &PhysicalPlan,
+    input: impl Into<ChunkedBatch>,
+    window: Option<&ChunkedBatch>,
+    model: &DeviceModel,
+    backend: ExecBackend,
+    runtime: Option<&Runtime>,
     mut timelines: Option<&mut [GpuTimeline]>,
+    faults: &RoundFaults,
 ) -> Result<ClusterOutcome> {
     let input = input.into();
     cluster.validate()?;
@@ -128,6 +164,15 @@ pub fn execute_on_cluster_with_occupancy(
     let mut straggler = Duration::ZERO;
     let mut network = Duration::ZERO;
     for (e, (share, spec)) in shares.into_iter().zip(&cluster.executors).enumerate() {
+        if faults.fail.contains(&e) {
+            // The executor died (or stalled past the detection timeout)
+            // while holding this share: the round's partial work is
+            // discarded and the caller re-plans on the survivors.
+            return Err(Error::Executor {
+                executor: e,
+                reason: "lost its share mid-round (injected fault)".into(),
+            });
+        }
         let env = ExecEnv {
             model,
             backend,
@@ -135,11 +180,18 @@ pub fn execute_on_cluster_with_occupancy(
             num_gpus: spec.gpus,
             runtime,
         };
+        let demoted;
+        let share_plan = if faults.cpu_only.contains(&e) {
+            demoted = plan.demoted_to_cpu();
+            &demoted
+        } else {
+            plan
+        };
         let out = match timelines.as_deref_mut() {
-            Some(tl) => {
-                exec::execute_with_occupancy(query, plan, share, window, &env, &mut tl[e])?
-            }
-            None => exec::execute(query, plan, share, window, &env)?,
+            Some(tl) => exec::execute_with_occupancy(
+                query, share_plan, share, window, &env, &mut tl[e],
+            )?,
+            None => exec::execute(query, share_plan, share, window, &env)?,
         };
         // Charge this executor's shuffle exchanges.
         if e_count > 1.0 {
@@ -364,6 +416,74 @@ mod tests {
         let first_exec_chunk = &out.per_executor[0].result.chunks()[0];
         assert!(out.result.chunks()[0].columns[0]
             .shares_memory(&first_exec_chunk.columns[0]));
+    }
+
+    #[test]
+    fn injected_executor_failure_surfaces_typed_error() {
+        let q = query();
+        let plan = PhysicalPlan::uniform(&q, Device::Cpu);
+        let model = DeviceModel::default();
+        let faults = RoundFaults { fail: vec![2], cpu_only: vec![] };
+        let r = execute_on_cluster_faulted(
+            &ClusterSpec::paper(),
+            &q,
+            &plan,
+            input(4000),
+            None,
+            &model,
+            ExecBackend::Simulated,
+            None,
+            None,
+            &faults,
+        );
+        match r {
+            Err(Error::Executor { executor, .. }) => assert_eq!(executor, 2),
+            other => panic!("expected Error::Executor, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gpu_demoted_share_keeps_rows_identical() {
+        let q = query();
+        let plan = PhysicalPlan::uniform(&q, Device::Gpu);
+        let model = DeviceModel::default();
+        let healthy = execute_on_cluster(
+            &ClusterSpec::paper(),
+            &q,
+            &plan,
+            input(4000),
+            None,
+            &model,
+            ExecBackend::Simulated,
+            None,
+        )
+        .unwrap();
+        let faults = RoundFaults { fail: vec![], cpu_only: vec![1] };
+        let degraded = execute_on_cluster_faulted(
+            &ClusterSpec::paper(),
+            &q,
+            &plan,
+            input(4000),
+            None,
+            &model,
+            ExecBackend::Simulated,
+            None,
+            None,
+            &faults,
+        )
+        .unwrap();
+        // Bit-identical output: operators are device-invariant.
+        assert_eq!(degraded.result, healthy.result);
+        // The demoted executor ran no GPU ops.
+        assert_eq!(
+            degraded.per_executor[1].traces.iter().filter(|t| t.device == Device::Gpu).count(),
+            0
+        );
+        assert!(degraded
+            .per_executor[0]
+            .traces
+            .iter()
+            .any(|t| t.device == Device::Gpu));
     }
 
     #[test]

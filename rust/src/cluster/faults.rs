@@ -1,0 +1,485 @@
+//! Deterministic executor fault injection and health tracking.
+//!
+//! Failures in the simulated cluster are *planned*, not random at run
+//! time: a [`FaultPlan`] schedules crashes, GPU-device faults, transient
+//! stalls, and rejoins at specific (round, executor) points — either
+//! hand-built or generated from a seed — so every fault scenario is
+//! exactly reproducible and differential-testable against a fault-free
+//! oracle run.
+//!
+//! [`ExecutorHealth`] is the session's view of the plan: a per-executor
+//! state machine
+//!
+//! ```text
+//!            GpuFail                  Crash
+//!   Up ───────────────► GpuDegraded    │
+//!   ▲  ◄───────────────      │         ▼
+//!   │       Rejoin           └──────► Down
+//!   │                         Crash    │ Rejoin
+//!   │   probation expires              ▼
+//!   └───────────────────────── Probation{remaining}
+//!                                      │ any failure
+//!                                      └──────► Down
+//! ```
+//!
+//! Crashes and stalls surface as a failed *attempt* of the round they
+//! hit (the executor's share is lost mid-execution); the session then
+//! transitions health, re-plans on the survivors, and retries under its
+//! backoff budget. A stall is transient — the executor stays up and the
+//! retry runs on the full topology — while a crash removes the executor
+//! until a `Rejoin` event puts it back on probation. GPU faults do not
+//! fail the round at all: the executor keeps its cores and its row
+//! share, and plans/executes CPU-only (graceful degradation).
+
+use crate::coordinator::metrics::ExecutorHealthStats;
+use crate::util::rng::Rng;
+
+/// What goes wrong (or right again) at one executor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Process loss: the executor's share fails this round and the
+    /// executor leaves the topology until a [`FaultKind::Rejoin`].
+    Crash,
+    /// The GPU device fails but the process survives: the executor
+    /// plans and executes CPU-only from this round on.
+    GpuFail,
+    /// Transient hiccup (GC pause, network blip): the executor's share
+    /// fails exactly one attempt, then the executor is healthy again.
+    Stall,
+    /// A down executor comes back (or a faulted GPU is serviced). Down
+    /// executors re-enter through probation; health-gated — failing
+    /// again during probation sends them back down.
+    Rejoin,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::GpuFail => "gpu-fail",
+            FaultKind::Stall => "stall",
+            FaultKind::Rejoin => "rejoin",
+        }
+    }
+}
+
+/// One scheduled fault: `kind` hits `executor` when the session begins
+/// round `round` (1-based, matching `BatchRecord::round`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub round: usize,
+    pub executor: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of executor faults for a whole run.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults — the fault-free oracle).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Schedule a crash of `executor` at `round`.
+    pub fn crash(mut self, round: usize, executor: usize) -> FaultPlan {
+        self.events.push(FaultEvent { round, executor, kind: FaultKind::Crash });
+        self
+    }
+
+    /// Schedule a GPU-device fault of `executor` at `round`.
+    pub fn gpu_fail(mut self, round: usize, executor: usize) -> FaultPlan {
+        self.events.push(FaultEvent { round, executor, kind: FaultKind::GpuFail });
+        self
+    }
+
+    /// Schedule a one-attempt transient stall of `executor` at `round`.
+    pub fn stall(mut self, round: usize, executor: usize) -> FaultPlan {
+        self.events.push(FaultEvent { round, executor, kind: FaultKind::Stall });
+        self
+    }
+
+    /// Schedule a rejoin of `executor` at `round`.
+    pub fn rejoin(mut self, round: usize, executor: usize) -> FaultPlan {
+        self.events.push(FaultEvent { round, executor, kind: FaultKind::Rejoin });
+        self
+    }
+
+    /// A seeded random plan of `events` faults over `rounds` rounds of an
+    /// `executors`-wide cluster. Survivable by construction: executor 0
+    /// never crashes (so every round has a survivor to re-plan on) and
+    /// every crash schedules a rejoin 1–3 rounds later. On a single-
+    /// executor topology crashes degenerate to stalls for the same
+    /// reason. Deterministic in `seed`.
+    pub fn seeded(seed: u64, rounds: usize, executors: usize, events: usize) -> FaultPlan {
+        assert!(rounds > 0 && executors > 0);
+        let mut rng = Rng::new(seed ^ 0xfa07_71a5_u64);
+        let mut plan = FaultPlan::new();
+        for _ in 0..events {
+            let round = 1 + rng.below(rounds as u64) as usize;
+            match rng.below(3) {
+                0 => {
+                    let e = rng.below(executors as u64) as usize;
+                    plan = plan.stall(round, e);
+                }
+                1 => {
+                    let e = rng.below(executors as u64) as usize;
+                    plan = plan.gpu_fail(round, e);
+                }
+                _ => {
+                    if executors == 1 {
+                        plan = plan.stall(round, 0);
+                    } else {
+                        let e = 1 + rng.below(executors as u64 - 1) as usize;
+                        let back = round + 1 + rng.below(3) as usize;
+                        plan = plan.crash(round, e).rejoin(back, e);
+                    }
+                }
+            }
+        }
+        plan
+    }
+
+    /// Every scheduled event that fires at `round`.
+    pub fn events_at(&self, round: usize) -> impl Iterator<Item = &FaultEvent> {
+        self.events.iter().filter(move |e| e.round == round)
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Per-executor health state (see the module-level state machine).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecState {
+    /// Healthy: full member of the topology, GPU usable.
+    Up,
+    /// Alive but the GPU device is faulted: plans and executes CPU-only.
+    GpuDegraded,
+    /// Crashed: excluded from the topology entirely.
+    Down,
+    /// Recently rejoined: active (full member) but health-gated — any
+    /// failure while `remaining > 0` sends the executor back to `Down`.
+    Probation {
+        /// Rounds of probation left.
+        remaining: usize,
+    },
+}
+
+impl ExecState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecState::Up => "up",
+            ExecState::GpuDegraded => "gpu-degraded",
+            ExecState::Down => "down",
+            ExecState::Probation { .. } => "probation",
+        }
+    }
+}
+
+/// The faults a single execution attempt must observe, in *local*
+/// indices of the (possibly degraded) cluster spec being executed.
+#[derive(Clone, Debug, Default)]
+pub struct RoundFaults {
+    /// Executors whose share fails mid-execution this attempt.
+    pub fail: Vec<usize>,
+    /// Executors whose share runs the CPU-demoted plan (GPU faulted).
+    pub cpu_only: Vec<usize>,
+}
+
+impl RoundFaults {
+    pub fn is_clean(&self) -> bool {
+        self.fail.is_empty() && self.cpu_only.is_empty()
+    }
+}
+
+/// The session's failure detector: applies a [`FaultPlan`] round by
+/// round, tracks each physical executor's [`ExecState`], and tells the
+/// round loop which executors fail the next attempt, which survive, and
+/// which are GPU-degraded.
+#[derive(Clone, Debug)]
+pub struct ExecutorHealth {
+    states: Vec<ExecState>,
+    plan: FaultPlan,
+    probation_rounds: usize,
+    /// Faults armed for the current round's next attempt (consumed by
+    /// [`ExecutorHealth::attempt_faults`]; crashes/stalls fail exactly
+    /// one attempt, then state transitions take over).
+    pending: Vec<(usize, FaultKind)>,
+    /// The faults the *last* drained attempt observed, kept so
+    /// [`ExecutorHealth::note_attempt_failed`] can transition state.
+    last_attempt: Vec<(usize, FaultKind)>,
+    stats: Vec<ExecutorHealthStats>,
+}
+
+impl ExecutorHealth {
+    /// A detector over `executors` physical executors following `plan`.
+    pub fn new(executors: usize, plan: FaultPlan, probation_rounds: usize) -> ExecutorHealth {
+        ExecutorHealth {
+            states: vec![ExecState::Up; executors],
+            plan,
+            probation_rounds,
+            pending: Vec::new(),
+            last_attempt: Vec::new(),
+            stats: (0..executors)
+                .map(|e| ExecutorHealthStats { executor: e, ..ExecutorHealthStats::default() })
+                .collect(),
+        }
+    }
+
+    /// Advance to `round`: expire probation, then arm this round's
+    /// scheduled faults. Call once per round, before the first attempt.
+    pub fn begin_round(&mut self, round: usize) {
+        self.pending.clear();
+        self.last_attempt.clear();
+        for st in &mut self.states {
+            if let ExecState::Probation { remaining } = st {
+                *st = if *remaining <= 1 {
+                    ExecState::Up
+                } else {
+                    ExecState::Probation { remaining: *remaining - 1 }
+                };
+            }
+        }
+        // Collect first (the plan is borrowed), then apply.
+        let fired: Vec<FaultEvent> = self.plan.events_at(round).copied().collect();
+        for ev in fired {
+            let e = ev.executor;
+            if e >= self.states.len() {
+                continue; // plan written for a wider cluster: inert
+            }
+            match ev.kind {
+                FaultKind::Crash => {
+                    if self.states[e] != ExecState::Down {
+                        self.pending.push((e, FaultKind::Crash));
+                        self.stats[e].crashes += 1;
+                    }
+                }
+                FaultKind::Stall => {
+                    if self.states[e] != ExecState::Down {
+                        self.pending.push((e, FaultKind::Stall));
+                        self.stats[e].stalls += 1;
+                    }
+                }
+                FaultKind::GpuFail => match self.states[e] {
+                    ExecState::Down | ExecState::GpuDegraded => {}
+                    _ => {
+                        self.states[e] = ExecState::GpuDegraded;
+                        self.stats[e].gpu_faults += 1;
+                    }
+                },
+                FaultKind::Rejoin => match self.states[e] {
+                    ExecState::Down => {
+                        self.states[e] = if self.probation_rounds == 0 {
+                            ExecState::Up
+                        } else {
+                            ExecState::Probation { remaining: self.probation_rounds }
+                        };
+                        self.stats[e].rejoins += 1;
+                    }
+                    ExecState::GpuDegraded => {
+                        // Device serviced.
+                        self.states[e] = ExecState::Up;
+                        self.stats[e].rejoins += 1;
+                    }
+                    _ => {}
+                },
+            }
+        }
+    }
+
+    /// Drain the faults armed for the next attempt: the physical
+    /// executor ids that must fail it. Empty on retries (a crash keeps
+    /// failing through topology exclusion, not repeated injection).
+    pub fn attempt_faults(&mut self) -> Vec<usize> {
+        self.last_attempt = std::mem::take(&mut self.pending);
+        self.last_attempt.iter().map(|&(e, _)| e).collect()
+    }
+
+    /// The attempt whose faults [`ExecutorHealth::attempt_faults`] last
+    /// returned has failed: transition state. Crashes go `Down`; stalls
+    /// are transient unless the executor was on probation (health-gated
+    /// rejoin: a probationary failure sends it back down).
+    pub fn note_attempt_failed(&mut self) {
+        for (e, kind) in std::mem::take(&mut self.last_attempt) {
+            match kind {
+                FaultKind::Crash => self.states[e] = ExecState::Down,
+                FaultKind::Stall => {
+                    if matches!(self.states[e], ExecState::Probation { .. }) {
+                        self.states[e] = ExecState::Down;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Physical ids of the executors currently in the topology.
+    pub fn active(&self) -> Vec<usize> {
+        (0..self.states.len()).filter(|&e| self.states[e] != ExecState::Down).collect()
+    }
+
+    /// Whether physical executor `e`'s GPU device is usable.
+    pub fn gpu_ok(&self, e: usize) -> bool {
+        self.states[e] != ExecState::GpuDegraded
+    }
+
+    /// Any executor not fully `Up` (the round runs on a degraded
+    /// topology).
+    pub fn is_degraded(&self) -> bool {
+        self.states.iter().any(|s| *s != ExecState::Up)
+    }
+
+    pub fn state(&self, e: usize) -> ExecState {
+        self.states[e]
+    }
+
+    /// Per-executor fault counters accumulated so far.
+    pub fn stats(&self) -> Vec<ExecutorHealthStats> {
+        let mut out = self.stats.clone();
+        for (e, s) in out.iter_mut().enumerate() {
+            s.state = self.states[e].name().to_string();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crash_fails_one_attempt_then_excludes_executor() {
+        let plan = FaultPlan::new().crash(2, 1);
+        let mut h = ExecutorHealth::new(3, plan, 2);
+        h.begin_round(1);
+        assert!(h.attempt_faults().is_empty());
+        assert_eq!(h.active(), vec![0, 1, 2]);
+
+        h.begin_round(2);
+        assert_eq!(h.attempt_faults(), vec![1]);
+        h.note_attempt_failed();
+        assert_eq!(h.active(), vec![0, 2]);
+        // Retry of the same round injects nothing new.
+        assert!(h.attempt_faults().is_empty());
+        assert_eq!(h.state(1), ExecState::Down);
+    }
+
+    #[test]
+    fn stall_is_transient() {
+        let plan = FaultPlan::new().stall(1, 0);
+        let mut h = ExecutorHealth::new(2, plan, 2);
+        h.begin_round(1);
+        assert_eq!(h.attempt_faults(), vec![0]);
+        h.note_attempt_failed();
+        assert_eq!(h.state(0), ExecState::Up);
+        assert_eq!(h.active(), vec![0, 1]);
+    }
+
+    #[test]
+    fn rejoin_goes_through_probation_and_is_health_gated() {
+        let plan = FaultPlan::new().crash(1, 1).rejoin(3, 1).stall(4, 1);
+        let mut h = ExecutorHealth::new(2, plan.clone(), 2);
+        h.begin_round(1);
+        h.attempt_faults();
+        h.note_attempt_failed();
+        assert_eq!(h.state(1), ExecState::Down);
+
+        h.begin_round(2);
+        assert_eq!(h.active(), vec![0]);
+
+        h.begin_round(3);
+        assert_eq!(h.state(1), ExecState::Probation { remaining: 2 });
+        assert_eq!(h.active(), vec![0, 1]);
+        assert!(h.is_degraded());
+
+        // Stall during probation kills the rejoin.
+        h.begin_round(4);
+        assert_eq!(h.state(1), ExecState::Probation { remaining: 1 });
+        assert_eq!(h.attempt_faults(), vec![1]);
+        h.note_attempt_failed();
+        assert_eq!(h.state(1), ExecState::Down);
+
+        // Without the probationary stall, probation expires back to Up.
+        let mut h2 = ExecutorHealth::new(2, FaultPlan::new().crash(1, 1).rejoin(3, 1), 2);
+        h2.begin_round(1);
+        h2.attempt_faults();
+        h2.note_attempt_failed();
+        for r in 2..=5 {
+            h2.begin_round(r);
+        }
+        assert_eq!(h2.state(1), ExecState::Up);
+        assert!(!h2.is_degraded());
+    }
+
+    #[test]
+    fn gpu_fault_degrades_without_failing_and_rejoin_services_it() {
+        let plan = FaultPlan::new().gpu_fail(2, 0).rejoin(4, 0);
+        let mut h = ExecutorHealth::new(2, plan, 2);
+        h.begin_round(1);
+        assert!(h.gpu_ok(0));
+        h.begin_round(2);
+        assert!(h.attempt_faults().is_empty(), "gpu fault must not fail the round");
+        assert!(!h.gpu_ok(0));
+        assert!(h.gpu_ok(1));
+        assert_eq!(h.active(), vec![0, 1]);
+        assert!(h.is_degraded());
+        h.begin_round(4);
+        assert!(h.gpu_ok(0));
+        let stats = h.stats();
+        assert_eq!(stats[0].gpu_faults, 1);
+        assert_eq!(stats[0].rejoins, 1);
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_survivable() {
+        for seed in [1u64, 7, 42] {
+            let a = FaultPlan::seeded(seed, 8, 3, 6);
+            let b = FaultPlan::seeded(seed, 8, 3, 6);
+            assert_eq!(a.events(), b.events());
+            assert!(!a.is_empty());
+            for ev in a.events() {
+                assert!(ev.round >= 1);
+                assert!(ev.executor < 3);
+                if ev.kind == FaultKind::Crash {
+                    assert_ne!(ev.executor, 0, "executor 0 must never crash");
+                    assert!(
+                        a.events().iter().any(|r| r.kind == FaultKind::Rejoin
+                            && r.executor == ev.executor
+                            && r.round > ev.round),
+                        "every seeded crash schedules a rejoin"
+                    );
+                }
+            }
+        }
+        assert_ne!(
+            FaultPlan::seeded(1, 8, 3, 6).events(),
+            FaultPlan::seeded(2, 8, 3, 6).events()
+        );
+    }
+
+    #[test]
+    fn single_executor_seeded_plans_never_crash() {
+        for seed in 0..16u64 {
+            let p = FaultPlan::seeded(seed, 6, 1, 8);
+            assert!(p.events().iter().all(|e| e.kind != FaultKind::Crash));
+        }
+    }
+
+    #[test]
+    fn events_off_the_end_of_the_cluster_are_inert() {
+        let plan = FaultPlan::new().crash(1, 9);
+        let mut h = ExecutorHealth::new(2, plan, 1);
+        h.begin_round(1);
+        assert!(h.attempt_faults().is_empty());
+        assert_eq!(h.active(), vec![0, 1]);
+    }
+}

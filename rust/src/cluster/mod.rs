@@ -10,7 +10,12 @@
 //! [`crate::cluster::exec::execute_on_cluster`].
 
 pub mod exec;
+pub mod faults;
 pub mod topology;
 
-pub use exec::{execute_on_cluster, execute_on_cluster_with_occupancy, ClusterOutcome};
+pub use exec::{
+    execute_on_cluster, execute_on_cluster_faulted, execute_on_cluster_with_occupancy,
+    ClusterOutcome,
+};
+pub use faults::{ExecState, ExecutorHealth, FaultEvent, FaultKind, FaultPlan, RoundFaults};
 pub use topology::{ClusterSpec, DeviceTopology, ExecutorSpec, NetworkModel};

@@ -108,6 +108,18 @@ impl ClusterSpec {
             self.coordination_per_executor.as_secs_f64() * self.executors.len() as f64,
         )
     }
+
+    /// The surviving cluster after failures: the executors whose
+    /// physical ids appear in `active`, same network and per-executor
+    /// coordination cost. Row shares, shuffle fractions, and barrier
+    /// overhead all rescale to the survivor set.
+    pub fn subset(&self, active: &[usize]) -> ClusterSpec {
+        ClusterSpec {
+            executors: active.iter().map(|&e| self.executors[e]).collect(),
+            network: self.network,
+            coordination_per_executor: self.coordination_per_executor,
+        }
+    }
 }
 
 /// The device shape a scheduling round plans against: one entry per
@@ -123,19 +135,30 @@ impl ClusterSpec {
 #[derive(Clone, Debug)]
 pub struct DeviceTopology {
     pub executors: Vec<ExecutorSpec>,
+    /// Per-executor GPU health. `false` means the executor is alive but
+    /// its GPU device has faulted: the scheduler charges its GPU-mapped
+    /// ops at CPU cost (no segments, no transfers) and execution runs
+    /// its share on a CPU-demoted plan. Always `executors.len()` long.
+    pub gpu_ok: Vec<bool>,
 }
 
 impl DeviceTopology {
     /// Single-node topology: one executor owning all of the session's
     /// cores and GPUs.
     pub fn single(cores: usize, gpus: usize) -> DeviceTopology {
-        DeviceTopology { executors: vec![ExecutorSpec { cores, gpus }] }
+        DeviceTopology {
+            executors: vec![ExecutorSpec { cores, gpus }],
+            gpu_ok: vec![true],
+        }
     }
 
     /// The topology a cluster session executes on — one entry per
     /// executor of the spec.
     pub fn from_cluster(spec: &ClusterSpec) -> DeviceTopology {
-        DeviceTopology { executors: spec.executors.clone() }
+        DeviceTopology {
+            gpu_ok: vec![true; spec.executors.len()],
+            executors: spec.executors.clone(),
+        }
     }
 
     pub fn num_executors(&self) -> usize {
@@ -144,6 +167,26 @@ impl DeviceTopology {
 
     pub fn total_cores(&self) -> usize {
         self.executors.iter().map(|e| e.cores).sum()
+    }
+
+    /// Whether executor `e`'s GPU device is usable this round.
+    pub fn gpu_usable(&self, e: usize) -> bool {
+        self.gpu_ok[e]
+    }
+
+    /// Mark executor `e`'s GPU device as faulted: it keeps its cores
+    /// (and its row share) but plans and executes CPU-only.
+    pub fn degrade_gpu(&mut self, e: usize) {
+        self.gpu_ok[e] = false;
+    }
+
+    /// The surviving topology after failures: the executors whose
+    /// indices appear in `active`, keeping each survivor's GPU health.
+    pub fn subset(&self, active: &[usize]) -> DeviceTopology {
+        DeviceTopology {
+            executors: active.iter().map(|&e| self.executors[e]).collect(),
+            gpu_ok: active.iter().map(|&e| self.gpu_ok[e]).collect(),
+        }
     }
 
     /// Fraction of a micro-batch's rows executor `e` processes (the
@@ -216,5 +259,30 @@ mod tests {
         assert_eq!(t.total_cores(), 12);
         assert_eq!(t.executors[0].gpus, 2);
         assert_eq!(t.row_share(0), 1.0);
+        assert!(t.gpu_usable(0));
+    }
+
+    #[test]
+    fn topology_subset_keeps_survivor_health() {
+        let mut t = DeviceTopology::from_cluster(&ClusterSpec::paper());
+        t.degrade_gpu(2);
+        let sub = t.subset(&[0, 2, 3]);
+        assert_eq!(sub.num_executors(), 3);
+        assert_eq!(sub.total_cores(), 36);
+        assert!(sub.gpu_usable(0));
+        assert!(!sub.gpu_usable(1)); // physical executor 2
+        assert!(sub.gpu_usable(2));
+        let sum: f64 = (0..sub.num_executors()).map(|e| sub.row_share(e)).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_subset_rescales_coordination_and_shuffle_shape() {
+        let c = ClusterSpec::paper();
+        let sub = c.subset(&[1, 3]);
+        assert_eq!(sub.executors.len(), 2);
+        assert_eq!(sub.total_cores(), 24);
+        assert!(sub.coordination() < c.coordination());
+        sub.validate().unwrap();
     }
 }

@@ -136,6 +136,32 @@ pub struct Config {
     /// [`Config::wal_dir`] is set (see
     /// [`RecoveryMode`](crate::durability::RecoveryMode)).
     pub recovery_mode: crate::durability::RecoveryMode,
+    /// Per-source WAL size cap in bytes. Without checkpoints the log is
+    /// never truncated (the ROADMAP's unbounded-growth caveat); when a
+    /// source's log would exceed this cap the session surfaces a typed
+    /// `Error::Durability` — except in `Gap` mode, where the log *rolls*
+    /// (oldest frames dropped, the loss accounted by the next recovery)
+    /// instead of filling the disk. `None` = unbounded (historical
+    /// behavior).
+    pub wal_max_bytes: Option<u64>,
+    /// Deterministic executor fault schedule for this run (crashes,
+    /// GPU-device faults, stalls, rejoins per round/executor). `None` =
+    /// fault-free — the oracle the fault-tolerance harness differences
+    /// against.
+    pub fault_plan: Option<crate::cluster::FaultPlan>,
+    /// How many failed attempts of one scheduling round the session
+    /// retries (re-planning on the surviving topology each time) before
+    /// surfacing `Error::Executor`.
+    pub max_round_retries: usize,
+    /// Base backoff charged to the round clock before retry attempt `k`
+    /// as `retry_backoff * 2^(k-1)` (exponential).
+    pub retry_backoff: Duration,
+    /// Failure-detection latency (heartbeat timeout): charged to the
+    /// round clock once per failed attempt, before backoff.
+    pub failure_detection: Duration,
+    /// Rounds a rejoining executor spends on probation (active but
+    /// health-gated: another failure sends it straight back down).
+    pub probation_rounds: usize,
 }
 
 impl Default for Config {
@@ -159,6 +185,12 @@ impl Default for Config {
             checkpoint_dir: None,
             wal_dir: None,
             recovery_mode: crate::durability::RecoveryMode::Precise,
+            wal_max_bytes: None,
+            fault_plan: None,
+            max_round_retries: 3,
+            retry_backoff: Duration::from_millis(50),
+            failure_detection: Duration::from_millis(100),
+            probation_rounds: 2,
         }
     }
 }
@@ -186,6 +218,9 @@ impl Config {
         }
         if let Some(cluster) = &self.cluster {
             cluster.validate()?;
+        }
+        if self.wal_max_bytes == Some(0) {
+            return Err(Error::Config("wal_max_bytes must be > 0 (or None)".into()));
         }
         Ok(())
     }
@@ -244,6 +279,27 @@ mod tests {
         };
         assert_eq!(clustered.topology().num_executors(), 4);
         assert_eq!(clustered.topology().total_cores(), 48);
+    }
+
+    #[test]
+    fn rejects_zero_wal_cap() {
+        let cfg = Config { wal_max_bytes: Some(0), ..Config::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = Config { wal_max_bytes: Some(4096), ..Config::default() };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_plan_config_is_valid() {
+        let cfg = Config {
+            fault_plan: Some(crate::cluster::FaultPlan::new().crash(2, 1).rejoin(4, 1)),
+            cluster: Some(crate::cluster::ClusterSpec::of(3)),
+            max_round_retries: 2,
+            retry_backoff: Duration::from_millis(10),
+            failure_detection: Duration::ZERO,
+            ..Config::default()
+        };
+        cfg.validate().unwrap();
     }
 
     #[test]

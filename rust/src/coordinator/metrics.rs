@@ -45,6 +45,46 @@ pub struct BatchRecord {
     /// Wait on the async optimizer before planning (Table IV
     /// "Optimization Blocking").
     pub opt_blocking: Duration,
+    /// Failed execution attempts this batch's round survived before
+    /// completing (executor crashes/stalls recovered by re-planning on
+    /// the surviving topology).
+    pub retries: usize,
+    /// Failure-detection + retry-backoff time the round charged;
+    /// already included in `proc`, so Eq. 10 and admission learn the
+    /// true degraded-round latency (mirrors `gpu_wait`'s convention).
+    pub recovery_wait: Duration,
+    /// The round executed on a degraded topology: a crashed executor
+    /// missing, a GPU-faulted executor running CPU-only, or a
+    /// probationary rejoin in flight.
+    pub degraded: bool,
+}
+
+/// Per-executor fault counters accumulated over a run (populated by
+/// [`ExecutorHealth`](crate::cluster::ExecutorHealth)).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ExecutorHealthStats {
+    /// Physical executor id.
+    pub executor: usize,
+    pub crashes: usize,
+    pub gpu_faults: usize,
+    pub stalls: usize,
+    pub rejoins: usize,
+    /// Final health state name (`up`, `gpu-degraded`, `down`,
+    /// `probation`).
+    pub state: String,
+}
+
+/// Run-wide fault-tolerance accounting: what failed, what it cost, and
+/// where every executor ended up.
+#[derive(Clone, Debug, Default)]
+pub struct HealthReport {
+    pub executors: Vec<ExecutorHealthStats>,
+    /// Failed attempts retried across the run.
+    pub retries: usize,
+    /// Total detection + backoff time charged to round clocks.
+    pub recovery_wait: Duration,
+    /// Rounds that executed on a degraded topology.
+    pub degraded_rounds: usize,
 }
 
 /// Aggregate phase times over a run (Table IV rows).
@@ -216,6 +256,9 @@ mod tests {
             construct_time: Duration::from_micros(10),
             map_device_time: Duration::from_micros(5),
             opt_blocking: Duration::ZERO,
+            retries: 0,
+            recovery_wait: Duration::ZERO,
+            degraded: false,
         }
     }
 

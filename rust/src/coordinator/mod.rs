@@ -26,7 +26,7 @@ pub mod schedule;
 
 pub use admission::{Admission, AdmissionDecision};
 pub use driver::{run, RunResult};
-pub use metrics::{BatchRecord, Metrics, PhaseTotals};
+pub use metrics::{BatchRecord, ExecutorHealthStats, HealthReport, Metrics, PhaseTotals};
 pub use optimizer::OnlineOptimizer;
 pub use planner::{
     map_device, op_candidates, select_devices, static_preference_plan, BaseCost,

@@ -208,6 +208,11 @@ struct ChainCtx {
     consumers: Vec<Vec<usize>>,
     /// `secs[e][o]`: op `o`'s seconds profile on executor `e`.
     secs: Vec<Vec<OpSecs>>,
+    /// Per-executor GPU health (from the round's possibly-degraded
+    /// topology): a `false` executor charges its GPU-assigned ops at CPU
+    /// cost with no segments or transfers — the predictive twin of the
+    /// executor running a CPU-demoted share plan.
+    gpu_ok: Vec<bool>,
 }
 
 /// One (query, executor) predicted execution shape under a device
@@ -297,7 +302,7 @@ fn chain_ctx(qc: &QueryCandidate, model: &DeviceModel, topo: &DeviceTopology) ->
                 .collect()
         })
         .collect();
-    ChainCtx { order, inputs, consumers, secs }
+    ChainCtx { order, inputs, consumers, secs, gpu_ok: topo.gpu_ok.clone() }
 }
 
 /// Lay one query's ops out on executor `e`'s local timeline under
@@ -310,6 +315,10 @@ fn chain(ctx: &ChainCtx, e: usize, devices: &[Device], batch_fixed: f64) -> Chai
     for &o in &ctx.order {
         match devices[o] {
             Device::Cpu => cpu_acc += secs[o].cpu,
+            // Faulted GPU device: the executor runs this op on CPU (the
+            // session hands it a demoted share plan), so charge CPU cost
+            // and book nothing on the device timeline.
+            Device::Gpu if !ctx.gpu_ok[e] => cpu_acc += secs[o].cpu,
             Device::Gpu => {
                 let (entering, leaving) =
                     transfer_boundaries(&ctx.inputs[o], &ctx.consumers[o], |i| {
@@ -777,6 +786,53 @@ mod tests {
         let one = mk(&single_topo());
         let two = mk(&DeviceTopology::from_cluster(&crate::cluster::ClusterSpec::of(2)));
         assert!(two < one, "2-executor {two} !< 1-executor {one}");
+    }
+
+    #[test]
+    fn fully_degraded_topology_plans_cpu_only() {
+        // Every executor's GPU has faulted: no segment may be booked and
+        // the chosen makespan must collapse to the all-CPU makespan,
+        // while the ordering bounds still hold.
+        let q1 = chain_query("a");
+        let q2 = chain_query("b");
+        let model = DeviceModel::default();
+        for n in [1usize, 2] {
+            let mut topo = if n == 1 {
+                single_topo()
+            } else {
+                DeviceTopology::from_cluster(&crate::cluster::ClusterSpec::of(n))
+            };
+            for e in 0..topo.num_executors() {
+                topo.degrade_gpu(e);
+            }
+            let cands =
+                vec![cand(&q1, 50.0 * KB, 10.0 * KB, 4), cand(&q2, 50.0 * KB, 10.0 * KB, 4)];
+            let jp = plan_joint(&cands, &model, &topo);
+            let p = &jp.predicted;
+            assert!(p.timeline.is_empty(), "degraded topology booked GPU slots: {p:?}");
+            assert_eq!(p.gpu_busy, 0.0);
+            assert!((p.makespan - p.all_cpu_makespan).abs() < 1e-9, "{p:?}");
+            assert!(p.makespan <= p.fifo_makespan + 1e-9, "{p:?}");
+            assert!(p.fifo_makespan <= p.independent.iter().sum::<f64>() + 1e-6, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn partially_degraded_topology_books_only_healthy_executors() {
+        let q1 = chain_query("a");
+        let q2 = chain_query("b");
+        let model = DeviceModel::default();
+        let mut topo = DeviceTopology::from_cluster(&crate::cluster::ClusterSpec::of(2));
+        topo.degrade_gpu(0);
+        let cands =
+            vec![cand(&q1, 50.0 * KB, 10.0 * KB, 4), cand(&q2, 50.0 * KB, 10.0 * KB, 4)];
+        let jp = plan_joint(&cands, &model, &topo);
+        let p = &jp.predicted;
+        assert!(p.timeline.iter().all(|s| s.exec == 1), "booked the faulted device: {p:?}");
+        // Makespan ordering survives degradation.
+        assert!(p.makespan <= p.fifo_makespan + 1e-9, "{p:?}");
+        assert!(p.fifo_makespan <= p.independent.iter().sum::<f64>() + 1e-6, "{p:?}");
+        assert!(p.makespan <= p.all_cpu_makespan + 1e-6, "{p:?}");
     }
 
     #[test]

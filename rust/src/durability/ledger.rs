@@ -9,12 +9,19 @@
 //! and skips re-emission, turning at-least-once replay into
 //! exactly-once output.
 //!
-//! Persistence runs after *every* delivery (atomic replace + fsync file
-//! + fsync dir), so a crash between two deliveries never leaves an
-//! unrecorded one. The remaining window — a crash after the sink
-//! accepted a batch but before its ledger write hit disk — degrades
-//! that single batch to at-least-once; a transactional sink protocol
-//! (two-phase commit with the sink) is the documented follow-up.
+//! Persistence is batched per scheduling round: the session calls
+//! [`SinkLedger::record`] after each delivery and [`SinkLedger::persist`]
+//! once at the end of the round's delivery loop (atomic replace + fsync
+//! file + fsync dir) — and again on the error path before a failed
+//! delivery propagates, so deliveries that succeeded earlier in the
+//! round are never lost. `persist` is a no-op while nothing changed.
+//! The crash window is therefore one round's deliveries, which Precise
+//! replay already covers: every batch of an unpersisted round is still
+//! in the WAL, so a restart re-executes and re-delivers it exactly once.
+//! The remaining window — a crash after the sink accepted a batch but
+//! before its round's ledger write hit disk — degrades that round to
+//! at-least-once; a transactional sink protocol (two-phase commit with
+//! the sink) is the documented follow-up.
 
 use crate::error::{Error, Result};
 use crate::util::json::{num, obj, Json};
@@ -38,6 +45,10 @@ pub struct SinkLedger {
     path: PathBuf,
     /// Keyed by lowercased query name.
     entries: BTreeMap<String, LedgerEntry>,
+    /// Unpersisted records since the last [`SinkLedger::persist`].
+    dirty: bool,
+    /// Actual disk writes performed (per-round batching pin).
+    persists: usize,
 }
 
 impl SinkLedger {
@@ -49,7 +60,12 @@ impl SinkLedger {
         let text = match std::fs::read_to_string(path) {
             Ok(t) => t,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-                return Ok(SinkLedger { path: path.to_path_buf(), entries: BTreeMap::new() })
+                return Ok(SinkLedger {
+                    path: path.to_path_buf(),
+                    entries: BTreeMap::new(),
+                    dirty: false,
+                    persists: 0,
+                })
             }
             Err(e) => return Err(e.into()),
         };
@@ -72,7 +88,7 @@ impl SinkLedger {
                 );
             }
         }
-        Ok(SinkLedger { path: path.to_path_buf(), entries })
+        Ok(SinkLedger { path: path.to_path_buf(), entries, dirty: false, persists: 0 })
     }
 
     /// Highest delivered batch index for `query`, if any delivery has
@@ -93,16 +109,26 @@ impl SinkLedger {
         let key = query.to_lowercase();
         match self.entries.get_mut(&key) {
             Some(e) if e.batch >= batch_index => {}
-            Some(e) => *e = LedgerEntry { round, batch: batch_index },
+            Some(e) => {
+                *e = LedgerEntry { round, batch: batch_index };
+                self.dirty = true;
+            }
             None => {
                 self.entries.insert(key, LedgerEntry { round, batch: batch_index });
+                self.dirty = true;
             }
         }
     }
 
     /// Durably persist: write-temp → fsync temp → rename → fsync dir
     /// (the same ordering invariant the checkpoint store states).
-    pub fn persist(&self) -> Result<()> {
+    /// No-op while nothing changed since the last persist — the session
+    /// calls this once per round (and on the deliver-error path), not
+    /// per delivery.
+    pub fn persist(&mut self) -> Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
         let queries = Json::Obj(
             self.entries
                 .iter()
@@ -126,7 +152,16 @@ impl SinkLedger {
         }
         std::fs::rename(&tmp, &self.path)?;
         super::wal::sync_parent_dir(&self.path)?;
+        self.dirty = false;
+        self.persists += 1;
         Ok(())
+    }
+
+    /// How many disk writes [`SinkLedger::persist`] actually performed
+    /// (skipped clean persists don't count) — pins the one-persist-per-
+    /// round batching.
+    pub fn persists(&self) -> usize {
+        self.persists
     }
 
     /// All recorded entries (report/printing surface), in name order.
@@ -182,6 +217,37 @@ mod tests {
         l.record("q", 1, 0);
         assert!(l.already_delivered("q", 0));
         assert!(!l.already_delivered("q", 1));
+    }
+
+    #[test]
+    fn clean_persist_is_a_no_op_and_persists_are_counted() {
+        let path = ledger_path("batch");
+        let mut l = SinkLedger::open(&path).unwrap();
+        // Nothing recorded: no write, no file.
+        l.persist().unwrap();
+        assert_eq!(l.persists(), 0);
+        assert!(!path.exists());
+
+        // Many records, one round-end persist: one disk write.
+        l.record("a", 1, 0);
+        l.record("b", 1, 0);
+        l.record("c", 1, 0);
+        l.persist().unwrap();
+        assert_eq!(l.persists(), 1);
+        l.persist().unwrap();
+        assert_eq!(l.persists(), 1, "clean persist must not rewrite");
+
+        // A stale (monotone-suppressed) record does not dirty the ledger.
+        l.record("a", 1, 0);
+        l.persist().unwrap();
+        assert_eq!(l.persists(), 1);
+
+        l.record("a", 2, 1);
+        l.persist().unwrap();
+        assert_eq!(l.persists(), 2);
+        let l2 = SinkLedger::open(&path).unwrap();
+        assert_eq!(l2.high_water("a"), Some(LedgerEntry { round: 2, batch: 1 }));
+        assert_eq!(l2.persists(), 0, "persist count is per-instance");
     }
 
     #[test]

@@ -240,6 +240,42 @@ impl Wal {
         if self.pending.len() == before && !self.dirty {
             return Ok(());
         }
+        self.rewrite()
+    }
+
+    /// Current on-disk size of the log: header plus every complete
+    /// frame (what a fresh open would find; torn bytes are gone).
+    pub fn size_bytes(&self) -> u64 {
+        (MAGIC.len() + self.pending.iter().map(|(_, f)| f.len()).sum::<usize>()) as u64
+    }
+
+    /// Complete frames currently in the log.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Roll the log under `cap` bytes by dropping the *oldest* frames
+    /// (Gap mode's answer to an un-truncatable log: bounded disk over
+    /// replayability — the next recovery accounts the dropped range as
+    /// loss). The newest frame is always kept even if it alone exceeds
+    /// `cap`. Returns how many frames were dropped; the file is
+    /// rewritten atomically only when the cap forces drops.
+    pub fn roll_to_cap(&mut self, cap: u64) -> Result<usize> {
+        let mut dropped = 0usize;
+        while self.pending.len() > 1 && self.size_bytes() > cap {
+            self.pending.remove(0);
+            dropped += 1;
+        }
+        if dropped == 0 {
+            return Ok(0);
+        }
+        self.rewrite()?;
+        Ok(dropped)
+    }
+
+    /// Rewrite the file from `pending`: write-temp → fsync → rename →
+    /// fsync dir, then reopen for appending.
+    fn rewrite(&mut self) -> Result<()> {
         let tmp = self.path.with_extension("wal.tmp");
         {
             let mut f = File::create(&tmp)?;
@@ -557,6 +593,67 @@ mod tests {
             })
             .collect();
         assert_eq!(seqs, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn size_bytes_matches_file_length() {
+        let path = wal_path("size");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        assert_eq!(wal.size_bytes(), MAGIC.len() as u64);
+        for i in 0..3 {
+            wal.append(1, &MicroBatch::new(vec![ds(i, i as f64, &[i as f32])])).unwrap();
+            assert_eq!(wal.size_bytes(), std::fs::metadata(&path).unwrap().len());
+        }
+        wal.truncate_through(1).unwrap();
+        assert_eq!(wal.size_bytes(), std::fs::metadata(&path).unwrap().len());
+    }
+
+    #[test]
+    fn roll_to_cap_drops_oldest_frames_only() {
+        let path = wal_path("roll");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        for i in 0..4 {
+            wal.append(1, &MicroBatch::new(vec![ds(i, i as f64, &[i as f32])])).unwrap();
+        }
+        let full = wal.size_bytes();
+        // A generous cap drops nothing and rewrites nothing.
+        assert_eq!(wal.roll_to_cap(full).unwrap(), 0);
+        // Roll to roughly half: oldest frames go, newest survive.
+        let dropped = wal.roll_to_cap(full / 2).unwrap();
+        assert!(dropped >= 1);
+        assert!(wal.size_bytes() <= full / 2 || wal.pending_len() == 1);
+        // Appends continue the sequence after a roll.
+        assert_eq!(wal.append(2, &MicroBatch::new(vec![ds(9, 9.0, &[9.0])])).unwrap(), 5);
+        drop(wal);
+        let (_, scan) = Wal::open(&path).unwrap();
+        let seqs: Vec<u64> = scan
+            .entries
+            .iter()
+            .map(|e| match e {
+                ScanEntry::Ok(r) => r.seq,
+                _ => panic!("corrupt"),
+            })
+            .collect();
+        assert_eq!(*seqs.last().unwrap(), 5);
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]));
+        assert!(seqs[0] > 1, "oldest frames must be the dropped ones");
+    }
+
+    #[test]
+    fn roll_always_keeps_newest_frame() {
+        let path = wal_path("roll-min");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        wal.append(1, &MicroBatch::new(vec![ds(0, 0.0, &[0.0])])).unwrap();
+        wal.append(1, &MicroBatch::new(vec![ds(1, 1.0, &[1.0])])).unwrap();
+        // Cap smaller than any single frame: everything but the newest
+        // frame is dropped, the newest survives over-cap.
+        wal.roll_to_cap(1).unwrap();
+        assert_eq!(wal.pending_len(), 1);
+        drop(wal);
+        let (_, scan) = Wal::open(&path).unwrap();
+        assert_eq!(scan.entries.len(), 1);
+        let ScanEntry::Ok(r) = &scan.entries[0] else { panic!() };
+        assert_eq!(r.seq, 2);
     }
 
     #[test]

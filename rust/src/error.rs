@@ -39,6 +39,17 @@ pub enum Error {
     /// an unrecoverable condition for the configured recovery mode.
     #[error("durability: {0}")]
     Durability(String),
+
+    /// An executor failed (crash, GPU-device fault, stall) and the
+    /// round's retry budget could not recover it — either the budget is
+    /// exhausted or no executor survives to re-plan on.
+    #[error("executor {executor}: {reason}")]
+    Executor {
+        /// Physical executor id (index into the configured cluster).
+        executor: usize,
+        /// What failed and why recovery stopped.
+        reason: String,
+    },
 }
 
 impl From<xla::Error> for Error {

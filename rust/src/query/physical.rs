@@ -116,6 +116,20 @@ impl PhysicalPlan {
     pub fn is_empty(&self) -> bool {
         self.per_op.is_empty()
     }
+
+    /// The same plan with every op forced to CPU — what an executor with
+    /// a faulted GPU device runs for its share. Operators are device-
+    /// invariant, so the demoted share produces bit-identical rows; only
+    /// the charged physics change (per-core CPU cost, no PCIe segments).
+    pub fn demoted_to_cpu(&self) -> PhysicalPlan {
+        PhysicalPlan {
+            per_op: self
+                .per_op
+                .iter()
+                .map(|o| PhysicalOp { device: Device::Cpu, ..o.clone() })
+                .collect(),
+        }
+    }
 }
 
 /// Alg. 2's `Trans` placement rule (first op / last op / device switch),
@@ -165,6 +179,17 @@ mod tests {
         assert_eq!(p.len(), q.len());
         assert_eq!(p.gpu_ops(), q.len());
         assert_eq!(p.devices(), DevicePlan::all(Device::Gpu, q.len()));
+    }
+
+    #[test]
+    fn demotion_keeps_shape_and_zeroes_gpu_ops() {
+        let q = chain();
+        let p = PhysicalPlan::uniform(&q, Device::Gpu);
+        let d = p.demoted_to_cpu();
+        assert_eq!(d.len(), p.len());
+        assert_eq!(d.gpu_ops(), 0);
+        assert_eq!(d.per_op[1].op_id, p.per_op[1].op_id);
+        assert_eq!(d.per_op[1].est_bytes, p.per_op[1].est_bytes);
     }
 
     #[test]

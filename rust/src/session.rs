@@ -66,14 +66,14 @@ use crate::coordinator::admission::{
     min_positive_throughput, Admission, AdmissionDecision,
 };
 use crate::coordinator::checkpoint::{Checkpoint, CheckpointStore, QueryMetricState};
-use crate::coordinator::metrics::{BatchRecord, Metrics, PhaseTotals};
+use crate::coordinator::metrics::{BatchRecord, HealthReport, Metrics, PhaseTotals};
 use crate::coordinator::optimizer::{HistoryPoint, OnlineOptimizer};
 use crate::coordinator::planner::{map_device, static_preference_plan, SizeEstimator};
 use crate::coordinator::schedule::{self, QueryCandidate};
 use crate::devices::model::DeviceModel;
 use crate::devices::Device;
 use crate::durability::{
-    self, RecoveryReport, SinkLedger, Wal, WalPosition, WalRecord,
+    self, RecoveryMode, RecoveryReport, SinkLedger, Wal, WalPosition, WalRecord,
 };
 use crate::engine::chunked::ChunkedBatch;
 use crate::engine::dataset::MicroBatch;
@@ -187,6 +187,12 @@ pub struct Session<'rt> {
     /// What the last `run`'s startup reconciliation replayed, skipped
     /// and lost (Some only when `Config::wal_dir` is set).
     last_recovery: Option<RecoveryReport>,
+    /// Fault-tolerance accounting for the most recent *completed* run
+    /// (per-executor counters, retries, recovery wait, degraded rounds).
+    last_health: Option<HealthReport>,
+    /// Sink-ledger disk writes the most recent run performed (pins the
+    /// one-persist-per-round batching; 0 without `Config::wal_dir`).
+    last_ledger_persists: usize,
 }
 
 impl<'rt> Session<'rt> {
@@ -229,6 +235,8 @@ impl<'rt> Session<'rt> {
             sources: Vec::new(),
             queries: Vec::new(),
             last_recovery: None,
+            last_health: None,
+            last_ledger_persists: 0,
         })
     }
 
@@ -238,6 +246,22 @@ impl<'rt> Session<'rt> {
     /// (gap). `None` unless [`Config::wal_dir`] is set.
     pub fn recovery_report(&self) -> Option<&RecoveryReport> {
         self.last_recovery.as_ref()
+    }
+
+    /// The fault-tolerance report of the most recent completed
+    /// [`Session::run`]: per-executor crash/stall/GPU-fault/rejoin
+    /// counters and final health states, plus run totals for retried
+    /// attempts, charged recovery wait, and degraded rounds. `None`
+    /// before the first completed run (or after a run that errored).
+    pub fn health_report(&self) -> Option<&HealthReport> {
+        self.last_health.as_ref()
+    }
+
+    /// How many sink-ledger disk writes the most recent run performed —
+    /// one per round with fresh deliveries, not one per delivery
+    /// (always 0 without [`Config::wal_dir`]).
+    pub fn ledger_persists(&self) -> usize {
+        self.last_ledger_persists
     }
 
     pub fn config(&self) -> &Config {
@@ -463,6 +487,8 @@ impl<'rt> Session<'rt> {
             None => None,
         };
         self.last_recovery = None;
+        self.last_health = None;
+        self.last_ledger_persists = 0;
 
         // ---- Per-query run state (metrics first: checkpoint recovery
         // below seeds them).
@@ -614,10 +640,20 @@ impl<'rt> Session<'rt> {
             vec![Time::ZERO.add(cfg.trigger); num_sources];
         let mut construct_acc: Vec<Duration> = vec![Duration::ZERO; num_sources];
 
-        // The device topology every scheduling round plans and executes
-        // against: per-executor GPUs on a cluster, the 1-executor
-        // special case on a single node.
-        let topo = cfg.topology();
+        // The full (fault-free) device topology: per-executor GPUs on a
+        // cluster, the 1-executor special case on a single node. Each
+        // round plans and executes against the *surviving* view the
+        // health detector derives from it — with no fault plan the two
+        // are identical.
+        let base_topo = cfg.topology();
+        let mut health = cluster::ExecutorHealth::new(
+            base_topo.num_executors(),
+            cfg.fault_plan.clone().unwrap_or_default(),
+            cfg.probation_rounds,
+        );
+        let mut total_retries = 0usize;
+        let mut total_recovery_wait = Duration::ZERO;
+        let mut degraded_rounds = 0usize;
 
         let end = Time::ZERO.add(duration);
 
@@ -709,6 +745,10 @@ impl<'rt> Session<'rt> {
             // set of per-executor device timelines, and the clock
             // advances once by the round's contended makespan.
             round += 1;
+            // Fire this round's scheduled faults (and expire probation)
+            // before anything plans: crashes/stalls arm a failed first
+            // attempt, GPU faults degrade the executor in place.
+            health.begin_round(round);
             let admitted_at = clock.now();
             // The round's shared phase costs (the joint planning pass,
             // the optimizer pickup) are charged once, to the first
@@ -732,6 +772,30 @@ impl<'rt> Session<'rt> {
                 }
                 (None, None) => vec![None; admitted.len()],
             };
+
+            // ---- WAL growth guard. Without checkpoints the log never
+            // truncates (the ROADMAP's unbounded-growth caveat): at the
+            // configured cap, Gap mode *rolls* the log (oldest frames
+            // dropped — the next recovery accounts them as loss), the
+            // precise modes surface a typed error rather than silently
+            // weakening their replay contract or filling the disk.
+            if let (Some(cap), Some(ws)) = (cfg.wal_max_bytes, wals.as_mut()) {
+                for &(s, _) in &admitted {
+                    if ws[s].size_bytes() > cap {
+                        if cfg.recovery_mode == RecoveryMode::Gap {
+                            ws[s].roll_to_cap(cap)?;
+                        } else {
+                            let name = &self.queries[self.sources[s].primary].name;
+                            return Err(Error::Durability(format!(
+                                "wal for source `{name}` is {} bytes, over \
+                                 wal_max_bytes={cap}: enable checkpointing (the \
+                                 log truncates) or Gap recovery (the log rolls)",
+                                ws[s].size_bytes()
+                            )));
+                        }
+                    }
+                }
+            }
 
             // ---- Optimizer pickup (must land before planning).
             let (new_inf, opt_blocking) = if cfg.mode == Mode::LmStream {
@@ -785,99 +849,30 @@ impl<'rt> Session<'rt> {
                 }
             }
 
-            // ---- Planning. A multi-query LMStream round is planned
-            // jointly across *everything* staged — all sources, all
-            // executors: the scheduler collects every query's Eq. 7–9
-            // candidate costs (the same SizeEstimator-fed path
-            // map_device runs on) and rations the topology's
-            // per-executor GPUs by benefit-per-GPU-second, choosing the
-            // grant order (shortest-GPU-segment-first where that beats
-            // FIFO) the execution below follows — concurrent idle-GPU
-            // MapDevice plans would double-book the devices.
-            // Single-query rounds, ablations (co_schedule = false) and
-            // fixed policies keep per-query plans in staging order.
-            let t_plan = Instant::now();
-            let (plans, exec_order): (Vec<PhysicalPlan>, Vec<usize>) = if cfg.mode
-                == Mode::LmStream
-                && cfg.co_schedule
-                && staged.len() > 1
-            {
-                let mut cands: Vec<QueryCandidate> = Vec::with_capacity(staged.len());
-                for st in &staged {
-                    let qdef = &self.queries[st.qi];
-                    // Part_(i,j): partition share of the data the
-                    // processing phase actually touches — one core of
-                    // the whole topology (each executor's per-core
-                    // share of its row split is exactly this).
-                    let part = mean_partition_bytes(
-                        st.input.alloc_bytes(),
-                        topo.total_cores(),
-                    );
-                    let (aux_bytes, aux_chunks) = if qdef.has_join {
-                        match st.snapshot.as_ref() {
-                            Some(w) => (w.alloc_bytes() as f64, w.num_chunks()),
-                            None => (0.0, 0),
-                        }
-                    } else {
-                        (0.0, 0)
-                    };
-                    cands.push(QueryCandidate::build(
-                        &qdef.query,
-                        part,
-                        self.inf_pt,
-                        cfg.base_trans_cost,
-                        &qdef.size_est,
-                        st.input.num_chunks(),
-                        aux_bytes,
-                        aux_chunks,
-                    )?);
-                }
-                let jp = schedule::plan_joint(&cands, &self.model, &topo);
-                let order = jp.predicted.order.clone();
-                (jp.plans, order)
-            } else {
-                let mut plans = Vec::with_capacity(staged.len());
-                for st in &staged {
-                    let qdef = &self.queries[st.qi];
-                    let query = &qdef.query;
-                    let plan = match cfg.mode {
-                        Mode::LmStream => {
-                            let part = mean_partition_bytes(
-                                st.input.alloc_bytes(),
-                                topo.total_cores(),
-                            );
-                            map_device(
-                                query,
-                                part,
-                                self.inf_pt,
-                                cfg.base_trans_cost,
-                                &qdef.size_est,
-                                st.input.num_chunks(),
-                            )?
-                        }
-                        Mode::Baseline | Mode::AllGpu => {
-                            PhysicalPlan::uniform(query, Device::Gpu)
-                        }
-                        Mode::BaselineCpu | Mode::AllCpu => {
-                            PhysicalPlan::uniform(query, Device::Cpu)
-                        }
-                        Mode::StaticPreference => static_preference_plan(query),
-                    };
-                    plans.push(plan);
-                }
-                (plans, (0..staged.len()).collect())
-            };
-            let map_device_total = t_plan.elapsed();
-
-            // ---- Execution on the round's shared device timelines.
-            // Queries run concurrently from round start (their CPU
-            // pipelines are independent Spark jobs) while all simulated
-            // GPU ops of the round serialize on one GpuTimeline per
-            // executor of the topology, in the scheduler's chosen grant
-            // order — so the clock advances by the *contended makespan*
-            // across every admitted source, not per-source fictions,
-            // and each query's proc carries its observable gpu_wait
-            // share.
+            // ---- Planning + execution, under the round's retry loop.
+            // A multi-query LMStream round is planned jointly across
+            // *everything* staged — all sources, all executors: the
+            // scheduler collects every query's Eq. 7–9 candidate costs
+            // (the same SizeEstimator-fed path map_device runs on) and
+            // rations the topology's per-executor GPUs by
+            // benefit-per-GPU-second, choosing the grant order
+            // (shortest-GPU-segment-first where that beats FIFO) the
+            // execution below follows — concurrent idle-GPU MapDevice
+            // plans would double-book the devices. Single-query rounds,
+            // ablations (co_schedule = false) and fixed policies keep
+            // per-query plans in staging order.
+            //
+            // Fault tolerance: every attempt plans and executes against
+            // the *surviving* topology the health detector reports —
+            // crashed executors excluded, GPU-faulted ones CPU-only. An
+            // injected fault fails the attempt with `Error::Executor`;
+            // the session transitions health, charges detection plus
+            // exponential backoff to the round clock, re-plans on the
+            // survivors and retries, up to `Config::max_round_retries`.
+            // Staging and the WAL append stay outside the loop (the
+            // window pushes above are stateful; the log already holds
+            // the round) — attempts re-execute from the staged chunk
+            // lists, whose clones are O(#chunks) Arc bumps.
             struct Pending {
                 s: usize,
                 qi: usize,
@@ -889,97 +884,298 @@ impl<'rt> Session<'rt> {
                 gpu_ops: usize,
                 total_ops: usize,
             }
-            let mut pending: Vec<Pending> = Vec::new();
-            let mut makespan = Duration::ZERO;
-            // One execution timeline per executor of the topology — the
-            // same bank the scheduler simulated (single node = 1).
-            let mut timelines: Vec<GpuTimeline> =
-                vec![GpuTimeline::new(); topo.num_executors()];
-            let mut staged: Vec<Option<Staged>> = staged.into_iter().map(Some).collect();
-            for &idx in &exec_order {
-                let Staged { s, qi, input, snapshot } =
-                    staged[idx].take().expect("each staged query executes once");
-                let plan = &plans[idx];
-                let qdef = &self.queries[qi];
-                let query = &qdef.query;
-                // A join's build side before any state: empty window.
-                let empty_window = ChunkedBatch::new(input.schema().clone());
-                let join_side = if qdef.has_join {
-                    Some(snapshot.as_ref().unwrap_or(&empty_window))
-                } else {
-                    None
+            let mut round_retries = 0usize;
+            let mut recovery_wait = Duration::ZERO;
+            let (mut pending, mut makespan, map_device_total, degraded) = loop {
+                // Faults armed for this attempt (the first attempt of a
+                // faulty round only: a crash keeps failing through
+                // topology exclusion, not re-injection) and the
+                // surviving executors, in physical ids.
+                let fail_phys = health.attempt_faults();
+                let active = health.active();
+                if active.is_empty() {
+                    return Err(Error::Executor {
+                        executor: fail_phys.first().copied().unwrap_or(0),
+                        reason: "no surviving executors to re-plan on".into(),
+                    });
+                }
+                // The degraded view this attempt plans against, and the
+                // fault set execution observes, in subset-local indices.
+                let mut topo = base_topo.subset(&active);
+                for (local, &phys) in active.iter().enumerate() {
+                    if !health.gpu_ok(phys) {
+                        topo.degrade_gpu(local);
+                    }
+                }
+                let faults = cluster::RoundFaults {
+                    fail: fail_phys
+                        .iter()
+                        .filter_map(|&p| active.iter().position(|&a| a == p))
+                        .collect(),
+                    cpu_only: (0..active.len())
+                        .filter(|&l| !topo.gpu_usable(l))
+                        .collect(),
                 };
+                let degraded_now = health.is_degraded() || !faults.is_clean();
+                let run_cluster = cfg.cluster.as_ref().map(|spec| spec.subset(&active));
 
-                // Processing phase (single executor or cluster-wide).
-                let (result, branch_results, proc, gpu_wait, traces) =
-                    match &cfg.cluster {
-                        None => {
-                            let env = ExecEnv {
-                                model: &self.model,
-                                backend: cfg.backend,
-                                num_cores: cfg.num_cores,
-                                num_gpus: cfg.num_gpus,
-                                runtime,
-                            };
-                            let o = exec::execute_with_occupancy(
-                                query,
-                                plan,
-                                input,
-                                join_side,
-                                &env,
-                                &mut timelines[0],
-                            )?;
-                            (o.result, o.branch_results, o.proc, o.contention, o.traces)
-                        }
-                        Some(spec) => {
-                            let o = cluster::execute_on_cluster_with_occupancy(
-                                spec,
-                                query,
-                                plan,
-                                input,
-                                join_side,
-                                &self.model,
-                                cfg.backend,
-                                runtime,
-                                Some(&mut timelines),
-                            )?;
-                            // Merge per-executor traces (sum byte
-                            // volumes per op) for the size estimator.
-                            let mut merged: Vec<OpTrace> =
-                                o.per_executor[0].traces.clone();
-                            for ex in &o.per_executor[1..] {
-                                for (m, t) in merged.iter_mut().zip(&ex.traces) {
-                                    m.in_bytes += t.in_bytes;
-                                    m.out_bytes += t.out_bytes;
+                let run_attempt = || -> Result<(Vec<Pending>, Duration, Duration)> {
+                    let t_plan = Instant::now();
+                    let (plans, exec_order): (Vec<PhysicalPlan>, Vec<usize>) = if cfg.mode
+                        == Mode::LmStream
+                        && cfg.co_schedule
+                        && staged.len() > 1
+                    {
+                        let mut cands: Vec<QueryCandidate> =
+                            Vec::with_capacity(staged.len());
+                        for st in &staged {
+                            let qdef = &self.queries[st.qi];
+                            // Part_(i,j): partition share of the data
+                            // the processing phase actually touches —
+                            // one core of the surviving topology (each
+                            // executor's per-core share of its row
+                            // split is exactly this).
+                            let part = mean_partition_bytes(
+                                st.input.alloc_bytes(),
+                                topo.total_cores(),
+                            );
+                            let (aux_bytes, aux_chunks) = if qdef.has_join {
+                                match st.snapshot.as_ref() {
+                                    Some(w) => (w.alloc_bytes() as f64, w.num_chunks()),
+                                    None => (0.0, 0),
                                 }
-                            }
-                            // The batch completes at the straggler,
-                            // so the wait that actually sits inside
-                            // this record's proc is the *straggler
-                            // executor's* contention (another
-                            // executor's larger wait can hide
-                            // entirely behind the barrier).
-                            let wait = o
-                                .per_executor
-                                .iter()
-                                .max_by_key(|e| e.proc)
-                                .map(|e| e.contention)
-                                .unwrap_or(Duration::ZERO);
-                            (o.result, o.branch_results, o.proc, wait, merged)
+                            } else {
+                                (0.0, 0)
+                            };
+                            cands.push(QueryCandidate::build(
+                                &qdef.query,
+                                part,
+                                self.inf_pt,
+                                cfg.base_trans_cost,
+                                &qdef.size_est,
+                                st.input.num_chunks(),
+                                aux_bytes,
+                                aux_chunks,
+                            )?);
                         }
+                        let jp = schedule::plan_joint(&cands, &self.model, &topo);
+                        let order = jp.predicted.order.clone();
+                        (jp.plans, order)
+                    } else {
+                        let mut plans = Vec::with_capacity(staged.len());
+                        for st in &staged {
+                            let qdef = &self.queries[st.qi];
+                            let query = &qdef.query;
+                            let plan = match cfg.mode {
+                                Mode::LmStream => {
+                                    let part = mean_partition_bytes(
+                                        st.input.alloc_bytes(),
+                                        topo.total_cores(),
+                                    );
+                                    map_device(
+                                        query,
+                                        part,
+                                        self.inf_pt,
+                                        cfg.base_trans_cost,
+                                        &qdef.size_est,
+                                        st.input.num_chunks(),
+                                    )?
+                                }
+                                Mode::Baseline | Mode::AllGpu => {
+                                    PhysicalPlan::uniform(query, Device::Gpu)
+                                }
+                                Mode::BaselineCpu | Mode::AllCpu => {
+                                    PhysicalPlan::uniform(query, Device::Cpu)
+                                }
+                                Mode::StaticPreference => static_preference_plan(query),
+                            };
+                            plans.push(plan);
+                        }
+                        (plans, (0..staged.len()).collect())
                     };
-                makespan = makespan.max(proc);
-                pending.push(Pending {
-                    s,
-                    qi,
-                    result,
-                    branch_results,
-                    proc,
-                    gpu_wait,
-                    traces,
-                    gpu_ops: plan.gpu_ops(),
-                    total_ops: query.len(),
-                });
+                    let map_device_total = t_plan.elapsed();
+
+                    // ---- Execution on the attempt's shared device
+                    // timelines. Queries run concurrently from round
+                    // start (their CPU pipelines are independent Spark
+                    // jobs) while all simulated GPU ops of the round
+                    // serialize on one GpuTimeline per surviving
+                    // executor, in the scheduler's chosen grant order —
+                    // so the clock advances by the *contended makespan*
+                    // across every admitted source, not per-source
+                    // fictions, and each query's proc carries its
+                    // observable gpu_wait share.
+                    let mut pending: Vec<Pending> = Vec::new();
+                    let mut makespan = Duration::ZERO;
+                    let mut timelines: Vec<GpuTimeline> =
+                        vec![GpuTimeline::new(); topo.num_executors()];
+                    for &idx in &exec_order {
+                        let st = &staged[idx];
+                        let (s, qi) = (st.s, st.qi);
+                        let input = st.input.clone();
+                        let plan = &plans[idx];
+                        let qdef = &self.queries[qi];
+                        let query = &qdef.query;
+                        // A join's build side before any state: empty window.
+                        let empty_window = ChunkedBatch::new(input.schema().clone());
+                        let join_side = if qdef.has_join {
+                            Some(st.snapshot.as_ref().unwrap_or(&empty_window))
+                        } else {
+                            None
+                        };
+
+                        // Processing phase (single executor or
+                        // cluster-wide, on the surviving spec).
+                        let (result, branch_results, proc, gpu_wait, traces, gpu_ops) =
+                            match &run_cluster {
+                                None => {
+                                    // Single node: a faulted executor
+                                    // has no peer to re-plan around —
+                                    // the share is simply lost this
+                                    // attempt.
+                                    if let Some(&e) = fail_phys.first() {
+                                        return Err(Error::Executor {
+                                            executor: e,
+                                            reason: "lost its share mid-round (injected fault)"
+                                                .into(),
+                                        });
+                                    }
+                                    let env = ExecEnv {
+                                        model: &self.model,
+                                        backend: cfg.backend,
+                                        num_cores: cfg.num_cores,
+                                        num_gpus: cfg.num_gpus,
+                                        runtime,
+                                    };
+                                    let demoted;
+                                    let share_plan = if faults.cpu_only.contains(&0) {
+                                        demoted = plan.demoted_to_cpu();
+                                        &demoted
+                                    } else {
+                                        plan
+                                    };
+                                    let ops = share_plan.gpu_ops();
+                                    let o = exec::execute_with_occupancy(
+                                        query,
+                                        share_plan,
+                                        input,
+                                        join_side,
+                                        &env,
+                                        &mut timelines[0],
+                                    )?;
+                                    (
+                                        o.result,
+                                        o.branch_results,
+                                        o.proc,
+                                        o.contention,
+                                        o.traces,
+                                        ops,
+                                    )
+                                }
+                                Some(spec) => {
+                                    let o = cluster::execute_on_cluster_faulted(
+                                        spec,
+                                        query,
+                                        plan,
+                                        input,
+                                        join_side,
+                                        &self.model,
+                                        cfg.backend,
+                                        runtime,
+                                        Some(&mut timelines),
+                                        &faults,
+                                    )?;
+                                    // Merge per-executor traces (sum byte
+                                    // volumes per op) for the size estimator.
+                                    let mut merged: Vec<OpTrace> =
+                                        o.per_executor[0].traces.clone();
+                                    for ex in &o.per_executor[1..] {
+                                        for (m, t) in merged.iter_mut().zip(&ex.traces) {
+                                            m.in_bytes += t.in_bytes;
+                                            m.out_bytes += t.out_bytes;
+                                        }
+                                    }
+                                    // The batch completes at the straggler,
+                                    // so the wait that actually sits inside
+                                    // this record's proc is the *straggler
+                                    // executor's* contention (another
+                                    // executor's larger wait can hide
+                                    // entirely behind the barrier).
+                                    let wait = o
+                                        .per_executor
+                                        .iter()
+                                        .max_by_key(|e| e.proc)
+                                        .map(|e| e.contention)
+                                        .unwrap_or(Duration::ZERO);
+                                    (
+                                        o.result,
+                                        o.branch_results,
+                                        o.proc,
+                                        wait,
+                                        merged,
+                                        plan.gpu_ops(),
+                                    )
+                                }
+                            };
+                        makespan = makespan.max(proc);
+                        pending.push(Pending {
+                            s,
+                            qi,
+                            result,
+                            branch_results,
+                            proc,
+                            gpu_wait,
+                            traces,
+                            gpu_ops,
+                            total_ops: query.len(),
+                        });
+                    }
+                    Ok((pending, makespan, map_device_total))
+                };
+                let attempt = run_attempt();
+
+                match attempt {
+                    Ok((pending, makespan, map_device_total)) => {
+                        break (pending, makespan, map_device_total, degraded_now);
+                    }
+                    Err(Error::Executor { executor, reason }) => {
+                        // Detection: transition the failed executor's
+                        // health, then either give up (budget spent) or
+                        // charge detection + exponential backoff to the
+                        // round and re-plan on the survivors.
+                        health.note_attempt_failed();
+                        round_retries += 1;
+                        if round_retries > cfg.max_round_retries {
+                            return Err(Error::Executor {
+                                executor,
+                                reason: format!(
+                                    "{reason}; round {round} exhausted its retry \
+                                     budget ({} retries)",
+                                    cfg.max_round_retries
+                                ),
+                            });
+                        }
+                        recovery_wait += cfg.failure_detection
+                            + cfg.retry_backoff * (1u32 << (round_retries - 1).min(16));
+                    }
+                    Err(e) => return Err(e),
+                }
+            };
+            // The recovery wait (detection + backoff over every failed
+            // attempt) is real round latency: charge it to the round's
+            // makespan and into each batch's proc, so Eq. 10 and
+            // admission learn true degraded-round behavior (the same
+            // convention gpu_wait follows).
+            if !recovery_wait.is_zero() {
+                for p in &mut pending {
+                    p.proc += recovery_wait;
+                }
+                makespan += recovery_wait;
+            }
+            total_retries += round_retries;
+            total_recovery_wait += recovery_wait;
+            if degraded {
+                degraded_rounds += 1;
             }
 
             // The round's construct work: every admitted source spent
@@ -1020,11 +1216,11 @@ impl<'rt> Session<'rt> {
                     None => true,
                 };
                 if fresh {
-                    deliver(p.qi, batch_index, &p.result, completed_at)?;
-                    // Owned per-query sinks: primary result plus any
-                    // registered branch sinks (ExecOutcome/
-                    // ClusterOutcome branch_results — no longer dropped).
-                    {
+                    let mut deliver_all = || -> Result<()> {
+                        deliver(p.qi, batch_index, &p.result, completed_at)?;
+                        // Owned per-query sinks: primary result plus any
+                        // registered branch sinks (ExecOutcome/
+                        // ClusterOutcome branch_results — no longer dropped).
                         let qdef = &mut self.queries[p.qi];
                         if let Some(sink) = qdef.sink.as_mut() {
                             sink.deliver(batch_index, &p.result, completed_at)?;
@@ -1036,14 +1232,23 @@ impl<'rt> Session<'rt> {
                                 sink.deliver(batch_index, b, completed_at)?;
                             }
                         }
+                        Ok(())
+                    };
+                    let delivered = deliver_all();
+                    if let Err(e) = delivered {
+                        // Deliveries that succeeded earlier this round
+                        // are made durable before the failure
+                        // propagates (see durability::ledger docs).
+                        if let Some(l) = ledger.as_mut() {
+                            l.persist()?;
+                            self.last_ledger_persists = l.persists();
+                        }
+                        return Err(e);
                     }
-                    // Persist the delivery before anything else can
-                    // happen (crash after the sink accepted but before
-                    // this write degrades exactly that one batch to
-                    // at-least-once — see durability::ledger docs).
+                    // Record the delivery; the durable write happens
+                    // once, at the end of the round's delivery loop.
                     if let Some(l) = ledger.as_mut() {
                         l.record(&self.queries[p.qi].name, round as u64, batch_index as u64);
-                        l.persist()?;
                     }
                 }
                 // Shared phase costs are charged once so phase totals
@@ -1078,9 +1283,18 @@ impl<'rt> Session<'rt> {
                     } else {
                         Duration::ZERO
                     },
+                    retries: round_retries,
+                    recovery_wait,
+                    degraded,
                 };
                 metrics[p.qi].record(rec, &src_buffs[p.s]);
                 self.queries[p.qi].size_est.observe(&p.traces);
+            }
+            // One durable ledger write covers the whole round's
+            // deliveries (not one write per delivery).
+            if let Some(l) = ledger.as_mut() {
+                l.persist()?;
+                self.last_ledger_persists = l.persists();
             }
 
             // ---- Per-source learning, window upkeep, checkpointing.
@@ -1171,6 +1385,13 @@ impl<'rt> Session<'rt> {
                 }
             }
         }
+
+        self.last_health = Some(HealthReport {
+            executors: health.stats(),
+            retries: total_retries,
+            recovery_wait: total_recovery_wait,
+            degraded_rounds,
+        });
 
         Ok(self
             .queries

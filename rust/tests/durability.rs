@@ -376,6 +376,41 @@ fn multi_query_partial_round_redelivery_is_suppressed() {
 }
 
 #[test]
+fn ledger_persists_once_per_round_not_per_delivery() {
+    // Two queries on one source: every round performs two deliveries
+    // but the ledger batches its durable write — exactly one persist
+    // per round, not one per delivery.
+    let d = dirs("persists");
+    let primary_rows = Arc::new(Mutex::new(Vec::new()));
+    let side_rows = Arc::new(Mutex::new(Vec::new()));
+
+    let mut session = Session::new(durable_cfg(&d, "precise")).unwrap();
+    let qid = session.register(ident_workload("durbatch", 10)).unwrap();
+    let side = session
+        .register_shared(qid, "durbatch-side", ident_query("durbatch-side"))
+        .unwrap();
+    session
+        .set_sink(qid, Box::new(RecordingSink::new(&primary_rows, None)))
+        .unwrap();
+    session
+        .set_sink(side, Box::new(RecordingSink::new(&side_rows, None)))
+        .unwrap();
+    let results = session.run(Duration::from_secs(60)).unwrap();
+
+    let rounds = results[0].batches.len();
+    let deliveries: usize = results.iter().map(|r| r.batches.len()).sum();
+    let persists = session.ledger_persists();
+    assert!(rounds >= 2, "need multiple rounds to observe batching");
+    assert_eq!(deliveries, 2 * rounds, "both queries deliver every round");
+    assert!(persists > 0, "deliveries must be made durable");
+    assert!(
+        persists <= rounds,
+        "persists ({persists}) must be per-round, not per-delivery \
+         ({deliveries} deliveries over {rounds} rounds)"
+    );
+}
+
+#[test]
 fn two_sources_recover_independently() {
     // Crash with two registered sources (each with its own WAL and
     // checkpoint, different chunk layouts); both must resume to exact

@@ -351,3 +351,273 @@ fn ledger_ahead_of_checkpoint_rejected_with_typed_error() {
     let r = reconcile("q", None, scan, &ledger, RecoveryMode::Gap, &qs).unwrap();
     assert_eq!(r.batch_base[0].1, 8);
 }
+
+// ---- Executor faults × recovery modes -------------------------------
+//
+// Compose the two failure axes: executors crash/stall *inside* rounds
+// (the fault-injection plan) while the sink machine dies *between*
+// rounds (a failed delivery aborts the incarnation). Each recovery
+// mode must still honor its durability contract across the resume.
+
+use lmstream::cluster::{ClusterSpec, FaultPlan};
+use lmstream::engine::chunked::ChunkedBatch;
+use lmstream::engine::ops::filter::Predicate;
+use lmstream::engine::sink::Sink;
+use lmstream::query::QueryBuilder;
+use lmstream::session::Session;
+use lmstream::source::stream::RowGen;
+use lmstream::source::traffic::Traffic;
+use lmstream::workloads::Workload;
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Identity-stamped rows, as in `tests/durability.rs`: (t = tick,
+/// v = tick*10_000 + i, m = i % 10) — unique identities, exact in f32.
+struct IdentGen;
+
+impl RowGen for IdentGen {
+    fn generate(&mut self, tick: u64, rows: usize) -> ColumnBatch {
+        let schema =
+            Schema::new(vec![Field::f32("t"), Field::f32("v"), Field::f32("m")]);
+        let t: Vec<f32> = vec![tick as f32; rows];
+        let v: Vec<f32> =
+            (0..rows).map(|i| (tick * 10_000 + i as u64) as f32).collect();
+        let m: Vec<f32> = (0..rows).map(|i| (i % 10) as f32).collect();
+        ColumnBatch::new(
+            schema,
+            vec![Column::F32(t.into()), Column::F32(v.into()), Column::F32(m.into())],
+        )
+        .unwrap()
+    }
+}
+
+fn make_gen(_seed: u64) -> Box<dyn RowGen> {
+    Box::new(IdentGen)
+}
+
+const ROWS_PER_TICK: usize = 10;
+
+fn ident_workload(name: &'static str) -> Workload {
+    let query = QueryBuilder::scan(name)
+        .filter("m", Predicate::Lt(6.0))
+        .select(&["t", "v"])
+        .build()
+        .unwrap();
+    Workload::new(name, query, Traffic::Constant { rows: ROWS_PER_TICK }, make_gen)
+}
+
+/// Oracle row stream (rows with i % 10 < 6, in tick order).
+fn oracle(max_tick: u64) -> Vec<(f32, f32)> {
+    let mut out = Vec::new();
+    for tick in 0..=max_tick {
+        for i in 0..ROWS_PER_TICK {
+            if i % 10 < 6 {
+                out.push((tick as f32, (tick * 10_000 + i as u64) as f32));
+            }
+        }
+    }
+    out
+}
+
+struct RecSink {
+    rows: Arc<Mutex<Vec<(f32, f32)>>>,
+    fail_after: Option<usize>,
+    delivered: usize,
+}
+
+impl Sink for RecSink {
+    fn deliver(
+        &mut self,
+        _i: usize,
+        result: &ChunkedBatch,
+        _t: Time,
+    ) -> lmstream::error::Result<()> {
+        if self.fail_after == Some(self.delivered) {
+            return Err(Error::Durability("injected sink crash".into()));
+        }
+        self.delivered += 1;
+        let b = result.coalesce();
+        let t = b.column("t").unwrap().as_f32().unwrap();
+        let v = b.column("v").unwrap().as_f32().unwrap();
+        let mut rows = self.rows.lock().unwrap();
+        for i in 0..b.rows() {
+            if b.validity.is_live(i) {
+                rows.push((t[i], v[i]));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One incarnation against the given config; returns the run outcome
+/// and the recovery report's lost dataset ids.
+fn faulted_incarnation(
+    cfg: Config,
+    name: &'static str,
+    rows: &Arc<Mutex<Vec<(f32, f32)>>>,
+    fail_after: Option<usize>,
+) -> (lmstream::error::Result<()>, BTreeSet<u64>) {
+    let mut session = Session::new(cfg).unwrap();
+    let qid = session.register(ident_workload(name)).unwrap();
+    session
+        .set_sink(
+            qid,
+            Box::new(RecSink { rows: Arc::clone(rows), fail_after, delivered: 0 }),
+        )
+        .unwrap();
+    let out = session.run(Duration::from_secs(60)).map(|_| ());
+    let lost = match session.recovery_report() {
+        Some(rep) => rep
+            .sources
+            .iter()
+            .flat_map(|s| s.lost.iter())
+            .flat_map(|l| l.dataset_ids.iter().copied())
+            .collect(),
+        None => BTreeSet::new(),
+    };
+    (out, lost)
+}
+
+fn faulted_durable_cfg(base: &Path, mode: RecoveryMode) -> Config {
+    Config {
+        mode: Mode::LmStream,
+        checkpoint_dir: Some(base.join("ckpt").to_string_lossy().into_owned()),
+        wal_dir: Some(base.join("wal").to_string_lossy().into_owned()),
+        recovery_mode: mode,
+        cluster: Some(ClusterSpec::of(3)),
+        fault_plan: Some(
+            FaultPlan::new().stall(2, 1).gpu_fail(2, 2).crash(3, 1).rejoin(5, 1),
+        ),
+        seed: 11,
+        ..Config::default()
+    }
+}
+
+#[test]
+fn executor_faults_compose_with_sink_crash_recovery_in_every_mode() {
+    for mode in [RecoveryMode::Precise, RecoveryMode::Rollback, RecoveryMode::Gap] {
+        for &crash_at in &[0usize, 2] {
+            let name = format!("execfault-{mode:?}-{crash_at}").to_lowercase();
+            let base = tmpdir(&name);
+            let rows = Arc::new(Mutex::new(Vec::new()));
+
+            // Incarnation 1: executors stall/crash mid-round (recovered
+            // in-process by retry + re-planning) until the sink machine
+            // dies at its `crash_at`-th delivery.
+            let (out, _) = faulted_incarnation(
+                faulted_durable_cfg(&base, mode),
+                "execfault",
+                &rows,
+                Some(crash_at),
+            );
+            assert!(out.is_err(), "{name}: injected sink crash must abort the run");
+
+            // Incarnation 2: resume. The same fault plan fires again
+            // (rounds restart at 1 in the new incarnation) — executor
+            // faults keep being absorbed by the retry machinery while
+            // recovery reconciles the durability triple.
+            let (out, lost) = faulted_incarnation(
+                faulted_durable_cfg(&base, mode),
+                "execfault",
+                &rows,
+                None,
+            );
+            out.unwrap_or_else(|e| panic!("{name}: resume failed: {e}"));
+
+            let all = rows.lock().unwrap().clone();
+            assert!(!all.is_empty(), "{name}: nothing delivered");
+            match mode {
+                RecoveryMode::Precise | RecoveryMode::Rollback => {
+                    // Zero duplicates, zero losses: concatenated output
+                    // is an exact oracle prefix despite both failure
+                    // axes firing.
+                    assert!(lost.is_empty(), "{name}: reported losses");
+                    let full = oracle(4_000);
+                    assert!(all.len() <= full.len(), "{name}: run too long for oracle");
+                    assert_eq!(
+                        all,
+                        &full[..all.len()],
+                        "{name}: output diverged from the oracle"
+                    );
+                }
+                RecoveryMode::Gap => {
+                    // Gap may skip the crashed round, but delivered and
+                    // lost ticks must tile the stream: each tick's rows
+                    // delivered exactly once or reported lost — never
+                    // both, never twice.
+                    let delivered: BTreeSet<u64> =
+                        all.iter().map(|&(t, _)| t as u64).collect();
+                    assert!(
+                        delivered.is_disjoint(&lost),
+                        "{name}: tick both delivered and reported lost"
+                    );
+                    let max_tick =
+                        delivered.iter().chain(lost.iter()).copied().max().unwrap();
+                    let expected: Vec<(f32, f32)> = oracle(max_tick)
+                        .into_iter()
+                        .filter(|&(t, _)| !lost.contains(&(t as u64)))
+                        .collect();
+                    assert_eq!(all, expected, "{name}: delivered+lost don't tile");
+                }
+            }
+        }
+    }
+}
+
+// ---- WAL growth cap -------------------------------------------------
+
+#[test]
+fn wal_over_cap_without_checkpointing_is_typed_durability_error() {
+    // No checkpoint_dir: the log never truncates, so a tiny cap must
+    // trip. Precise mode refuses to drop history → typed error.
+    let base = tmpdir("walcap-precise");
+    let cfg = Config {
+        mode: Mode::LmStream,
+        wal_dir: Some(base.join("wal").to_string_lossy().into_owned()),
+        recovery_mode: RecoveryMode::Precise,
+        wal_max_bytes: Some(512),
+        seed: 11,
+        ..Config::default()
+    };
+    let rows = Arc::new(Mutex::new(Vec::new()));
+    let (out, _) = faulted_incarnation(cfg, "walcap", &rows, None);
+    match out {
+        Err(Error::Durability(msg)) => {
+            assert!(msg.contains("wal_max_bytes"), "unexpected message: {msg}");
+        }
+        other => panic!("expected Error::Durability, got {other:?}"),
+    }
+}
+
+#[test]
+fn wal_over_cap_in_gap_mode_rolls_the_log_and_keeps_running() {
+    let base = tmpdir("walcap-gap");
+    let wal_dir = base.join("wal");
+    let cfg = Config {
+        mode: Mode::LmStream,
+        wal_dir: Some(wal_dir.to_string_lossy().into_owned()),
+        recovery_mode: RecoveryMode::Gap,
+        wal_max_bytes: Some(512),
+        seed: 11,
+        ..Config::default()
+    };
+    let rows = Arc::new(Mutex::new(Vec::new()));
+    let (out, _) = faulted_incarnation(cfg, "walroll", &rows, None);
+    out.unwrap();
+    let delivered_batches = {
+        let all = rows.lock().unwrap();
+        assert!(!all.is_empty(), "gap roll must not stop delivery");
+        all.iter().map(|&(t, _)| t as u64).collect::<BTreeSet<_>>().len()
+    };
+    assert!(delivered_batches >= 3, "need several rounds to exercise the roll");
+
+    // The log rolled: far fewer frames remain than rounds appended.
+    let (_, scan) = Wal::open(&wal_dir.join("walroll.wal")).unwrap();
+    assert!(
+        scan.entries.len() < delivered_batches,
+        "log should have rolled: {} frames for {} delivered ticks",
+        scan.entries.len(),
+        delivered_batches
+    );
+}

@@ -1,0 +1,354 @@
+//! Differential harness for executor fault tolerance.
+//!
+//! The oracle is analytic, as in `tests/durability.rs`: a deterministic
+//! generator stamps every row with its (tick, row-id) identity and the
+//! query is a stateless filter + select, so the flattened delivered row
+//! sequence of ANY correct run — fault-free or faulted — must be an
+//! exact prefix of the analytic oracle sequence. Faults perturb the
+//! *clock* (detection + backoff, degraded-topology makespans shift
+//! admission boundaries), so faulted runs may deliver more or fewer
+//! batches than the fault-free run in the same simulated duration; what
+//! they must never do is duplicate, drop, or reorder a row. On top of
+//! the prefix property the tests pin exact retry/degradation
+//! accounting (per-round `BatchRecord` fields and the session
+//! [`HealthReport`]) and determinism (identical faulted runs are
+//! bit-identical).
+
+use lmstream::cluster::{ClusterSpec, FaultPlan};
+use lmstream::config::{Config, Mode};
+use lmstream::coordinator::HealthReport;
+use lmstream::engine::chunked::ChunkedBatch;
+use lmstream::engine::column::{Column, ColumnBatch, Field, Schema};
+use lmstream::engine::ops::filter::Predicate;
+use lmstream::engine::sink::Sink;
+use lmstream::error::{Error, Result};
+use lmstream::query::QueryBuilder;
+use lmstream::session::{RunResult, Session};
+use lmstream::sim::Time;
+use lmstream::source::stream::RowGen;
+use lmstream::source::traffic::Traffic;
+use lmstream::workloads::Workload;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+// ---------- deterministic identity-stamped workload ----------
+
+/// Every row is (t = tick, v = tick*10_000 + i, m = i % 10): globally
+/// unique (t, v) identities, exact in f32 for the tick ranges used.
+struct IdentGen;
+
+impl RowGen for IdentGen {
+    fn generate(&mut self, tick: u64, rows: usize) -> ColumnBatch {
+        let schema =
+            Schema::new(vec![Field::f32("t"), Field::f32("v"), Field::f32("m")]);
+        let t: Vec<f32> = vec![tick as f32; rows];
+        let v: Vec<f32> =
+            (0..rows).map(|i| (tick * 10_000 + i as u64) as f32).collect();
+        let m: Vec<f32> = (0..rows).map(|i| (i % 10) as f32).collect();
+        ColumnBatch::new(
+            schema,
+            vec![Column::F32(t.into()), Column::F32(v.into()), Column::F32(m.into())],
+        )
+        .unwrap()
+    }
+}
+
+fn make_gen(_seed: u64) -> Box<dyn RowGen> {
+    Box::new(IdentGen)
+}
+
+fn ident_workload(name: &'static str, rows_per_tick: usize) -> Workload {
+    let query = QueryBuilder::scan(name)
+        .filter("m", Predicate::Lt(6.0))
+        .select(&["t", "v"])
+        .build()
+        .unwrap();
+    Workload::new(name, query, Traffic::Constant { rows: rows_per_tick }, make_gen)
+}
+
+/// The analytic oracle: the exact flattened row sequence any correct
+/// run's sink must observe (one dataset per tick, in tick order).
+fn oracle(rows_per_tick: usize, max_tick: u64) -> Vec<(f32, f32)> {
+    let mut out = Vec::new();
+    for tick in 0..=max_tick {
+        for i in 0..rows_per_tick {
+            if i % 10 < 6 {
+                out.push((tick as f32, (tick * 10_000 + i as u64) as f32));
+            }
+        }
+    }
+    out
+}
+
+fn assert_oracle_prefix(delivered: &[(f32, f32)], rows_per_tick: usize, ctx: &str) {
+    let full = oracle(rows_per_tick, 4_000);
+    assert!(delivered.len() <= full.len(), "{ctx}: run too long for oracle");
+    assert_eq!(
+        delivered,
+        &full[..delivered.len()],
+        "{ctx}: delivered rows diverge from the fault-free oracle \
+         (a duplicate, loss, or reorder slipped through recovery)"
+    );
+}
+
+// ---------- row-recording sink ----------
+
+struct RecordingSink {
+    rows: Arc<Mutex<Vec<(f32, f32)>>>,
+}
+
+impl Sink for RecordingSink {
+    fn deliver(&mut self, _i: usize, result: &ChunkedBatch, _t: Time) -> Result<()> {
+        let b = result.coalesce();
+        let t = b.column("t").unwrap().as_f32().unwrap();
+        let v = b.column("v").unwrap().as_f32().unwrap();
+        let mut rows = self.rows.lock().unwrap();
+        for i in 0..b.rows() {
+            if b.validity.is_live(i) {
+                rows.push((t[i], v[i]));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------- harness plumbing ----------
+
+fn faulty_cfg(cluster: Option<ClusterSpec>, plan: Option<FaultPlan>) -> Config {
+    Config {
+        mode: Mode::LmStream,
+        cluster,
+        fault_plan: plan,
+        seed: 11,
+        ..Config::default()
+    }
+}
+
+/// One run: fresh session, one identity workload, a recording sink.
+/// Returns the run outcome, every delivered (t, v) row in delivery
+/// order, and the session's health report.
+fn run_ident(
+    cfg: Config,
+    rows_per_tick: usize,
+    duration: Duration,
+) -> (Result<Vec<RunResult>>, Vec<(f32, f32)>, Option<HealthReport>) {
+    let rows = Arc::new(Mutex::new(Vec::new()));
+    let mut session = Session::new(cfg).unwrap();
+    let qid = session.register(ident_workload("ft", rows_per_tick)).unwrap();
+    session
+        .set_sink(qid, Box::new(RecordingSink { rows: Arc::clone(&rows) }))
+        .unwrap();
+    let out = session.run(duration);
+    let health = session.health_report().cloned();
+    let delivered = rows.lock().unwrap().clone();
+    (out, delivered, health)
+}
+
+// ---------- the differential property tests ----------
+
+/// Tentpole property: a 3-executor session hit by a transient stall, a
+/// permanent GPU-device fault, and a crash-then-probationary-rejoin
+/// still delivers an exact oracle prefix — and every retry, every
+/// charged recovery wait, and every degraded round is accounted to the
+/// batch records and the health report, deterministically.
+#[test]
+fn faulted_cluster_run_is_oracle_exact_with_precise_accounting() {
+    let plan = FaultPlan::new()
+        .stall(2, 1)
+        .gpu_fail(3, 2)
+        .crash(4, 1)
+        .rejoin(6, 1);
+    let duration = Duration::from_secs(240);
+
+    // Fault-free oracle run on the same topology.
+    let (out, clean_rows, clean_health) =
+        run_ident(faulty_cfg(Some(ClusterSpec::of(3)), None), 10, duration);
+    out.unwrap();
+    assert!(!clean_rows.is_empty());
+    assert_oracle_prefix(&clean_rows, 10, "fault-free");
+    let h = clean_health.expect("completed run reports health");
+    assert_eq!(h.retries, 0);
+    assert_eq!(h.recovery_wait, Duration::ZERO);
+    assert_eq!(h.degraded_rounds, 0);
+    assert!(h.executors.iter().all(|e| e.state == "up"));
+
+    // Faulted run: same topology, same workload, same simulated window.
+    let (out, rows, health) = run_ident(
+        faulty_cfg(Some(ClusterSpec::of(3)), Some(plan.clone())),
+        10,
+        duration,
+    );
+    let results = out.unwrap();
+    assert!(!rows.is_empty());
+    assert_oracle_prefix(&rows, 10, "faulted");
+
+    let recs = &results[0].batches;
+    let last_round = recs.iter().map(|r| r.round).max().unwrap();
+    assert!(
+        last_round >= 8,
+        "need rounds past the rejoin+probation window, got {last_round}"
+    );
+    let by_round =
+        |n: usize| recs.iter().find(|r| r.round == n).expect("round executed");
+
+    // Round 1: clean. Round 2: the stall costs exactly one retry
+    // (detection + first backoff) and the retry runs on the full
+    // topology again — transient, so not a degraded round.
+    assert_eq!(by_round(1).retries, 0);
+    assert!(!by_round(1).degraded);
+    let stall = by_round(2);
+    assert_eq!(stall.retries, 1);
+    assert!(!stall.degraded);
+    assert_eq!(stall.recovery_wait, Duration::from_millis(100 + 50));
+    assert!(stall.proc >= stall.recovery_wait, "recovery wait embeds in proc");
+
+    // Round 3 on: executor 2's GPU is gone for good — every later
+    // round is degraded. Round 4: the crash costs one retry.
+    let gpu = by_round(3);
+    assert_eq!(gpu.retries, 0);
+    assert!(gpu.degraded);
+    assert_eq!(gpu.recovery_wait, Duration::ZERO);
+    let crash = by_round(4);
+    assert_eq!(crash.retries, 1);
+    assert!(crash.degraded);
+    assert_eq!(crash.recovery_wait, Duration::from_millis(100 + 50));
+    for r in recs.iter().filter(|r| r.round >= 3) {
+        assert!(r.degraded, "round {} should be degraded", r.round);
+    }
+
+    // Health report: exact fault counters, exact run totals.
+    let h = health.expect("completed run reports health");
+    assert_eq!(h.retries, 2);
+    assert_eq!(h.recovery_wait, Duration::from_millis(2 * (100 + 50)));
+    assert_eq!(h.degraded_rounds, recs.iter().filter(|r| r.degraded).count());
+    assert_eq!(h.executors[0].crashes, 0);
+    assert_eq!(h.executors[1].crashes, 1);
+    assert_eq!(h.executors[1].stalls, 1);
+    assert_eq!(h.executors[1].rejoins, 1);
+    assert_eq!(h.executors[2].gpu_faults, 1);
+    assert_eq!(h.executors[0].state, "up");
+    assert_eq!(h.executors[1].state, "up", "probation expired back to up");
+    assert_eq!(h.executors[2].state, "gpu-degraded");
+
+    // Determinism: the identical faulted run is bit-identical.
+    let (out2, rows2, health2) =
+        run_ident(faulty_cfg(Some(ClusterSpec::of(3)), Some(plan)), 10, duration);
+    let results2 = out2.unwrap();
+    assert_eq!(rows, rows2, "faulted runs must be deterministic");
+    assert_eq!(results[0].batches.len(), results2[0].batches.len());
+    assert_eq!(health2.unwrap().recovery_wait, h.recovery_wait);
+}
+
+/// Property sweep: seeded random fault plans (survivable by
+/// construction) across cluster widths and chunk layouts never corrupt
+/// sink output — always an exact oracle prefix, always deterministic.
+#[test]
+fn seeded_fault_plans_keep_sink_output_oracle_exact() {
+    for &executors in &[2usize, 3] {
+        for &seed in &[3u64, 9, 27] {
+            for &rows_per_tick in &[4usize, 10] {
+                let name = format!("seeded-{executors}-{seed}-{rows_per_tick}");
+                let plan = FaultPlan::seeded(seed, 10, executors, 5);
+                let cfg = || {
+                    faulty_cfg(Some(ClusterSpec::of(executors)), Some(plan.clone()))
+                };
+                let (out, rows, health) =
+                    run_ident(cfg(), rows_per_tick, Duration::from_secs(120));
+                out.unwrap_or_else(|e| panic!("{name}: survivable plan died: {e}"));
+                assert!(!rows.is_empty(), "{name}: nothing delivered");
+                assert_oracle_prefix(&rows, rows_per_tick, &name);
+                // Executor 0 is never crashed by construction, so a
+                // surviving topology always exists.
+                let h = health.unwrap();
+                assert_eq!(h.executors[0].crashes, 0, "{name}");
+
+                let (out2, rows2, _) =
+                    run_ident(cfg(), rows_per_tick, Duration::from_secs(120));
+                out2.unwrap();
+                assert_eq!(rows, rows2, "{name}: faulted runs must be deterministic");
+            }
+        }
+    }
+}
+
+/// A GPU-device fault on a single node demotes the whole plan to CPU:
+/// rows stay oracle-exact, no round fails, and the degradation is
+/// visible in records and health.
+#[test]
+fn single_node_gpu_fault_degrades_to_cpu_without_losing_rows() {
+    let (out, rows, health) = run_ident(
+        faulty_cfg(None, Some(FaultPlan::new().gpu_fail(2, 0))),
+        10,
+        Duration::from_secs(120),
+    );
+    let results = out.unwrap();
+    assert!(!rows.is_empty());
+    assert_oracle_prefix(&rows, 10, "single-node gpu fault");
+    let recs = &results[0].batches;
+    assert!(recs.iter().map(|r| r.round).max().unwrap() >= 3);
+    for r in recs {
+        assert_eq!(r.retries, 0, "a gpu fault must not fail the round");
+        assert_eq!(r.degraded, r.round >= 2, "degraded from the fault on");
+        if r.round >= 2 {
+            assert_eq!(r.gpu_ops, 0, "demoted rounds must plan zero GPU ops");
+        }
+    }
+    let h = health.unwrap();
+    assert_eq!(h.retries, 0);
+    assert_eq!(h.executors[0].gpu_faults, 1);
+    assert_eq!(h.executors[0].state, "gpu-degraded");
+    assert!(h.degraded_rounds > 0);
+}
+
+/// Crashing every executor leaves nothing to re-plan on: the session
+/// surfaces the typed executor error instead of hanging or panicking.
+#[test]
+fn crash_with_no_survivors_surfaces_typed_error() {
+    // Single node: its only executor dies.
+    let (out, _, _) = run_ident(
+        faulty_cfg(None, Some(FaultPlan::new().crash(1, 0))),
+        10,
+        Duration::from_secs(60),
+    );
+    match out {
+        Err(Error::Executor { reason, .. }) => {
+            assert!(
+                reason.contains("no surviving executors"),
+                "unexpected reason: {reason}"
+            );
+        }
+        other => panic!("expected Error::Executor, got {other:?}"),
+    }
+
+    // Two-executor cluster: both die in the same round.
+    let (out, _, _) = run_ident(
+        faulty_cfg(
+            Some(ClusterSpec::of(2)),
+            Some(FaultPlan::new().crash(2, 0).crash(2, 1)),
+        ),
+        10,
+        Duration::from_secs(60),
+    );
+    assert!(
+        matches!(out, Err(Error::Executor { .. })),
+        "a fully-crashed round must surface Error::Executor"
+    );
+}
+
+/// With a zero retry budget even a transient stall is fatal — and the
+/// error says the budget ran out.
+#[test]
+fn exhausted_retry_budget_surfaces_typed_error() {
+    let cfg = Config {
+        max_round_retries: 0,
+        ..faulty_cfg(Some(ClusterSpec::of(3)), Some(FaultPlan::new().stall(1, 1)))
+    };
+    let (out, _, _) = run_ident(cfg, 10, Duration::from_secs(60));
+    match out {
+        Err(Error::Executor { executor, reason }) => {
+            assert_eq!(executor, 1);
+            assert!(reason.contains("retry budget"), "unexpected reason: {reason}");
+        }
+        other => panic!("expected Error::Executor, got {other:?}"),
+    }
+}
