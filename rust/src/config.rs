@@ -62,6 +62,45 @@ impl Mode {
     }
 }
 
+/// What happens to a dataset whose event time is already behind the
+/// source watermark (late beyond the allowed lateness) when event-time
+/// processing is enabled ([`Config::allowed_lateness`] set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum LatePolicy {
+    /// Drop the dataset and count its rows (`BatchRecord::late_rows`).
+    #[default]
+    Drop,
+    /// Route the dataset to the source's dedicated late sink
+    /// (`Session::set_late_sink`) and count it; the primary output never
+    /// sees it.
+    SideOutput,
+    /// Admit the dataset anyway: windows holding its event range
+    /// recompute on the next firing (event-ordered window state makes
+    /// the refined output identical to in-order delivery). Rows are
+    /// still counted as late.
+    Recompute,
+}
+
+impl LatePolicy {
+    /// Parse a CLI token.
+    pub fn parse(s: &str) -> Result<LatePolicy> {
+        match s {
+            "drop" => Ok(LatePolicy::Drop),
+            "side-output" | "side_output" => Ok(LatePolicy::SideOutput),
+            "recompute" => Ok(LatePolicy::Recompute),
+            other => Err(Error::Config(format!("unknown late policy `{other}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LatePolicy::Drop => "drop",
+            LatePolicy::SideOutput => "side-output",
+            LatePolicy::Recompute => "recompute",
+        }
+    }
+}
+
 /// Execution substrate for operator work.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecBackend {
@@ -162,6 +201,18 @@ pub struct Config {
     /// Rounds a rejoining executor spends on probation (active but
     /// health-gated: another failure sends it straight back down).
     pub probation_rounds: usize,
+    /// Event-time processing switch + allowed lateness. `None` (default)
+    /// keeps the historical arrival-time semantics byte-for-byte.
+    /// `Some(d)` turns on per-source low-watermarks (`max` event time
+    /// seen − `d`): window eviction and window-close become
+    /// watermark-driven, data older than the watermark is handled per
+    /// [`Config::late_policy`], and sliding-window admission force-fires
+    /// when the watermark crosses a window-close boundary (Eq. 6's
+    /// window term follows watermark progress, not the wall clock).
+    pub allowed_lateness: Option<Duration>,
+    /// Late-data policy in force when [`Config::allowed_lateness`] is
+    /// set.
+    pub late_policy: LatePolicy,
 }
 
 impl Default for Config {
@@ -191,6 +242,8 @@ impl Default for Config {
             retry_backoff: Duration::from_millis(50),
             failure_detection: Duration::from_millis(100),
             probation_rounds: 2,
+            allowed_lateness: None,
+            late_policy: LatePolicy::Drop,
         }
     }
 }
@@ -300,6 +353,21 @@ mod tests {
             ..Config::default()
         };
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn late_policy_parse_round_trip() {
+        for (s, p) in [
+            ("drop", LatePolicy::Drop),
+            ("side-output", LatePolicy::SideOutput),
+            ("recompute", LatePolicy::Recompute),
+        ] {
+            assert_eq!(LatePolicy::parse(s).unwrap(), p);
+            assert_eq!(LatePolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(LatePolicy::parse("bogus").is_err());
+        assert_eq!(LatePolicy::default(), LatePolicy::Drop);
+        assert!(Config::default().allowed_lateness.is_none());
     }
 
     #[test]

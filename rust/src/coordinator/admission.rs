@@ -82,6 +82,16 @@ impl Admission {
         self.buffered.num_datasets()
     }
 
+    /// Flush everything buffered as a forced micro-batch, bypassing the
+    /// Eq. 6 estimate. Event-time sessions use this when the source
+    /// watermark crosses a window-close boundary: the window the data
+    /// belongs to is complete in event time, so holding it longer only
+    /// adds latency — the window term of the admission rule follows
+    /// watermark progress, not the wall clock.
+    pub fn take_buffered(&mut self) -> MicroBatch {
+        std::mem::take(&mut self.buffered)
+    }
+
     /// Eq. 6: `EstMaxLat_i = max_j Buff_(i,j) + Σ_j Part_(i,j) / AvgThPut_(i-1)`.
     pub fn estimate_max_latency(
         tmp: &MicroBatch,

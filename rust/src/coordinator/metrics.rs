@@ -57,6 +57,16 @@ pub struct BatchRecord {
     /// missing, a GPU-faulted executor running CPU-only, or a
     /// probationary rejoin in flight.
     pub degraded: bool,
+    /// Rows from this batch's source that arrived behind the watermark
+    /// (late beyond the allowed lateness) since the previous batch —
+    /// dropped, side-output or recomputed per `Config::late_policy`.
+    /// Always 0 when event-time processing is off.
+    pub late_rows: usize,
+    /// How far the processing clock led the source's low-watermark at
+    /// admission (`admitted_at` − watermark): the event-time lag this
+    /// batch's window logic operated under. Zero when no event has been
+    /// seen yet.
+    pub watermark_lag: Duration,
 }
 
 /// Per-executor fault counters accumulated over a run (populated by
@@ -259,6 +269,8 @@ mod tests {
             retries: 0,
             recovery_wait: Duration::ZERO,
             degraded: false,
+            late_rows: 0,
+            watermark_lag: Duration::ZERO,
         }
     }
 

@@ -170,25 +170,34 @@ impl SizeEstimator {
         query: &Query,
         input_chunks: usize,
     ) -> Vec<(usize, usize)> {
-        let n = query.ops.len();
-        let expand = query.window.expand_factor() as usize;
-        let mut outs = vec![0usize; n];
-        let mut flows = vec![(0usize, 0usize); n];
-        // Storage order is topological (validate() rejects forward
-        // edges), exactly as in op_flows_for.
-        for op in &query.ops {
-            let cin: usize = if op.inputs.is_empty() {
-                input_chunks
-            } else {
-                op.inputs.iter().map(|&p| outs.get(p).copied().unwrap_or(0)).sum()
-            };
-            let cout =
-                crate::devices::model::op_output_chunks(op.spec.kind(), cin, expand);
-            flows[op.id] = (cin, cout);
-            outs[op.id] = cout;
-        }
-        flows
+        op_chunk_flows(query, input_chunks)
     }
+}
+
+/// The propagation behind [`SizeEstimator::op_chunk_flows_for`], as a
+/// free function: nothing about chunk layout is learned, so callers that
+/// only have a different *seed* chunk count — the cross-query scheduler
+/// re-deriving an executor's share layout — can re-run it without an
+/// estimator in hand.
+pub fn op_chunk_flows(query: &Query, input_chunks: usize) -> Vec<(usize, usize)> {
+    let n = query.ops.len();
+    let expand = query.window.expand_factor() as usize;
+    let mut outs = vec![0usize; n];
+    let mut flows = vec![(0usize, 0usize); n];
+    // Storage order is topological (validate() rejects forward
+    // edges), exactly as in op_flows_for.
+    for op in &query.ops {
+        let cin: usize = if op.inputs.is_empty() {
+            input_chunks
+        } else {
+            op.inputs.iter().map(|&p| outs.get(p).copied().unwrap_or(0)).sum()
+        };
+        let cout =
+            crate::devices::model::op_output_chunks(op.spec.kind(), cin, expand);
+        flows[op.id] = (cin, cout);
+        outs[op.id] = cout;
+    }
+    flows
 }
 
 /// Contiguous-staging share of Eq. 9's transition cost, charged on

@@ -96,6 +96,15 @@ pub struct QueryCandidate<'a> {
     /// executor coalesces a single-chunk build side for free, and the
     /// prediction must agree.
     pub aux_chunks: usize,
+    /// Chunk count of each *executor's row share* of the micro-batch
+    /// ([`share_chunk_counts`]), in executor order. Cluster slicing can
+    /// shrink a share's chunk count below the query-level
+    /// `input_chunks` (a share covering one chunk coalesces for free),
+    /// so per-executor costing must seed the chunk propagation from the
+    /// share's own layout — not the whole batch's. Empty (the default)
+    /// falls back to `input_chunks` on every executor, which is exact
+    /// for the 1-executor topology.
+    pub exec_in_chunks: Vec<usize>,
 }
 
 impl<'a> QueryCandidate<'a> {
@@ -129,8 +138,44 @@ impl<'a> QueryCandidate<'a> {
             input_chunks,
             aux_bytes,
             aux_chunks,
+            exec_in_chunks: Vec::new(),
         })
     }
+
+    /// Attach per-executor share chunk counts ([`share_chunk_counts`])
+    /// so the scheduler prices each executor's coalesce staging at the
+    /// layout that executor will actually assemble.
+    pub fn with_exec_chunks(mut self, exec_in_chunks: Vec<usize>) -> QueryCandidate<'a> {
+        self.exec_in_chunks = exec_in_chunks;
+        self
+    }
+}
+
+/// Chunk count of each executor's row share of `input`, mirroring the
+/// cluster executor's core-proportional split (`cluster::exec`:
+/// remainder rows to the last executor, shares taken as chunk-list
+/// views, so a share fully inside one chunk counts 1 however chunked
+/// the whole batch is). This is the planner↔executor agreement point
+/// the per-share coalesce estimate depends on.
+pub fn share_chunk_counts(
+    input: &crate::engine::chunked::ChunkedBatch,
+    topo: &DeviceTopology,
+) -> Vec<usize> {
+    let rows = input.rows();
+    let total_cores = topo.total_cores();
+    let n = topo.num_executors();
+    let mut counts = Vec::with_capacity(n);
+    let mut start = 0usize;
+    for (i, e) in topo.executors.iter().enumerate() {
+        let len = if i + 1 == n {
+            rows - start
+        } else {
+            rows * e.cores / total_cores.max(1)
+        };
+        counts.push(input.slice(start, len).num_chunks());
+        start += len;
+    }
+    counts
 }
 
 /// One reservation on a predicted serialized per-executor GPU timeline.
@@ -225,6 +270,7 @@ struct Chain {
 
 fn op_secs(
     cand: &OpCandidate,
+    share_in_chunks: usize,
     aux: f64,
     aux_chunks: usize,
     model: &DeviceModel,
@@ -264,10 +310,12 @@ fn op_secs(
         trans_out: model.transfer_time(share_out).as_secs_f64(),
         // Both the batch side and (for joins) the window side stage at
         // the boundary, each by its own layout: the batch side by the
-        // op's *propagated* input chunk count (an aggregate/sort
-        // upstream collapses it to one — free), the window side by the
+        // op's propagated input chunk count *seeded from this
+        // executor's share* (an aggregate/sort upstream collapses it to
+        // one — free; cluster slicing can hand the executor fewer
+        // chunks than the whole batch has), the window side by the
         // snapshot's — exactly as the executor charges it.
-        coalesce: model.coalesce_time(share_in, cand.est_in_chunks).as_secs_f64()
+        coalesce: model.coalesce_time(share_in, share_in_chunks).as_secs_f64()
             + model.coalesce_time(op_aux, aux_chunks).as_secs_f64(),
     }
 }
@@ -286,11 +334,18 @@ fn chain_ctx(qc: &QueryCandidate, model: &DeviceModel, topo: &DeviceTopology) ->
     let total_cores = topo.total_cores();
     let secs = (0..topo.num_executors())
         .map(|e| {
+            // Seed the chunk propagation from *this executor's* share
+            // layout where known; the query-level candidate counts are
+            // exact only when the share has as many chunks as the
+            // whole batch (always true on the 1-executor topology).
+            let seed = qc.exec_in_chunks.get(e).copied().unwrap_or(qc.input_chunks);
+            let chunk_flows = planner::op_chunk_flows(qc.query, seed);
             qc.candidates
                 .iter()
                 .map(|c| {
                     op_secs(
                         c,
+                        chunk_flows[c.op_id].0,
                         qc.aux_bytes,
                         qc.aux_chunks,
                         model,
@@ -659,6 +714,81 @@ mod tests {
     fn cand(query: &Query, part: f64, inf: f64, chunks: usize) -> QueryCandidate<'_> {
         let est = SizeEstimator::new(query.len());
         QueryCandidate::build(query, part, inf, 0.1, &est, chunks, 0.0, 0).unwrap()
+    }
+
+    fn chunked(rows_per_chunk: &[usize]) -> crate::engine::chunked::ChunkedBatch {
+        use crate::engine::column::{Column, ColumnBatch, Field, Schema};
+        let mk = |n: usize| {
+            ColumnBatch::new(
+                Schema::new(vec![Field::f32("v")]),
+                vec![Column::F32(vec![1.0; n].into())],
+            )
+            .unwrap()
+        };
+        let mut cb = crate::engine::chunked::ChunkedBatch::from_batch(mk(rows_per_chunk[0]));
+        for &n in &rows_per_chunk[1..] {
+            cb.push(mk(n)).unwrap();
+        }
+        cb
+    }
+
+    #[test]
+    fn share_chunk_counts_mirror_executor_slicing() {
+        let two = DeviceTopology::from_cluster(&crate::cluster::ClusterSpec::of(2));
+        // 2 equal chunks over 2 equal executors: the split lands on the
+        // chunk boundary, each share covers exactly one chunk — fewer
+        // than the batch's 2 the query-level estimate would charge.
+        assert_eq!(share_chunk_counts(&chunked(&[8, 8]), &two), vec![1, 1]);
+        // The 1-executor topology keeps the full layout.
+        assert_eq!(share_chunk_counts(&chunked(&[8, 8]), &single_topo()), vec![2]);
+        // An uneven split crosses a chunk boundary: both shares touch
+        // two chunks (7 = chunk0 + a slice of chunk1; 8 = the rest of
+        // chunk1 + chunk2).
+        assert_eq!(share_chunk_counts(&chunked(&[5, 5, 5]), &two), vec![2, 2]);
+    }
+
+    #[test]
+    fn exec_chunks_gate_per_executor_coalesce() {
+        // The scheduler's per-share coalesce estimate must price the
+        // layout each executor actually assembles, not the query-level
+        // chunk count: a share covering a single chunk coalesces free.
+        let q = chain_query("a");
+        let model = DeviceModel::default();
+        let topo = DeviceTopology::from_cluster(&crate::cluster::ClusterSpec::of(2));
+        let naive = cand(&q, 50.0 * KB, 10.0 * KB, 2);
+        let aware = cand(&q, 50.0 * KB, 10.0 * KB, 2).with_exec_chunks(vec![1, 1]);
+        let ctx_naive = chain_ctx(&naive, &model, &topo);
+        let ctx_aware = chain_ctx(&aware, &model, &topo);
+        for e in 0..topo.num_executors() {
+            for o in 0..q.len() {
+                // Only the staging charge moves; op and transfer
+                // profiles are share-layout-independent.
+                assert_eq!(ctx_aware.secs[e][o].cpu, ctx_naive.secs[e][o].cpu);
+                assert_eq!(ctx_aware.secs[e][o].gpu, ctx_naive.secs[e][o].gpu);
+                assert_eq!(ctx_aware.secs[e][o].trans_in, ctx_naive.secs[e][o].trans_in);
+                assert_eq!(
+                    ctx_aware.secs[e][o].trans_out,
+                    ctx_naive.secs[e][o].trans_out
+                );
+            }
+            // The scan stages the share at any entering boundary: the
+            // single-chunk share is free, the 2-chunk estimate is not.
+            assert_eq!(ctx_aware.secs[e][0].coalesce, 0.0);
+            assert!(ctx_naive.secs[e][0].coalesce > 0.0);
+        }
+        // And a share-aware 1-chunk seed agrees with building the
+        // candidate from a single-chunk batch outright — the
+        // planner↔executor agreement point.
+        let single_seed = cand(&q, 50.0 * KB, 10.0 * KB, 1);
+        let ctx_single = chain_ctx(&single_seed, &model, &topo);
+        for e in 0..topo.num_executors() {
+            for o in 0..q.len() {
+                assert_eq!(
+                    ctx_aware.secs[e][o].coalesce,
+                    ctx_single.secs[e][o].coalesce
+                );
+            }
+        }
     }
 
     #[test]

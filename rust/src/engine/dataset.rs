@@ -16,7 +16,10 @@ pub struct Dataset {
     pub id: u64,
     /// Creation/arrival time.
     pub created_at: Time,
-    /// Event-time of the rows (== arrival in our generators).
+    /// Event time of the rows: the logical tick the generator produced
+    /// them for (`tick_no × tick duration`), decoupled from arrival —
+    /// under [`crate::source::stream::Disorder`] a dataset can arrive
+    /// after younger events. Equal to `created_at` for in-order streams.
     pub event_time: Time,
     /// Row data.
     pub batch: ColumnBatch,

@@ -121,16 +121,32 @@ impl WindowState {
         self.entries.iter().map(|d| d.wire_bytes).sum()
     }
 
-    /// Insert processed datasets into state: one O(#columns) Arc-wrapped
-    /// chunk append per dataset — no row copies.
+    /// Insert processed datasets into state, kept ordered by
+    /// `(event_time, id)`: for in-order input every insert is a pure
+    /// O(#columns) Arc-wrapped chunk append (no row copies, the
+    /// historical fast path); an out-of-order dataset files into its
+    /// event position so the state — and therefore any snapshot — is an
+    /// arrival-permutation-invariant function of the event stream.
     pub fn push(&mut self, datasets: &[Dataset]) {
         if datasets.is_empty() {
             return;
         }
         self.snap = None;
         for d in datasets {
-            self.chunks.push_back(Arc::new(d.batch.clone()));
-            self.entries.push_back(d.clone());
+            let key = (d.event_time, d.id);
+            let pos = self
+                .entries
+                .iter()
+                .rposition(|e| (e.event_time, e.id) <= key)
+                .map(|p| p + 1)
+                .unwrap_or(0);
+            if pos == self.entries.len() {
+                self.chunks.push_back(Arc::new(d.batch.clone()));
+                self.entries.push_back(d.clone());
+            } else {
+                self.chunks.insert(pos, Arc::new(d.batch.clone()));
+                self.entries.insert(pos, d.clone());
+            }
         }
     }
 
@@ -165,6 +181,32 @@ impl WindowState {
         };
         let mut out = ChunkedBatch::new(Arc::clone(&first.schema));
         for c in &self.chunks {
+            out.push_arc(Arc::clone(c)).map_err(|_| {
+                Error::Schema("window state holds datasets with mixed schemas".into())
+            })?;
+        }
+        Ok(Some(out))
+    }
+
+    /// The prefix of state at or before an event-time boundary, as a
+    /// chunk list (`None` when nothing qualifies). Entries are
+    /// event-ordered, so the view is a prefix — O(#datasets) Arc bumps
+    /// like [`WindowState::snapshot_chunks`]. The boundary is
+    /// *inclusive*, mirroring the eviction horizon's convention: a
+    /// window closing at watermark `w` computes over every event `<= w`
+    /// still in range. This is what makes watermark-driven window-close
+    /// arrival-permutation-invariant: any late-but-allowed dataset has
+    /// filed into its event position before the prefix is taken.
+    pub fn snapshot_up_to(&self, boundary: Time) -> Result<Option<ChunkedBatch>> {
+        let first = match (self.entries.front(), self.chunks.front()) {
+            (Some(e), Some(c)) if e.event_time <= boundary => c,
+            _ => return Ok(None),
+        };
+        let mut out = ChunkedBatch::new(Arc::clone(&first.schema));
+        for (e, c) in self.entries.iter().zip(self.chunks.iter()) {
+            if e.event_time > boundary {
+                break;
+            }
             out.push_arc(Arc::clone(c)).map_err(|_| {
                 Error::Schema("window state holds datasets with mixed schemas".into())
             })?;
@@ -364,6 +406,99 @@ mod tests {
         w.evict(Time::from_secs_f64(7.0), &spec);
         assert_eq!(held.rows(), 10);
         assert_eq!(held.coalesce(), before);
+    }
+
+    /// Dataset with decoupled event/arrival times.
+    fn ds_at(id: u64, event: f64, arrival: f64) -> Dataset {
+        let mut d = ds(id, event);
+        d.created_at = Time::from_secs_f64(arrival);
+        d
+    }
+
+    #[test]
+    fn eviction_boundary_is_inclusive() {
+        // Satellite: a dataset exactly at `now - range` is retained.
+        let spec = WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5));
+        let mut w = WindowState::new();
+        w.push(&[ds(0, 10.0), ds(1, 15.0), ds(2, 40.0)]);
+        w.evict(Time::from_secs_f64(40.0), &spec); // horizon = exactly 10s
+        assert_eq!(w.len(), 3, "dataset at now - range must survive eviction");
+        // One nanosecond past the boundary evicts it.
+        w.evict(Time(Time::from_secs_f64(40.0).0 + 1), &spec);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.rows(), 10);
+    }
+
+    #[test]
+    fn eviction_boundary_identical_under_contiguous_and_chunked_snapshots() {
+        let spec = WindowSpec::tumbling(Duration::from_secs(20));
+        let build = || {
+            let mut w = WindowState::new();
+            w.push(&[ds(0, 5.0), ds(1, 25.0), ds(2, 26.0)]);
+            w.evict(Time::from_secs_f64(25.0), &spec); // horizon = exactly 5s
+            w
+        };
+        let mut a = build();
+        let b = build();
+        let contiguous = a.snapshot().unwrap().unwrap();
+        let chunked = b.snapshot_chunks().unwrap().unwrap();
+        assert_eq!(a.len(), 3, "boundary dataset retained");
+        assert_eq!(chunked.coalesce(), *contiguous);
+        assert_eq!(chunked.rows(), 15);
+    }
+
+    #[test]
+    fn eviction_boundary_unchanged_when_watermark_driven() {
+        // Evicting by a watermark (max event − lateness) goes through the
+        // same `evict(now, spec)` entry point: the inclusive-horizon
+        // semantics must not depend on where the time came from, and a
+        // late-but-allowed dataset filed behind the boundary is evicted
+        // by exactly the same rule.
+        let spec = WindowSpec::sliding(Duration::from_secs(10), Duration::from_secs(2));
+        let mut by_clock = WindowState::new();
+        let mut by_watermark = WindowState::new();
+        // In-order state for the clock; the watermark state receives the
+        // same datasets with the middle one arriving late (out of order).
+        by_clock.push(&[ds(0, 8.0), ds(1, 12.0), ds(2, 18.0)]);
+        by_watermark.push(&[ds_at(0, 8.0, 8.0), ds_at(2, 18.0, 18.0)]);
+        by_watermark.push(&[ds_at(1, 12.0, 18.5)]); // late arrival, files in
+        let max_event = Time::from_secs_f64(18.0);
+        let lateness = Duration::from_secs(0);
+        let watermark = Time(max_event.0 - lateness.as_nanos() as u64);
+        by_clock.evict(max_event, &spec);
+        by_watermark.evict(watermark, &spec);
+        // horizon = exactly 8s: the boundary dataset survives in both.
+        assert_eq!(by_clock.len(), 3);
+        assert_eq!(by_watermark.len(), 3);
+        let a = by_clock.snapshot_chunks().unwrap().unwrap();
+        let b = by_watermark.snapshot_chunks().unwrap().unwrap();
+        assert_eq!(a.coalesce(), b.coalesce(), "watermark eviction diverged");
+    }
+
+    #[test]
+    fn out_of_order_push_files_into_event_position() {
+        let mut in_order = WindowState::new();
+        in_order.push(&[ds(0, 1.0), ds(1, 2.0), ds(2, 3.0), ds(3, 4.0)]);
+        let mut permuted = WindowState::new();
+        permuted.push(&[ds_at(2, 3.0, 3.0)]);
+        permuted.push(&[ds_at(0, 1.0, 3.2), ds_at(3, 4.0, 4.0)]);
+        permuted.push(&[ds_at(1, 2.0, 4.5)]);
+        let a = in_order.snapshot_chunks().unwrap().unwrap();
+        let b = permuted.snapshot_chunks().unwrap().unwrap();
+        assert_eq!(a.coalesce(), b.coalesce(), "event order not restored");
+        assert_eq!(b.num_chunks(), 4);
+    }
+
+    #[test]
+    fn snapshot_up_to_takes_inclusive_event_prefix() {
+        let mut w = WindowState::new();
+        w.push(&[ds(0, 1.0), ds(1, 2.0), ds(2, 3.0)]);
+        assert!(w.snapshot_up_to(Time::from_secs_f64(0.5)).unwrap().is_none());
+        let p = w.snapshot_up_to(Time::from_secs_f64(2.0)).unwrap().unwrap();
+        assert_eq!(p.num_chunks(), 2, "boundary event included");
+        assert_eq!(p.rows(), 10);
+        let all = w.snapshot_up_to(Time::from_secs_f64(99.0)).unwrap().unwrap();
+        assert_eq!(all.coalesce(), w.snapshot_chunks().unwrap().unwrap().coalesce());
     }
 
     #[test]

@@ -61,7 +61,7 @@
 //! [`ExecOutcome::branch_results`]: crate::query::exec::ExecOutcome::branch_results
 
 use crate::cluster;
-use crate::config::{Config, ExecBackend, Mode};
+use crate::config::{Config, ExecBackend, LatePolicy, Mode};
 use crate::coordinator::admission::{
     min_positive_throughput, Admission, AdmissionDecision,
 };
@@ -76,7 +76,7 @@ use crate::durability::{
     self, RecoveryMode, RecoveryReport, SinkLedger, Wal, WalPosition, WalRecord,
 };
 use crate::engine::chunked::ChunkedBatch;
-use crate::engine::dataset::MicroBatch;
+use crate::engine::dataset::{Dataset, MicroBatch};
 use crate::engine::partition::mean_partition_bytes;
 use crate::engine::sink::Sink;
 use crate::engine::window::{WindowKind, WindowState};
@@ -171,6 +171,11 @@ struct SourceDef {
     /// history, and checkpoints key off it.
     primary: usize,
     queries: Vec<usize>,
+    /// Owned side-output sink for late data
+    /// ([`Session::set_late_sink`]); receives one batch per dataset the
+    /// watermark classified late when [`Config::late_policy`] is
+    /// [`LatePolicy::SideOutput`].
+    late_sink: Option<Box<dyn Sink>>,
 }
 
 /// A streaming session: shared coordinator state + registered queries.
@@ -193,6 +198,10 @@ pub struct Session<'rt> {
     /// Sink-ledger disk writes the most recent run performed (pins the
     /// one-persist-per-round batching; 0 without `Config::wal_dir`).
     last_ledger_persists: usize,
+    /// Per-source low-watermark where the most recent run ended
+    /// (`None` per source until an event is seen; all-`None` when
+    /// event time is off, i.e. `Config::allowed_lateness` unset).
+    last_watermarks: Vec<Option<Time>>,
 }
 
 impl<'rt> Session<'rt> {
@@ -237,6 +246,7 @@ impl<'rt> Session<'rt> {
             last_recovery: None,
             last_health: None,
             last_ledger_persists: 0,
+            last_watermarks: Vec::new(),
         })
     }
 
@@ -293,6 +303,7 @@ impl<'rt> Session<'rt> {
             workload,
             primary: qidx,
             queries: vec![qidx],
+            late_sink: None,
         });
         Ok(QueryId(qidx))
     }
@@ -386,6 +397,35 @@ impl<'rt> Session<'rt> {
         let q = self.queries.get_mut(query.0)?;
         let pos = q.branch_sinks.iter().position(|(id, _)| *id == branch_op)?;
         Some(q.branch_sinks.remove(pos).1)
+    }
+
+    /// Register an owned side-output sink for late data on the *source*
+    /// feeding `query` (late classification is per source, so queries
+    /// sharing a source share the side output). Effective only when
+    /// [`Config::allowed_lateness`] is set and [`Config::late_policy`]
+    /// is [`LatePolicy::SideOutput`]; each dataset behind the watermark
+    /// is delivered as its own batch, in arrival order. The side output
+    /// is a diagnostic tap: late rows are routed *before* the WAL, so
+    /// they are not covered by exactly-once replay.
+    pub fn set_late_sink(&mut self, query: QueryId, sink: Box<dyn Sink>) -> Result<()> {
+        let source = self.query_mut(query)?.source;
+        self.sources[source].late_sink = Some(sink);
+        Ok(())
+    }
+
+    /// Remove and return the late-data sink on `query`'s source, if any.
+    pub fn take_late_sink(&mut self, query: QueryId) -> Option<Box<dyn Sink>> {
+        let source = self.queries.get(query.0)?.source;
+        self.sources[source].late_sink.take()
+    }
+
+    /// Per-source low-watermarks (`max event time seen − allowed
+    /// lateness`) where the most recent [`Session::run`] ended, in
+    /// source registration order. A source's entry is `None` until it
+    /// has seen an event; every entry is `None` when event-time mode is
+    /// off ([`Config::allowed_lateness`] unset) or before the first run.
+    pub fn watermarks(&self) -> &[Option<Time>] {
+        &self.last_watermarks
     }
 
     fn query_mut(&mut self, query: QueryId) -> Result<&mut QueryDef> {
@@ -640,6 +680,38 @@ impl<'rt> Session<'rt> {
             vec![Time::ZERO.add(cfg.trigger); num_sources];
         let mut construct_acc: Vec<Duration> = vec![Duration::ZERO; num_sources];
 
+        // ---- Event-time state (active only when `allowed_lateness` is
+        // set; `None` keeps arrival-time semantics byte-for-byte). The
+        // per-source low-watermark is `max event time seen − allowed
+        // lateness`: it classifies late arrivals at poll time, drives
+        // window eviction in staging, and force-admits buffered data
+        // when it crosses a window-close boundary.
+        let mut max_event: Vec<Option<Time>> = vec![None; num_sources];
+        let mut late_rows_pending: Vec<usize> = vec![0; num_sources];
+        let mut late_delivered: Vec<usize> = vec![0; num_sources];
+        // Window-close cadence per source: the earliest close period
+        // across its queries — the slide for sliding windows, the range
+        // for tumbling ones.
+        let close_period: Vec<Duration> = self
+            .sources
+            .iter()
+            .map(|src| {
+                src.queries
+                    .iter()
+                    .map(|&qi| {
+                        let w = &self.queries[qi].query.window;
+                        match w.kind() {
+                            WindowKind::Sliding => w.slide,
+                            WindowKind::Tumbling => w.range,
+                        }
+                    })
+                    .min()
+                    .expect("source has >=1 query")
+            })
+            .collect();
+        let mut next_close: Vec<Time> =
+            close_period.iter().map(|&p| Time::ZERO.add(p)).collect();
+
         // The full (fault-free) device topology: per-executor GPUs on a
         // cluster, the 1-executor special case on a single node. Each
         // round plans and executes against the *surviving* view the
@@ -685,7 +757,19 @@ impl<'rt> Session<'rt> {
                     if next_trigger[s] > clock.now() {
                         continue;
                     }
-                    let data = streams[s].poll(clock.now());
+                    let mut data = streams[s].poll(clock.now());
+                    if let Some(lateness) = cfg.allowed_lateness {
+                        data = apply_late_policy(
+                            data,
+                            cfg.late_policy,
+                            lateness,
+                            &mut max_event[s],
+                            &mut late_rows_pending[s],
+                            &mut self.sources[s].late_sink,
+                            &mut late_delivered[s],
+                            clock.now(),
+                        )?;
+                    }
                     next_trigger[s] = next_trigger[s].add(cfg.trigger);
                     if !data.is_empty() {
                         admitted.push((s, MicroBatch::new(data)));
@@ -699,7 +783,23 @@ impl<'rt> Session<'rt> {
                 }
                 for s in 0..num_sources {
                     let t0 = Instant::now();
-                    let data = streams[s].poll(clock.now());
+                    let mut data = streams[s].poll(clock.now());
+                    // Event time: classify against the source watermark
+                    // and apply the late policy *before* admission, so
+                    // routed-away rows never reach the WAL (replay stays
+                    // consistent) or the Eq. 6 estimate.
+                    if let Some(lateness) = cfg.allowed_lateness {
+                        data = apply_late_policy(
+                            data,
+                            cfg.late_policy,
+                            lateness,
+                            &mut max_event[s],
+                            &mut late_rows_pending[s],
+                            &mut self.sources[s].late_sink,
+                            &mut late_delivered[s],
+                            clock.now(),
+                        )?;
+                    }
                     // Eq. 6's AvgThPut over a multi-query source: the
                     // *minimum* observed throughput across its queries
                     // (the slowest query dominates the batch's real
@@ -732,6 +832,25 @@ impl<'rt> Session<'rt> {
                     match decision {
                         AdmissionDecision::Poll | AdmissionDecision::Buffer { .. } => {}
                         AdmissionDecision::Admit(mb) => admitted.push((s, mb)),
+                    }
+                    // Event time: when the watermark crosses a
+                    // window-close boundary, the window the buffered
+                    // data belongs to is complete in event time —
+                    // force-admit past the Eq. 6 estimate (the window
+                    // term of the admission rule follows watermark
+                    // progress, not the wall clock).
+                    if let (Some(lateness), Some(m)) =
+                        (cfg.allowed_lateness, max_event[s])
+                    {
+                        let wm = Time(m.0.saturating_sub(lateness.as_nanos() as u64));
+                        if wm >= next_close[s] {
+                            if admissions[s].buffered_datasets() > 0 {
+                                admitted.push((s, admissions[s].take_buffered()));
+                            }
+                            while next_close[s] <= wm {
+                                next_close[s] = next_close[s].add(close_period[s]);
+                            }
+                        }
                     }
                 }
             }
@@ -820,11 +939,36 @@ impl<'rt> Session<'rt> {
             }
             let mut staged: Vec<Staged> = Vec::new();
             for &(s, ref batch) in &admitted {
+                // Watermark upkeep for paths that bypass the poll-time
+                // classification (WAL replay): the admitted batch still
+                // advances the source's max event.
+                if cfg.allowed_lateness.is_some() {
+                    if let Some(newest) = batch.newest_event_time() {
+                        if max_event[s].is_none_or(|m| newest > m) {
+                            max_event[s] = Some(newest);
+                        }
+                    }
+                }
                 for &qi in &self.sources[s].queries {
                     let qdef = &self.queries[qi];
                     let query = &qdef.query;
-                    if let Some(newest) = batch.newest_event_time() {
-                        windows[qi].evict(newest, &query.window);
+                    match cfg.allowed_lateness {
+                        // Event time: the low-watermark — not arrival
+                        // progress — closes windows, so data within the
+                        // allowed lateness can still land in its window.
+                        Some(lateness) => {
+                            if let Some(m) = max_event[s] {
+                                let wm = Time(
+                                    m.0.saturating_sub(lateness.as_nanos() as u64),
+                                );
+                                windows[qi].evict(wm, &query.window);
+                            }
+                        }
+                        None => {
+                            if let Some(newest) = batch.newest_event_time() {
+                                windows[qi].evict(newest, &query.window);
+                            }
+                        }
                     }
                     let (input, snapshot): (ChunkedBatch, Option<ChunkedBatch>) =
                         if query.uses_window_state && !qdef.has_join {
@@ -947,16 +1091,27 @@ impl<'rt> Session<'rt> {
                             } else {
                                 (0.0, 0)
                             };
-                            cands.push(QueryCandidate::build(
-                                &qdef.query,
-                                part,
-                                self.inf_pt,
-                                cfg.base_trans_cost,
-                                &qdef.size_est,
-                                st.input.num_chunks(),
-                                aux_bytes,
-                                aux_chunks,
-                            )?);
+                            cands.push(
+                                QueryCandidate::build(
+                                    &qdef.query,
+                                    part,
+                                    self.inf_pt,
+                                    cfg.base_trans_cost,
+                                    &qdef.size_est,
+                                    st.input.num_chunks(),
+                                    aux_bytes,
+                                    aux_chunks,
+                                )?
+                                // Per-executor share layouts: cluster
+                                // slicing can shrink a share's chunk
+                                // count below the batch's, and the
+                                // coalesce estimate must price what
+                                // each executor actually assembles.
+                                .with_exec_chunks(schedule::share_chunk_counts(
+                                    &st.input,
+                                    &topo,
+                                )),
+                            );
                         }
                         let jp = schedule::plan_joint(&cands, &self.model, &topo);
                         let order = jp.predicted.order.clone();
@@ -1286,6 +1441,20 @@ impl<'rt> Session<'rt> {
                     retries: round_retries,
                     recovery_wait,
                     degraded,
+                    // Late rows accumulate per source between rounds and
+                    // flush once, to the source's primary query, so
+                    // multi-query sources never double count them.
+                    late_rows: if p.qi == self.sources[p.s].primary {
+                        std::mem::take(&mut late_rows_pending[p.s])
+                    } else {
+                        0
+                    },
+                    watermark_lag: match (cfg.allowed_lateness, max_event[p.s]) {
+                        (Some(lateness), Some(m)) => admitted_at.saturating_sub(
+                            Time(m.0.saturating_sub(lateness.as_nanos() as u64)),
+                        ),
+                        _ => Duration::ZERO,
+                    },
                 };
                 metrics[p.qi].record(rec, &src_buffs[p.s]);
                 self.queries[p.qi].size_est.observe(&p.traces);
@@ -1392,6 +1561,15 @@ impl<'rt> Session<'rt> {
             recovery_wait: total_recovery_wait,
             degraded_rounds,
         });
+        self.last_watermarks = match cfg.allowed_lateness {
+            Some(lateness) => max_event
+                .iter()
+                .map(|m| {
+                    m.map(|m| Time(m.0.saturating_sub(lateness.as_nanos() as u64)))
+                })
+                .collect(),
+            None => vec![None; num_sources],
+        };
 
         Ok(self
             .queries
@@ -1409,6 +1587,59 @@ impl<'rt> Session<'rt> {
             })
             .collect())
     }
+}
+
+/// Classify freshly polled datasets against a source's low-watermark
+/// (`max event time seen − allowed lateness`) and apply the configured
+/// late policy *before* admission. Filtering ahead of the WAL keeps
+/// replay consistent: a logged round never contains rows a policy
+/// already routed away. Datasets arrive in arrival order; each is
+/// classified against the watermark derived from the events seen
+/// *before* it, then advances the (monotone) max event.
+///
+/// Returns the datasets that continue into admission. All late rows —
+/// dropped, side-routed, or recomputed — count into `late_rows`;
+/// [`LatePolicy::Recompute`] keeps the dataset flowing (its window,
+/// still open under the watermark-lagged eviction horizon, recomputes
+/// with it), [`LatePolicy::SideOutput`] delivers it to `late_sink` as
+/// its own batch, [`LatePolicy::Drop`] discards it.
+#[allow(clippy::too_many_arguments)]
+fn apply_late_policy(
+    data: Vec<Dataset>,
+    policy: LatePolicy,
+    lateness: Duration,
+    max_event: &mut Option<Time>,
+    late_rows: &mut usize,
+    late_sink: &mut Option<Box<dyn Sink>>,
+    late_delivered: &mut usize,
+    now: Time,
+) -> Result<Vec<Dataset>> {
+    let mut kept = Vec::with_capacity(data.len());
+    for d in data {
+        let watermark =
+            max_event.map(|m| Time(m.0.saturating_sub(lateness.as_nanos() as u64)));
+        let late = watermark.is_some_and(|wm| d.event_time < wm);
+        if max_event.is_none_or(|m| d.event_time > m) {
+            *max_event = Some(d.event_time);
+        }
+        if !late {
+            kept.push(d);
+            continue;
+        }
+        *late_rows += d.rows();
+        match policy {
+            LatePolicy::Recompute => kept.push(d),
+            LatePolicy::Drop => {}
+            LatePolicy::SideOutput => {
+                if let Some(sink) = late_sink.as_mut() {
+                    let batch = ChunkedBatch::from_batch(d.batch);
+                    sink.deliver(*late_delivered, &batch, now)?;
+                    *late_delivered += 1;
+                }
+            }
+        }
+    }
+    Ok(kept)
 }
 
 fn has_join(query: &Query) -> bool {

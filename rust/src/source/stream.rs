@@ -3,6 +3,20 @@
 //! Datasets materialize at one-second ticks (the paper's ingestion
 //! granularity) according to the traffic pattern; the coordinator polls
 //! every 10 ms (§III-A) and receives all datasets created up to "now".
+//!
+//! # Event time vs arrival time
+//!
+//! Each dataset carries two timestamps: `event_time` is the *logical
+//! tick* the rows belong to (tick number × tick duration — it continues
+//! across [`InputStream::fast_forward`] rebases, so the logical stream
+//! is incarnation-invariant), while `created_at` is when the dataset
+//! became visible to [`InputStream::poll`]. Without a [`Disorder`] knob
+//! the two advance in lockstep (arrival == event tick); with one,
+//! arrival is randomly delayed, producing the out-of-order and late data
+//! that event-time windows must tolerate. Disorder draws from its *own*
+//! RNG, so enabling it never perturbs the generated row content — a
+//! disordered run carries exactly the in-order run's datasets, permuted
+//! in arrival.
 
 use crate::engine::column::ColumnBatch;
 use crate::engine::dataset::Dataset;
@@ -19,15 +33,35 @@ pub trait RowGen: Send {
     fn generate(&mut self, tick: u64, rows: usize) -> ColumnBatch;
 }
 
+/// Out-of-order arrival knob: each dataset's arrival is delayed past its
+/// event tick with probability `delay_prob`, by a uniform draw in
+/// `[0, max_delay]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Disorder {
+    pub delay_prob: f64,
+    pub max_delay: Duration,
+}
+
+impl Disorder {
+    pub fn new(delay_prob: f64, max_delay: Duration) -> Disorder {
+        Disorder { delay_prob, max_delay }
+    }
+}
+
 /// The polled source.
 pub struct InputStream {
     gen: Box<dyn RowGen>,
     traffic: Traffic,
     rng: Rng,
+    disorder: Option<Disorder>,
+    /// Separate stream so disorder draws never desync the traffic/row
+    /// RNG: in-order and disordered runs generate identical datasets.
+    disorder_rng: Rng,
     tick: Duration,
     next_tick_at: Time,
     next_tick_no: u64,
     next_id: u64,
+    /// Pending datasets ordered by arrival (`created_at`, then id).
     pending: VecDeque<Dataset>,
     total_datasets: u64,
     total_bytes: u64,
@@ -39,6 +73,8 @@ impl InputStream {
             gen,
             traffic,
             rng: Rng::new(seed),
+            disorder: None,
+            disorder_rng: Rng::new(seed ^ 0x0d15_0d0e_5eed_cafe),
             tick: Duration::from_secs(1),
             next_tick_at: Time::ZERO,
             next_tick_no: 0,
@@ -49,20 +85,51 @@ impl InputStream {
         }
     }
 
+    /// Enable out-of-order arrivals (builder style).
+    pub fn with_disorder(mut self, disorder: Disorder) -> InputStream {
+        self.disorder = Some(disorder);
+        self
+    }
+
+    /// Whether this stream delivers out-of-order arrivals.
+    pub fn is_disordered(&self) -> bool {
+        self.disorder.is_some()
+    }
+
     /// Materialize all ticks up to `now`.
     fn advance_to(&mut self, now: Time) {
         while self.next_tick_at <= now {
-            let rows = self.traffic.next_rows(&mut self.rng);
+            let rows = self.traffic.next_rows(self.next_tick_no, &mut self.rng);
             if rows > 0 {
                 let batch = self.gen.generate(self.next_tick_no, rows);
                 let bytes = batch.alloc_bytes();
-                self.pending.push_back(Dataset {
+                let event_time =
+                    Time::from_secs_f64(self.next_tick_no as f64 * self.tick.as_secs_f64());
+                let mut created_at = self.next_tick_at;
+                if let Some(d) = self.disorder {
+                    if self.disorder_rng.chance(d.delay_prob) {
+                        let delay = Duration::from_secs_f64(
+                            self.disorder_rng.f64() * d.max_delay.as_secs_f64(),
+                        );
+                        created_at = created_at.add(delay);
+                    }
+                }
+                let ds = Dataset {
                     id: self.next_id,
-                    created_at: self.next_tick_at,
-                    event_time: self.next_tick_at,
+                    created_at,
+                    event_time,
                     batch,
                     wire_bytes: bytes,
-                });
+                };
+                // Keep `pending` arrival-ordered: a delayed dataset files
+                // in behind everything that arrives before it.
+                let pos = self
+                    .pending
+                    .iter()
+                    .rposition(|p| (p.created_at, p.id) <= (ds.created_at, ds.id))
+                    .map(|p| p + 1)
+                    .unwrap_or(0);
+                self.pending.insert(pos, ds);
                 self.next_id += 1;
                 self.total_datasets += 1;
                 self.total_bytes += bytes as u64;
@@ -72,10 +139,17 @@ impl InputStream {
         }
     }
 
-    /// Take every dataset created up to `now` (the "get all new data in
-    /// the source path" of Alg. 1).
+    /// Take every dataset that has *arrived* by `now` (the "get all new
+    /// data in the source path" of Alg. 1).
     pub fn poll(&mut self, now: Time) -> Vec<Dataset> {
-        self.advance_to(now);
+        // Materialize one max-delay horizon past `now` so a delayed
+        // dataset from an earlier tick can't hide behind ticks that
+        // haven't been generated yet.
+        let gen_to = match self.disorder {
+            Some(d) => now.add(d.max_delay),
+            None => now,
+        };
+        self.advance_to(gen_to);
         let mut out = Vec::new();
         while let Some(front) = self.pending.front() {
             if front.created_at <= now {
@@ -95,12 +169,12 @@ impl InputStream {
     /// Checkpoint recovery: consume (and discard) everything up to
     /// `horizon`, then re-base so the next tick lands at the new run's
     /// time zero — the resumed process's clock restarts while the logical
-    /// stream continues where the checkpoint left off.
+    /// stream (tick numbers, hence `event_time`) continues where the
+    /// checkpoint left off. Lifetime ingest counters survive the rebase:
+    /// they account the logical stream, not one incarnation.
     pub fn fast_forward(&mut self, horizon: Time) {
         self.advance_to(horizon);
         self.pending.clear();
-        self.total_datasets = 0;
-        self.total_bytes = 0;
         self.next_tick_at = Time::ZERO;
     }
 }
@@ -132,6 +206,8 @@ mod tests {
         assert_eq!(got[0].created_at, Time::ZERO);
         assert_eq!(got[3].created_at, Time::from_secs_f64(3.0));
         assert!(got.iter().all(|d| d.rows() == 10));
+        // In-order streams stamp event == arrival.
+        assert!(got.iter().all(|d| d.event_time == d.created_at));
     }
 
     #[test]
@@ -167,9 +243,30 @@ mod tests {
         let got = s.poll(Time::from_secs_f64(1.0));
         assert!(!got.is_empty());
         assert_eq!(got[0].created_at, Time::ZERO);
-        // Event ticks continue the logical stream (tick 11 onward).
+        // Event ticks continue the logical stream (tick 11 onward) —
+        // both in the rows and in the decoupled event_time stamp.
         let t = got[0].batch.column("t").unwrap().as_f32().unwrap()[0];
         assert!(t >= 11.0, "tick {t}");
+        assert!(got[0].event_time >= Time::from_secs_f64(11.0));
+        assert!(got[0].event_time > got[0].created_at);
+    }
+
+    #[test]
+    fn fast_forward_preserves_lifetime_totals() {
+        // The rebase must not zero ingest accounting: totals accumulate
+        // across incarnations (crash/resume undercount bugfix).
+        let mut s = stream(Traffic::Constant { rows: 10 });
+        s.poll(Time::from_secs_f64(4.0));
+        let (n0, b0) = s.totals();
+        assert_eq!(n0, 5);
+        s.fast_forward(Time::from_secs_f64(9.0));
+        let (n1, b1) = s.totals();
+        assert_eq!(n1, 10, "fast_forward dropped consumed-tick accounting");
+        assert!(b1 >= b0);
+        s.poll(Time::from_secs_f64(2.0));
+        let (n2, b2) = s.totals();
+        assert_eq!(n2, 13, "post-resume ingest must extend the lifetime count");
+        assert!(b2 > b1);
     }
 
     #[test]
@@ -181,5 +278,59 @@ mod tests {
         let rb: Vec<usize> =
             b.poll(Time::from_secs_f64(10.0)).iter().map(|d| d.rows()).collect();
         assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn disorder_permutes_arrival_but_not_content() {
+        let horizon = Time::from_secs_f64(40.0);
+        let mut ordered = stream(Traffic::Constant { rows: 3 });
+        let mut disordered = stream(Traffic::Constant { rows: 3 })
+            .with_disorder(Disorder::new(0.5, Duration::from_secs(5)));
+        let a = ordered.poll(horizon);
+        // Poll far enough past the horizon that every delayed dataset of
+        // the compared event range has arrived.
+        let b: Vec<Dataset> = disordered
+            .poll(Time::from_secs_f64(50.0))
+            .into_iter()
+            .filter(|d| d.event_time <= horizon)
+            .collect();
+        assert_eq!(a.len(), b.len());
+        // Same datasets by id: identical event times and row content.
+        let mut b_sorted = b.clone();
+        b_sorted.sort_by_key(|d| d.id);
+        for (x, y) in a.iter().zip(b_sorted.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.event_time, y.event_time);
+            assert_eq!(x.batch, y.batch);
+        }
+        // Arrival is genuinely delayed/reordered somewhere.
+        assert!(b.iter().any(|d| d.created_at > d.event_time), "no delays drawn");
+        assert!(
+            b.windows(2).any(|w| w[0].event_time > w[1].event_time),
+            "arrival order never inverted event order"
+        );
+        // And poll order is still arrival order.
+        assert!(b.windows(2).all(|w| (w[0].created_at, w[0].id)
+            <= (w[1].created_at, w[1].id)));
+    }
+
+    #[test]
+    fn disorder_is_deterministic_for_seed() {
+        let mk = || {
+            stream(Traffic::random_default())
+                .with_disorder(Disorder::new(0.3, Duration::from_secs(3)))
+        };
+        let a: Vec<(u64, u64)> = mk()
+            .poll(Time::from_secs_f64(20.0))
+            .iter()
+            .map(|d| (d.id, d.created_at.0))
+            .collect();
+        let b: Vec<(u64, u64)> = mk()
+            .poll(Time::from_secs_f64(20.0))
+            .iter()
+            .map(|d| (d.id, d.created_at.0))
+            .collect();
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
     }
 }

@@ -1,9 +1,20 @@
-//! Stream ingestion traffic patterns (§V-A).
+//! Stream ingestion traffic patterns (§V-A + production shapes).
 //!
 //! * **Constant**: every second, a fixed number of rows arrives as one
 //!   dataset (the paper's fair-comparison traffic).
 //! * **RandomNormal**: per-second row counts drawn from a normal
 //!   distribution (the paper's realistic fluctuating traffic; mean 1000).
+//! * **Diurnal**: a sinusoidal day/night curve — the slow periodic load
+//!   swing of user-facing services.
+//! * **FlashCrowd**: a baseline rate with one scheduled spike that ramps
+//!   up linearly and decays exponentially (breaking-news load).
+//! * **Burst**: a normal baseline where each tick is independently
+//!   multiplied by a burst factor with small probability (multiplicative
+//!   heavy-tail bursts).
+//!
+//! Patterns are functions of the *tick number* (plus the stream's RNG for
+//! the stochastic ones), so a shape is reproducible for a seed and
+//! shifting the clock never changes which tick gets which load.
 
 use crate::util::rng::Rng;
 
@@ -14,6 +25,22 @@ pub enum Traffic {
     Constant { rows: usize },
     /// Normal(mean, std) rows per tick, clamped to >= 0.
     RandomNormal { mean: f64, std: f64 },
+    /// `base + amplitude * sin(2π · tick / period_secs)` rows per tick,
+    /// clamped to >= 0.
+    Diurnal { base: f64, amplitude: f64, period_secs: u64 },
+    /// `base` rows per tick until `at_tick`; then a spike toward `peak`
+    /// ramping linearly over `ramp_secs` and decaying exponentially with
+    /// time constant `decay_secs` back toward `base`.
+    FlashCrowd {
+        base: usize,
+        peak: usize,
+        at_tick: u64,
+        ramp_secs: u64,
+        decay_secs: u64,
+    },
+    /// Normal(mean, std) baseline; with probability `prob` a tick's rows
+    /// are multiplied by `factor` (multiplicative burst).
+    Burst { mean: f64, std: f64, factor: f64, prob: f64 },
 }
 
 impl Traffic {
@@ -27,21 +54,78 @@ impl Traffic {
         Traffic::RandomNormal { mean: 1000.0, std: 250.0 }
     }
 
-    /// Rows arriving in the next one-second tick.
-    pub fn next_rows(&self, rng: &mut Rng) -> usize {
+    /// Compressed diurnal curve (one "day" every 5 simulated minutes so
+    /// benches see whole periods): 1000 ± 600 rows/s.
+    pub fn diurnal_default() -> Traffic {
+        Traffic::Diurnal { base: 1000.0, amplitude: 600.0, period_secs: 300 }
+    }
+
+    /// Flash crowd: 500 rows/s baseline, 10x spike at t=60s, 5 s ramp,
+    /// 20 s decay constant.
+    pub fn flash_crowd_default() -> Traffic {
+        Traffic::FlashCrowd {
+            base: 500,
+            peak: 5000,
+            at_tick: 60,
+            ramp_secs: 5,
+            decay_secs: 20,
+        }
+    }
+
+    /// Multiplicative bursts: Normal(1000, 250) with an 8x burst on ~2%
+    /// of ticks.
+    pub fn burst_default() -> Traffic {
+        Traffic::Burst { mean: 1000.0, std: 250.0, factor: 8.0, prob: 0.02 }
+    }
+
+    /// Rows arriving in one-second tick number `tick`.
+    pub fn next_rows(&self, tick: u64, rng: &mut Rng) -> usize {
         match *self {
             Traffic::Constant { rows } => rows,
             Traffic::RandomNormal { mean, std } => {
                 rng.normal_ms(mean, std).round().max(0.0) as usize
             }
+            Traffic::Diurnal { base, amplitude, period_secs } => {
+                let phase =
+                    2.0 * std::f64::consts::PI * tick as f64 / period_secs.max(1) as f64;
+                (base + amplitude * phase.sin()).round().max(0.0) as usize
+            }
+            Traffic::FlashCrowd { base, peak, at_tick, ramp_secs, decay_secs } => {
+                if tick < at_tick {
+                    return base;
+                }
+                let dt = tick - at_tick;
+                let excess = peak.saturating_sub(base) as f64;
+                let x = if dt < ramp_secs.max(1) {
+                    // Linear ramp reaches the peak on the last ramp tick.
+                    excess * (dt + 1) as f64 / ramp_secs.max(1) as f64
+                } else {
+                    excess * (-((dt - ramp_secs) as f64) / decay_secs.max(1) as f64).exp()
+                };
+                base + x.round().max(0.0) as usize
+            }
+            Traffic::Burst { mean, std, factor, prob } => {
+                let base = rng.normal_ms(mean, std).round().max(0.0);
+                if rng.chance(prob) {
+                    (base * factor).round() as usize
+                } else {
+                    base as usize
+                }
+            }
         }
     }
 
-    /// Long-run mean rows/s.
+    /// Long-run mean rows/s (the sinusoid averages to `base`; the flash
+    /// crowd's spike is a transient, so its steady state is `base`).
     pub fn mean_rows(&self) -> f64 {
         match *self {
             Traffic::Constant { rows } => rows as f64,
             Traffic::RandomNormal { mean, .. } => mean,
+            Traffic::Diurnal { base, .. } => base,
+            Traffic::FlashCrowd { base, .. } => base as f64,
+            Traffic::Burst { mean, factor, prob, .. } => {
+                mean * (1.0 + prob * (factor - 1.0))
+            }
         }
     }
 }
@@ -54,8 +138,8 @@ mod tests {
     fn constant_is_constant() {
         let mut rng = Rng::new(1);
         let t = Traffic::Constant { rows: 123 };
-        for _ in 0..10 {
-            assert_eq!(t.next_rows(&mut rng), 123);
+        for tick in 0..10 {
+            assert_eq!(t.next_rows(tick, &mut rng), 123);
         }
     }
 
@@ -63,8 +147,8 @@ mod tests {
     fn random_mean_close_to_target() {
         let mut rng = Rng::new(2);
         let t = Traffic::random_default();
-        let n = 20_000;
-        let total: usize = (0..n).map(|_| t.next_rows(&mut rng)).sum();
+        let n = 20_000u64;
+        let total: usize = (0..n).map(|tick| t.next_rows(tick, &mut rng)).sum();
         let mean = total as f64 / n as f64;
         assert!((mean - 1000.0).abs() < 15.0, "mean {mean}");
     }
@@ -73,8 +157,70 @@ mod tests {
     fn random_never_negative() {
         let mut rng = Rng::new(3);
         let t = Traffic::RandomNormal { mean: 10.0, std: 100.0 };
-        for _ in 0..1000 {
-            let _ = t.next_rows(&mut rng); // usize: would panic on negative
+        for tick in 0..1000 {
+            let _ = t.next_rows(tick, &mut rng); // usize: would panic on negative
         }
+    }
+
+    #[test]
+    fn diurnal_oscillates_around_base_over_one_period() {
+        let mut rng = Rng::new(4);
+        let t = Traffic::Diurnal { base: 1000.0, amplitude: 600.0, period_secs: 100 };
+        let rows: Vec<usize> = (0..100).map(|tick| t.next_rows(tick, &mut rng)).collect();
+        let max = *rows.iter().max().unwrap();
+        let min = *rows.iter().min().unwrap();
+        assert!(max >= 1590 && max <= 1600, "peak {max}");
+        assert!(min <= 410, "trough {min}");
+        let mean = rows.iter().sum::<usize>() as f64 / rows.len() as f64;
+        assert!((mean - 1000.0).abs() < 20.0, "period mean {mean}");
+        // Deterministic in the tick, independent of RNG state.
+        assert_eq!(t.next_rows(25, &mut rng), t.next_rows(25, &mut rng));
+    }
+
+    #[test]
+    fn flash_crowd_ramps_and_decays() {
+        let mut rng = Rng::new(5);
+        let t = Traffic::FlashCrowd {
+            base: 500,
+            peak: 5000,
+            at_tick: 10,
+            ramp_secs: 5,
+            decay_secs: 20,
+        };
+        assert_eq!(t.next_rows(0, &mut rng), 500);
+        assert_eq!(t.next_rows(9, &mut rng), 500);
+        // Ramp is monotone up to the peak.
+        let ramp: Vec<usize> = (10..15).map(|k| t.next_rows(k, &mut rng)).collect();
+        assert!(ramp.windows(2).all(|w| w[0] < w[1]), "ramp {ramp:?}");
+        assert_eq!(*ramp.last().unwrap(), 5000);
+        // Decay is monotone down and approaches base.
+        let decay: Vec<usize> = (15..80).map(|k| t.next_rows(k, &mut rng)).collect();
+        assert!(decay.windows(2).all(|w| w[0] >= w[1]), "decay not monotone");
+        assert!(*decay.last().unwrap() < 700, "decay tail {}", decay.last().unwrap());
+        assert!(decay.iter().all(|&r| r >= 500));
+    }
+
+    #[test]
+    fn burst_mean_reflects_burst_factor() {
+        let mut rng = Rng::new(6);
+        let t = Traffic::Burst { mean: 1000.0, std: 100.0, factor: 8.0, prob: 0.02 };
+        let n = 50_000u64;
+        let rows: Vec<usize> = (0..n).map(|tick| t.next_rows(tick, &mut rng)).collect();
+        let mean = rows.iter().sum::<usize>() as f64 / n as f64;
+        // Long-run mean ≈ mean_rows() = 1140; generous tolerance.
+        assert!((mean - t.mean_rows()).abs() < 40.0, "mean {mean}");
+        // Bursts actually happen and are multiplicative outliers.
+        let bursts = rows.iter().filter(|&&r| r > 4000).count();
+        let frac = bursts as f64 / n as f64;
+        assert!(frac > 0.005 && frac < 0.05, "burst fraction {frac}");
+    }
+
+    #[test]
+    fn mean_rows_matches_shapes() {
+        assert_eq!(Traffic::constant_default().mean_rows(), 1000.0);
+        assert_eq!(Traffic::diurnal_default().mean_rows(), 1000.0);
+        assert_eq!(Traffic::flash_crowd_default().mean_rows(), 500.0);
+        let b = Traffic::burst_default().mean_rows();
+        assert!((b - 1140.0).abs() < 1e-9, "burst mean {b}");
     }
 }

@@ -8,7 +8,7 @@ pub mod synthetic;
 
 use crate::error::{Error, Result};
 use crate::query::dag::Query;
-use crate::source::stream::{InputStream, RowGen};
+use crate::source::stream::{Disorder, InputStream, RowGen};
 use crate::source::traffic::Traffic;
 
 /// A runnable workload: query + data generator + default traffic.
@@ -17,6 +17,7 @@ pub struct Workload {
     pub name: &'static str,
     pub query: Query,
     pub traffic: Traffic,
+    pub disorder: Option<Disorder>,
     make_gen: fn(u64) -> Box<dyn RowGen>,
 }
 
@@ -27,17 +28,28 @@ impl Workload {
         traffic: Traffic,
         make_gen: fn(u64) -> Box<dyn RowGen>,
     ) -> Workload {
-        Workload { name, query, traffic, make_gen }
+        Workload { name, query, traffic, disorder: None, make_gen }
     }
 
     /// Instantiate the input stream (seeded).
     pub fn make_stream(&self, seed: u64) -> InputStream {
-        InputStream::new((self.make_gen)(seed), self.traffic, seed)
+        let stream = InputStream::new((self.make_gen)(seed), self.traffic, seed);
+        match self.disorder {
+            Some(d) => stream.with_disorder(d),
+            None => stream,
+        }
     }
 
     /// Override traffic (the §V experiments switch constant ↔ random).
     pub fn with_traffic(mut self, traffic: Traffic) -> Workload {
         self.traffic = traffic;
+        self
+    }
+
+    /// Inject out-of-order arrival: datasets keep their event times but
+    /// may be delayed on the wire (event-time experiments).
+    pub fn with_disorder(mut self, disorder: Disorder) -> Workload {
+        self.disorder = Some(disorder);
         self
     }
 }

@@ -502,6 +502,35 @@ fn without_wal_dir_behavior_is_unchanged_and_unreported() {
 }
 
 #[test]
+fn stream_rebase_preserves_lifetime_ingest_accounting() {
+    // Recovery fast-forwards a fresh incarnation's stream to the
+    // recovered horizon (a rebase). Lifetime ingest counters must
+    // survive it — they account the logical stream, not one
+    // incarnation. (The pre-fix code zeroed them in `fast_forward`,
+    // undercounting every post-crash ingest report.)
+    let mut stream = ident_workload("duracct", 10).make_stream(11);
+    let polled = stream.poll(Time::from_secs_f64(5.0));
+    assert_eq!(polled.len(), 6); // ticks 0..=5
+    let (n_before, b_before) = stream.totals();
+    assert_eq!(n_before, 6);
+
+    // Crash: the next incarnation's stream fast-forwards through
+    // everything the checkpoint ∪ WAL horizon covers...
+    let mut resumed = ident_workload("duracct", 10).make_stream(11);
+    resumed.fast_forward(Time::from_secs_f64(5.0));
+    let (n_mid, b_mid) = resumed.totals();
+    assert_eq!(n_mid, 6, "rebase dropped consumed-tick accounting");
+    assert_eq!(b_mid, b_before, "rebase dropped consumed-byte accounting");
+
+    // ...and post-resume ingest extends the same lifetime count.
+    let more = resumed.poll(Time::from_secs_f64(2.0));
+    assert!(!more.is_empty());
+    let (n_after, b_after) = resumed.totals();
+    assert_eq!(n_after, n_mid + more.len() as u64);
+    assert!(b_after > b_mid);
+}
+
+#[test]
 fn clean_restart_after_graceful_run_replays_nothing() {
     // No crash: run to completion, then restart. Everything processed
     // is checkpointed (the WAL is truncated on checkpoint), so the

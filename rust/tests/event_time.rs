@@ -1,0 +1,385 @@
+//! Differential event-time harness.
+//!
+//! Two layers pin the watermark semantics:
+//!
+//! * **Engine level** — window state must be *arrival-permutation
+//!   invariant*: pushing the same datasets in any arrival order within
+//!   the allowed lateness yields bit-identical snapshots at every
+//!   watermark boundary (`snapshot_up_to`) and identical eviction
+//!   results. This is the exact form of the "reordered arrivals →
+//!   identical windowed outputs" contract, free of admission batching
+//!   noise.
+//! * **Session level** — the same seeded workload run in-order and
+//!   disordered (the disorder RNG is separate, so the generated
+//!   datasets are identical, only arrival is permuted): with lateness
+//!   covering the maximum delay nothing is late and per-tick outputs
+//!   agree; with lateness below it, `Drop` and `SideOutput` runs have
+//!   bit-identical primary outputs, the side output receives exactly
+//!   the rows `Drop` discards, and kept ∪ late tiles the in-order
+//!   oracle tick-for-tick (each tick accounted exactly once);
+//!   `Recompute` loses nothing.
+
+use lmstream::config::{Config, LatePolicy, Mode};
+use lmstream::engine::chunked::ChunkedBatch;
+use lmstream::engine::column::{Column, ColumnBatch, Field, Schema};
+use lmstream::engine::dataset::Dataset;
+use lmstream::engine::sink::Sink;
+use lmstream::engine::window::{WindowSpec, WindowState};
+use lmstream::error::Result;
+use lmstream::query::QueryBuilder;
+use lmstream::session::Session;
+use lmstream::sim::Time;
+use lmstream::source::stream::{Disorder, RowGen};
+use lmstream::source::traffic::Traffic;
+use lmstream::workloads::Workload;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+// ================= engine level =================
+
+fn ds(id: u64, event_secs: f64, arrival_secs: f64) -> Dataset {
+    let schema = Schema::new(vec![Field::f32("x")]);
+    let batch = ColumnBatch::new(
+        schema,
+        vec![Column::F32(vec![id as f32, id as f32 + 0.5].into())],
+    )
+    .unwrap();
+    let bytes = batch.alloc_bytes();
+    Dataset {
+        id,
+        created_at: Time::from_secs_f64(arrival_secs),
+        event_time: Time::from_secs_f64(event_secs),
+        batch,
+        wire_bytes: bytes,
+    }
+}
+
+/// Deterministic arrival permutations of `n` datasets, each bounded by a
+/// maximum displacement (the "within allowed lateness" constraint).
+fn permutations(n: usize) -> Vec<Vec<usize>> {
+    let identity: Vec<usize> = (0..n).collect();
+    // Adjacent swaps (displacement 1).
+    let mut pairs = identity.clone();
+    for i in (0..n - 1).step_by(2) {
+        pairs.swap(i, i + 1);
+    }
+    // Block reversal of each run of 3 (displacement 2).
+    let mut blocks = identity.clone();
+    for start in (0..n).step_by(3) {
+        let end = (start + 3).min(n);
+        blocks[start..end].reverse();
+    }
+    // One straggler: the first dataset arrives 4 positions late.
+    let mut straggler = identity.clone();
+    let d = straggler.remove(0);
+    straggler.insert(4.min(straggler.len()), d);
+    vec![identity, pairs, blocks, straggler]
+}
+
+#[test]
+fn window_state_is_arrival_permutation_invariant() {
+    let spec = WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5));
+    let n = 12;
+    // In-order reference: event == arrival, one dataset per second.
+    let mut reference = WindowState::new();
+    for i in 0..n {
+        reference.push(&[ds(i as u64, i as f64, i as f64)]);
+    }
+    for (pi, perm) in permutations(n).into_iter().enumerate() {
+        let mut state = WindowState::new();
+        for (arrival_slot, &i) in perm.iter().enumerate() {
+            // The permuted run delivers dataset `i` at arrival slot
+            // `arrival_slot`, keeping its original event time.
+            state.push(&[ds(i as u64, i as f64, arrival_slot as f64)]);
+        }
+        assert_eq!(state.len(), reference.len(), "perm {pi}");
+        // Bit-identical snapshots at every watermark boundary, full and
+        // prefix-bounded.
+        let full_a = reference.snapshot_chunks().unwrap().unwrap();
+        let full_b = state.snapshot_chunks().unwrap().unwrap();
+        assert_eq!(full_a, full_b, "perm {pi}: full snapshots diverge");
+        for boundary in 0..n {
+            let t = Time::from_secs_f64(boundary as f64);
+            let a = reference.snapshot_up_to(t).unwrap();
+            let b = state.snapshot_up_to(t).unwrap();
+            assert_eq!(a, b, "perm {pi}: snapshot_up_to({boundary}s) diverges");
+        }
+        // Watermark-driven eviction leaves identical states too.
+        let mut ev_a = reference_clone(&spec, (0..n).map(|i| (i, i)).collect());
+        let mut ev_b = reference_clone(
+            &spec,
+            perm.iter().enumerate().map(|(slot, &i)| (i, slot)).collect(),
+        );
+        let wm = Time::from_secs_f64(34.0);
+        ev_a.evict(wm, &spec);
+        ev_b.evict(wm, &spec);
+        assert_eq!(
+            ev_a.snapshot_chunks().unwrap(),
+            ev_b.snapshot_chunks().unwrap(),
+            "perm {pi}: post-eviction states diverge"
+        );
+    }
+}
+
+/// Fresh state from (dataset index, arrival slot) pairs in arrival order.
+fn reference_clone(_spec: &WindowSpec, order: Vec<(usize, usize)>) -> WindowState {
+    let mut st = WindowState::new();
+    let mut arrival_sorted = order;
+    arrival_sorted.sort_by_key(|&(_, slot)| slot);
+    for (i, slot) in arrival_sorted {
+        st.push(&[ds(i as u64, i as f64, slot as f64)]);
+    }
+    st
+}
+
+// ================= session level =================
+
+/// Identity-stamped rows: (t = tick, v = tick*10_000 + i), unique per
+/// tick, exact in f32 for the ranges used.
+struct IdentGen;
+
+impl RowGen for IdentGen {
+    fn generate(&mut self, tick: u64, rows: usize) -> ColumnBatch {
+        let schema = Schema::new(vec![Field::f32("t"), Field::f32("v")]);
+        let t: Vec<f32> = vec![tick as f32; rows];
+        let v: Vec<f32> =
+            (0..rows).map(|i| (tick * 10_000 + i as u64) as f32).collect();
+        ColumnBatch::new(schema, vec![Column::F32(t.into()), Column::F32(v.into())])
+            .unwrap()
+    }
+}
+
+fn make_gen(_seed: u64) -> Box<dyn RowGen> {
+    Box::new(IdentGen)
+}
+
+fn ident_workload(name: &'static str, rows_per_tick: usize) -> Workload {
+    let query = QueryBuilder::scan(name).select(&["t", "v"]).build().unwrap();
+    Workload::new(name, query, Traffic::Constant { rows: rows_per_tick }, make_gen)
+}
+
+struct RecordingSink {
+    rows: Arc<Mutex<Vec<(f32, f32)>>>,
+}
+
+impl Sink for RecordingSink {
+    fn deliver(&mut self, _i: usize, result: &ChunkedBatch, _t: Time) -> Result<()> {
+        let b = result.coalesce();
+        let t = b.column("t").unwrap().as_f32().unwrap();
+        let v = b.column("v").unwrap().as_f32().unwrap();
+        let mut rows = self.rows.lock().unwrap();
+        for i in 0..b.rows() {
+            if b.validity.is_live(i) {
+                rows.push((t[i], v[i]));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn event_cfg(policy: LatePolicy, lateness: Duration) -> Config {
+    Config {
+        mode: Mode::LmStream,
+        allowed_lateness: Some(lateness),
+        late_policy: policy,
+        seed: 11,
+        ..Config::default()
+    }
+}
+
+struct SessionRun {
+    primary: Vec<(f32, f32)>,
+    side: Vec<(f32, f32)>,
+    late_rows: usize,
+    watermark: Option<Time>,
+}
+
+fn run_session(workload: Workload, cfg: Config, duration_secs: u64) -> SessionRun {
+    let primary = Arc::new(Mutex::new(Vec::new()));
+    let side = Arc::new(Mutex::new(Vec::new()));
+    let mut session = Session::new(cfg).unwrap();
+    let qid = session.register(workload).unwrap();
+    session
+        .set_sink(qid, Box::new(RecordingSink { rows: Arc::clone(&primary) }))
+        .unwrap();
+    session
+        .set_late_sink(qid, Box::new(RecordingSink { rows: Arc::clone(&side) }))
+        .unwrap();
+    let results = session.run(Duration::from_secs(duration_secs)).unwrap();
+    let late_rows: usize = results[0].batches.iter().map(|b| b.late_rows).sum();
+    let watermark = session.watermarks()[0];
+    let p = primary.lock().unwrap().clone();
+    let s = side.lock().unwrap().clone();
+    SessionRun { primary: p, side: s, late_rows, watermark }
+}
+
+/// Tick set of a delivered row stream (constant traffic: dataset == tick).
+fn ticks(rows: &[(f32, f32)]) -> BTreeSet<u64> {
+    rows.iter().map(|&(t, _)| t as u64).collect()
+}
+
+/// Rows grouped per tick, value-sorted (layout-independent content).
+fn per_tick(rows: &[(f32, f32)]) -> BTreeMap<u64, Vec<(f32, f32)>> {
+    let mut m: BTreeMap<u64, Vec<(f32, f32)>> = BTreeMap::new();
+    for &(t, v) in rows {
+        m.entry(t as u64).or_default().push((t, v));
+    }
+    for v in m.values_mut() {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+    m
+}
+
+#[test]
+fn lateness_covering_max_delay_loses_nothing() {
+    // Disorder bounded by 3 s, allowed lateness 3 s: a dataset's event
+    // can trail the watermark by at most the max delay, so nothing is
+    // ever classified late, and every tick both runs consumed carries
+    // identical rows.
+    let disorder = Disorder::new(0.5, Duration::from_secs(3));
+    let lateness = Duration::from_secs(3);
+    let ordered = run_session(
+        ident_workload("etcov", 8),
+        event_cfg(LatePolicy::Drop, lateness),
+        60,
+    );
+    let disordered = run_session(
+        ident_workload("etcov", 8).with_disorder(disorder),
+        event_cfg(LatePolicy::Drop, lateness),
+        60,
+    );
+    assert_eq!(ordered.late_rows, 0, "in-order run classified data late");
+    assert_eq!(disordered.late_rows, 0, "lateness >= max delay must cover all");
+    assert!(disordered.side.is_empty());
+    assert!(ordered.watermark.is_some() && disordered.watermark.is_some());
+
+    let po = per_tick(&ordered.primary);
+    let pd = per_tick(&disordered.primary);
+    assert!(!po.is_empty() && !pd.is_empty());
+    // Common ticks: bit-identical content (the reordering never
+    // corrupted or split a dataset).
+    for (tick, rows) in &pd {
+        if let Some(reference) = po.get(tick) {
+            assert_eq!(rows, reference, "tick {tick}: rows diverge");
+        }
+    }
+    // Coverage: away from the in-flight tail, both runs delivered every
+    // tick — no interior holes from reordering.
+    let hi = *po.keys().max().unwrap().min(pd.keys().max().unwrap());
+    assert!(hi >= 20, "runs too short to compare interiors (max common {hi})");
+    for t in 0..hi.saturating_sub(15) {
+        assert!(po.contains_key(&t), "ordered run missing interior tick {t}");
+        assert!(pd.contains_key(&t), "disordered run missing interior tick {t}");
+    }
+}
+
+#[test]
+fn drop_and_side_output_tile_the_oracle() {
+    // Lateness far below the max delay: stragglers are classified late.
+    // `Drop` and `SideOutput` runs see identical streams (same seed) so
+    // classification is identical; they differ only in where late rows
+    // go.
+    let disorder = Disorder::new(0.9, Duration::from_secs(10));
+    let lateness = Duration::ZERO;
+    let dropped = run_session(
+        ident_workload("ettile", 8).with_disorder(disorder),
+        event_cfg(LatePolicy::Drop, lateness),
+        90,
+    );
+    let sided = run_session(
+        ident_workload("ettile", 8).with_disorder(disorder),
+        event_cfg(LatePolicy::SideOutput, lateness),
+        90,
+    );
+
+    // Identical primary outputs bit-for-bit: the policy moves late rows
+    // around, it never changes what the pipeline computes on-time.
+    assert_eq!(dropped.primary, sided.primary, "late policy leaked into primary");
+    assert!(dropped.side.is_empty(), "Drop must not side-route");
+
+    // The side output receives exactly what Drop discards: with heavy
+    // disorder some rows must be late, each late dataset lands in the
+    // side output whole, and the per-record accounting (flushed on the
+    // next admitted batch) never exceeds what the sink observed.
+    assert!(!sided.side.is_empty(), "no late data under heavy disorder");
+    assert!(sided.late_rows > 0, "late rows never reached BatchRecord");
+    assert!(
+        sided.late_rows <= sided.side.len(),
+        "accounted late rows ({}) exceed side-output rows ({})",
+        sided.late_rows,
+        sided.side.len()
+    );
+    assert_eq!(
+        dropped.late_rows, sided.late_rows,
+        "same stream, same classification: late accounting must agree"
+    );
+
+    // Tiling: kept ∪ side is duplicate-free and, away from the
+    // in-flight tail, covers every tick exactly once — dropped ∪
+    // side-output tiles the in-order oracle.
+    let kept = ticks(&sided.primary);
+    let late = ticks(&sided.side);
+    assert!(kept.is_disjoint(&late), "a tick was both kept and side-routed");
+    let pk = per_tick(&sided.primary);
+    let pl = per_tick(&sided.side);
+    let hi = *kept.union(&late).max().unwrap();
+    assert!(hi >= 25, "run too short (max tick {hi})");
+    for t in 0..hi.saturating_sub(20) {
+        let in_kept = pk.get(&t);
+        let in_late = pl.get(&t);
+        assert!(
+            in_kept.is_some() ^ in_late.is_some(),
+            "tick {t} not accounted exactly once (kept: {}, late: {})",
+            in_kept.is_some(),
+            in_late.is_some()
+        );
+        // Whole datasets: 8 rows per tick wherever it landed.
+        let rows = in_kept.or(in_late).unwrap();
+        assert_eq!(rows.len(), 8, "tick {t} split across outputs");
+    }
+}
+
+#[test]
+fn recompute_policy_loses_nothing() {
+    // Same heavy disorder, Recompute: late data flows through admission
+    // (its window is still open under the lateness-lagged eviction
+    // horizon), so every interior tick is delivered exactly once.
+    let disorder = Disorder::new(0.9, Duration::from_secs(10));
+    let run = run_session(
+        ident_workload("etrec", 8).with_disorder(disorder),
+        event_cfg(LatePolicy::Recompute, Duration::ZERO),
+        90,
+    );
+    assert!(run.side.is_empty(), "Recompute must not side-route");
+    assert!(run.late_rows > 0, "heavy disorder must classify rows late");
+    let pt = per_tick(&run.primary);
+    let hi = *pt.keys().max().unwrap();
+    assert!(hi >= 25, "run too short (max tick {hi})");
+    for t in 0..hi.saturating_sub(20) {
+        let rows = pt.get(&t).unwrap_or_else(|| panic!("tick {t} lost"));
+        assert_eq!(rows.len(), 8, "tick {t} duplicated or split");
+    }
+}
+
+#[test]
+fn event_time_off_reports_no_watermarks_or_late_rows() {
+    let cfg = Config { mode: Mode::LmStream, seed: 11, ..Config::default() };
+    let primary = Arc::new(Mutex::new(Vec::new()));
+    let mut session = Session::new(cfg).unwrap();
+    let disorder = Disorder::new(0.5, Duration::from_secs(3));
+    let qid = session
+        .register(ident_workload("etoff", 8).with_disorder(disorder))
+        .unwrap();
+    session
+        .set_sink(qid, Box::new(RecordingSink { rows: Arc::clone(&primary) }))
+        .unwrap();
+    let results = session.run(Duration::from_secs(30)).unwrap();
+    assert!(session.watermarks().iter().all(|w| w.is_none()));
+    assert!(results[0].batches.iter().all(|b| b.late_rows == 0));
+    assert!(results[0]
+        .batches
+        .iter()
+        .all(|b| b.watermark_lag == Duration::ZERO));
+    assert!(!primary.lock().unwrap().is_empty());
+}
