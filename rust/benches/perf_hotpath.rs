@@ -13,9 +13,15 @@
 //! appends must be independent of total row count), and end-to-end
 //! `Session::run` micro-batch loops (single- and multi-query).
 //!
-//! Emits `BENCH_hotpath.json` (machine-readable, schema_version 3) into
+//! Emits `BENCH_hotpath.json` (machine-readable, schema_version 4) into
 //! the working directory — the perf-trajectory artifact CI uploads and
 //! gates against the committed baseline (`tools/bench_gate.py`).
+//!
+//! Schema 4 adds the operator-fusion and encoded-state ratios: a fused
+//! scan→filter→affine→select chain must run no slower than its staged
+//! member kernels (`fused_vs_staged_ratio <= 1.0`) and cold-encoded
+//! window state must sit strictly below its raw footprint on an
+//! RLE-friendly workload (`encoded_window_bytes_ratio < 1.0`).
 
 use lmstream::cluster::DeviceTopology;
 use lmstream::config::{Config, Mode};
@@ -24,12 +30,15 @@ use lmstream::coordinator::optimizer::{fit_inflection, FitJob, HistoryPoint};
 use lmstream::coordinator::planner::{map_device, SizeEstimator};
 use lmstream::coordinator::schedule::{plan_joint, QueryCandidate};
 use lmstream::devices::model::DeviceModel;
+use lmstream::devices::Device;
 use lmstream::engine::chunked::ChunkedBatch;
-use lmstream::engine::column::ColumnBatch;
+use lmstream::engine::column::{Column, ColumnBatch, Field, Schema};
 use lmstream::engine::dataset::{Dataset, MicroBatch};
 use lmstream::engine::ops;
 use lmstream::engine::partition;
 use lmstream::engine::window::{WindowSpec, WindowState};
+use lmstream::query::physical::PhysicalPlan;
+use lmstream::query::{fuse, QueryBuilder};
 use lmstream::session::Session;
 use lmstream::sim::Time;
 use lmstream::source::stream::RowGen;
@@ -70,6 +79,24 @@ const SNAP_CHUNKED: &str = "window snapshot chunked (30k-row state)";
 const SNAP_FRESH: &str = "window snapshot fresh concat (30k-row state)";
 const UNION_SMALL: &str = "union fan-in 8-way (10k rows/branch)";
 const UNION_BIG: &str = "union fan-in 8-way (80k rows/branch)";
+const CHAIN_STAGED: &str = "staged scan>filter>affine>select (100k rows, 8 chunks)";
+const CHAIN_FUSED: &str = "fused scan>filter>affine>select (100k rows, 8 chunks)";
+
+/// An RLE-friendly batch: long constant runs in every column, the state
+/// shape the cold-chunk codecs are built for (sensor plateaus, repeated
+/// keys).
+fn rle_friendly_batch(id: u64, rows: usize) -> ColumnBatch {
+    let schema = Schema::new(vec![Field::f32("v"), Field::f32("w"), Field::i32("k")]);
+    ColumnBatch::new(
+        schema,
+        vec![
+            Column::F32(vec![(id % 5) as f32; rows].into()),
+            Column::F32(vec![0.5; rows].into()),
+            Column::I32(vec![(id % 3) as i32; rows].into()),
+        ],
+    )
+    .expect("consistent batch")
+}
 
 fn main() {
     let mut b = Bencher::default();
@@ -215,6 +242,58 @@ fn main() {
     });
     b.bench("sort 10k rows", || ops::sort_by(&batch, "speed", false).unwrap());
 
+    // Operator fusion: the same scan>filter>affine>select chain run as
+    // staged member kernels (each materializing its intermediate) vs.
+    // one fused traversal per chunk. The fused spec comes out of the
+    // real fusion pass, so this measures exactly what the executor runs.
+    let fq = QueryBuilder::scan("fused-bench")
+        .window(WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5)))
+        .filter("speed", ops::Predicate::Ge(40.0))
+        .project_affine("speed", "speed", 0.5, 0.5, "eff")
+        .select(&["vehicle", "eff"])
+        .build()
+        .expect("fusable chain");
+    let fplan = fuse::fuse(&fq, &PhysicalPlan::uniform(&fq, Device::Cpu));
+    assert_eq!(fplan.groups.len(), 1, "chain must fuse into one group");
+    let fspec = &fplan.groups[0].spec;
+    let mut cgen = LinearRoadGen::new(13);
+    let mut fin = ChunkedBatch::from_batch(cgen.generate(0, 12_500));
+    for i in 1..8u64 {
+        fin.push(cgen.generate(i, 12_500)).expect("same schema");
+    }
+    b.bench(CHAIN_STAGED, || {
+        let a = ops::filter_chunks(&fin, "speed", ops::Predicate::Ge(40.0)).unwrap();
+        let c = ops::project_affine_chunks(&a, "speed", "speed", 0.5, 0.5, "eff").unwrap();
+        ops::project_select_chunks(&c, &["vehicle", "eff"]).unwrap().rows()
+    });
+    b.bench(CHAIN_FUSED, || {
+        ops::fused::run_chunks(&fin, fspec).unwrap().0.rows()
+    });
+
+    // Encoded window state: push well past the hot threshold so most
+    // chunks live cold-encoded, then compare the resident footprint to
+    // what plain chunks would hold. The snapshot stays exact (decode is
+    // lazy and cached) — only the resident bytes shrink.
+    let mut ew = WindowState::new();
+    for i in 0..32u64 {
+        ew.push(&[dataset_at(i, i as f64, rle_friendly_batch(i, 4096))]);
+    }
+    let enc_ratio = if ew.state_bytes_raw() > 0 {
+        ew.state_bytes_encoded() as f64 / ew.state_bytes_raw() as f64
+    } else {
+        1.0
+    };
+    println!(
+        "encoded window footprint: {} of {} raw bytes ({:.3}x, {} cold chunks)",
+        ew.state_bytes_encoded(),
+        ew.state_bytes_raw(),
+        enc_ratio,
+        ew.cold_chunks()
+    );
+    b.bench("window snapshot over cold-encoded state (32 chunks)", || {
+        ew.snapshot_chunks().expect("snapshot").expect("non-empty").rows()
+    });
+
     // Window snapshot: steady-state per-batch cycle (evict + push 1k
     // rows + snapshot) over a ~30k-row window. The chunk-list snapshot
     // pays O(#datasets) Arc bumps; the fresh-concat baseline pays
@@ -285,6 +364,11 @@ fn main() {
     let union_scaling = if union_small > 0.0 { union_big / union_small } else { 0.0 };
     println!("union fan-in scaling (80k/branch vs 10k/branch): {union_scaling:.2}x");
 
+    let staged_chain = b.mean_of(CHAIN_STAGED);
+    let fused_chain = b.mean_of(CHAIN_FUSED);
+    let fused_ratio = if staged_chain > 0.0 { fused_chain / staged_chain } else { 0.0 };
+    println!("fused / staged chain ratio: {fused_ratio:.3}x");
+
     // Machine-readable trajectory point.
     let row = |r: &BenchResult| {
         json::obj(vec![
@@ -299,10 +383,12 @@ fn main() {
         b.results().iter().chain(e2e.results().iter()).map(row).collect();
     let doc = json::obj(vec![
         ("bench", json::s("perf_hotpath")),
-        ("schema_version", json::num(3.0)),
+        ("schema_version", json::num(4.0)),
         ("window_snapshot_speedup", json::num(speedup)),
         ("union_fanin_scaling", json::num(union_scaling)),
         ("coschedule_makespan_ratio", json::num(cosched_ratio)),
+        ("fused_vs_staged_ratio", json::num(fused_ratio)),
+        ("encoded_window_bytes_ratio", json::num(enc_ratio)),
         ("results", json::arr(results)),
     ]);
     std::fs::write("BENCH_hotpath.json", doc.render() + "\n")
@@ -327,6 +413,19 @@ fn main() {
     assert!(
         cosched_ratio > 0.0 && cosched_ratio <= 1.0 + 1e-6,
         "co-scheduled makespan must be <= independent-plan makespan, ratio {cosched_ratio:.3}"
+    );
+    // Fusion must never lose to staged execution: one traversal per
+    // chunk with no intermediate Validity/column materialization has
+    // strictly less work — at 100k rows the margin dwarfs timer noise.
+    assert!(
+        fused_ratio > 0.0 && fused_ratio <= 1.0,
+        "fused chain must run no slower than staged members, ratio {fused_ratio:.3}"
+    );
+    // Cold-encoded state must shrink strictly below raw on this
+    // RLE-friendly workload (constant runs compress to per-run pairs).
+    assert!(
+        enc_ratio > 0.0 && enc_ratio < 1.0,
+        "encoded window state must be strictly smaller than raw, ratio {enc_ratio:.3}"
     );
     println!("perf_hotpath OK");
 }

@@ -18,7 +18,8 @@ use crate::devices::model::DeviceModel;
 use crate::engine::chunked::ChunkedBatch;
 use crate::error::{Error, Result};
 use crate::query::dag::{OpKind, Query};
-use crate::query::exec::{self, ExecEnv, ExecOutcome, GpuTimeline};
+use crate::query::exec::{self, ExecEnv, ExecOpts, ExecOutcome, GpuTimeline, NoContention};
+use crate::query::fuse;
 use crate::query::physical::PhysicalPlan;
 use crate::runtime::client::Runtime;
 use std::sync::Arc;
@@ -123,8 +124,44 @@ pub fn execute_on_cluster_faulted(
     model: &DeviceModel,
     backend: ExecBackend,
     runtime: Option<&Runtime>,
+    timelines: Option<&mut [GpuTimeline]>,
+    faults: &RoundFaults,
+) -> Result<ClusterOutcome> {
+    execute_on_cluster_opts(
+        cluster,
+        query,
+        plan,
+        input,
+        window,
+        model,
+        backend,
+        runtime,
+        timelines,
+        faults,
+        &ExecOpts::default(),
+    )
+}
+
+/// [`execute_on_cluster_faulted`] plus [`ExecOpts`]: each executor runs
+/// its share through `exec::execute_with_opts`, so fused chains execute
+/// as single traversals per share and the encoded window-aux override
+/// prices every executor's broadcast build side identically. A
+/// GPU-demoted share re-derives its fusion sidecar from the demoted
+/// plan — the caller's sidecar describes devices that share no longer
+/// uses.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_on_cluster_opts(
+    cluster: &ClusterSpec,
+    query: &Query,
+    plan: &PhysicalPlan,
+    input: impl Into<ChunkedBatch>,
+    window: Option<&ChunkedBatch>,
+    model: &DeviceModel,
+    backend: ExecBackend,
+    runtime: Option<&Runtime>,
     mut timelines: Option<&mut [GpuTimeline]>,
     faults: &RoundFaults,
+    opts: &ExecOpts,
 ) -> Result<ClusterOutcome> {
     let input = input.into();
     cluster.validate()?;
@@ -181,18 +218,26 @@ pub fn execute_on_cluster_faulted(
             runtime,
         };
         let demoted;
+        let demoted_fused;
+        let mut share_opts = ExecOpts { fused: opts.fused, aux: opts.aux };
         let share_plan = if faults.cpu_only.contains(&e) {
             demoted = plan.demoted_to_cpu();
+            if opts.fused.is_some() {
+                demoted_fused = fuse::fuse(query, &demoted);
+                share_opts.fused = Some(&demoted_fused);
+            }
             &demoted
         } else {
             plan
         };
-        let out = match timelines.as_deref_mut() {
-            Some(tl) => exec::execute_with_occupancy(
-                query, share_plan, share, window, &env, &mut tl[e],
-            )?,
-            None => exec::execute(query, share_plan, share, window, &env)?,
+        let mut idle = NoContention;
+        let occupancy: &mut dyn exec::GpuOccupancy = match timelines.as_deref_mut() {
+            Some(tl) => &mut tl[e],
+            None => &mut idle,
         };
+        let out = exec::execute_with_opts(
+            query, share_plan, share, window, &env, occupancy, &share_opts,
+        )?;
         // Charge this executor's shuffle exchanges.
         if e_count > 1.0 {
             for t in &out.traces {

@@ -67,6 +67,19 @@ pub struct BatchRecord {
     /// batch's window logic operated under. Zero when no event has been
     /// seen yet.
     pub watermark_lag: Duration,
+    /// Window-state footprint across this query's state at admission,
+    /// as if every chunk were held plain (decoded) — the denominator of
+    /// the encoded-state ratio. Zero for stateless queries.
+    pub state_bytes_raw: usize,
+    /// Actual resident window-state footprint: hot chunks plain + cold
+    /// chunks at their RLE/dict/delta-encoded size
+    /// (`engine::encode`). `state_bytes_encoded ≤ state_bytes_raw`;
+    /// equality means nothing was cold (or nothing compressed).
+    pub state_bytes_encoded: usize,
+    /// Chunks the round's fused chains skipped outright because
+    /// per-block min/max stats proved their filter predicates
+    /// unsatisfiable. Zero when fusion is off or nothing pruned.
+    pub pruned_chunks: usize,
 }
 
 /// Per-executor fault counters accumulated over a run (populated by
@@ -271,6 +284,9 @@ mod tests {
             degraded: false,
             late_rows: 0,
             watermark_lag: Duration::ZERO,
+            state_bytes_raw: 0,
+            state_bytes_encoded: 0,
+            pruned_chunks: 0,
         }
     }
 

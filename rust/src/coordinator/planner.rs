@@ -241,6 +241,20 @@ pub struct OpCandidate {
 /// seeded by the micro-batch's `input_chunks`. Pure — no device is
 /// chosen here.
 ///
+/// Costing stays strictly **per logical op** even when downstream
+/// layers fuse: the fusion pass ([`crate::query::fuse`]) never changes
+/// the byte flow an op processes — a fused chain's virtual
+/// intermediates are defined to equal the staged sizes — so these
+/// vectors are correct inputs for fused and staged execution alike.
+/// Consumers that must see a fused chain as *one* unit (the cross-query
+/// scheduler's GPU reservations) merge at the chain layer via
+/// [`crate::query::fuse::fusable_runs`] rather than asking for merged
+/// candidates here; `candidates.len() == query.len()` is an invariant.
+/// Likewise, window-state aux bytes enter through the scheduler's
+/// `QueryCandidate` (and the executor's `ExecOpts::aux`), both carrying
+/// the *encoded* footprint, so the Eq. 9 aux term prices what actually
+/// crosses the bus.
+///
 /// Errors with [`Error::Plan`] on an empty or cyclic query.
 pub fn op_candidates(
     query: &Query,

@@ -32,12 +32,22 @@
 //!    never letting the predicted makespan grow;
 //! 4. choose the **grant order**: FIFO registration order is just one
 //!    permutation of the round's queries on the per-executor timelines.
-//!    A shortest-GPU-segment-first pass (queries sorted by total device
-//!    busy time, ascending) is evaluated against FIFO for every
-//!    candidate assignment, and the better order is emitted as
+//!    Two list-scheduling generators are evaluated against FIFO for
+//!    every candidate assignment — shortest-GPU-segment-first (queries
+//!    sorted by total device busy time, ascending) and
+//!    longest-tail-last (queries with the longest trailing CPU tail
+//!    granted the device first, so their tails drain overlapped with
+//!    everyone else's device time) — and the argmin is emitted as
 //!    [`Prediction::order`] — the session executes the round in that
 //!    order, so the executor's FIFO-in-request-order timelines realize
 //!    exactly the predicted serialization.
+//!
+//! Structurally-fusable runs ([`crate::query::fuse::fusable_runs`])
+//! whose members share a device under the assignment being evaluated
+//! are costed as **one** op: a single device reservation carrying the
+//! chain's combined row/byte/chunk flow (entering staging at the head,
+//! leaving transfer at the tail), mirroring the fused execution the
+//! session will actually run.
 //!
 //! The result is a [`JointPlan`]: one [`PhysicalPlan`] per query plus a
 //! [`Prediction`] with the **serialized per-executor GPU timelines**
@@ -258,6 +268,12 @@ struct ChainCtx {
     /// cost with no segments or transfers — the predictive twin of the
     /// executor running a CPU-demoted share plan.
     gpu_ok: Vec<bool>,
+    /// Structural fusable runs of the logical DAG
+    /// ([`crate::query::fuse::fusable_runs`]): adjacent run members that
+    /// share a device under the assignment being evaluated execute as
+    /// one fused traversal, so the chain layout books them as ONE device
+    /// reservation with the members' combined busy time.
+    fused_run: Vec<Option<usize>>,
 }
 
 /// One (query, executor) predicted execution shape under a device
@@ -357,7 +373,14 @@ fn chain_ctx(qc: &QueryCandidate, model: &DeviceModel, topo: &DeviceTopology) ->
                 .collect()
         })
         .collect();
-    ChainCtx { order, inputs, consumers, secs, gpu_ok: topo.gpu_ok.clone() }
+    ChainCtx {
+        order,
+        inputs,
+        consumers,
+        secs,
+        gpu_ok: topo.gpu_ok.clone(),
+        fused_run: crate::query::fuse::fusable_runs(qc.query),
+    }
 }
 
 /// Lay one query's ops out on executor `e`'s local timeline under
@@ -386,7 +409,23 @@ fn chain(ctx: &ChainCtx, e: usize, devices: &[Device], batch_fixed: f64) -> Chai
                 if leaving {
                     busy += secs[o].trans_out;
                 }
-                segments.push((cpu_acc, busy, o));
+                // Members of a structurally-fusable run that share the
+                // device execute as ONE fused traversal: extend the
+                // run's open reservation (they are adjacent — no CPU
+                // between — so this is time-equivalent to back-to-back
+                // slots, and the timeline shows the chain as one op).
+                let fused_adjacent = cpu_acc == 0.0
+                    && ctx.fused_run[o].is_some()
+                    && segments.last().is_some_and(|&(_, b, prev)| {
+                        b > 0.0
+                            && prev != usize::MAX
+                            && ctx.fused_run[prev] == ctx.fused_run[o]
+                    });
+                if fused_adjacent {
+                    segments.last_mut().expect("checked above").1 += busy;
+                } else {
+                    segments.push((cpu_acc, busy, o));
+                }
                 cpu_acc = 0.0;
             }
         }
@@ -467,28 +506,52 @@ fn shortest_first_order(chains: &[Vec<Chain>]) -> Vec<usize> {
     order
 }
 
-/// Evaluate an assignment's chains: FIFO always; when `reorder`, also
-/// shortest-GPU-first, returning the better (makespan, then Σ
-/// completions; FIFO wins ties).
+/// Longest-tail-last list-scheduling order: queries granted the device
+/// in descending order of their trailing CPU tail (the work after the
+/// last reservation), ties keeping registration order. Early device
+/// grants let the long tails drain *last*, overlapped with everyone
+/// else's device time instead of idling serialized behind it — the
+/// classic list-scheduling complement to shortest-first, which wins
+/// when tails (not device segments) dominate completion.
+fn longest_tail_last_order(chains: &[Vec<Chain>]) -> Vec<usize> {
+    let tail: Vec<f64> = chains
+        .iter()
+        .map(|per_exec| {
+            per_exec
+                .iter()
+                .map(|c| c.segments.last().map_or(0.0, |&(cpu, _, _)| cpu))
+                .fold(0.0, f64::max)
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..chains.len()).collect();
+    order.sort_by(|&a, &b| tail[b].total_cmp(&tail[a]).then(a.cmp(&b)));
+    order
+}
+
+/// Evaluate an assignment's chains: FIFO always; when `reorder`, the
+/// argmin additionally spans shortest-GPU-first and longest-tail-last
+/// grants (makespan, then Σ completions; FIFO wins ties, and earlier
+/// generators win ties against later ones).
 fn evaluate(chains: &[Vec<Chain>], num_execs: usize, reorder: bool) -> (Sim, Vec<usize>) {
     let fifo: Vec<usize> = (0..chains.len()).collect();
     let sim_fifo = simulate(chains, num_execs, &fifo);
+    let mut best = (sim_fifo, fifo);
     if !reorder {
-        return (sim_fifo, fifo);
+        return best;
     }
-    let alt = shortest_first_order(chains);
-    if alt == fifo {
-        return (sim_fifo, fifo);
+    for alt in [shortest_first_order(chains), longest_tail_last_order(chains)] {
+        if alt == best.1 {
+            continue;
+        }
+        let sim_alt = simulate(chains, num_execs, &alt);
+        if sim_alt.makespan < best.0.makespan - EPS
+            || (sim_alt.makespan <= best.0.makespan + EPS
+                && total(&sim_alt.completions) < total(&best.0.completions) - EPS)
+        {
+            best = (sim_alt, alt);
+        }
     }
-    let sim_alt = simulate(chains, num_execs, &alt);
-    if sim_alt.makespan < sim_fifo.makespan - EPS
-        || (sim_alt.makespan <= sim_fifo.makespan + EPS
-            && total(&sim_alt.completions) < total(&sim_fifo.completions) - EPS)
-    {
-        (sim_alt, alt)
-    } else {
-        (sim_fifo, fifo)
-    }
+    best
 }
 
 /// Greedy CPU→GPU rationing over `movable` (the ops the per-query
@@ -615,27 +678,27 @@ pub fn plan_joint(
     let dev_reorder = greedy_assign(&ctxs, &movable, num_execs, batch_fixed, true);
 
     // Final pick: the best (assignment, order) pair across the
-    // independent plans and both greedy results, under FIFO and
-    // shortest-GPU-first grants. Including every assignment's FIFO
-    // variant guarantees makespan ≤ fifo_makespan; the FIFO greedy's
-    // all-CPU start guarantees ≤ all-CPU; FIFO serialization of the
-    // independent plans guarantees ≤ Σ independent.
+    // independent plans and both greedy results, with the grant order
+    // drawn from the full generator pool — FIFO, shortest-GPU-first,
+    // longest-tail-last. Including every assignment's FIFO variant
+    // guarantees makespan ≤ fifo_makespan; the FIFO greedy's all-CPU
+    // start guarantees ≤ all-CPU; FIFO serialization of the independent
+    // plans guarantees ≤ Σ independent.
     let assignments = [&independent_devices, &dev_fifo, &dev_reorder];
     let mut fifo_makespan = f64::INFINITY;
     let mut chosen: Option<(Sim, Vec<usize>, usize)> = None;
     for (ai, &devices) in assignments.iter().enumerate() {
         let chains = build(devices);
-        for reordered in [false, true] {
-            let (order, sim) = if reordered {
-                let order = shortest_first_order(&chains);
-                let sim = simulate(&chains, num_execs, &order);
-                (order, sim)
-            } else {
-                (fifo.clone(), simulate(&chains, num_execs, &fifo))
-            };
+        let orders = [
+            fifo.clone(),
+            shortest_first_order(&chains),
+            longest_tail_last_order(&chains),
+        ];
+        for (oi, order) in orders.into_iter().enumerate() {
+            let sim = simulate(&chains, num_execs, &order);
             // The FIFO scheduler's emission: its own greedy (ai == 1) or
             // the independent fallback (ai == 0), FIFO grants.
-            if !reordered && ai < 2 {
+            if oi == 0 && ai < 2 {
                 fifo_makespan = fifo_makespan.min(sim.makespan);
             }
             let better = match &chosen {
@@ -965,25 +1028,84 @@ mod tests {
         assert!(p.makespan <= p.all_cpu_makespan + 1e-6, "{p:?}");
     }
 
+    /// Queries with long post-device CPU tails (sort is not fusable and
+    /// CPU-leaning at small sizes) exercise the longest-tail-last
+    /// generator's regime.
+    fn tail_query(name: &str) -> Query {
+        QueryBuilder::scan(name)
+            .window(WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5)))
+            .filter("v", Predicate::Ge(0.0))
+            .select(&["v"])
+            .sort("v", false)
+            .build()
+            .unwrap()
+    }
+
     #[test]
     fn order_is_a_permutation_and_bounds_hold() {
         let q1 = chain_query("a");
         let q2 = chain_query("b");
         let q3 = chain_query("c");
+        let q4 = tail_query("d");
         let model = DeviceModel::default();
         for part in [10.0 * KB, 50.0 * KB, 200.0 * KB] {
             let cands = vec![
                 cand(&q1, part, 10.0 * KB, 4),
                 cand(&q2, 2.0 * part, 10.0 * KB, 4),
                 cand(&q3, 0.5 * part, 10.0 * KB, 4),
+                cand(&q4, 1.5 * part, 10.0 * KB, 4),
             ];
             let p = plan_joint(&cands, &model, &single_topo()).predicted;
             let mut sorted = p.order.clone();
             sorted.sort_unstable();
-            assert_eq!(sorted, vec![0, 1, 2], "not a permutation: {:?}", p.order);
+            assert_eq!(sorted, vec![0, 1, 2, 3], "not a permutation: {:?}", p.order);
             assert!(p.makespan <= p.fifo_makespan + 1e-9, "{p:?}");
             assert!(p.fifo_makespan <= p.independent.iter().sum::<f64>() + 1e-6, "{p:?}");
             assert!(p.makespan <= p.all_cpu_makespan + 1e-6, "{p:?}");
+            assert_eq!(p.completions.len(), 4);
+            // Every completion is reachable within the makespan.
+            for c in &p.completions {
+                assert!(*c <= p.makespan + 1e-12);
+            }
         }
+    }
+
+    #[test]
+    fn longest_tail_last_grants_long_tails_first() {
+        let mk = |tail: f64| {
+            vec![Chain { segments: vec![(0.1, 1.0, 0), (tail, 0.0, usize::MAX)] }]
+        };
+        let chains = vec![mk(0.1), mk(5.0), mk(2.0)];
+        assert_eq!(longest_tail_last_order(&chains), vec![1, 2, 0]);
+        // Ties keep registration order.
+        let tied = vec![mk(1.0), mk(1.0)];
+        assert_eq!(longest_tail_last_order(&tied), vec![0, 1]);
+    }
+
+    #[test]
+    fn fused_chain_merges_into_one_reservation() {
+        // scan→filter→select is one structural run: under an all-GPU
+        // assignment the chain books ONE device reservation carrying the
+        // members' combined flow (entering staging at the head, leaving
+        // transfer at the tail); a device switch mid-run splits it.
+        let q = chain_query("f");
+        let model = DeviceModel::default();
+        let qc = cand(&q, 50.0 * KB, 10.0 * KB, 4);
+        let ctx = chain_ctx(&qc, &model, &single_topo());
+        let bf = model.batch_fixed.as_secs_f64();
+        let c = chain(&ctx, 0, &vec![Device::Gpu; q.len()], bf);
+        assert_eq!(c.segments.len(), 2, "merged reservation + CPU tail");
+        let (cpu_before, busy, head) = c.segments[0];
+        assert_eq!(head, 0);
+        assert!((cpu_before - bf).abs() < 1e-12);
+        let s = &ctx.secs[0];
+        let expected = s[0].gpu + s[1].gpu + s[2].gpu
+            + s[0].coalesce
+            + s[0].trans_in
+            + s[2].trans_out;
+        assert!((busy - expected).abs() < 1e-12, "{busy} vs {expected}");
+        let mixed = vec![Device::Gpu, Device::Cpu, Device::Gpu];
+        let c2 = chain(&ctx, 0, &mixed, bf);
+        assert_eq!(c2.segments.len(), 3, "device switch splits the run");
     }
 }

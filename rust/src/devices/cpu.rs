@@ -11,9 +11,25 @@
 use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::ColumnBatch;
 use crate::engine::ops;
+use crate::engine::ops::fused::FusedChainSpec;
 use crate::engine::window::WindowSpec;
 use crate::error::{Error, Result};
 use crate::query::dag::OpSpec;
+
+/// Execute a fused same-device chain as one typed traversal per chunk
+/// (see [`crate::engine::ops::fused`]): predicate sweep, affine compute
+/// and group-table feed happen in a single pass, with no intermediate
+/// `Validity` mask or column materialization between members. Returns
+/// the chain output plus the number of chunks skipped outright because
+/// min/max stats proved the chain's filters unsatisfiable. Output is
+/// bit-identical to running the members one [`run_op_chunked`] call at
+/// a time (the fused differential tests pin this).
+pub fn run_fused_chain(
+    spec: &FusedChainSpec,
+    batch: &ChunkedBatch,
+) -> Result<(ChunkedBatch, usize)> {
+    ops::fused::run_chunks(batch, spec)
+}
 
 /// Execute one operator over the chunked representation. `window`
 /// supplies the build side for windowed joins (as a chunk list — the
@@ -215,5 +231,33 @@ mod tests {
         let chunked = run_op_chunked(&join, &layout, Some(&window), &wspec()).unwrap();
         let single = run_op(&join, &b, Some(&b), &wspec()).unwrap();
         assert_eq!(chunked.coalesce(), single);
+    }
+
+    #[test]
+    fn fused_chain_matches_staged_dispatch() {
+        use crate::engine::ops::fused::FusedStep;
+        let b = batch();
+        let mut layout = ChunkedBatch::from_batch(b.slice(0, 1));
+        layout.push(b.slice(1, 2)).unwrap();
+        let specs = [
+            OpSpec::Scan,
+            OpSpec::Filter { col: "v".into(), pred: Predicate::Ge(2.0) },
+            OpSpec::ProjectSelect { keep: vec!["v".into()] },
+        ];
+        let mut staged = layout.clone();
+        for spec in &specs {
+            staged = run_op_chunked(spec, &staged, None, &wspec()).unwrap();
+        }
+        let chain = FusedChainSpec {
+            steps: vec![
+                FusedStep::Scan,
+                FusedStep::Filter { col: "v".into(), pred: Predicate::Ge(2.0) },
+                FusedStep::Select { keep: vec!["v".into()] },
+            ],
+            agg: None,
+        };
+        let (fused, pruned) = run_fused_chain(&chain, &layout).unwrap();
+        assert_eq!(pruned, 0);
+        assert_eq!(fused.coalesce(), staged.coalesce());
     }
 }

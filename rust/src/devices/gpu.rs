@@ -6,6 +6,13 @@
 //! probe, sort); plan-level reshapes (column selection, expand, shuffle)
 //! stay host-side, as Rapids keeps them in the JVM. Semantics are
 //! identical to [`crate::devices::cpu`], asserted by integration tests.
+//!
+//! Fused chains ([`crate::engine::ops::fused`]) never route here: a
+//! Real-backend GPU-device group falls back to staged member execution
+//! (the PJRT artifacts are per-op), while the simulated GPU path runs
+//! the fused kernel host-side and charges one entering coalesce at the
+//! group head — the same once-per-boundary staging [`run_op_chunked`]
+//! performs for a staged device kernel below.
 
 use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::{Column, ColumnBatch, DType, Field, Schema, Validity};

@@ -197,6 +197,13 @@ impl DeviceModel {
     }
 
     /// Host↔device transfer time for `bytes`.
+    ///
+    /// `bytes` is the *wire* footprint. Window state that rides a
+    /// boundary cold-encoded ([`crate::engine::encode`]) is priced at
+    /// its encoded byte count: the planner's `QueryCandidate` aux and
+    /// the executor's `ExecOpts::aux` carry the same encoded figure, so
+    /// the Eq. 9 transfer term never diverges between prediction and
+    /// charge.
     pub fn transfer_time(&self, bytes: f64) -> Duration {
         self.pcie_lat + Duration::from_nanos((bytes * self.pcie_ns_per_byte) as u64)
     }
@@ -209,6 +216,10 @@ impl DeviceModel {
     /// as an O(1) clone — no per-byte staging copy — so it is free here,
     /// matching the real backend ([`ChunkedBatch::coalesce`]'s
     /// one-chunk short-circuit).
+    ///
+    /// Like [`transfer_time`], `bytes` is the wire footprint: staging
+    /// cold-encoded window chunks gathers the encoded blocks, so
+    /// callers price the encoded byte count there too.
     ///
     /// [`transfer_time`]: DeviceModel::transfer_time
     /// [`ChunkedBatch::coalesce`]: crate::engine::chunked::ChunkedBatch::coalesce

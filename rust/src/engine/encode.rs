@@ -1,0 +1,588 @@
+//! Encoded column blocks: RLE / dictionary / delta codecs with per-block
+//! min/max statistics (the cnosdb-TSM shape: compressed blocks whose
+//! stats double as a pruning index).
+//!
+//! An [`EncodedChunk`] is the compressed form of one [`ColumnBatch`]:
+//! every column becomes an [`EncodedBlock`] holding the *smallest honest*
+//! encoding of its values — plain, run-length, dictionary (≤ 256
+//! distinct), or delta (i32 steps that fit `i8`) — plus the block's
+//! min/max. Decoding is exact to the bit: f32 values round-trip by bit
+//! pattern (`to_bits`), so NaN payloads and signed zeros survive. That
+//! is what lets cold window state live encoded and still satisfy the
+//! engine's bit-identity differential harness
+//! (`rust/tests/diff_chunked.rs`).
+//!
+//! Byte accounting mirrors [`ColumnBatch::alloc_bytes`]: one mask byte
+//! per row is charged on both sides, so `encoded_bytes() ≤ raw_bytes()`
+//! holds unconditionally and the ratio isolates the column-payload win.
+//! The device model's coalesce/PCIe terms price these encoded bytes for
+//! cold window state (see `devices/model.rs` and ARCHITECTURE.md
+//! §Encoded column blocks); the min/max stats feed chunk pruning under
+//! fused filter predicates ([`crate::engine::ops::fused`]).
+
+use crate::engine::column::{Buffer, Column, ColumnBatch, Schema, Validity};
+use crate::util::hash::FxHashMap;
+use std::sync::Arc;
+
+/// Per-column min/max over *all* rows (dead included — a superset bound,
+/// so pruning decisions made from it stay conservative). `None` means
+/// "no usable bound": an empty column or one containing NaN.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkStats {
+    pub per_col: Vec<Option<(f64, f64)>>,
+}
+
+impl ChunkStats {
+    /// Compute stats directly from a plain batch (the fused kernel uses
+    /// this when no encoded block carries them).
+    pub fn of(batch: &ColumnBatch) -> ChunkStats {
+        ChunkStats {
+            per_col: batch.columns.iter().map(column_stats).collect(),
+        }
+    }
+}
+
+/// Min/max bound of one plain column, or `None` when no usable bound
+/// exists (empty column, NaN present). The fused aggregate path uses
+/// this to price inline pruning one column at a time.
+pub fn column_stats(c: &Column) -> Option<(f64, f64)> {
+    match c {
+        Column::F32(v) => stats_f32(v.as_slice()),
+        Column::I32(v) => stats_i32(v.as_slice()),
+    }
+}
+
+fn stats_f32(vals: &[f32]) -> Option<(f64, f64)> {
+    if vals.is_empty() {
+        return None;
+    }
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &v in vals {
+        if v.is_nan() {
+            return None;
+        }
+        let x = v as f64;
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+    }
+    Some((lo, hi))
+}
+
+fn stats_i32(vals: &[i32]) -> Option<(f64, f64)> {
+    if vals.is_empty() {
+        return None;
+    }
+    let mut lo = i32::MAX;
+    let mut hi = i32::MIN;
+    for &v in vals {
+        if v < lo {
+            lo = v;
+        }
+        if v > hi {
+            hi = v;
+        }
+    }
+    Some((lo as f64, hi as f64))
+}
+
+/// One column's encoded values. `Plain*` keeps the original shared
+/// buffer (an O(1) Arc bump — incompressible data costs nothing to
+/// "encode"); the other variants own their compact representation.
+#[derive(Clone, Debug)]
+pub enum EncodedValues {
+    PlainF32(Buffer<f32>),
+    PlainI32(Buffer<i32>),
+    /// Runs of bit-identical values: `(value, run_length)`.
+    RleF32(Vec<(f32, u32)>),
+    RleI32(Vec<(i32, u32)>),
+    /// ≤ 256 distinct values: first-appearance dictionary + u8 codes.
+    DictF32 { dict: Vec<f32>, codes: Vec<u8> },
+    DictI32 { dict: Vec<i32>, codes: Vec<u8> },
+    /// Base value + per-row deltas that fit `i8`.
+    DeltaI32 { base: i32, deltas: Vec<i8> },
+}
+
+impl EncodedValues {
+    /// Bytes this representation occupies (the honest footprint the
+    /// cost model prices: 4 per plain/dict/RLE value, 4 per RLE run
+    /// length, 1 per dict code / delta).
+    pub fn encoded_bytes(&self) -> usize {
+        match self {
+            EncodedValues::PlainF32(v) => 4 * v.len(),
+            EncodedValues::PlainI32(v) => 4 * v.len(),
+            EncodedValues::RleF32(runs) => 8 * runs.len(),
+            EncodedValues::RleI32(runs) => 8 * runs.len(),
+            EncodedValues::DictF32 { dict, codes } => 4 * dict.len() + codes.len(),
+            EncodedValues::DictI32 { dict, codes } => 4 * dict.len() + codes.len(),
+            EncodedValues::DeltaI32 { deltas, .. } => 4 + deltas.len(),
+        }
+    }
+
+    /// Decoded row count.
+    pub fn rows(&self) -> usize {
+        match self {
+            EncodedValues::PlainF32(v) => v.len(),
+            EncodedValues::PlainI32(v) => v.len(),
+            EncodedValues::RleF32(runs) => runs.iter().map(|&(_, n)| n as usize).sum(),
+            EncodedValues::RleI32(runs) => runs.iter().map(|&(_, n)| n as usize).sum(),
+            EncodedValues::DictF32 { codes, .. } => codes.len(),
+            EncodedValues::DictI32 { codes, .. } => codes.len(),
+            EncodedValues::DeltaI32 { deltas, .. } => 1 + deltas.len(),
+        }
+    }
+
+    /// Exact decode (bit-identical to what was encoded).
+    pub fn decode(&self) -> Column {
+        match self {
+            EncodedValues::PlainF32(v) => Column::F32(v.clone()),
+            EncodedValues::PlainI32(v) => Column::I32(v.clone()),
+            EncodedValues::RleF32(runs) => {
+                let mut out = Vec::with_capacity(self.rows());
+                for &(v, n) in runs {
+                    out.resize(out.len() + n as usize, v);
+                }
+                Column::F32(out.into())
+            }
+            EncodedValues::RleI32(runs) => {
+                let mut out = Vec::with_capacity(self.rows());
+                for &(v, n) in runs {
+                    out.resize(out.len() + n as usize, v);
+                }
+                Column::I32(out.into())
+            }
+            EncodedValues::DictF32 { dict, codes } => {
+                Column::F32(codes.iter().map(|&c| dict[c as usize]).collect::<Vec<_>>().into())
+            }
+            EncodedValues::DictI32 { dict, codes } => {
+                Column::I32(codes.iter().map(|&c| dict[c as usize]).collect::<Vec<_>>().into())
+            }
+            EncodedValues::DeltaI32 { base, deltas } => {
+                let mut out = Vec::with_capacity(1 + deltas.len());
+                out.push(*base);
+                let mut prev = *base as i64;
+                for &d in deltas {
+                    prev += d as i64;
+                    out.push(prev as i32);
+                }
+                Column::I32(out.into())
+            }
+        }
+    }
+}
+
+/// One encoded column plus its min/max bound.
+#[derive(Clone, Debug)]
+pub struct EncodedBlock {
+    pub values: EncodedValues,
+    /// `(min, max)` over all rows; `None` = empty or NaN-bearing.
+    pub stats: Option<(f64, f64)>,
+}
+
+impl EncodedBlock {
+    pub fn encoded_bytes(&self) -> usize {
+        self.values.encoded_bytes()
+    }
+}
+
+/// The encoded form of one [`ColumnBatch`]: per-column blocks + the
+/// (unencoded) validity. Validity is 1 byte/row on both sides of the
+/// accounting, so it never inflates the encoded/raw ratio.
+#[derive(Clone, Debug)]
+pub struct EncodedChunk {
+    schema: Arc<Schema>,
+    blocks: Vec<EncodedBlock>,
+    validity: Validity,
+}
+
+/// Encode every column of `batch`, picking the smallest honest
+/// representation per column (ties go to plain — an O(1) buffer share).
+pub fn encode_chunk(batch: &ColumnBatch) -> EncodedChunk {
+    let blocks = batch
+        .columns
+        .iter()
+        .map(|c| match c {
+            Column::F32(v) => EncodedBlock {
+                values: encode_f32(v),
+                stats: stats_f32(v.as_slice()),
+            },
+            Column::I32(v) => EncodedBlock {
+                values: encode_i32(v),
+                stats: stats_i32(v.as_slice()),
+            },
+        })
+        .collect();
+    EncodedChunk {
+        schema: Arc::clone(&batch.schema),
+        blocks,
+        validity: batch.validity.clone(),
+    }
+}
+
+impl EncodedChunk {
+    pub fn schema(&self) -> &Arc<Schema> {
+        &self.schema
+    }
+
+    pub fn rows(&self) -> usize {
+        self.validity.len()
+    }
+
+    /// Bytes the encoded representation occupies (blocks + one mask
+    /// byte per row, mirroring [`ColumnBatch::alloc_bytes`]).
+    pub fn encoded_bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.encoded_bytes()).sum::<usize>() + self.rows()
+    }
+
+    /// Bytes the decoded form occupies ([`ColumnBatch::alloc_bytes`] of
+    /// the decode).
+    pub fn raw_bytes(&self) -> usize {
+        4 * self.blocks.len() * self.rows() + self.rows()
+    }
+
+    /// Per-column min/max (the pruning index).
+    pub fn stats(&self) -> ChunkStats {
+        ChunkStats { per_col: self.blocks.iter().map(|b| b.stats).collect() }
+    }
+
+    /// Exact decode: bit-identical columns, the original validity.
+    pub fn decode(&self) -> ColumnBatch {
+        ColumnBatch {
+            schema: Arc::clone(&self.schema),
+            columns: self.blocks.iter().map(|b| b.values.decode()).collect(),
+            validity: self.validity.clone(),
+        }
+    }
+}
+
+fn encode_f32(buf: &Buffer<f32>) -> EncodedValues {
+    let vals = buf.as_slice();
+    let mut best = EncodedValues::PlainF32(buf.clone());
+    let mut best_bytes = best.encoded_bytes();
+    // RLE over bit patterns (NaN-safe: identical bits run together).
+    let mut runs: Vec<(f32, u32)> = Vec::new();
+    for &v in vals {
+        match runs.last_mut() {
+            Some((last, n)) if last.to_bits() == v.to_bits() => *n += 1,
+            _ => runs.push((v, 1)),
+        }
+    }
+    if 8 * runs.len() < best_bytes {
+        best_bytes = 8 * runs.len();
+        best = EncodedValues::RleF32(runs);
+    }
+    if let Some((dict, codes)) = dict_encode(vals, |v| v.to_bits() as u64) {
+        let bytes = 4 * dict.len() + codes.len();
+        if bytes < best_bytes {
+            best = EncodedValues::DictF32 { dict, codes };
+        }
+    }
+    best
+}
+
+fn encode_i32(buf: &Buffer<i32>) -> EncodedValues {
+    let vals = buf.as_slice();
+    let mut best = EncodedValues::PlainI32(buf.clone());
+    let mut best_bytes = best.encoded_bytes();
+    let mut runs: Vec<(i32, u32)> = Vec::new();
+    for &v in vals {
+        match runs.last_mut() {
+            Some((last, n)) if *last == v => *n += 1,
+            _ => runs.push((v, 1)),
+        }
+    }
+    if 8 * runs.len() < best_bytes {
+        best_bytes = 8 * runs.len();
+        best = EncodedValues::RleI32(runs);
+    }
+    if let Some((dict, codes)) = dict_encode(vals, |v| v as u32 as u64) {
+        let bytes = 4 * dict.len() + codes.len();
+        if bytes < best_bytes {
+            best_bytes = bytes;
+            best = EncodedValues::DictI32 { dict, codes };
+        }
+    }
+    if let Some((base, deltas)) = delta_encode(vals) {
+        if 4 + deltas.len() < best_bytes {
+            best = EncodedValues::DeltaI32 { base, deltas };
+        }
+    }
+    best
+}
+
+/// First-appearance dictionary with u8 codes; `None` when > 256 distinct
+/// values (keying by a stable u64 image so f32 dictionaries compare by
+/// bit pattern).
+fn dict_encode<T: Copy>(vals: &[T], key: impl Fn(T) -> u64) -> Option<(Vec<T>, Vec<u8>)> {
+    let mut slots: FxHashMap<u64, u8> = FxHashMap::default();
+    let mut dict: Vec<T> = Vec::new();
+    let mut codes: Vec<u8> = Vec::with_capacity(vals.len());
+    for &v in vals {
+        let k = key(v);
+        let code = match slots.get(&k) {
+            Some(&c) => c,
+            None => {
+                if dict.len() == 256 {
+                    return None;
+                }
+                let c = dict.len() as u8;
+                slots.insert(k, c);
+                dict.push(v);
+                c
+            }
+        };
+        codes.push(code);
+    }
+    Some((dict, codes))
+}
+
+/// Base + i8 deltas; `None` when empty or any step overflows `i8`.
+fn delta_encode(vals: &[i32]) -> Option<(i32, Vec<i8>)> {
+    let (&base, rest) = vals.split_first()?;
+    let mut deltas = Vec::with_capacity(rest.len());
+    let mut prev = base as i64;
+    for &v in rest {
+        let d = v as i64 - prev;
+        if d < i8::MIN as i64 || d > i8::MAX as i64 {
+            return None;
+        }
+        deltas.push(d as i8);
+        prev = v as i64;
+    }
+    Some((base, deltas))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::column::{DType, Field};
+    use crate::util::prop::{prop_assert, Gen, Runner};
+
+    /// Bit image of a column (fingerprint convention: f32 by to_bits).
+    fn bits(c: &Column) -> Vec<u8> {
+        match c {
+            Column::F32(v) => v.iter().flat_map(|x| x.to_bits().to_le_bytes()).collect(),
+            Column::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        }
+    }
+
+    fn assert_roundtrip(b: &ColumnBatch) {
+        let enc = encode_chunk(b);
+        let dec = enc.decode();
+        assert_eq!(dec.rows(), b.rows());
+        assert_eq!(*dec.schema, *b.schema);
+        for (x, y) in b.columns.iter().zip(&dec.columns) {
+            assert_eq!(bits(x), bits(y), "column bits diverged");
+        }
+        assert_eq!(dec.validity.to_vec(), b.validity.to_vec());
+        assert!(enc.encoded_bytes() <= enc.raw_bytes());
+        assert_eq!(enc.raw_bytes(), b.alloc_bytes());
+    }
+
+    fn batch(cols: Vec<(Field, Column)>, mask: Option<Vec<u8>>) -> ColumnBatch {
+        let (fields, columns): (Vec<_>, Vec<_>) = cols.into_iter().unzip();
+        let mut b = ColumnBatch::new(Schema::new(fields), columns).unwrap();
+        if let Some(m) = mask {
+            b.validity = Validity::from_mask(m);
+        }
+        b
+    }
+
+    #[test]
+    fn constant_column_rle_shrinks() {
+        let b = batch(
+            vec![(Field::f32("v"), Column::F32(vec![7.5; 100].into()))],
+            None,
+        );
+        let enc = encode_chunk(&b);
+        assert!(enc.encoded_bytes() < enc.raw_bytes());
+        assert_roundtrip(&b);
+        // One run of 100: 8 value+length bytes + 100 mask bytes.
+        assert_eq!(enc.encoded_bytes(), 8 + 100);
+    }
+
+    #[test]
+    fn few_distinct_dictionary_shrinks() {
+        let vals: Vec<i32> = (0..120).map(|i| [3, 9, 27][i % 3]).collect();
+        let b = batch(vec![(Field::i32("k"), Column::I32(vals.into()))], None);
+        let enc = encode_chunk(&b);
+        assert!(enc.encoded_bytes() < enc.raw_bytes());
+        assert_roundtrip(&b);
+    }
+
+    #[test]
+    fn monotone_i32_delta_shrinks() {
+        let vals: Vec<i32> = (0..200).map(|i| 1000 + i).collect();
+        let b = batch(vec![(Field::i32("t"), Column::I32(vals.into()))], None);
+        let enc = encode_chunk(&b);
+        assert!(enc.encoded_bytes() < enc.raw_bytes());
+        assert_roundtrip(&b);
+    }
+
+    #[test]
+    fn incompressible_stays_plain_and_shares_buffer() {
+        let vals: Vec<f32> = (0..64).map(|i| (i * 7919) as f32 * 0.37).collect();
+        let col = Column::F32(vals.into());
+        let b = batch(vec![(Field::f32("v"), col.clone())], None);
+        let enc = encode_chunk(&b);
+        let dec = enc.decode();
+        // Plain fallback shares the original allocation — encoding
+        // incompressible data copies nothing.
+        assert!(dec.columns[0].shares_memory(&col));
+        assert_eq!(enc.encoded_bytes(), enc.raw_bytes());
+    }
+
+    #[test]
+    fn nan_and_negative_zero_roundtrip_by_bits() {
+        let vals = vec![f32::NAN, -0.0, 0.0, f32::from_bits(0x7fc0_dead), f32::NAN];
+        let b = batch(vec![(Field::f32("v"), Column::F32(vals.into()))], None);
+        let enc = encode_chunk(&b);
+        assert!(enc.stats().per_col[0].is_none(), "NaN voids the bound");
+        assert_roundtrip(&b);
+    }
+
+    #[test]
+    fn validity_survives_encoding() {
+        let b = batch(
+            vec![(Field::f32("v"), Column::F32(vec![1.0, 2.0, 3.0].into()))],
+            Some(vec![1, 0, 1]),
+        );
+        assert_roundtrip(&b);
+        let enc = encode_chunk(&b);
+        assert_eq!(enc.decode().live_rows(), 2);
+    }
+
+    #[test]
+    fn empty_batch_roundtrips() {
+        let b = batch(vec![(Field::f32("v"), Column::F32(Vec::new().into()))], None);
+        let enc = encode_chunk(&b);
+        assert_eq!(enc.rows(), 0);
+        assert_eq!(enc.encoded_bytes(), 0);
+        assert_roundtrip(&b);
+    }
+
+    #[test]
+    fn stats_match_direct_computation() {
+        let b = batch(
+            vec![
+                (Field::f32("v"), Column::F32(vec![3.0, -1.5, 9.25].into())),
+                (Field::i32("k"), Column::I32(vec![5, 5, 2].into())),
+            ],
+            Some(vec![1, 0, 1]),
+        );
+        let enc = encode_chunk(&b);
+        assert_eq!(enc.stats(), ChunkStats::of(&b));
+        // Stats cover dead rows too (conservative superset bound).
+        assert_eq!(enc.stats().per_col[0], Some((-1.5, 9.25)));
+        assert_eq!(enc.stats().per_col[1], Some((2.0, 5.0)));
+    }
+
+    /// Gen-driven random column with a codec-biased shape.
+    fn random_column(g: &mut Gen, rows: usize, dtype: DType) -> Column {
+        let mode = g.usize_in(0..4);
+        match dtype {
+            DType::F32 => {
+                let vals: Vec<f32> = (0..rows)
+                    .map(|i| match mode {
+                        0 => g.f64_in(-4.0, 4.0).floor() as f32, // few distinct
+                        1 => ((i / 7) as f64 * 1.5) as f32,      // runs
+                        _ => g.f64_in(-1000.0, 1000.0) as f32,   // random
+                    })
+                    .collect();
+                Column::F32(vals.into())
+            }
+            DType::I32 => {
+                let mut acc = g.usize_in(0..1000) as i32;
+                let vals: Vec<i32> = (0..rows)
+                    .map(|i| match mode {
+                        0 => (i % 5) as i32 * 11,             // few distinct
+                        1 => (i / 9) as i32,                  // runs
+                        2 => {
+                            acc += g.usize_in(0..100) as i32 - 50; // small deltas
+                            acc
+                        }
+                        _ => g.usize_in(0..1_000_000) as i32, // random
+                    })
+                    .collect();
+                Column::I32(vals.into())
+            }
+        }
+    }
+
+    fn random_batch(g: &mut Gen) -> ColumnBatch {
+        let rows = g.usize_in(0..150);
+        let ncols = g.usize_in(1..4);
+        let cols: Vec<(Field, Column)> = (0..ncols)
+            .map(|ci| {
+                if g.bool() {
+                    (Field::f32(&format!("f{ci}")), random_column(g, rows, DType::F32))
+                } else {
+                    (Field::i32(&format!("i{ci}")), random_column(g, rows, DType::I32))
+                }
+            })
+            .collect();
+        let mask = if g.bool() && rows > 0 {
+            Some((0..rows).map(|_| g.bool() as u8).collect())
+        } else {
+            None
+        };
+        batch(cols, mask)
+    }
+
+    #[test]
+    fn prop_roundtrip_is_identity() {
+        let mut r = Runner::new(0xe4c0_0001, 150);
+        r.run("encode∘decode = id (bits + validity)", |g| {
+            let b = random_batch(g);
+            let enc = encode_chunk(&b);
+            let dec = enc.decode();
+            for (ci, (x, y)) in b.columns.iter().zip(&dec.columns).enumerate() {
+                if bits(x) != bits(y) {
+                    return prop_assert(false, format!("column {ci} bits diverged"));
+                }
+            }
+            prop_assert(
+                dec.validity.to_vec() == b.validity.to_vec()
+                    && *dec.schema == *b.schema
+                    && enc.encoded_bytes() <= enc.raw_bytes(),
+                "validity/schema/bytes mismatch",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_stats_bound_block_contents() {
+        let mut r = Runner::new(0xe4c0_0002, 150);
+        r.run("stats bound every value in the block", |g| {
+            let b = random_batch(g);
+            let enc = encode_chunk(&b);
+            for (col, st) in b.columns.iter().zip(&enc.stats().per_col) {
+                match st {
+                    None => {
+                        let nan_or_empty = col.is_empty()
+                            || matches!(col, Column::F32(v) if v.iter().any(|x| x.is_nan()));
+                        if !nan_or_empty {
+                            return prop_assert(false, "bound missing without cause");
+                        }
+                    }
+                    Some((lo, hi)) => {
+                        for i in 0..col.len() {
+                            let x = col.get_f64(i);
+                            if x < *lo || x > *hi {
+                                return prop_assert(
+                                    false,
+                                    format!("value {x} outside [{lo}, {hi}]"),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            prop_assert(true, "")
+        });
+    }
+}

@@ -4,6 +4,8 @@
 //! * [`column`] — typed columns, schemas, batches
 //! * [`chunked`] — the chunked execution representation every operator
 //!   consumes and produces (Arc'd chunk lists; explicit coalesce points)
+//! * [`encode`] — RLE/dictionary/delta-encoded column blocks with
+//!   min/max stats (cold window state; pruning under fused filters)
 //! * [`dataset`] — arrival-stamped datasets and micro-batches
 //! * [`partition`] — splitting a micro-batch across `NumCores` partitions
 //! * [`window`] — sliding/tumbling window state management
@@ -13,6 +15,7 @@
 pub mod chunked;
 pub mod column;
 pub mod dataset;
+pub mod encode;
 pub mod ops;
 pub mod partition;
 pub mod sink;

@@ -32,6 +32,21 @@ impl Predicate {
             Predicate::Band(lo, hi) => x >= lo && x < hi,
         }
     }
+
+    /// Conservative block-stats test: could *any* value in `[min, max]`
+    /// satisfy the predicate? Sound for pruning — it never answers
+    /// `false` when a value in range could match, so a `false` lets a
+    /// fused chain skip the per-row sweep and emit an all-dead mask
+    /// (exactly what evaluating every row would have produced). See
+    /// [`crate::engine::encode`] for where the bounds come from.
+    pub fn can_match(&self, min: f64, max: f64) -> bool {
+        match *self {
+            Predicate::Ge(v) => max >= v,
+            Predicate::Lt(v) => min < v,
+            Predicate::Eq(v) => min <= v && v <= max,
+            Predicate::Band(lo, hi) => max >= lo && min < hi,
+        }
+    }
 }
 
 /// Typed inner loop: one predicate branch chosen per kernel invocation,
@@ -176,5 +191,40 @@ mod tests {
     #[test]
     fn unknown_column_errors() {
         assert!(filter(&batch(), "nope", Predicate::Ge(0.0)).is_err());
+    }
+
+    /// `can_match(min, max) == false` must imply no value in the range
+    /// matches — sweep each predicate against a bound lattice.
+    #[test]
+    fn can_match_is_sound_and_not_vacuous() {
+        let preds = [
+            Predicate::Ge(5.0),
+            Predicate::Lt(5.0),
+            Predicate::Eq(5.0),
+            Predicate::Band(3.0, 7.0),
+        ];
+        let bounds: &[(f64, f64)] = &[
+            (0.0, 2.0),
+            (0.0, 5.0),
+            (5.0, 5.0),
+            (5.0, 9.0),
+            (6.0, 9.0),
+            (-2.0, 12.0),
+        ];
+        for p in preds {
+            let mut pruned_somewhere = false;
+            for &(lo, hi) in bounds {
+                if p.can_match(lo, hi) {
+                    continue;
+                }
+                pruned_somewhere = true;
+                // Soundness: sample the range densely; nothing matches.
+                for step in 0..=100 {
+                    let x = lo + (hi - lo) * (step as f64) / 100.0;
+                    assert!(!p.eval(x), "{p:?} pruned [{lo}, {hi}] but matches {x}");
+                }
+            }
+            assert!(pruned_somewhere, "{p:?} never prunes any test bound");
+        }
     }
 }

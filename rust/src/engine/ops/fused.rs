@@ -1,0 +1,749 @@
+//! Fused single-pass execution of scan→filter→project→(aggregate)
+//! chains: one typed traversal per chunk instead of one full pass per
+//! operator.
+//!
+//! The staged pipeline pays per op: filter writes a fresh `Validity`
+//! mask, project re-wraps every chunk, aggregate sweeps the mask a third
+//! time. A [`FusedChainSpec`] runs the whole chain in one traversal —
+//! per chunk, the affine columns are computed (over *all* rows, exactly
+//! as the staged kernels do), every filter predicate is ANDed into **one
+//! mask scratch** (no intermediate `Validity` materialization between
+//! members), and either the output columns are gathered (shared input
+//! buffers + the freshly computed affines) or the rows are fed straight
+//! into the group table of a terminal aggregate.
+//!
+//! # Output invariance
+//!
+//! Fused execution is bit-identical to running the member ops one at a
+//! time — same column bits (f32 compared by `to_bits`), same validity,
+//! same schema, same chunk layout (aggregation still materializes one
+//! fresh chunk), and the same errors in the same member order. The
+//! differential harness (`rust/tests/diff_chunked.rs`) pins this across
+//! arbitrary pipelines × chunk layouts.
+//!
+//! # Chunk pruning
+//!
+//! When a chunk's per-column min/max bounds prove a filter predicate
+//! cannot match ([`Predicate::can_match`]), the per-row sweeps are
+//! skipped: the chunk contributes an all-dead mask (exactly what
+//! evaluating every row would have produced), and an aggregate-tail
+//! chain skips the chunk's affine compute and group-table feed entirely.
+//! Bounds come from encoded blocks ([`crate::engine::encode`]) via
+//! [`run_chunks_with_stats`]; aggregate-tail chains additionally compute
+//! the bound inline for plain chunks (one cheap min/max sweep buys
+//! skipping the whole chunk). Only plain (non-aggregate) chains without
+//! provided stats never prune — there the stats sweep would cost as
+//! much as the predicate sweep it replaces.
+
+use crate::engine::chunked::ChunkedBatch;
+use crate::engine::column::{Column, ColumnBatch, DType, Field, Schema, Validity};
+use crate::engine::encode::{column_stats, ChunkStats};
+use crate::engine::ops::aggregate::{AggFunc, AggSpec};
+use crate::engine::ops::filter::Predicate;
+use crate::error::{Error, Result};
+use crate::util::hash::FxHashMap;
+use std::sync::Arc;
+
+/// One fusable member op (the engine-level mirror of the fusable
+/// `OpSpec` kinds; `query/fuse.rs` does the translation).
+#[derive(Clone, Debug)]
+pub enum FusedStep {
+    /// Source scan — identity over the chunk list.
+    Scan,
+    Filter { col: String, pred: Predicate },
+    Select { keep: Vec<String> },
+    Affine { a: String, b: String, alpha: f32, beta: f32, out: String },
+}
+
+/// Terminal aggregate of a fused chain.
+#[derive(Clone, Debug)]
+pub struct FusedAgg {
+    pub group: Vec<String>,
+    pub aggs: Vec<AggSpec>,
+    pub having: Option<(String, Predicate)>,
+}
+
+/// A fused chain: member steps in op order plus an optional terminal
+/// aggregate.
+#[derive(Clone, Debug)]
+pub struct FusedChainSpec {
+    pub steps: Vec<FusedStep>,
+    pub agg: Option<FusedAgg>,
+}
+
+/// Where a virtual column's data lives: an input column of the chain's
+/// source batch, or the k-th affine column the chain computes.
+#[derive(Clone, Copy, Debug)]
+enum Prov {
+    Input(usize),
+    Computed(usize),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct AffineExpr {
+    a: Prov,
+    b: Prov,
+    alpha: f32,
+    beta: f32,
+}
+
+struct CompiledAgg {
+    key: Vec<Prov>,
+    key_fields: Vec<Field>,
+    /// Per agg: the value column's provenance (`None` for COUNT).
+    vals: Vec<Option<Prov>>,
+    aggs: Vec<AggSpec>,
+    having: Option<(String, Predicate)>,
+}
+
+/// The chain resolved against a concrete input schema: every name
+/// lookup and dtype check done once, in member order (so errors surface
+/// exactly as staged execution would raise them).
+struct Compiled {
+    filters: Vec<(Prov, Predicate)>,
+    computed: Vec<AffineExpr>,
+    /// Provenance of the (pre-aggregate) output columns.
+    output: Vec<Prov>,
+    /// Schema of the (pre-aggregate) output.
+    out_schema: Arc<Schema>,
+    agg: Option<CompiledAgg>,
+}
+
+fn resolve(cur: &[(Field, Prov)], name: &str) -> Result<usize> {
+    cur.iter()
+        .position(|(f, _)| f.name == name)
+        .ok_or_else(|| Error::Schema(format!("unknown column `{name}`")))
+}
+
+fn compile(in_schema: &Schema, spec: &FusedChainSpec) -> Result<Compiled> {
+    // The evolving virtual schema: (field, where-the-data-lives).
+    let mut cur: Vec<(Field, Prov)> = in_schema
+        .fields
+        .iter()
+        .enumerate()
+        .map(|(i, f)| (f.clone(), Prov::Input(i)))
+        .collect();
+    let mut filters = Vec::new();
+    let mut computed: Vec<AffineExpr> = Vec::new();
+    for step in &spec.steps {
+        match step {
+            FusedStep::Scan => {}
+            FusedStep::Filter { col, pred } => {
+                let i = resolve(&cur, col)?;
+                filters.push((cur[i].1, *pred));
+            }
+            FusedStep::Select { keep } => {
+                let mut next = Vec::with_capacity(keep.len());
+                for name in keep {
+                    let i = resolve(&cur, name)?;
+                    next.push(cur[i].clone());
+                }
+                cur = next;
+            }
+            FusedStep::Affine { a, b, alpha, beta, out } => {
+                let ai = resolve(&cur, a)?;
+                let bi = resolve(&cur, b)?;
+                if cur[ai].0.dtype != DType::F32 || cur[bi].0.dtype != DType::F32 {
+                    return Err(Error::Schema("expected f32 column".into()));
+                }
+                let k = computed.len();
+                computed.push(AffineExpr {
+                    a: cur[ai].1,
+                    b: cur[bi].1,
+                    alpha: *alpha,
+                    beta: *beta,
+                });
+                cur.push((Field::f32(out), Prov::Computed(k)));
+            }
+        }
+    }
+    let agg = match &spec.agg {
+        None => None,
+        Some(a) => {
+            if a.group.is_empty() {
+                return Err(Error::Plan("aggregate needs at least one group column".into()));
+            }
+            let mut key = Vec::with_capacity(a.group.len());
+            let mut key_fields = Vec::with_capacity(a.group.len());
+            for name in &a.group {
+                let i = resolve(&cur, name)?;
+                key.push(cur[i].1);
+                key_fields.push(cur[i].0.clone());
+            }
+            let vals = a
+                .aggs
+                .iter()
+                .map(|s| {
+                    if s.func == AggFunc::Count {
+                        Ok(None)
+                    } else {
+                        let i = resolve(&cur, &s.value_col)?;
+                        if cur[i].0.dtype != DType::F32 {
+                            return Err(Error::Schema("expected f32 column".into()));
+                        }
+                        Ok(Some(cur[i].1))
+                    }
+                })
+                .collect::<Result<_>>()?;
+            Some(CompiledAgg {
+                key,
+                key_fields,
+                vals,
+                aggs: a.aggs.clone(),
+                having: a.having.clone(),
+            })
+        }
+    };
+    let (out_fields, output): (Vec<Field>, Vec<Prov>) = cur.into_iter().unzip();
+    Ok(Compiled { filters, computed, output, out_schema: Schema::new(out_fields), agg })
+}
+
+/// Typed view of one virtual column within a chunk.
+enum ColRef<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+fn col_ref<'a>(chunk: &'a ColumnBatch, computed: &'a [Column], prov: Prov) -> ColRef<'a> {
+    let col = match prov {
+        Prov::Input(i) => &chunk.columns[i],
+        Prov::Computed(k) => &computed[k],
+    };
+    match col {
+        Column::F32(v) => ColRef::F32(v.as_slice()),
+        Column::I32(v) => ColRef::I32(v.as_slice()),
+    }
+}
+
+fn col_f32<'a>(chunk: &'a ColumnBatch, computed: &'a [Column], prov: Prov) -> &'a [f32] {
+    match prov {
+        Prov::Input(i) => chunk.columns[i].as_f32().expect("dtype checked at compile"),
+        Prov::Computed(k) => computed[k].as_f32().expect("computed columns are f32"),
+    }
+}
+
+/// One typed predicate sweep ANDed into the shared mask scratch
+/// (the fused analog of `filter::apply_pred`); returns the surviving
+/// live count.
+fn sweep(vals: ColRef<'_>, mask: &mut [u8], pred: Predicate) -> usize {
+    fn go<T: Copy>(vals: &[T], mask: &mut [u8], pred: Predicate, to: impl Fn(T) -> f64) -> usize {
+        let mut live = 0usize;
+        for (m, &x) in mask.iter_mut().zip(vals) {
+            *m &= pred.eval(to(x)) as u8;
+            live += *m as usize;
+        }
+        live
+    }
+    match vals {
+        ColRef::F32(v) => go(v, mask, pred, |x| x as f64),
+        ColRef::I32(v) => go(v, mask, pred, |x| x as f64),
+    }
+}
+
+/// Compute every affine column of the chain for one chunk (over *all*
+/// rows — dead included — exactly like the staged kernel).
+fn compute_affines(chunk: &ColumnBatch, exprs: &[AffineExpr]) -> Vec<Column> {
+    let mut out: Vec<Column> = Vec::with_capacity(exprs.len());
+    for e in exprs {
+        let vals: Vec<f32> = {
+            let a = col_f32(chunk, &out, e.a);
+            let b = col_f32(chunk, &out, e.b);
+            a.iter().zip(b).map(|(x, y)| e.alpha * x + e.beta * y).collect()
+        };
+        out.push(Column::F32(vals.into()));
+    }
+    out
+}
+
+/// Is this chunk provably all-dead under the chain's filters?
+/// `provided` is the chunk's stats when known (encoded blocks);
+/// `compute_inline` additionally derives the bound from the plain
+/// column (worth it only when pruning skips real work — aggregate
+/// tails). Bounds exist only for input-provenance filter columns;
+/// computed columns never prune.
+fn prunable(
+    chunk: &ColumnBatch,
+    filters: &[(Prov, Predicate)],
+    provided: Option<&ChunkStats>,
+    compute_inline: bool,
+) -> bool {
+    if chunk.rows() == 0 {
+        return false;
+    }
+    for (prov, pred) in filters {
+        let Prov::Input(i) = prov else { continue };
+        let bound = match provided.and_then(|s| s.per_col.get(*i).copied().flatten()) {
+            Some(b) => Some(b),
+            None if compute_inline => column_stats(&chunk.columns[*i]),
+            None => None,
+        };
+        if let Some((lo, hi)) = bound {
+            if !pred.can_match(lo, hi) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Execute a fused chain over `batch` with no external stats: pruning
+/// fires only for aggregate-tail chains (inline bounds). Returns the
+/// result and the number of pruned chunks.
+pub fn run_chunks(batch: &ChunkedBatch, spec: &FusedChainSpec) -> Result<(ChunkedBatch, usize)> {
+    run_chunks_with_stats(batch, spec, &[])
+}
+
+/// Execute a fused chain with per-chunk min/max bounds supplied by the
+/// caller (index-aligned with `batch.chunks()`; missing/`None` entries
+/// mean "unknown"). Returns the result and the pruned-chunk count.
+pub fn run_chunks_with_stats(
+    batch: &ChunkedBatch,
+    spec: &FusedChainSpec,
+    stats: &[Option<ChunkStats>],
+) -> Result<(ChunkedBatch, usize)> {
+    let compiled = compile(batch.schema(), spec)?;
+    match &compiled.agg {
+        None => run_projection(batch, &compiled, stats),
+        Some(_) => run_aggregate(batch, &compiled, stats),
+    }
+}
+
+/// Non-aggregate tail: one output chunk per input chunk — shared input
+/// buffers, fresh affine columns, one mask scratch for the whole chain.
+fn run_projection(
+    batch: &ChunkedBatch,
+    compiled: &Compiled,
+    stats: &[Option<ChunkStats>],
+) -> Result<(ChunkedBatch, usize)> {
+    let mut out = ChunkedBatch::new(Arc::clone(&compiled.out_schema));
+    let mut pruned_chunks = 0usize;
+    for (ci, chunk) in batch.chunks().iter().enumerate() {
+        let computed = compute_affines(chunk, &compiled.computed);
+        let validity = if compiled.filters.is_empty() {
+            chunk.validity.clone()
+        } else {
+            let provided = stats.get(ci).and_then(|s| s.as_ref());
+            if prunable(chunk, &compiled.filters, provided, false) {
+                // Every row fails some filter: the sweeps would have
+                // zeroed the whole mask (input-dead rows included).
+                pruned_chunks += 1;
+                Validity::from_parts_counted(vec![0u8; chunk.rows()], 0)
+            } else {
+                let mut mask = chunk.validity.to_vec();
+                let mut live = chunk.live_rows();
+                for (prov, pred) in &compiled.filters {
+                    live = sweep(col_ref(chunk, &computed, *prov), &mut mask, *pred);
+                }
+                Validity::from_parts_counted(mask, live)
+            }
+        };
+        let columns: Vec<Column> = compiled
+            .output
+            .iter()
+            .map(|p| match p {
+                Prov::Input(i) => chunk.columns[*i].clone(),
+                Prov::Computed(k) => computed[*k].clone(),
+            })
+            .collect();
+        out.push(ColumnBatch {
+            schema: Arc::clone(&compiled.out_schema),
+            columns,
+            validity,
+        })?;
+    }
+    Ok((out, pruned_chunks))
+}
+
+/// Aggregate tail: the group table is fed chunk by chunk in order
+/// (identical accumulation to `aggregate::hash_aggregate_parts`, so
+/// first-appearance group order — and every f64 rounding step — matches
+/// the staged path bit for bit). Pruned chunks skip everything.
+fn run_aggregate(
+    batch: &ChunkedBatch,
+    compiled: &Compiled,
+    stats: &[Option<ChunkStats>],
+) -> Result<(ChunkedBatch, usize)> {
+    let agg = compiled.agg.as_ref().expect("aggregate tail");
+    let mut slots: FxHashMap<Vec<i64>, usize> = FxHashMap::default();
+    let mut order: Vec<Vec<i64>> = Vec::new();
+    let mut sums: Vec<Vec<f64>> = Vec::new();
+    let mut counts: Vec<f64> = Vec::new();
+    let mut key: Vec<i64> = Vec::with_capacity(agg.key.len());
+    let mut pruned_chunks = 0usize;
+    for (ci, chunk) in batch.chunks().iter().enumerate() {
+        let provided = stats.get(ci).and_then(|s| s.as_ref());
+        if !compiled.filters.is_empty()
+            && prunable(chunk, &compiled.filters, provided, true)
+        {
+            // All rows dead: nothing reaches the group table, and the
+            // affine compute + sweeps can be skipped wholesale.
+            pruned_chunks += 1;
+            continue;
+        }
+        let computed = compute_affines(chunk, &compiled.computed);
+        // The chain's single mask scratch; `None` = all input rows live
+        // and no filters (the staged no-mask fast path).
+        let fused_mask: Option<Vec<u8>> = if compiled.filters.is_empty() {
+            chunk.validity.mask().map(|m| m.to_vec())
+        } else {
+            let mut mask = chunk.validity.to_vec();
+            let mut live = chunk.live_rows();
+            for (prov, pred) in &compiled.filters {
+                live = sweep(col_ref(chunk, &computed, *prov), &mut mask, *pred);
+            }
+            if live == chunk.rows() {
+                None
+            } else {
+                Some(mask)
+            }
+        };
+        let key_cols: Vec<ColRef<'_>> =
+            agg.key.iter().map(|&p| col_ref(chunk, &computed, p)).collect();
+        let value_cols: Vec<Option<&[f32]>> = agg
+            .vals
+            .iter()
+            .map(|v| v.map(|p| col_f32(chunk, &computed, p)))
+            .collect();
+        let mask = fused_mask.as_deref();
+        for row in 0..chunk.rows() {
+            if let Some(m) = mask {
+                if m[row] == 0 {
+                    continue;
+                }
+            }
+            key.clear();
+            for kc in &key_cols {
+                key.push(match kc {
+                    ColRef::I32(v) => v[row] as i64,
+                    ColRef::F32(v) => v[row].to_bits() as i64,
+                });
+            }
+            let slot = match slots.get(&key) {
+                Some(&s) => s,
+                None => {
+                    let s = order.len();
+                    slots.insert(key.clone(), s);
+                    order.push(key.clone());
+                    sums.push(vec![0.0; agg.aggs.len()]);
+                    counts.push(0.0);
+                    s
+                }
+            };
+            counts[slot] += 1.0;
+            for (ai, vc) in value_cols.iter().enumerate() {
+                if let Some(vals) = vc {
+                    sums[slot][ai] += vals[row] as f64;
+                }
+            }
+        }
+    }
+    // Output assembly — the same shape as the staged aggregate.
+    let mut fields = agg.key_fields.clone();
+    for a in &agg.aggs {
+        fields.push(Field::f32(&a.out));
+    }
+    let n_groups = order.len();
+    let mut columns: Vec<Column> = Vec::with_capacity(fields.len());
+    for (k, f) in agg.key_fields.iter().enumerate() {
+        match f.dtype {
+            DType::I32 => columns.push(Column::I32(
+                order.iter().map(|key| key[k] as i32).collect::<Vec<i32>>().into(),
+            )),
+            DType::F32 => columns.push(Column::F32(
+                order
+                    .iter()
+                    .map(|key| f32::from_bits(key[k] as u32))
+                    .collect::<Vec<f32>>()
+                    .into(),
+            )),
+        }
+    }
+    for (ai, a) in agg.aggs.iter().enumerate() {
+        let vals: Vec<f32> = (0..n_groups)
+            .map(|g| match a.func {
+                AggFunc::Sum => sums[g][ai] as f32,
+                AggFunc::Count => counts[g] as f32,
+                AggFunc::Avg => (sums[g][ai] / counts[g].max(1.0)) as f32,
+            })
+            .collect();
+        columns.push(Column::F32(vals.into()));
+    }
+    let mut out = ColumnBatch {
+        schema: Schema::new(fields),
+        columns,
+        validity: Validity::all_live(n_groups),
+    };
+    if let Some((col, pred)) = &agg.having {
+        out = crate::engine::ops::filter::filter(&out, col, *pred)?;
+    }
+    Ok((ChunkedBatch::from_batch(out), pruned_chunks))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ops;
+
+    fn batch(rows: usize) -> ColumnBatch {
+        let schema = Schema::new(vec![
+            Field::f32("v"),
+            Field::f32("w"),
+            Field::i32("k"),
+        ]);
+        ColumnBatch::new(
+            schema,
+            vec![
+                Column::F32((0..rows).map(|i| i as f32).collect::<Vec<_>>().into()),
+                Column::F32((0..rows).map(|i| (i as f32) * 0.5).collect::<Vec<_>>().into()),
+                Column::I32((0..rows).map(|i| (i % 4) as i32).collect::<Vec<_>>().into()),
+            ],
+        )
+        .unwrap()
+    }
+
+    fn layout(b: &ColumnBatch, cuts: &[usize]) -> ChunkedBatch {
+        let mut out = ChunkedBatch::new(Arc::clone(&b.schema));
+        let mut prev = 0;
+        for &c in cuts {
+            out.push(b.slice(prev, c - prev)).unwrap();
+            prev = c;
+        }
+        out.push(b.slice(prev, b.rows() - prev)).unwrap();
+        out
+    }
+
+    /// Staged reference: run the members one op at a time.
+    fn staged(b: &ChunkedBatch, spec: &FusedChainSpec) -> Result<ChunkedBatch> {
+        let mut cur = b.clone();
+        for s in &spec.steps {
+            cur = match s {
+                FusedStep::Scan => cur.clone(),
+                FusedStep::Filter { col, pred } => ops::filter_chunks(&cur, col, *pred)?,
+                FusedStep::Select { keep } => {
+                    let names: Vec<&str> = keep.iter().map(|s| s.as_str()).collect();
+                    ops::project_select_chunks(&cur, &names)?
+                }
+                FusedStep::Affine { a, b, alpha, beta, out } => {
+                    ops::project_affine_chunks(&cur, a, b, *alpha, *beta, out)?
+                }
+            };
+        }
+        if let Some(a) = &spec.agg {
+            let groups: Vec<&str> = a.group.iter().map(|s| s.as_str()).collect();
+            let hv = a.having.as_ref().map(|(c, p)| (c.as_str(), *p));
+            cur = ops::hash_aggregate_chunks(&cur, &groups, &a.aggs, hv)?;
+        }
+        Ok(cur)
+    }
+
+    fn chain() -> FusedChainSpec {
+        FusedChainSpec {
+            steps: vec![
+                FusedStep::Scan,
+                FusedStep::Filter { col: "v".into(), pred: Predicate::Ge(3.0) },
+                FusedStep::Affine {
+                    a: "v".into(),
+                    b: "w".into(),
+                    alpha: 2.0,
+                    beta: -1.0,
+                    out: "mix".into(),
+                },
+                FusedStep::Select { keep: vec!["mix".into(), "k".into()] },
+            ],
+            agg: None,
+        }
+    }
+
+    #[test]
+    fn fused_matches_staged_projection_chain() {
+        let b = batch(17);
+        let chunks = layout(&b, &[4, 9]);
+        let (fused, pruned) = run_chunks(&chunks, &chain()).unwrap();
+        assert_eq!(fused, staged(&chunks, &chain()).unwrap());
+        assert_eq!(fused.num_chunks(), 3, "chunk layout preserved");
+        assert_eq!(pruned, 0);
+    }
+
+    #[test]
+    fn fused_matches_staged_aggregate_chain() {
+        let mut spec = chain();
+        spec.agg = Some(FusedAgg {
+            group: vec!["k".into()],
+            aggs: vec![AggSpec::sum("mix", "s"), AggSpec::count("c")],
+            having: Some(("c".into(), Predicate::Ge(2.0))),
+        });
+        let b = batch(23);
+        let chunks = layout(&b, &[5, 11, 16]);
+        let (fused, _) = run_chunks(&chunks, &spec).unwrap();
+        let reference = staged(&chunks, &spec).unwrap();
+        assert_eq!(fused, reference);
+        assert_eq!(fused.num_chunks(), 1, "aggregate materializes one chunk");
+    }
+
+    #[test]
+    fn aggregate_tail_prunes_dead_chunks_inline() {
+        let mut spec = FusedChainSpec {
+            steps: vec![
+                FusedStep::Scan,
+                // Rows 0..16: only the last chunk (12..) can match.
+                FusedStep::Filter { col: "v".into(), pred: Predicate::Ge(12.0) },
+            ],
+            agg: None,
+        };
+        spec.agg = Some(FusedAgg {
+            group: vec!["k".into()],
+            aggs: vec![AggSpec::count("c")],
+            having: None,
+        });
+        let b = batch(16);
+        let chunks = layout(&b, &[6, 12]);
+        let (fused, pruned) = run_chunks(&chunks, &spec).unwrap();
+        assert_eq!(pruned, 2, "both all-dead chunks pruned");
+        assert_eq!(fused, staged(&chunks, &spec).unwrap());
+    }
+
+    #[test]
+    fn provided_stats_prune_projection_chunks() {
+        let spec = FusedChainSpec {
+            steps: vec![
+                FusedStep::Scan,
+                FusedStep::Filter { col: "v".into(), pred: Predicate::Lt(4.0) },
+            ],
+            agg: None,
+        };
+        let b = batch(12);
+        let chunks = layout(&b, &[4, 8]);
+        let stats: Vec<Option<ChunkStats>> =
+            chunks.chunks().iter().map(|c| Some(ChunkStats::of(c))).collect();
+        let (fused, pruned) = run_chunks_with_stats(&chunks, &spec, &stats).unwrap();
+        assert_eq!(pruned, 2, "chunks [4,8) and [8,12) fail v < 4");
+        assert_eq!(fused, staged(&chunks, &spec).unwrap());
+        // Without stats, projection chains never prune (no win to buy).
+        let (same, none) = run_chunks(&chunks, &spec).unwrap();
+        assert_eq!(none, 0);
+        assert_eq!(same, fused);
+    }
+
+    #[test]
+    fn errors_match_staged_member_order() {
+        let b = batch(5);
+        let chunks = layout(&b, &[2]);
+        // Unknown filter column.
+        let bad = FusedChainSpec {
+            steps: vec![FusedStep::Scan, FusedStep::Filter {
+                col: "nope".into(),
+                pred: Predicate::Ge(0.0),
+            }],
+            agg: None,
+        };
+        assert_eq!(
+            run_chunks(&chunks, &bad).unwrap_err().to_string(),
+            staged(&chunks, &bad).unwrap_err().to_string()
+        );
+        // Affine over an i32 column.
+        let bad = FusedChainSpec {
+            steps: vec![FusedStep::Scan, FusedStep::Affine {
+                a: "k".into(),
+                b: "v".into(),
+                alpha: 1.0,
+                beta: 1.0,
+                out: "x".into(),
+            }],
+            agg: None,
+        };
+        assert_eq!(
+            run_chunks(&chunks, &bad).unwrap_err().to_string(),
+            staged(&chunks, &bad).unwrap_err().to_string()
+        );
+        // A select that drops the column a later member needs.
+        let bad = FusedChainSpec {
+            steps: vec![
+                FusedStep::Scan,
+                FusedStep::Select { keep: vec!["k".into()] },
+                FusedStep::Filter { col: "v".into(), pred: Predicate::Ge(0.0) },
+            ],
+            agg: None,
+        };
+        assert_eq!(
+            run_chunks(&chunks, &bad).unwrap_err().to_string(),
+            staged(&chunks, &bad).unwrap_err().to_string()
+        );
+        // Empty group list on the aggregate tail.
+        let bad = FusedChainSpec {
+            steps: vec![FusedStep::Scan],
+            agg: Some(FusedAgg { group: vec![], aggs: vec![AggSpec::count("c")], having: None }),
+        };
+        assert_eq!(
+            run_chunks(&chunks, &bad).unwrap_err().to_string(),
+            staged(&chunks, &bad).unwrap_err().to_string()
+        );
+    }
+
+    #[test]
+    fn empty_chunk_list_matches_staged() {
+        let b = batch(0);
+        let empty = ChunkedBatch::new(Arc::clone(&b.schema));
+        let (fused, _) = run_chunks(&empty, &chain()).unwrap();
+        assert_eq!(fused, staged(&empty, &chain()).unwrap());
+        assert_eq!(fused.num_chunks(), 0);
+        // Aggregate over nothing still materializes its one empty chunk.
+        let mut spec = chain();
+        spec.agg = Some(FusedAgg {
+            group: vec!["k".into()],
+            aggs: vec![AggSpec::count("c")],
+            having: None,
+        });
+        let (fused, _) = run_chunks(&empty, &spec).unwrap();
+        assert_eq!(fused.num_chunks(), 1);
+        assert_eq!(fused, staged(&empty, &spec).unwrap());
+    }
+
+    #[test]
+    fn affine_may_reference_earlier_affine_output() {
+        let spec = FusedChainSpec {
+            steps: vec![
+                FusedStep::Scan,
+                FusedStep::Affine {
+                    a: "v".into(),
+                    b: "w".into(),
+                    alpha: 1.0,
+                    beta: 1.0,
+                    out: "s1".into(),
+                },
+                FusedStep::Affine {
+                    a: "s1".into(),
+                    b: "v".into(),
+                    alpha: 0.5,
+                    beta: 2.0,
+                    out: "s2".into(),
+                },
+                FusedStep::Filter { col: "s2".into(), pred: Predicate::Ge(5.0) },
+            ],
+            agg: None,
+        };
+        let b = batch(11);
+        let chunks = layout(&b, &[3, 7]);
+        let (fused, _) = run_chunks(&chunks, &spec).unwrap();
+        assert_eq!(fused, staged(&chunks, &spec).unwrap());
+    }
+
+    #[test]
+    fn dead_input_rows_stay_dead_and_shared_buffers_stay_shared() {
+        let mut b = batch(9);
+        b.validity.set_live(4, false);
+        let chunks = layout(&b, &[3]);
+        let spec = FusedChainSpec {
+            steps: vec![
+                FusedStep::Scan,
+                FusedStep::Filter { col: "v".into(), pred: Predicate::Ge(1.0) },
+                FusedStep::Select { keep: vec!["v".into(), "k".into()] },
+            ],
+            agg: None,
+        };
+        let (fused, _) = run_chunks(&chunks, &spec).unwrap();
+        assert_eq!(fused, staged(&chunks, &spec).unwrap());
+        // Selected columns alias the input chunks — fusion adds no copies.
+        assert!(fused.chunks()[0].columns[0]
+            .shares_memory(&chunks.chunks()[0].columns[0]));
+    }
+}

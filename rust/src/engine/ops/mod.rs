@@ -6,6 +6,7 @@
 pub mod aggregate;
 pub mod expand;
 pub mod filter;
+pub mod fused;
 pub mod join;
 pub mod project;
 pub mod scan;
@@ -15,6 +16,7 @@ pub mod sort;
 pub use aggregate::{AggFunc, AggSpec, hash_aggregate, hash_aggregate_chunks};
 pub use expand::{expand, expand_chunks};
 pub use filter::{Predicate, filter, filter_chunks};
+pub use fused::{FusedAgg, FusedChainSpec, FusedStep};
 pub use join::{hash_join, hash_join_chunks};
 pub use project::{
     project_affine, project_affine_chunks, project_select, project_select_chunks,

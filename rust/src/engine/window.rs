@@ -24,15 +24,37 @@
 //! [`WindowState::snapshot`] (the memoized *contiguous* snapshot) and
 //! [`WindowState::snapshot_fresh`] remain as the coalesced reference
 //! implementations the equivalence tests and benches compare against.
+//!
+//! # Hot/cold encoded state
+//!
+//! A long window keeps most of its chunks untouched between snapshots:
+//! only the recent tail changes as datasets push in. State is therefore
+//! split at [`WINDOW_HOT_CHUNKS`]: the newest chunks stay *hot* (plain
+//! `Arc<ColumnBatch>`, zero-cost snapshot), while every chunk that falls
+//! past the threshold is demoted to *cold* — re-encoded as an
+//! [`EncodedChunk`] (RLE / dictionary / delta per column, min/max stats
+//! attached) and the plain form dropped. Cold chunks decode **lazily**
+//! on the first snapshot that needs them, memoized until eviction; the
+//! decode cache is excluded from [`WindowState::state_bytes_encoded`]
+//! because it is droppable at any time. Snapshots are bit-identical
+//! either way (codecs are exact, f32 preserved by bit pattern — see
+//! [`crate::engine::encode`]), which `diff_chunked` pins under arbitrary
+//! push/evict interleavings.
 
 use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::ColumnBatch;
 use crate::engine::dataset::Dataset;
+use crate::engine::encode::{encode_chunk, EncodedChunk};
 use crate::error::{Error, Result};
 use crate::sim::Time;
 use std::collections::VecDeque;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
+
+/// How many of the newest window chunks stay hot (plain, un-encoded).
+/// Chunks demote to encoded cold form when a push leaves them more than
+/// this many positions from the tail.
+pub const WINDOW_HOT_CHUNKS: usize = 8;
 
 /// Window shape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -84,15 +106,82 @@ impl WindowSpec {
     }
 }
 
+/// Per-dataset bookkeeping the state keeps alongside each chunk. The
+/// dataset's *batch* is not retained here — the chunk slot owns the only
+/// reference, so demoting a slot to cold genuinely frees the raw buffers
+/// (nothing else pins them).
+#[derive(Clone, Copy, Debug)]
+struct EntryMeta {
+    id: u64,
+    event_time: Time,
+    rows: usize,
+    wire_bytes: usize,
+}
+
+/// A cold (encoded) chunk plus its lazily-memoized decode. The decode
+/// cache is a pure accelerator: dropping it loses nothing.
+#[derive(Debug)]
+struct ColdChunk {
+    encoded: EncodedChunk,
+    decoded: OnceLock<Arc<ColumnBatch>>,
+}
+
+impl ColdChunk {
+    fn batch(&self) -> Arc<ColumnBatch> {
+        Arc::clone(
+            self.decoded
+                .get_or_init(|| Arc::new(self.encoded.decode())),
+        )
+    }
+}
+
+/// One window chunk: hot (plain) for the recent tail, cold (encoded)
+/// past [`WINDOW_HOT_CHUNKS`].
+#[derive(Debug)]
+enum StateChunk {
+    Hot(Arc<ColumnBatch>),
+    Cold(ColdChunk),
+}
+
+impl StateChunk {
+    /// The plain chunk view (decoding and memoizing a cold slot on
+    /// first use).
+    fn batch(&self) -> Arc<ColumnBatch> {
+        match self {
+            StateChunk::Hot(c) => Arc::clone(c),
+            StateChunk::Cold(c) => c.batch(),
+        }
+    }
+
+    /// Bytes this slot would occupy fully decoded.
+    fn raw_bytes(&self) -> usize {
+        match self {
+            StateChunk::Hot(c) => c.alloc_bytes(),
+            StateChunk::Cold(c) => c.encoded.raw_bytes(),
+        }
+    }
+
+    /// Bytes this slot actually holds (decode cache excluded — it is
+    /// droppable).
+    fn encoded_bytes(&self) -> usize {
+        match self {
+            StateChunk::Hot(c) => c.alloc_bytes(),
+            StateChunk::Cold(c) => c.encoded.encoded_bytes(),
+        }
+    }
+}
+
 /// Retained stream history for windowed operators (the `SegSpeedStr as A`
 /// side of LR1's self-join; the aggregation scope of LR2S/CM*).
 #[derive(Debug, Default)]
 pub struct WindowState {
-    entries: VecDeque<Dataset>,
-    /// One shared chunk per entry (same order): the building blocks of
-    /// [`WindowState::snapshot_chunks`]. Chunks are immutable, so held
-    /// snapshots never see later mutations — no copy-on-write exists.
-    chunks: VecDeque<Arc<ColumnBatch>>,
+    /// Per-dataset metadata, ordered by `(event_time, id)`.
+    entries: VecDeque<EntryMeta>,
+    /// One slot per entry (same order): the building blocks of
+    /// [`WindowState::snapshot_chunks`]. Hot slots are immutable shared
+    /// chunks, so held snapshots never see later mutations — no
+    /// copy-on-write exists; cold slots decode to a memoized chunk.
+    chunks: VecDeque<StateChunk>,
     /// Memoized *contiguous* snapshot; invalidated by push/evict.
     snap: Option<Arc<ColumnBatch>>,
 }
@@ -113,12 +202,34 @@ impl WindowState {
 
     /// Total rows in state.
     pub fn rows(&self) -> usize {
-        self.entries.iter().map(|d| d.rows()).sum()
+        self.entries.iter().map(|e| e.rows).sum()
     }
 
     /// Total wire bytes in state (sizing windowed-operator cost).
     pub fn wire_bytes(&self) -> usize {
-        self.entries.iter().map(|d| d.wire_bytes).sum()
+        self.entries.iter().map(|e| e.wire_bytes).sum()
+    }
+
+    /// Bytes the state would occupy with every chunk held plain.
+    pub fn state_bytes_raw(&self) -> usize {
+        self.chunks.iter().map(|c| c.raw_bytes()).sum()
+    }
+
+    /// Bytes the state actually holds: hot chunks at their plain
+    /// allocation, cold chunks at their encoded footprint (the lazy
+    /// decode cache is excluded — it is droppable). Never exceeds
+    /// [`WindowState::state_bytes_raw`]: the encoder keeps a column
+    /// plain (shared, not copied) when no codec wins.
+    pub fn state_bytes_encoded(&self) -> usize {
+        self.chunks.iter().map(|c| c.encoded_bytes()).sum()
+    }
+
+    /// Number of cold (encoded) chunks currently in state.
+    pub fn cold_chunks(&self) -> usize {
+        self.chunks
+            .iter()
+            .filter(|c| matches!(c, StateChunk::Cold(_)))
+            .count()
     }
 
     /// Insert processed datasets into state, kept ordered by
@@ -140,12 +251,39 @@ impl WindowState {
                 .rposition(|e| (e.event_time, e.id) <= key)
                 .map(|p| p + 1)
                 .unwrap_or(0);
+            let meta = EntryMeta {
+                id: d.id,
+                event_time: d.event_time,
+                rows: d.rows(),
+                wire_bytes: d.wire_bytes,
+            };
+            let slot = StateChunk::Hot(Arc::new(d.batch.clone()));
             if pos == self.entries.len() {
-                self.chunks.push_back(Arc::new(d.batch.clone()));
-                self.entries.push_back(d.clone());
+                self.chunks.push_back(slot);
+                self.entries.push_back(meta);
             } else {
-                self.chunks.insert(pos, Arc::new(d.batch.clone()));
-                self.entries.insert(pos, d.clone());
+                self.chunks.insert(pos, slot);
+                self.entries.insert(pos, meta);
+            }
+        }
+        self.demote_cold();
+    }
+
+    /// Demote every hot chunk that has fallen more than
+    /// [`WINDOW_HOT_CHUNKS`] positions from the tail: encode it and drop
+    /// the plain form (the slot holds the only reference, so the raw
+    /// buffers are freed — unless a caller still holds an older
+    /// snapshot, which keeps exactly what it captured). Demotion is
+    /// one-way: a cold chunk re-entering the hot region (out-of-order
+    /// insert behind it) stays cold and simply decodes lazily.
+    fn demote_cold(&mut self) {
+        let cold_end = self.chunks.len().saturating_sub(WINDOW_HOT_CHUNKS);
+        for slot in self.chunks.iter_mut().take(cold_end) {
+            if let StateChunk::Hot(c) = slot {
+                *slot = StateChunk::Cold(ColdChunk {
+                    encoded: encode_chunk(c),
+                    decoded: OnceLock::new(),
+                });
             }
         }
     }
@@ -177,11 +315,11 @@ impl WindowState {
     pub fn snapshot_chunks(&self) -> Result<Option<ChunkedBatch>> {
         let first = match self.chunks.front() {
             None => return Ok(None),
-            Some(c) => c,
+            Some(c) => c.batch(),
         };
         let mut out = ChunkedBatch::new(Arc::clone(&first.schema));
         for c in &self.chunks {
-            out.push_arc(Arc::clone(c)).map_err(|_| {
+            out.push_arc(c.batch()).map_err(|_| {
                 Error::Schema("window state holds datasets with mixed schemas".into())
             })?;
         }
@@ -199,7 +337,7 @@ impl WindowState {
     /// filed into its event position before the prefix is taken.
     pub fn snapshot_up_to(&self, boundary: Time) -> Result<Option<ChunkedBatch>> {
         let first = match (self.entries.front(), self.chunks.front()) {
-            (Some(e), Some(c)) if e.event_time <= boundary => c,
+            (Some(e), Some(c)) if e.event_time <= boundary => c.batch(),
             _ => return Ok(None),
         };
         let mut out = ChunkedBatch::new(Arc::clone(&first.schema));
@@ -207,7 +345,7 @@ impl WindowState {
             if e.event_time > boundary {
                 break;
             }
-            out.push_arc(Arc::clone(c)).map_err(|_| {
+            out.push_arc(c.batch()).map_err(|_| {
                 Error::Schema("window state holds datasets with mixed schemas".into())
             })?;
         }
@@ -239,7 +377,9 @@ impl WindowState {
         if self.entries.is_empty() {
             return Ok(None);
         }
-        let parts: Vec<&ColumnBatch> = self.entries.iter().map(|d| &d.batch).collect();
+        let batches: Vec<Arc<ColumnBatch>> =
+            self.chunks.iter().map(|c| c.batch()).collect();
+        let parts: Vec<&ColumnBatch> = batches.iter().map(|b| b.as_ref()).collect();
         Ok(Some(ColumnBatch::concat(&parts)?))
     }
 }
@@ -508,5 +648,83 @@ mod tests {
         let chunked = w.snapshot_chunks().unwrap().unwrap();
         let contiguous = w.snapshot().unwrap().unwrap();
         assert_eq!(chunked.coalesce(), *contiguous);
+    }
+
+    #[test]
+    fn chunks_demote_past_hot_threshold_and_shrink() {
+        let mut w = WindowState::new();
+        for i in 0..12u64 {
+            w.push(&[ds(i, i as f64 + 1.0)]);
+        }
+        assert_eq!(w.len(), 12);
+        assert_eq!(
+            w.cold_chunks(),
+            12 - WINDOW_HOT_CHUNKS,
+            "everything past the hot tail demotes"
+        );
+        // Each 5-row constant chunk: raw 4*5 + 5 = 25 bytes, RLE 8 + 5 = 13.
+        assert_eq!(w.state_bytes_raw(), 12 * 25);
+        assert_eq!(
+            w.state_bytes_encoded(),
+            (12 - WINDOW_HOT_CHUNKS) * 13 + WINDOW_HOT_CHUNKS * 25
+        );
+        assert!(w.state_bytes_encoded() < w.state_bytes_raw());
+    }
+
+    #[test]
+    fn cold_snapshot_is_bit_identical_to_pushed_data() {
+        let mut w = WindowState::new();
+        for i in 0..12u64 {
+            w.push(&[ds(i, i as f64 + 1.0)]);
+        }
+        assert!(w.cold_chunks() > 0);
+        let snap = w.snapshot_chunks().unwrap().unwrap().coalesce();
+        let expected: Vec<u32> = (0..12)
+            .flat_map(|i| std::iter::repeat(((i + 1) as f32).to_bits()).take(5))
+            .collect();
+        let got: Vec<u32> = snap
+            .column("x")
+            .unwrap()
+            .as_f32()
+            .unwrap()
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        assert_eq!(got, expected, "cold decode must reproduce exact bits");
+        let fresh = w.snapshot_fresh().unwrap().unwrap();
+        assert_eq!(snap, fresh);
+    }
+
+    #[test]
+    fn cold_decode_is_memoized_across_snapshots() {
+        let mut w = WindowState::new();
+        for i in 0..12u64 {
+            w.push(&[ds(i, i as f64 + 1.0)]);
+        }
+        let a = w.snapshot_chunks().unwrap().unwrap();
+        let b = w.snapshot_chunks().unwrap().unwrap();
+        // Chunk 0 is cold: both snapshots must share the one decode.
+        assert!(
+            Arc::ptr_eq(&a.chunks()[0], &b.chunks()[0]),
+            "cold chunk decoded twice"
+        );
+    }
+
+    #[test]
+    fn out_of_order_insert_behind_cold_region_stays_consistent() {
+        let mut in_order = WindowState::new();
+        let mut late = WindowState::new();
+        in_order.push(&[ds_at(0, 0.5, 0.5)]);
+        for i in 1..=11u64 {
+            let d = ds(i, i as f64);
+            in_order.push(&[d.clone()]);
+            late.push(&[d]);
+        }
+        // A late dataset files in front of already-cold chunks.
+        late.push(&[ds_at(0, 0.5, 12.0)]);
+        let a = in_order.snapshot_chunks().unwrap().unwrap();
+        let b = late.snapshot_chunks().unwrap().unwrap();
+        assert_eq!(a.coalesce(), b.coalesce(), "cold region broke event ordering");
+        assert_eq!(b.coalesce(), late.snapshot_fresh().unwrap().unwrap());
     }
 }

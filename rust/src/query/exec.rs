@@ -51,7 +51,8 @@ use crate::devices::model::{DeviceModel, OpVolume};
 use crate::devices::{cpu, gpu, Device};
 use crate::engine::chunked::ChunkedBatch;
 use crate::error::{Error, Result};
-use crate::query::dag::{OpKind, Query};
+use crate::query::dag::{OpKind, OpNode, OpSpec, Query};
+use crate::query::fuse::{FusedGroup, FusedPlan};
 use crate::query::physical::{transfer_boundaries, PhysicalPlan};
 use crate::runtime::client::Runtime;
 use std::time::{Duration, Instant};
@@ -169,6 +170,31 @@ pub struct ExecOutcome {
     pub contention: Duration,
     /// Per-op traces in topological (= op id) order.
     pub traces: Vec<OpTrace>,
+    /// Chunks a fused chain skipped outright because min/max block
+    /// stats proved its filter predicates unsatisfiable (zero without a
+    /// fused plan; data results are identical either way).
+    pub pruned_chunks: usize,
+}
+
+/// Optional execution inputs beyond the plan itself.
+#[derive(Default)]
+pub struct ExecOpts<'a> {
+    /// Fusion sidecar from [`crate::query::fuse::fuse`]: member runs
+    /// execute as one traversal. Charged times, transfers and occupancy
+    /// requests are **identical** to staged execution — each member
+    /// still emits its own [`OpTrace`] with the virtual intermediate
+    /// sizes the staged pipeline would have materialized — so plans,
+    /// schedules and metrics are unaffected; only real wall-clock work
+    /// (and the intermediate allocations) shrink. On the Real backend a
+    /// GPU-device group falls back to staged member execution (the PJRT
+    /// artifacts are per-op).
+    pub fused: Option<&'a FusedPlan>,
+    /// Override for the window-side (aux) `(bytes, chunks)` the Eq. 9
+    /// transfer/coalesce terms charge — the *encoded* window footprint
+    /// when cold state is encoded, in place of the plain snapshot's
+    /// allocation. Mirrored with the planner's `QueryCandidate` aux so
+    /// the two never diverge.
+    pub aux: Option<(f64, usize)>,
 }
 
 /// Execute `query` over `input` with `plan` on an unshared device
@@ -200,6 +226,21 @@ pub fn execute_with_occupancy(
     env: &ExecEnv,
     occupancy: &mut dyn GpuOccupancy,
 ) -> Result<ExecOutcome> {
+    execute_with_opts(query, plan, input, window, env, occupancy, &ExecOpts::default())
+}
+
+/// [`execute_with_occupancy`] plus [`ExecOpts`]: the fusion sidecar and
+/// the encoded-aux pricing override. The full entry point the session
+/// drives.
+pub fn execute_with_opts(
+    query: &Query,
+    plan: &PhysicalPlan,
+    input: impl Into<ChunkedBatch>,
+    window: Option<&ChunkedBatch>,
+    env: &ExecEnv,
+    occupancy: &mut dyn GpuOccupancy,
+    opts: &ExecOpts,
+) -> Result<ExecOutcome> {
     let input = input.into();
     if query.ops.is_empty() {
         return Err(Error::Plan("cannot execute an empty query".into()));
@@ -214,10 +255,38 @@ pub fn execute_with_occupancy(
     if env.num_cores == 0 || env.num_gpus == 0 {
         return Err(Error::Plan("need at least one core and one gpu".into()));
     }
-    let aux_bytes = window.map(|w| w.alloc_bytes()).unwrap_or(0) as f64;
-    let aux_chunks = window.map(|w| w.num_chunks()).unwrap_or(0);
+    // Aux (window-state) pricing: the encoded footprint when the caller
+    // supplies one, else the plain snapshot allocation.
+    let (aux_bytes, aux_chunks) = match opts.aux {
+        Some((bytes, chunks)) => (bytes, chunks),
+        None => (
+            window.map(|w| w.alloc_bytes()).unwrap_or(0) as f64,
+            window.map(|w| w.num_chunks()).unwrap_or(0),
+        ),
+    };
     let order = query.topo_order()?;
     let consumers = query.consumers();
+
+    // Fusion sidecar → per-op dispatch tables. Real-backend GPU groups
+    // fall back to staged member execution (PJRT artifacts are per-op);
+    // everything else runs the group as one traversal at its head.
+    let n_ops = query.ops.len();
+    let mut fused_head: Vec<Option<&FusedGroup>> = vec![None; n_ops];
+    let mut fused_follower = vec![false; n_ops];
+    if let Some(f) = opts.fused {
+        for g in &f.groups {
+            if g.ops.iter().any(|&m| m >= n_ops) {
+                return Err(Error::Plan("fused plan does not match query".into()));
+            }
+            if env.backend == ExecBackend::Real && g.device == Device::Gpu {
+                continue;
+            }
+            fused_head[g.head()] = Some(g);
+            for &m in &g.ops[1..] {
+                fused_follower[m] = true;
+            }
+        }
+    }
 
     // Per-node output slots; a slot is taken (moved) by its last
     // consumer and cloned for earlier ones.
@@ -229,32 +298,36 @@ pub fn execute_with_occupancy(
     let mut proc = env.model.batch_fixed;
     let mut transfer_total = Duration::ZERO;
     let mut contention_total = Duration::ZERO;
+    let mut pruned_chunks = 0usize;
     let mut traces = Vec::with_capacity(query.ops.len());
 
     for &i in &order {
         let op = &query.ops[i];
+        // Interior/tail members of an active fused group: the head's
+        // traversal already produced (or will have produced — members
+        // are contiguous in id order) the tail's output; nothing to do.
+        if fused_follower[i] {
+            continue;
+        }
+
+        if let Some(group) = fused_head[i] {
+            let current =
+                assemble_input(op, &mut source, &mut outputs, &mut remaining_uses)?;
+            let fused = run_fused_group(
+                query, plan, &consumers, group, current, env, occupancy, &mut proc,
+                &mut traces,
+            )?;
+            transfer_total += fused.transfer;
+            contention_total += fused.contention;
+            pruned_chunks += fused.pruned;
+            outputs[group.tail()] = Some(fused.result);
+            continue;
+        }
+
         let device = plan.per_op[i].device;
         let kind = op.spec.kind();
 
-        // ---- Input assembly: move/clone/append producer outputs. A
-        // multi-input node (Union) appends its branches' chunk lists
-        // here — O(#chunks), zero row copies — so the operator itself
-        // stays unary. Branch fan-out clones are O(#chunks) Arc bumps.
-        let current: ChunkedBatch = if op.inputs.is_empty() {
-            source
-                .take()
-                .ok_or_else(|| Error::Plan("query has more than one source scan".into()))?
-        } else if op.inputs.len() == 1 {
-            take_output(&mut outputs, &mut remaining_uses, op.inputs[0])?
-        } else {
-            let parts: Vec<ChunkedBatch> = op
-                .inputs
-                .iter()
-                .map(|&p| take_output(&mut outputs, &mut remaining_uses, p))
-                .collect::<Result<_>>()?;
-            let refs: Vec<&ChunkedBatch> = parts.iter().collect();
-            ChunkedBatch::concat(&refs)?
-        };
+        let current = assemble_input(op, &mut source, &mut outputs, &mut remaining_uses)?;
         // Cost models charge *allocated* bytes (dead rows still travel
         // through kernels and over PCIe until a shuffle compacts them).
         let in_bytes = current.alloc_bytes();
@@ -383,6 +456,159 @@ pub fn execute_with_occupancy(
         transfer: transfer_total,
         contention: contention_total,
         traces,
+        pruned_chunks,
+    })
+}
+
+/// Input assembly: move/clone/append producer outputs. A multi-input
+/// node (Union) appends its branches' chunk lists here — O(#chunks),
+/// zero row copies — so the operator itself stays unary. Branch fan-out
+/// clones are O(#chunks) Arc bumps.
+fn assemble_input(
+    op: &OpNode,
+    source: &mut Option<ChunkedBatch>,
+    outputs: &mut [Option<ChunkedBatch>],
+    remaining_uses: &mut [usize],
+) -> Result<ChunkedBatch> {
+    if op.inputs.is_empty() {
+        source
+            .take()
+            .ok_or_else(|| Error::Plan("query has more than one source scan".into()))
+    } else if op.inputs.len() == 1 {
+        take_output(outputs, remaining_uses, op.inputs[0])
+    } else {
+        let parts: Vec<ChunkedBatch> = op
+            .inputs
+            .iter()
+            .map(|&p| take_output(outputs, remaining_uses, p))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&ChunkedBatch> = parts.iter().collect();
+        ChunkedBatch::concat(&refs)
+    }
+}
+
+struct FusedRun {
+    result: ChunkedBatch,
+    transfer: Duration,
+    contention: Duration,
+    pruned: usize,
+}
+
+/// Execute one fused group as a single traversal and charge every
+/// member exactly as staged execution would have: the same per-member
+/// modeled times over the same *virtual* intermediate sizes (filter
+/// keeps its input allocation; select is `4·kept·rows + rows`; affine
+/// appends one 4-byte column; the aggregate tail is priced at its real
+/// output), the same transfer boundaries, and one occupancy request per
+/// simulated GPU member in member order. Plans, schedules and metrics
+/// therefore cannot tell fused from staged — only wall-clock work and
+/// intermediate allocations differ. On the Real backend (CPU groups)
+/// the single measured duration is attributed to the tail's trace.
+#[allow(clippy::too_many_arguments)]
+fn run_fused_group(
+    query: &Query,
+    plan: &PhysicalPlan,
+    consumers: &[Vec<usize>],
+    group: &FusedGroup,
+    current: ChunkedBatch,
+    env: &ExecEnv,
+    occupancy: &mut dyn GpuOccupancy,
+    proc: &mut Duration,
+    traces: &mut Vec<OpTrace>,
+) -> Result<FusedRun> {
+    let device = group.device;
+    let head_in_chunks = current.num_chunks();
+    let rows_total = current.rows();
+    let measured_start =
+        (env.backend == ExecBackend::Real).then(Instant::now);
+    let (result, pruned) = cpu::run_fused_chain(&group.spec, &current)?;
+    let measured = measured_start.map(|t| t.elapsed());
+
+    let mut transfer_total = Duration::ZERO;
+    let mut contention_total = Duration::ZERO;
+    let mut cur_bytes = current.alloc_bytes();
+    for (mi, &m) in group.ops.iter().enumerate() {
+        let mop = &query.ops[m];
+        let kind = mop.spec.kind();
+        let m_in_bytes = cur_bytes;
+        let m_out_bytes = match &mop.spec {
+            OpSpec::Scan => cur_bytes,
+            OpSpec::Filter { .. } => cur_bytes,
+            OpSpec::ProjectSelect { keep } => 4 * keep.len() * rows_total + rows_total,
+            OpSpec::ProjectAffine { .. } => cur_bytes + 4 * rows_total,
+            OpSpec::Aggregate { .. } => result.alloc_bytes(),
+            other => {
+                return Err(Error::Plan(format!(
+                    "op {m} ({}) is not fusable",
+                    other.kind().name()
+                )))
+            }
+        };
+        let op_time = match measured {
+            // One real traversal: the chain's wall-clock lands on the
+            // tail (where the output materializes).
+            Some(t) if mi + 1 == group.ops.len() => t,
+            Some(_) => Duration::ZERO,
+            None => {
+                let vol_total =
+                    OpVolume::new(m_in_bytes as f64, m_out_bytes as f64, 0.0);
+                match device {
+                    Device::Cpu => {
+                        let n = env.num_cores as f64;
+                        let vol = OpVolume::new(
+                            vol_total.in_bytes / n,
+                            vol_total.out_bytes / n,
+                            vol_total.aux_bytes,
+                        );
+                        env.model.op_time(Device::Cpu, kind, vol)
+                    }
+                    Device::Gpu => {
+                        let t = env.model.op_time(Device::Gpu, kind, vol_total);
+                        Duration::from_secs_f64(t.as_secs_f64() / env.num_gpus as f64)
+                    }
+                }
+            }
+        };
+        let mut op_transfer = Duration::ZERO;
+        let mut op_wait = Duration::ZERO;
+        if env.backend == ExecBackend::Simulated && device == Device::Gpu {
+            let (entering, leaving) =
+                transfer_boundaries(&mop.inputs, &consumers[m], |n| {
+                    plan.per_op[n].device == Device::Cpu
+                });
+            // Fusable members never read the window side: no aux terms.
+            // Interior members sit between same-device neighbors, so
+            // only the head can enter and only the tail can leave — the
+            // group coalesces once at its entering boundary, as staged.
+            if entering {
+                op_transfer += env
+                    .model
+                    .coalesce_time(m_in_bytes as f64, head_in_chunks)
+                    + env.model.transfer_time(m_in_bytes as f64);
+            }
+            if leaving {
+                op_transfer += env.model.transfer_time(m_out_bytes as f64);
+            }
+            op_wait = occupancy.request(*proc, op_time + op_transfer);
+        }
+        *proc += op_wait + op_time + op_transfer;
+        transfer_total += op_transfer;
+        contention_total += op_wait;
+        traces.push(OpTrace {
+            op_id: m,
+            kind,
+            device,
+            time: op_time + op_transfer,
+            in_bytes: m_in_bytes,
+            out_bytes: m_out_bytes,
+        });
+        cur_bytes = m_out_bytes;
+    }
+    Ok(FusedRun {
+        result,
+        transfer: transfer_total,
+        contention: contention_total,
+        pruned,
     })
 }
 
@@ -716,5 +942,210 @@ mod tests {
         assert_eq!(t.busy(), Duration::from_secs(6));
         assert_eq!(t.waited(), Duration::from_secs(1));
         assert_eq!(t.reservations(), 3);
+    }
+
+    // ---- fused execution -------------------------------------------------
+
+    use crate::engine::ops::aggregate::AggSpec;
+    use crate::query::fuse;
+
+    fn ranged_batch(lo: i32, rows: usize) -> ColumnBatch {
+        let schema = Schema::new(vec![Field::i32("k"), Field::f32("v")]);
+        ColumnBatch::new(
+            schema,
+            vec![
+                Column::I32((0..rows as i32).map(|i| i % 4).collect::<Vec<i32>>().into()),
+                Column::F32(
+                    (0..rows as i32).map(|i| (lo + i) as f32).collect::<Vec<f32>>().into(),
+                ),
+            ],
+        )
+        .unwrap()
+    }
+
+    fn chunked_input() -> ChunkedBatch {
+        let mut c = ChunkedBatch::from_batch(ranged_batch(0, 40));
+        c.push(ranged_batch(40, 30)).unwrap();
+        c.push(ranged_batch(70, 30)).unwrap();
+        c
+    }
+
+    fn fused_query() -> Query {
+        QueryBuilder::scan("f")
+            .window(WindowSpec::sliding(D::from_secs(30), D::from_secs(5)))
+            .filter("v", Predicate::Ge(10.0))
+            .project_affine("v", "v", 2.0, -1.0, "m")
+            .select(&["k", "m"])
+            .build()
+            .unwrap()
+    }
+
+    /// The fused-execution contract, executor level: identical data,
+    /// identical `proc`, identical per-member traces (times and the
+    /// virtual intermediate sizes) as staged execution.
+    #[test]
+    fn fused_cpu_matches_staged_results_and_charges() {
+        let model = DeviceModel::default();
+        let q = fused_query();
+        let plan = all(&q, Device::Cpu);
+        let fplan = fuse::fuse(&q, &plan);
+        assert_eq!(fplan.fused_ops(), 4);
+        let staged = execute(&q, &plan, chunked_input(), None, &env(&model)).unwrap();
+        let fused = execute_with_opts(
+            &q,
+            &plan,
+            chunked_input(),
+            None,
+            &env(&model),
+            &mut NoContention,
+            &ExecOpts { fused: Some(&fplan), aux: None },
+        )
+        .unwrap();
+        assert_eq!(fused.result, staged.result);
+        assert_eq!(fused.proc, staged.proc);
+        assert_eq!(fused.transfer, staged.transfer);
+        assert_eq!(fused.traces.len(), staged.traces.len());
+        for (f, s) in fused.traces.iter().zip(&staged.traces) {
+            assert_eq!(f.op_id, s.op_id);
+            assert_eq!(f.time, s.time, "op {} time diverged", f.op_id);
+            assert_eq!(f.in_bytes, s.in_bytes, "op {} in_bytes diverged", f.op_id);
+            assert_eq!(f.out_bytes, s.out_bytes, "op {} out_bytes diverged", f.op_id);
+        }
+        assert_eq!(fused.pruned_chunks, 0);
+    }
+
+    /// On a shared GPU the fused group must make the same occupancy
+    /// reservations in the same order as staged members would — the
+    /// round's predicted serialization stays realized.
+    #[test]
+    fn fused_gpu_matches_staged_occupancy_and_transfers() {
+        let model = DeviceModel::default();
+        let q = fused_query();
+        let plan = all(&q, Device::Gpu);
+        let fplan = fuse::fuse(&q, &plan);
+        let mut t_staged = GpuTimeline::new();
+        t_staged.request(Duration::ZERO, Duration::from_millis(700));
+        let staged = execute_with_occupancy(
+            &q,
+            &plan,
+            chunked_input(),
+            None,
+            &env(&model),
+            &mut t_staged,
+        )
+        .unwrap();
+        let mut t_fused = GpuTimeline::new();
+        t_fused.request(Duration::ZERO, Duration::from_millis(700));
+        let fused = execute_with_opts(
+            &q,
+            &plan,
+            chunked_input(),
+            None,
+            &env(&model),
+            &mut t_fused,
+            &ExecOpts { fused: Some(&fplan), aux: None },
+        )
+        .unwrap();
+        assert_eq!(fused.result, staged.result);
+        assert_eq!(fused.proc, staged.proc);
+        assert_eq!(fused.transfer, staged.transfer);
+        assert_eq!(fused.contention, staged.contention);
+        assert!(fused.contention > Duration::ZERO);
+        assert_eq!(t_fused.reservations(), t_staged.reservations());
+        assert_eq!(t_fused.free_at(), t_staged.free_at());
+        assert_eq!(t_fused.busy(), t_staged.busy());
+    }
+
+    #[test]
+    fn fused_aggregate_chain_matches_staged() {
+        let model = DeviceModel::default();
+        let q = QueryBuilder::scan("a")
+            .window(WindowSpec::sliding(D::from_secs(30), D::from_secs(5)))
+            .filter("v", Predicate::Ge(10.0))
+            .aggregate(&["k"], vec![AggSpec::sum("v", "s")], None)
+            .build()
+            .unwrap();
+        let plan = all(&q, Device::Cpu);
+        let fplan = fuse::fuse(&q, &plan);
+        assert_eq!(fplan.fused_ops(), 3);
+        let staged = execute(&q, &plan, chunked_input(), None, &env(&model)).unwrap();
+        let fused = execute_with_opts(
+            &q,
+            &plan,
+            chunked_input(),
+            None,
+            &env(&model),
+            &mut NoContention,
+            &ExecOpts { fused: Some(&fplan), aux: None },
+        )
+        .unwrap();
+        assert_eq!(fused.result, staged.result);
+        assert_eq!(fused.proc, staged.proc);
+    }
+
+    /// Min/max chunk pruning under an aggregate tail: the dead chunk is
+    /// skipped (and counted) without perturbing the result.
+    #[test]
+    fn fused_aggregate_prunes_dead_chunks_and_reports_them() {
+        let model = DeviceModel::default();
+        let q = QueryBuilder::scan("p")
+            .window(WindowSpec::sliding(D::from_secs(30), D::from_secs(5)))
+            .filter("v", Predicate::Ge(50.0))
+            .aggregate(&["k"], vec![AggSpec::sum("v", "s")], None)
+            .build()
+            .unwrap();
+        let plan = all(&q, Device::Cpu);
+        let fplan = fuse::fuse(&q, &plan);
+        let staged = execute(&q, &plan, chunked_input(), None, &env(&model)).unwrap();
+        let fused = execute_with_opts(
+            &q,
+            &plan,
+            chunked_input(),
+            None,
+            &env(&model),
+            &mut NoContention,
+            &ExecOpts { fused: Some(&fplan), aux: None },
+        )
+        .unwrap();
+        assert_eq!(fused.result, staged.result);
+        // Chunk 0 holds v ∈ [0, 40): provably dead under `v ≥ 50`.
+        assert_eq!(fused.pruned_chunks, 1);
+        assert_eq!(staged.pruned_chunks, 0);
+    }
+
+    /// The encoded-aux override reaches both the Eq. 9 transfer term and
+    /// the windowed op's work volume: smaller priced window state means
+    /// strictly cheaper transfer and proc, with identical data.
+    #[test]
+    fn aux_override_prices_encoded_window_bytes() {
+        let model = DeviceModel::default();
+        let q = QueryBuilder::scan("j")
+            .window(WindowSpec::sliding(D::from_secs(30), D::from_secs(5)))
+            .join_window("k", "k")
+            .build()
+            .unwrap();
+        // CPU scan feeding a GPU join: the join *enters* the device, so
+        // its entering boundary stages batch + window-state bytes.
+        let plan = PhysicalPlan::from_devices(
+            &q,
+            &DevicePlan { per_op: vec![Device::Cpu, Device::Gpu] },
+        )
+        .unwrap();
+        let mut w = ChunkedBatch::from_batch(batch(100));
+        w.push(batch(100)).unwrap();
+        let plain = execute(&q, &plan, batch(100), Some(&w), &env(&model)).unwrap();
+        let encoded = execute_with_opts(
+            &q,
+            &plan,
+            batch(100),
+            Some(&w),
+            &env(&model),
+            &mut NoContention,
+            &ExecOpts { fused: None, aux: Some((w.alloc_bytes() as f64 / 2.0, w.num_chunks())) },
+        )
+        .unwrap();
+        assert_eq!(encoded.result, plain.result);
+        assert!(encoded.transfer < plain.transfer);
+        assert!(encoded.proc < plain.proc);
     }
 }

@@ -1,0 +1,400 @@
+//! Operator fusion pass: collapse same-device scan→filter→project→
+//! (aggregate) chains of a [`PhysicalPlan`] into [`FusedGroup`]s that
+//! execute as one typed loop per chunk
+//! ([`crate::engine::ops::fused`]).
+//!
+//! The pass is a *sidecar*: the `PhysicalPlan` itself is untouched (its
+//! arity, per-op devices and `PartialEq` stay exactly as planned), and
+//! the executor consults the [`FusedPlan`] to know which member runs are
+//! replaced by a single fused traversal. The scheduler does the same to
+//! cost a fused chain as ONE op with the chain's combined row/byte/chunk
+//! flow.
+//!
+//! # Eligibility
+//!
+//! A maximal run of ops fuses when every member:
+//!
+//! * is a fusable kind — `Scan`, `Filter`, `ProjectSelect`,
+//!   `ProjectAffine` — plus at most one terminal `Aggregate`,
+//! * sits on the **same device** as the head (a device switch is a
+//!   transfer boundary; fusing across it would hide a PCIe hop the
+//!   planner priced),
+//! * is **strictly linear** past the head: each non-head member reads
+//!   exactly its predecessor (`inputs == [prev]`), and each non-tail
+//!   member feeds exactly its successor (`consumers == [next]`). A
+//!   branch point ends the run — fusing through it would force the
+//!   shared intermediate to materialize anyway,
+//!
+//! and the run has ≥ 2 members (fusing a single op buys nothing).
+//! An `Aggregate` can only ever be the tail: it collapses rows, so
+//! nothing downstream of it belongs to the same traversal.
+
+use crate::devices::Device;
+use crate::engine::ops::fused::{FusedAgg, FusedChainSpec, FusedStep};
+use crate::query::dag::{OpSpec, Query};
+use crate::query::physical::PhysicalPlan;
+
+/// One fused chain: member op ids in chain order, the shared device,
+/// and the engine-level spec the fused kernel executes.
+#[derive(Clone, Debug)]
+pub struct FusedGroup {
+    /// Member logical op ids, ascending; each reads the previous.
+    pub ops: Vec<usize>,
+    pub device: Device,
+    pub spec: FusedChainSpec,
+}
+
+impl FusedGroup {
+    /// First member — the fused chain consumes this op's input batch.
+    pub fn head(&self) -> usize {
+        self.ops[0]
+    }
+
+    /// Last member — the fused result lands in this op's output slot.
+    pub fn tail(&self) -> usize {
+        *self.ops.last().expect("group is non-empty")
+    }
+}
+
+/// The fusion sidecar for one (query, physical plan) pair.
+#[derive(Clone, Debug, Default)]
+pub struct FusedPlan {
+    pub groups: Vec<FusedGroup>,
+    /// Index-aligned with `query.ops`: which group (index into
+    /// `groups`) each op belongs to, if any.
+    member_of: Vec<Option<usize>>,
+}
+
+impl FusedPlan {
+    /// The no-fusion sidecar (staged execution for every op).
+    pub fn none(n_ops: usize) -> FusedPlan {
+        FusedPlan { groups: Vec::new(), member_of: vec![None; n_ops] }
+    }
+
+    /// The group containing `op_id`, if it was fused.
+    pub fn group_of(&self, op_id: usize) -> Option<&FusedGroup> {
+        self.member_of
+            .get(op_id)
+            .copied()
+            .flatten()
+            .map(|g| &self.groups[g])
+    }
+
+    /// Is `op_id` a fused member that is *not* its group's head? The
+    /// executor skips these entirely (the head's traversal already
+    /// produced the tail's output).
+    pub fn is_follower(&self, op_id: usize) -> bool {
+        self.group_of(op_id).is_some_and(|g| g.head() != op_id)
+    }
+
+    pub fn fused_ops(&self) -> usize {
+        self.member_of.iter().filter(|m| m.is_some()).count()
+    }
+}
+
+fn fusable_member(spec: &OpSpec) -> bool {
+    matches!(
+        spec,
+        OpSpec::Scan
+            | OpSpec::Filter { .. }
+            | OpSpec::ProjectSelect { .. }
+            | OpSpec::ProjectAffine { .. }
+    )
+}
+
+fn step_of(spec: &OpSpec) -> FusedStep {
+    match spec {
+        OpSpec::Scan => FusedStep::Scan,
+        OpSpec::Filter { col, pred } => {
+            FusedStep::Filter { col: col.clone(), pred: *pred }
+        }
+        OpSpec::ProjectSelect { keep } => FusedStep::Select { keep: keep.clone() },
+        OpSpec::ProjectAffine { a, b, alpha, beta, out } => FusedStep::Affine {
+            a: a.clone(),
+            b: b.clone(),
+            alpha: *alpha,
+            beta: *beta,
+            out: out.clone(),
+        },
+        other => unreachable!("non-fusable member {:?}", other.kind()),
+    }
+}
+
+/// Run the fusion pass. Greedy maximal runs in id order: because every
+/// edge points backward (`input < id`), scanning heads in ascending id
+/// order and extending forward always discovers a chain from its
+/// earliest fusable member, so runs are maximal and each op lands in at
+/// most one group.
+pub fn fuse(query: &Query, plan: &PhysicalPlan) -> FusedPlan {
+    let n = query.len();
+    let consumers = query.consumers();
+    let mut member_of: Vec<Option<usize>> = vec![None; n];
+    let mut groups: Vec<FusedGroup> = Vec::new();
+    for head in 0..n {
+        if member_of[head].is_some() || !fusable_member(&query.ops[head].spec) {
+            continue;
+        }
+        let device = plan.device(head);
+        let mut ops = vec![head];
+        let mut agg: Option<FusedAgg> = None;
+        let mut cur = head;
+        loop {
+            // The run continues only through a strictly linear,
+            // same-device edge.
+            let next = match consumers[cur].as_slice() {
+                &[next] => next,
+                _ => break,
+            };
+            let node = &query.ops[next];
+            if node.inputs.as_slice() != [cur]
+                || member_of[next].is_some()
+                || plan.device(next) != device
+            {
+                break;
+            }
+            if fusable_member(&node.spec) {
+                ops.push(next);
+                cur = next;
+                continue;
+            }
+            if let OpSpec::Aggregate { group, aggs, having } = &node.spec {
+                ops.push(next);
+                agg = Some(FusedAgg {
+                    group: group.clone(),
+                    aggs: aggs.clone(),
+                    having: having.clone(),
+                });
+            }
+            break;
+        }
+        if ops.len() < 2 {
+            continue;
+        }
+        let g = groups.len();
+        for &id in &ops {
+            member_of[id] = Some(g);
+        }
+        let steps = ops
+            .iter()
+            .take(ops.len() - usize::from(agg.is_some()))
+            .map(|&id| step_of(&query.ops[id].spec))
+            .collect();
+        groups.push(FusedGroup { ops, device, spec: FusedChainSpec { steps, agg } });
+    }
+    FusedPlan { groups, member_of }
+}
+
+/// Device-agnostic structural runs: the maximal fusable chains of the
+/// *logical* DAG, ignoring device placement, as `op id → run id`. The
+/// scheduler consults this while it explores device assignments — any
+/// sub-run whose members currently share a device will execute as one
+/// traversal, so it books ONE device reservation with the chain's
+/// combined flow. [`fuse`] (device-aware, over the final plan) decides
+/// what actually executes fused.
+pub fn fusable_runs(query: &Query) -> Vec<Option<usize>> {
+    let n = query.len();
+    let consumers = query.consumers();
+    let mut run_of: Vec<Option<usize>> = vec![None; n];
+    let mut next_run = 0usize;
+    for head in 0..n {
+        if run_of[head].is_some() || !fusable_member(&query.ops[head].spec) {
+            continue;
+        }
+        let mut ops = vec![head];
+        let mut cur = head;
+        loop {
+            let next = match consumers[cur].as_slice() {
+                &[next] => next,
+                _ => break,
+            };
+            let node = &query.ops[next];
+            if node.inputs.as_slice() != [cur] || run_of[next].is_some() {
+                break;
+            }
+            if fusable_member(&node.spec) {
+                ops.push(next);
+                cur = next;
+                continue;
+            }
+            if matches!(node.spec, OpSpec::Aggregate { .. }) {
+                ops.push(next);
+            }
+            break;
+        }
+        if ops.len() < 2 {
+            continue;
+        }
+        for &id in &ops {
+            run_of[id] = Some(next_run);
+        }
+        next_run += 1;
+    }
+    run_of
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ops::aggregate::AggSpec;
+    use crate::engine::ops::filter::Predicate;
+    use crate::engine::window::WindowSpec;
+    use crate::query::dag::OpNode;
+    use crate::query::physical::DevicePlan;
+    use std::time::Duration;
+
+    fn filter() -> OpSpec {
+        OpSpec::Filter { col: "v".into(), pred: Predicate::Ge(1.0) }
+    }
+
+    fn select() -> OpSpec {
+        OpSpec::ProjectSelect { keep: vec!["v".into(), "k".into()] }
+    }
+
+    fn aggregate() -> OpSpec {
+        OpSpec::Aggregate {
+            group: vec!["k".into()],
+            aggs: vec![AggSpec::count("c")],
+            having: None,
+        }
+    }
+
+    fn chain_query(specs: Vec<OpSpec>) -> Query {
+        Query {
+            name: "t".into(),
+            ops: specs
+                .into_iter()
+                .enumerate()
+                .map(|(id, spec)| OpNode::chained(id, spec))
+                .collect(),
+            window: WindowSpec::tumbling(Duration::from_secs(30)),
+            uses_window_state: false,
+        }
+    }
+
+    fn plan(q: &Query, devices: Vec<Device>) -> PhysicalPlan {
+        PhysicalPlan::from_devices(q, &DevicePlan { per_op: devices }).unwrap()
+    }
+
+    #[test]
+    fn full_chain_fuses_into_one_group_with_aggregate_tail() {
+        let q = chain_query(vec![OpSpec::Scan, filter(), select(), aggregate()]);
+        let p = plan(&q, vec![Device::Cpu; 4]);
+        let f = fuse(&q, &p);
+        assert_eq!(f.groups.len(), 1);
+        assert_eq!(f.groups[0].ops, vec![0, 1, 2, 3]);
+        assert!(f.groups[0].spec.agg.is_some());
+        assert_eq!(f.groups[0].spec.steps.len(), 3, "aggregate is the tail, not a step");
+        assert_eq!(f.fused_ops(), 4);
+        assert!(!f.is_follower(0));
+        assert!(f.is_follower(3));
+    }
+
+    #[test]
+    fn device_switch_splits_the_run() {
+        // scan,filter on GPU; select,filter on CPU: two groups of 2.
+        let q = chain_query(vec![OpSpec::Scan, filter(), select(), filter()]);
+        let p = plan(&q, vec![Device::Gpu, Device::Gpu, Device::Cpu, Device::Cpu]);
+        let f = fuse(&q, &p);
+        assert_eq!(f.groups.len(), 2);
+        assert_eq!(f.groups[0].ops, vec![0, 1]);
+        assert_eq!(f.groups[0].device, Device::Gpu);
+        assert_eq!(f.groups[1].ops, vec![2, 3]);
+        assert_eq!(f.groups[1].device, Device::Cpu);
+    }
+
+    #[test]
+    fn single_op_runs_do_not_fuse() {
+        // Alternating devices: every run has length 1.
+        let q = chain_query(vec![OpSpec::Scan, filter(), select()]);
+        let p = plan(&q, vec![Device::Cpu, Device::Gpu, Device::Cpu]);
+        let f = fuse(&q, &p);
+        assert!(f.groups.is_empty());
+        assert_eq!(f.fused_ops(), 0);
+        assert!(f.group_of(1).is_none());
+    }
+
+    #[test]
+    fn non_fusable_kind_breaks_the_chain() {
+        // scan→filter | expand | filter→select: expand interrupts.
+        let q = chain_query(vec![
+            OpSpec::Scan,
+            filter(),
+            OpSpec::Expand,
+            filter(),
+            select(),
+        ]);
+        let p = plan(&q, vec![Device::Cpu; 5]);
+        let f = fuse(&q, &p);
+        assert_eq!(f.groups.len(), 2);
+        assert_eq!(f.groups[0].ops, vec![0, 1]);
+        assert_eq!(f.groups[1].ops, vec![3, 4]);
+        assert!(f.group_of(2).is_none());
+    }
+
+    #[test]
+    fn aggregate_is_terminal_only() {
+        // Ops after the aggregate start a fresh run.
+        let q = chain_query(vec![OpSpec::Scan, filter(), aggregate(), filter(), select()]);
+        let p = plan(&q, vec![Device::Cpu; 5]);
+        let f = fuse(&q, &p);
+        assert_eq!(f.groups.len(), 2);
+        assert_eq!(f.groups[0].ops, vec![0, 1, 2]);
+        assert_eq!(f.groups[0].tail(), 2);
+        assert_eq!(f.groups[1].ops, vec![3, 4]);
+        assert!(f.groups[1].spec.agg.is_none());
+    }
+
+    #[test]
+    fn branch_point_stops_fusion_but_branches_fuse_internally() {
+        // scan -> {filter->select, filter->select} -> union: the scan
+        // fans out (not fused); each branch is a 2-op group.
+        let q = Query {
+            name: "d".into(),
+            ops: vec![
+                OpNode { id: 0, spec: OpSpec::Scan, inputs: vec![] },
+                OpNode { id: 1, spec: filter(), inputs: vec![0] },
+                OpNode { id: 2, spec: select(), inputs: vec![1] },
+                OpNode { id: 3, spec: filter(), inputs: vec![0] },
+                OpNode { id: 4, spec: select(), inputs: vec![3] },
+                OpNode { id: 5, spec: OpSpec::Union, inputs: vec![2, 4] },
+            ],
+            window: WindowSpec::tumbling(Duration::from_secs(30)),
+            uses_window_state: false,
+        };
+        q.validate().unwrap();
+        let p = plan(&q, vec![Device::Cpu; 6]);
+        let f = fuse(&q, &p);
+        assert_eq!(f.groups.len(), 2);
+        assert_eq!(f.groups[0].ops, vec![1, 2]);
+        assert_eq!(f.groups[1].ops, vec![3, 4]);
+        assert!(f.group_of(0).is_none(), "fan-out head must not fuse");
+        assert!(f.group_of(5).is_none());
+    }
+
+    #[test]
+    fn fusable_runs_ignore_devices_but_match_fuse_on_uniform_plans() {
+        let q = chain_query(vec![OpSpec::Scan, filter(), select(), aggregate()]);
+        // A mid-chain device switch splits `fuse` but not the
+        // structural runs (the scheduler re-splits per assignment).
+        let runs = fusable_runs(&q);
+        assert_eq!(runs, vec![Some(0), Some(0), Some(0), Some(0)]);
+        let split = fuse(&q, &plan(&q, vec![Device::Gpu, Device::Gpu, Device::Cpu, Device::Cpu]));
+        assert_eq!(split.groups.len(), 2);
+        // On a uniform plan the two agree.
+        let uniform = fuse(&q, &plan(&q, vec![Device::Cpu; 4]));
+        assert_eq!(uniform.groups.len(), 1);
+        assert_eq!(uniform.groups[0].ops, vec![0, 1, 2, 3]);
+        // Non-fusable kinds stay unassigned in both.
+        let q2 = chain_query(vec![OpSpec::Scan, filter(), OpSpec::Expand]);
+        let runs2 = fusable_runs(&q2);
+        assert_eq!(runs2, vec![Some(0), Some(0), None]);
+    }
+
+    #[test]
+    fn none_sidecar_reports_nothing_fused() {
+        let f = FusedPlan::none(4);
+        assert_eq!(f.fused_ops(), 0);
+        assert!(f.group_of(2).is_none());
+        assert!(!f.is_follower(2));
+    }
+}

@@ -12,7 +12,10 @@
 //!    (device-agnostic rules such as projection pushdown into joins);
 //! 3. **Physical plan** — [`physical`]: `MapDevice` (Alg. 2) annotates
 //!    every logical op with a device and the size estimate that drove
-//!    the choice, producing a [`physical::PhysicalPlan`];
+//!    the choice, producing a [`physical::PhysicalPlan`]; [`fuse`] then
+//!    collapses same-device scan→filter→project→(aggregate) runs into
+//!    single-traversal [`fuse::FusedGroup`]s (a sidecar — the plan
+//!    itself is untouched);
 //! 4. **Execution** — [`exec`] walks the physical DAG over a
 //!    micro-batch, charging host↔device transfer at every boundary
 //!    (branch edges included) through the placement rule it shares with
@@ -25,9 +28,11 @@
 pub mod builder;
 pub mod dag;
 pub mod exec;
+pub mod fuse;
 pub mod optimize;
 pub mod physical;
 
 pub use builder::QueryBuilder;
 pub use dag::{OpKind, OpNode, OpSpec, Query};
+pub use fuse::{FusedGroup, FusedPlan};
 pub use physical::{DevicePlan, PhysicalOp, PhysicalPlan};

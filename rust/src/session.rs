@@ -82,7 +82,8 @@ use crate::engine::sink::Sink;
 use crate::engine::window::{WindowKind, WindowState};
 use crate::error::{Error, Result};
 use crate::query::dag::{OpKind, Query};
-use crate::query::exec::{self, ExecEnv, GpuTimeline, OpTrace};
+use crate::query::exec::{self, ExecEnv, ExecOpts, GpuTimeline, OpTrace};
+use crate::query::fuse;
 use crate::query::physical::PhysicalPlan;
 use crate::runtime::client::Runtime;
 use crate::sim::{Clock, SimClock, Time, WallClock};
@@ -936,6 +937,12 @@ impl<'rt> Session<'rt> {
                 qi: usize,
                 input: ChunkedBatch,
                 snapshot: Option<ChunkedBatch>,
+                /// Eq. 9 aux `(bytes, chunks)` for join builds: the
+                /// window's *encoded* resident footprint (cold chunks
+                /// price their RLE/dict/delta blocks, not the decoded
+                /// rows) — mirrored into both the scheduler's
+                /// `QueryCandidate` and the executor's `ExecOpts::aux`.
+                aux: Option<(f64, usize)>,
             }
             let mut staged: Vec<Staged> = Vec::new();
             for &(s, ref batch) in &admitted {
@@ -989,7 +996,14 @@ impl<'rt> Session<'rt> {
                         } else {
                             (batch.chunked()?, windows[qi].snapshot_chunks()?)
                         };
-                    staged.push(Staged { s, qi, input, snapshot });
+                    let aux = if qdef.has_join {
+                        snapshot
+                            .as_ref()
+                            .map(|w| (windows[qi].state_bytes_encoded() as f64, w.num_chunks()))
+                    } else {
+                        None
+                    };
+                    staged.push(Staged { s, qi, input, snapshot, aux });
                 }
             }
 
@@ -1027,6 +1041,7 @@ impl<'rt> Session<'rt> {
                 traces: Vec<OpTrace>,
                 gpu_ops: usize,
                 total_ops: usize,
+                pruned_chunks: usize,
             }
             let mut round_retries = 0usize;
             let mut recovery_wait = Duration::ZERO;
@@ -1083,14 +1098,12 @@ impl<'rt> Session<'rt> {
                                 st.input.alloc_bytes(),
                                 topo.total_cores(),
                             );
-                            let (aux_bytes, aux_chunks) = if qdef.has_join {
-                                match st.snapshot.as_ref() {
-                                    Some(w) => (w.alloc_bytes() as f64, w.num_chunks()),
-                                    None => (0.0, 0),
-                                }
-                            } else {
-                                (0.0, 0)
-                            };
+                            // Join build side priced at its *encoded*
+                            // resident footprint (see Staged::aux) —
+                            // identical figure to the executor's
+                            // ExecOpts::aux below, so Eq. 9 never
+                            // diverges between planning and execution.
+                            let (aux_bytes, aux_chunks) = st.aux.unwrap_or((0.0, 0));
                             cands.push(
                                 QueryCandidate::build(
                                     &qdef.query,
@@ -1181,7 +1194,9 @@ impl<'rt> Session<'rt> {
 
                         // Processing phase (single executor or
                         // cluster-wide, on the surviving spec).
-                        let (result, branch_results, proc, gpu_wait, traces, gpu_ops) =
+                        #[allow(clippy::type_complexity)]
+                        let (result, branch_results, proc, gpu_wait, traces, gpu_ops, pruned):
+                            (_, _, _, _, _, _, usize) =
                             match &run_cluster {
                                 None => {
                                     // Single node: a faulted executor
@@ -1210,13 +1225,18 @@ impl<'rt> Session<'rt> {
                                         plan
                                     };
                                     let ops = share_plan.gpu_ops();
-                                    let o = exec::execute_with_occupancy(
+                                    // Fuse against the plan actually
+                                    // executed (a GPU-demoted plan
+                                    // re-fuses as all-CPU groups).
+                                    let fplan = fuse::fuse(query, share_plan);
+                                    let o = exec::execute_with_opts(
                                         query,
                                         share_plan,
                                         input,
                                         join_side,
                                         &env,
                                         &mut timelines[0],
+                                        &ExecOpts { fused: Some(&fplan), aux: st.aux },
                                     )?;
                                     (
                                         o.result,
@@ -1225,10 +1245,12 @@ impl<'rt> Session<'rt> {
                                         o.contention,
                                         o.traces,
                                         ops,
+                                        o.pruned_chunks,
                                     )
                                 }
                                 Some(spec) => {
-                                    let o = cluster::execute_on_cluster_faulted(
+                                    let fplan = fuse::fuse(query, plan);
+                                    let o = cluster::execute_on_cluster_opts(
                                         spec,
                                         query,
                                         plan,
@@ -1239,6 +1261,7 @@ impl<'rt> Session<'rt> {
                                         runtime,
                                         Some(&mut timelines),
                                         &faults,
+                                        &ExecOpts { fused: Some(&fplan), aux: st.aux },
                                     )?;
                                     // Merge per-executor traces (sum byte
                                     // volumes per op) for the size estimator.
@@ -1262,6 +1285,8 @@ impl<'rt> Session<'rt> {
                                         .max_by_key(|e| e.proc)
                                         .map(|e| e.contention)
                                         .unwrap_or(Duration::ZERO);
+                                    let pruned: usize =
+                                        o.per_executor.iter().map(|e| e.pruned_chunks).sum();
                                     (
                                         o.result,
                                         o.branch_results,
@@ -1269,6 +1294,7 @@ impl<'rt> Session<'rt> {
                                         wait,
                                         merged,
                                         plan.gpu_ops(),
+                                        pruned,
                                     )
                                 }
                             };
@@ -1283,6 +1309,7 @@ impl<'rt> Session<'rt> {
                             traces,
                             gpu_ops,
                             total_ops: query.len(),
+                            pruned_chunks: pruned,
                         });
                     }
                     Ok((pending, makespan, map_device_total))
@@ -1455,6 +1482,12 @@ impl<'rt> Session<'rt> {
                         ),
                         _ => Duration::ZERO,
                     },
+                    // Resident window-state footprint as this round
+                    // observed it (join builds still pre-ingest here —
+                    // their push lands after delivery, below).
+                    state_bytes_raw: windows[p.qi].state_bytes_raw(),
+                    state_bytes_encoded: windows[p.qi].state_bytes_encoded(),
+                    pruned_chunks: p.pruned_chunks,
                 };
                 metrics[p.qi].record(rec, &src_buffs[p.s]);
                 self.queries[p.qi].size_est.observe(&p.traces);

@@ -31,7 +31,8 @@ use lmstream::engine::dataset::Dataset;
 use lmstream::engine::ops;
 use lmstream::engine::ops::filter::Predicate;
 use lmstream::engine::window::{WindowSpec, WindowState};
-use lmstream::query::exec::{self, DevicePlan, ExecEnv};
+use lmstream::query::exec::{self, DevicePlan, ExecEnv, ExecOpts, NoContention};
+use lmstream::query::fuse;
 use lmstream::query::physical::PhysicalPlan;
 use lmstream::query::{Query, QueryBuilder};
 use lmstream::sim::Time;
@@ -571,7 +572,260 @@ fn prop_kway_merge_sort_equals_coalesced_sort() {
     });
 }
 
-// ------------------------------- 4. single-node vs cluster branch outputs
+// --------------------------------------- 4. fused vs staged execution
+
+/// Random *fusable* pipeline: scan → 1..4 of {filter, affine, select} →
+/// optional aggregate tail. Column availability is tracked so every
+/// step resolves (`k` and at least one f32 column always survive a
+/// select) — divergence between fused and staged execution, not error
+/// plumbing, is what this suite hunts.
+fn random_fusable_query(g: &mut Gen) -> Query {
+    let w = WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5));
+    let mut b = QueryBuilder::scan("fusable").window(w);
+    // (name, is_f32) of the columns live at the current pipeline point.
+    let mut cols: Vec<(String, bool)> =
+        vec![("v".into(), true), ("w".into(), true), ("k".into(), false)];
+    let mut next_id = 0usize;
+    let steps = 1 + g.usize_in(0..4);
+    for _ in 0..steps {
+        match g.usize_in(0..3) {
+            0 => {
+                let c = cols[g.usize_in(0..cols.len())].0.clone();
+                let pred = random_pred(g);
+                b = b.filter(&c, pred);
+            }
+            1 => {
+                let fs: Vec<String> =
+                    cols.iter().filter(|c| c.1).map(|c| c.0.clone()).collect();
+                let x = fs[g.usize_in(0..fs.len())].clone();
+                let y = fs[g.usize_in(0..fs.len())].clone();
+                let out = format!("m{next_id}");
+                next_id += 1;
+                b = b.project_affine(&x, &y, 1.5, -0.25, &out);
+                cols.push((out, true));
+            }
+            _ => {
+                let first_f32 =
+                    cols.iter().position(|c| c.1).expect("an f32 column always survives");
+                let mut kept: Vec<(String, bool)> = Vec::new();
+                for (i, c) in cols.iter().enumerate() {
+                    if (c.0 == "k" || i == first_f32 || g.bool())
+                        && !kept.iter().any(|x| x.0 == c.0)
+                    {
+                        kept.push(c.clone());
+                    }
+                }
+                let names: Vec<&str> = kept.iter().map(|c| c.0.as_str()).collect();
+                b = b.select(&names);
+                cols = kept;
+            }
+        }
+    }
+    if g.bool() {
+        let f = cols.iter().find(|c| c.1).expect("f32 survives").0.clone();
+        b = b.aggregate(
+            &["k"],
+            vec![ops::AggSpec::sum(&f, "s"), ops::AggSpec::count("c")],
+            if g.bool() { Some(("c", Predicate::Ge(2.0))) } else { None },
+        );
+    }
+    b.build().unwrap()
+}
+
+/// The fusion proof obligation: for arbitrary fusable pipelines ×
+/// chunk layouts × device plans (simulated backend, GPU groups
+/// included), executing with the fusion sidecar is **bit-identical** to
+/// staged execution — same result, same charged proc/transfer, same
+/// per-op trace count — and a non-aggregate chain never stats-prunes
+/// (dead rows must still flow, masked, for bit-identity).
+#[test]
+fn prop_fused_equals_staged_across_layouts_and_plans() {
+    let model = DeviceModel::default();
+    let mut r = Runner::new(0xd1ff_0006, 120);
+    r.run("fused exec == staged exec", |g| {
+        let q = random_fusable_query(g);
+        let seed = random_batch(g);
+        let layout = random_layout(g, &seed);
+        let plan = if g.bool() {
+            random_device_plan(g, &q)
+        } else {
+            PhysicalPlan::uniform(&q, if g.bool() { Device::Gpu } else { Device::Cpu })
+        };
+        let fplan = fuse::fuse(&q, &plan);
+        let env = ExecEnv {
+            model: &model,
+            backend: ExecBackend::Simulated,
+            num_cores: 12,
+            num_gpus: 1,
+            runtime: None,
+        };
+        let staged = exec::execute(&q, &plan, layout.clone(), None, &env)
+            .map_err(|e| e.to_string())?;
+        let fused = exec::execute_with_opts(
+            &q,
+            &plan,
+            layout,
+            None,
+            &env,
+            &mut NoContention,
+            &ExecOpts { fused: Some(&fplan), aux: None },
+        )
+        .map_err(|e| e.to_string())?;
+        prop_assert(
+            fingerprint(&fused.result.coalesce()) == fingerprint(&staged.result.coalesce()),
+            format!("fused result diverged (groups: {})", fplan.groups.len()),
+        )?;
+        prop_assert(
+            fused.proc == staged.proc && fused.transfer == staged.transfer,
+            format!(
+                "fused charging diverged: proc {:?} vs {:?}, transfer {:?} vs {:?}",
+                fused.proc, staged.proc, fused.transfer, staged.transfer
+            ),
+        )?;
+        prop_assert(
+            fused.traces.len() == staged.traces.len(),
+            "fused must emit one trace per member op".to_string(),
+        )?;
+        if q.ops.iter().all(|o| {
+            !matches!(o.spec, lmstream::query::dag::OpSpec::Aggregate { .. })
+        }) {
+            prop_assert(
+                fused.pruned_chunks == 0,
+                "non-aggregate chains must not prune".to_string(),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// ------------------------- 5. encoded window state vs plain snapshots
+
+/// An RLE-friendly dataset: constant columns, long runs.
+fn flat_ds(id: u64, t: f64, rows: usize) -> Dataset {
+    let schema = Schema::new(vec![Field::f32("v"), Field::f32("w"), Field::i32("k")]);
+    let batch = ColumnBatch::new(
+        schema,
+        vec![
+            Column::F32(vec![(id % 5) as f32; rows].into()),
+            Column::F32(vec![0.5; rows].into()),
+            Column::I32(vec![(id % 3) as i32; rows].into()),
+        ],
+    )
+    .expect("consistent batch");
+    Dataset {
+        id,
+        created_at: Time::from_secs_f64(t),
+        event_time: Time::from_secs_f64(t),
+        wire_bytes: batch.alloc_bytes(),
+        batch,
+    }
+}
+
+/// Cold-chunk encoding under push/evict interleavings: snapshots stay
+/// bit-identical to the fresh reference concat while chunks past the
+/// hot threshold live encoded, and the encoded resident footprint is
+/// strictly below raw on this RLE-friendly state.
+#[test]
+fn prop_encoded_window_state_snapshot_identical_and_smaller() {
+    use lmstream::engine::window::WINDOW_HOT_CHUNKS;
+    let mut r = Runner::new(0xd1ff_0007, 60);
+    r.run("cold-encoded snapshots == plain, and smaller", |g| {
+        // Range long enough that most pushes outlive the hot threshold.
+        let spec = WindowSpec::sliding(Duration::from_secs(600), Duration::from_secs(1));
+        let mut w = WindowState::new();
+        let mut t = 0.0;
+        let pushes = WINDOW_HOT_CHUNKS + 2 + g.usize_in(0..10);
+        for step in 0..pushes {
+            t += g.f64_in(0.0, 2.0);
+            if g.usize_in(0..8) == 0 {
+                w.evict(Time::from_secs_f64(t), &spec);
+            }
+            w.push(&[flat_ds(step as u64, t, 16 + g.usize_in(0..50))]);
+            let snap = w
+                .snapshot_chunks()
+                .map_err(|e| e.to_string())?
+                .expect("non-empty state");
+            let fresh =
+                w.snapshot_fresh().map_err(|e| e.to_string())?.expect("non-empty");
+            prop_assert(
+                fingerprint(&snap.coalesce()) == fingerprint(&fresh),
+                format!("step {step}: encoded-state snapshot != fresh concat"),
+            )?;
+            prop_assert(
+                w.state_bytes_encoded() <= w.state_bytes_raw(),
+                format!("step {step}: encoded footprint above raw"),
+            )?;
+            if w.cold_chunks() > 0 {
+                prop_assert(
+                    w.state_bytes_encoded() < w.state_bytes_raw(),
+                    format!(
+                        "step {step}: {} cold chunks but no shrink ({} >= {})",
+                        w.cold_chunks(),
+                        w.state_bytes_encoded(),
+                        w.state_bytes_raw()
+                    ),
+                )?;
+            }
+        }
+        prop_assert(
+            w.cold_chunks() > 0,
+            "pushing past the hot threshold must demote chunks".to_string(),
+        )?;
+        Ok(())
+    });
+}
+
+/// Executor-level encoded-vs-plain diff: a windowed join probing a
+/// build side that decodes lazily out of cold-encoded state must be
+/// bit-identical to probing the plain reference concat.
+#[test]
+fn prop_join_over_encoded_window_state_matches_plain() {
+    use lmstream::engine::window::WINDOW_HOT_CHUNKS;
+    let model = DeviceModel::default();
+    let mut r = Runner::new(0xd1ff_0008, 60);
+    r.run("join(encoded window) == join(plain window)", |g| {
+        let spec = WindowSpec::sliding(Duration::from_secs(600), Duration::from_secs(1));
+        let mut w = WindowState::new();
+        let mut t = 0.0;
+        for step in 0..WINDOW_HOT_CHUNKS + 2 + g.usize_in(0..6) {
+            t += g.f64_in(0.0, 2.0);
+            w.push(&[flat_ds(step as u64, t, 8 + g.usize_in(0..40))]);
+        }
+        let snap = w
+            .snapshot_chunks()
+            .map_err(|e| e.to_string())?
+            .expect("non-empty state");
+        let fresh = w.snapshot_fresh().map_err(|e| e.to_string())?.expect("non-empty");
+        let plain = ChunkedBatch::from_batch(fresh);
+
+        let q = QueryBuilder::scan("join-enc")
+            .window(WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5)))
+            .join_window("k", "k")
+            .sort("v", false)
+            .build()
+            .unwrap();
+        let plan = random_device_plan(g, &q);
+        let env = ExecEnv {
+            model: &model,
+            backend: ExecBackend::Simulated,
+            num_cores: 12,
+            num_gpus: 1,
+            runtime: None,
+        };
+        let probe = random_layout(g, &random_batch(g));
+        let enc = exec::execute(&q, &plan, probe.clone(), Some(&snap), &env)
+            .map_err(|e| e.to_string())?;
+        let ref_out = exec::execute(&q, &plan, probe, Some(&plain), &env)
+            .map_err(|e| e.to_string())?;
+        prop_assert(
+            fingerprint(&enc.result.coalesce()) == fingerprint(&ref_out.result.coalesce()),
+            "join over lazily-decoded state diverged from plain".to_string(),
+        )?;
+        Ok(())
+    });
+}
+
+// ------------------------------- 6. single-node vs cluster branch outputs
 
 /// The cluster path no longer drops branch sinks: a branched query run
 /// single-node and on the paper's 4-executor cluster delivers identical

@@ -7,14 +7,18 @@ Usage: bench_gate.py BASELINE.json MEASURED.json
 Three checks, in decreasing order of machine-independence:
 
 1. ratio gates (always enforced when the baseline declares them):
-     - window_snapshot_speedup    >= baseline's `min_window_snapshot_speedup`
-     - union_fanin_scaling        <= baseline's `max_union_fanin_scaling`
-     - coschedule_makespan_ratio  <= baseline's `max_coschedule_makespan_ratio`
+     - window_snapshot_speedup     >= baseline's `min_window_snapshot_speedup`
+     - union_fanin_scaling         <= baseline's `max_union_fanin_scaling`
+     - coschedule_makespan_ratio   <= baseline's `max_coschedule_makespan_ratio`
+     - fused_vs_staged_ratio       <= baseline's `max_fused_vs_staged_ratio`
+     - encoded_window_bytes_ratio  <= baseline's `max_encoded_window_bytes_ratio`
    These are dimensionless and stable across runners — they encode the
    chunked-path claims (O(#datasets) snapshots; Union assembly cost
-   independent of total rows) and the co-scheduling claim (the joint
+   independent of total rows), the co-scheduling claim (the joint
    plan's predicted makespan never exceeds the independent plans
-   serialized on the shared GPU).
+   serialized on the shared GPU), and the fusion/encoding claims
+   (a fused chain runs no slower than its staged member kernels;
+   cold-encoded window state never exceeds its raw footprint).
 
 2. per-bench mean gate (enforced per entry the baseline carries): each
    measured mean must sit within +/-20% of the baseline mean. Only
@@ -93,6 +97,30 @@ def main():
             )
         else:
             print(f"ok: coschedule_makespan_ratio {got:.3f} <= {max_cosched}")
+    max_fused = baseline.get("max_fused_vs_staged_ratio")
+    if max_fused is not None:
+        got = measured.get("fused_vs_staged_ratio")
+        if got is None or got <= 0.0:
+            failures.append("fused_vs_staged_ratio missing from measured point")
+        elif got > max_fused:
+            failures.append(
+                f"fused_vs_staged_ratio {got:.3f} > allowed {max_fused} "
+                "(fused chain ran slower than its staged member kernels)"
+            )
+        else:
+            print(f"ok: fused_vs_staged_ratio {got:.3f} <= {max_fused}")
+    max_encoded = baseline.get("max_encoded_window_bytes_ratio")
+    if max_encoded is not None:
+        got = measured.get("encoded_window_bytes_ratio")
+        if got is None or got <= 0.0:
+            failures.append("encoded_window_bytes_ratio missing from measured point")
+        elif got > max_encoded:
+            failures.append(
+                f"encoded_window_bytes_ratio {got:.3f} > allowed {max_encoded} "
+                "(cold-encoded window state exceeds its raw footprint)"
+            )
+        else:
+            print(f"ok: encoded_window_bytes_ratio {got:.3f} <= {max_encoded}")
 
     # 2. per-bench +/-20% mean gate against whatever the baseline carries.
     base_means = {

@@ -16,7 +16,8 @@ Usage:
 The promoted file is the measured point (per-bench means + ratio
 metrics) with the baseline's machine-independent gate fields
 (min_window_snapshot_speedup, max_union_fanin_scaling,
-max_coschedule_makespan_ratio) carried over, and provenance flipped to
+max_coschedule_makespan_ratio, max_fused_vs_staged_ratio,
+max_encoded_window_bytes_ratio) carried over, and provenance flipped to
 "ci-measured". Before writing, the measured point is validated against
 those gates — promoting a point that would immediately fail CI is
 refused.
@@ -36,6 +37,8 @@ GATE_FIELDS = (
     "min_window_snapshot_speedup",
     "max_union_fanin_scaling",
     "max_coschedule_makespan_ratio",
+    "max_fused_vs_staged_ratio",
+    "max_encoded_window_bytes_ratio",
 )
 
 
@@ -75,6 +78,14 @@ def validate(measured, gates):
     cap = gates.get("max_coschedule_makespan_ratio")
     if cap is not None and (ratio is None or ratio <= 0.0 or ratio > cap):
         problems.append(f"coschedule_makespan_ratio {ratio} outside (0, {cap}]")
+    ratio = measured.get("fused_vs_staged_ratio")
+    cap = gates.get("max_fused_vs_staged_ratio")
+    if cap is not None and (ratio is None or ratio <= 0.0 or ratio > cap):
+        problems.append(f"fused_vs_staged_ratio {ratio} outside (0, {cap}]")
+    ratio = measured.get("encoded_window_bytes_ratio")
+    cap = gates.get("max_encoded_window_bytes_ratio")
+    if cap is not None and (ratio is None or ratio <= 0.0 or ratio > cap):
+        problems.append(f"encoded_window_bytes_ratio {ratio} outside (0, {cap}]")
     return problems
 
 
