@@ -13,7 +13,7 @@
 //! appends must be independent of total row count), and end-to-end
 //! `Session::run` micro-batch loops (single- and multi-query).
 //!
-//! Emits `BENCH_hotpath.json` (machine-readable, schema_version 4) into
+//! Emits `BENCH_hotpath.json` (machine-readable, schema_version 5) into
 //! the working directory — the perf-trajectory artifact CI uploads and
 //! gates against the committed baseline (`tools/bench_gate.py`).
 //!
@@ -22,6 +22,15 @@
 //! member kernels (`fused_vs_staged_ratio <= 1.0`) and cold-encoded
 //! window state must sit strictly below its raw footprint on an
 //! RLE-friendly workload (`encoded_window_bytes_ratio < 1.0`).
+//!
+//! Schema 5 adds the sharded-runtime scaling ratio from a 4-source
+//! sharded run: `shard_scaling_ratio` = Σ_epochs(max per-source proc) /
+//! Σ_epochs(Σ per-source proc). The numerator is what the sharded
+//! session clock pays per round epoch (shards run concurrently, the
+//! epoch costs the slowest source), the denominator is what a serial
+//! round would pay (sources queue one after another) — the ratio must
+//! never exceed 1.0 (gated here and by `max_shard_scaling_ratio` in
+//! `tools/bench_gate.py`).
 
 use lmstream::cluster::DeviceTopology;
 use lmstream::config::{Config, Mode};
@@ -42,9 +51,11 @@ use lmstream::query::{fuse, QueryBuilder};
 use lmstream::session::Session;
 use lmstream::sim::Time;
 use lmstream::source::stream::RowGen;
+use lmstream::source::traffic::Traffic;
 use lmstream::util::bench::{BenchResult, Bencher};
 use lmstream::util::json;
-use lmstream::workloads::{self, linear_road::LinearRoadGen};
+use lmstream::workloads::{self, linear_road::LinearRoadGen, Workload};
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 fn lr_micro_batch(datasets: usize, rows_each: usize) -> MicroBatch {
@@ -96,6 +107,43 @@ fn rle_friendly_batch(id: u64, rows: usize) -> ColumnBatch {
         ],
     )
     .expect("consistent batch")
+}
+
+/// Four Linear-Road sources with deliberately skewed rates — the shape
+/// the sharded runtime is for (independent round loops meeting only at
+/// the timeline bank). The optimizer stays off so the simulated run is
+/// a pure function of the sources (same contract the `sharding`
+/// differential tests pin).
+const SHARD_SOURCES: &[&str] = &["shard-a", "shard-b", "shard-c", "shard-d"];
+
+fn shard_source_gen(seed: u64) -> Box<dyn RowGen> {
+    Box::new(LinearRoadGen::new(seed))
+}
+
+fn shard_session(shards: usize) -> Session {
+    let mut s = Session::new(Config {
+        mode: Mode::LmStream,
+        shards: Some(shards),
+        online_optimizer: false,
+        seed: 11,
+        ..Config::default()
+    })
+    .expect("session");
+    for (i, name) in SHARD_SOURCES.iter().copied().enumerate() {
+        let q = QueryBuilder::scan(name)
+            .window(WindowSpec::sliding(Duration::from_secs(30), Duration::from_secs(5)))
+            .filter("speed", ops::Predicate::Ge(40.0))
+            .build()
+            .expect("query");
+        s.register(Workload::new(
+            name,
+            q,
+            Traffic::Constant { rows: 400 * (i + 1) },
+            shard_source_gen,
+        ))
+        .expect("register");
+    }
+    s
 }
 
 fn main() {
@@ -350,6 +398,43 @@ fn main() {
         s.register_shared(first, "side", side).expect("register_shared");
         s.run(Duration::from_secs(60)).expect("run").len()
     });
+    // Sharded runtime: the same 4 skewed sources run serial (shards=1,
+    // one round loop visits every source) and sharded (shards=4, one
+    // concurrent round loop per source meeting at the timeline bank).
+    e2e.bench("session::run 4-source serial (shards=1, 60s simulated loop)", || {
+        shard_session(1).run(Duration::from_secs(60)).expect("run").len()
+    });
+    e2e.bench("session::run 4-source sharded (shards=4, 60s simulated loop)", || {
+        shard_session(4).run(Duration::from_secs(60)).expect("run").len()
+    });
+
+    // Shard scaling ratio from one sharded run's records: per round
+    // epoch the sharded clock pays the slowest source's proc (max); a
+    // serial round pays all of them back to back (sum). The ratio over
+    // the whole run is the concurrency win and can never exceed 1.0 —
+    // max <= sum holds per epoch by construction, so a ratio above 1.0
+    // means the epoch accounting itself regressed.
+    let shard_run =
+        shard_session(4).run(Duration::from_secs(60)).expect("sharded run");
+    let mut per_round: BTreeMap<usize, BTreeMap<usize, f64>> = BTreeMap::new();
+    for (src, r) in shard_run.iter().enumerate() {
+        for rec in &r.batches {
+            *per_round.entry(rec.round).or_default().entry(src).or_insert(0.0) +=
+                rec.proc.as_secs_f64();
+        }
+    }
+    let mut epoch_total = 0.0f64; // Σ_epochs max-source proc (sharded clock)
+    let mut serial_total = 0.0f64; // Σ_epochs Σ-source proc (serial clock)
+    for sources in per_round.values() {
+        epoch_total += sources.values().fold(0.0f64, |a, &p| a.max(p));
+        serial_total += sources.values().sum::<f64>();
+    }
+    let shard_ratio =
+        if serial_total > 0.0 { epoch_total / serial_total } else { 0.0 };
+    println!(
+        "shard scaling ratio (epoch max / serial sum over {} rounds): {shard_ratio:.3}",
+        per_round.len()
+    );
 
     b.report();
     e2e.report();
@@ -383,12 +468,13 @@ fn main() {
         b.results().iter().chain(e2e.results().iter()).map(row).collect();
     let doc = json::obj(vec![
         ("bench", json::s("perf_hotpath")),
-        ("schema_version", json::num(4.0)),
+        ("schema_version", json::num(5.0)),
         ("window_snapshot_speedup", json::num(speedup)),
         ("union_fanin_scaling", json::num(union_scaling)),
         ("coschedule_makespan_ratio", json::num(cosched_ratio)),
         ("fused_vs_staged_ratio", json::num(fused_ratio)),
         ("encoded_window_bytes_ratio", json::num(enc_ratio)),
+        ("shard_scaling_ratio", json::num(shard_ratio)),
         ("results", json::arr(results)),
     ]);
     std::fs::write("BENCH_hotpath.json", doc.render() + "\n")
@@ -426,6 +512,13 @@ fn main() {
     assert!(
         enc_ratio > 0.0 && enc_ratio < 1.0,
         "encoded window state must be strictly smaller than raw, ratio {enc_ratio:.3}"
+    );
+    // The sharded epoch clock pays the max source proc per round; a
+    // serial round pays the sum. max <= sum per epoch, so any ratio
+    // above 1.0 (modulo float slack) is an epoch-accounting regression.
+    assert!(
+        shard_ratio > 0.0 && shard_ratio <= 1.0 + 1e-6,
+        "shard epoch cost must not exceed the serial sum, ratio {shard_ratio:.3}"
     );
     println!("perf_hotpath OK");
 }

@@ -219,7 +219,10 @@ pub fn execute_on_cluster_opts(
         };
         let demoted;
         let demoted_fused;
-        let mut share_opts = ExecOpts { fused: opts.fused, aux: opts.aux };
+        // Stats never propagate to sliced shares: each executor sees a
+        // row-range slice whose chunk list no longer lines up with the
+        // staged snapshot's, so inline stats are the correct fallback.
+        let mut share_opts = ExecOpts { fused: opts.fused, aux: opts.aux, chunk_stats: None };
         let share_plan = if faults.cpu_only.contains(&e) {
             demoted = plan.demoted_to_cpu();
             if opts.fused.is_some() {

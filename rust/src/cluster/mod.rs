@@ -18,4 +18,4 @@ pub use exec::{
     ClusterOutcome,
 };
 pub use faults::{ExecState, ExecutorHealth, FaultEvent, FaultKind, FaultPlan, RoundFaults};
-pub use topology::{ClusterSpec, DeviceTopology, ExecutorSpec, NetworkModel};
+pub use topology::{shard_of, ClusterSpec, DeviceTopology, ExecutorSpec, NetworkModel};

@@ -122,6 +122,17 @@ impl ClusterSpec {
     }
 }
 
+/// The shard (source group) a source belongs to under the sharded
+/// session runtime: sources deal round-robin, `source % shards`. Kept
+/// here with the cluster shape because it is the one placement rule
+/// every layer (session loops, metrics, quotas, tests) must agree on —
+/// and it is intentionally independent of the executor count, so
+/// re-sharding never re-partitions the data plane.
+pub fn shard_of(source: usize, shards: usize) -> usize {
+    assert!(shards > 0, "shard_of needs at least one shard");
+    source % shards
+}
+
 /// The device shape a scheduling round plans against: one entry per
 /// executor (its cores and GPUs). This is the **source of truth** for
 /// joint planning — `schedule::plan_joint` simulates one GPU timeline
@@ -274,6 +285,15 @@ mod tests {
         assert!(sub.gpu_usable(2));
         let sum: f64 = (0..sub.num_executors()).map(|e| sub.row_share(e)).sum();
         assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_assignment_is_round_robin() {
+        assert_eq!(
+            (0..6).map(|s| shard_of(s, 4)).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3, 0, 1]
+        );
+        assert!((0..8).all(|s| shard_of(s, 1) == 0));
     }
 
     #[test]

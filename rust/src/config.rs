@@ -213,6 +213,28 @@ pub struct Config {
     /// Late-data policy in force when [`Config::allowed_lateness`] is
     /// set.
     pub late_policy: LatePolicy,
+    /// Sharded concurrent session runtime: `Some(k)` splits the
+    /// registered sources into `k` shards (source `s` → shard `s % k`)
+    /// whose round loops stage, plan and execute concurrently on worker
+    /// threads, meeting only at the shared per-executor GPU timeline
+    /// bank ([`crate::coordinator::timeline_bank`]) and a per-epoch
+    /// clock barrier (the clock advances by the max source makespan of
+    /// the epoch). Deterministic by construction: sink outputs are
+    /// bit-identical across shard counts, including `Some(1)`. `None`
+    /// (default) keeps the historical serial round loop byte-for-byte.
+    /// Simulated backend only; mutually exclusive with
+    /// [`Config::allowed_lateness`] (scope cut — see ARCHITECTURE.md
+    /// §Sharded runtime).
+    pub shards: Option<usize>,
+    /// Per-shard admission quotas, bytes/second of admitted micro-batch
+    /// data (a token bucket with a one-second burst allowance per
+    /// shard). Eq. 6 bounds *latency*; quotas bound *share*: a shard
+    /// over its quota has its batch vetoed back into the admission
+    /// buffer and re-offered once tokens refill. Requires
+    /// [`Config::shards`] with exactly one positive finite quota per
+    /// shard; incompatible with trigger-driven modes (they have no
+    /// admission buffer to restore a vetoed batch into).
+    pub shard_quotas: Option<Vec<f64>>,
 }
 
 impl Default for Config {
@@ -244,6 +266,8 @@ impl Default for Config {
             probation_rounds: 2,
             allowed_lateness: None,
             late_policy: LatePolicy::Drop,
+            shards: None,
+            shard_quotas: None,
         }
     }
 }
@@ -274,6 +298,54 @@ impl Config {
         }
         if self.wal_max_bytes == Some(0) {
             return Err(Error::Config("wal_max_bytes must be > 0 (or None)".into()));
+        }
+        if let Some(k) = self.shards {
+            if k == 0 {
+                return Err(Error::Config("shards must be > 0 (or None)".into()));
+            }
+            if self.allowed_lateness.is_some() {
+                return Err(Error::Config(
+                    "shards and allowed_lateness are mutually exclusive \
+                     (event-time watermarks are not shard-aware yet — see \
+                     ARCHITECTURE.md §Sharded runtime)"
+                        .into(),
+                ));
+            }
+            if self.backend == ExecBackend::Real {
+                return Err(Error::Config(
+                    "shards require the Simulated backend (the sharded epoch \
+                     clock is deterministic simulated time)"
+                        .into(),
+                ));
+            }
+        }
+        if let Some(quotas) = &self.shard_quotas {
+            let Some(k) = self.shards else {
+                return Err(Error::Config(
+                    "shard_quotas require shards to be set".into(),
+                ));
+            };
+            if quotas.len() != k {
+                return Err(Error::Config(format!(
+                    "shard_quotas has {} entries for {} shards",
+                    quotas.len(),
+                    k
+                )));
+            }
+            if quotas.iter().any(|q| !q.is_finite() || *q <= 0.0) {
+                return Err(Error::Config(
+                    "every shard quota must be a positive finite bytes/sec \
+                     rate"
+                        .into(),
+                ));
+            }
+            if self.mode.uses_trigger() {
+                return Err(Error::Config(
+                    "shard_quotas are incompatible with trigger-driven modes \
+                     (no admission buffer to restore a vetoed batch into)"
+                        .into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -368,6 +440,69 @@ mod tests {
         assert!(LatePolicy::parse("bogus").is_err());
         assert_eq!(LatePolicy::default(), LatePolicy::Drop);
         assert!(Config::default().allowed_lateness.is_none());
+    }
+
+    #[test]
+    fn shard_config_validation() {
+        // Well-formed sharded configs pass.
+        let cfg = Config { shards: Some(2), ..Config::default() };
+        cfg.validate().unwrap();
+        let cfg = Config {
+            shards: Some(2),
+            shard_quotas: Some(vec![1024.0, 2048.0]),
+            ..Config::default()
+        };
+        cfg.validate().unwrap();
+        // Zero shards rejected.
+        let cfg = Config { shards: Some(0), ..Config::default() };
+        assert!(cfg.validate().is_err());
+        // Scope cut: sharding is arrival-time, simulated-backend only.
+        let cfg = Config {
+            shards: Some(2),
+            allowed_lateness: Some(Duration::from_secs(1)),
+            ..Config::default()
+        };
+        assert!(cfg.validate().is_err());
+        let cfg = Config {
+            shards: Some(2),
+            backend: ExecBackend::Real,
+            ..Config::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn shard_quota_validation() {
+        // Quotas without shards rejected.
+        let cfg = Config { shard_quotas: Some(vec![1024.0]), ..Config::default() };
+        assert!(cfg.validate().is_err());
+        // Length must match the shard count.
+        let cfg = Config {
+            shards: Some(2),
+            shard_quotas: Some(vec![1024.0]),
+            ..Config::default()
+        };
+        assert!(cfg.validate().is_err());
+        // Quotas must be positive and finite.
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let cfg = Config {
+                shards: Some(1),
+                shard_quotas: Some(vec![bad]),
+                ..Config::default()
+            };
+            assert!(cfg.validate().is_err(), "quota {bad} accepted");
+        }
+        // Trigger modes have no admission buffer to veto into.
+        let cfg = Config {
+            mode: Mode::Baseline,
+            shards: Some(1),
+            shard_quotas: Some(vec![1024.0]),
+            ..Config::default()
+        };
+        assert!(cfg.validate().is_err());
+        // ...but trigger modes without quotas may shard.
+        let cfg = Config { mode: Mode::Baseline, shards: Some(2), ..Config::default() };
+        cfg.validate().unwrap();
     }
 
     #[test]

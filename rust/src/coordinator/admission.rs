@@ -92,6 +92,16 @@ impl Admission {
         std::mem::take(&mut self.buffered)
     }
 
+    /// Return an admitted batch to the buffer, un-admitting it: the
+    /// sharded runtime's per-shard quota vetoes an over-budget
+    /// admission *after* Alg. 1 said yes (Eq. 6 bounds latency, quotas
+    /// bound *share*), and the data must keep buffering rather than be
+    /// dropped — it re-merges with whatever buffered since and is
+    /// re-offered next round.
+    pub fn restore(&mut self, mb: MicroBatch) {
+        self.buffered.absorb(mb);
+    }
+
     /// Eq. 6: `EstMaxLat_i = max_j Buff_(i,j) + Σ_j Part_(i,j) / AvgThPut_(i-1)`.
     pub fn estimate_max_latency(
         tmp: &MicroBatch,

@@ -80,6 +80,10 @@ pub struct BatchRecord {
     /// per-block min/max stats proved their filter predicates
     /// unsatisfiable. Zero when fusion is off or nothing pruned.
     pub pruned_chunks: usize,
+    /// Shard (source group) that staged, planned and executed this
+    /// batch under the sharded session runtime (`Config::shards`):
+    /// `source_index % shards`. Always 0 on the serial round loop.
+    pub shard: usize,
 }
 
 /// Per-executor fault counters accumulated over a run (populated by
@@ -97,6 +101,30 @@ pub struct ExecutorHealthStats {
     pub state: String,
 }
 
+/// Per-shard fairness accounting under the sharded session runtime:
+/// how much of the session's admitted work each source group carried,
+/// and how often its quota pushed back.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardStats {
+    /// Shard id (`source_index % Config::shards`).
+    pub shard: usize,
+    /// Sources assigned to this shard.
+    pub sources: usize,
+    /// Round epochs in which this shard admitted at least one batch.
+    pub rounds: usize,
+    /// Batches (query executions) this shard delivered.
+    pub batches: usize,
+    /// Admitted bytes across this shard's sources.
+    pub bytes: usize,
+    /// Summed processing time of this shard's batches.
+    pub proc: Duration,
+    /// Failed attempts this shard's sources retried.
+    pub retries: usize,
+    /// Admissions vetoed (re-buffered) by this shard's
+    /// `Config::shard_quotas` rate limit.
+    pub quota_vetoes: usize,
+}
+
 /// Run-wide fault-tolerance accounting: what failed, what it cost, and
 /// where every executor ended up.
 #[derive(Clone, Debug, Default)]
@@ -108,6 +136,9 @@ pub struct HealthReport {
     pub recovery_wait: Duration,
     /// Rounds that executed on a degraded topology.
     pub degraded_rounds: usize,
+    /// Per-shard fairness accounting (`Config::shards`); empty on the
+    /// serial round loop.
+    pub shards: Vec<ShardStats>,
 }
 
 /// Aggregate phase times over a run (Table IV rows).
@@ -287,6 +318,7 @@ mod tests {
             state_bytes_raw: 0,
             state_bytes_encoded: 0,
             pruned_chunks: 0,
+            shard: 0,
         }
     }
 

@@ -7,6 +7,9 @@
 //! * [`schedule`] — cross-query co-scheduling: one micro-batch planned
 //!   jointly across a source's queries under a shared GPU timeline
 //!   (reuses the planner's Eq. 7–9 candidate costs),
+//! * [`timeline_bank`] — the sharded runtime's cross-shard GPU
+//!   arbitration: sequential reservation leases over the per-executor
+//!   timelines, so concurrent source shards never double-book a device,
 //! * [`optimizer`] — asynchronous online regression of the inflection
 //!   point (Eq. 10),
 //! * [`metrics`] — Eqs. 4/5 bookkeeping, per-dataset latency, Table IV
@@ -23,13 +26,19 @@ pub mod metrics;
 pub mod optimizer;
 pub mod planner;
 pub mod schedule;
+pub mod timeline_bank;
 
 pub use admission::{Admission, AdmissionDecision};
 pub use driver::{run, RunResult};
-pub use metrics::{BatchRecord, ExecutorHealthStats, HealthReport, Metrics, PhaseTotals};
+pub use metrics::{
+    BatchRecord, ExecutorHealthStats, HealthReport, Metrics, PhaseTotals, ShardStats,
+};
 pub use optimizer::OnlineOptimizer;
 pub use planner::{
     map_device, op_candidates, select_devices, static_preference_plan, BaseCost,
     OpCandidate, SizeEstimator,
 };
-pub use schedule::{plan_joint, JointPlan, Prediction, QueryCandidate};
+pub use schedule::{
+    executor_horizons, plan_joint, predict_fixed, JointPlan, Prediction, QueryCandidate,
+};
+pub use timeline_bank::{Lease, TimelineBank};

@@ -750,6 +750,68 @@ pub fn plan_joint(
     }
 }
 
+/// Predict the shared-timeline execution of `cands` under **fixed**
+/// per-query device plans — the same FIFO per-executor simulation
+/// [`plan_joint`] scores assignments with, run once over the devices
+/// `plans` already chose. This is how the sharded session prices a
+/// source's round against its timeline-bank lease when the mode is not
+/// re-planning jointly (Baseline / AllGpu / LmStream without
+/// co-scheduling): the plan is whatever the mode produced, but the
+/// lease commit still needs honest per-executor busy horizons.
+///
+/// Only the fields the fixed simulation actually determines are
+/// populated: `completions`, `makespan`, `gpu_busy`, `order` (FIFO),
+/// `fifo_makespan` (= `makespan`) and `timeline`. The counterfactual
+/// comparatives (`independent*`, `all_cpu_makespan`) stay at their
+/// defaults — there is no assignment search to compare against.
+pub fn predict_fixed(
+    cands: &[QueryCandidate],
+    plans: &[PhysicalPlan],
+    model: &DeviceModel,
+    topo: &DeviceTopology,
+) -> Prediction {
+    assert_eq!(cands.len(), plans.len(), "one plan per candidate");
+    if cands.is_empty() {
+        return Prediction::default();
+    }
+    let batch_fixed = model.batch_fixed.as_secs_f64();
+    let num_execs = topo.num_executors();
+    let ctxs: Vec<ChainCtx> = cands.iter().map(|qc| chain_ctx(qc, model, topo)).collect();
+    let chains: Vec<Vec<Chain>> = ctxs
+        .iter()
+        .zip(plans)
+        .map(|(ctx, plan)| {
+            let devices: Vec<Device> = plan.per_op.iter().map(|o| o.device).collect();
+            query_chains(ctx, &devices, batch_fixed)
+        })
+        .collect();
+    let fifo: Vec<usize> = (0..cands.len()).collect();
+    let sim = simulate(&chains, num_execs, &fifo);
+    Prediction {
+        completions: sim.completions,
+        makespan: sim.makespan,
+        gpu_busy: sim.busy,
+        order: fifo,
+        fifo_makespan: sim.makespan,
+        timeline: sim.slots,
+        ..Prediction::default()
+    }
+}
+
+/// Per-executor predicted GPU busy horizons of a prediction's timeline:
+/// `horizons[e]` = the latest reservation end on executor `e` (seconds
+/// from round start; 0.0 for an executor the round books nothing on).
+/// This is what a shard commits to the
+/// [`TimelineBank`](crate::coordinator::timeline_bank::TimelineBank)
+/// after planning against its lease.
+pub fn executor_horizons(pred: &Prediction, num_execs: usize) -> Vec<f64> {
+    let mut horizons = vec![0.0f64; num_execs];
+    for s in &pred.timeline {
+        horizons[s.exec] = horizons[s.exec].max(s.end);
+    }
+    horizons
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -924,6 +986,48 @@ mod tests {
             }
             let booked: f64 = tl.iter().map(|s| s.end - s.start).sum();
             assert!((booked - jp.predicted.gpu_busy).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn predict_fixed_replays_a_single_query_plan_exactly() {
+        // For one query the joint plan executes FIFO, so re-predicting
+        // its emitted plan with the fixed-device simulation must land on
+        // the identical makespan/completions/timeline — the agreement
+        // the sharded runtime's lease commits depend on.
+        let q = chain_query("solo");
+        let model = DeviceModel::default();
+        for part in [4.0 * KB, 60.0 * KB, 400.0 * KB] {
+            let qc = cand(&q, part, 10.0 * KB, 4);
+            let jp = plan_joint(std::slice::from_ref(&qc), &model, &single_topo());
+            let qc2 = cand(&q, part, 10.0 * KB, 4);
+            let fixed =
+                predict_fixed(std::slice::from_ref(&qc2), &jp.plans, &model, &single_topo());
+            assert!((fixed.makespan - jp.predicted.makespan).abs() < 1e-12);
+            assert_eq!(fixed.completions.len(), 1);
+            assert_eq!(fixed.timeline, jp.predicted.timeline);
+            assert_eq!(fixed.order, vec![0]);
+        }
+    }
+
+    #[test]
+    fn executor_horizons_cover_every_predicted_slot() {
+        let q1 = chain_query("a");
+        let q2 = chain_query("b");
+        let model = DeviceModel::default();
+        let topo = DeviceTopology::from_cluster(&crate::cluster::ClusterSpec::of(2));
+        let cands =
+            vec![cand(&q1, 60.0 * KB, 8.0 * KB, 4), cand(&q2, 60.0 * KB, 8.0 * KB, 4)];
+        let jp = plan_joint(&cands, &model, &topo);
+        let h = executor_horizons(&jp.predicted, topo.num_executors());
+        assert_eq!(h.len(), topo.num_executors());
+        for s in &jp.predicted.timeline {
+            assert!(s.end <= h[s.exec] + 1e-12, "slot {s:?} past horizon {h:?}");
+        }
+        for (e, &he) in h.iter().enumerate() {
+            let booked = jp.predicted.timeline.iter().any(|s| s.exec == e);
+            assert_eq!(he > 0.0, booked, "horizon {he} vs booked={booked} on {e}");
+            assert!(he <= jp.predicted.makespan + 1e-9);
         }
     }
 

@@ -1,0 +1,221 @@
+//! The GPU timeline bank — the single cross-shard contention point of
+//! the sharded session runtime.
+//!
+//! A sharded round epoch plans and executes each admitted source's
+//! queries independently (see `session`: per-source staging, planning
+//! and execution fan out over worker threads), but the per-executor
+//! GPUs are *shared physics*: two sources' device reservations on one
+//! executor must serialize, never double-book, and the serialization
+//! must be identical for every shard count or the sharded runtime stops
+//! being deterministic.
+//!
+//! The bank arbitrates this with a **reservation-lease protocol** run
+//! on the coordinator thread, in global source order (the *ticket*
+//! order), before execution fans out:
+//!
+//! 1. [`TimelineBank::lease`] grants the next ticket. The lease carries
+//!    one *start offset per physical executor* — the executor's
+//!    committed busy-horizon so far this epoch. At most one lease is
+//!    outstanding at a time (a second `lease` before `commit` is a
+//!    protocol error), so the offsets a holder sees can never move
+//!    under it.
+//! 2. The holder plans its queries and derives its *predicted*
+//!    per-executor busy horizons from the scheduler's serialized
+//!    timeline ([`crate::coordinator::schedule::executor_horizons`]).
+//! 3. [`TimelineBank::commit`] books those horizons: executor `e`'s
+//!    busy-until cursor advances to `offsets[e] + horizon[e]`. The next
+//!    ticket's lease starts where this one ends, so granted windows
+//!    `[offset, offset + horizon)` are pairwise disjoint per executor
+//!    **by construction** — monotone cursors, sequential grants.
+//!
+//! Execution then seeds each source's local
+//! [`GpuTimeline`](crate::query::exec::GpuTimeline)s from its lease
+//! offsets ([`GpuTimeline::starting_at`]): a source whose predicted
+//! window sits behind another source's pays that occupancy as
+//! `gpu_wait`, exactly as the serial round loop's shared timelines
+//! price it — while sources with disjoint device needs (or none)
+//! overlap freely. Horizons are *predictions* (the scheduler's
+//! `SizeEstimator`-fed timeline); actual executed busy time may drift
+//! from them, and the non-overlap guarantee is about the granted
+//! windows, not the drifted actuals — see ARCHITECTURE.md §Sharded
+//! runtime.
+//!
+//! [`GpuTimeline::starting_at`]: crate::query::exec::GpuTimeline::starting_at
+
+use crate::error::{Error, Result};
+use std::time::Duration;
+
+/// One granted reservation lease: the ticket (global grant order) and
+/// the per-physical-executor start offsets the holder's local GPU
+/// timelines must be seeded with.
+#[derive(Clone, Debug)]
+pub struct Lease {
+    /// Global grant sequence number (0-based, monotone across epochs).
+    pub ticket: usize,
+    /// Executor `e`'s committed busy-horizon at grant time — where this
+    /// lease's window on `e` starts.
+    pub offsets: Vec<Duration>,
+}
+
+/// Per-epoch arbiter of the shared per-executor GPU timelines across
+/// shards. See the module docs for the lease protocol.
+#[derive(Clone, Debug)]
+pub struct TimelineBank {
+    /// Per-physical-executor committed busy-until cursor, from epoch
+    /// start. Monotone within an epoch; [`TimelineBank::reset_epoch`]
+    /// zeroes it.
+    free_at: Vec<Duration>,
+    /// Next ticket to grant.
+    next_ticket: usize,
+    /// Tickets committed so far; `next_ticket > committed` means a
+    /// lease is outstanding.
+    committed: usize,
+}
+
+impl TimelineBank {
+    /// A bank over `num_executors` physical executors, all idle.
+    pub fn new(num_executors: usize) -> TimelineBank {
+        TimelineBank {
+            free_at: vec![Duration::ZERO; num_executors],
+            next_ticket: 0,
+            committed: 0,
+        }
+    }
+
+    pub fn num_executors(&self) -> usize {
+        self.free_at.len()
+    }
+
+    /// Executor `e`'s committed busy-horizon this epoch.
+    pub fn horizon(&self, e: usize) -> Duration {
+        self.free_at[e]
+    }
+
+    /// Grant the next ticket. Errors if a lease is already outstanding:
+    /// grants are strictly sequential so offsets never move under a
+    /// holder.
+    pub fn lease(&mut self) -> Result<Lease> {
+        if self.next_ticket > self.committed {
+            return Err(Error::Plan(format!(
+                "timeline bank: ticket {} is still outstanding — commit it \
+                 before granting another lease",
+                self.next_ticket - 1
+            )));
+        }
+        let lease = Lease { ticket: self.next_ticket, offsets: self.free_at.clone() };
+        self.next_ticket += 1;
+        Ok(lease)
+    }
+
+    /// Book `lease`'s predicted per-executor busy horizons (seconds
+    /// from the lease's own start offsets). Consumes the lease; the
+    /// next grant starts where these windows end.
+    pub fn commit(&mut self, lease: Lease, horizons: &[f64]) -> Result<()> {
+        if lease.ticket + 1 != self.next_ticket || self.next_ticket == self.committed {
+            return Err(Error::Plan(format!(
+                "timeline bank: commit of ticket {} does not match the \
+                 outstanding ticket {}",
+                lease.ticket,
+                self.next_ticket.wrapping_sub(1)
+            )));
+        }
+        if horizons.len() != self.free_at.len() {
+            return Err(Error::Plan(format!(
+                "timeline bank: {} horizons committed against {} executors",
+                horizons.len(),
+                self.free_at.len()
+            )));
+        }
+        for (e, &h) in horizons.iter().enumerate() {
+            if !h.is_finite() || h < 0.0 {
+                return Err(Error::Plan(format!(
+                    "timeline bank: executor {e} horizon {h} is not a \
+                     finite non-negative duration"
+                )));
+            }
+            self.free_at[e] = lease.offsets[e] + Duration::from_secs_f64(h);
+        }
+        self.committed = self.next_ticket;
+        Ok(())
+    }
+
+    /// Start a new round epoch: every executor's cursor returns to
+    /// zero. Tickets stay monotone across epochs (they are global grant
+    /// ids, not per-epoch slots). Errors while a lease is outstanding.
+    pub fn reset_epoch(&mut self) -> Result<()> {
+        if self.next_ticket > self.committed {
+            return Err(Error::Plan(format!(
+                "timeline bank: cannot reset the epoch while ticket {} is \
+                 outstanding",
+                self.next_ticket - 1
+            )));
+        }
+        self.free_at.iter_mut().for_each(|f| *f = Duration::ZERO);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leases_accumulate_disjoint_windows_per_executor() {
+        let mut bank = TimelineBank::new(2);
+        // Windows as (start, end) per executor, rebuilt from the grants.
+        let mut windows: Vec<Vec<(Duration, Duration)>> = vec![Vec::new(); 2];
+        let horizons = [[1.0, 0.5], [2.0, 0.0], [0.25, 3.0]];
+        for (i, hs) in horizons.iter().enumerate() {
+            let lease = bank.lease().unwrap();
+            assert_eq!(lease.ticket, i);
+            for (e, &h) in hs.iter().enumerate() {
+                windows[e].push((lease.offsets[e], lease.offsets[e] + Duration::from_secs_f64(h)));
+            }
+            bank.commit(lease, hs).unwrap();
+        }
+        // Pairwise disjoint and monotone on each executor.
+        for per_exec in &windows {
+            for w in per_exec.windows(2) {
+                assert!(w[0].1 <= w[1].0, "overlapping grants: {w:?}");
+            }
+        }
+        assert_eq!(bank.horizon(0), Duration::from_secs_f64(3.25));
+        assert_eq!(bank.horizon(1), Duration::from_secs_f64(3.5));
+    }
+
+    #[test]
+    fn second_lease_while_outstanding_is_rejected() {
+        let mut bank = TimelineBank::new(1);
+        let lease = bank.lease().unwrap();
+        assert!(bank.lease().is_err());
+        assert!(bank.reset_epoch().is_err());
+        bank.commit(lease, &[1.0]).unwrap();
+        bank.lease().unwrap();
+    }
+
+    #[test]
+    fn commit_validates_shape_and_values() {
+        let mut bank = TimelineBank::new(2);
+        let lease = bank.lease().unwrap();
+        assert!(bank.commit(lease.clone(), &[1.0]).is_err(), "length mismatch");
+        assert!(bank.commit(lease.clone(), &[1.0, -0.5]).is_err(), "negative");
+        assert!(bank.commit(lease.clone(), &[1.0, f64::NAN]).is_err(), "nan");
+        bank.commit(lease, &[1.0, 0.0]).unwrap();
+        // Double-commit of a consumed ticket is rejected.
+        let stale = Lease { ticket: 0, offsets: vec![Duration::ZERO; 2] };
+        assert!(bank.commit(stale, &[0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn reset_epoch_zeroes_cursors_but_keeps_tickets_monotone() {
+        let mut bank = TimelineBank::new(1);
+        let lease = bank.lease().unwrap();
+        bank.commit(lease, &[2.0]).unwrap();
+        bank.reset_epoch().unwrap();
+        assert_eq!(bank.horizon(0), Duration::ZERO);
+        let lease = bank.lease().unwrap();
+        assert_eq!(lease.ticket, 1, "tickets are global grant ids");
+        assert_eq!(lease.offsets[0], Duration::ZERO);
+        bank.commit(lease, &[0.5]).unwrap();
+    }
+}

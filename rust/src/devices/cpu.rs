@@ -31,6 +31,19 @@ pub fn run_fused_chain(
     ops::fused::run_chunks(batch, spec)
 }
 
+/// [`run_fused_chain`] with caller-supplied per-chunk min/max stats
+/// (index-aligned with `batch`'s chunk list, `None` = compute inline):
+/// window snapshots hand down the bounds already computed when a cold
+/// chunk was encoded, so the chain's unsatisfiability pruning skips the
+/// per-chunk stats sweep. Output is bit-identical to the stat-less call.
+pub fn run_fused_chain_with_stats(
+    spec: &FusedChainSpec,
+    batch: &ChunkedBatch,
+    stats: &[Option<crate::engine::encode::ChunkStats>],
+) -> Result<(ChunkedBatch, usize)> {
+    ops::fused::run_chunks_with_stats(batch, spec, stats)
+}
+
 /// Execute one operator over the chunked representation. `window`
 /// supplies the build side for windowed joins (as a chunk list — the
 /// window snapshot is never coalesced on this path); `expand_factor`

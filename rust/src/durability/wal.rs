@@ -11,7 +11,16 @@
 //!
 //! Append durability: [`Wal::append`] writes the frame and fsyncs
 //! before returning, so by the time a batch executes its log record is
-//! on stable storage. A crash mid-append leaves a *torn tail* — an
+//! on stable storage. When one round admits several batches for a
+//! source, the session instead *group-commits*: each batch is framed
+//! with [`Wal::append_deferred`] and a single [`Wal::commit`] fsync
+//! per source per round makes them all durable before any of them
+//! executes — same append-before-execute ordering, one sync instead of
+//! N (mirroring the sink ledger's one-persist-per-round batching). A
+//! crash between a deferred append and its commit can tear the
+//! *uncommitted* tail only — none of those batches had started
+//! executing, and the stream regenerates them deterministically. A
+//! crash mid-append leaves a *torn tail* — an
 //! incomplete final frame — which [`Wal::open`]'s scan detects (length
 //! prefix exceeds the remaining bytes) and cleanly truncates away; a
 //! complete frame whose CRC mismatches is a *corrupt record*, surfaced
@@ -120,6 +129,13 @@ pub struct Wal {
     /// the file.
     dirty: bool,
     next_seq: u64,
+    /// Frames written by [`Wal::append_deferred`] since the last
+    /// [`Wal::commit`] — not yet durable.
+    deferred: bool,
+    /// Data-path fsyncs issued so far ([`Wal::append`] /
+    /// [`Wal::commit`]; open/rewrite maintenance syncs excluded) —
+    /// what the group-commit tests pin.
+    fsyncs: usize,
 }
 
 impl Wal {
@@ -206,7 +222,16 @@ impl Wal {
             file.sync_all()?;
         }
         let next_seq = scan.last_seq() + 1;
-        Ok((Wal { path: path.to_path_buf(), file, pending, dirty, next_seq }, scan))
+        let wal = Wal {
+            path: path.to_path_buf(),
+            file,
+            pending,
+            dirty,
+            next_seq,
+            deferred: false,
+            fsyncs: 0,
+        };
+        Ok((wal, scan))
     }
 
     /// Sequence number the next [`Wal::append`] will assign.
@@ -218,6 +243,17 @@ impl Wal {
     /// sequence number. Callers must not start executing the batch
     /// before this returns (the WAL's one ordering invariant).
     pub fn append(&mut self, round: usize, batch: &MicroBatch) -> Result<u64> {
+        let seq = self.append_deferred(round, batch)?;
+        self.commit()?;
+        Ok(seq)
+    }
+
+    /// Write one admitted micro-batch's frame *without* syncing —
+    /// returns its assigned sequence number. The record is not durable
+    /// until the next [`Wal::commit`]; callers must not start executing
+    /// the batch before that commit returns (group-commit form of the
+    /// append-before-execute invariant).
+    pub fn append_deferred(&mut self, round: usize, batch: &MicroBatch) -> Result<u64> {
         let seq = self.next_seq;
         let payload = render_record(seq, round, batch).into_bytes();
         let mut frame = Vec::with_capacity(8 + payload.len());
@@ -225,10 +261,29 @@ impl Wal {
         frame.extend_from_slice(&crc32(&payload).to_le_bytes());
         frame.extend_from_slice(&payload);
         self.file.write_all(&frame)?;
-        self.file.sync_all()?;
         self.pending.push((seq, frame));
         self.next_seq = seq + 1;
+        self.deferred = true;
         Ok(seq)
+    }
+
+    /// Make every deferred append durable with one fsync. No-op (and no
+    /// fsync) when nothing is deferred.
+    pub fn commit(&mut self) -> Result<()> {
+        if !self.deferred {
+            return Ok(());
+        }
+        self.file.sync_all()?;
+        self.deferred = false;
+        self.fsyncs += 1;
+        Ok(())
+    }
+
+    /// Data-path fsyncs issued so far: one per [`Wal::append`], one per
+    /// non-empty [`Wal::commit`] group. Maintenance syncs (open-time
+    /// header/truncation, checkpoint rewrites) are not counted.
+    pub fn fsyncs(&self) -> usize {
+        self.fsyncs
     }
 
     /// Drop every record with `seq <= upto` (the checkpoint now covers
@@ -289,6 +344,9 @@ impl Wal {
         sync_parent_dir(&self.path)?;
         self.file = OpenOptions::new().append(true).open(&self.path)?;
         self.dirty = false;
+        // The rewrite synced every pending frame — deferred appends
+        // included — so there is nothing left for a commit to flush.
+        self.deferred = false;
         Ok(())
     }
 }
@@ -515,6 +573,38 @@ mod tests {
         let ScanEntry::Ok(rec) = &scan.entries[0] else { panic!() };
         assert_eq!(rec.batch.datasets[0].batch.validity.to_vec(), vec![1, 0, 1]);
         assert_eq!(rec.batch.datasets[0].batch.live_rows(), 2);
+    }
+
+    #[test]
+    fn group_commit_syncs_once_for_many_appends() {
+        let path = wal_path("groupcommit");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        assert_eq!(wal.fsyncs(), 0, "open-time maintenance syncs are not counted");
+        for i in 0..3 {
+            let seq =
+                wal.append_deferred(4, &MicroBatch::new(vec![ds(i, i as f64, &[i as f32])]))
+                    .unwrap();
+            assert_eq!(seq, i + 1);
+        }
+        assert_eq!(wal.fsyncs(), 0, "deferred appends must not sync");
+        wal.commit().unwrap();
+        assert_eq!(wal.fsyncs(), 1, "one group = one fsync");
+        wal.commit().unwrap();
+        assert_eq!(wal.fsyncs(), 1, "empty commit is a no-op");
+        // The plain append path still syncs per record.
+        wal.append(5, &MicroBatch::new(vec![ds(9, 9.0, &[9.0])])).unwrap();
+        assert_eq!(wal.fsyncs(), 2);
+        drop(wal);
+        let (_, scan) = Wal::open(&path).unwrap();
+        let seqs: Vec<u64> = scan
+            .entries
+            .iter()
+            .map(|e| match e {
+                ScanEntry::Ok(r) => r.seq,
+                _ => panic!("corrupt"),
+            })
+            .collect();
+        assert_eq!(seqs, vec![1, 2, 3, 4]);
     }
 
     #[test]

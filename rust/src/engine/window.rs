@@ -44,7 +44,7 @@
 use crate::engine::chunked::ChunkedBatch;
 use crate::engine::column::ColumnBatch;
 use crate::engine::dataset::Dataset;
-use crate::engine::encode::{encode_chunk, EncodedChunk};
+use crate::engine::encode::{encode_chunk, ChunkStats, EncodedChunk};
 use crate::error::{Error, Result};
 use crate::sim::Time;
 use std::collections::VecDeque;
@@ -324,6 +324,23 @@ impl WindowState {
             })?;
         }
         Ok(Some(out))
+    }
+
+    /// Encode-time min/max stats for each chunk of
+    /// [`WindowState::snapshot_chunks`]'s view, index-aligned with it:
+    /// `Some` for cold chunks (whose [`EncodedChunk`] already carries
+    /// per-column bounds from encoding), `None` for hot ones (stats
+    /// were never taken — fused pruning computes them inline as
+    /// before). Lets aggregate-tail fused chains skip the per-chunk
+    /// stats recomputation for the cold bulk of a long window.
+    pub fn snapshot_chunk_stats(&self) -> Vec<Option<ChunkStats>> {
+        self.chunks
+            .iter()
+            .map(|c| match c {
+                StateChunk::Hot(_) => None,
+                StateChunk::Cold(cold) => Some(cold.encoded.stats()),
+            })
+            .collect()
     }
 
     /// The prefix of state at or before an event-time boundary, as a

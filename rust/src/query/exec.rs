@@ -50,6 +50,7 @@ use crate::config::ExecBackend;
 use crate::devices::model::{DeviceModel, OpVolume};
 use crate::devices::{cpu, gpu, Device};
 use crate::engine::chunked::ChunkedBatch;
+use crate::engine::encode::ChunkStats;
 use crate::error::{Error, Result};
 use crate::query::dag::{OpKind, OpNode, OpSpec, Query};
 use crate::query::fuse::{FusedGroup, FusedPlan};
@@ -108,6 +109,18 @@ pub struct GpuTimeline {
 impl GpuTimeline {
     pub fn new() -> GpuTimeline {
         GpuTimeline::default()
+    }
+
+    /// A timeline whose device is already occupied until `offset` on
+    /// the epoch clock. The sharded session seeds each source's local
+    /// timelines from its timeline-bank lease
+    /// ([`crate::coordinator::timeline_bank`]) so this source's
+    /// reservations queue behind the busy horizons earlier tickets
+    /// committed — cross-shard contention is priced without sharing a
+    /// mutable timeline across threads. The seeded occupancy is not
+    /// this query's work: `busy`/`waited`/`reservations` start at zero.
+    pub fn starting_at(offset: Duration) -> GpuTimeline {
+        GpuTimeline { free_at: offset, ..GpuTimeline::default() }
     }
 
     /// When the device next becomes free (local-timeline offset).
@@ -195,6 +208,16 @@ pub struct ExecOpts<'a> {
     /// allocation. Mirrored with the planner's `QueryCandidate` aux so
     /// the two never diverge.
     pub aux: Option<(f64, usize)>,
+    /// Per-chunk encode-time min/max stats for the *scan-headed* input,
+    /// index-aligned with its chunk list
+    /// ([`crate::engine::window::WindowState::snapshot_chunk_stats`]):
+    /// fused aggregate-tail pruning reuses the bounds already computed
+    /// when a cold window chunk was encoded instead of recomputing them
+    /// inline. Applied only to fused groups headed by the source scan
+    /// and only when the lengths line up (a sliced cluster share passes
+    /// `None`); `None` entries mean "unknown — compute inline". Data
+    /// results are identical either way.
+    pub chunk_stats: Option<&'a [Option<ChunkStats>]>,
 }
 
 /// Execute `query` over `input` with `plan` on an unshared device
@@ -313,9 +336,17 @@ pub fn execute_with_opts(
         if let Some(group) = fused_head[i] {
             let current =
                 assemble_input(op, &mut source, &mut outputs, &mut remaining_uses)?;
+            // Encode-time stats flow into scan-headed groups only: their
+            // input *is* the staged chunk list the stats were taken
+            // over. A group fed by an upstream op sees transformed
+            // chunks the stored bounds no longer describe.
+            let group_stats = opts.chunk_stats.filter(|s| {
+                query.ops[group.head()].inputs.is_empty()
+                    && s.len() == current.num_chunks()
+            });
             let fused = run_fused_group(
                 query, plan, &consumers, group, current, env, occupancy, &mut proc,
-                &mut traces,
+                &mut traces, group_stats,
             )?;
             transfer_total += fused.transfer;
             contention_total += fused.contention;
@@ -515,13 +546,17 @@ fn run_fused_group(
     occupancy: &mut dyn GpuOccupancy,
     proc: &mut Duration,
     traces: &mut Vec<OpTrace>,
+    chunk_stats: Option<&[Option<ChunkStats>]>,
 ) -> Result<FusedRun> {
     let device = group.device;
     let head_in_chunks = current.num_chunks();
     let rows_total = current.rows();
     let measured_start =
         (env.backend == ExecBackend::Real).then(Instant::now);
-    let (result, pruned) = cpu::run_fused_chain(&group.spec, &current)?;
+    let (result, pruned) = match chunk_stats {
+        Some(stats) => cpu::run_fused_chain_with_stats(&group.spec, &current, stats)?,
+        None => cpu::run_fused_chain(&group.spec, &current)?,
+    };
     let measured = measured_start.map(|t| t.elapsed());
 
     let mut transfer_total = Duration::ZERO;
@@ -998,7 +1033,7 @@ mod tests {
             None,
             &env(&model),
             &mut NoContention,
-            &ExecOpts { fused: Some(&fplan), aux: None },
+            &ExecOpts { fused: Some(&fplan), aux: None, chunk_stats: None },
         )
         .unwrap();
         assert_eq!(fused.result, staged.result);
@@ -1043,7 +1078,7 @@ mod tests {
             None,
             &env(&model),
             &mut t_fused,
-            &ExecOpts { fused: Some(&fplan), aux: None },
+            &ExecOpts { fused: Some(&fplan), aux: None, chunk_stats: None },
         )
         .unwrap();
         assert_eq!(fused.result, staged.result);
@@ -1076,7 +1111,7 @@ mod tests {
             None,
             &env(&model),
             &mut NoContention,
-            &ExecOpts { fused: Some(&fplan), aux: None },
+            &ExecOpts { fused: Some(&fplan), aux: None, chunk_stats: None },
         )
         .unwrap();
         assert_eq!(fused.result, staged.result);
@@ -1104,7 +1139,7 @@ mod tests {
             None,
             &env(&model),
             &mut NoContention,
-            &ExecOpts { fused: Some(&fplan), aux: None },
+            &ExecOpts { fused: Some(&fplan), aux: None, chunk_stats: None },
         )
         .unwrap();
         assert_eq!(fused.result, staged.result);
@@ -1141,7 +1176,11 @@ mod tests {
             Some(&w),
             &env(&model),
             &mut NoContention,
-            &ExecOpts { fused: None, aux: Some((w.alloc_bytes() as f64 / 2.0, w.num_chunks())) },
+            &ExecOpts {
+                fused: None,
+                aux: Some((w.alloc_bytes() as f64 / 2.0, w.num_chunks())),
+                chunk_stats: None,
+            },
         )
         .unwrap();
         assert_eq!(encoded.result, plain.result);

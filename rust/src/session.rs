@@ -66,10 +66,13 @@ use crate::coordinator::admission::{
     min_positive_throughput, Admission, AdmissionDecision,
 };
 use crate::coordinator::checkpoint::{Checkpoint, CheckpointStore, QueryMetricState};
-use crate::coordinator::metrics::{BatchRecord, HealthReport, Metrics, PhaseTotals};
+use crate::coordinator::metrics::{
+    BatchRecord, HealthReport, Metrics, PhaseTotals, ShardStats,
+};
 use crate::coordinator::optimizer::{HistoryPoint, OnlineOptimizer};
 use crate::coordinator::planner::{map_device, static_preference_plan, SizeEstimator};
 use crate::coordinator::schedule::{self, QueryCandidate};
+use crate::coordinator::timeline_bank::TimelineBank;
 use crate::devices::model::DeviceModel;
 use crate::devices::Device;
 use crate::durability::{
@@ -77,6 +80,7 @@ use crate::durability::{
 };
 use crate::engine::chunked::ChunkedBatch;
 use crate::engine::dataset::{Dataset, MicroBatch};
+use crate::engine::encode::ChunkStats;
 use crate::engine::partition::mean_partition_bytes;
 use crate::engine::sink::Sink;
 use crate::engine::window::{WindowKind, WindowState};
@@ -87,6 +91,8 @@ use crate::query::fuse;
 use crate::query::physical::PhysicalPlan;
 use crate::runtime::client::Runtime;
 use crate::sim::{Clock, SimClock, Time, WallClock};
+use crate::util::exec::par_map;
+use crate::util::rng::Rng;
 use crate::workloads::Workload;
 use std::collections::{BTreeMap, VecDeque};
 use std::path::{Path, PathBuf};
@@ -199,6 +205,10 @@ pub struct Session<'rt> {
     /// Sink-ledger disk writes the most recent run performed (pins the
     /// one-persist-per-round batching; 0 without `Config::wal_dir`).
     last_ledger_persists: usize,
+    /// Data-path WAL fsyncs the most recent run performed (pins the
+    /// group-commit batching: one commit per admitting source per
+    /// round; 0 without `Config::wal_dir`).
+    last_wal_fsyncs: usize,
     /// Per-source low-watermark where the most recent run ended
     /// (`None` per source until an event is seen; all-`None` when
     /// event time is off, i.e. `Config::allowed_lateness` unset).
@@ -247,6 +257,7 @@ impl<'rt> Session<'rt> {
             last_recovery: None,
             last_health: None,
             last_ledger_persists: 0,
+            last_wal_fsyncs: 0,
             last_watermarks: Vec::new(),
         })
     }
@@ -273,6 +284,15 @@ impl<'rt> Session<'rt> {
     /// (always 0 without [`Config::wal_dir`]).
     pub fn ledger_persists(&self) -> usize {
         self.last_ledger_persists
+    }
+
+    /// How many data-path WAL fsyncs the most recent run performed —
+    /// one group commit per admitting source per round, however many
+    /// batches that round appended (always 0 without
+    /// [`Config::wal_dir`]). Maintenance rewrites (truncation, rolls)
+    /// are not counted: this pins the *append path* batching.
+    pub fn wal_fsyncs(&self) -> usize {
+        self.last_wal_fsyncs
     }
 
     pub fn config(&self) -> &Config {
@@ -523,13 +543,21 @@ impl<'rt> Session<'rt> {
         // `wal_dir` is set; without it the run is byte-identical to the
         // pre-durability engine.
         let wal_dir = cfg.wal_dir.as_ref().map(PathBuf::from);
-        let mut ledger: Option<SinkLedger> = match &wal_dir {
-            Some(dir) => Some(SinkLedger::open(&dir.join("sink.ledger.json"))?),
-            None => None,
+        // Sharded runs keep one ledger *per source* (each shard's round
+        // loop delivers independently; a shared file would serialize
+        // them on one durable write). The legacy single-file layout is
+        // preserved byte-for-byte when sharding is off.
+        let mut ledgers: Ledgers = match (&wal_dir, cfg.shards) {
+            (Some(dir), None) => {
+                Ledgers::Shared(SinkLedger::open(&dir.join("sink.ledger.json"))?)
+            }
+            (Some(_), Some(_)) => Ledgers::PerSource(Vec::new()),
+            (None, _) => Ledgers::Off,
         };
         self.last_recovery = None;
         self.last_health = None;
         self.last_ledger_persists = 0;
+        self.last_wal_fsyncs = 0;
 
         // ---- Per-query run state (metrics first: checkpoint recovery
         // below seeds them).
@@ -563,8 +591,17 @@ impl<'rt> Session<'rt> {
         let mut wal_high: Vec<u64> = vec![0; num_sources];
         let mut replay_by_round: BTreeMap<usize, Vec<(usize, WalRecord)>> = BTreeMap::new();
         let mut recoveries: Vec<durability::SourceRecovery> = Vec::new();
+        // Sharded runs fork one seed per source off the session seed (in
+        // registration order, so the derivation is shard-count
+        // invariant): concurrent source groups carry *distinct* data
+        // streams. Legacy runs keep the shared seed byte-for-byte.
+        let mut source_seeds = cfg.shards.map(|_| Rng::new(cfg.seed));
         for (s, src) in self.sources.iter().enumerate() {
-            let mut stream = src.workload.make_stream(cfg.seed);
+            let stream_seed = match source_seeds.as_mut() {
+                Some(master) => master.fork().next_u64(),
+                None => cfg.seed,
+            };
+            let mut stream = src.workload.make_stream(stream_seed);
             let primary_window = self.queries[src.primary].query.window;
             admissions.push(Admission::new(primary_window, INITIAL_TUMBLING_BOUND));
             let mut ckpt = None;
@@ -628,11 +665,18 @@ impl<'rt> Session<'rt> {
                         .iter()
                         .map(|&qi| (self.queries[qi].name.clone(), metrics[qi].batches()))
                         .collect();
+                    // Sharded: open (and reconcile against) this
+                    // source's own ledger file, keyed like its WAL.
+                    if let Ledgers::PerSource(v) = &mut ledgers {
+                        v.push(SinkLedger::open(
+                            &dir.join(format!("{}.sink.ledger.json", name.to_lowercase())),
+                        )?);
+                    }
                     let rec = durability::reconcile(
                         &name,
                         pos,
                         scan,
-                        ledger.as_ref().expect("wal_dir implies ledger"),
+                        ledgers.for_source(s).expect("wal_dir implies a ledger"),
                         cfg.recovery_mode,
                         &bases,
                     )?;
@@ -728,6 +772,33 @@ impl<'rt> Session<'rt> {
         let mut total_recovery_wait = Duration::ZERO;
         let mut degraded_rounds = 0usize;
 
+        // ---- Sharded-runtime state (`Config::shards`). The timeline
+        // bank arbitrates the *physical* per-executor GPU timelines
+        // across the concurrent source groups: every source books a
+        // reservation lease (in global source order) before its shard
+        // executes, so cross-shard GPU contention is priced into the
+        // offsets and never double-booked. Quotas are per-shard deficit
+        // token buckets over admitted wire bytes (burst = one second of
+        // rate); a veto returns the batch to the admission buffer.
+        let shard_count = cfg.shards.unwrap_or(1);
+        let mut bank = cfg.shards.map(|_| TimelineBank::new(base_topo.num_executors()));
+        let mut quota_tokens: Vec<f64> =
+            cfg.shard_quotas.clone().unwrap_or_default();
+        let mut quota_last = Time::ZERO;
+        let mut quota_vetoes: Vec<usize> = vec![0; shard_count];
+        let mut shard_stats: Vec<ShardStats> = match cfg.shards {
+            Some(k) => (0..k)
+                .map(|sh| ShardStats {
+                    shard: sh,
+                    sources: (0..num_sources)
+                        .filter(|&s| cluster::shard_of(s, k) == sh)
+                        .count(),
+                    ..ShardStats::default()
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+
         let end = Time::ZERO.add(duration);
 
         while clock.now() < end {
@@ -782,6 +853,16 @@ impl<'rt> Session<'rt> {
                 if clock.now() >= end {
                     break;
                 }
+                // Per-shard admission quotas: refill each shard's token
+                // bucket by the simulated time elapsed since the last
+                // poll, capped at one second of burst.
+                if let Some(rates) = &cfg.shard_quotas {
+                    let dt = clock.now().saturating_sub(quota_last).as_secs_f64();
+                    for (sh, tokens) in quota_tokens.iter_mut().enumerate() {
+                        *tokens = (*tokens + rates[sh] * dt).min(rates[sh]);
+                    }
+                    quota_last = clock.now();
+                }
                 for s in 0..num_sources {
                     let t0 = Instant::now();
                     let mut data = streams[s].poll(clock.now());
@@ -832,7 +913,26 @@ impl<'rt> Session<'rt> {
                     construct_acc[s] += t0.elapsed();
                     match decision {
                         AdmissionDecision::Poll | AdmissionDecision::Buffer { .. } => {}
-                        AdmissionDecision::Admit(mb) => admitted.push((s, mb)),
+                        AdmissionDecision::Admit(mb) => match &cfg.shard_quotas {
+                            // Deficit bucket: a shard in debt has its
+                            // admission vetoed — the batch goes back
+                            // into the buffer (never dropped; Alg. 1
+                            // re-offers it next poll) and the WAL, which
+                            // runs after this phase, never sees it. An
+                            // in-credit shard admits even if the batch
+                            // overdraws (at most one burst of debt).
+                            Some(_) => {
+                                let sh = cluster::shard_of(s, shard_count);
+                                if quota_tokens[sh] < 0.0 {
+                                    quota_vetoes[sh] += 1;
+                                    admissions[s].restore(mb);
+                                } else {
+                                    quota_tokens[sh] -= mb.wire_bytes() as f64;
+                                    admitted.push((s, mb));
+                                }
+                            }
+                            None => admitted.push((s, mb)),
+                        },
                     }
                     // Event time: when the watermark crosses a
                     // window-close boundary, the window the buffered
@@ -884,9 +984,21 @@ impl<'rt> Session<'rt> {
             let admitted_seqs: Vec<Option<u64>> = match (replay_seqs, wals.as_mut()) {
                 (Some(seqs), _) => seqs,
                 (None, Some(ws)) => {
+                    // Group commit: frame every admitted batch first,
+                    // then one fsync per distinct source — the round's
+                    // append-before-execute ordering is preserved
+                    // (every commit lands before planning starts), the
+                    // sync count per source per round drops to one.
                     let mut seqs = Vec::with_capacity(admitted.len());
                     for &(s, ref batch) in &admitted {
-                        seqs.push(Some(ws[s].append(round, batch)?));
+                        seqs.push(Some(ws[s].append_deferred(round, batch)?));
+                    }
+                    let mut synced: Vec<usize> = Vec::new();
+                    for &(s, _) in &admitted {
+                        if !synced.contains(&s) {
+                            ws[s].commit()?;
+                            synced.push(s);
+                        }
                     }
                     seqs
                 }
@@ -932,18 +1044,6 @@ impl<'rt> Session<'rt> {
             // per in-window dataset (O(#datasets) Arc bumps, zero row
             // copies, no copy-on-write even while a sink retains an old
             // snapshot — see engine::window).
-            struct Staged {
-                s: usize,
-                qi: usize,
-                input: ChunkedBatch,
-                snapshot: Option<ChunkedBatch>,
-                /// Eq. 9 aux `(bytes, chunks)` for join builds: the
-                /// window's *encoded* resident footprint (cold chunks
-                /// price their RLE/dict/delta blocks, not the decoded
-                /// rows) — mirrored into both the scheduler's
-                /// `QueryCandidate` and the executor's `ExecOpts::aux`.
-                aux: Option<(f64, usize)>,
-            }
             let mut staged: Vec<Staged> = Vec::new();
             for &(s, ref batch) in &admitted {
                 // Watermark upkeep for paths that bypass the poll-time
@@ -977,7 +1077,11 @@ impl<'rt> Session<'rt> {
                             }
                         }
                     }
-                    let (input, snapshot): (ChunkedBatch, Option<ChunkedBatch>) =
+                    let (input, snapshot, stats): (
+                        ChunkedBatch,
+                        Option<ChunkedBatch>,
+                        Vec<Option<ChunkStats>>,
+                    ) =
                         if query.uses_window_state && !qdef.has_join {
                             // Windowed aggregation recomputes over state ∪
                             // new: ingest the new datasets first (O(delta)
@@ -988,13 +1092,21 @@ impl<'rt> Session<'rt> {
                             // skips these queries.
                             windows[qi].push(&batch.datasets);
                             let snap = windows[qi].snapshot_chunks()?;
+                            // Encode-time stats ride along only when the
+                            // snapshot is the execution input — a fused
+                            // aggregate tail then prunes/min-maxes off
+                            // the encoded blocks instead of rescanning.
+                            let stats = match &snap {
+                                Some(_) => windows[qi].snapshot_chunk_stats(),
+                                None => Vec::new(),
+                            };
                             let input = match &snap {
                                 Some(st) => st.clone(),
                                 None => batch.chunked()?,
                             };
-                            (input, snap)
+                            (input, snap, stats)
                         } else {
-                            (batch.chunked()?, windows[qi].snapshot_chunks()?)
+                            (batch.chunked()?, windows[qi].snapshot_chunks()?, Vec::new())
                         };
                     let aux = if qdef.has_join {
                         snapshot
@@ -1003,7 +1115,7 @@ impl<'rt> Session<'rt> {
                     } else {
                         None
                     };
-                    staged.push(Staged { s, qi, input, snapshot, aux });
+                    staged.push(Staged { s, qi, input, snapshot, aux, stats });
                 }
             }
 
@@ -1031,21 +1143,29 @@ impl<'rt> Session<'rt> {
             // window pushes above are stateful; the log already holds
             // the round) — attempts re-execute from the staged chunk
             // lists, whose clones are O(#chunks) Arc bumps.
-            struct Pending {
-                s: usize,
-                qi: usize,
-                result: ChunkedBatch,
-                branch_results: Vec<(usize, ChunkedBatch)>,
-                proc: Duration,
-                gpu_wait: Duration,
-                traces: Vec<OpTrace>,
-                gpu_ops: usize,
-                total_ops: usize,
-                pruned_chunks: usize,
-            }
             let mut round_retries = 0usize;
             let mut recovery_wait = Duration::ZERO;
             let (mut pending, mut makespan, map_device_total, degraded) = loop {
+                // Sharded rounds (`Config::shards`) take the concurrent
+                // per-source-group path instead — one pass (its retry
+                // sweeps live inside): ticket-ordered timeline-bank
+                // leases, parallel per-shard execution, main-thread
+                // failure sweeps. The rest of this loop is the legacy
+                // session-wide round, byte-identical when sharding is
+                // off.
+                if let Some(shards) = cfg.shards {
+                    break self.run_sharded_round(
+                        &cfg,
+                        &staged,
+                        &mut health,
+                        &base_topo,
+                        bank.as_mut().expect("sharded config builds a bank"),
+                        shards,
+                        round,
+                        &mut round_retries,
+                        &mut recovery_wait,
+                    )?;
+                }
                 // Faults armed for this attempt (the first attempt of a
                 // faulty round only: a crash keeps failing through
                 // topology exclusion, not re-injection) and the
@@ -1179,137 +1299,37 @@ impl<'rt> Session<'rt> {
                         vec![GpuTimeline::new(); topo.num_executors()];
                     for &idx in &exec_order {
                         let st = &staged[idx];
-                        let (s, qi) = (st.s, st.qi);
-                        let input = st.input.clone();
-                        let plan = &plans[idx];
-                        let qdef = &self.queries[qi];
-                        let query = &qdef.query;
-                        // A join's build side before any state: empty window.
-                        let empty_window = ChunkedBatch::new(input.schema().clone());
-                        let join_side = if qdef.has_join {
-                            Some(st.snapshot.as_ref().unwrap_or(&empty_window))
-                        } else {
-                            None
-                        };
-
+                        let qdef = &self.queries[st.qi];
                         // Processing phase (single executor or
                         // cluster-wide, on the surviving spec).
-                        #[allow(clippy::type_complexity)]
-                        let (result, branch_results, proc, gpu_wait, traces, gpu_ops, pruned):
-                            (_, _, _, _, _, _, usize) =
-                            match &run_cluster {
-                                None => {
-                                    // Single node: a faulted executor
-                                    // has no peer to re-plan around —
-                                    // the share is simply lost this
-                                    // attempt.
-                                    if let Some(&e) = fail_phys.first() {
-                                        return Err(Error::Executor {
-                                            executor: e,
-                                            reason: "lost its share mid-round (injected fault)"
-                                                .into(),
-                                        });
-                                    }
-                                    let env = ExecEnv {
-                                        model: &self.model,
-                                        backend: cfg.backend,
-                                        num_cores: cfg.num_cores,
-                                        num_gpus: cfg.num_gpus,
-                                        runtime,
-                                    };
-                                    let demoted;
-                                    let share_plan = if faults.cpu_only.contains(&0) {
-                                        demoted = plan.demoted_to_cpu();
-                                        &demoted
-                                    } else {
-                                        plan
-                                    };
-                                    let ops = share_plan.gpu_ops();
-                                    // Fuse against the plan actually
-                                    // executed (a GPU-demoted plan
-                                    // re-fuses as all-CPU groups).
-                                    let fplan = fuse::fuse(query, share_plan);
-                                    let o = exec::execute_with_opts(
-                                        query,
-                                        share_plan,
-                                        input,
-                                        join_side,
-                                        &env,
-                                        &mut timelines[0],
-                                        &ExecOpts { fused: Some(&fplan), aux: st.aux },
-                                    )?;
-                                    (
-                                        o.result,
-                                        o.branch_results,
-                                        o.proc,
-                                        o.contention,
-                                        o.traces,
-                                        ops,
-                                        o.pruned_chunks,
-                                    )
-                                }
-                                Some(spec) => {
-                                    let fplan = fuse::fuse(query, plan);
-                                    let o = cluster::execute_on_cluster_opts(
-                                        spec,
-                                        query,
-                                        plan,
-                                        input,
-                                        join_side,
-                                        &self.model,
-                                        cfg.backend,
-                                        runtime,
-                                        Some(&mut timelines),
-                                        &faults,
-                                        &ExecOpts { fused: Some(&fplan), aux: st.aux },
-                                    )?;
-                                    // Merge per-executor traces (sum byte
-                                    // volumes per op) for the size estimator.
-                                    let mut merged: Vec<OpTrace> =
-                                        o.per_executor[0].traces.clone();
-                                    for ex in &o.per_executor[1..] {
-                                        for (m, t) in merged.iter_mut().zip(&ex.traces) {
-                                            m.in_bytes += t.in_bytes;
-                                            m.out_bytes += t.out_bytes;
-                                        }
-                                    }
-                                    // The batch completes at the straggler,
-                                    // so the wait that actually sits inside
-                                    // this record's proc is the *straggler
-                                    // executor's* contention (another
-                                    // executor's larger wait can hide
-                                    // entirely behind the barrier).
-                                    let wait = o
-                                        .per_executor
-                                        .iter()
-                                        .max_by_key(|e| e.proc)
-                                        .map(|e| e.contention)
-                                        .unwrap_or(Duration::ZERO);
-                                    let pruned: usize =
-                                        o.per_executor.iter().map(|e| e.pruned_chunks).sum();
-                                    (
-                                        o.result,
-                                        o.branch_results,
-                                        o.proc,
-                                        wait,
-                                        merged,
-                                        plan.gpu_ops(),
-                                        pruned,
-                                    )
-                                }
-                            };
-                        makespan = makespan.max(proc);
+                        let eq = execute_staged_query(
+                            &qdef.query,
+                            qdef.has_join,
+                            &plans[idx],
+                            st,
+                            &self.model,
+                            &cfg,
+                            runtime,
+                            run_cluster.as_ref(),
+                            &faults,
+                            &fail_phys,
+                            &mut timelines,
+                        )?;
+                        makespan = makespan.max(eq.proc);
                         pending.push(Pending {
-                            s,
-                            qi,
-                            result,
-                            branch_results,
-                            proc,
-                            gpu_wait,
-                            traces,
-                            gpu_ops,
-                            total_ops: query.len(),
-                            pruned_chunks: pruned,
+                            s: st.s,
+                            qi: st.qi,
+                            result: eq.result,
+                            branch_results: eq.branch_results,
+                            proc: eq.proc,
+                            gpu_wait: eq.gpu_wait,
+                            traces: eq.traces,
+                            gpu_ops: eq.gpu_ops,
+                            total_ops: qdef.query.len(),
+                            pruned_chunks: eq.pruned_chunks,
+                            retries: 0,
+                            recovery_wait: Duration::ZERO,
+                            shard: 0,
                         });
                     }
                     Ok((pending, makespan, map_device_total))
@@ -1347,12 +1367,20 @@ impl<'rt> Session<'rt> {
             // attempt) is real round latency: charge it to the round's
             // makespan and into each batch's proc, so Eq. 10 and
             // admission learn true degraded-round behavior (the same
-            // convention gpu_wait follows).
-            if !recovery_wait.is_zero() {
-                for p in &mut pending {
-                    p.proc += recovery_wait;
+            // convention gpu_wait follows). Sharded rounds already
+            // folded recovery per source and filled the per-batch retry
+            // fields inside `run_sharded_round`.
+            if cfg.shards.is_none() {
+                if !recovery_wait.is_zero() {
+                    for p in &mut pending {
+                        p.proc += recovery_wait;
+                    }
+                    makespan += recovery_wait;
                 }
-                makespan += recovery_wait;
+                for p in &mut pending {
+                    p.retries = round_retries;
+                    p.recovery_wait = recovery_wait;
+                }
             }
             total_retries += round_retries;
             total_recovery_wait += recovery_wait;
@@ -1364,7 +1392,16 @@ impl<'rt> Session<'rt> {
             // its accumulated admission time getting here.
             let construct_total: Duration =
                 admitted.iter().map(|&(s, _)| construct_acc[s]).sum();
-            clock.advance(makespan + map_device_total + construct_total + opt_blocking);
+            if cfg.shards.is_some() {
+                // Sharded epoch: the clock advances by the max source
+                // makespan alone — no wall-measured planning/construct
+                // terms — so the sharded timeline is a pure function of
+                // the simulated execution (bit-identical across shard
+                // counts and repeat runs).
+                clock.advance(makespan);
+            } else {
+                clock.advance(makespan + map_device_total + construct_total + opt_blocking);
+            }
 
             // ---- Metrics (Eqs. 4/5, Table IV) + sinks + learning.
             // Per-source batch context (bytes, dataset count, buffering
@@ -1381,6 +1418,31 @@ impl<'rt> Session<'rt> {
                     .map(|d| admitted_at.saturating_sub(d.created_at))
                     .collect();
             }
+            // Per-shard fairness accounting (sharded runs only):
+            // admission traffic, executed batches, per-source attempts.
+            if cfg.shards.is_some() {
+                let mut counted_round = vec![false; shard_count];
+                for &(s, ref batch) in &admitted {
+                    let sh = cluster::shard_of(s, shard_count);
+                    if !counted_round[sh] {
+                        shard_stats[sh].rounds += 1;
+                        counted_round[sh] = true;
+                    }
+                    shard_stats[sh].bytes += batch.wire_bytes();
+                }
+                let mut counted_src: Vec<usize> = Vec::new();
+                for p in &pending {
+                    shard_stats[p.shard].batches += 1;
+                    shard_stats[p.shard].proc += p.proc;
+                    // Retries are per source, not per query: count each
+                    // source's attempts once however many queries it
+                    // staged.
+                    if !counted_src.contains(&p.s) {
+                        counted_src.push(p.s);
+                        shard_stats[p.shard].retries += p.retries;
+                    }
+                }
+            }
             for p in pending {
                 let batch_index = metrics[p.qi].batches();
                 let completed_at = clock.now();
@@ -1391,7 +1453,7 @@ impl<'rt> Session<'rt> {
                 // one ledger entry covers the whole reassembled batch).
                 // Metrics and learning below still record either way:
                 // replay rebuilds them identically.
-                let fresh = match &ledger {
+                let fresh = match ledgers.for_source(p.s) {
                     Some(l) => {
                         !l.already_delivered(&self.queries[p.qi].name, batch_index as u64)
                     }
@@ -1421,15 +1483,13 @@ impl<'rt> Session<'rt> {
                         // Deliveries that succeeded earlier this round
                         // are made durable before the failure
                         // propagates (see durability::ledger docs).
-                        if let Some(l) = ledger.as_mut() {
-                            l.persist()?;
-                            self.last_ledger_persists = l.persists();
-                        }
+                        ledgers.persist_all()?;
+                        self.last_ledger_persists = ledgers.persists();
                         return Err(e);
                     }
                     // Record the delivery; the durable write happens
                     // once, at the end of the round's delivery loop.
-                    if let Some(l) = ledger.as_mut() {
+                    if let Some(l) = ledgers.for_source_mut(p.s) {
                         l.record(&self.queries[p.qi].name, round as u64, batch_index as u64);
                     }
                 }
@@ -1465,8 +1525,8 @@ impl<'rt> Session<'rt> {
                     } else {
                         Duration::ZERO
                     },
-                    retries: round_retries,
-                    recovery_wait,
+                    retries: p.retries,
+                    recovery_wait: p.recovery_wait,
                     degraded,
                     // Late rows accumulate per source between rounds and
                     // flush once, to the source's primary query, so
@@ -1488,16 +1548,16 @@ impl<'rt> Session<'rt> {
                     state_bytes_raw: windows[p.qi].state_bytes_raw(),
                     state_bytes_encoded: windows[p.qi].state_bytes_encoded(),
                     pruned_chunks: p.pruned_chunks,
+                    shard: p.shard,
                 };
                 metrics[p.qi].record(rec, &src_buffs[p.s]);
                 self.queries[p.qi].size_est.observe(&p.traces);
             }
-            // One durable ledger write covers the whole round's
-            // deliveries (not one write per delivery).
-            if let Some(l) = ledger.as_mut() {
-                l.persist()?;
-                self.last_ledger_persists = l.persists();
-            }
+            // One durable ledger write per dirty ledger covers the whole
+            // round's deliveries (not one write per delivery; per-source
+            // ledgers only write for sources that delivered).
+            ledgers.persist_all()?;
+            self.last_ledger_persists = ledgers.persists();
 
             // ---- Per-source learning, window upkeep, checkpointing.
             for (ai, &(s, ref batch)) in admitted.iter().enumerate() {
@@ -1588,11 +1648,21 @@ impl<'rt> Session<'rt> {
             }
         }
 
+        self.last_wal_fsyncs = wals
+            .as_ref()
+            .map(|ws| ws.iter().map(|w| w.fsyncs()).sum())
+            .unwrap_or(0);
+        for (sh, &v) in quota_vetoes.iter().enumerate() {
+            if let Some(st) = shard_stats.get_mut(sh) {
+                st.quota_vetoes = v;
+            }
+        }
         self.last_health = Some(HealthReport {
             executors: health.stats(),
             retries: total_retries,
             recovery_wait: total_recovery_wait,
             degraded_rounds,
+            shards: shard_stats,
         });
         self.last_watermarks = match cfg.allowed_lateness {
             Some(lateness) => max_event
@@ -1619,6 +1689,578 @@ impl<'rt> Session<'rt> {
                 batches: m.records().to_vec(),
             })
             .collect())
+    }
+
+    /// One sharded scheduling round (`Config::shards`): plan each
+    /// admitted source's query group independently — in global source
+    /// order, each booking a [`TimelineBank`] reservation lease off its
+    /// predicted per-executor horizons, so cross-shard GPU contention
+    /// is priced into the lease offsets and never double-booked — then
+    /// execute the source groups concurrently, one worker per shard,
+    /// against [`GpuTimeline::starting_at`] the leased offsets.
+    ///
+    /// Failures sweep on the coordinator thread: a failed source
+    /// re-plans on the survivor topology (keeping its original lease
+    /// window) and re-executes next sweep under its own retry budget
+    /// and exponential backoff, while completed sources never
+    /// re-execute — retries stay shard-local. Planning is per source
+    /// whatever the shard count, so outputs are bit-identical across
+    /// shard counts by construction.
+    ///
+    /// Returns `(pending, epoch_makespan, planning_wall, degraded)`;
+    /// `retries_out`/`recovery_out` accumulate the round's per-source
+    /// attempt totals. The epoch makespan is the max source proc — a
+    /// pure function of the simulated execution, with no wall-clock
+    /// terms.
+    #[allow(clippy::too_many_arguments)]
+    fn run_sharded_round(
+        &self,
+        cfg: &Config,
+        staged: &[Staged],
+        health: &mut cluster::ExecutorHealth,
+        base_topo: &cluster::DeviceTopology,
+        bank: &mut TimelineBank,
+        shards: usize,
+        round: usize,
+        retries_out: &mut usize,
+        recovery_out: &mut Duration,
+    ) -> Result<(Vec<Pending>, Duration, Duration, bool)> {
+        // Worker threads must not see the session itself (the owned
+        // sinks are not Sync): hoist the Sync state they need.
+        let model = &self.model;
+        let qrefs: Vec<&Query> = self.queries.iter().map(|q| &q.query).collect();
+        let qjoin: Vec<bool> = self.queries.iter().map(|q| q.has_join).collect();
+
+        bank.reset_epoch()?;
+
+        // Source groups in staging order — which is source registration
+        // order, the bank's ticket order.
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (i, st) in staged.iter().enumerate() {
+            match groups.iter_mut().find(|(s, _)| *s == st.s) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((st.s, vec![i])),
+            }
+        }
+        let ngroups = groups.len();
+
+        // Per-source sweep state. Leases are granted on the first sweep
+        // only; a retrying source re-plans on fewer executors but its
+        // granted window stands (the prediction drift is bounded by the
+        // backoff it also pays).
+        let mut plans: Vec<Option<PhysicalPlan>> = vec![None; staged.len()];
+        let mut exec_order: Vec<Vec<usize>> = vec![Vec::new(); ngroups];
+        let mut offsets: Vec<Option<Vec<Duration>>> = vec![None; ngroups];
+        let mut done = vec![false; ngroups];
+        let mut src_retries = vec![0usize; ngroups];
+        let mut src_recovery = vec![Duration::ZERO; ngroups];
+        let mut results: Vec<Option<Vec<Pending>>> =
+            (0..ngroups).map(|_| None).collect();
+        let mut planning_wall = Duration::ZERO;
+
+        let degraded = loop {
+            // Survivor topology for this sweep — same derivation as the
+            // legacy attempt loop.
+            let fail_phys = health.attempt_faults();
+            let active = health.active();
+            if active.is_empty() {
+                return Err(Error::Executor {
+                    executor: fail_phys.first().copied().unwrap_or(0),
+                    reason: "no surviving executors to re-plan on".into(),
+                });
+            }
+            let mut topo = base_topo.subset(&active);
+            for (local, &phys) in active.iter().enumerate() {
+                if !health.gpu_ok(phys) {
+                    topo.degrade_gpu(local);
+                }
+            }
+            let faults = cluster::RoundFaults {
+                fail: fail_phys
+                    .iter()
+                    .filter_map(|&p| active.iter().position(|&a| a == p))
+                    .collect(),
+                cpu_only: (0..active.len())
+                    .filter(|&l| !topo.gpu_usable(l))
+                    .collect(),
+            };
+            let degraded_now = health.is_degraded() || !faults.is_clean();
+            let run_cluster = cfg.cluster.as_ref().map(|spec| spec.subset(&active));
+
+            // ---- Plan every pending source and book its lease, in
+            // ticket order, on this thread. A group always plans as a
+            // group (plan_joint even for a single query): the plan is a
+            // function of the source alone, never of shard layout.
+            let t_plan = Instant::now();
+            for (g, (_, idxs)) in groups.iter().enumerate() {
+                if done[g] {
+                    continue;
+                }
+                let mut cands: Vec<QueryCandidate> = Vec::with_capacity(idxs.len());
+                for &i in idxs {
+                    let st = &staged[i];
+                    let qdef = &self.queries[st.qi];
+                    let part =
+                        mean_partition_bytes(st.input.alloc_bytes(), topo.total_cores());
+                    let (aux_bytes, aux_chunks) = st.aux.unwrap_or((0.0, 0));
+                    cands.push(
+                        QueryCandidate::build(
+                            &qdef.query,
+                            part,
+                            self.inf_pt,
+                            cfg.base_trans_cost,
+                            &qdef.size_est,
+                            st.input.num_chunks(),
+                            aux_bytes,
+                            aux_chunks,
+                        )?
+                        .with_exec_chunks(schedule::share_chunk_counts(
+                            &st.input,
+                            &topo,
+                        )),
+                    );
+                }
+                let (group_plans, group_order, predicted) =
+                    if cfg.mode == Mode::LmStream && cfg.co_schedule {
+                        let jp = schedule::plan_joint(&cands, model, &topo);
+                        let order = jp.predicted.order.clone();
+                        let pred = jp.predicted.clone();
+                        (jp.plans, order, pred)
+                    } else {
+                        // Fixed policies keep per-query plans, replayed
+                        // through the same simulator for the lease
+                        // horizons.
+                        let mut group_plans = Vec::with_capacity(idxs.len());
+                        for &i in idxs {
+                            let st = &staged[i];
+                            let qdef = &self.queries[st.qi];
+                            let query = &qdef.query;
+                            let plan = match cfg.mode {
+                                Mode::LmStream => {
+                                    let part = mean_partition_bytes(
+                                        st.input.alloc_bytes(),
+                                        topo.total_cores(),
+                                    );
+                                    map_device(
+                                        query,
+                                        part,
+                                        self.inf_pt,
+                                        cfg.base_trans_cost,
+                                        &qdef.size_est,
+                                        st.input.num_chunks(),
+                                    )?
+                                }
+                                Mode::Baseline | Mode::AllGpu => {
+                                    PhysicalPlan::uniform(query, Device::Gpu)
+                                }
+                                Mode::BaselineCpu | Mode::AllCpu => {
+                                    PhysicalPlan::uniform(query, Device::Cpu)
+                                }
+                                Mode::StaticPreference => static_preference_plan(query),
+                            };
+                            group_plans.push(plan);
+                        }
+                        let pred = schedule::predict_fixed(
+                            &cands,
+                            &group_plans,
+                            model,
+                            &topo,
+                        );
+                        (group_plans, (0..idxs.len()).collect::<Vec<_>>(), pred)
+                    };
+                if offsets[g].is_none() {
+                    // Book the group's GPU window off the prediction:
+                    // the lease starts where earlier tickets' committed
+                    // horizons end, per physical executor.
+                    let lease = bank.lease()?;
+                    let local =
+                        schedule::executor_horizons(&predicted, topo.num_executors());
+                    let mut phys = vec![0.0f64; bank.num_executors()];
+                    for (l, &p) in active.iter().enumerate() {
+                        phys[p] = local[l];
+                    }
+                    offsets[g] = Some(lease.offsets.clone());
+                    bank.commit(lease, &phys)?;
+                }
+                exec_order[g] = group_order.iter().map(|&o| idxs[o]).collect();
+                for (j, plan) in group_plans.into_iter().enumerate() {
+                    plans[idxs[j]] = Some(plan);
+                }
+            }
+            planning_wall += t_plan.elapsed();
+
+            // ---- Concurrent execution: one work item per shard (a
+            // shard's sources run sequentially inside it — it *is* a
+            // round loop), shards in parallel. par_map preserves item
+            // order and each source's timelines seed from its own lease
+            // offsets, so nothing observable depends on thread timing.
+            let mut shard_tasks: Vec<(usize, Vec<usize>)> = Vec::new();
+            for (g, (s, _)) in groups.iter().enumerate() {
+                if done[g] {
+                    continue;
+                }
+                let sh = cluster::shard_of(*s, shards);
+                match shard_tasks.iter_mut().find(|(t, _)| *t == sh) {
+                    Some((_, gs)) => gs.push(g),
+                    None => shard_tasks.push((sh, vec![g])),
+                }
+            }
+            let order_ref = &exec_order;
+            let plans_ref = &plans;
+            let offsets_ref = &offsets;
+            let active_ref = &active;
+            let faults_ref = &faults;
+            let fail_ref = fail_phys.as_slice();
+            let cluster_ref = run_cluster.as_ref();
+            let qrefs_ref = &qrefs;
+            let qjoin_ref = &qjoin;
+            let threads = shard_tasks.len();
+            let sweep: Vec<Vec<(usize, Result<Vec<Pending>>)>> =
+                par_map(shard_tasks, threads, |_, (sh, gs)| {
+                    gs.into_iter()
+                        .map(|g| {
+                            let offs = offsets_ref[g]
+                                .as_ref()
+                                .expect("leased before execution");
+                            let mut timelines: Vec<GpuTimeline> = active_ref
+                                .iter()
+                                .map(|&phys| GpuTimeline::starting_at(offs[phys]))
+                                .collect();
+                            let mut run = || -> Result<Vec<Pending>> {
+                                let mut out = Vec::new();
+                                for &i in &order_ref[g] {
+                                    let st = &staged[i];
+                                    let eq = execute_staged_query(
+                                        qrefs_ref[st.qi],
+                                        qjoin_ref[st.qi],
+                                        plans_ref[i].as_ref().expect("planned"),
+                                        st,
+                                        model,
+                                        cfg,
+                                        // Sharding validates Simulated-only:
+                                        // no PJRT runtime crosses threads.
+                                        None,
+                                        cluster_ref,
+                                        faults_ref,
+                                        fail_ref,
+                                        &mut timelines,
+                                    )?;
+                                    out.push(Pending {
+                                        s: st.s,
+                                        qi: st.qi,
+                                        result: eq.result,
+                                        branch_results: eq.branch_results,
+                                        proc: eq.proc,
+                                        gpu_wait: eq.gpu_wait,
+                                        traces: eq.traces,
+                                        gpu_ops: eq.gpu_ops,
+                                        total_ops: qrefs_ref[st.qi].len(),
+                                        pruned_chunks: eq.pruned_chunks,
+                                        retries: 0,
+                                        recovery_wait: Duration::ZERO,
+                                        shard: sh,
+                                    });
+                                }
+                                Ok(out)
+                            };
+                            (g, run())
+                        })
+                        .collect()
+                });
+
+            // ---- Collect (coordinator thread): successes finish their
+            // source; failures charge detection + backoff against that
+            // source's own budget and re-enter the next sweep.
+            let mut any_failed = false;
+            for (g, res) in sweep.into_iter().flatten() {
+                match res {
+                    Ok(ps) => {
+                        results[g] = Some(ps);
+                        done[g] = true;
+                    }
+                    Err(Error::Executor { executor, reason }) => {
+                        if !any_failed {
+                            // One health transition per failed sweep
+                            // (mirrors one per failed legacy attempt).
+                            health.note_attempt_failed();
+                            any_failed = true;
+                        }
+                        src_retries[g] += 1;
+                        if src_retries[g] > cfg.max_round_retries {
+                            return Err(Error::Executor {
+                                executor,
+                                reason: format!(
+                                    "{reason}; round {round} exhausted its retry \
+                                     budget ({} retries)",
+                                    cfg.max_round_retries
+                                ),
+                            });
+                        }
+                        src_recovery[g] += cfg.failure_detection
+                            + cfg.retry_backoff * (1u32 << (src_retries[g] - 1).min(16));
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            if !any_failed {
+                break degraded_now;
+            }
+        };
+
+        // ---- Fold. Recovery wait lands in the failing source's batches
+        // only (healthy shards never pay for another shard's faults);
+        // the epoch advances by the max source proc.
+        let mut pending: Vec<Pending> = Vec::new();
+        let mut epoch_makespan = Duration::ZERO;
+        for (g, res) in results.into_iter().enumerate() {
+            let mut ps = res.expect("every source completed or the round errored");
+            for p in &mut ps {
+                p.proc += src_recovery[g];
+                p.retries = src_retries[g];
+                p.recovery_wait = src_recovery[g];
+                epoch_makespan = epoch_makespan.max(p.proc);
+            }
+            *retries_out += src_retries[g];
+            *recovery_out += src_recovery[g];
+            pending.extend(ps);
+        }
+        Ok((pending, epoch_makespan, planning_wall, degraded))
+    }
+}
+
+/// One staged (source, query) execution input for a round: assembled
+/// once — window upkeep is stateful — then re-executed as-is across
+/// retry attempts (clones are O(#chunks) Arc bumps).
+struct Staged {
+    s: usize,
+    qi: usize,
+    input: ChunkedBatch,
+    snapshot: Option<ChunkedBatch>,
+    /// Eq. 9 aux `(bytes, chunks)` for join builds: the window's
+    /// *encoded* resident footprint (cold chunks price their
+    /// RLE/dict/delta blocks, not the decoded rows) — mirrored into
+    /// both the scheduler's `QueryCandidate` and the executor's
+    /// `ExecOpts::aux`.
+    aux: Option<(f64, usize)>,
+    /// Per-chunk encode-time stats aligned with `input` when the input
+    /// *is* the window chunk list (aggregation-path snapshots): cold
+    /// chunks reuse the min/max their encoded blocks already carry, hot
+    /// ones recompute inline. Empty whenever the input is the fresh
+    /// batch alone — the executor then scans as before.
+    stats: Vec<Option<ChunkStats>>,
+}
+
+/// One executed (source, query) batch awaiting metrics + delivery.
+struct Pending {
+    s: usize,
+    qi: usize,
+    result: ChunkedBatch,
+    branch_results: Vec<(usize, ChunkedBatch)>,
+    proc: Duration,
+    gpu_wait: Duration,
+    traces: Vec<OpTrace>,
+    gpu_ops: usize,
+    total_ops: usize,
+    pruned_chunks: usize,
+    /// Failed attempts charged to this batch's round (legacy:
+    /// round-wide; sharded: this *source's* attempts only).
+    retries: usize,
+    /// Detection + backoff wait folded into `proc`.
+    recovery_wait: Duration,
+    /// `source % shards` (0 when sharding is off).
+    shard: usize,
+}
+
+/// What executing one staged query yields (shared by the legacy round
+/// loop and the sharded per-shard workers).
+struct ExecutedQuery {
+    result: ChunkedBatch,
+    branch_results: Vec<(usize, ChunkedBatch)>,
+    proc: Duration,
+    gpu_wait: Duration,
+    traces: Vec<OpTrace>,
+    gpu_ops: usize,
+    pruned_chunks: usize,
+}
+
+/// Execute one staged query against `plan` on the attempt's surviving
+/// topology — single executor or cluster-wide — charging its simulated
+/// GPU ops to `timelines` (subset-local indexing, like `faults`). This
+/// is the round loop's per-query execution factored out so the sharded
+/// runtime's worker threads share it: it touches no session state (the
+/// owned sinks are not Sync and stay on the coordinator thread).
+#[allow(clippy::too_many_arguments)]
+fn execute_staged_query(
+    query: &Query,
+    query_has_join: bool,
+    plan: &PhysicalPlan,
+    st: &Staged,
+    model: &DeviceModel,
+    cfg: &Config,
+    runtime: Option<&Runtime>,
+    run_cluster: Option<&cluster::ClusterSpec>,
+    faults: &cluster::RoundFaults,
+    fail_phys: &[usize],
+    timelines: &mut [GpuTimeline],
+) -> Result<ExecutedQuery> {
+    let input = st.input.clone();
+    // A join's build side before any state: empty window.
+    let empty_window = ChunkedBatch::new(input.schema().clone());
+    let join_side = if query_has_join {
+        Some(st.snapshot.as_ref().unwrap_or(&empty_window))
+    } else {
+        None
+    };
+    let chunk_stats =
+        if st.stats.is_empty() { None } else { Some(st.stats.as_slice()) };
+    match run_cluster {
+        None => {
+            // Single node: a faulted executor has no peer to re-plan
+            // around — the share is simply lost this attempt.
+            if let Some(&e) = fail_phys.first() {
+                return Err(Error::Executor {
+                    executor: e,
+                    reason: "lost its share mid-round (injected fault)".into(),
+                });
+            }
+            let env = ExecEnv {
+                model,
+                backend: cfg.backend,
+                num_cores: cfg.num_cores,
+                num_gpus: cfg.num_gpus,
+                runtime,
+            };
+            let demoted;
+            let share_plan = if faults.cpu_only.contains(&0) {
+                demoted = plan.demoted_to_cpu();
+                &demoted
+            } else {
+                plan
+            };
+            let ops = share_plan.gpu_ops();
+            // Fuse against the plan actually executed (a GPU-demoted
+            // plan re-fuses as all-CPU groups).
+            let fplan = fuse::fuse(query, share_plan);
+            let o = exec::execute_with_opts(
+                query,
+                share_plan,
+                input,
+                join_side,
+                &env,
+                &mut timelines[0],
+                &ExecOpts { fused: Some(&fplan), aux: st.aux, chunk_stats },
+            )?;
+            Ok(ExecutedQuery {
+                result: o.result,
+                branch_results: o.branch_results,
+                proc: o.proc,
+                gpu_wait: o.contention,
+                traces: o.traces,
+                gpu_ops: ops,
+                pruned_chunks: o.pruned_chunks,
+            })
+        }
+        Some(spec) => {
+            let fplan = fuse::fuse(query, plan);
+            let o = cluster::execute_on_cluster_opts(
+                spec,
+                query,
+                plan,
+                input,
+                join_side,
+                model,
+                cfg.backend,
+                runtime,
+                Some(timelines),
+                faults,
+                // Chunk stats stop at the cluster boundary: shares are
+                // row slices, so per-chunk stats no longer align
+                // (cluster::exec forces None per share).
+                &ExecOpts { fused: Some(&fplan), aux: st.aux, chunk_stats },
+            )?;
+            // Merge per-executor traces (sum byte volumes per op) for
+            // the size estimator.
+            let mut merged: Vec<OpTrace> = o.per_executor[0].traces.clone();
+            for ex in &o.per_executor[1..] {
+                for (m, t) in merged.iter_mut().zip(&ex.traces) {
+                    m.in_bytes += t.in_bytes;
+                    m.out_bytes += t.out_bytes;
+                }
+            }
+            // The batch completes at the straggler, so the wait that
+            // actually sits inside this record's proc is the *straggler
+            // executor's* contention (another executor's larger wait
+            // can hide entirely behind the barrier).
+            let wait = o
+                .per_executor
+                .iter()
+                .max_by_key(|e| e.proc)
+                .map(|e| e.contention)
+                .unwrap_or(Duration::ZERO);
+            let pruned: usize =
+                o.per_executor.iter().map(|e| e.pruned_chunks).sum();
+            Ok(ExecutedQuery {
+                result: o.result,
+                branch_results: o.branch_results,
+                proc: o.proc,
+                gpu_wait: wait,
+                traces: merged,
+                gpu_ops: plan.gpu_ops(),
+                pruned_chunks: pruned,
+            })
+        }
+    }
+}
+
+/// The run's sink-ledger layout: one shared file (the legacy layout,
+/// preserved byte-for-byte), one file per source (sharded runs — each
+/// source group delivers and persists independently), or none (no
+/// `wal_dir`).
+enum Ledgers {
+    Off,
+    Shared(SinkLedger),
+    PerSource(Vec<SinkLedger>),
+}
+
+impl Ledgers {
+    fn for_source(&self, s: usize) -> Option<&SinkLedger> {
+        match self {
+            Ledgers::Off => None,
+            Ledgers::Shared(l) => Some(l),
+            Ledgers::PerSource(v) => v.get(s),
+        }
+    }
+
+    fn for_source_mut(&mut self, s: usize) -> Option<&mut SinkLedger> {
+        match self {
+            Ledgers::Off => None,
+            Ledgers::Shared(l) => Some(l),
+            Ledgers::PerSource(v) => v.get_mut(s),
+        }
+    }
+
+    /// Persist every dirty ledger (`SinkLedger::persist` is a no-op
+    /// while clean, so only sources with fresh deliveries write).
+    fn persist_all(&mut self) -> Result<()> {
+        match self {
+            Ledgers::Off => Ok(()),
+            Ledgers::Shared(l) => l.persist(),
+            Ledgers::PerSource(v) => {
+                for l in v {
+                    l.persist()?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Total durable ledger writes so far, across every ledger.
+    fn persists(&self) -> usize {
+        match self {
+            Ledgers::Off => 0,
+            Ledgers::Shared(l) => l.persists(),
+            Ledgers::PerSource(v) => v.iter().map(|l| l.persists()).sum(),
+        }
     }
 }
 

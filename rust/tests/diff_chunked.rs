@@ -668,7 +668,7 @@ fn prop_fused_equals_staged_across_layouts_and_plans() {
             None,
             &env,
             &mut NoContention,
-            &ExecOpts { fused: Some(&fplan), aux: None },
+            &ExecOpts { fused: Some(&fplan), aux: None, chunk_stats: None },
         )
         .map_err(|e| e.to_string())?;
         prop_assert(

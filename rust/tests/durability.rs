@@ -411,6 +411,33 @@ fn ledger_persists_once_per_round_not_per_delivery() {
 }
 
 #[test]
+fn wal_group_commit_fsyncs_once_per_source_per_round() {
+    // The data-path WAL frames every admitted batch, then commits with
+    // one fsync per admitting source per round — the append-before-
+    // execute ordering is pinned by the recovery tests above; this pins
+    // the sync *count*.
+    let d = dirs("walfsync");
+    let rows = Arc::new(Mutex::new(Vec::new()));
+
+    let mut session = Session::new(durable_cfg(&d, "precise")).unwrap();
+    let qid = session.register(ident_workload("durfsync", 10)).unwrap();
+    session
+        .set_sink(qid, Box::new(RecordingSink::new(&rows, None)))
+        .unwrap();
+    let results = session.run(Duration::from_secs(60)).unwrap();
+
+    let rounds = results[0].batches.len();
+    let fsyncs = session.wal_fsyncs();
+    assert!(rounds >= 2, "need multiple rounds to observe batching");
+    assert!(fsyncs > 0, "durable appends must reach disk");
+    assert!(
+        fsyncs <= rounds,
+        "fsyncs ({fsyncs}) must be one group commit per round for a \
+         single source ({rounds} rounds)"
+    );
+}
+
+#[test]
 fn two_sources_recover_independently() {
     // Crash with two registered sources (each with its own WAL and
     // checkpoint, different chunk layouts); both must resume to exact

@@ -1,0 +1,375 @@
+//! Differential harness for the sharded concurrent session runtime
+//! (`Config::shards`).
+//!
+//! The contract under test is determinism-by-construction: sharded
+//! planning is always per source group and the timeline bank grants
+//! leases in global source order, so the delivered sink streams must be
+//! **bit-identical across shard counts** (shards = 1 is the serial
+//! reference) and across repeat runs — thread scheduling must never
+//! leak into outputs. On top of that: per-shard admission quotas
+//! throttle (and report) without dropping data, executor faults retry
+//! without perturbing delivered outputs, and sharded durable runs keep
+//! one sink ledger per source.
+//!
+//! The oracle is the same analytic identity stream the durability and
+//! fault-tolerance harnesses use: every row is stamped (tick, row-id),
+//! the query is a stateless filter + select, so each source's delivered
+//! row sequence must be an exact prefix of its analytic oracle.
+
+use lmstream::cluster::{ClusterSpec, FaultPlan};
+use lmstream::config::{Config, Mode};
+use lmstream::coordinator::HealthReport;
+use lmstream::engine::chunked::ChunkedBatch;
+use lmstream::engine::column::{Column, ColumnBatch, Field, Schema};
+use lmstream::engine::ops::filter::Predicate;
+use lmstream::engine::sink::Sink;
+use lmstream::error::Result;
+use lmstream::query::QueryBuilder;
+use lmstream::session::{RunResult, Session};
+use lmstream::sim::Time;
+use lmstream::source::stream::RowGen;
+use lmstream::source::traffic::Traffic;
+use lmstream::workloads::Workload;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+// ---------- deterministic identity-stamped workload ----------
+
+/// Every row is (t = tick, v = tick*10_000 + i, m = i % 10): globally
+/// unique (t, v) identities, exact in f32 for the tick ranges used.
+struct IdentGen;
+
+impl RowGen for IdentGen {
+    fn generate(&mut self, tick: u64, rows: usize) -> ColumnBatch {
+        let schema =
+            Schema::new(vec![Field::f32("t"), Field::f32("v"), Field::f32("m")]);
+        let t: Vec<f32> = vec![tick as f32; rows];
+        let v: Vec<f32> =
+            (0..rows).map(|i| (tick * 10_000 + i as u64) as f32).collect();
+        let m: Vec<f32> = (0..rows).map(|i| (i % 10) as f32).collect();
+        ColumnBatch::new(
+            schema,
+            vec![Column::F32(t.into()), Column::F32(v.into()), Column::F32(m.into())],
+        )
+        .unwrap()
+    }
+}
+
+fn make_gen(_seed: u64) -> Box<dyn RowGen> {
+    Box::new(IdentGen)
+}
+
+fn ident_query(name: &str) -> lmstream::query::dag::Query {
+    QueryBuilder::scan(name)
+        .filter("m", Predicate::Lt(6.0))
+        .select(&["t", "v"])
+        .build()
+        .unwrap()
+}
+
+fn ident_workload(name: &'static str, rows_per_tick: usize) -> Workload {
+    Workload::new(
+        name,
+        ident_query(name),
+        Traffic::Constant { rows: rows_per_tick },
+        make_gen,
+    )
+}
+
+/// The analytic oracle: the exact flattened row sequence any correct
+/// run's sink must observe for one source (one dataset per tick).
+fn oracle(rows_per_tick: usize, max_tick: u64) -> Vec<(f32, f32)> {
+    let mut out = Vec::new();
+    for tick in 0..=max_tick {
+        for i in 0..rows_per_tick {
+            if i % 10 < 6 {
+                out.push((tick as f32, (tick * 10_000 + i as u64) as f32));
+            }
+        }
+    }
+    out
+}
+
+fn assert_oracle_prefix(delivered: &[(f32, f32)], rows_per_tick: usize, ctx: &str) {
+    let full = oracle(rows_per_tick, 4_000);
+    assert!(delivered.len() <= full.len(), "{ctx}: run too long for oracle");
+    assert_eq!(
+        delivered,
+        &full[..delivered.len()],
+        "{ctx}: delivered rows diverge from the oracle"
+    );
+}
+
+// ---------- recording sink + harness plumbing ----------
+
+struct RecordingSink {
+    rows: Arc<Mutex<Vec<(f32, f32)>>>,
+}
+
+impl Sink for RecordingSink {
+    fn deliver(&mut self, _i: usize, result: &ChunkedBatch, _t: Time) -> Result<()> {
+        let b = result.coalesce();
+        let t = b.column("t").unwrap().as_f32().unwrap();
+        let v = b.column("v").unwrap().as_f32().unwrap();
+        let mut rows = self.rows.lock().unwrap();
+        for i in 0..b.rows() {
+            if b.validity.is_live(i) {
+                rows.push((t[i], v[i]));
+            }
+        }
+        Ok(())
+    }
+}
+
+static NAMES: &[&str] = &["shsrc0", "shsrc1", "shsrc2", "shsrc3"];
+
+/// The online optimizer stays off in every sharded differential run:
+/// its asynchronous pickup is wall-clock bounded, the one term the
+/// bit-identity contract cannot cover.
+fn sharded_cfg(shards: Option<usize>) -> Config {
+    Config {
+        mode: Mode::LmStream,
+        shards,
+        online_optimizer: false,
+        seed: 11,
+        ..Config::default()
+    }
+}
+
+/// One run over `rows_per_tick.len()` identity sources; returns the run
+/// outcome, each source's delivered rows (in delivery order), and the
+/// health report.
+fn run_sources(
+    cfg: Config,
+    rows_per_tick: &[usize],
+    duration: Duration,
+) -> (Result<Vec<RunResult>>, Vec<Vec<(f32, f32)>>, Option<HealthReport>) {
+    let mut session = Session::new(cfg).unwrap();
+    let mut rows: Vec<Arc<Mutex<Vec<(f32, f32)>>>> = Vec::new();
+    for (s, &rpt) in rows_per_tick.iter().enumerate() {
+        let qid = session.register(ident_workload(NAMES[s], rpt)).unwrap();
+        let sink_rows = Arc::new(Mutex::new(Vec::new()));
+        session
+            .set_sink(qid, Box::new(RecordingSink { rows: Arc::clone(&sink_rows) }))
+            .unwrap();
+        rows.push(sink_rows);
+    }
+    let out = session.run(duration);
+    let health = session.health_report().cloned();
+    let delivered = rows.iter().map(|r| r.lock().unwrap().clone()).collect();
+    (out, delivered, health)
+}
+
+// ---------- the differential property tests ----------
+
+/// Tentpole property: shard counts 1, 2 and 4 over the same four
+/// sources deliver **bit-identical** per-source sink streams (1 is the
+/// serial reference — per-source planning and ticket-ordered leases
+/// make the outputs a pure function of the sources, not of the shard
+/// layout or thread schedule), and every stream is oracle-exact.
+#[test]
+fn shard_counts_produce_bit_identical_outputs() {
+    let rows_per_tick = [4usize, 7, 10, 13];
+    let duration = Duration::from_secs(60);
+
+    let (out1, ref_rows, _) =
+        run_sources(sharded_cfg(Some(1)), &rows_per_tick, duration);
+    let r1 = out1.unwrap();
+    for (s, rows) in ref_rows.iter().enumerate() {
+        assert!(!rows.is_empty(), "source {s} delivered nothing");
+        assert_oracle_prefix(rows, rows_per_tick[s], &format!("shards=1 src {s}"));
+    }
+
+    for &k in &[2usize, 4] {
+        let (out, rows, health) =
+            run_sources(sharded_cfg(Some(k)), &rows_per_tick, duration);
+        let rk = out.unwrap();
+        for s in 0..rows_per_tick.len() {
+            assert_eq!(
+                rows[s], ref_rows[s],
+                "shards={k} source {s}: outputs diverge from the serial reference"
+            );
+            assert_eq!(
+                rk[s].batches.len(),
+                r1[s].batches.len(),
+                "shards={k} source {s}: batch counts diverge"
+            );
+        }
+        // Per-shard accounting covers every source and batch exactly.
+        let h = health.expect("completed run reports health");
+        assert_eq!(h.shards.len(), k);
+        assert_eq!(h.shards.iter().map(|st| st.sources).sum::<usize>(), 4);
+        let batches: usize = rk.iter().map(|r| r.batches.len()).sum();
+        assert_eq!(h.shards.iter().map(|st| st.batches).sum::<usize>(), batches);
+        // Every record carries its source's shard id.
+        for (s, r) in rk.iter().enumerate() {
+            for b in &r.batches {
+                assert_eq!(b.shard, s % k, "source {s} record in wrong shard");
+            }
+        }
+    }
+}
+
+/// Same shard count, same seed, run twice: byte-identical deliveries
+/// and records — the concurrent workers leak nothing schedule-dependent.
+#[test]
+fn sharded_runs_are_deterministic_across_repeats() {
+    let rows_per_tick = [4usize, 7, 10, 13];
+    let duration = Duration::from_secs(60);
+    let (out_a, rows_a, _) =
+        run_sources(sharded_cfg(Some(2)), &rows_per_tick, duration);
+    let (out_b, rows_b, _) =
+        run_sources(sharded_cfg(Some(2)), &rows_per_tick, duration);
+    let (ra, rb) = (out_a.unwrap(), out_b.unwrap());
+    assert_eq!(rows_a, rows_b, "repeat sharded runs diverged");
+    for (a, b) in ra.iter().zip(&rb) {
+        assert_eq!(a.batches.len(), b.batches.len());
+        assert_eq!(a.avg_throughput, b.avg_throughput);
+        for (x, y) in a.batches.iter().zip(&b.batches) {
+            assert_eq!(x.proc, y.proc, "per-record proc diverged across repeats");
+            assert_eq!(x.gpu_wait, y.gpu_wait);
+        }
+    }
+}
+
+/// Per-shard admission quotas: a throttled shard has admissions vetoed
+/// (re-buffered, never dropped — its stream stays oracle-exact) and its
+/// admitted byte volume pinned well under the unthrottled sibling's,
+/// with the vetoes reported per shard.
+#[test]
+fn shard_quotas_throttle_without_losing_data() {
+    let rows_per_tick = [10usize, 10];
+    let duration = Duration::from_secs(60);
+
+    // Measure the unthrottled per-shard traffic first.
+    let (out, _, health) =
+        run_sources(sharded_cfg(Some(2)), &rows_per_tick, duration);
+    out.unwrap();
+    let free = health.unwrap().shards[0].bytes;
+    assert!(free > 0, "unthrottled shard admitted nothing");
+
+    // Throttle shard 0 to a quarter of its free-running rate; shard 1
+    // gets an effectively unlimited quota.
+    let rate0 = free as f64 / duration.as_secs_f64() / 4.0;
+    let cfg = Config {
+        shard_quotas: Some(vec![rate0, 1e12]),
+        ..sharded_cfg(Some(2))
+    };
+    let (out, rows, health) = run_sources(cfg, &rows_per_tick, duration);
+    out.unwrap();
+    let h = health.expect("completed run reports health");
+    assert!(
+        h.shards[0].quota_vetoes > 0,
+        "quota never pushed back on the throttled shard"
+    );
+    assert_eq!(h.shards[1].quota_vetoes, 0, "unlimited shard was vetoed");
+    assert!(
+        h.shards[0].bytes < free,
+        "throttled shard admitted as much as free-running ({} vs {free})",
+        h.shards[0].bytes
+    );
+    // Vetoed batches are deferred, not dropped: still an exact prefix.
+    for (s, r) in rows.iter().enumerate() {
+        assert!(!r.is_empty(), "source {s} starved entirely");
+        assert_oracle_prefix(r, rows_per_tick[s], &format!("quota src {s}"));
+    }
+}
+
+/// Executor faults under sharding: retries are swept per source on the
+/// survivor topology and the delivered outputs stay bit-identical to
+/// the fault-free sharded run — recovery cost shows up in the records
+/// and the per-shard accounting, never in the data.
+#[test]
+fn sharded_fault_retries_keep_outputs_identical() {
+    let rows_per_tick = [4usize, 7, 10, 13];
+    let duration = Duration::from_secs(120);
+    let cluster = || Some(ClusterSpec::of(3));
+
+    let clean_cfg = Config { cluster: cluster(), ..sharded_cfg(Some(2)) };
+    let (out, clean_rows, clean_health) =
+        run_sources(clean_cfg, &rows_per_tick, duration);
+    out.unwrap();
+    assert_eq!(clean_health.unwrap().retries, 0);
+
+    let faulted_cfg = Config {
+        cluster: cluster(),
+        fault_plan: Some(FaultPlan::new().stall(2, 1)),
+        ..sharded_cfg(Some(2))
+    };
+    let (out, rows, health) = run_sources(faulted_cfg, &rows_per_tick, duration);
+    let results = out.unwrap();
+    // The recovery wait legitimately shifts later admission boundaries
+    // (it is real round latency), so the two runs may cut off at
+    // different ticks — but the *data* must agree: each source's
+    // faulted stream is oracle-exact and prefix-compatible with the
+    // clean run's.
+    for (s, r) in rows.iter().enumerate() {
+        assert!(!r.is_empty(), "faulted source {s} delivered nothing");
+        assert_oracle_prefix(r, rows_per_tick[s], &format!("faulted src {s}"));
+        let n = r.len().min(clean_rows[s].len());
+        assert_eq!(
+            r[..n],
+            clean_rows[s][..n],
+            "faulted source {s} diverged from the clean run"
+        );
+    }
+    let h = health.expect("completed run reports health");
+    assert!(h.retries > 0, "the stall was never retried");
+    assert!(h.recovery_wait > Duration::ZERO);
+    assert_eq!(
+        h.shards.iter().map(|st| st.retries).sum::<usize>(),
+        h.retries,
+        "per-shard retry accounting doesn't tile the run total"
+    );
+    // The faulted round's records carry their own source's charges.
+    let charged: usize = results
+        .iter()
+        .flat_map(|r| r.batches.iter())
+        .filter(|b| b.retries > 0)
+        .count();
+    assert!(charged > 0, "no record carries the retry charge");
+}
+
+/// Sharded durable runs keep one sink ledger per source (the legacy
+/// shared `sink.ledger.json` must not appear) and the WAL group commit
+/// fsyncs at most once per admitting source per round.
+#[test]
+fn sharded_durable_runs_keep_per_source_ledgers() {
+    let base = std::env::temp_dir()
+        .join(format!("lmstream-sharding-ledgers-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let wal: PathBuf = base.join("wal");
+
+    let rows_per_tick = [10usize, 10];
+    let cfg = Config {
+        wal_dir: Some(wal.to_string_lossy().into_owned()),
+        ..sharded_cfg(Some(2))
+    };
+    let mut session = Session::new(cfg).unwrap();
+    for (s, &rpt) in rows_per_tick.iter().enumerate() {
+        session.register(ident_workload(NAMES[s], rpt)).unwrap();
+    }
+    let results = session.run(Duration::from_secs(60)).unwrap();
+    let rounds = results.iter().map(|r| r.batches.len()).max().unwrap();
+    assert!(rounds >= 2, "need multiple rounds to observe batching");
+
+    for name in &NAMES[..2] {
+        assert!(
+            wal.join(format!("{name}.sink.ledger.json")).exists(),
+            "missing per-source ledger for {name}"
+        );
+    }
+    assert!(
+        !wal.join("sink.ledger.json").exists(),
+        "sharded run created the legacy shared ledger"
+    );
+    assert!(session.ledger_persists() > 0);
+    let fsyncs = session.wal_fsyncs();
+    assert!(fsyncs > 0, "durable run never committed its WAL");
+    assert!(
+        fsyncs <= 2 * rounds,
+        "fsyncs ({fsyncs}) exceed one group commit per source per round \
+         ({rounds} rounds, 2 sources)"
+    );
+}

@@ -12,13 +12,16 @@ Three checks, in decreasing order of machine-independence:
      - coschedule_makespan_ratio   <= baseline's `max_coschedule_makespan_ratio`
      - fused_vs_staged_ratio       <= baseline's `max_fused_vs_staged_ratio`
      - encoded_window_bytes_ratio  <= baseline's `max_encoded_window_bytes_ratio`
+     - shard_scaling_ratio         <= baseline's `max_shard_scaling_ratio`
    These are dimensionless and stable across runners — they encode the
    chunked-path claims (O(#datasets) snapshots; Union assembly cost
    independent of total rows), the co-scheduling claim (the joint
    plan's predicted makespan never exceeds the independent plans
-   serialized on the shared GPU), and the fusion/encoding claims
+   serialized on the shared GPU), the fusion/encoding claims
    (a fused chain runs no slower than its staged member kernels;
-   cold-encoded window state never exceeds its raw footprint).
+   cold-encoded window state never exceeds its raw footprint), and the
+   sharded-runtime claim (the epoch clock pays the max per-source proc
+   per round, never more than the serial per-round sum).
 
 2. per-bench mean gate (enforced per entry the baseline carries): each
    measured mean must sit within +/-20% of the baseline mean. Only
@@ -121,6 +124,18 @@ def main():
             )
         else:
             print(f"ok: encoded_window_bytes_ratio {got:.3f} <= {max_encoded}")
+    max_shard = baseline.get("max_shard_scaling_ratio")
+    if max_shard is not None:
+        got = measured.get("shard_scaling_ratio")
+        if got is None or got <= 0.0:
+            failures.append("shard_scaling_ratio missing from measured point")
+        elif got > max_shard:
+            failures.append(
+                f"shard_scaling_ratio {got:.3f} > allowed {max_shard} "
+                "(sharded epoch cost exceeds the serial per-round sum)"
+            )
+        else:
+            print(f"ok: shard_scaling_ratio {got:.3f} <= {max_shard}")
 
     # 2. per-bench +/-20% mean gate against whatever the baseline carries.
     base_means = {

@@ -17,7 +17,8 @@ The promoted file is the measured point (per-bench means + ratio
 metrics) with the baseline's machine-independent gate fields
 (min_window_snapshot_speedup, max_union_fanin_scaling,
 max_coschedule_makespan_ratio, max_fused_vs_staged_ratio,
-max_encoded_window_bytes_ratio) carried over, and provenance flipped to
+max_encoded_window_bytes_ratio, max_shard_scaling_ratio) carried
+over, and provenance flipped to
 "ci-measured". Before writing, the measured point is validated against
 those gates — promoting a point that would immediately fail CI is
 refused.
@@ -39,6 +40,7 @@ GATE_FIELDS = (
     "max_coschedule_makespan_ratio",
     "max_fused_vs_staged_ratio",
     "max_encoded_window_bytes_ratio",
+    "max_shard_scaling_ratio",
 )
 
 
@@ -86,6 +88,10 @@ def validate(measured, gates):
     cap = gates.get("max_encoded_window_bytes_ratio")
     if cap is not None and (ratio is None or ratio <= 0.0 or ratio > cap):
         problems.append(f"encoded_window_bytes_ratio {ratio} outside (0, {cap}]")
+    ratio = measured.get("shard_scaling_ratio")
+    cap = gates.get("max_shard_scaling_ratio")
+    if cap is not None and (ratio is None or ratio <= 0.0 or ratio > cap):
+        problems.append(f"shard_scaling_ratio {ratio} outside (0, {cap}]")
     return problems
 
 
